@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when pytest is
+invoked as `pytest python/tests/` from the repository root (the Makefile
+runs it from `python/`, where the package is already on sys.path)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

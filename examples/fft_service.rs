@@ -1,0 +1,128 @@
+//! END-TO-END driver: the full three-layer system on a real workload.
+//!
+//! Proves all layers compose: the L2/L1 JAX+Pallas FFT was AOT-lowered
+//! to `artifacts/fft{N}.hlo.txt` (`make artifacts`), the L3 rust
+//! coordinator loads it through PJRT, serves a batched mixed-size
+//! request stream across a pool of workers, and cross-validates the
+//! fast path against the cycle-accurate eGPU simulation — reporting
+//! latency, throughput, simulated eGPU time and aggregate efficiency
+//! (the paper's headline metric).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example fft_service
+//! ```
+
+use std::time::Instant;
+
+use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn workload(total: usize) -> Vec<Vec<(f32, f32)>> {
+    // a mixed-size stream: mostly 1024-point frames with bursts of 256
+    // and occasional 4096 (a realistic radar/SDR channelizer mix)
+    (0..total)
+        .map(|i| match i % 8 {
+            0 | 1 | 2 | 3 => signal(1024, i as u64),
+            4 | 5 | 6 => signal(256, i as u64),
+            _ => signal(4096, i as u64),
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/fft256.hlo.txt").exists();
+    if !have_artifacts {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // ---- phase 1: PJRT fast path (the serving configuration) ----
+    let svc = FftService::start(ServiceConfig {
+        cores: 4,
+        backend: Backend::Pjrt,
+        ..Default::default()
+    })?;
+    // warm up: compile the three artifact sizes once (the paid-once
+    // startup cost; EXPERIMENTS.md §Perf) so the measurement below is
+    // steady-state serving
+    svc.run_batch(vec![signal(256, 0), signal(1024, 0), signal(4096, 0)])?;
+    let n_requests = 256;
+    let inputs = workload(n_requests);
+    let expect: Vec<usize> = inputs.iter().map(Vec::len).collect();
+    let t0 = Instant::now();
+    let results = svc.run_batch(inputs)?;
+    let wall = t0.elapsed();
+    for (r, n) in results.iter().zip(&expect) {
+        assert_eq!(r.output.len(), *n);
+    }
+    let m = svc.metrics();
+    println!("== PJRT fast path ==");
+    println!(
+        "  {} mixed-size requests in {:.1} ms -> {:.0} req/s",
+        n_requests,
+        wall.as_secs_f64() * 1e3,
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  latency: p50 <= {:.0} us (cumulative metrics include the three \
+         one-time artifact compiles)",
+        m.latency_percentile_us(0.50),
+    );
+    print!("{}", m.render());
+    svc.shutdown();
+
+    // ---- phase 2: cross-validated run (sim numerics == PJRT) ----
+    let svc = FftService::start(ServiceConfig {
+        cores: 4,
+        backend: Backend::Validate,
+        ..Default::default()
+    })?;
+    let n_val = 32;
+    let t0 = Instant::now();
+    let results = svc.run_batch(workload(n_val))?;
+    let wall = t0.elapsed();
+    let m = svc.metrics();
+    println!("\n== cross-validated (PJRT vs cycle-accurate eGPU sim) ==");
+    println!(
+        "  {} requests validated in {:.1} ms (every output matched within 1e-4 rms)",
+        n_val,
+        wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "  simulated eGPU time: {:.1} us across {} jobs on {}",
+        m.virtual_us,
+        results.len(),
+        svc.config().variant
+    );
+    println!(
+        "  aggregate eGPU efficiency: {:.2}%  (the paper's headline metric; \
+         Table 3 best ~27-36%)",
+        m.efficiency_pct()
+    );
+    svc.shutdown();
+
+    // ---- phase 3: scale-out over simulated cores ----
+    println!("\n== scale-out: simulated eGPU cores (paper §8: 'instantiate many') ==");
+    for cores in [1usize, 2, 4, 8] {
+        let svc = FftService::start(ServiceConfig {
+            cores,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })?;
+        let t0 = Instant::now();
+        svc.run_batch((0..64).map(|i| signal(1024, i)).collect())?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!("  {cores} core(s): 64 fft1024 jobs in {:>7.1} ms ({:>6.0} job/s)",
+            wall * 1e3, 64.0 / wall);
+        svc.shutdown();
+    }
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,33 @@
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::{self, reference};
+use egpu_fft::sim::Sm;
+use std::time::Instant;
+
+fn main() {
+    let cfg = SmConfig::for_radix(Variant::DP, 16);
+    let fp = fft::generate(&cfg, 4096, 16).unwrap();
+    let input: Vec<(f32,f32)> = reference::test_signal(4096, 3).iter().map(|c| c.to_f32_pair()).collect();
+    let iters = 2000;
+
+    let t0 = Instant::now();
+    for _ in 0..iters { let sm = Sm::new(cfg); std::hint::black_box(&sm); }
+    println!("Sm::new           {:>8.1} us", t0.elapsed().as_secs_f64()*1e6/iters as f64);
+
+    let mut sm = Sm::new(cfg);
+    sm.seed_thread_ids();
+    let t0 = Instant::now();
+    for _ in 0..iters { fft::load_workspace(&mut sm, &fp, &input).unwrap(); }
+    println!("load_workspace    {:>8.1} us", t0.elapsed().as_secs_f64()*1e6/iters as f64);
+
+    let t0 = Instant::now();
+    for _ in 0..iters { sm.run(&fp.program, fp.plan.threads).unwrap(); }
+    println!("Sm::run           {:>8.1} us", t0.elapsed().as_secs_f64()*1e6/iters as f64);
+
+    let t0 = Instant::now();
+    for _ in 0..iters { let _ = fft::read_output(&sm, &fp).unwrap(); }
+    println!("read_output       {:>8.1} us", t0.elapsed().as_secs_f64()*1e6/iters as f64);
+
+    let t0 = Instant::now();
+    for _ in 0..iters { let _ = fft::run_fft(&fp, &cfg, &input).unwrap(); }
+    println!("run_fft (total)   {:>8.1} us", t0.elapsed().as_secs_f64()*1e6/iters as f64);
+}

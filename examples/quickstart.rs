@@ -1,0 +1,55 @@
+//! Quickstart: generate an eGPU FFT program, run it on the simulated
+//! SM, check the numerics, and read the paper-style profile.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::{self, reference, Cpx};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a design point: 1024-point FFT, radix-16 kernels, on the
+    //    eGPU with both paper enhancements (virtual-banked memory +
+    //    complex functional units).
+    let variant = Variant::DP_VM_COMPLEX;
+    let cfg = SmConfig::for_radix(variant, 16);
+    let fp = fft::generate(&cfg, 1024, 16)?;
+    println!(
+        "generated `{}`: {} instructions, {} passes (radices {:?})",
+        fp.program.name,
+        fp.program.len(),
+        fp.plan.n_passes(),
+        fp.plan.passes.iter().map(|p| p.radix).collect::<Vec<_>>(),
+    );
+
+    // 2. Make a test signal and run it through the simulated SM.
+    let signal = reference::test_signal(1024, 42);
+    let input: Vec<(f32, f32)> = signal.iter().map(|c| c.to_f32_pair()).collect();
+    let run = fft::run_fft(&fp, &cfg, &input)?;
+
+    // 3. Validate against the reference FFT.
+    let got: Vec<Cpx> = run
+        .output
+        .iter()
+        .map(|&(re, im)| Cpx::new(re as f64, im as f64))
+        .collect();
+    let err = reference::rms_rel_error(&got, &reference::fft(&signal));
+    println!("numerics: rms error vs reference = {err:.2e}");
+    assert!(err < fft::F32_TOL);
+
+    // 4. The paper-style profile (one column of Table 3).
+    println!("\n{}", run.profile);
+    println!(
+        "\n(Table 3 reports {:.2} us / {:.2}% efficiency for this point\n\
+         on the authors' Agilex hardware — see EXPERIMENTS.md.)",
+        12.65, 27.40
+    );
+
+    // 5. Peek at the first instructions of the generated assembly.
+    println!("\nfirst 12 instructions:");
+    for line in fp.program.listing().lines().take(13) {
+        println!("  {line}");
+    }
+    Ok(())
+}

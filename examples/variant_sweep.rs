@@ -1,0 +1,59 @@
+//! The paper's full §6 campaign: 48 combinations of FFT decomposition,
+//! points and processor architecture, printed as a compact summary —
+//! the data behind Tables 1–3 plus the radix-2 runs the paper measured
+//! but omitted "for brevity".
+//!
+//! ```sh
+//! cargo run --release --example variant_sweep
+//! ```
+
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::{self, FftPlan};
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "{:>6} {:>6} {:<16} {:>9} {:>10} {:>11} {:>9}",
+        "points", "radix", "variant", "cycles", "time(us)", "eff(%)", "mem(%)"
+    );
+    let mut combos = 0;
+    for radix in [2usize, 4, 8, 16] {
+        for points in [256usize, 512, 1024, 4096] {
+            // the paper's table space: 512 only for radix-8
+            if points == 512 && radix != 8 {
+                continue;
+            }
+            let mut best: Option<(String, f64)> = None;
+            for variant in Variant::ALL6 {
+                let cfg = SmConfig::for_radix(variant, radix);
+                if variant.vm {
+                    let plan = FftPlan::new(points, radix, cfg.threads)?;
+                    if !plan.passes.iter().any(|p| p.vm_eligible) {
+                        continue; // the paper's "-" cells
+                    }
+                }
+                let (profile, err) = fft::validate(&cfg, points, radix, 1)?;
+                assert!(err < fft::F32_TOL, "{points}/{radix}/{variant}: {err}");
+                println!(
+                    "{:>6} {:>6} {:<16} {:>9} {:>10.2} {:>11.2} {:>9.2}",
+                    points,
+                    radix,
+                    variant.name(),
+                    profile.total(),
+                    profile.time_us(),
+                    profile.efficiency_pct(),
+                    profile.memory_pct()
+                );
+                combos += 1;
+                let eff = profile.efficiency_pct();
+                if best.as_ref().map(|(_, e)| eff > *e).unwrap_or(true) {
+                    best = Some((variant.name(), eff));
+                }
+            }
+            if let Some((name, eff)) = best {
+                println!("{:>6} {:>6} best: {name} @ {eff:.2}%\n", points, radix);
+            }
+        }
+    }
+    println!("{combos} design points simulated (numerics validated on every one)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT `lowered.compile()` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+FFT_SIZES = (256, 1024, 4096)
+# kernel-granularity artifact: one 4096-point pass-1 stage
+STAGE_SHAPE = (1, 4, 1024)  # (G, 4, S)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big
+    # constants as `constant({...})`, which the text parser then
+    # ZERO-FILLS — silently zeroing the twiddle tables and the
+    # digit-reversal gather indices.
+    return comp.as_hlo_text(True)
+
+
+def lower_fft(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(model.make_fft(n).lower(spec, spec))
+
+
+def lower_stage(g: int, s: int) -> str:
+    spec = jax.ShapeDtypeStruct((g, 4, s), jnp.float32)
+    return to_hlo_text(model.make_stage(g, s).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    for n in FFT_SIZES:
+        text = lower_fft(n)
+        path = out / f"fft{n}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    g, _, s = STAGE_SHAPE
+    text = lower_stage(g, s)
+    path = out / "fft_stage.hlo.txt"
+    path.write_text(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

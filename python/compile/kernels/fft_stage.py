@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: one radix-4 DIF FFT pass (the compute hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's eGPU
+runs one dragonfly per SIMT thread with the pass working set resident in
+the SM's banked shared memory. On TPU-flavoured Pallas the analogue is a
+grid step whose (GB, 4, S) block lives in VMEM (the scratchpad analogue
+of the 64 KB shared memory); the butterfly is bandwidth-bound
+elementwise math, so it targets the VPU rather than the MXU, exactly as
+the eGPU's DSP-block FP path rather than its (removed) integer
+multipliers.
+
+Blocking (§Perf, L1): a grid step processes GB butterfly groups at
+once, sized so a block stays ≈16 KB per operand (VMEM-scale) while the
+grid stays shallow — one gridstep per pass for every size the paper
+reports. The eGPU analogue of GB is the wavefront depth.
+
+Lowered with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Per-block element budget: GB·4·S ≤ 4·MAX_BLOCK (≈16 KB per f32 array),
+# the VMEM-scale working set of one grid step.
+MAX_BLOCK = 1024
+# Largest supported stride (one (1, 4, MAX_S) block is the minimum).
+MAX_S = 1024
+
+
+def _block_groups(g: int, s: int) -> int:
+    """Butterfly groups per grid step: fill the block budget, divide G."""
+    gb = max(1, MAX_BLOCK // s)
+    return min(g, gb)
+
+
+def _stage_kernel(xr_ref, xi_ref, twr_ref, twi_ref, yr_ref, yi_ref):
+    """Radix-4 DIF dragonfly + twiddle over one (GB, 4, S) block.
+
+    Mirrors the eGPU kernel instruction-for-instruction (see
+    rust/src/fft/codegen.rs kernel_radix4): 8 complex add/sub with the
+    ±j rotation folded into operand routing, then three complex
+    multiplies by the per-position twiddles W_{4S}^{r·m} (broadcast over
+    the GB leading axis, like the shared twiddle table across threads).
+    """
+    xr = xr_ref[...]  # (GB, 4, S)
+    xi = xi_ref[...]
+    twr = twr_ref[...]  # (3, S)
+    twi = twi_ref[...]
+
+    t0r = xr[:, 0] + xr[:, 2]
+    t0i = xi[:, 0] + xi[:, 2]
+    t1r = xr[:, 0] - xr[:, 2]
+    t1i = xi[:, 0] - xi[:, 2]
+    t2r = xr[:, 1] + xr[:, 3]
+    t2i = xi[:, 1] + xi[:, 3]
+    t3r = xr[:, 1] - xr[:, 3]
+    t3i = xi[:, 1] - xi[:, 3]
+
+    y0r = t0r + t2r
+    y0i = t0i + t2i
+    y2r = t0r - t2r
+    y2i = t0i - t2i
+    # Y1 = t1 - j t3 ; Y3 = t1 + j t3 (pure add/sub, §3.1)
+    y1r = t1r + t3i
+    y1i = t1i - t3r
+    y3r = t1r - t3i
+    y3i = t1i + t3r
+
+    # twiddles on outputs 1..3 (output 0 is twiddle-free); (GB, S)·(S,)
+    o1r = y1r * twr[0] - y1i * twi[0]
+    o1i = y1r * twi[0] + y1i * twr[0]
+    o2r = y2r * twr[1] - y2i * twi[1]
+    o2i = y2r * twi[1] + y2i * twr[1]
+    o3r = y3r * twr[2] - y3i * twi[2]
+    o3i = y3r * twi[2] + y3i * twr[2]
+
+    yr_ref[...] = jnp.stack([y0r, o1r, o2r, o3r], axis=1)
+    yi_ref[...] = jnp.stack([y0i, o1i, o2i, o3i], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def radix4_stage(xr, xi, twr, twi, *, interpret=True):
+    """Apply one radix-4 DIF pass.
+
+    Args:
+      xr, xi: float32[G, 4, S] — G blocks of 4 butterfly legs × stride S.
+      twr, twi: float32[3, S] — twiddles W_{4S}^{r·m}, m = 1..3 (shared
+        by every block, like the eGPU's shared-memory twiddle table).
+
+    Returns:
+      (yr, yi): float32[G, 4, S] with the pass applied in place.
+    """
+    g, four, s = xr.shape
+    assert four == 4 and s <= MAX_S, (g, four, s)
+    assert twr.shape == (3, s), twr.shape
+    gb = _block_groups(g, s)
+    assert g % gb == 0, (g, gb)
+    out_shape = [
+        jax.ShapeDtypeStruct(xr.shape, jnp.float32),
+        jax.ShapeDtypeStruct(xi.shape, jnp.float32),
+    ]
+    block = pl.BlockSpec((gb, 4, s), lambda i: (i, 0, 0))
+    tw_block = pl.BlockSpec((3, s), lambda i: (0, 0))
+    kernel = pl.pallas_call(
+        _stage_kernel,
+        grid=(g // gb,),
+        in_specs=[block, block, tw_block, tw_block],
+        out_specs=[block, block],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return kernel(xr, xi, twr, twi)

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the L2 model.
+
+These never go through Pallas: `stage_ref` is the straight-line jnp
+formulation of one radix-4 DIF pass, and `fft_ref` wraps `jnp.fft.fft`.
+pytest checks kernel == stage_ref and model == fft_ref.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def twiddles(stride: int, radix: int = 4) -> tuple[np.ndarray, np.ndarray]:
+    """W_{radix·stride}^{r·m} for m = 1..radix, r = 0..stride.
+
+    Returns (twr, twi) as float32[(radix-1), stride] — the same table the
+    eGPU preloads into shared memory (rust/src/fft/twiddle.rs).
+    """
+    l = radix * stride
+    m = np.arange(1, radix)[:, None]
+    r = np.arange(stride)[None, :]
+    w = np.exp(-2j * np.pi * (m * r % l) / l)
+    return (
+        w.real.astype(np.float32),
+        w.imag.astype(np.float32),
+    )
+
+
+def stage_ref(xr, xi, twr, twi):
+    """One radix-4 DIF pass over float32[G, 4, S] (oracle for the
+    Pallas kernel — same math, no pallas_call)."""
+    x = xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64)
+    a, b, c, d = x[:, 0], x[:, 1], x[:, 2], x[:, 3]
+    t0, t1 = a + c, a - c
+    t2, t3 = b + d, b - d
+    y0 = t0 + t2
+    y1 = t1 - 1j * t3
+    y2 = t0 - t2
+    y3 = t1 + 1j * t3
+    tw = twr.astype(jnp.complex64) + 1j * twi.astype(jnp.complex64)
+    y = jnp.stack([y0, y1 * tw[0], y2 * tw[1], y3 * tw[2]], axis=1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def fft_ref(xr, xi):
+    """Full FFT oracle: jnp.fft.fft over float32[N] pairs."""
+    y = jnp.fft.fft(xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64))
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def digit_reverse_indices(n: int, radix: int = 4) -> np.ndarray:
+    """perm[i] = in-place index whose value is natural-order bin i after
+    all DIF passes (matches FftPlan::natural_of_inplace in rust)."""
+    passes = []
+    rem = n
+    while rem > 1:
+        assert rem % radix == 0, (n, radix)
+        passes.append(radix)
+        rem //= radix
+    n_passes = len(passes)
+    strides = [radix ** (n_passes - 1 - p) for p in range(n_passes)]
+    nat = np.zeros(n, dtype=np.int64)
+    weight = 1
+    for stride, r in zip(strides, passes):
+        nat += ((np.arange(n) // stride) % r) * weight
+        weight *= r
+    perm = np.empty(n, dtype=np.int64)
+    perm[nat] = np.arange(n)
+    return perm

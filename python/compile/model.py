@@ -1,0 +1,88 @@
+"""L2 JAX compute graph: the full radix-4 FFT built from the L1 Pallas
+stage kernel, mirroring the eGPU program structure (log4(N) in-place DIF
+passes + a final digit-reversed reorder, §3.2).
+
+Build-time only: `aot.py` lowers `make_fft(n)` once per size to HLO text
+and the rust runtime executes the artifact — Python never runs on the
+request path.
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fft_stage, ref
+
+RADIX = 4
+
+
+def plan_strides(n: int) -> list[int]:
+    """Strides of the log4(N) DIF passes: N/4, N/16, …, 1."""
+    assert n >= 16 and 4 ** int(round(np.log(n) / np.log(4))) == n, (
+        f"L2 model supports 4^k sizes, got {n}"
+    )
+    strides = []
+    s = n // RADIX
+    while s >= 1:
+        strides.append(s)
+        s //= RADIX
+    return strides
+
+
+def fft(xr, xi, *, interpret=True):
+    """Forward complex FFT of float32[N] (re, im) pairs.
+
+    Each pass reshapes the flat array to (G, 4, S) — the same
+    thread→index geometry as Figure 2 of the paper — and calls the
+    Pallas stage kernel; twiddle tables are compile-time constants, as
+    in the eGPU's preloaded shared memory.
+    """
+    n = xr.shape[0]
+    for s in plan_strides(n):
+        g = n // (RADIX * s)
+        twr, twi = ref.twiddles(s)
+        xr4 = xr.reshape(g, RADIX, s)
+        xi4 = xi.reshape(g, RADIX, s)
+        yr, yi = fft_stage.radix4_stage(xr4, xi4, jnp.asarray(twr), jnp.asarray(twi),
+                                        interpret=interpret)
+        xr = yr.reshape(n)
+        xi = yi.reshape(n)
+    return _digit_reverse(xr), _digit_reverse(xi)
+
+
+def _digit_reverse(x):
+    """Base-4 digit reversal as reshape→transpose→reshape — XLA lowers
+    this to a copy with a permuted layout, far cheaper than the gather a
+    `x[perm]` formulation emits (EXPERIMENTS.md §Perf, L2)."""
+    n = x.shape[0]
+    k = n.bit_length() // 2  # log4(n), n = 4^k
+    axes = tuple(reversed(range(k)))
+    return x.reshape((RADIX,) * k).transpose(axes).reshape(n)
+
+
+@functools.cache
+def make_fft(n: int):
+    """A jitted f(xr, xi) -> (yr, yi) for one FFT size."""
+
+    @jax.jit
+    def f(xr, xi):
+        return fft(xr, xi)
+
+    return f
+
+
+@functools.cache
+def make_stage(g: int, s: int):
+    """A jitted single radix-4 stage over (G, 4, S) blocks (the
+    kernel-granularity artifact used by runtime smoke tests)."""
+    twr, twi = ref.twiddles(s)
+
+    @jax.jit
+    def f(xr, xi):
+        return fft_stage.radix4_stage(
+            xr, xi, jnp.asarray(twr), jnp.asarray(twi)
+        )
+
+    return f

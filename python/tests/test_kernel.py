@@ -1,0 +1,96 @@
+"""L1 correctness: Pallas stage kernel vs the pure-jnp oracle.
+
+The hypothesis sweep walks the (G, S) shape space and random data; exact
+agreement is expected because kernel and oracle perform the same f32
+operations (stage_ref computes via complex64, so tolerance is 1 ulp-ish).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fft_stage, ref
+
+RNG = np.random.default_rng(0xE69D0)
+
+
+def run_stage(g, s, seed):
+    rng = np.random.default_rng(seed)
+    xr = rng.standard_normal((g, 4, s), dtype=np.float32)
+    xi = rng.standard_normal((g, 4, s), dtype=np.float32)
+    twr, twi = ref.twiddles(s)
+    got_r, got_i = fft_stage.radix4_stage(
+        jnp.asarray(xr), jnp.asarray(xi), jnp.asarray(twr), jnp.asarray(twi)
+    )
+    want_r, want_i = ref.stage_ref(
+        jnp.asarray(xr), jnp.asarray(xi), jnp.asarray(twr), jnp.asarray(twi)
+    )
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "g,s",
+    [
+        (1, 1),      # last pass of a 4-point FFT
+        (1, 64),     # pass 1 of 256
+        (4, 16),     # pass 2 of 256
+        (64, 1),     # last pass of 256
+        (1, 1024),   # pass 1 of 4096
+        (256, 4),    # pass 5 of 4096
+    ],
+)
+def test_stage_matches_ref_paper_shapes(g, s):
+    run_stage(g, s, seed=g * 10007 + s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    log_g=st.integers(min_value=0, max_value=6),
+    log_s=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_stage_matches_ref_hypothesis(log_g, log_s, seed):
+    run_stage(2**log_g, 2**log_s, seed)
+
+
+def test_stage_impulse():
+    # impulse in leg 0 -> all four outputs equal the impulse (twiddles
+    # only touch outputs 1..3, which see W^0 at r=0)
+    s = 4
+    xr = np.zeros((1, 4, s), dtype=np.float32)
+    xi = np.zeros_like(xr)
+    xr[0, 0, 0] = 1.0
+    twr, twi = ref.twiddles(s)
+    yr, yi = fft_stage.radix4_stage(
+        jnp.asarray(xr), jnp.asarray(xi), jnp.asarray(twr), jnp.asarray(twi)
+    )
+    np.testing.assert_allclose(np.asarray(yr)[0, :, 0], 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(yi)[0, :, 0], 0.0, atol=1e-6)
+
+
+def test_stage_linearity():
+    g, s = 2, 8
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((2, g, 4, s), dtype=np.float32)
+    b = rng.standard_normal((2, g, 4, s), dtype=np.float32)
+    twr, twi = (jnp.asarray(t) for t in ref.twiddles(s))
+    ya = fft_stage.radix4_stage(jnp.asarray(a[0]), jnp.asarray(a[1]), twr, twi)
+    yb = fft_stage.radix4_stage(jnp.asarray(b[0]), jnp.asarray(b[1]), twr, twi)
+    ys = fft_stage.radix4_stage(
+        jnp.asarray(a[0] + b[0]), jnp.asarray(a[1] + b[1]), twr, twi
+    )
+    np.testing.assert_allclose(ys[0], ya[0] + yb[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ys[1], ya[1] + yb[1], rtol=1e-4, atol=1e-4)
+
+
+def test_twiddle_table_properties():
+    twr, twi = ref.twiddles(16)
+    assert twr.shape == (3, 16)
+    # r = 0 column is W^0 = 1
+    np.testing.assert_allclose(twr[:, 0], 1.0, atol=1e-7)
+    np.testing.assert_allclose(twi[:, 0], 0.0, atol=1e-7)
+    # unit magnitude everywhere
+    np.testing.assert_allclose(twr**2 + twi**2, 1.0, atol=1e-6)

@@ -1,0 +1,78 @@
+"""L2 correctness: the stage-composed FFT model vs jnp.fft, plus the
+digit-reversal permutation and AOT lowering smoke tests."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rel_rms(got, want):
+    got = np.asarray(got, dtype=np.float64)
+    want = np.asarray(want, dtype=np.float64)
+    denom = np.sqrt(np.mean(want**2)) + 1e-30
+    return np.sqrt(np.mean((got - want) ** 2)) / denom
+
+
+@pytest.mark.parametrize("n", [16, 64, 256, 1024, 4096])
+def test_fft_matches_jnp(n):
+    rng = np.random.default_rng(n)
+    xr = rng.standard_normal(n, dtype=np.float32)
+    xi = rng.standard_normal(n, dtype=np.float32)
+    got_r, got_i = model.make_fft(n)(jnp.asarray(xr), jnp.asarray(xi))
+    want_r, want_i = ref.fft_ref(jnp.asarray(xr), jnp.asarray(xi))
+    assert rel_rms(got_r, want_r) < 1e-5
+    assert rel_rms(got_i, want_i) < 1e-5
+
+
+def test_fft_impulse():
+    n = 256
+    xr = np.zeros(n, dtype=np.float32)
+    xr[0] = 1.0
+    xi = np.zeros_like(xr)
+    yr, yi = model.make_fft(n)(jnp.asarray(xr), jnp.asarray(xi))
+    np.testing.assert_allclose(np.asarray(yr), 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(yi), 0.0, atol=1e-6)
+
+
+def test_fft_single_tone():
+    n = 64
+    k = 5
+    t = np.arange(n)
+    x = np.exp(2j * np.pi * k * t / n).astype(np.complex64)
+    yr, yi = model.make_fft(n)(
+        jnp.asarray(x.real.astype(np.float32)), jnp.asarray(x.imag.astype(np.float32))
+    )
+    mag = np.abs(np.asarray(yr) + 1j * np.asarray(yi))
+    assert mag[k] == pytest.approx(n, rel=1e-4)
+    mag[k] = 0
+    assert mag.max() < 1e-2
+
+
+def test_digit_reverse_is_permutation():
+    for n in [16, 64, 256, 1024]:
+        perm = ref.digit_reverse_indices(n)
+        assert sorted(perm) == list(range(n))
+        # base-4 digit reversal is an involution
+        np.testing.assert_array_equal(perm[perm], np.arange(n))
+
+
+def test_plan_strides():
+    assert model.plan_strides(256) == [64, 16, 4, 1]
+    assert model.plan_strides(4096) == [1024, 256, 64, 16, 4, 1]
+    with pytest.raises(AssertionError):
+        model.plan_strides(512)  # not a power of 4
+
+
+def test_aot_lowering_produces_hlo_text():
+    from compile import aot
+
+    text = aot.lower_fft(256)
+    assert "HloModule" in text
+    assert "f32[256]" in text
+    stage = aot.lower_stage(1, 1024)
+    assert "HloModule" in stage
+    assert "f32[1,4,1024]" in stage

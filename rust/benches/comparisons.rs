@@ -1,0 +1,67 @@
+//! Bench: the cross-platform comparisons — Table 5 (FFT IP core),
+//! Table 6 (A100/V100 cuFFT), Figures 2 & 4, plus the IP-vs-eGPU
+//! throughput crossover series the paper's §7 discussion implies.
+//!
+//! `cargo bench --bench comparisons`
+
+mod harness;
+
+use egpu_fft::fft::{reference, twiddle::Cpx};
+use egpu_fft::ipcore::{IpCore, StreamingSdf};
+use egpu_fft::report;
+
+fn main() {
+    harness::section("Table 5: eGPU vs streaming FFT IP core");
+    let mut rows = None;
+    harness::bench("table5_ip_comparison", 1000, || {
+        rows = Some(report::table5().unwrap());
+    });
+    let rows = rows.unwrap();
+    println!("\n{}", report::render_table5(&rows));
+    println!("paper: perf ratio ~5-7x, normalized ~2.6-3.5x (\"only about a 3x advantage\")");
+    for r in &rows {
+        println!(
+            "  {}: perf {:.1}x, normalized {:.1}x",
+            r.points, r.perf_ratio, r.normalized_ratio
+        );
+    }
+
+    harness::section("Table 6: FFT efficiency vs A100/V100");
+    let mut t6 = None;
+    harness::bench("table6_gpu_comparison", 1000, || {
+        t6 = Some(report::table6().unwrap());
+    });
+    println!("\n{}", report::render_table6(&t6.unwrap()));
+
+    harness::section("Figure 2: per-pass index map");
+    harness::bench("figure2_index_map", 100, || {
+        let _ = report::figure2(32, 3).unwrap();
+    });
+    println!("\n{}", report::figure2(8, 3).unwrap());
+
+    harness::section("Figure 4: floorplan footprint");
+    harness::bench("figure4_floorplan", 100, || {
+        let _ = report::figure4();
+    });
+    println!("\n{}", report::figure4());
+
+    harness::section("behavioural streaming IP (R2SDF) throughput check");
+    for n in [256usize, 1024, 4096] {
+        let sig = reference::test_signal(n, 5);
+        let mut cycles = 0usize;
+        harness::bench(&format!("sdf_stream_fft{n}"), 300, || {
+            let mut sdf = StreamingSdf::new(n);
+            let frames: Vec<&[Cpx]> = vec![&sig, &sig, &sig, &sig];
+            let out = sdf.transform_frames(&frames);
+            assert_eq!(out.len(), 4);
+            cycles = n; // steady-state cycles per frame by construction
+        });
+        let ip = IpCore::paper(n).unwrap();
+        println!(
+            "  fft{n}: modelled {:.2} us/frame at {:.0} MHz streaming (paper Table 5: {:.2} us)",
+            n as f64 / (n as f64 / ip.time_us),
+            n as f64 / ip.time_us,
+            ip.time_us
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Bench: end-to-end coordinator throughput and latency — the L3
+//! §Perf targets (simulated-core scaling, PJRT fast-path throughput).
+//!
+//! `cargo bench --bench e2e` (requires `make artifacts` for the PJRT
+//! sections; they are skipped with a warning otherwise)
+
+mod harness;
+
+use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn main() {
+    harness::section("simulated-core scaling (64 × fft1024, radix-16 VM+Complex)");
+    let inputs: Vec<Vec<(f32, f32)>> = (0..64).map(|i| signal(1024, i)).collect();
+    let mut base = None;
+    for cores in [1usize, 2, 4, 8] {
+        // start service outside the timed region (program generation +
+        // SM allocation are setup, not serving)
+        let svc = FftService::start(ServiceConfig {
+            cores,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap();
+        // warm every worker's program/SM cache
+        svc.run_batch(inputs.clone()).unwrap();
+        let r = harness::bench(&format!("sim_service_{cores}core_64xfft1024"), 1500, || {
+            svc.run_batch(inputs.clone()).unwrap();
+        });
+        let jps = 64.0 / r.mean.as_secs_f64();
+        if cores == 1 {
+            base = Some(jps);
+        }
+        println!(
+            "  {cores} cores: {:.0} jobs/s (scaling {:.2}x)",
+            jps,
+            jps / base.unwrap()
+        );
+        svc.shutdown();
+    }
+
+    if !std::path::Path::new("artifacts/fft1024.hlo.txt").exists() {
+        eprintln!("WARNING: artifacts/ missing — PJRT benches skipped (run `make artifacts`)");
+        return;
+    }
+
+    harness::section("PJRT fast path (steady state, post-compile)");
+    for points in [256usize, 1024, 4096] {
+        let svc = FftService::start(ServiceConfig {
+            cores: 4,
+            backend: Backend::Pjrt,
+            ..Default::default()
+        })
+        .unwrap();
+        let batch: Vec<Vec<(f32, f32)>> = (0..32).map(|i| signal(points, i)).collect();
+        svc.run_batch(batch.clone()).unwrap(); // compile + warm
+        let r = harness::bench(&format!("pjrt_service_32xfft{points}"), 1500, || {
+            svc.run_batch(batch.clone()).unwrap();
+        });
+        println!("  fft{points}: {:.0} req/s", 32.0 / r.mean.as_secs_f64());
+        svc.shutdown();
+    }
+
+    harness::section("validate path (PJRT + cycle-accurate cross-check)");
+    let svc = FftService::start(ServiceConfig {
+        cores: 4,
+        backend: Backend::Validate,
+        ..Default::default()
+    })
+    .unwrap();
+    let batch: Vec<Vec<(f32, f32)>> = (0..16).map(|i| signal(1024, i)).collect();
+    svc.run_batch(batch.clone()).unwrap();
+    harness::bench("validate_service_16xfft1024", 1500, || {
+        svc.run_batch(batch.clone()).unwrap();
+    });
+    let m = svc.metrics();
+    println!(
+        "  aggregate simulated efficiency: {:.2}% over {:.0} us of eGPU time",
+        m.efficiency_pct(),
+        m.virtual_us
+    );
+    svc.shutdown();
+}

@@ -1,0 +1,54 @@
+//! Minimal criterion-style benchmark harness (criterion itself is not
+//! in the offline vendor tree). Adaptive iteration count, warmup,
+//! mean ± stddev reporting.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub iters: u32,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>12.3?} ± {:>10.3?}  ({} iters)",
+            self.name, self.mean, self.stddev, self.iters
+        );
+    }
+}
+
+/// Run `f` with warmup until ~`target_ms` of samples are collected.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // warmup
+    let warm_start = Instant::now();
+    f();
+    let first = warm_start.elapsed();
+    // choose iteration count for the target
+    let iters = ((target_ms as f64 * 1e-3) / first.as_secs_f64().max(1e-9))
+        .clamp(1.0, 10_000.0) as u32;
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / samples.len().max(1) as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        iters,
+    };
+    r.print();
+    r
+}
+
+/// Pretty section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,142 @@
+//! Bench: simulator hot-path performance and design ablations —
+//! (a) raw simulation throughput (the §Perf L3 target),
+//! (b) the list-scheduler ablation (NOP cycles with/without),
+//! (c) the VM / complex-FU feature ablations (the paper's §6 deltas),
+//! (d) codegen + assembler round-trip cost.
+//!
+//! `cargo bench --bench simulator`
+
+mod harness;
+
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::{self, generate_opt, reference};
+use egpu_fft::isa::OpClass;
+
+fn main() {
+    harness::section("simulation throughput (4096-pt radix-16, DP)");
+    let cfg = SmConfig::for_radix(Variant::DP, 16);
+    let fp = fft::generate(&cfg, 4096, 16).unwrap();
+    let input: Vec<(f32, f32)> = reference::test_signal(4096, 3)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect();
+    let mut cycles = 0u64;
+    let r = harness::bench("simulate_fft4096_radix16", 2000, || {
+        let run = fft::run_fft(&fp, &cfg, &input).unwrap();
+        cycles = run.profile.total();
+    });
+    let cps = cycles as f64 / r.mean.as_secs_f64();
+    println!(
+        "  {cycles} simulated cycles per run -> {:.1} M simulated cycles/s\n\
+         (simulated hardware runs {cycles} cycles in {:.1} us at 771 MHz;\n\
+          slowdown factor {:.0}x)",
+        cps / 1e6,
+        cycles as f64 / 771.0,
+        r.mean.as_secs_f64() / (cycles as f64 / 771e6)
+    );
+
+    harness::section("scheduler ablation (hazard NOPs at shallow wavefronts)");
+    for (points, radix) in [(256usize, 4usize), (256, 16), (512, 8)] {
+        let cfg = SmConfig::for_radix(Variant::DP, radix);
+        let sig: Vec<(f32, f32)> = reference::test_signal(points, 1)
+            .iter()
+            .map(|c| c.to_f32_pair())
+            .collect();
+        let mut nops = [0u64; 2];
+        for (i, sched) in [false, true].into_iter().enumerate() {
+            let fp = generate_opt(&cfg, points, radix, sched).unwrap();
+            let run = fft::run_fft(&fp, &cfg, &sig).unwrap();
+            nops[i] = run.profile.get(OpClass::Nop);
+        }
+        println!(
+            "  {points}-pt radix-{radix}: NOP cycles {} unscheduled -> {} scheduled ({:.0}% removed)",
+            nops[0],
+            nops[1],
+            100.0 * (nops[0] - nops[1]) as f64 / nops[0].max(1) as f64
+        );
+    }
+
+    harness::section("feature ablations (4096-pt radix-16 totals)");
+    let base = run_total(4096, 16, Variant::DP);
+    for v in [Variant::DP_VM, Variant::DP_COMPLEX, Variant::DP_VM_COMPLEX, Variant::QP, Variant::QP_COMPLEX] {
+        let t = run_total(4096, 16, v);
+        println!(
+            "  {:<18} total {:>6} cycles ({:+.1}% vs DP), time {:>6.2} us, eff {:>5.2}%",
+            v.name(),
+            t.0,
+            100.0 * (t.0 as f64 - base.0 as f64) / base.0 as f64,
+            t.1,
+            t.2
+        );
+    }
+
+    harness::section("multi-batch amortization (§6: 'amortized away for multi-batch FFTs')");
+    for (points, radix, batch) in [(1024usize, 4usize, 4usize), (512, 8, 4), (256, 4, 8)] {
+        let cfg = SmConfig::for_radix(Variant::DP, radix);
+        let single = run_total(points, radix, Variant::DP);
+        let fp = egpu_fft::fft::generate_batched(&cfg, points, radix, batch).unwrap();
+        let inputs: Vec<Vec<(f32, f32)>> = (0..batch)
+            .map(|b| {
+                reference::test_signal(points, b as u64)
+                    .iter()
+                    .map(|c| c.to_f32_pair())
+                    .collect()
+            })
+            .collect();
+        let (_, prof) = egpu_fft::fft::run_fft_batch(&fp, &cfg, &inputs).unwrap();
+        let per_fft = prof.total() as f64 / batch as f64;
+        println!(
+            "  fft{points} r{radix} x{batch}: {:.0} cycles/FFT vs {} single (-{:.1}%), eff {:.2}% vs {:.2}%",
+            per_fft,
+            single.0,
+            100.0 * (1.0 - per_fft / single.0 as f64),
+            prof.efficiency_pct(),
+            single.2
+        );
+    }
+
+    harness::section("reduction workload (§4: VM helps 'FFTs and reduction')");
+    for v in [Variant::DP, Variant::DP_VM, Variant::QP] {
+        let cfg = SmConfig::for_radix(v, 4);
+        let rp = egpu_fft::apps::reduction::generate(&cfg, 8192).unwrap();
+        let input: Vec<f32> = reference::test_signal(8192, 9)
+            .iter()
+            .map(|c| c.re as f32)
+            .collect();
+        let (_, prof) = egpu_fft::apps::reduction::run(&rp, &cfg, &input).unwrap();
+        println!(
+            "  reduce8192 on {:<18} total {:>5} cycles, {:.2} us",
+            v.name(),
+            prof.total(),
+            prof.time_us()
+        );
+    }
+
+    harness::section("codegen + scheduling cost");
+    for (points, radix) in [(4096usize, 4usize), (4096, 8), (4096, 16), (1024, 16)] {
+        let cfg = SmConfig::for_radix(Variant::DP_VM_COMPLEX, radix);
+        harness::bench(&format!("generate_fft{points}_r{radix}"), 400, || {
+            let _ = fft::generate(&cfg, points, radix).unwrap();
+        });
+    }
+
+    harness::section("assembler round-trip");
+    let cfg = SmConfig::for_radix(Variant::DP, 16);
+    let listing: String = fft::generate(&cfg, 4096, 16)
+        .unwrap()
+        .program
+        .insts
+        .iter()
+        .map(|i| format!("{i}\n"))
+        .collect();
+    harness::bench("assemble_fft4096_listing", 400, || {
+        let _ = egpu_fft::isa::asm::assemble("rt", &listing).unwrap();
+    });
+}
+
+fn run_total(points: usize, radix: usize, v: Variant) -> (u64, f64, f64) {
+    let cfg = SmConfig::for_radix(v, radix);
+    let (p, err) = fft::validate(&cfg, points, radix, 7).unwrap();
+    assert!(err < fft::F32_TOL);
+    (p.total(), p.time_us(), p.efficiency_pct())
+}

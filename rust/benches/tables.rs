@@ -1,0 +1,65 @@
+//! Bench: regenerate the paper's Tables 1–4 (the full §6 profiling
+//! campaign) and print the reproduced rows next to the paper's values.
+//!
+//! `cargo bench --bench tables`
+
+mod harness;
+
+use egpu_fft::report;
+
+/// Paper values for the spot-check rows (points, variant-index, total,
+/// time_us, efficiency%) — variant index in ALL6 order.
+const PAPER_T1_4096: &[(usize, u64, f64, f64)] = &[
+    (0, 86817, 112.60, 15.48), // DP
+    (1, 62214, 80.73, 21.60),  // DP-VM
+    (3, 59361, 76.99, 22.64),  // DP-VM-Complex
+    (4, 62241, 103.74, 21.59), // QP
+];
+
+fn main() {
+    harness::section("Table 1: radix-4 campaign (sizes 256/1024/4096 × 6 variants)");
+    let mut t1 = None;
+    harness::bench("table1_radix4_campaign", 1500, || {
+        t1 = Some(report::profile_table(4).unwrap());
+    });
+    let t1 = t1.unwrap();
+    println!("\n{}", t1.render_markdown());
+    println!("paper spot-checks (radix-4, 4096 points):");
+    let row = &t1.rows.iter().find(|(p, _)| *p == 4096).unwrap().1;
+    for &(vi, total, time, eff) in PAPER_T1_4096 {
+        let got = row[vi].as_ref().unwrap();
+        println!(
+            "  variant#{vi}: total {} (paper {total}), time {:.2}us (paper {time}), \
+             eff {:.2}% (paper {eff}%)",
+            got.total(),
+            got.time_us(),
+            got.efficiency_pct()
+        );
+    }
+
+    harness::section("Table 2: radix-8 campaign");
+    let mut t2 = None;
+    harness::bench("table2_radix8_campaign", 1000, || {
+        t2 = Some(report::profile_table(8).unwrap());
+    });
+    println!("\n{}", t2.unwrap().render_markdown());
+
+    harness::section("Table 3: radix-16 campaign");
+    let mut t3 = None;
+    harness::bench("table3_radix16_campaign", 1000, || {
+        t3 = Some(report::profile_table(16).unwrap());
+    });
+    let t3 = t3.unwrap();
+    println!("\n{}", t3.render_markdown());
+    println!(
+        "best 4096-pt efficiency: {:.2}% (paper: 35.69% — see EXPERIMENTS.md on the\n\
+         paper's Table-3 VM/QP store-row swap)",
+        t3.best_efficiency(4096).unwrap()
+    );
+
+    harness::section("Table 4: radix-8 butterfly breakdown");
+    harness::bench("table4_butterfly", 200, || {
+        let _ = report::table4();
+    });
+    println!("\n{}", report::render_table4());
+}

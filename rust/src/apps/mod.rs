@@ -1,0 +1,6 @@
+//! Software-defined workloads beyond the FFT — the paper's central
+//! argument is that a soft *processor* runs arbitrary algorithms with
+//! no reconfiguration, and §4 names reduction as another beneficiary of
+//! the virtual-banked memory ("many algorithms can use this approach").
+
+pub mod reduction;

@@ -1,0 +1,243 @@
+//! eGPU architectural variants and SM configuration.
+//!
+//! The paper evaluates six variants (§6): the standard DP memory
+//! (4R-1W, 771 MHz), the QP memory (4R-2W, 600 MHz), the virtually
+//! banked memory (4R-4W via `save_bank`), the complex functional unit,
+//! and their combinations. `VM` is not supported together with `QP`
+//! ("all memory ports are available for all memory accesses").
+
+use std::fmt;
+
+/// Shared-memory write-port style.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum MemPorts {
+    /// M20K dual-port mode: 4 read ports, 1 write port, 771 MHz.
+    Dp,
+    /// M20K quad-port mode: 4 read ports, 2 write ports, 600 MHz,
+    /// half the M20K count.
+    Qp,
+}
+
+/// One of the six eGPU variants of §6 (or any consistent combination).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Variant {
+    pub mem: MemPorts,
+    /// Virtual 4R-4W banked memory (`save_bank`), §4.
+    pub vm: bool,
+    /// Complex functional units + coefficient cache, §5.
+    pub complex: bool,
+}
+
+impl Variant {
+    pub const DP: Variant = Variant { mem: MemPorts::Dp, vm: false, complex: false };
+    pub const DP_VM: Variant = Variant { mem: MemPorts::Dp, vm: true, complex: false };
+    pub const DP_COMPLEX: Variant = Variant { mem: MemPorts::Dp, vm: false, complex: true };
+    pub const DP_VM_COMPLEX: Variant = Variant { mem: MemPorts::Dp, vm: true, complex: true };
+    pub const QP: Variant = Variant { mem: MemPorts::Qp, vm: false, complex: false };
+    pub const QP_COMPLEX: Variant = Variant { mem: MemPorts::Qp, vm: false, complex: true };
+
+    /// The six variants in the paper's table column order.
+    pub const ALL6: [Variant; 6] = [
+        Variant::DP,
+        Variant::DP_VM,
+        Variant::DP_COMPLEX,
+        Variant::DP_VM_COMPLEX,
+        Variant::QP,
+        Variant::QP_COMPLEX,
+    ];
+
+    /// A QP memory exposes every port for every access; the virtual
+    /// banking scheme is meaningless there (§6).
+    pub fn is_valid(&self) -> bool {
+        !(self.vm && self.mem == MemPorts::Qp)
+    }
+
+    /// Achieved clock frequency on Agilex (§6): the QP memory mode
+    /// limits the SM to 600 MHz; all other variants close at 771 MHz.
+    pub fn fmax_mhz(&self) -> f64 {
+        match self.mem {
+            MemPorts::Dp => 771.0,
+            MemPorts::Qp => 600.0,
+        }
+    }
+
+    /// Shared-memory write ports visible to a coherent `sts`.
+    pub fn store_ports(&self) -> usize {
+        match self.mem {
+            MemPorts::Dp => 1,
+            MemPorts::Qp => 2,
+        }
+    }
+
+    /// Read ports (4 in every variant: the memory is built from four
+    /// banks read in parallel).
+    pub fn load_ports(&self) -> usize {
+        4
+    }
+
+    /// Virtual write ports seen by `save_bank`.
+    pub fn store_vm_ports(&self) -> usize {
+        4
+    }
+
+    pub fn name(&self) -> String {
+        let mut s = String::from("eGPU-");
+        s.push_str(match self.mem {
+            MemPorts::Dp => "DP",
+            MemPorts::Qp => "QP",
+        });
+        if self.vm {
+            s.push_str("-VM");
+        }
+        if self.complex {
+            s.push_str("-Complex");
+        }
+        s
+    }
+
+    /// FPGA resource inventory (§6 / Table 5): the DP eGPU required
+    /// 8801 ALMs, 192 M20Ks and 32 DSP Blocks; QP halves the M20Ks;
+    /// the complex unit adds one DSP block per SP with no footprint
+    /// change; VM adds negligible soft logic.
+    pub fn resources(&self) -> Resources {
+        let m20k = match self.mem {
+            MemPorts::Dp => 192,
+            MemPorts::Qp => 96,
+        };
+        let dsp = if self.complex { 48 } else { 32 };
+        Resources { alm: 8801, registers: 15109, m20k, dsp }
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// FPGA resource counts (Agilex: ALMs, ALM registers, M20K memory
+/// blocks, DSP blocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resources {
+    pub alm: u32,
+    pub registers: u32,
+    pub m20k: u32,
+    pub dsp: u32,
+}
+
+/// Full SM configuration for a simulation run.
+#[derive(Clone, Copy, Debug)]
+pub struct SmConfig {
+    pub variant: Variant,
+    /// Scalar processors per SM (16 in every reported eGPU).
+    pub n_sp: usize,
+    /// Execution pipeline depth in cycles (8; hazards are fully hidden
+    /// once the wavefront depth reaches this, §6).
+    pub pipeline_depth: usize,
+    /// Shared memory size in 32-bit words (64 KB = 16384 words in §6).
+    pub smem_words: usize,
+    /// Threads resident in the SM for this launch.
+    pub threads: usize,
+    /// Registers per thread (32 for the radix-4 runs, 64 for radix-8/16).
+    pub regs_per_thread: usize,
+}
+
+impl SmConfig {
+    /// The paper's FFT-test configuration for a given radix (§6):
+    /// radix-4 → 1024 threads × 32 registers; radix-8/16 → 512 × 64.
+    pub fn for_radix(variant: Variant, radix: usize) -> Self {
+        let (threads, regs) = if radix <= 4 { (1024, 32) } else { (512, 64) };
+        SmConfig {
+            variant,
+            n_sp: 16,
+            pipeline_depth: 8,
+            smem_words: 64 * 1024 / 4,
+            threads,
+            regs_per_thread: regs,
+        }
+    }
+
+    /// Wavefront depth for `active` threads: the number of cycles each
+    /// instruction is run for (§5: "the number of cycles that each
+    /// instruction is run for in the current thread initialization").
+    pub fn wavefront(&self, active: usize) -> usize {
+        active.div_ceil(self.n_sp).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names_match_paper() {
+        let names: Vec<String> = Variant::ALL6.iter().map(|v| v.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "eGPU-DP",
+                "eGPU-DP-VM",
+                "eGPU-DP-Complex",
+                "eGPU-DP-VM-Complex",
+                "eGPU-QP",
+                "eGPU-QP-Complex",
+            ]
+        );
+    }
+
+    #[test]
+    fn qp_vm_is_invalid() {
+        let v = Variant { mem: MemPorts::Qp, vm: true, complex: false };
+        assert!(!v.is_valid());
+        assert!(Variant::ALL6.iter().all(|v| v.is_valid()));
+    }
+
+    #[test]
+    fn fmax_matches_paper() {
+        assert_eq!(Variant::DP.fmax_mhz(), 771.0);
+        assert_eq!(Variant::QP.fmax_mhz(), 600.0);
+        assert_eq!(Variant::DP_VM_COMPLEX.fmax_mhz(), 771.0);
+    }
+
+    #[test]
+    fn ports() {
+        assert_eq!(Variant::DP.store_ports(), 1);
+        assert_eq!(Variant::QP.store_ports(), 2);
+        assert_eq!(Variant::DP.load_ports(), 4);
+        assert_eq!(Variant::DP_VM.store_vm_ports(), 4);
+    }
+
+    #[test]
+    fn resources_match_section6() {
+        let r = Variant::DP.resources();
+        assert_eq!((r.alm, r.m20k, r.dsp), (8801, 192, 32));
+        assert_eq!(Variant::QP.resources().m20k, 96);
+        assert_eq!(Variant::DP_COMPLEX.resources().dsp, 48);
+        // Footprint (ALM) unchanged by the complex/VM features (§6).
+        assert_eq!(Variant::DP_COMPLEX.resources().alm, Variant::DP.resources().alm);
+    }
+
+    #[test]
+    fn paper_configs() {
+        let c4 = SmConfig::for_radix(Variant::DP, 4);
+        assert_eq!((c4.threads, c4.regs_per_thread), (1024, 32));
+        let c16 = SmConfig::for_radix(Variant::DP, 16);
+        assert_eq!((c16.threads, c16.regs_per_thread), (512, 64));
+        // 64 KB shared memory = 16384 words; 32K registers across SPs.
+        assert_eq!(c4.smem_words, 16384);
+        assert_eq!(c4.threads * c4.regs_per_thread, 32 * 1024);
+        assert_eq!(c16.threads * c16.regs_per_thread, 32 * 1024);
+    }
+
+    #[test]
+    fn wavefront_depth_formula() {
+        // §6: wavefront = points / (16 × radix).
+        let c = SmConfig::for_radix(Variant::DP, 4);
+        assert_eq!(c.wavefront(4096 / 4), 64);
+        assert_eq!(c.wavefront(256 / 4), 4);
+        let c8 = SmConfig::for_radix(Variant::DP, 8);
+        assert_eq!(c8.wavefront(4096 / 8), 32);
+        // radix-16, 256 points: 16 threads -> wavefront clamps to 1.
+        assert_eq!(c8.wavefront(16), 1);
+    }
+}

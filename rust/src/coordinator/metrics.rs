@@ -1,0 +1,167 @@
+//! Service metrics: throughput, latency distribution, simulated
+//! (virtual) eGPU time and aggregate efficiency.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::profile::Profile;
+
+/// Latency histogram bucket upper bounds, µs (log-spaced).
+pub const LATENCY_BUCKETS_US: [f64; 8] =
+    [50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 10_000.0, f64::INFINITY];
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    served: u64,
+    errors: u64,
+    by_points: HashMap<usize, u64>,
+    wall_us_sum: f64,
+    wall_us_max: f64,
+    latency_hist: [u64; 8],
+    /// Accumulated simulated eGPU time (µs at the variant Fmax).
+    virtual_us: f64,
+    /// Accumulated cycle profile across all simulated jobs.
+    profile: Profile,
+}
+
+impl Metrics {
+    pub fn observe(&self, points: usize, wall_us: f64, profile: Option<&Profile>) {
+        let mut m = self.inner.lock().unwrap();
+        m.served += 1;
+        *m.by_points.entry(points).or_insert(0) += 1;
+        m.wall_us_sum += wall_us;
+        m.wall_us_max = m.wall_us_max.max(wall_us);
+        let bucket = LATENCY_BUCKETS_US.iter().position(|&b| wall_us <= b).unwrap_or(7);
+        m.latency_hist[bucket] += 1;
+        if let Some(p) = profile {
+            m.virtual_us += p.time_us();
+            m.profile += *p;
+        }
+    }
+
+    pub fn observe_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            served: m.served,
+            errors: m.errors,
+            by_points: m.by_points.clone(),
+            mean_wall_us: if m.served == 0 { 0.0 } else { m.wall_us_sum / m.served as f64 },
+            max_wall_us: m.wall_us_max,
+            latency_hist: m.latency_hist,
+            virtual_us: m.virtual_us,
+            aggregate_profile: m.profile,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub served: u64,
+    pub errors: u64,
+    pub by_points: HashMap<usize, u64>,
+    pub mean_wall_us: f64,
+    pub max_wall_us: f64,
+    pub latency_hist: [u64; 8],
+    pub virtual_us: f64,
+    pub aggregate_profile: Profile,
+}
+
+impl MetricsSnapshot {
+    /// Approximate latency percentile from the histogram.
+    pub fn latency_percentile_us(&self, q: f64) -> f64 {
+        let total: u64 = self.latency_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.latency_hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return LATENCY_BUCKETS_US[i];
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Aggregate FP-efficiency over all simulated work (§6 metric).
+    pub fn efficiency_pct(&self) -> f64 {
+        if self.aggregate_profile.total() == 0 {
+            0.0
+        } else {
+            self.aggregate_profile.efficiency_pct()
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "served={} errors={} mean_wall={:.1}us max_wall={:.1}us\n",
+            self.served, self.errors, self.mean_wall_us, self.max_wall_us
+        ));
+        let mut pts: Vec<_> = self.by_points.iter().collect();
+        pts.sort();
+        for (p, c) in pts {
+            s.push_str(&format!("  fft{p}: {c} jobs\n"));
+        }
+        if self.virtual_us > 0.0 {
+            s.push_str(&format!(
+                "  simulated eGPU time: {:.1}us, aggregate efficiency {:.2}%\n",
+                self.virtual_us,
+                self.efficiency_pct()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    #[test]
+    fn observe_and_snapshot() {
+        let m = Metrics::default();
+        let mut p = Profile::new(771.0);
+        p.record(OpClass::Fp, 771); // 1 us of virtual time
+        m.observe(256, 120.0, Some(&p));
+        m.observe(256, 80.0, None);
+        m.observe_error();
+        let s = m.snapshot();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.by_points[&256], 2);
+        assert!((s.mean_wall_us - 100.0).abs() < 1e-9);
+        assert!((s.virtual_us - 1.0).abs() < 1e-9);
+        assert_eq!(s.efficiency_pct(), 100.0);
+    }
+
+    #[test]
+    fn percentiles_from_histogram() {
+        let m = Metrics::default();
+        for _ in 0..99 {
+            m.observe(256, 40.0, None);
+        }
+        m.observe(256, 9000.0, None);
+        let s = m.snapshot();
+        assert_eq!(s.latency_percentile_us(0.5), 50.0);
+        assert_eq!(s.latency_percentile_us(0.999), 10_000.0);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let m = Metrics::default();
+        m.observe(1024, 10.0, None);
+        assert!(m.snapshot().render().contains("fft1024: 1 jobs"));
+    }
+}

@@ -1,0 +1,416 @@
+//! L3 coordinator: an FFT service scheduling jobs over a pool of
+//! simulated eGPU cores and the PJRT fast path.
+//!
+//! The paper's conclusion proposes deploying *many* eGPU instances
+//! ("we can use one or both, or multiple copies of each"); this module
+//! is that deployment: a router + worker pool where each worker owns an
+//! eGPU SM (cycle-faithful virtual time) and the AOT-compiled JAX FFT
+//! supplies the numeric fast path / cross-check. The offline image has
+//! no tokio, so the runtime is std threads + channels — which is also
+//! an honest model of a leader process feeding independent accelerator
+//! cores.
+
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::{SmConfig, Variant};
+use crate::fft::{self, reference, FftProgram};
+use crate::profile::Profile;
+use crate::runtime::{spawn_pjrt_server, PjrtHandle};
+use crate::sim::Sm;
+pub use metrics::{Metrics, MetricsSnapshot};
+
+/// Which execution engine serves a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Cycle-accurate eGPU simulation (returns a [`Profile`]).
+    Simulator,
+    /// AOT JAX artifact through PJRT (fast numerics, no profile).
+    Pjrt,
+    /// Both: PJRT numerics cross-checked against the simulator.
+    Validate,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Number of simulated eGPU cores (worker threads).
+    pub cores: usize,
+    pub variant: Variant,
+    /// Nominal radix for generated programs (16 = the paper's best).
+    pub radix: usize,
+    pub backend: Backend,
+    /// Directory holding `fft{N}.hlo.txt` artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            cores: 4,
+            variant: Variant::DP_VM_COMPLEX,
+            radix: 16,
+            backend: Backend::Simulator,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// A served FFT result.
+#[derive(Clone, Debug)]
+pub struct FftResult {
+    pub id: u64,
+    pub output: Vec<(f32, f32)>,
+    /// Cycle profile (simulator backends only).
+    pub profile: Option<Profile>,
+    /// Which core served it (simulator backends) — PJRT jobs report
+    /// `usize::MAX`.
+    pub core: usize,
+    /// Host-side service latency.
+    pub wall_us: f64,
+}
+
+struct Job {
+    id: u64,
+    input: Vec<(f32, f32)>,
+    reply: Sender<Result<FftResult>>,
+    submitted: Instant,
+}
+
+/// The running service: submit jobs, collect results, read metrics.
+pub struct FftService {
+    cfg: ServiceConfig,
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl FftService {
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        if cfg.cores == 0 {
+            return Err(anyhow!("need at least one core"));
+        }
+        if !cfg.variant.is_valid() {
+            return Err(anyhow!("invalid variant {}", cfg.variant));
+        }
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<Job>();
+        // one shared queue; workers race for jobs -> natural load balance
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let mut workers = Vec::new();
+        let (engine, pjrt_join) = match cfg.backend {
+            Backend::Pjrt | Backend::Validate => {
+                let (handle, join) = spawn_pjrt_server(&cfg.artifacts_dir)?;
+                (Some(handle), Some(join))
+            }
+            Backend::Simulator => (None, None),
+        };
+        let programs: ProgramCache = Arc::new(Mutex::new(HashMap::new()));
+        for core in 0..cfg.cores {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let cfg2 = cfg.clone();
+            let engine = engine.clone();
+            let programs = Arc::clone(&programs);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(core, cfg2, rx, metrics, engine, programs)
+            }));
+        }
+        if let Some(j) = pjrt_join {
+            workers.push(j);
+        }
+        Ok(FftService { cfg, tx: Some(tx), workers, metrics, next_id: AtomicU64::new(0) })
+    }
+
+    /// Submit one FFT; the returned channel yields the result.
+    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        let (reply_tx, reply_rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = Job { id, input, reply: reply_tx, submitted: Instant::now() };
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send(job)
+            .expect("workers alive");
+        reply_rx
+    }
+
+    /// Submit a batch and wait for every result (order preserved).
+    pub fn run_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+        let handles: Vec<_> = inputs.into_iter().map(|i| self.submit(i)).collect();
+        handles
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|e| anyhow!("worker dropped reply: {e}"))?)
+            .collect()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // closes the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for FftService {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Program cache shared by every worker (§Perf: codegen+scheduling of
+/// a 4096-point program costs ~0.5 ms; generate once, not per core).
+type ProgramCache = Arc<Mutex<HashMap<usize, Arc<FftProgram>>>>;
+
+/// Per-worker state: one simulated eGPU core with per-size SMs and a
+/// handle on the shared program cache.
+struct Core {
+    id: usize,
+    cfg: ServiceConfig,
+    programs: ProgramCache,
+    sms: HashMap<usize, Sm>, // by points
+}
+
+impl Core {
+    fn program(&mut self, points: usize) -> Result<Arc<FftProgram>> {
+        if let Some(p) = self.programs.lock().unwrap().get(&points) {
+            return Ok(Arc::clone(p));
+        }
+        // generate outside the lock (other sizes stay servable), then
+        // double-check on insert
+        let smcfg = SmConfig::for_radix(self.cfg.variant, self.cfg.radix);
+        let fp = Arc::new(fft::generate(&smcfg, points, self.cfg.radix)?);
+        let mut cache = self.programs.lock().unwrap();
+        Ok(Arc::clone(cache.entry(points).or_insert(fp)))
+    }
+
+    fn simulate(&mut self, input: &[(f32, f32)]) -> Result<(Vec<(f32, f32)>, Profile)> {
+        let points = input.len();
+        let fp = self.program(points)?;
+        let smcfg = SmConfig::for_radix(self.cfg.variant, self.cfg.radix);
+        // §Perf: one SM per size per core, twiddle tables loaded once at
+        // creation — the per-request work is data fill + run + readback.
+        let sm = match self.sms.entry(points) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let mut sm = Sm::new(smcfg);
+                sm.seed_thread_ids();
+                fft::load_twiddles(&mut sm, &fp)?;
+                e.insert(sm)
+            }
+        };
+        fft::load_data(sm, &fp, input)?;
+        let profile = sm.run(&fp.program, fp.plan.threads)?;
+        let output = fft::read_output(sm, &fp)?;
+        Ok((output, profile))
+    }
+}
+
+fn worker_loop(
+    core_id: usize,
+    cfg: ServiceConfig,
+    rx: Arc<std::sync::Mutex<Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+    engine: Option<PjrtHandle>,
+    programs: ProgramCache,
+) {
+    let mut core = Core { id: core_id, cfg: cfg.clone(), programs, sms: HashMap::new() };
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // queue closed
+        };
+        let res = serve(&mut core, &engine, &job);
+        let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+        match res {
+            Ok((output, profile)) => {
+                metrics.observe(job.input.len(), wall_us, profile.as_ref());
+                let _ = job.reply.send(Ok(FftResult {
+                    id: job.id,
+                    output,
+                    profile,
+                    core: if engine.is_some() && profile_is_none(&profile) {
+                        usize::MAX
+                    } else {
+                        core.id
+                    },
+                    wall_us,
+                }));
+            }
+            Err(e) => {
+                metrics.observe_error();
+                let _ = job.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+fn profile_is_none(p: &Option<Profile>) -> bool {
+    p.is_none()
+}
+
+fn serve(
+    core: &mut Core,
+    engine: &Option<PjrtHandle>,
+    job: &Job,
+) -> Result<(Vec<(f32, f32)>, Option<Profile>)> {
+    match core.cfg.backend {
+        Backend::Simulator => {
+            let (out, prof) = core.simulate(&job.input)?;
+            Ok((out, Some(prof)))
+        }
+        Backend::Pjrt => {
+            let eng = engine.as_ref().expect("engine for pjrt backend");
+            Ok((eng.fft(&job.input)?, None))
+        }
+        Backend::Validate => {
+            let eng = engine.as_ref().expect("engine for validate backend");
+            let fast = eng.fft(&job.input)?;
+            let (sim, prof) = core.simulate(&job.input)?;
+            let err = cross_error(&sim, &fast);
+            if err > fft::F32_TOL {
+                return Err(anyhow!(
+                    "cross-check failed for job {}: sim vs pjrt rms {err:e}",
+                    job.id
+                ));
+            }
+            Ok((fast, Some(prof)))
+        }
+    }
+}
+
+/// Relative RMS between two f32 complex vectors.
+pub fn cross_error(a: &[(f32, f32)], b: &[(f32, f32)]) -> f64 {
+    let to = |v: &[(f32, f32)]| -> Vec<fft::Cpx> {
+        v.iter().map(|&(r, i)| fft::Cpx::new(r as f64, i as f64)).collect()
+    };
+    reference::rms_rel_error(&to(a), &to(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::test_signal;
+
+    fn signal(n: usize, seed: u64) -> Vec<(f32, f32)> {
+        test_signal(n, seed).iter().map(|c| c.to_f32_pair()).collect()
+    }
+
+    #[test]
+    fn simulator_service_end_to_end() {
+        let svc = FftService::start(ServiceConfig {
+            cores: 2,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap();
+        let inputs: Vec<_> = (0..8).map(|i| signal(256, i)).collect();
+        let results = svc.run_batch(inputs.clone()).unwrap();
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            let want = reference::fft(&test_signal(256, i as u64));
+            let got: Vec<_> = r
+                .output
+                .iter()
+                .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+                .collect();
+            assert!(reference::rms_rel_error(&got, &want) < fft::F32_TOL);
+            assert!(r.profile.is_some());
+        }
+        let m = svc.metrics();
+        assert_eq!(m.served, 8);
+        assert_eq!(m.errors, 0);
+        assert!(m.virtual_us > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_sizes_route_correctly() {
+        let svc = FftService::start(ServiceConfig {
+            cores: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let results = svc
+            .run_batch(vec![signal(256, 1), signal(1024, 2), signal(256, 3), signal(4096, 4)])
+            .unwrap();
+        assert_eq!(results[0].output.len(), 256);
+        assert_eq!(results[1].output.len(), 1024);
+        assert_eq!(results[3].output.len(), 4096);
+        let m = svc.metrics();
+        assert_eq!(m.served, 4);
+        assert_eq!(m.by_points.get(&256).copied().unwrap_or(0), 2);
+    }
+
+    #[test]
+    fn bad_size_surfaces_error_without_killing_workers() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let bad = svc.submit(signal(100, 0)).recv().unwrap();
+        assert!(bad.is_err());
+        // service still alive
+        let ok = svc.submit(signal(256, 1)).recv().unwrap();
+        assert!(ok.is_ok());
+        assert_eq!(svc.metrics().errors, 1);
+    }
+
+    #[test]
+    fn pjrt_backend_serves_if_artifacts_exist() {
+        if !std::path::Path::new("artifacts/fft256.hlo.txt").exists() {
+            eprintln!("WARNING: artifacts missing; skipping pjrt service test");
+            return;
+        }
+        let svc = FftService::start(ServiceConfig {
+            cores: 1,
+            backend: Backend::Pjrt,
+            ..Default::default()
+        })
+        .unwrap();
+        let r = svc.submit(signal(256, 7)).recv().unwrap().unwrap();
+        assert!(r.profile.is_none());
+        let want = reference::fft(&test_signal(256, 7));
+        let got: Vec<_> = r
+            .output
+            .iter()
+            .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+            .collect();
+        assert!(reference::rms_rel_error(&got, &want) < fft::F32_TOL);
+    }
+
+    #[test]
+    fn validate_backend_cross_checks() {
+        if !std::path::Path::new("artifacts/fft256.hlo.txt").exists() {
+            eprintln!("WARNING: artifacts missing; skipping validate test");
+            return;
+        }
+        let svc = FftService::start(ServiceConfig {
+            cores: 1,
+            backend: Backend::Validate,
+            ..Default::default()
+        })
+        .unwrap();
+        let r = svc.submit(signal(1024, 9)).recv().unwrap().unwrap();
+        assert!(r.profile.is_some()); // sim ran too
+    }
+}

@@ -1,0 +1,910 @@
+//! eGPU assembly generators for the paper's FFT programs.
+//!
+//! One kernel per thread per pass (§3): the thread loads its
+//! `radix` complex points from shared memory, computes the radix-R DIF
+//! kernel built from radix-2 butterflies with §3.1's reduced-cost
+//! internal rotations, applies per-thread twiddles from the shared-
+//! memory tables, and stores back in place (digit-reversed natural-
+//! order addressing on the final pass, §3.2).
+//!
+//! Variant lowering:
+//! * **Complex FU** — twiddle multiplies become the §5 three-op
+//!   sequence `lod_coeff; mul_real; mul_imag` (kernel-internal constant
+//!   rotations stay on the real FP path, matching the paper's radix-8
+//!   cycle counts);
+//! * **VM** — the writeback of bank-eligible passes (exact §4 check in
+//!   [`plan`]) uses `save_bank`;
+//! * register *renaming* replaces the paper's physical `mov`s for
+//!   trivial rotations and kernel-internal reordering (Table 4 lists
+//!   those moves; ours fold into addressing — noted in EXPERIMENTS.md).
+
+use super::plan::{FftPlan, Layout, Pass, PlanError};
+use super::twiddle::{classify, twiddle, TwiddleKind};
+use crate::arch::{SmConfig, Variant};
+use crate::isa::{Inst, Program, Reg};
+
+/// A generated FFT program plus the metadata needed to run it.
+#[derive(Clone, Debug)]
+pub struct FftProgram {
+    pub program: Program,
+    pub plan: FftPlan,
+    pub layout: Layout,
+    pub variant: Variant,
+    /// Precomputed twiddle-table memory image: (base word address,
+    /// words). Computed once at generate time so the serving path never
+    /// re-evaluates sin/cos (§Perf).
+    pub twiddle_image: Vec<(usize, Vec<u32>)>,
+}
+
+/// Generate the FFT program for one design point under `cfg`.
+pub fn generate(cfg: &SmConfig, points: usize, radix: usize) -> Result<FftProgram, PlanError> {
+    generate_opt(cfg, points, radix, true)
+}
+
+/// Multi-batch program (§6): `batch` resident datasets transformed by
+/// one thread initialization; per-pass addressing and twiddle loads are
+/// paid once and amortized across the batch ("these would be amortized
+/// away for multi-batch FFTs"). Twiddles stay in registers for the
+/// whole pass, so the mode needs `2(radix-1)` spare registers — radix
+/// ≤ 8 in the paper's register budgets — and a single-block plan.
+pub fn generate_batched(
+    cfg: &SmConfig,
+    points: usize,
+    radix: usize,
+    batch: usize,
+) -> Result<FftProgram, PlanError> {
+    if batch <= 1 {
+        return generate(cfg, points, radix);
+    }
+    let plan = FftPlan::new(points, radix, cfg.threads)?;
+    if radix > 8 || !plan.single_radix() || plan.passes.iter().any(|p| p.blocks > 1) {
+        return Err(PlanError::BatchUnsupported { points, radix });
+    }
+    let layout = Layout::new_batched(&plan, cfg.smem_words, batch)?;
+    let mut g = Gen::new(cfg, &plan, &layout);
+    g.emit_program();
+    let name = format!(
+        "fft{points}x{batch}-r{radix}-{}",
+        cfg.variant.name()
+    );
+    let mut program = Program::new(name, g.code);
+    program = super::sched::schedule(&program, cfg.pipeline_depth);
+    debug_assert!((program.max_reg() as usize) < cfg.regs_per_thread);
+    let twiddle_image = twiddle_image_for(&plan, &layout);
+    Ok(FftProgram {
+        program,
+        plan,
+        layout: layout.clone(),
+        variant: cfg.variant,
+        twiddle_image,
+    })
+}
+
+fn twiddle_image_for(plan: &FftPlan, layout: &Layout) -> Vec<(usize, Vec<u32>)> {
+    plan.passes
+        .iter()
+        .zip(&layout.twiddle_bases)
+        .filter_map(|(pass, base)| {
+            base.map(|b| {
+                let words: Vec<u32> = super::twiddle::pass_table(pass.radix, pass.stride)
+                    .into_iter()
+                    .flat_map(|(re, im)| [re.to_bits(), im.to_bits()])
+                    .collect();
+                (b, words)
+            })
+        })
+        .collect()
+}
+
+/// As [`generate`], optionally skipping the list scheduler (used by the
+/// scheduling-ablation benchmark).
+pub fn generate_opt(
+    cfg: &SmConfig,
+    points: usize,
+    radix: usize,
+    schedule: bool,
+) -> Result<FftProgram, PlanError> {
+    let plan = FftPlan::new(points, radix, cfg.threads)?;
+    let layout = Layout::new(&plan, cfg.smem_words)?;
+    let mut g = Gen::new(cfg, &plan, &layout);
+    g.emit_program();
+    let name = format!("fft{points}-r{radix}-{}", cfg.variant.name());
+    let mut program = Program::new(name, g.code);
+    if schedule {
+        program = super::sched::schedule(&program, cfg.pipeline_depth);
+    }
+    debug_assert!((program.max_reg() as usize) < cfg.regs_per_thread);
+    let twiddle_image = twiddle_image_for(&plan, &layout);
+    Ok(FftProgram {
+        program,
+        plan,
+        layout: layout.clone(),
+        variant: cfg.variant,
+        twiddle_image,
+    })
+}
+
+// ---------------------------------------------------------------------
+// management registers (fixed)
+const R_TID: Reg = 0; // thread id, preloaded
+const R_A0: Reg = 1; // data base word address (2j)
+const R_RIDX: Reg = 2; // twiddle row / reversed base address
+const R_TEFF: Reg = 3; // effective thread id for blocked passes
+const R_S0: Reg = 4; // scratch
+const R_S1: Reg = 5; // scratch
+const FIRST_FREE: Reg = 6;
+
+/// One complex value: the registers currently holding (re, im).
+#[derive(Clone, Copy, Debug)]
+struct Val {
+    re: Reg,
+    im: Reg,
+}
+
+/// Tiny free-list register pool; renaming returns freed registers.
+struct Pool {
+    free: Vec<Reg>,
+    high_water: Reg,
+}
+
+impl Pool {
+    fn new(first: Reg, last: Reg) -> Self {
+        Pool { free: (first..=last).rev().collect(), high_water: 0 }
+    }
+    fn alloc(&mut self) -> Reg {
+        let r = self.free.pop().expect("register pool exhausted");
+        self.high_water = self.high_water.max(r);
+        r
+    }
+    fn alloc_val(&mut self) -> Val {
+        Val { re: self.alloc(), im: self.alloc() }
+    }
+    fn release(&mut self, r: Reg) {
+        debug_assert!(!self.free.contains(&r));
+        self.free.push(r);
+    }
+    fn release_val(&mut self, v: Val) {
+        self.release(v.re);
+        self.release(v.im);
+    }
+}
+
+struct Consts {
+    c707: Reg,
+    mc707: Reg,
+    c16_1: Reg,  // cos(π/8)
+    s16_1: Reg,  // sin(π/8)
+    mc16_1: Reg, // -cos(π/8)
+    ms16_1: Reg, // -sin(π/8)
+}
+
+struct Gen<'a> {
+    cfg: &'a SmConfig,
+    plan: &'a FftPlan,
+    layout: &'a Layout,
+    code: Vec<Inst>,
+    pool: Pool,
+    consts: Consts,
+}
+
+const SIGN_BIT: u32 = 0x8000_0000;
+
+impl<'a> Gen<'a> {
+    fn new(cfg: &'a SmConfig, plan: &'a FftPlan, layout: &'a Layout) -> Self {
+        let max_radix = plan.passes.iter().map(|p| p.radix).max().unwrap();
+        // const registers depend on the largest kernel radix
+        let n_consts: Reg = match max_radix {
+            16 => 6,
+            8 => 2,
+            _ => 0,
+        };
+        let consts = Consts {
+            c707: FIRST_FREE,
+            mc707: FIRST_FREE + 1,
+            c16_1: FIRST_FREE + 2,
+            s16_1: FIRST_FREE + 3,
+            mc16_1: FIRST_FREE + 4,
+            ms16_1: FIRST_FREE + 5,
+        };
+        let pool_first = FIRST_FREE + n_consts;
+        let pool = Pool::new(pool_first, (cfg.regs_per_thread - 1) as Reg);
+        Gen { cfg, plan, layout, code: Vec::new(), pool, consts }
+    }
+
+    fn push(&mut self, i: Inst) {
+        self.code.push(i);
+    }
+
+    // -- tiny emit helpers -------------------------------------------
+    fn fadd(&mut self, d: Reg, a: Reg, b: Reg) {
+        self.push(Inst::FAdd { d, a, b });
+    }
+    fn fsub(&mut self, d: Reg, a: Reg, b: Reg) {
+        self.push(Inst::FSub { d, a, b });
+    }
+    fn fmul(&mut self, d: Reg, a: Reg, b: Reg) {
+        self.push(Inst::FMul { d, a, b });
+    }
+    fn fneg_int(&mut self, d: Reg, a: Reg) {
+        // §3.1: FP multiply by -1 as an integer XOR of the sign bit.
+        self.push(Inst::IXorI { d, a, imm: SIGN_BIT, fp_work: true });
+    }
+
+    fn emit_program(&mut self) {
+        let v = self.cfg.variant;
+        if v.complex {
+            self.push(Inst::CoeffEn);
+        }
+        self.emit_consts();
+        let n_passes = self.plan.n_passes();
+        for p in 0..n_passes {
+            self.emit_pass(p);
+            self.push(Inst::Bar);
+        }
+        if v.complex {
+            self.push(Inst::CoeffDis);
+        }
+        self.push(Inst::Halt);
+    }
+
+    fn emit_consts(&mut self) {
+        let max_radix = self.plan.passes.iter().map(|p| p.radix).max().unwrap();
+        if max_radix >= 8 {
+            let c = std::f32::consts::FRAC_1_SQRT_2;
+            self.push(Inst::LdiF { d: self.consts.c707, imm: c });
+            self.push(Inst::LdiF { d: self.consts.mc707, imm: -c });
+        }
+        if max_radix >= 16 {
+            let c1 = (std::f64::consts::PI / 8.0).cos() as f32;
+            let s1 = (std::f64::consts::PI / 8.0).sin() as f32;
+            self.push(Inst::LdiF { d: self.consts.c16_1, imm: c1 });
+            self.push(Inst::LdiF { d: self.consts.s16_1, imm: s1 });
+            self.push(Inst::LdiF { d: self.consts.mc16_1, imm: -c1 });
+            self.push(Inst::LdiF { d: self.consts.ms16_1, imm: -s1 });
+        }
+    }
+
+    fn emit_pass(&mut self, p: usize) {
+        let pass = self.plan.passes[p];
+        let is_last = p + 1 == self.plan.n_passes();
+        if self.layout.batch > 1 {
+            self.emit_pass_batched(p, &pass, is_last);
+            return;
+        }
+        if is_last && pass.blocks > 1 {
+            // The digit-reversed writeback scatters across the whole
+            // array, so a later block's inputs would be clobbered by an
+            // earlier block's stores. Do what §3.2 describes: keep the
+            // entire pass in registers — load + compute every block
+            // first, then store every block.
+            let vals: Vec<Vec<Val>> = (0..pass.blocks)
+                .map(|b| self.emit_block_load_compute(p, &pass, b))
+                .collect();
+            for (b, v) in vals.into_iter().enumerate() {
+                self.emit_block_store(p, &pass, b, v);
+            }
+        } else {
+            for block in 0..pass.blocks {
+                let v = self.emit_block_load_compute(p, &pass, block);
+                self.emit_block_store(p, &pass, block, v);
+            }
+        }
+    }
+
+    /// Effective-thread register for this block (r0 for block 0).
+    fn rt(&mut self, block: usize) -> Reg {
+        if block == 0 {
+            R_TID
+        } else {
+            let off = (block * self.plan.threads) as i32;
+            self.push(Inst::IAddI { d: R_TEFF, a: R_TID, imm: off });
+            R_TEFF
+        }
+    }
+
+    /// Addressing + loads + kernel + twiddles for one block; returns the
+    /// logical-order output values (still in registers).
+    fn emit_block_load_compute(&mut self, p: usize, pass: &Pass, block: usize) -> Vec<Val> {
+        let rt = self.rt(block);
+        self.emit_addressing(pass, rt);
+        self.emit_loads_kernel(p, pass, 0, None)
+    }
+
+    /// The multi-batch pass body (§6): addressing and twiddle loads
+    /// once, then the load/kernel/store sequence per resident dataset
+    /// with the twiddles held in registers.
+    fn emit_pass_batched(&mut self, p: usize, pass: &Pass, is_last: bool) {
+        debug_assert_eq!(pass.blocks, 1);
+        self.emit_addressing(pass, R_TID);
+        let tw: Option<Vec<Val>> = if pass.twiddles {
+            let tw_base = self.layout.twiddle_bases[p].expect("twiddled pass") as i32;
+            Some(
+                (1..pass.radix)
+                    .map(|m| {
+                        let w = self.pool.alloc_val();
+                        let off = tw_base + 2 * (m as i32 - 1);
+                        self.push(Inst::Lds { d: w.re, addr: R_RIDX, offset: off });
+                        self.push(Inst::Lds { d: w.im, addr: R_RIDX, offset: off + 1 });
+                        w
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        if is_last {
+            // natural-order base: same for every dataset (offsets differ)
+            self.emit_reversed_base(R_TID);
+        }
+        for b in 0..self.layout.batch {
+            let boff = (b * self.layout.data_words) as i32;
+            let x = self.emit_loads_kernel(p, pass, boff, tw.as_deref());
+            self.emit_block_store_at(p, pass, x, boff, is_last);
+        }
+        if let Some(tw) = tw {
+            for w in tw {
+                self.pool.release_val(w);
+            }
+        }
+    }
+
+    /// Per-thread base addresses: `a0 = 2·j` and (for twiddled passes)
+    /// the twiddle-row word offset in `R_RIDX`.
+    fn emit_addressing(&mut self, pass: &Pass, rt: Reg) {
+        let radix = pass.radix;
+        let log2r = radix.trailing_zeros() as u8;
+        let s = pass.stride;
+        let log2s = s.trailing_zeros() as u8;
+
+        // ---- addressing: a0 = 2·j, ridx = t mod s ----
+        if s == 1 {
+            // j = radix · teff
+            self.push(Inst::IShlI { d: R_A0, a: rt, sh: log2r + 1 });
+        } else if pass.kernels(self.plan.points) <= s {
+            // pass 1 (j = teff): every thread index is below the stride
+            self.push(Inst::IShlI { d: R_A0, a: rt, sh: 1 });
+            if pass.twiddles {
+                self.push(Inst::IAndI { d: R_RIDX, a: rt, imm: (s - 1) as u32 });
+            }
+        } else {
+            // j = ((t >> log2s) << (log2s + log2r)) | (t & (s-1))
+            self.push(Inst::IShrI { d: R_S0, a: rt, sh: log2s });
+            self.push(Inst::IShlI { d: R_S0, a: R_S0, sh: log2s + log2r });
+            self.push(Inst::IAndI { d: R_RIDX, a: rt, imm: (s - 1) as u32 });
+            self.push(Inst::IAdd { d: R_A0, a: R_S0, b: R_RIDX });
+            self.push(Inst::IShlI { d: R_A0, a: R_A0, sh: 1 });
+        }
+
+        // twiddle-row word offset: ridx · 2(radix-1)
+        if pass.twiddles {
+            match radix {
+                2 => self.push(Inst::IShlI { d: R_RIDX, a: R_RIDX, sh: 1 }),
+                4 => {
+                    // ×6 = (r<<1) + (r<<2)
+                    self.push(Inst::IShlI { d: R_S0, a: R_RIDX, sh: 1 });
+                    self.push(Inst::IShlI { d: R_S1, a: R_RIDX, sh: 2 });
+                    self.push(Inst::IAdd { d: R_RIDX, a: R_S0, b: R_S1 });
+                }
+                8 => {
+                    // ×14 = (r<<4) - (r<<1)
+                    self.push(Inst::IShlI { d: R_S0, a: R_RIDX, sh: 4 });
+                    self.push(Inst::IShlI { d: R_S1, a: R_RIDX, sh: 1 });
+                    self.push(Inst::ISub { d: R_RIDX, a: R_S0, b: R_S1 });
+                }
+                _ => {
+                    // ×30 = (r<<5) - (r<<1)
+                    self.push(Inst::IShlI { d: R_S0, a: R_RIDX, sh: 5 });
+                    self.push(Inst::IShlI { d: R_S1, a: R_RIDX, sh: 1 });
+                    self.push(Inst::ISub { d: R_RIDX, a: R_S0, b: R_S1 });
+                }
+            }
+        }
+
+    }
+
+    /// Data loads + kernel + twiddle application for one dataset
+    /// (`boff` = word offset of the dataset region); twiddles come from
+    /// `preloaded` registers in multi-batch mode, or from shared memory.
+    fn emit_loads_kernel(
+        &mut self,
+        p: usize,
+        pass: &Pass,
+        boff: i32,
+        preloaded: Option<&[Val]>,
+    ) -> Vec<Val> {
+        let radix = pass.radix;
+        let s = pass.stride;
+        // ---- data loads ----
+        let mut x: Vec<Val> = Vec::with_capacity(radix);
+        for k in 0..radix {
+            let v = self.pool.alloc_val();
+            let off = boff + (2 * k * s) as i32;
+            self.push(Inst::Lds { d: v.re, addr: R_A0, offset: off });
+            self.push(Inst::Lds { d: v.im, addr: R_A0, offset: off + 1 });
+            x.push(v);
+        }
+
+        // ---- kernel (logical-order outputs) ----
+        match radix {
+            2 => self.kernel_radix2(&mut x),
+            4 => self.kernel_radix4(&mut x),
+            8 => self.kernel_radix8(&mut x),
+            16 => self.kernel_radix16(&mut x),
+            _ => unreachable!(),
+        }
+
+        // ---- per-thread twiddles (outputs 1..radix-1) ----
+        if pass.twiddles {
+            let tw_base = self.layout.twiddle_bases[p].expect("twiddled pass") as i32;
+            for (m, xm) in x.iter_mut().enumerate().skip(1) {
+                let w = match preloaded {
+                    Some(regs) => regs[m - 1],
+                    None => {
+                        let off = tw_base + 2 * (m as i32 - 1);
+                        let w = self.pool.alloc_val();
+                        self.push(Inst::Lds { d: w.re, addr: R_RIDX, offset: off });
+                        self.push(Inst::Lds { d: w.im, addr: R_RIDX, offset: off + 1 });
+                        w
+                    }
+                };
+                if self.cfg.variant.complex {
+                    // §5: lod_coeff + mul_real + mul_imag, renaming the
+                    // real result into a fresh register.
+                    self.push(Inst::LodCoeff { re: w.re, im: w.im });
+                    let new_re = self.pool.alloc();
+                    self.push(Inst::MulReal { d: new_re, a: xm.re, b: xm.im });
+                    self.push(Inst::MulImag { d: xm.im, a: xm.re, b: xm.im });
+                    self.pool.release(xm.re);
+                    xm.re = new_re;
+                } else {
+                    let xv = *xm;
+                    let out = self.cmul_regs(xv, w.re, w.im);
+                    self.pool.release_val(xv);
+                    *xm = out;
+                }
+                if preloaded.is_none() {
+                    self.pool.release_val(w);
+                }
+            }
+        }
+
+        x
+    }
+
+    /// Writeback for one block's values (in-place, or digit-reversed on
+    /// the final pass), then release their registers.
+    fn emit_block_store(&mut self, p: usize, pass: &Pass, block: usize, x: Vec<Val>) {
+        let is_last = p + 1 == self.plan.n_passes();
+        if is_last {
+            // rt/A0 may have been clobbered by a later block's
+            // load/compute phase; recompute for blocked final passes.
+            let rt = if pass.blocks > 1 { self.rt(block) } else { self.rt(0) };
+            self.emit_reversed_base(rt);
+        }
+        self.emit_block_store_at(p, pass, x, 0, is_last);
+    }
+
+    /// The store sequence itself; for final passes `R_RIDX` must already
+    /// hold the digit-reversed base. `boff` selects the dataset region.
+    fn emit_block_store_at(
+        &mut self,
+        _p: usize,
+        pass: &Pass,
+        x: Vec<Val>,
+        boff: i32,
+        is_last: bool,
+    ) {
+        let radix = pass.radix;
+        let s = pass.stride;
+        let use_vm = self.cfg.variant.vm && pass.vm_eligible;
+        if is_last {
+            let sigma = (self.plan.points / radix) as i32; // weight of last digit
+            for (m, xm) in x.iter().enumerate() {
+                let off = boff + 2 * sigma * m as i32;
+                self.push(Inst::Sts { addr: R_RIDX, offset: off, s: xm.re });
+                self.push(Inst::Sts { addr: R_RIDX, offset: off + 1, s: xm.im });
+            }
+        } else {
+            for (k, xk) in x.iter().enumerate() {
+                let off = boff + (2 * k * s) as i32;
+                if use_vm {
+                    self.push(Inst::StsBank { addr: R_A0, offset: off, s: xk.re });
+                    self.push(Inst::StsBank { addr: R_A0, offset: off + 1, s: xk.im });
+                } else {
+                    self.push(Inst::Sts { addr: R_A0, offset: off, s: xk.re });
+                    self.push(Inst::Sts { addr: R_A0, offset: off + 1, s: xk.im });
+                }
+            }
+        }
+        for v in x {
+            self.pool.release_val(v);
+        }
+    }
+
+    /// Natural-order base address for the final pass (§3.2): the mixed-
+    /// radix digit reversal of the thread's kernel base, as a word
+    /// address, left in `R_RIDX`.
+    fn emit_reversed_base(&mut self, rt: Reg) {
+        let last = self.plan.n_passes() - 1;
+        let r_last = self.plan.passes[last].radix;
+        let mut sigma = 1usize;
+        let mut first = true;
+        for p in 0..last {
+            let pass = &self.plan.passes[p];
+            // digit_p(teff) = (teff >> log2(s_p / r_last)) & (R_p - 1)
+            let shift = (pass.stride / r_last).trailing_zeros() as u8;
+            let wordshift = (sigma.trailing_zeros() + 1) as u8;
+            if first {
+                self.push(Inst::IShrI { d: R_RIDX, a: rt, sh: shift });
+                self.push(Inst::IAndI { d: R_RIDX, a: R_RIDX, imm: (pass.radix - 1) as u32 });
+                self.push(Inst::IShlI { d: R_RIDX, a: R_RIDX, sh: wordshift });
+                first = false;
+            } else {
+                self.push(Inst::IShrI { d: R_S0, a: rt, sh: shift });
+                self.push(Inst::IAndI { d: R_S0, a: R_S0, imm: (pass.radix - 1) as u32 });
+                self.push(Inst::IShlI { d: R_S0, a: R_S0, sh: wordshift });
+                self.push(Inst::IAdd { d: R_RIDX, a: R_RIDX, b: R_S0 });
+            }
+            sigma *= pass.radix;
+        }
+        if first {
+            // single-pass FFT: base is 0
+            self.push(Inst::Ldi { d: R_RIDX, imm: 0 });
+        }
+    }
+
+    // -- complex building blocks --------------------------------------
+
+    /// d = a + b into fresh registers.
+    fn cadd_new(&mut self, a: Val, b: Val) -> Val {
+        let d = self.pool.alloc_val();
+        self.fadd(d.re, a.re, b.re);
+        self.fadd(d.im, a.im, b.im);
+        d
+    }
+
+    /// d = a - b into fresh registers.
+    fn csub_new(&mut self, a: Val, b: Val) -> Val {
+        let d = self.pool.alloc_val();
+        self.fsub(d.re, a.re, b.re);
+        self.fsub(d.im, a.im, b.im);
+        d
+    }
+
+    /// Full 6-op complex multiply `x · (wre, wim)` from register
+    /// operands, producing fresh result registers.
+    fn cmul_regs(&mut self, x: Val, wre: Reg, wim: Reg) -> Val {
+        let t0 = self.pool.alloc();
+        let t1 = self.pool.alloc();
+        let d = self.pool.alloc_val();
+        self.fmul(t0, x.re, wre);
+        self.fmul(t1, x.im, wim);
+        self.fsub(d.re, t0, t1);
+        self.fmul(t0, x.re, wim);
+        self.fmul(t1, x.im, wre);
+        self.fadd(d.im, t0, t1);
+        self.pool.release(t0);
+        self.pool.release(t1);
+        d
+    }
+
+    /// Apply a compile-time constant rotation `w` to `x` using the
+    /// §3.1 reduced-cost forms; returns the (possibly renamed) value.
+    fn rotate_const(&mut self, x: Val, n: usize, k: usize) -> Val {
+        let w = twiddle(n, k);
+        match classify(w) {
+            TwiddleKind::One => x,
+            TwiddleKind::MinusOne => {
+                // two INT sign flips
+                let d = self.pool.alloc_val();
+                self.fneg_int(d.re, x.re);
+                self.fneg_int(d.im, x.im);
+                self.pool.release_val(x);
+                d
+            }
+            TwiddleKind::MinusJ => {
+                // (re,im) -> (im, -re): rename + one INT sign flip
+                let nim = self.pool.alloc();
+                self.fneg_int(nim, x.re);
+                self.pool.release(x.re);
+                Val { re: x.im, im: nim }
+            }
+            TwiddleKind::PlusJ => {
+                let nre = self.pool.alloc();
+                self.fneg_int(nre, x.im);
+                self.pool.release(x.im);
+                Val { re: nre, im: x.re }
+            }
+            TwiddleKind::EqualCoeff { mag, re_neg, im_neg } => {
+                // w = m(σr + σi j): 2 add/sub + 2 multiplies (§3.1)
+                debug_assert!((mag - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-9);
+                let (cpos, cneg) = (self.consts.c707, self.consts.mc707);
+                let d = self.pool.alloc_val();
+                let t = self.pool.alloc();
+                // re' = m(σr·xr − σi·xi); im' = m(σi·xr + σr·xi)
+                match (re_neg, im_neg) {
+                    (false, true) => {
+                        // m(1 - j): re' = m(xr + xi), im' = m(xi − xr)
+                        self.fadd(t, x.re, x.im);
+                        self.fmul(d.re, t, cpos);
+                        self.fsub(t, x.im, x.re);
+                        self.fmul(d.im, t, cpos);
+                    }
+                    (true, true) => {
+                        // m(-1 - j): re' = m(xi − xr), im' = −m(xr + xi)
+                        self.fsub(t, x.im, x.re);
+                        self.fmul(d.re, t, cpos);
+                        self.fadd(t, x.re, x.im);
+                        self.fmul(d.im, t, cneg);
+                    }
+                    (true, false) => {
+                        // m(-1 + j): re' = −m(xr + xi), im' = m(xr − xi)
+                        self.fadd(t, x.re, x.im);
+                        self.fmul(d.re, t, cneg);
+                        self.fsub(t, x.re, x.im);
+                        self.fmul(d.im, t, cpos);
+                    }
+                    (false, false) => {
+                        // m(1 + j): re' = m(xr − xi), im' = m(xr + xi)
+                        self.fsub(t, x.re, x.im);
+                        self.fmul(d.re, t, cpos);
+                        self.fadd(t, x.re, x.im);
+                        self.fmul(d.im, t, cpos);
+                    }
+                }
+                self.pool.release(t);
+                self.pool.release_val(x);
+                d
+            }
+            TwiddleKind::Full(w) => {
+                // constant full rotation from pre-loaded const registers
+                // (only the W16 family appears in our kernels)
+                let (wre, wim) = self.const_regs_for(w);
+                let d = self.cmul_regs(x, wre, wim);
+                self.pool.release_val(x);
+                d
+            }
+        }
+    }
+
+    /// Map a full-rotation constant onto the pre-loaded W16 registers.
+    fn const_regs_for(&self, w: super::twiddle::Cpx) -> (Reg, Reg) {
+        let c1 = (std::f64::consts::PI / 8.0).cos();
+        let s1 = (std::f64::consts::PI / 8.0).sin();
+        let pick = |v: f64| -> Reg {
+            if (v - c1).abs() < 1e-9 {
+                self.consts.c16_1
+            } else if (v + c1).abs() < 1e-9 {
+                self.consts.mc16_1
+            } else if (v - s1).abs() < 1e-9 {
+                self.consts.s16_1
+            } else if (v + s1).abs() < 1e-9 {
+                self.consts.ms16_1
+            } else {
+                panic!("unsupported kernel rotation constant {v}");
+            }
+        };
+        (pick(w.re), pick(w.im))
+    }
+
+    // -- kernels (in logical output order) -----------------------------
+
+    fn kernel_radix2(&mut self, x: &mut [Val]) {
+        let (a, b) = (x[0], x[1]);
+        let v = self.csub_new(a, b); // Y1
+        let u = self.cadd_new(a, b); // Y0
+        self.pool.release_val(a);
+        self.pool.release_val(b);
+        x[0] = u;
+        x[1] = v;
+    }
+
+    /// Radix-4 DIF dragonfly: 8 complex add/sub, the ±j rotation folded
+    /// into operand routing (16 real FP ops).
+    fn kernel_radix4(&mut self, x: &mut [Val]) {
+        let (a, b, c, d) = (x[0], x[1], x[2], x[3]);
+        let t0 = self.cadd_new(a, c);
+        let t1 = self.csub_new(a, c);
+        let t2 = self.cadd_new(b, d);
+        let t3 = self.csub_new(b, d);
+        self.pool.release_val(a);
+        self.pool.release_val(b);
+        self.pool.release_val(c);
+        self.pool.release_val(d);
+        let y0 = self.cadd_new(t0, t2);
+        let y2 = self.csub_new(t0, t2);
+        // Y1 = t1 − j·t3 ; Y3 = t1 + j·t3 (pure add/sub on components)
+        let y1 = self.pool.alloc_val();
+        self.fadd(y1.re, t1.re, t3.im);
+        self.fsub(y1.im, t1.im, t3.re);
+        let y3 = self.pool.alloc_val();
+        self.fsub(y3.re, t1.re, t3.im);
+        self.fadd(y3.im, t1.im, t3.re);
+        self.pool.release_val(t0);
+        self.pool.release_val(t1);
+        self.pool.release_val(t2);
+        self.pool.release_val(t3);
+        x[0] = y0;
+        x[1] = y1;
+        x[2] = y2;
+        x[3] = y3;
+    }
+
+    /// Radix-8 DIF kernel per Table 4: one radix-2 stage with W8
+    /// rotations, then two radix-4 kernels on the halves.
+    fn kernel_radix8(&mut self, x: &mut [Val]) {
+        // stage: u_k = x_k + x_{k+4}; v_k = (x_k − x_{k+4})·W8^k
+        let mut u = Vec::with_capacity(4);
+        let mut v = Vec::with_capacity(4);
+        for k in 0..4 {
+            let (a, b) = (x[k], x[k + 4]);
+            let vk = self.csub_new(a, b);
+            let uk = self.cadd_new(a, b);
+            self.pool.release_val(a);
+            self.pool.release_val(b);
+            u.push(uk);
+            v.push(self.rotate_const(vk, 8, k));
+        }
+        // even outputs from DFT4(u), odd from DFT4(v)
+        let mut ue: Vec<Val> = u;
+        self.kernel_radix4(&mut ue);
+        let mut vo: Vec<Val> = v;
+        self.kernel_radix4(&mut vo);
+        for m in 0..4 {
+            x[2 * m] = ue[m];
+            x[2 * m + 1] = vo[m];
+        }
+    }
+
+    /// Radix-16 DIF kernel: 4 column DFT4s, the 9 internal W16^{kρ}
+    /// rotations in §3.1 reduced form (4 full multiplies, 4
+    /// equal-coefficient, 1 integer −j), then 4 row DFT4s.
+    fn kernel_radix16(&mut self, x: &mut [Val]) {
+        // columns: g_ρ(k) = DFT4 over δ of x_{k+4δ}, then ·W16^{kρ}
+        let mut g = vec![[None::<Val>; 4]; 4]; // g[ρ][k]
+        for k in 0..4 {
+            let mut col = vec![x[k], x[k + 4], x[k + 8], x[k + 12]];
+            self.kernel_radix4(&mut col);
+            for (rho, val) in col.into_iter().enumerate() {
+                let rotated = self.rotate_const(val, 16, k * rho);
+                g[rho][k] = Some(rotated);
+            }
+        }
+        // rows: Y_{4μ+ρ} = DFT4 over k of g_ρ(k)
+        for rho in 0..4 {
+            let mut row: Vec<Val> = (0..4).map(|k| g[rho][k].take().unwrap()).collect();
+            self.kernel_radix4(&mut row);
+            for (mu, val) in row.into_iter().enumerate() {
+                x[4 * mu + rho] = val;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    fn gen(points: usize, radix: usize, variant: Variant) -> FftProgram {
+        let cfg = SmConfig::for_radix(variant, radix);
+        generate(&cfg, points, radix).unwrap()
+    }
+
+    /// Static instruction counts for the radix-4 / 4096 program, checked
+    /// against the counts derivable from Table 1 (see DESIGN.md §3):
+    /// 78 load instructions, 48 stores, and 34 FP ops per twiddled pass.
+    #[test]
+    fn radix4_4096_static_counts() {
+        let f = gen(4096, 4, Variant::DP);
+        let h = f.program.class_histogram();
+        assert_eq!(h[OpClass::Load.index()], 78, "loads: 5×14 + 8");
+        assert_eq!(h[OpClass::Store.index()], 48, "stores: 6 passes × 8");
+        // FP: 5 passes × (16 kernel + 18 cmul) + 16 final = 186
+        assert_eq!(h[OpClass::Fp.index()], 5 * 34 + 16);
+        assert_eq!(h[OpClass::StoreVm.index()], 0);
+    }
+
+    #[test]
+    fn radix4_4096_vm_splits_stores() {
+        let f = gen(4096, 4, Variant::DP_VM);
+        let h = f.program.class_histogram();
+        // 4 eligible passes bank-write, 2 (incl. final) store coherently
+        assert_eq!(h[OpClass::StoreVm.index()], 4 * 8);
+        assert_eq!(h[OpClass::Store.index()], 2 * 8);
+    }
+
+    #[test]
+    fn radix4_4096_complex_variant_counts() {
+        let f = gen(4096, 4, Variant::DP_COMPLEX);
+        let h = f.program.class_histogram();
+        // per twiddled pass: 3 cmuls × (lod_coeff + mul_real + mul_imag)
+        // plus the program-level coeff_en/dis pair
+        assert_eq!(h[OpClass::Complex.index()], 5 * 9 + 2);
+        // FP falls to the 16-op kernel per pass
+        assert_eq!(h[OpClass::Fp.index()], 6 * 16);
+        // loads unchanged (tw values still fetched into registers)
+        assert_eq!(h[OpClass::Load.index()], 78);
+    }
+
+    #[test]
+    fn radix8_kernel_cost_matches_table4_structure() {
+        let f = gen(512, 8, Variant::DP);
+        let h = f.program.class_histogram();
+        // kernel: 16 stage FP + W8 rotations (0 + 4 + 1 + 4, with W8^3
+        // in §3.1 equal-coefficient form where Table 4 spends a full
+        // 6-op multiply) + 2×16 DFT4 = 56 FP + the −j integer flip.
+        // Twiddled passes add 7 × 6 = 42 -> 98; final pass 56.
+        assert_eq!(h[OpClass::Fp.index()], 2 * 98 + 56);
+        let f4096 = gen(4096, 8, Variant::DP);
+        let h2 = f4096.program.class_histogram();
+        assert_eq!(h2[OpClass::Fp.index()], 3 * 98 + 56);
+        assert_eq!(h2[OpClass::Load.index()], 3 * (16 + 14) + 16, "paper: 106");
+        assert_eq!(h2[OpClass::Store.index()], 4 * 16);
+    }
+
+    #[test]
+    fn radix16_kernel_cost() {
+        let f = gen(4096, 16, Variant::DP);
+        let h = f.program.class_histogram();
+        // kernel 168 FP; twiddled passes add 15×6 = 90
+        assert_eq!(h[OpClass::Fp.index()], 2 * (168 + 90) + 168);
+        assert_eq!(h[OpClass::Load.index()], 2 * (32 + 30) + 32, "paper: 156");
+    }
+
+    #[test]
+    fn register_budget_respected() {
+        for (points, radix) in
+            [(256, 2), (256, 4), (1024, 4), (4096, 4), (512, 8), (4096, 8), (256, 16), (1024, 16), (4096, 16)]
+        {
+            for v in Variant::ALL6 {
+                let cfg = SmConfig::for_radix(v, radix);
+                let f = generate(&cfg, points, radix).unwrap();
+                assert!(
+                    (f.program.max_reg() as usize) < cfg.regs_per_thread,
+                    "{points}/{radix}/{v}: r{} vs {}",
+                    f.program.max_reg(),
+                    cfg.regs_per_thread
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_radix_1024_blocks_unrolled() {
+        let f = gen(1024, 16, Variant::DP);
+        // final radix-4 pass runs as 4 blocks: 4 iaddi teff offsets
+        let teff_offsets: Vec<i32> = f
+            .program
+            .insts
+            .iter()
+            .filter_map(|i| match i {
+                Inst::IAddI { d: 3, a: 0, imm } => Some(*imm),
+                _ => None,
+            })
+            .collect();
+        // once in the load/compute phase and once in the store phase
+        // (the blocked final pass runs entirely in registers, §3.2)
+        assert_eq!(teff_offsets, vec![64, 128, 192, 64, 128, 192]);
+        let h = f.program.class_histogram();
+        // stores: 2 radix-16 passes ×32 + 4 blocks × 8
+        assert_eq!(
+            h[OpClass::Store.index()] + h[OpClass::StoreVm.index()],
+            2 * 32 + 4 * 8
+        );
+    }
+
+    #[test]
+    fn programs_assemble_round_trip() {
+        let f = gen(256, 4, Variant::DP);
+        let listing: String = f
+            .program
+            .insts
+            .iter()
+            .map(|i| format!("{i}\n"))
+            .collect();
+        let p2 = crate::isa::asm::assemble("rt", &listing).unwrap();
+        // fp_work flags are comments in the listing, so compare by class
+        assert_eq!(p2.class_histogram(), f.program.class_histogram());
+    }
+}

@@ -1,0 +1,402 @@
+//! FFT execution planning: pass decomposition, thread→index mapping,
+//! digit-reversed output addressing, virtual-bank eligibility, and the
+//! shared-memory layout.
+//!
+//! The decomposition follows the paper: a size-N FFT at radix R is
+//! `log_R(N)` in-place decimation-in-frequency passes; pass `p` works at
+//! stride `s_p = N / R^p` (Figure 2: pass 1 of the radix-4 256-point FFT
+//! touches {t, t+64, t+128, t+192}). When N is not a pure power of R the
+//! trailing pass(es) drop to a smaller radix (§6.2: the 1024-point
+//! radix-16 FFT is 16·16·4, with the radix-4 pass run as four blocks
+//! reusing the radix-16 thread initialization).
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum PlanError {
+    #[error("unsupported FFT size {0}: must be a power of two ≥ 4")]
+    BadSize(usize),
+    #[error("unsupported radix {0}: must be 2, 4, 8 or 16")]
+    BadRadix(usize),
+    #[error("size {points} with radix {radix} leaves no valid decomposition")]
+    NoDecomposition { points: usize, radix: usize },
+    #[error("FFT working set ({need} words) exceeds shared memory ({have} words)")]
+    TooLarge { need: usize, have: usize },
+    #[error(
+        "multi-batch mode unsupported for {points}-pt radix-{radix}: needs \
+         a single-block, single-radix plan with radix ≤ 8 (register budget)"
+    )]
+    BatchUnsupported { points: usize, radix: usize },
+}
+
+/// One in-place DIF pass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pass {
+    /// Kernel radix of this pass.
+    pub radix: usize,
+    /// Butterfly stride `s_p`; the kernel of effective thread `t`
+    /// touches `j + k·s_p` for `k = 0..radix`.
+    pub stride: usize,
+    /// Sequential blocks: `kernels / threads` (≥ 2 only for mixed-radix
+    /// or capacity-limited passes).
+    pub blocks: usize,
+    /// Whether the pass applies non-trivial twiddles (stride > 1).
+    pub twiddles: bool,
+    /// Whether this pass's writeback may use `save_bank` (filled in by
+    /// the exact eligibility check; only meaningful on VM variants).
+    pub vm_eligible: bool,
+}
+
+impl Pass {
+    /// Total butterfly kernels in this pass.
+    pub fn kernels(&self, points: usize) -> usize {
+        points / self.radix
+    }
+
+    /// Base in-place index of the kernel run by effective thread `t`.
+    pub fn kernel_base(&self, t: usize) -> usize {
+        (t / self.stride) * self.radix * self.stride + (t % self.stride)
+    }
+
+    /// Twiddle row for effective thread `t` (`r = t mod stride`).
+    pub fn twiddle_row(&self, t: usize) -> usize {
+        t % self.stride
+    }
+}
+
+/// A complete FFT plan for one (points, radix) design point.
+#[derive(Clone, Debug)]
+pub struct FftPlan {
+    pub points: usize,
+    /// Nominal radix of the design point (the paper's table row).
+    pub radix: usize,
+    pub passes: Vec<Pass>,
+    /// Threads launched (= kernels of the first pass, the paper's
+    /// "thread initialization", capped at the SM capacity).
+    pub threads: usize,
+}
+
+impl FftPlan {
+    /// Build a plan. `max_threads` is the SM thread capacity for the
+    /// launch configuration (1024 for radix ≤ 4, 512 above, per §6).
+    pub fn new(points: usize, radix: usize, max_threads: usize) -> Result<Self, PlanError> {
+        if !points.is_power_of_two() || points < 4 {
+            return Err(PlanError::BadSize(points));
+        }
+        if !matches!(radix, 2 | 4 | 8 | 16) {
+            return Err(PlanError::BadRadix(radix));
+        }
+
+        // Greedy digit decomposition: use the nominal radix while it
+        // divides what remains, then fall to the largest power of two
+        // that fits (1024 @ radix-16 -> 16·16·4, §6.2).
+        let mut radices = Vec::new();
+        let mut rem = points;
+        while rem > 1 {
+            let mut r = radix.min(rem);
+            while rem % r != 0 || (rem / r > 1 && !(rem / r).is_power_of_two()) {
+                r /= 2;
+                if r < 2 {
+                    return Err(PlanError::NoDecomposition { points, radix });
+                }
+            }
+            radices.push(r);
+            rem /= r;
+        }
+
+        // Strides: s_p = product of the radices of the following passes.
+        let n_passes = radices.len();
+        let mut strides = vec![1usize; n_passes];
+        for p in (0..n_passes - 1).rev() {
+            strides[p] = strides[p + 1] * radices[p + 1];
+        }
+
+        let threads = (points / radices[0]).min(max_threads);
+        let mut passes: Vec<Pass> = radices
+            .iter()
+            .zip(&strides)
+            .map(|(&radix, &stride)| Pass {
+                radix,
+                stride,
+                blocks: (points / radix).div_ceil(threads),
+                twiddles: stride > 1,
+                vm_eligible: false,
+            })
+            .collect();
+
+        // Exact virtual-bank eligibility (§4): pass p's writeback may use
+        // save_bank iff every word read in pass p+1 comes from an SP
+        // congruent (mod 4) with the SP that wrote it in pass p. The
+        // final pass always stores coherently (host readback).
+        for p in 0..n_passes - 1 {
+            passes[p].vm_eligible = vm_check(points, threads, &passes[p], &passes[p + 1]);
+        }
+
+        Ok(FftPlan { points, radix, passes, threads })
+    }
+
+    /// Natural (frequency-domain) index of in-place position `i` after
+    /// all DIF passes: the mixed-radix digit reversal.
+    pub fn natural_of_inplace(&self, i: usize) -> usize {
+        let mut weight = 1usize; // σ_p: product of radices of passes < p
+        let mut out = 0usize;
+        for pass in &self.passes {
+            let digit = (i / pass.stride) % pass.radix;
+            out += digit * weight;
+            weight *= pass.radix;
+        }
+        out
+    }
+
+    /// Number of passes.
+    pub fn n_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Is this a single-radix plan (every pass at the nominal radix)?
+    pub fn single_radix(&self) -> bool {
+        self.passes.iter().all(|p| p.radix == self.radix)
+    }
+}
+
+/// Exhaustive mod-4 congruence check between the writers of pass `p`
+/// and the readers of pass `q = p+1` (both possibly blocked).
+fn vm_check(points: usize, threads: usize, wp: &Pass, rp: &Pass) -> bool {
+    // writer_of[i]: physical thread that wrote in-place index i in pass p
+    let mut writer_sp = vec![0u8; points];
+    for block in 0..wp.blocks {
+        for t in 0..threads.min(wp.kernels(points)) {
+            let teff = block * threads + t;
+            if teff >= wp.kernels(points) {
+                break;
+            }
+            let base = wp.kernel_base(teff);
+            for k in 0..wp.radix {
+                writer_sp[base + k * wp.stride] = (t % 16) as u8;
+            }
+        }
+    }
+    for block in 0..rp.blocks {
+        for t in 0..threads.min(rp.kernels(points)) {
+            let teff = block * threads + t;
+            if teff >= rp.kernels(points) {
+                break;
+            }
+            let base = rp.kernel_base(teff);
+            for k in 0..rp.radix {
+                let w = writer_sp[base + k * rp.stride] % 4;
+                if w != (t % 4) as u8 {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Shared-memory layout for an FFT run: `batch` interleaved-complex
+/// datasets at the bottom, one twiddle table per twiddled pass above.
+/// Multi-batch (§6: twiddle loads "would be amortized away for
+/// multi-batch FFTs") packs B datasets so one resident thread set
+/// processes all of them per pass while the twiddles sit in registers.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub data_base: usize,
+    /// Words per dataset (2·points).
+    pub data_words: usize,
+    /// Number of resident datasets.
+    pub batch: usize,
+    /// Per-pass twiddle table base (word address); `None` for passes
+    /// without twiddles.
+    pub twiddle_bases: Vec<Option<usize>>,
+    pub words_used: usize,
+}
+
+impl Layout {
+    pub fn new(plan: &FftPlan, smem_words: usize) -> Result<Self, PlanError> {
+        Self::new_batched(plan, smem_words, 1)
+    }
+
+    pub fn new_batched(
+        plan: &FftPlan,
+        smem_words: usize,
+        batch: usize,
+    ) -> Result<Self, PlanError> {
+        assert!(batch >= 1);
+        let data_words = 2 * plan.points;
+        let mut cursor = data_words * batch;
+        let mut twiddle_bases = Vec::with_capacity(plan.n_passes());
+        for pass in &plan.passes {
+            if pass.twiddles {
+                twiddle_bases.push(Some(cursor));
+                cursor += pass.stride * (pass.radix - 1) * 2;
+            } else {
+                twiddle_bases.push(None);
+            }
+        }
+        if cursor > smem_words {
+            return Err(PlanError::TooLarge { need: cursor, have: smem_words });
+        }
+        Ok(Layout { data_base: 0, data_words, batch, twiddle_bases, words_used: cursor })
+    }
+
+    /// Word address of the real part of data element `i` of dataset `b`.
+    pub fn data_addr(&self, b: usize, i: usize) -> usize {
+        self.data_base + b * self.data_words + 2 * i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_radix_decompositions() {
+        for (points, radix, expect_passes) in [
+            (256usize, 4usize, 4usize),
+            (1024, 4, 5),
+            (4096, 4, 6),
+            (512, 8, 3),
+            (4096, 8, 4),
+            (256, 16, 2),
+            (4096, 16, 3),
+            (256, 2, 8),
+        ] {
+            let plan = FftPlan::new(points, radix, 1024).unwrap();
+            assert_eq!(plan.n_passes(), expect_passes, "{points}/{radix}");
+            assert!(plan.single_radix());
+            // strides decrease by the radix each pass, ending at 1
+            assert_eq!(plan.passes.last().unwrap().stride, 1);
+            assert_eq!(plan.passes[0].stride, points / radix);
+        }
+    }
+
+    /// §6.2: 1024-point radix-16 = 16 · 16 · 4, radix-4 pass in 4 blocks
+    /// reusing the 64-thread initialization.
+    #[test]
+    fn mixed_radix_1024() {
+        let plan = FftPlan::new(1024, 16, 512).unwrap();
+        let radices: Vec<usize> = plan.passes.iter().map(|p| p.radix).collect();
+        assert_eq!(radices, vec![16, 16, 4]);
+        assert_eq!(plan.threads, 64);
+        assert_eq!(plan.passes[2].blocks, 4);
+        assert_eq!(plan.passes[0].blocks, 1);
+        let strides: Vec<usize> = plan.passes.iter().map(|p| p.stride).collect();
+        assert_eq!(strides, vec![64, 4, 1]);
+    }
+
+    /// Figure 2 of the paper: radix-4, 256 points. Pass 1 T0 reads
+    /// {0,64,128,192}; pass 2 T0 reads {0,16,32,48}; pass 3 T0 reads
+    /// {0,4,8,12}; pass 3 T4 reads {16,20,24,28}.
+    #[test]
+    fn figure2_index_mapping() {
+        let plan = FftPlan::new(256, 4, 1024).unwrap();
+        let p1 = &plan.passes[0];
+        assert_eq!(p1.kernel_base(0), 0);
+        assert_eq!(p1.stride, 64);
+        let p2 = &plan.passes[1];
+        assert_eq!(p2.kernel_base(0), 0);
+        assert_eq!(p2.stride, 16);
+        let p3 = &plan.passes[2];
+        assert_eq!(p3.stride, 4);
+        assert_eq!(p3.kernel_base(4), 16);
+        // Pass 2 T17: base 65 (Figure 2 shows i065..i113 in that column)
+        assert_eq!(p2.kernel_base(17), 65);
+    }
+
+    /// VM eligibility must match the paper's §4 narrative: for radix-4,
+    /// every pass except the last two can bank-write.
+    #[test]
+    fn vm_eligibility_radix4() {
+        for (points, expect_vm) in [(256usize, 2usize), (1024, 3), (4096, 4)] {
+            let plan = FftPlan::new(points, 4, 1024).unwrap();
+            let n = plan.n_passes();
+            let got: Vec<bool> = plan.passes.iter().map(|p| p.vm_eligible).collect();
+            let count = got.iter().filter(|&&b| b).count();
+            assert_eq!(count, expect_vm, "{points}: {got:?}");
+            // the eligible ones are exactly the first n-2
+            for (i, &b) in got.iter().enumerate() {
+                assert_eq!(b, i + 2 < n, "{points} pass {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn vm_eligibility_radix8_and_16() {
+        // radix-8 4096: paper derivation -> passes 1,2 eligible of 4
+        let plan = FftPlan::new(4096, 8, 512).unwrap();
+        let got: Vec<bool> = plan.passes.iter().map(|p| p.vm_eligible).collect();
+        assert_eq!(got, vec![true, true, false, false]);
+        // radix-16 4096: only pass 1 of 3
+        let plan = FftPlan::new(4096, 16, 512).unwrap();
+        let got: Vec<bool> = plan.passes.iter().map(|p| p.vm_eligible).collect();
+        assert_eq!(got, vec![true, false, false]);
+        // radix-16 256: two passes, none eligible (paper shows "-")
+        let plan = FftPlan::new(256, 16, 512).unwrap();
+        assert!(plan.passes.iter().all(|p| !p.vm_eligible));
+        // mixed 1024: pass 1 eligible only
+        let plan = FftPlan::new(1024, 16, 512).unwrap();
+        let got: Vec<bool> = plan.passes.iter().map(|p| p.vm_eligible).collect();
+        assert_eq!(got, vec![true, false, false]);
+    }
+
+    /// Digit reversal sanity: it is an involution-like permutation and
+    /// matches bit reversal for radix 2.
+    #[test]
+    fn digit_reversal_permutation() {
+        let plan = FftPlan::new(256, 4, 1024).unwrap();
+        let mut seen = vec![false; 256];
+        for i in 0..256 {
+            let r = plan.natural_of_inplace(i);
+            assert!(!seen[r]);
+            seen[r] = true;
+        }
+        let plan2 = FftPlan::new(16, 2, 1024).unwrap();
+        for i in 0..16usize {
+            let r = plan2.natural_of_inplace(i);
+            let bitrev = (i.reverse_bits() >> (usize::BITS - 4)) as usize;
+            assert_eq!(r, bitrev);
+        }
+    }
+
+    #[test]
+    fn layout_fits_paper_configs() {
+        // the 64 KB shared memory of §6 holds data + twiddles for every
+        // reported design point
+        let smem = 16384;
+        for (points, radix, max_t) in [
+            (4096usize, 4usize, 1024usize),
+            (4096, 8, 512),
+            (4096, 16, 512),
+            (1024, 4, 1024),
+            (1024, 16, 512),
+            (512, 8, 512),
+            (256, 4, 1024),
+            (256, 16, 512),
+        ] {
+            let plan = FftPlan::new(points, radix, max_t).unwrap();
+            let layout = Layout::new(&plan, smem).unwrap();
+            assert!(layout.words_used <= smem, "{points}/{radix}");
+        }
+        // radix-4/4096 is the tight one: 16376 of 16384 words
+        let plan = FftPlan::new(4096, 4, 1024).unwrap();
+        let layout = Layout::new(&plan, smem).unwrap();
+        assert_eq!(layout.words_used, 16376);
+    }
+
+    #[test]
+    fn layout_overflow_detected() {
+        let plan = FftPlan::new(4096, 4, 1024).unwrap();
+        assert!(matches!(
+            Layout::new(&plan, 8192),
+            Err(PlanError::TooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        assert!(FftPlan::new(100, 4, 1024).is_err());
+        assert!(FftPlan::new(256, 5, 1024).is_err());
+        assert!(FftPlan::new(2, 2, 1024).is_err());
+    }
+}

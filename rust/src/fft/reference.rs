@@ -1,0 +1,168 @@
+//! Reference transforms: the oracle for validating eGPU FFT programs.
+//!
+//! Two independent implementations (an O(n²) DFT and an iterative
+//! radix-2 FFT) cross-check each other, and both check the simulator's
+//! output. All math in f64 so the oracle error is negligible against
+//! the f32 arithmetic of the simulated SM.
+
+use super::twiddle::{twiddle, Cpx};
+
+/// Naive O(n²) forward DFT — definitionally correct.
+pub fn dft_naive(input: &[Cpx]) -> Vec<Cpx> {
+    let n = input.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Cpx::ZERO;
+            for (j, &x) in input.iter().enumerate() {
+                acc = acc + x * twiddle(n, (j * k) % n);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Iterative radix-2 decimation-in-time FFT (n must be a power of two).
+pub fn fft_radix2(input: &[Cpx]) -> Vec<Cpx> {
+    let n = input.len();
+    assert!(n.is_power_of_two(), "fft_radix2 requires power-of-two length");
+    let bits = n.trailing_zeros();
+    let mut a: Vec<Cpx> = (0..n)
+        .map(|i| input[(i as u32).reverse_bits() as usize >> (32 - bits)])
+        .collect();
+    let mut len = 2;
+    while len <= n {
+        let step = n / len;
+        for start in (0..n).step_by(len) {
+            for k in 0..len / 2 {
+                let w = twiddle(n, k * step);
+                let u = a[start + k];
+                let v = a[start + k + len / 2] * w;
+                a[start + k] = u + v;
+                a[start + k + len / 2] = u - v;
+            }
+        }
+        len <<= 1;
+    }
+    a
+}
+
+/// Forward FFT for any power-of-two size (radix-2 path).
+pub fn fft(input: &[Cpx]) -> Vec<Cpx> {
+    fft_radix2(input)
+}
+
+/// Root-mean-square error between two complex vectors, normalized by
+/// the RMS magnitude of `want` (relative error).
+pub fn rms_rel_error(got: &[Cpx], want: &[Cpx]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    let mut err = 0.0;
+    let mut mag = 0.0;
+    for (g, w) in got.iter().zip(want) {
+        let d = *g - *w;
+        err += d.re * d.re + d.im * d.im;
+        mag += w.re * w.re + w.im * w.im;
+    }
+    if mag == 0.0 {
+        err.sqrt()
+    } else {
+        (err / mag).sqrt()
+    }
+}
+
+/// Deterministic pseudo-random complex test signal (xorshift64*; no
+/// external RNG crates are available in this offline image).
+pub fn test_signal(n: usize, seed: u64) -> Vec<Cpx> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let mut next = move || {
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        let v = state.wrapping_mul(0x2545F4914F6CDD1D);
+        // map the top 24 bits to [-1, 1)
+        ((v >> 40) as f64) / (1u64 << 23) as f64 - 1.0
+    };
+    (0..n).map(|_| Cpx::new(next(), next())).collect()
+}
+
+/// FLOP count convention used throughout the paper's comparisons:
+/// `5·N·log2(N)` for a complex N-point FFT.
+pub fn fft_flops(n: usize) -> f64 {
+    5.0 * n as f64 * (n as f64).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut x = vec![Cpx::ZERO; 8];
+        x[0] = Cpx::ONE;
+        for y in dft_naive(&x) {
+            assert!((y.re - 1.0).abs() < 1e-12 && y.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dft_of_single_tone() {
+        // x[n] = e^{2πi·3n/16} -> spike at bin 3 (note DFT sign flip)
+        let n = 16;
+        let x: Vec<Cpx> =
+            (0..n).map(|j| twiddle(n, (3 * j) % n).conj()).collect();
+        let y = dft_naive(&x);
+        for (k, v) in y.iter().enumerate() {
+            let expect = if k == 3 { n as f64 } else { 0.0 };
+            assert!((v.re - expect).abs() < 1e-9, "bin {k}");
+            assert!(v.im.abs() < 1e-9, "bin {k}");
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_up_to_1024() {
+        for n in [2usize, 4, 8, 16, 64, 256, 1024] {
+            let x = test_signal(n, 42);
+            let err = rms_rel_error(&fft_radix2(&x), &dft_naive(&x));
+            assert!(err < 1e-10, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 64;
+        let a = test_signal(n, 1);
+        let b = test_signal(n, 2);
+        let sum: Vec<Cpx> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let fa = fft(&a);
+        let fb = fft(&b);
+        let fsum = fft(&sum);
+        for i in 0..n {
+            let d = fsum[i] - (fa[i] + fb[i]);
+            assert!(d.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 256;
+        let x = test_signal(n, 7);
+        let y = fft(&x);
+        let tx: f64 = x.iter().map(|c| c.abs().powi(2)).sum();
+        let ty: f64 = y.iter().map(|c| c.abs().powi(2)).sum();
+        assert!((ty - n as f64 * tx).abs() / (n as f64 * tx) < 1e-12);
+    }
+
+    #[test]
+    fn test_signal_deterministic_and_bounded() {
+        let a = test_signal(32, 5);
+        let b = test_signal(32, 5);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|c| c.re.abs() <= 1.0 && c.im.abs() <= 1.0));
+        let c = test_signal(32, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn flops_convention() {
+        assert_eq!(fft_flops(4096), 5.0 * 4096.0 * 12.0);
+    }
+}

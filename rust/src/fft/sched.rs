@@ -1,0 +1,265 @@
+//! Static instruction scheduler for generated FFT passes.
+//!
+//! The paper's FFT programs are hand-scheduled assembly; at shallow
+//! wavefronts (< pipeline depth 8) naive instruction order would stall
+//! on every RAW edge. This list scheduler reorders instructions inside
+//! each control-free region to maximize dependency distance, mimicking
+//! what the paper's authors did by hand (their 256-point runs still
+//! show residual NOPs — so does ours).
+//!
+//! Correctness edges:
+//! * register RAW / WAR / WAW;
+//! * coefficient cache: `lod_coeff` defines it, `mul_real`/`mul_imag`
+//!   read it (and a later `lod_coeff` must not overtake them);
+//! * memory: loads never cross stores in either direction (passes are
+//!   in-place — another thread's store may alias this thread's load);
+//! * control ops (`bar`, `bnz`, `halt`, `coeff_en/dis`) are region
+//!   boundaries and never move.
+
+use crate::isa::{Inst, Program};
+
+/// Schedule a whole program, region by region.
+pub fn schedule(program: &Program, latency: usize) -> Program {
+    let mut out = Vec::with_capacity(program.insts.len());
+    let mut region = Vec::new();
+    for &inst in &program.insts {
+        if is_boundary(&inst) {
+            schedule_region(&mut out, &region, latency);
+            region.clear();
+            out.push(inst);
+        } else {
+            region.push(inst);
+        }
+    }
+    schedule_region(&mut out, &region, latency);
+    Program::new(program.name.clone(), out)
+}
+
+fn is_boundary(inst: &Inst) -> bool {
+    matches!(
+        inst,
+        Inst::Bar | Inst::Bnz { .. } | Inst::Halt | Inst::CoeffEn | Inst::CoeffDis | Inst::Nop
+    )
+}
+
+/// Virtual coefficient-cache "register" id used for dependence tracking.
+const COEFF: usize = usize::MAX;
+
+fn defs(inst: &Inst) -> Option<usize> {
+    if matches!(inst, Inst::LodCoeff { .. }) {
+        return Some(COEFF);
+    }
+    inst.dst().map(|r| r as usize)
+}
+
+fn uses(inst: &Inst) -> Vec<usize> {
+    let mut v: Vec<usize> = inst.srcs().map(|r| r as usize).collect();
+    if matches!(inst, Inst::MulReal { .. } | Inst::MulImag { .. }) {
+        v.push(COEFF);
+    }
+    v
+}
+
+fn is_load(inst: &Inst) -> bool {
+    matches!(inst, Inst::Lds { .. })
+}
+
+fn is_store(inst: &Inst) -> bool {
+    matches!(inst, Inst::Sts { .. } | Inst::StsBank { .. })
+}
+
+fn schedule_region(out: &mut Vec<Inst>, region: &[Inst], latency: usize) {
+    let n = region.len();
+    if n <= 2 {
+        out.extend_from_slice(region);
+        return;
+    }
+
+    // Build the dependence DAG.
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let edge = |from: usize, to: usize, preds: &mut Vec<Vec<usize>>,
+                    succs: &mut Vec<Vec<usize>>| {
+        if from != to && !succs[from].contains(&to) {
+            succs[from].push(to);
+            preds[to].push(from);
+        }
+    };
+
+    use std::collections::HashMap;
+    let mut last_def: HashMap<usize, usize> = HashMap::new();
+    let mut last_uses: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut loads_seen: Vec<usize> = Vec::new();
+    let mut stores_seen: Vec<usize> = Vec::new();
+
+    for (i, inst) in region.iter().enumerate() {
+        for u in uses(inst) {
+            if let Some(&d) = last_def.get(&u) {
+                edge(d, i, &mut preds, &mut succs); // RAW
+            }
+            last_uses.entry(u).or_default().push(i);
+        }
+        if let Some(d) = defs(inst) {
+            if let Some(&dd) = last_def.get(&d) {
+                edge(dd, i, &mut preds, &mut succs); // WAW
+            }
+            if let Some(us) = last_uses.get(&d) {
+                for &u in us {
+                    edge(u, i, &mut preds, &mut succs); // WAR
+                }
+            }
+            last_def.insert(d, i);
+            last_uses.insert(d, Vec::new());
+        }
+        if is_load(inst) {
+            for &s in &stores_seen {
+                edge(s, i, &mut preds, &mut succs); // store -> later load
+            }
+            loads_seen.push(i);
+        }
+        if is_store(inst) {
+            for &l in &loads_seen {
+                edge(l, i, &mut preds, &mut succs); // load -> later store
+            }
+            // stores keep their mutual order: two stores may alias (the
+            // scheduler has no address information), and a save_bank
+            // followed by a coherent sts to the same word must not swap
+            if let Some(&prev) = stores_seen.last() {
+                edge(prev, i, &mut preds, &mut succs);
+            }
+            stores_seen.push(i);
+        }
+    }
+
+    // Height (latency-weighted longest path to a sink): classic list-
+    // scheduling priority.
+    let mut height = vec![0usize; n];
+    for i in (0..n).rev() {
+        for &s in &succs[i] {
+            height[i] = height[i].max(height[s] + latency);
+        }
+    }
+
+    // Greedy list schedule: among ready nodes pick max height, breaking
+    // ties by original order (stability keeps loads early).
+    let mut remaining_preds: Vec<usize> = preds.iter().map(Vec::len).collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| remaining_preds[i] == 0).collect();
+    let mut scheduled = Vec::with_capacity(n);
+    while let Some(pos) = ready
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &i)| (height[i], std::cmp::Reverse(i)))
+        .map(|(p, _)| p)
+    {
+        let i = ready.swap_remove(pos);
+        scheduled.push(region[i]);
+        for &s in &succs[i] {
+            remaining_preds[s] -= 1;
+            if remaining_preds[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    debug_assert_eq!(scheduled.len(), n, "scheduler dropped instructions");
+    out.extend(scheduled);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn classes(p: &Program) -> Vec<crate::isa::OpClass> {
+        p.insts.iter().map(|i| i.class()).collect()
+    }
+
+    #[test]
+    fn preserves_instruction_multiset() {
+        let p = assemble(
+            "t",
+            "ldif r1, 1.0\nldif r2, 2.0\nfadd r3, r1, r2\nfmul r4, r3, r3\n\
+             lds r5, [r1+0]\nsts [r1+1], r5\nbar\nfadd r6, r4, r4\nhalt",
+        )
+        .unwrap();
+        let s = schedule(&p, 8);
+        assert_eq!(s.insts.len(), p.insts.len());
+        let mut a = p.insts.iter().map(|i| format!("{i}")).collect::<Vec<_>>();
+        let mut b = s.insts.iter().map(|i| format!("{i}")).collect::<Vec<_>>();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn interleaves_independent_chains() {
+        // two independent dependent-pairs: scheduler should alternate
+        let p = assemble(
+            "t",
+            "ldif r1, 1.0\nfadd r2, r1, r1\nldif r3, 2.0\nfadd r4, r3, r3\nhalt",
+        )
+        .unwrap();
+        let s = schedule(&p, 8);
+        // dependent pair must not be adjacent after scheduling
+        let txt: Vec<String> = s.insts.iter().map(|i| format!("{i}")).collect();
+        let pos = |needle: &str| txt.iter().position(|t| t == needle).unwrap();
+        assert!(pos("fadd r2, r1, r1") > pos("ldif r1, 1.0"));
+        assert!(pos("fadd r4, r3, r3") > pos("ldif r3, 2.0"));
+        let gap = pos("fadd r2, r1, r1").abs_diff(pos("ldif r1, 1.0"));
+        assert!(gap >= 2, "scheduler should interleave: {txt:?}");
+    }
+
+    #[test]
+    fn loads_never_cross_stores() {
+        let p = assemble(
+            "t",
+            "ldi r1, 0\nlds r2, [r1+0]\nsts [r1+4], r2\nlds r3, [r1+8]\nhalt",
+        )
+        .unwrap();
+        let s = schedule(&p, 8);
+        let order: Vec<&Inst> = s.insts.iter().collect();
+        let load8 = order
+            .iter()
+            .position(|i| matches!(i, Inst::Lds { offset: 8, .. }))
+            .unwrap();
+        let store = order
+            .iter()
+            .position(|i| matches!(i, Inst::Sts { .. }))
+            .unwrap();
+        assert!(load8 > store, "load after store must stay after");
+    }
+
+    #[test]
+    fn war_respected() {
+        // r1 is read then rewritten: the rewrite must not move above the read
+        let p = assemble("t", "ldif r1, 1.0\nfadd r2, r1, r1\nldif r1, 3.0\nfadd r3, r1, r1\nhalt").unwrap();
+        let s = schedule(&p, 8);
+        let txt: Vec<String> = s.insts.iter().map(|i| format!("{i}")).collect();
+        let pos = |needle: &str| txt.iter().position(|t| t == needle).unwrap();
+        assert!(pos("ldif r1, 3.0") > pos("fadd r2, r1, r1"));
+        assert!(pos("fadd r3, r1, r1") > pos("ldif r1, 3.0"));
+    }
+
+    #[test]
+    fn coeff_cache_ordering() {
+        let p = assemble(
+            "t",
+            "ldif r1, 1.0\nldif r2, 2.0\nlod_coeff r1, r2\nmul_real r3, r1, r2\n\
+             lod_coeff r2, r1\nmul_imag r4, r1, r2\nhalt",
+        )
+        .unwrap();
+        let s = schedule(&p, 8);
+        let txt: Vec<String> = s.insts.iter().map(|i| format!("{i}")).collect();
+        let pos = |needle: &str| txt.iter().position(|t| t == needle).unwrap();
+        // first mul_real must stay between the two lod_coeffs
+        assert!(pos("mul_real r3, r1, r2") > pos("lod_coeff r1, r2"));
+        assert!(pos("mul_real r3, r1, r2") < pos("lod_coeff r2, r1"));
+        assert!(pos("mul_imag r4, r1, r2") > pos("lod_coeff r2, r1"));
+    }
+
+    #[test]
+    fn boundaries_pin_regions() {
+        let p = assemble("t", "ldif r1, 1.0\nbar\nfadd r2, r1, r1\nhalt").unwrap();
+        let s = schedule(&p, 8);
+        assert_eq!(classes(&s), classes(&p)); // nothing crossed the bar
+    }
+}

@@ -1,0 +1,256 @@
+//! Twiddle factors and their cost classification (§3.1 of the paper).
+//!
+//! A twiddle `W_N^k = e^{-2πik/N}` multiplying a complex operand costs
+//! 6 real FP ops in the pedantic implementation (4 mul + add + sub).
+//! §3.1 observes that many of the *compile-time constant* rotations
+//! inside an FFT kernel are computationally simple:
+//!
+//! * `±1`, `±j` — pure sign/swap games, implementable with INT moves
+//!   and an XOR of the FP sign bit (`x ^ 0x8000_0000`);
+//! * equal-coefficient rotations (odd multiples of π/4, e.g.
+//!   `0.707 − 0.707j`) — two real multiplies plus two add/subs.
+//!
+//! Per-thread twiddles loaded from the shared-memory tables are *data*,
+//! so SIMT execution must treat them as full complex multiplies.
+
+use std::f64::consts::PI;
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Double-precision complex scalar used by the planner and reference.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+    pub const ONE: Cpx = Cpx { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Cpx { re, im }
+    }
+
+    pub fn conj(self) -> Self {
+        Cpx::new(self.re, -self.im)
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// `e^{iθ}`.
+    pub fn cis(theta: f64) -> Self {
+        Cpx::new(theta.cos(), theta.sin())
+    }
+
+    pub fn to_f32_pair(self) -> (f32, f32) {
+        (self.re as f32, self.im as f32)
+    }
+}
+
+impl Add for Cpx {
+    type Output = Cpx;
+    fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for Cpx {
+    type Output = Cpx;
+    fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Cpx {
+    type Output = Cpx;
+    fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for Cpx {
+    type Output = Cpx;
+    fn neg(self) -> Cpx {
+        Cpx::new(-self.re, -self.im)
+    }
+}
+
+/// Forward-DFT twiddle `W_n^k = e^{-2πik/n}`, computed with exact
+/// handling of the quadrant boundaries so classification is robust.
+pub fn twiddle(n: usize, k: usize) -> Cpx {
+    let k = k % n;
+    // Exact values on the axes avoid -0.0 / 1e-17 noise.
+    let (num, den) = (4 * k, n); // angle = 2π k/n = (π/2)·(4k/n)
+    if num % den == 0 {
+        return match (num / den) % 4 {
+            0 => Cpx::new(1.0, 0.0),
+            1 => Cpx::new(0.0, -1.0),
+            2 => Cpx::new(-1.0, 0.0),
+            _ => Cpx::new(0.0, 1.0),
+        };
+    }
+    Cpx::cis(-2.0 * PI * k as f64 / n as f64)
+}
+
+/// §3.1 cost classes for a compile-time rotation constant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TwiddleKind {
+    /// ×1 — no work at all.
+    One,
+    /// ×(−1) — two sign flips (INT).
+    MinusOne,
+    /// ×(−j) — swap + one sign flip (INT, or one INT + one FP).
+    MinusJ,
+    /// ×(+j) — swap + one sign flip (INT).
+    PlusJ,
+    /// `m·(σ_r + σ_i·j)` with `|re| == |im|`: two real multiplies and
+    /// two add/subs (4 FP ops).
+    EqualCoeff {
+        /// magnitude of each coefficient (e.g. `0.70710678`)
+        mag: f64,
+        re_neg: bool,
+        im_neg: bool,
+    },
+    /// General rotation: full 6-op complex multiply.
+    Full(Cpx),
+}
+
+const EPS: f64 = 1e-12;
+
+pub fn classify(w: Cpx) -> TwiddleKind {
+    let close = |a: f64, b: f64| (a - b).abs() < EPS;
+    if close(w.re, 1.0) && close(w.im, 0.0) {
+        TwiddleKind::One
+    } else if close(w.re, -1.0) && close(w.im, 0.0) {
+        TwiddleKind::MinusOne
+    } else if close(w.re, 0.0) && close(w.im, -1.0) {
+        TwiddleKind::MinusJ
+    } else if close(w.re, 0.0) && close(w.im, 1.0) {
+        TwiddleKind::PlusJ
+    } else if close(w.re.abs(), w.im.abs()) {
+        TwiddleKind::EqualCoeff {
+            mag: w.re.abs(),
+            re_neg: w.re < 0.0,
+            im_neg: w.im < 0.0,
+        }
+    } else {
+        TwiddleKind::Full(w)
+    }
+}
+
+impl TwiddleKind {
+    /// Real-FP operation count of this rotation (§3.1's accounting).
+    pub fn fp_ops(&self) -> usize {
+        match self {
+            TwiddleKind::One | TwiddleKind::MinusOne | TwiddleKind::MinusJ
+            | TwiddleKind::PlusJ => 0,
+            TwiddleKind::EqualCoeff { .. } => 4,
+            TwiddleKind::Full(_) => 6,
+        }
+    }
+}
+
+/// The per-pass twiddle table stored in shared memory: for each
+/// `r ∈ 0..stride`, the `radix−1` factors `W_L^{r·m}` (`m = 1..radix`),
+/// with `L = radix·stride`, laid out interleaved re/im.
+pub fn pass_table(radix: usize, stride: usize) -> Vec<(f32, f32)> {
+    let l = radix * stride;
+    let mut out = Vec::with_capacity(stride * (radix - 1));
+    for r in 0..stride {
+        for m in 1..radix {
+            out.push(twiddle(l, r * m).to_f32_pair());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_axis_values() {
+        assert_eq!(twiddle(4, 0), Cpx::new(1.0, 0.0));
+        assert_eq!(twiddle(4, 1), Cpx::new(0.0, -1.0));
+        assert_eq!(twiddle(4, 2), Cpx::new(-1.0, 0.0));
+        assert_eq!(twiddle(4, 3), Cpx::new(0.0, 1.0));
+        assert_eq!(twiddle(8, 2), Cpx::new(0.0, -1.0));
+        assert_eq!(twiddle(16, 8), Cpx::new(-1.0, 0.0));
+    }
+
+    #[test]
+    fn classification_section_3_1() {
+        assert_eq!(classify(twiddle(4, 0)), TwiddleKind::One);
+        assert_eq!(classify(twiddle(4, 1)), TwiddleKind::MinusJ);
+        assert_eq!(classify(twiddle(4, 2)), TwiddleKind::MinusOne);
+        assert_eq!(classify(twiddle(4, 3)), TwiddleKind::PlusJ);
+        // W8^1 = 0.707 - 0.707j
+        match classify(twiddle(8, 1)) {
+            TwiddleKind::EqualCoeff { mag, re_neg, im_neg } => {
+                assert!((mag - 0.70710678).abs() < 1e-6);
+                assert!(!re_neg && im_neg);
+            }
+            k => panic!("wrong kind {k:?}"),
+        }
+        // W8^3 = -0.707 - 0.707j (paper Table 4 treats it as a full
+        // complex multiply; classification still sees the symmetry)
+        assert!(matches!(classify(twiddle(8, 3)), TwiddleKind::EqualCoeff { .. }));
+        assert!(matches!(classify(twiddle(16, 1)), TwiddleKind::Full(_)));
+    }
+
+    /// §3.1: in the 16 distinct W values of a radix-2 16-point DFT, the
+    /// reduced implementation needs only 4 full complex multiplies.
+    #[test]
+    fn sixteen_point_reduction() {
+        let mut full = 0;
+        let mut eq = 0;
+        let mut trivial = 0;
+        for k in 0..16 {
+            match classify(twiddle(16, k)) {
+                TwiddleKind::Full(_) => full += 1,
+                TwiddleKind::EqualCoeff { .. } => eq += 1,
+                _ => trivial += 1,
+            }
+        }
+        // k ∈ {1,3,5,7,9,11,13,15} are full in a naive count, but the
+        // kernel only *instantiates* 4 of them (the rest are negations);
+        // classification of raw values: 8 full, 4 equal-coeff, 4 trivial.
+        assert_eq!((full, eq, trivial), (8, 4, 4));
+    }
+
+    #[test]
+    fn pass_table_layout() {
+        let t = pass_table(4, 4); // radix-4, stride 4, L = 16
+        assert_eq!(t.len(), 4 * 3);
+        // r=1, m=2 -> W_16^2 at index 1*(radix-1) + (2-1)
+        let w = twiddle(16, 2).to_f32_pair();
+        assert_eq!(t[1 * 3 + 1], w);
+        // r=0 row is all ones
+        assert_eq!(t[0], (1.0, 0.0));
+        assert_eq!(t[1], (1.0, 0.0));
+        assert_eq!(t[2], (1.0, 0.0));
+    }
+
+    #[test]
+    fn fp_op_costs() {
+        assert_eq!(classify(twiddle(4, 1)).fp_ops(), 0);
+        assert_eq!(classify(twiddle(8, 1)).fp_ops(), 4);
+        assert_eq!(classify(twiddle(16, 1)).fp_ops(), 6);
+    }
+
+    #[test]
+    fn twiddle_unit_circle_and_group() {
+        for (n, k) in [(16usize, 3usize), (64, 17), (4096, 1234)] {
+            let w = twiddle(n, k);
+            assert!((w.abs() - 1.0).abs() < 1e-12);
+            // W_n^k * W_n^{n-k} = 1
+            let prod = w * twiddle(n, n - k);
+            assert!((prod.re - 1.0).abs() < 1e-12 && prod.im.abs() < 1e-12);
+        }
+    }
+}

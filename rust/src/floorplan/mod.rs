@@ -1,0 +1,149 @@
+//! Footprint-normalized cost comparison (§7, §8, Figure 4).
+//!
+//! The paper argues that cataloguing ALM/M20K/DSP counts separately
+//! understates a design's true cost: a placed-and-routed core occupies
+//! a *footprint*, and embedded blocks inside that footprint that the
+//! design does not use are unreachable to the rest of the system
+//! ("If an unused DSP Block is surrounded by logic, it will not be
+//! otherwise available to other circuits"). The normalized comparison
+//! in Table 5 is therefore based on floorplan area, and Figure 4 shows
+//! that the 4K FFT IP core's floorplan is about twice the eGPU's.
+//!
+//! Model: each resource type is converted to ALM-equivalent silicon
+//! area (Agilex column pitch ratios), and a *wrap factor* accounts for
+//! the unreachable embedded blocks inside logic-wrapped IP layouts.
+
+use crate::arch::Resources;
+
+/// ALM-equivalent area of one M20K block (column pitch ≈ a dozen ALMs).
+pub const M20K_ALM_EQ: f64 = 12.0;
+/// ALM-equivalent area of one DSP block.
+pub const DSP_ALM_EQ: f64 = 30.0;
+/// Packing overhead of a logic-wrapped fixed-function core whose
+/// embedded columns become unreachable to other logic (calibrated so
+/// the 4K FFT IP footprint is ~2× the eGPU, per Figure 4).
+pub const WRAP_FACTOR: f64 = 1.15;
+
+/// Agilex AGF022-class device totals, for utilization percentages
+/// (§1: one eGPU ≈ 1 % of a mid-range FPGA).
+pub const DEVICE_ALM: f64 = 782_000.0;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PackingStyle {
+    /// Regular, column-aligned layout (the eGPU: "packs efficiently
+    /// into the FPGA ... with a minimum (or none) of design-tool
+    /// constraints").
+    Columnar,
+    /// Logic wrapped around embedded blocks (the FFT IP, Figure 4
+    /// right), paying [`WRAP_FACTOR`].
+    Wrapped,
+}
+
+/// ALM-equivalent floorplan footprint of a design.
+pub fn footprint_alm_eq(r: &Resources, style: PackingStyle) -> f64 {
+    let raw = r.alm as f64 + r.m20k as f64 * M20K_ALM_EQ + r.dsp as f64 * DSP_ALM_EQ;
+    match style {
+        PackingStyle::Columnar => raw,
+        PackingStyle::Wrapped => raw * WRAP_FACTOR,
+    }
+}
+
+/// Fraction of a mid-range device consumed.
+pub fn device_fraction(r: &Resources, style: PackingStyle) -> f64 {
+    footprint_alm_eq(r, style) / DEVICE_ALM
+}
+
+/// Render the Figure 4 comparison: two boxes whose widths scale with
+/// footprint, annotated with resources.
+pub fn render_figure4(egpu: &Resources, ip: &Resources) -> String {
+    let fe = footprint_alm_eq(egpu, PackingStyle::Columnar);
+    let fi = footprint_alm_eq(ip, PackingStyle::Wrapped);
+    let scale = 48.0 / fi.max(fe);
+    let we = (fe * scale).round() as usize;
+    let wi = (fi * scale).round() as usize;
+    let boxline = |w: usize, c: char| -> String { std::iter::repeat(c).take(w).collect() };
+    let mut s = String::new();
+    s.push_str("Figure 4: floorplan footprint, eGPU (left) vs 4K streaming FP FFT IP (right)\n\n");
+    s.push_str(&format!(
+        "  +{}+      +{}+\n",
+        boxline(we, '-'),
+        boxline(wi, '-')
+    ));
+    let body = |label: String, w: usize| format!("|{label:^w$}|");
+    s.push_str(&format!(
+        "  {}      {}\n",
+        body("eGPU".into(), we),
+        body("FFT-4K IP".into(), wi)
+    ));
+    s.push_str(&format!(
+        "  {}      {}\n",
+        body(format!("{} ALM", egpu.alm), we),
+        body(format!("{} ALM", ip.alm), wi)
+    ));
+    s.push_str(&format!(
+        "  {}      {}\n",
+        body(format!("{} M20K/{} DSP", egpu.m20k, egpu.dsp), we),
+        body(format!("{} M20K/{} DSP (wrapped)", ip.m20k, ip.dsp), wi)
+    ));
+    s.push_str(&format!(
+        "  +{}+      +{}+\n\n",
+        boxline(we, '-'),
+        boxline(wi, '-')
+    ));
+    s.push_str(&format!(
+        "  footprint: {:.0} vs {:.0} ALM-eq  (ratio {:.2}x; device fraction {:.1}% vs {:.1}%)\n",
+        fe,
+        fi,
+        fi / fe,
+        100.0 * fe / DEVICE_ALM,
+        100.0 * fi / DEVICE_ALM,
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Variant;
+    use crate::ipcore::IpCore;
+
+    fn ip_resources(n: usize) -> Resources {
+        let ip = IpCore::paper(n).unwrap();
+        Resources { alm: ip.alm, registers: ip.registers, m20k: ip.m20k, dsp: ip.dsp }
+    }
+
+    /// Figure 4 / §7: "the FFT IP core is twice the cost of the eGPU".
+    #[test]
+    fn ip_4k_footprint_about_twice_egpu() {
+        let egpu = Variant::DP.resources();
+        let fe = footprint_alm_eq(&egpu, PackingStyle::Columnar);
+        let fi = footprint_alm_eq(&ip_resources(4096), PackingStyle::Wrapped);
+        let ratio = fi / fe;
+        assert!((1.8..=2.2).contains(&ratio), "footprint ratio {ratio}");
+    }
+
+    /// §1/§8: the eGPU occupies ~1–2 % of a mid-range device.
+    #[test]
+    fn egpu_is_one_to_two_percent_of_device() {
+        let f = device_fraction(&Variant::DP.resources(), PackingStyle::Columnar);
+        assert!((0.01..=0.02).contains(&f), "device fraction {f}");
+    }
+
+    /// The complex-FU variant adds DSPs but not footprint beyond the
+    /// sector already consumed (§5/§6): raw ALM-eq grows slightly, but
+    /// stays within the same sector budget (< 7 %).
+    #[test]
+    fn complex_variant_footprint_stable() {
+        let base = footprint_alm_eq(&Variant::DP.resources(), PackingStyle::Columnar);
+        let cplx = footprint_alm_eq(&Variant::DP_COMPLEX.resources(), PackingStyle::Columnar);
+        assert!((cplx - base) / base < 0.07);
+    }
+
+    #[test]
+    fn figure4_renders() {
+        let fig = render_figure4(&Variant::DP.resources(), &ip_resources(4096));
+        assert!(fig.contains("eGPU"));
+        assert!(fig.contains("FFT-4K IP"));
+        assert!(fig.contains("ratio"));
+    }
+}

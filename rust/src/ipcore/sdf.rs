@@ -1,0 +1,198 @@
+//! Behavioural radix-2 single-path delay-feedback (R2SDF) streaming
+//! FFT — the architecture family of the Intel FFT IP the paper compares
+//! against (§2: "Most of the current FPGA FFT IP cores are streaming").
+//!
+//! One complex sample enters per clock; log2(N) butterfly stages with
+//! feedback delay lines of N/2, N/4, …, 1 produce one (bit-reversed)
+//! output sample per clock after a latency of N−1 cycles. This
+//! simulator validates the [`IpCore`](super::IpCore) model's two load-
+//! bearing claims: throughput is exactly one transform per N cycles,
+//! and the arithmetic is correct.
+
+use crate::fft::twiddle::{twiddle, Cpx};
+
+struct Stage {
+    /// Feedback delay-line depth.
+    d: usize,
+    /// Cycle counter within the 2·d block.
+    c: usize,
+    buf: Vec<Cpx>,
+    head: usize,
+    /// W_{2d}^i for the fed-back differences.
+    tw: Vec<Cpx>,
+}
+
+impl Stage {
+    fn new(d: usize) -> Self {
+        Stage {
+            d,
+            c: 0,
+            buf: vec![Cpx::ZERO; d],
+            head: 0,
+            tw: (0..d).map(|i| twiddle(2 * d, i)).collect(),
+        }
+    }
+
+    /// Process one sample; always emits one sample (garbage during the
+    /// initial fill, like the real hardware before its latency).
+    fn process(&mut self, x: Cpx) -> Cpx {
+        let out;
+        if self.c < self.d {
+            // fill phase: emit stored differences from the previous
+            // block while delaying the incoming first half
+            out = self.buf[self.head];
+            self.buf[self.head] = x;
+        } else {
+            // butterfly phase: sum flows downstream, twiddled
+            // difference is fed back into the delay line
+            let a = self.buf[self.head];
+            out = a + x;
+            self.buf[self.head] = (a - x) * self.tw[self.c - self.d];
+        }
+        self.head = (self.head + 1) % self.d;
+        self.c = (self.c + 1) % (2 * self.d);
+        out
+    }
+}
+
+pub struct StreamingSdf {
+    n: usize,
+    stages: Vec<Stage>,
+    /// Total samples pushed (for latency bookkeeping).
+    cycles: usize,
+    /// Butterfly operations actually performed (utilization audit).
+    butterflies: usize,
+}
+
+impl StreamingSdf {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 2);
+        let stages = (0..n.trailing_zeros()).map(|s| Stage::new(n >> (s + 1))).collect();
+        StreamingSdf { n, stages, cycles: 0, butterflies: 0 }
+    }
+
+    /// Output latency in cycles: the accumulated delay-line depth.
+    pub fn latency(&self) -> usize {
+        self.n - 1
+    }
+
+    /// Push one sample through the whole pipeline (one clock).
+    pub fn push(&mut self, x: Cpx) -> Cpx {
+        let mut v = x;
+        for s in &mut self.stages {
+            if s.c >= s.d {
+                self.butterflies += 1;
+            }
+            v = s.process(v);
+        }
+        self.cycles += 1;
+        v
+    }
+
+    /// Stream several frames through back-to-back (one sample per
+    /// cycle, no gaps — the §2 streaming property), then flush; returns
+    /// each frame's transform in natural order. Must be called on a
+    /// freshly-aligned pipeline (cycles = 0).
+    pub fn transform_frames(&mut self, frames: &[&[Cpx]]) -> Vec<Vec<Cpx>> {
+        assert_eq!(self.cycles, 0, "pipeline must be frame-aligned");
+        let lat = self.latency();
+        let total = frames.len() * self.n;
+        let mut raw = Vec::with_capacity(total);
+        let mut pushed = 0usize;
+        while raw.len() < total {
+            let x = if pushed < total {
+                frames[pushed / self.n][pushed % self.n]
+            } else {
+                Cpx::ZERO // flush
+            };
+            pushed += 1;
+            let y = self.push(x);
+            if self.cycles - 1 >= lat {
+                raw.push(y);
+            }
+        }
+        // outputs appear bit-reversed within each frame
+        let bits = self.n.trailing_zeros();
+        raw.chunks_exact(self.n)
+            .map(|chunk| {
+                let mut out = vec![Cpx::ZERO; self.n];
+                for (i, v) in chunk.iter().enumerate() {
+                    let r = (i as u32).reverse_bits() >> (32 - bits);
+                    out[r as usize] = *v;
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Transform a single frame on a fresh pipeline.
+    pub fn transform(&mut self, frame: &[Cpx]) -> Vec<Cpx> {
+        assert_eq!(frame.len(), self.n);
+        self.transform_frames(&[frame]).pop().unwrap()
+    }
+
+    /// Fraction of cycles each butterfly unit was busy so far.
+    pub fn butterfly_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.butterflies as f64 / (self.cycles * self.stages.len()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference;
+
+    #[test]
+    fn two_point_exact() {
+        let mut sdf = StreamingSdf::new(2);
+        let frame = vec![Cpx::new(3.0, 1.0), Cpx::new(1.0, -2.0)];
+        let out = sdf.transform(&frame);
+        assert!((out[0] - Cpx::new(4.0, -1.0)).abs() < 1e-12);
+        assert!((out[1] - Cpx::new(2.0, 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_reference_fft() {
+        for n in [4usize, 16, 64, 256, 1024, 4096] {
+            let sig = reference::test_signal(n, 11);
+            let mut sdf = StreamingSdf::new(n);
+            let got = sdf.transform(&sig);
+            let want = reference::fft(&sig);
+            let err = reference::rms_rel_error(&got, &want);
+            assert!(err < 1e-10, "n={n} err={err}");
+        }
+    }
+
+    /// §2: after the latency, output streams at the input rate — the
+    /// second back-to-back frame costs exactly N more cycles.
+    #[test]
+    fn back_to_back_frames_stream() {
+        let n = 256;
+        let a = reference::test_signal(n, 1);
+        let b = reference::test_signal(n, 2);
+        let mut sdf = StreamingSdf::new(n);
+        let ys = sdf.transform_frames(&[&a, &b]);
+        assert!(reference::rms_rel_error(&ys[0], &reference::fft(&a)) < 1e-10);
+        assert!(reference::rms_rel_error(&ys[1], &reference::fft(&b)) < 1e-10);
+        // the latency is paid once; each additional frame costs N cycles
+        assert_eq!(sdf.cycles, 2 * n + sdf.latency());
+    }
+
+    /// Each stage's butterfly works every other half-block: 50 %
+    /// arithmetic utilization is inherent to SDF (the §2.1 point that
+    /// the IP reads/processes/writes simultaneously, not that every
+    /// adder is always busy).
+    #[test]
+    fn butterfly_utilization_half() {
+        let n = 1024;
+        let mut sdf = StreamingSdf::new(n);
+        let sig = reference::test_signal(n, 3);
+        let frames: Vec<&[_]> = (0..8).map(|_| sig.as_slice()).collect();
+        sdf.transform_frames(&frames);
+        let u = sdf.butterfly_utilization();
+        assert!((u - 0.5).abs() < 0.05, "utilization {u}");
+    }
+}

@@ -1,0 +1,387 @@
+//! The eGPU instruction set.
+//!
+//! A PTX-like SIMT ISA modelled on the paper's published fragments
+//! (`LOD_COEFF R30, R31; MUL_REAL R6, R8, R9; ...`) and on the
+//! architectural description in [Langhammer & Constantinides, FPGA'24].
+//! Every instruction belongs to exactly one [`OpClass`]; the profiler
+//! (Tables 1–3 of the paper) accounts cycles per class.
+//!
+//! Register operands are per-thread register-file indices (`R0` is
+//! preloaded with the thread id, as in Figure 2 of the paper). Memory
+//! operands address the SM's shared memory in 32-bit words.
+
+pub mod asm;
+
+use std::fmt;
+
+/// Per-thread register index.
+pub type Reg = u16;
+
+/// Cycle-accounting class, one row group of the paper's Tables 1–3.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    /// Real floating-point ALU op (add/sub/mul).
+    Fp,
+    /// Complex functional-unit op (`lod_coeff`, `mul_real`, `mul_imag`):
+    /// a sum-of-two-multipliers datapath built from two DSP blocks.
+    Complex,
+    /// Integer ALU op (add/sub/logic/shift/move).
+    Int,
+    /// Shared-memory read (4 read ports).
+    Load,
+    /// Shared-memory coherent write (1 port DP, 2 ports QP).
+    Store,
+    /// `save_bank` virtual-banked write (4 virtual ports).
+    StoreVm,
+    /// Immediate load into a register.
+    Immediate,
+    /// Uniform control flow (pass barrier / branch).
+    Branch,
+    /// Explicit or hazard-inserted stall.
+    Nop,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 9] = [
+        OpClass::Fp,
+        OpClass::Complex,
+        OpClass::Int,
+        OpClass::Load,
+        OpClass::Store,
+        OpClass::StoreVm,
+        OpClass::Immediate,
+        OpClass::Branch,
+        OpClass::Nop,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            OpClass::Fp => 0,
+            OpClass::Complex => 1,
+            OpClass::Int => 2,
+            OpClass::Load => 3,
+            OpClass::Store => 4,
+            OpClass::StoreVm => 5,
+            OpClass::Immediate => 6,
+            OpClass::Branch => 7,
+            OpClass::Nop => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Fp => "FP OP",
+            OpClass::Complex => "Complex OP",
+            OpClass::Int => "INT OP",
+            OpClass::Load => "Load",
+            OpClass::Store => "Store",
+            OpClass::StoreVm => "StoreVM",
+            OpClass::Immediate => "Immediate",
+            OpClass::Branch => "Branch",
+            OpClass::Nop => "NOP",
+        }
+    }
+}
+
+/// One eGPU instruction.
+///
+/// `FpWork` tagging: some INT-class instructions perform work that is
+/// arithmetically part of the FFT (e.g. a multiply by `-j` implemented as
+/// a move + sign-flip XOR, §3.1 of the paper). They carry `fp_work = true`
+/// so the profiler can report the paper's §6.1 "effective efficiency".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Inst {
+    // ---- real FP (OpClass::Fp) ----
+    FAdd { d: Reg, a: Reg, b: Reg },
+    FSub { d: Reg, a: Reg, b: Reg },
+    FMul { d: Reg, a: Reg, b: Reg },
+
+    // ---- integer / move (OpClass::Int) ----
+    IAdd { d: Reg, a: Reg, b: Reg },
+    ISub { d: Reg, a: Reg, b: Reg },
+    IXor { d: Reg, a: Reg, b: Reg },
+    IAnd { d: Reg, a: Reg, b: Reg },
+    IOr { d: Reg, a: Reg, b: Reg },
+    /// `d = a + imm` (sign-extended immediate operand, still INT class).
+    IAddI { d: Reg, a: Reg, imm: i32 },
+    /// `d = a & imm`.
+    IAndI { d: Reg, a: Reg, imm: u32 },
+    /// `d = a ^ imm`; with `imm = 0x8000_0000` this is the paper's
+    /// integer FP-negate (§3.1), tagged as FP work.
+    IXorI { d: Reg, a: Reg, imm: u32, fp_work: bool },
+    /// `d = a << sh`.
+    IShlI { d: Reg, a: Reg, sh: u8 },
+    /// `d = a >> sh` (logical).
+    IShrI { d: Reg, a: Reg, sh: u8 },
+    /// Register move; `fp_work` when it realizes a trivial complex
+    /// rotation (multiply by ±1/±j), per Table 4 of the paper.
+    Mov { d: Reg, a: Reg, fp_work: bool },
+
+    // ---- immediate (OpClass::Immediate) ----
+    Ldi { d: Reg, imm: u32 },
+    /// Load an f32 constant (encoding convenience; same class/cost as Ldi).
+    LdiF { d: Reg, imm: f32 },
+
+    // ---- shared memory ----
+    /// `d = smem[a + offset]` (word-addressed).
+    Lds { d: Reg, addr: Reg, offset: i32 },
+    /// Coherent store: `smem[a + offset] = s` in all four banks.
+    Sts { addr: Reg, offset: i32, s: Reg },
+    /// `save_bank`: virtual-banked store; writes only the bank belonging
+    /// to the issuing SP (SP index mod 4). 4× write bandwidth, but the
+    /// other three banks hold stale data at this location (§4).
+    StsBank { addr: Reg, offset: i32, s: Reg },
+
+    // ---- complex functional unit (OpClass::Complex) ----
+    /// Load (tw_re, tw_im) from registers into the per-thread
+    /// coefficient cache (circular buffer indexed by thread id, §5).
+    LodCoeff { re: Reg, im: Reg },
+    /// `d = a*tw_re - b*tw_im` (sum-of-two-multipliers datapath).
+    MulReal { d: Reg, a: Reg, b: Reg },
+    /// `d = a*tw_im + b*tw_re`.
+    MulImag { d: Reg, a: Reg, b: Reg },
+    /// Enable / disable the coefficient-cache clock (power gating, §5).
+    CoeffEn,
+    CoeffDis,
+
+    // ---- control (OpClass::Branch / Nop) ----
+    /// Pass barrier: uniform scalar control op separating FFT passes
+    /// (drains the pipeline; costed as a taken branch).
+    Bar,
+    /// Uniform branch: taken when the (required-uniform) register is
+    /// non-zero in all threads. `target` is an absolute instruction index.
+    Bnz { a: Reg, target: usize },
+    Nop,
+    Halt,
+}
+
+impl Inst {
+    pub fn class(&self) -> OpClass {
+        use Inst::*;
+        match self {
+            FAdd { .. } | FSub { .. } | FMul { .. } => OpClass::Fp,
+            IAdd { .. } | ISub { .. } | IXor { .. } | IAnd { .. } | IOr { .. }
+            | IAddI { .. } | IAndI { .. } | IXorI { .. } | IShlI { .. } | IShrI { .. }
+            | Mov { .. } => OpClass::Int,
+            Ldi { .. } | LdiF { .. } => OpClass::Immediate,
+            Lds { .. } => OpClass::Load,
+            Sts { .. } => OpClass::Store,
+            StsBank { .. } => OpClass::StoreVm,
+            LodCoeff { .. } | MulReal { .. } | MulImag { .. } | CoeffEn | CoeffDis => {
+                OpClass::Complex
+            }
+            Bar | Bnz { .. } | Halt => OpClass::Branch,
+            Nop => OpClass::Nop,
+        }
+    }
+
+    /// INT-class instruction that performs FP-equivalent work (§6.1).
+    pub fn is_fp_work(&self) -> bool {
+        matches!(
+            self,
+            Inst::IXorI { fp_work: true, .. } | Inst::Mov { fp_work: true, .. }
+        )
+    }
+
+    /// Destination register written by this instruction, if any.
+    pub fn dst(&self) -> Option<Reg> {
+        use Inst::*;
+        match *self {
+            FAdd { d, .. } | FSub { d, .. } | FMul { d, .. } | IAdd { d, .. }
+            | ISub { d, .. } | IXor { d, .. } | IAnd { d, .. } | IOr { d, .. }
+            | IAddI { d, .. } | IAndI { d, .. } | IXorI { d, .. } | IShlI { d, .. }
+            | IShrI { d, .. } | Mov { d, .. } | Ldi { d, .. } | LdiF { d, .. }
+            | Lds { d, .. } | MulReal { d, .. } | MulImag { d, .. } => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Source registers read by this instruction (up to 3).
+    pub fn srcs(&self) -> impl Iterator<Item = Reg> {
+        use Inst::*;
+        let (a, b, c): (Option<Reg>, Option<Reg>, Option<Reg>) = match *self {
+            FAdd { a, b, .. } | FSub { a, b, .. } | FMul { a, b, .. } | IAdd { a, b, .. }
+            | ISub { a, b, .. } | IXor { a, b, .. } | IAnd { a, b, .. }
+            | IOr { a, b, .. } => (Some(a), Some(b), None),
+            IAddI { a, .. } | IAndI { a, .. } | IXorI { a, .. } | IShlI { a, .. }
+            | IShrI { a, .. } | Mov { a, .. } => (Some(a), None, None),
+            Lds { addr, .. } => (Some(addr), None, None),
+            Sts { addr, s, .. } | StsBank { addr, s, .. } => (Some(addr), Some(s), None),
+            LodCoeff { re, im } => (Some(re), Some(im), None),
+            // mul_real/mul_imag also read the coefficient cache; that
+            // dependency is tracked separately by the simulator.
+            MulReal { a, b, .. } | MulImag { a, b, .. } => (Some(a), Some(b), None),
+            Bnz { a, .. } => (Some(a), None, None),
+            _ => (None, None, None),
+        };
+        [a, b, c].into_iter().flatten()
+    }
+
+    /// Highest register index referenced (for register-budget checks).
+    pub fn max_reg(&self) -> Option<Reg> {
+        self.dst().into_iter().chain(self.srcs()).max()
+    }
+}
+
+impl fmt::Display for Inst {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Inst::*;
+        match *self {
+            FAdd { d, a, b } => write!(f, "fadd r{d}, r{a}, r{b}"),
+            FSub { d, a, b } => write!(f, "fsub r{d}, r{a}, r{b}"),
+            FMul { d, a, b } => write!(f, "fmul r{d}, r{a}, r{b}"),
+            IAdd { d, a, b } => write!(f, "iadd r{d}, r{a}, r{b}"),
+            ISub { d, a, b } => write!(f, "isub r{d}, r{a}, r{b}"),
+            IXor { d, a, b } => write!(f, "ixor r{d}, r{a}, r{b}"),
+            IAnd { d, a, b } => write!(f, "iand r{d}, r{a}, r{b}"),
+            IOr { d, a, b } => write!(f, "ior r{d}, r{a}, r{b}"),
+            IAddI { d, a, imm } => write!(f, "iaddi r{d}, r{a}, {imm}"),
+            IAndI { d, a, imm } => write!(f, "iandi r{d}, r{a}, {imm:#x}"),
+            IXorI { d, a, imm, fp_work } => {
+                write!(f, "ixori r{d}, r{a}, {imm:#x}{}", flag(fp_work))
+            }
+            IShlI { d, a, sh } => write!(f, "ishli r{d}, r{a}, {sh}"),
+            IShrI { d, a, sh } => write!(f, "ishri r{d}, r{a}, {sh}"),
+            Mov { d, a, fp_work } => write!(f, "mov r{d}, r{a}{}", flag(fp_work)),
+            Ldi { d, imm } => write!(f, "ldi r{d}, {imm:#x}"),
+            LdiF { d, imm } => write!(f, "ldif r{d}, {imm:?}"),
+            Lds { d, addr, offset } => write!(f, "lds r{d}, [r{addr}+{offset}]"),
+            Sts { addr, offset, s } => write!(f, "sts [r{addr}+{offset}], r{s}"),
+            StsBank { addr, offset, s } => write!(f, "save_bank [r{addr}+{offset}], r{s}"),
+            LodCoeff { re, im } => write!(f, "lod_coeff r{re}, r{im}"),
+            MulReal { d, a, b } => write!(f, "mul_real r{d}, r{a}, r{b}"),
+            MulImag { d, a, b } => write!(f, "mul_imag r{d}, r{a}, r{b}"),
+            CoeffEn => write!(f, "coeff_en"),
+            CoeffDis => write!(f, "coeff_dis"),
+            Bar => write!(f, "bar"),
+            Bnz { a, target } => write!(f, "bnz r{a}, {target}"),
+            Nop => write!(f, "nop"),
+            Halt => write!(f, "halt"),
+        }
+    }
+}
+
+fn flag(fp_work: bool) -> &'static str {
+    if fp_work {
+        " ;fp"
+    } else {
+        ""
+    }
+}
+
+/// An assembled eGPU program: a flat instruction sequence ending in `halt`.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub name: String,
+    pub insts: Vec<Inst>,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>, insts: Vec<Inst>) -> Self {
+        Self { name: name.into(), insts }
+    }
+
+    /// Number of instructions (including the trailing `halt`).
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Highest register index used; must be < regs-per-thread.
+    pub fn max_reg(&self) -> Reg {
+        self.insts.iter().filter_map(|i| i.max_reg()).max().unwrap_or(0)
+    }
+
+    /// Instruction count per op class (static, not cycles).
+    pub fn class_histogram(&self) -> [usize; 9] {
+        let mut h = [0usize; 9];
+        for i in &self.insts {
+            h[i.class().index()] += 1;
+        }
+        h
+    }
+
+    /// Disassembly listing (round-trips through [`asm::assemble`]).
+    pub fn listing(&self) -> String {
+        let mut s = String::with_capacity(self.insts.len() * 24);
+        s.push_str(&format!("; program: {}\n", self.name));
+        for (idx, inst) in self.insts.iter().enumerate() {
+            s.push_str(&format!("{idx:6}  {inst}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_class_mapping_matches_paper_rows() {
+        assert_eq!(Inst::FAdd { d: 1, a: 2, b: 3 }.class(), OpClass::Fp);
+        assert_eq!(Inst::MulReal { d: 6, a: 8, b: 9 }.class(), OpClass::Complex);
+        assert_eq!(Inst::LodCoeff { re: 30, im: 31 }.class(), OpClass::Complex);
+        assert_eq!(Inst::Mov { d: 1, a: 2, fp_work: false }.class(), OpClass::Int);
+        assert_eq!(Inst::Lds { d: 1, addr: 2, offset: 0 }.class(), OpClass::Load);
+        assert_eq!(Inst::Sts { addr: 2, offset: 0, s: 1 }.class(), OpClass::Store);
+        assert_eq!(
+            Inst::StsBank { addr: 2, offset: 0, s: 1 }.class(),
+            OpClass::StoreVm
+        );
+        assert_eq!(Inst::Ldi { d: 1, imm: 0 }.class(), OpClass::Immediate);
+        assert_eq!(Inst::Bar.class(), OpClass::Branch);
+        assert_eq!(Inst::Nop.class(), OpClass::Nop);
+    }
+
+    #[test]
+    fn fp_work_tagging() {
+        let neg = Inst::IXorI { d: 1, a: 2, imm: 0x8000_0000, fp_work: true };
+        assert!(neg.is_fp_work());
+        assert_eq!(neg.class(), OpClass::Int);
+        let mov = Inst::Mov { d: 1, a: 2, fp_work: true };
+        assert!(mov.is_fp_work());
+        let plain = Inst::Mov { d: 1, a: 2, fp_work: false };
+        assert!(!plain.is_fp_work());
+    }
+
+    #[test]
+    fn dst_and_srcs() {
+        let i = Inst::FAdd { d: 4, a: 5, b: 6 };
+        assert_eq!(i.dst(), Some(4));
+        assert_eq!(i.srcs().collect::<Vec<_>>(), vec![5, 6]);
+        let s = Inst::Sts { addr: 2, offset: 1, s: 7 };
+        assert_eq!(s.dst(), None);
+        assert_eq!(s.srcs().collect::<Vec<_>>(), vec![2, 7]);
+        assert_eq!(s.max_reg(), Some(7));
+    }
+
+    #[test]
+    fn class_index_is_dense_permutation() {
+        let mut seen = [false; 9];
+        for c in OpClass::ALL {
+            assert!(!seen[c.index()]);
+            seen[c.index()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn program_histogram_and_max_reg() {
+        let p = Program::new(
+            "t",
+            vec![
+                Inst::Ldi { d: 3, imm: 1 },
+                Inst::FAdd { d: 9, a: 3, b: 3 },
+                Inst::Halt,
+            ],
+        );
+        let h = p.class_histogram();
+        assert_eq!(h[OpClass::Fp.index()], 1);
+        assert_eq!(h[OpClass::Immediate.index()], 1);
+        assert_eq!(h[OpClass::Branch.index()], 1);
+        assert_eq!(p.max_reg(), 9);
+    }
+}

@@ -1,0 +1,40 @@
+//! # egpu-fft
+//!
+//! A reproduction of *"Soft GPGPU versus IP cores: Quantifying and
+//! Reducing the Performance Gap"* (Langhammer & Constantinides, 2024).
+//!
+//! The crate contains:
+//!
+//! * [`isa`] — the eGPU SIMT instruction set and a text assembler;
+//! * [`arch`] — the six eGPU variants (DP/QP × VM × Complex) and SM
+//!   configuration;
+//! * [`sim`] — a cycle-accurate, *numerically executing* SM simulator
+//!   (banked shared memory with true `save_bank` staleness, coefficient
+//!   cache, hazard model);
+//! * [`fft`] — FFT program generators for radices 2/4/8/16 and sizes
+//!   256–4096, plus a reference transform;
+//! * [`profile`] / [`report`] — the paper's per-op-class accounting and
+//!   the renderers for Tables 1–6 and Figures 2/4;
+//! * [`ipcore`] — the streaming FFT IP-core comparison model (Table 5);
+//! * [`gpu`] — the V100/A100 cuFFT efficiency model (Table 6);
+//! * [`floorplan`] — footprint-normalized cost comparison (Figure 4);
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX FFT
+//!   artifacts (the numerical oracle on the request path);
+//! * [`coordinator`] — an async FFT service scheduling jobs over a pool
+//!   of simulated eGPU cores and the PJRT fast path.
+
+pub mod apps;
+pub mod arch;
+pub mod coordinator;
+pub mod fft;
+pub mod floorplan;
+pub mod gpu;
+pub mod ipcore;
+pub mod isa;
+pub mod profile;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+
+pub use arch::{MemPorts, SmConfig, Variant};
+pub use profile::Profile;

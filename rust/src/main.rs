@@ -1,0 +1,241 @@
+//! egpu-fft CLI: regenerate the paper's tables and figures, run single
+//! design points, validate numerics, or serve FFTs through the
+//! coordinator. (clap is not available in this offline image; the
+//! argument parsing is deliberately simple.)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::fft::{self, reference};
+use egpu_fft::report;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+egpu-fft — soft GPGPU vs IP cores, reproduced
+
+USAGE:
+  egpu-fft table <1|2|3|4|5|6>       regenerate a paper table
+  egpu-fft figure <2|4>              regenerate a paper figure
+  egpu-fft tables                    regenerate everything (tables 1-6)
+  egpu-fft run [--points N] [--radix R] [--variant V] [--listing]
+                                     simulate one design point
+  egpu-fft validate                  numerics across the design space
+  egpu-fft batch [--points N] [--radix R] [--batch B]
+                                     multi-batch amortization demo (§6)
+  egpu-fft reduce [--n N] [--variant V]
+                                     sum-reduction workload (§4)
+  egpu-fft serve [--cores K] [--requests N] [--points P]
+                 [--backend sim|pjrt|validate]
+                                     run the FFT service demo
+  egpu-fft help
+
+Variants: DP, DP-VM, DP-Complex, DP-VM-Complex, QP, QP-Complex";
+
+fn parse_variant(s: &str) -> Result<Variant> {
+    let v = match s.to_uppercase().as_str() {
+        "DP" => Variant::DP,
+        "DP-VM" => Variant::DP_VM,
+        "DP-COMPLEX" => Variant::DP_COMPLEX,
+        "DP-VM-COMPLEX" => Variant::DP_VM_COMPLEX,
+        "QP" => Variant::QP,
+        "QP-COMPLEX" => Variant::QP_COMPLEX,
+        _ => bail!("unknown variant `{s}`"),
+    };
+    Ok(v)
+}
+
+fn flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).filter(|v| !v.starts_with("--"));
+            match val {
+                Some(v) => {
+                    out.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                None => {
+                    out.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("table") => {
+            let n: u32 = args
+                .get(1)
+                .ok_or_else(|| anyhow!("table number required"))?
+                .parse()?;
+            print_table(n)
+        }
+        Some("figure") => {
+            let n: u32 = args
+                .get(1)
+                .ok_or_else(|| anyhow!("figure number required"))?
+                .parse()?;
+            match n {
+                2 => print!("{}", report::figure2(32, 3)?),
+                4 => print!("{}", report::figure4()),
+                _ => bail!("only figures 2 and 4 exist"),
+            }
+            Ok(())
+        }
+        Some("tables") => {
+            for n in 1..=6 {
+                print_table(n)?;
+                println!();
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let f = flags(&args[1..]);
+            let points: usize = f.get("points").map(|s| s.parse()).transpose()?.unwrap_or(4096);
+            let radix: usize = f.get("radix").map(|s| s.parse()).transpose()?.unwrap_or(16);
+            let variant = parse_variant(f.get("variant").map(String::as_str).unwrap_or("DP"))?;
+            let cfg = SmConfig::for_radix(variant, radix);
+            let fp = fft::generate(&cfg, points, radix)?;
+            if f.contains_key("listing") {
+                print!("{}", fp.program.listing());
+            }
+            let (profile, err) = fft::validate(&cfg, points, radix, 2024)?;
+            println!(
+                "{points}-point radix-{radix} on {variant} ({} instructions)",
+                fp.program.len()
+            );
+            println!("{profile}");
+            println!("numerics vs reference FFT: rms {err:.2e}");
+            Ok(())
+        }
+        Some("batch") => {
+            let f = flags(&args[1..]);
+            let points: usize = f.get("points").map(|s| s.parse()).transpose()?.unwrap_or(1024);
+            let radix: usize = f.get("radix").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let batch: usize = f.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let cfg = SmConfig::for_radix(Variant::DP, radix);
+            let fp = fft::generate_batched(&cfg, points, radix, batch)?;
+            let inputs: Vec<Vec<(f32, f32)>> = (0..batch)
+                .map(|b| {
+                    reference::test_signal(points, b as u64)
+                        .iter()
+                        .map(|c| c.to_f32_pair())
+                        .collect()
+                })
+                .collect();
+            let (_, prof) = fft::run_fft_batch(&fp, &cfg, &inputs)?;
+            let (single, _) = fft::validate(&cfg, points, radix, 0)?;
+            let per = prof.total() as f64 / batch as f64;
+            println!(
+                "fft{points} radix-{radix} x{batch}: {per:.0} cycles/FFT vs {} single \
+                 ({:+.1}%), efficiency {:.2}% vs {:.2}%",
+                single.total(),
+                100.0 * (per / single.total() as f64 - 1.0),
+                prof.efficiency_pct(),
+                single.efficiency_pct()
+            );
+            Ok(())
+        }
+        Some("reduce") => {
+            let f = flags(&args[1..]);
+            let n: usize = f.get("n").map(|s| s.parse()).transpose()?.unwrap_or(8192);
+            let variant = parse_variant(f.get("variant").map(String::as_str).unwrap_or("DP-VM"))?;
+            let cfg = SmConfig::for_radix(variant, 4);
+            let rp = egpu_fft::apps::reduction::generate(&cfg, n)?;
+            let input: Vec<f32> = reference::test_signal(n, 3).iter().map(|c| c.re as f32).collect();
+            let want: f64 = input.iter().map(|&v| v as f64).sum();
+            let (sum, prof) = egpu_fft::apps::reduction::run(&rp, &cfg, &input)?;
+            println!("reduce {n} on {variant}: sum {sum:.4} (reference {want:.4})");
+            println!("{prof}");
+            Ok(())
+        }
+        Some("validate") => {
+            let mut checked = 0;
+            for radix in [2usize, 4, 8, 16] {
+                for points in [256usize, 512, 1024, 4096] {
+                    for v in Variant::ALL6 {
+                        let cfg = SmConfig::for_radix(v, radix);
+                        let (_, err) = fft::validate(&cfg, points, radix, 7)?;
+                        if err > fft::F32_TOL {
+                            bail!("FAIL {points}/{radix}/{v}: rms {err:e}");
+                        }
+                        checked += 1;
+                    }
+                }
+            }
+            println!("numerics OK across {checked} design points");
+            Ok(())
+        }
+        Some("serve") => {
+            let f = flags(&args[1..]);
+            let cores: usize = f.get("cores").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let requests: usize =
+                f.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(64);
+            let points: usize = f.get("points").map(|s| s.parse()).transpose()?.unwrap_or(1024);
+            let backend = match f.get("backend").map(String::as_str).unwrap_or("sim") {
+                "sim" => Backend::Simulator,
+                "pjrt" => Backend::Pjrt,
+                "validate" => Backend::Validate,
+                b => bail!("unknown backend `{b}`"),
+            };
+            let svc = FftService::start(ServiceConfig {
+                cores,
+                backend,
+                ..Default::default()
+            })?;
+            let inputs: Vec<Vec<(f32, f32)>> = (0..requests)
+                .map(|i| {
+                    reference::test_signal(points, i as u64)
+                        .iter()
+                        .map(|c| c.to_f32_pair())
+                        .collect()
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let results = svc.run_batch(inputs)?;
+            let wall = t0.elapsed();
+            println!(
+                "served {} fft{points} requests on {cores} cores in {:.1} ms ({:.0} req/s)",
+                results.len(),
+                wall.as_secs_f64() * 1e3,
+                results.len() as f64 / wall.as_secs_f64()
+            );
+            print!("{}", svc.metrics().render());
+            svc.shutdown();
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn print_table(n: u32) -> Result<()> {
+    match n {
+        1 => print!("{}", report::profile_table(4)?.render_markdown()),
+        2 => print!("{}", report::profile_table(8)?.render_markdown()),
+        3 => print!("{}", report::profile_table(16)?.render_markdown()),
+        4 => print!("{}", report::render_table4()),
+        5 => print!("{}", report::render_table5(&report::table5()?)),
+        6 => print!("{}", report::render_table6(&report::table6()?)),
+        _ => bail!("tables 1-6 exist"),
+    }
+    Ok(())
+}

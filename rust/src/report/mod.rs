@@ -1,0 +1,460 @@
+//! Renderers for the paper's Tables 1–6 and Figures 2 & 4.
+//!
+//! Each `table*`/`figure*` function *regenerates* its artifact — the
+//! profile tables run the full simulation campaign — and returns both
+//! structured data and a Markdown rendering, so the same entry points
+//! back the CLI, the integration tests and the benchmark harness.
+
+use crate::arch::{SmConfig, Variant};
+use crate::fft::{self, FftError, FftPlan};
+use crate::floorplan::{self, PackingStyle};
+use crate::gpu::{A100, V100};
+use crate::ipcore::IpCore;
+use crate::isa::OpClass;
+use crate::profile::Profile;
+
+/// Sizes the paper reports per radix (Tables 1–3).
+pub fn paper_sizes(radix: usize) -> &'static [usize] {
+    match radix {
+        4 => &[4096, 1024, 256],
+        8 => &[4096, 512],
+        16 => &[4096, 1024, 256],
+        _ => &[4096, 1024, 256],
+    }
+}
+
+/// One profiled design point: (points, variant) → profile.
+#[derive(Clone, Debug)]
+pub struct ProfileTable {
+    pub radix: usize,
+    /// Per size: the six variant profiles in paper column order
+    /// (`None` where the design point is not supported/meaningful,
+    /// e.g. VM columns for FFTs with no bank-eligible pass).
+    pub rows: Vec<(usize, Vec<Option<Profile>>)>,
+}
+
+/// Run the simulation campaign behind Table 1 (radix 4), Table 2
+/// (radix 8) or Table 3 (radix 16).
+pub fn profile_table(radix: usize) -> Result<ProfileTable, FftError> {
+    profile_table_for(radix, paper_sizes(radix))
+}
+
+pub fn profile_table_for(radix: usize, sizes: &[usize]) -> Result<ProfileTable, FftError> {
+    let mut rows = Vec::new();
+    for &points in sizes {
+        let mut cols = Vec::new();
+        for v in Variant::ALL6 {
+            cols.push(run_point(points, radix, v)?);
+        }
+        rows.push((points, cols));
+    }
+    Ok(ProfileTable { radix, rows })
+}
+
+/// Simulate one design point (validating numerics as a side effect);
+/// `None` for VM variants where no pass is bank-eligible (the paper
+/// leaves those cells blank).
+pub fn run_point(
+    points: usize,
+    radix: usize,
+    variant: Variant,
+) -> Result<Option<Profile>, FftError> {
+    let cfg = SmConfig::for_radix(variant, radix);
+    if variant.vm {
+        let plan = FftPlan::new(points, radix, cfg.threads)?;
+        if !plan.passes.iter().any(|p| p.vm_eligible) {
+            return Ok(None);
+        }
+    }
+    let (profile, err) = fft::validate(&cfg, points, radix, 0x5EED)?;
+    assert!(err < fft::F32_TOL, "numerics broken at {points}/{radix}/{variant}: {err}");
+    Ok(Some(profile))
+}
+
+const ROW_CLASSES: [OpClass; 9] = [
+    OpClass::Fp,
+    OpClass::Complex,
+    OpClass::Int,
+    OpClass::Load,
+    OpClass::Store,
+    OpClass::StoreVm,
+    OpClass::Immediate,
+    OpClass::Branch,
+    OpClass::Nop,
+];
+
+impl ProfileTable {
+    pub fn render_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "### Radix-{} FFT Profiling — Cycles per Operation and Performance\n\n",
+            self.radix
+        ));
+        s.push_str("| Points | Type | ");
+        for v in Variant::ALL6 {
+            s.push_str(&format!("{} | ", v.name().trim_start_matches("eGPU-")));
+        }
+        s.push('\n');
+        s.push_str(&format!("|---|---|{}\n", "---|".repeat(6)));
+        for (points, cols) in &self.rows {
+            let cell = |f: &dyn Fn(&Profile) -> String| -> Vec<String> {
+                cols.iter()
+                    .map(|c| c.as_ref().map(|p| f(p)).unwrap_or_else(|| "-".into()))
+                    .collect()
+            };
+            for class in ROW_CLASSES {
+                let vals = cell(&|p: &Profile| {
+                    let v = p.get(class);
+                    if v == 0 { "-".into() } else { v.to_string() }
+                });
+                if vals.iter().all(|v| v == "-") {
+                    continue;
+                }
+                s.push_str(&format!(
+                    "| {points} | {} | {} |\n",
+                    class.name(),
+                    vals.join(" | ")
+                ));
+            }
+            for (label, f) in [
+                ("Total", &(|p: &Profile| p.total().to_string()) as &dyn Fn(&Profile) -> String),
+                ("Time (us)", &|p: &Profile| format!("{:.2}", p.time_us())),
+                ("Efficiency %", &|p: &Profile| format!("{:.2}", p.efficiency_pct())),
+                ("Memory %", &|p: &Profile| format!("{:.2}", p.memory_pct())),
+            ] {
+                s.push_str(&format!("| {points} | {label} | {} |\n", cell(f).join(" | ")));
+            }
+        }
+        s
+    }
+
+    /// Best (highest) efficiency across variants for a given size.
+    pub fn best_efficiency(&self, points: usize) -> Option<f64> {
+        self.rows.iter().find(|(p, _)| *p == points).map(|(_, cols)| {
+            cols.iter()
+                .flatten()
+                .map(|p| p.efficiency_pct())
+                .fold(f64::MIN, f64::max)
+        })
+    }
+
+    /// Best (lowest) time across variants for a given size, µs.
+    pub fn best_time_us(&self, points: usize) -> Option<f64> {
+        self.rows.iter().find(|(p, _)| *p == points).map(|(_, cols)| {
+            cols.iter()
+                .flatten()
+                .map(|p| p.time_us())
+                .fold(f64::MAX, f64::min)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 4: radix-8 butterfly op breakdown
+
+/// One row of the Table 4 analogue.
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    pub stage: &'static str,
+    pub operation: &'static str,
+    pub ops: usize,
+    pub cycles: u64,
+    pub running_fp: u64,
+    pub running_int: u64,
+}
+
+/// Reproduce Table 4 for the 4096-point radix-8 FFT (512 threads,
+/// wavefront 32): per-stage operation counts of one butterfly pass plus
+/// the seven twiddle multiplies, with running FP/INT cycle totals.
+/// Derived from the same §3.1 classification the code generator uses;
+/// a test asserts consistency with the generated program.
+pub fn table4() -> Vec<Table4Row> {
+    let wavefront = 32u64; // 4096 / (16 × 8)
+    let mut rows: Vec<(&'static str, &'static str, usize, bool)> = Vec::new();
+    // stage 1: 4 cadd + 4 csub (16 FP), rotations W8^{0..3}
+    rows.push(("1", "Add/Sub", 16, true));
+    rows.push(("1", "Cplx (W8^1, equal-coeff)", 4, true));
+    rows.push(("1", "Neg INT (W8^2 = -j)", 1, false));
+    rows.push(("1", "Cplx (W8^3, equal-coeff)", 4, true));
+    // stages 2+3: two radix-4 DIF kernels, 16 FP each
+    rows.push(("2", "Add/Sub (DFT4 even)", 16, true));
+    rows.push(("3", "Add/Sub (DFT4 odd)", 16, true));
+    // twiddles: 7 full complex multiplies
+    rows.push(("Complex", "Complex (x7 twiddles)", 42, true));
+    let mut out = Vec::new();
+    let (mut fp, mut int) = (0u64, 0u64);
+    for (stage, op, ops, is_fp) in rows {
+        let cycles = ops as u64 * wavefront;
+        if is_fp {
+            fp += cycles;
+        } else {
+            int += cycles;
+        }
+        out.push(Table4Row {
+            stage,
+            operation: op,
+            ops,
+            cycles,
+            running_fp: fp,
+            running_int: int,
+        });
+    }
+    out
+}
+
+pub fn render_table4() -> String {
+    let mut s = String::from(
+        "### Radix-8 Butterfly (4096-pt, wavefront 32)\n\n\
+         | Pass | Operation | Ops | Cycles | Running FP | Running INT |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for r in table4() {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            r.stage, r.operation, r.ops, r.cycles, r.running_fp, r.running_int
+        ));
+    }
+    s.push_str(
+        "\nNote: the paper's `Move` rows (in-register reordering) are folded \
+         into store addressing by our code generator; W8^3 uses the §3.1 \
+         equal-coefficient form where Table 4 spends a full 6-op multiply.\n",
+    );
+    s
+}
+
+// ---------------------------------------------------------------------
+// Table 5: eGPU vs FFT IP core
+
+#[derive(Clone, Debug)]
+pub struct Table5Row {
+    pub points: usize,
+    pub ip: IpCore,
+    pub egpu_time_us: f64,
+    pub egpu_resources: crate::arch::Resources,
+    /// Raw performance ratio (IP is this many times faster).
+    pub perf_ratio: f64,
+    /// Performance-area product ratio after footprint normalization.
+    pub normalized_ratio: f64,
+}
+
+/// Regenerate Table 5: the eGPU (best radix-16-family time per size,
+/// from the Table 3 campaign) against the streaming FFT IP cores.
+pub fn table5() -> Result<Vec<Table5Row>, FftError> {
+    let t3 = profile_table(16)?;
+    let egpu_res = Variant::DP.resources();
+    let egpu_fp = floorplan::footprint_alm_eq(&egpu_res, PackingStyle::Columnar);
+    let mut rows = Vec::new();
+    for points in [256usize, 1024, 4096] {
+        let ip = IpCore::paper(points).unwrap();
+        let ip_res = crate::arch::Resources {
+            alm: ip.alm,
+            registers: ip.registers,
+            m20k: ip.m20k,
+            dsp: ip.dsp,
+        };
+        let ip_fp = floorplan::footprint_alm_eq(&ip_res, PackingStyle::Wrapped);
+        let egpu_time = t3.best_time_us(points).unwrap();
+        let perf_ratio = egpu_time / ip.time_us;
+        let normalized_ratio = perf_ratio * (egpu_fp / ip_fp);
+        rows.push(Table5Row {
+            points,
+            ip,
+            egpu_time_us: egpu_time,
+            egpu_resources: egpu_res,
+            perf_ratio,
+            normalized_ratio,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_table5(rows: &[Table5Row]) -> String {
+    let mut s = String::from(
+        "### eGPU vs. FFT IP Core\n\n\
+         | FFT Size | IP time | IP ALM/Regs | IP M20K | IP DSP | eGPU time | eGPU ALM/Regs | eGPU M20K | eGPU DSP | Ratio (Perf) | Ratio (Normalized) |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {:.2}us | {}/{} | {} | {} | {:.2}us | {}/{} | {} | {} | {:.1} | {:.1} |\n",
+            r.points,
+            r.ip.time_us,
+            r.ip.alm,
+            r.ip.registers,
+            r.ip.m20k,
+            r.ip.dsp,
+            r.egpu_time_us,
+            r.egpu_resources.alm,
+            r.egpu_resources.registers,
+            r.egpu_resources.m20k,
+            r.egpu_resources.dsp,
+            r.perf_ratio,
+            r.normalized_ratio,
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Table 6: FFT efficiency, eGPU vs A100/V100
+
+#[derive(Clone, Debug)]
+pub struct Table6Row {
+    pub points: usize,
+    pub egpu_eff_pct: f64,
+    pub v100_published: f64,
+    pub v100_modeled: f64,
+    pub a100_published: f64,
+    pub a100_modeled: f64,
+}
+
+/// Regenerate Table 6: our measured best eGPU efficiency per size (max
+/// over radices and the 771 MHz variant family) against the published
+/// and roofline-modelled cuFFT efficiencies.
+pub fn table6() -> Result<Vec<Table6Row>, FftError> {
+    let mut rows = Vec::new();
+    for points in [256usize, 1024, 4096] {
+        let mut best = f64::MIN;
+        for radix in [4usize, 8, 16] {
+            if points == 512 || (radix == 8 && points != 4096 && points != 512) {
+                continue;
+            }
+            for v in Variant::ALL6 {
+                if let Some(p) = run_point(points, radix, v)? {
+                    best = best.max(p.efficiency_pct());
+                }
+            }
+        }
+        rows.push(Table6Row {
+            points,
+            egpu_eff_pct: best,
+            v100_published: V100.published_eff_pct(points).unwrap(),
+            v100_modeled: V100.modeled_eff_pct(points),
+            a100_published: A100.published_eff_pct(points).unwrap(),
+            a100_modeled: A100.modeled_eff_pct(points),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_table6(rows: &[Table6Row]) -> String {
+    let mut s = String::from(
+        "### FFT Efficiency — A100 vs eGPU\n\n\
+         | GPU | 256 points | 1024 points | 4096 points |\n|---|---|---|---|\n",
+    );
+    let fmt_row = |name: &str, f: &dyn Fn(&Table6Row) -> f64| -> String {
+        let cells: Vec<String> = rows.iter().map(|r| format!("{:.0}%", f(r))).collect();
+        format!("| {name} | {} |\n", cells.join(" | "))
+    };
+    s.push_str(&fmt_row("eGPU (measured)", &|r| r.egpu_eff_pct));
+    s.push_str(&fmt_row("V100 (published)", &|r| r.v100_published));
+    s.push_str(&fmt_row("V100 (roofline model)", &|r| r.v100_modeled));
+    s.push_str(&fmt_row("A100 (published)", &|r| r.a100_published));
+    s.push_str(&fmt_row("A100 (roofline model)", &|r| r.a100_modeled));
+    s
+}
+
+// ---------------------------------------------------------------------
+// Figure 2: data indexes per pass (radix-4, 256 points)
+
+/// Render the Figure 2 analogue: for each of the first `n_passes`
+/// passes of the 256-point radix-4 FFT, the data indexes held by
+/// threads 0..`n_threads` (R0 = thread id, then the 4 kernel indexes).
+pub fn figure2(n_threads: usize, n_passes: usize) -> Result<String, FftError> {
+    let plan = FftPlan::new(256, 4, 1024)?;
+    let mut s = String::from("Figure 2: data indexes per pass (radix-4, 256 points)\n");
+    for (pi, pass) in plan.passes.iter().take(n_passes).enumerate() {
+        s.push_str(&format!("\nPass {}:\n", pi + 1));
+        let hdr: Vec<String> = (0..n_threads).map(|t| format!("T{t}")).collect();
+        s.push_str(&format!("      {}\n", hdr.join("\t")));
+        for k in 0..pass.radix {
+            let row: Vec<String> = (0..n_threads)
+                .map(|t| format!("i{:03}", pass.kernel_base(t) + k * pass.stride))
+                .collect();
+            s.push_str(&format!("  R{}: {}\n", k + 1, row.join("\t")));
+        }
+    }
+    Ok(s)
+}
+
+/// Figure 4 (delegates to the floorplan model).
+pub fn figure4() -> String {
+    let ip = IpCore::paper(4096).unwrap();
+    let ip_res = crate::arch::Resources {
+        alm: ip.alm,
+        registers: ip.registers,
+        m20k: ip.m20k,
+        dsp: ip.dsp,
+    };
+    floorplan::render_figure4(&Variant::DP.resources(), &ip_res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure 2's exact values from the paper: pass 1 T0 = {0,64,128,192};
+    /// pass 2 T16 = {64,80,96,112}; pass 3 T0 = {0,4,8,12}.
+    #[test]
+    fn figure2_matches_paper() {
+        let fig = figure2(32, 3).unwrap();
+        assert!(fig.contains("i000"));
+        let plan = FftPlan::new(256, 4, 1024).unwrap();
+        let p2 = &plan.passes[1];
+        assert_eq!(
+            (0..4).map(|k| p2.kernel_base(16) + k * p2.stride).collect::<Vec<_>>(),
+            vec![64, 80, 96, 112]
+        );
+        let p3 = &plan.passes[2];
+        assert_eq!(
+            (0..4).map(|k| p3.kernel_base(0) + k * p3.stride).collect::<Vec<_>>(),
+            vec![0, 4, 8, 12]
+        );
+    }
+
+    /// Table 4 audit totals must agree with the generated radix-8
+    /// program: FP cycles per butterfly+twiddle = what codegen emits.
+    #[test]
+    fn table4_consistent_with_codegen() {
+        let rows = table4();
+        let last = rows.last().unwrap();
+        // per-pass FP ops: kernel 56 + twiddles 42 = 98 (× wavefront 32)
+        assert_eq!(last.running_fp, 98 * 32);
+        // generated program: 4 passes, last without twiddles
+        let cfg = SmConfig::for_radix(Variant::DP, 8);
+        let f = fft::generate(&cfg, 4096, 8).unwrap();
+        let h = f.program.class_histogram();
+        assert_eq!(h[OpClass::Fp.index()] as u64 * 32, 3 * last.running_fp + 56 * 32);
+    }
+
+    #[test]
+    fn table6_shapes_hold() {
+        let rows = table6().unwrap();
+        // efficiency grows with size for the eGPU (paper: 25/27/36)
+        assert!(rows[2].egpu_eff_pct > rows[0].egpu_eff_pct);
+        for r in &rows {
+            // eGPU is in the A100's published efficiency band (paper's
+            // §8 claim; our radix-16 4096 cells sit a few points below
+            // the paper's — see EXPERIMENTS.md on the Table 3 VM-store
+            // discrepancy)
+            assert!(
+                r.egpu_eff_pct > r.a100_published - 6.0,
+                "{}: egpu {:.1} vs a100 {:.1}",
+                r.points,
+                r.egpu_eff_pct,
+                r.a100_published
+            );
+            // and clearly beats the V100
+            assert!(r.egpu_eff_pct > r.v100_published);
+        }
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let t = profile_table_for(4, &[256]).unwrap();
+        let md = t.render_markdown();
+        assert!(md.contains("FP OP"));
+        assert!(md.contains("Efficiency %"));
+        assert!(render_table4().contains("Running FP"));
+    }
+}

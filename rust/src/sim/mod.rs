@@ -1,0 +1,559 @@
+//! Cycle-accurate eGPU streaming-multiprocessor simulator.
+//!
+//! Functional semantics and cycle accounting in one pass. The SIMT
+//! execution model is the paper's: one SM of 16 SPs; an instruction
+//! issues for `wavefront = threads/16` consecutive cycles (one thread
+//! per SP per cycle); results emerge `pipeline_depth` (8) cycles after
+//! issue, so RAW hazards only stall (as NOP cycles) when the wavefront
+//! is shallower than the pipeline — exactly the §6 observation that
+//! "hazards are hidden completely if the wavefront depth is greater
+//! than 8".
+//!
+//! Memory port contention (§4/§6):
+//! * `lds`   — 16 SPs share 4 read ports → 4× wavefront cycles,
+//! * `sts`   — 1 write port (DP) → 16×; 2 ports (QP) → 8×,
+//! * `save_bank` — 4 virtual write ports → 4× (DP+VM only).
+//!
+//! The simulator also *executes* every instruction on real f32/u32
+//! data, so a program's numerical output can be validated against an
+//! FFT oracle — including the stale-bank semantics of `save_bank`.
+
+pub mod sharedmem;
+
+use crate::arch::{SmConfig, Variant};
+use crate::isa::{Inst, OpClass, Program, Reg};
+use crate::profile::Profile;
+use sharedmem::{MemError, SharedMem};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SimError {
+    #[error(transparent)]
+    Mem(#[from] MemError),
+    #[error("program uses register r{max} but the variant has {budget} regs/thread")]
+    RegBudget { max: Reg, budget: usize },
+    #[error("divergent branch at pc {pc}: bnz predicate not uniform across threads")]
+    DivergentBranch { pc: usize },
+    #[error("save_bank executed on a variant without virtual-bank support ({variant})")]
+    VmUnsupported { variant: String },
+    #[error("branch target {target} out of range at pc {pc}")]
+    BadBranchTarget { pc: usize, target: usize },
+    #[error("program ran past the end without halt")]
+    RanOffEnd,
+    #[error("instruction budget exceeded ({0} issued) — runaway program?")]
+    Runaway(u64),
+    #[error("active thread count {active} exceeds configured {threads}")]
+    TooManyThreads { active: usize, threads: usize },
+}
+
+/// Upper bound on dynamically issued instructions (runaway protection).
+const MAX_ISSUED: u64 = 50_000_000;
+
+pub struct Sm {
+    pub cfg: SmConfig,
+    /// Flat register file: `regs[t * regs_per_thread + r]`.
+    pub regs: Vec<u32>,
+    pub smem: SharedMem,
+    /// Coefficient cache: one (re, im) pair per thread (§5).
+    coeff: Vec<[f32; 2]>,
+    coeff_enabled: bool,
+}
+
+impl Sm {
+    pub fn new(cfg: SmConfig) -> Self {
+        Sm {
+            regs: vec![0u32; cfg.threads * cfg.regs_per_thread],
+            smem: SharedMem::new(cfg.smem_words),
+            coeff: vec![[0.0, 0.0]; cfg.threads],
+            coeff_enabled: false,
+            cfg,
+        }
+    }
+
+    /// Preload R0 of every thread with its thread index (Figure 2:
+    /// "R0 contains the thread number").
+    pub fn seed_thread_ids(&mut self) {
+        let rpt = self.cfg.regs_per_thread;
+        for t in 0..self.cfg.threads {
+            self.regs[t * rpt] = t as u32;
+        }
+    }
+
+    #[inline]
+    fn reg(&self, t: usize, r: Reg) -> u32 {
+        self.regs[t * self.cfg.regs_per_thread + r as usize]
+    }
+
+    #[inline]
+    fn set_reg(&mut self, t: usize, r: Reg, v: u32) {
+        self.regs[t * self.cfg.regs_per_thread + r as usize] = v;
+    }
+
+    #[inline]
+    fn regf(&self, t: usize, r: Reg) -> f32 {
+        f32::from_bits(self.reg(t, r))
+    }
+
+    #[inline]
+    fn set_regf(&mut self, t: usize, r: Reg, v: f32) {
+        self.set_reg(t, r, v.to_bits());
+    }
+
+    /// Issue-duration in cycles for one instruction at wavefront `w`.
+    fn duration(&self, inst: &Inst, w: u64) -> u64 {
+        let n_sp = self.cfg.n_sp as u64;
+        match inst.class() {
+            OpClass::Fp | OpClass::Int | OpClass::Immediate | OpClass::Nop => w,
+            OpClass::Complex => match inst {
+                // Clock-gate toggles are scalar control writes.
+                Inst::CoeffEn | Inst::CoeffDis => 1,
+                _ => w,
+            },
+            OpClass::Load => w * (n_sp / self.cfg.variant.load_ports() as u64),
+            OpClass::Store => w * (n_sp / self.cfg.variant.store_ports() as u64),
+            OpClass::StoreVm => w * (n_sp / self.cfg.variant.store_vm_ports() as u64),
+            // Uniform scalar control: one slot plus a pipeline drain.
+            OpClass::Branch => 1 + self.cfg.pipeline_depth as u64,
+        }
+    }
+
+    /// Run `program` over the first `active` threads; returns the cycle
+    /// profile. Register/memory state persists across calls (an SM can
+    /// run several dependent kernels over the same shared memory).
+    pub fn run(&mut self, program: &Program, active: usize) -> Result<Profile, SimError> {
+        if active > self.cfg.threads {
+            return Err(SimError::TooManyThreads { active, threads: self.cfg.threads });
+        }
+        let max_reg = program.max_reg();
+        if (max_reg as usize) >= self.cfg.regs_per_thread {
+            return Err(SimError::RegBudget { max: max_reg, budget: self.cfg.regs_per_thread });
+        }
+
+        let w = self.cfg.wavefront(active) as u64;
+        let pipe = self.cfg.pipeline_depth as u64;
+        let mut profile = Profile::new(self.cfg.variant.fmax_mhz());
+
+        // Warp-level scoreboard: cycle at which each register (and the
+        // coefficient cache) becomes readable.
+        let mut ready = vec![0u64; self.cfg.regs_per_thread];
+        let mut coeff_ready = 0u64;
+
+        let mut clock: u64 = 0;
+        let mut pc: usize = 0;
+        let mut issued: u64 = 0;
+
+        loop {
+            let inst = *program.insts.get(pc).ok_or(SimError::RanOffEnd)?;
+            issued += 1;
+            if issued > MAX_ISSUED {
+                return Err(SimError::Runaway(issued));
+            }
+
+            // RAW hazard: stall until every source is ready.
+            let mut start = clock;
+            for src in inst.srcs() {
+                start = start.max(ready[src as usize]);
+            }
+            if matches!(inst, Inst::MulReal { .. } | Inst::MulImag { .. }) {
+                start = start.max(coeff_ready);
+            }
+            if start > clock {
+                profile.record(OpClass::Nop, start - clock);
+                clock = start;
+            }
+
+            let dur = self.duration(&inst, w);
+            profile.record(inst.class(), dur);
+            if inst.is_fp_work() {
+                profile.int_fp_work_cycles += dur;
+            }
+            profile.instructions += 1;
+
+            // Result-ready time: last thread's result emerges a pipeline
+            // depth after its (possibly port-stretched) issue slot.
+            if let Some(d) = inst.dst() {
+                ready[d as usize] = clock + dur.saturating_sub(w) + pipe;
+            }
+
+            // ---- functional semantics ----
+            // §Perf: the arms below walk the flat register file with a
+            // running thread-base index instead of per-access
+            // `t * regs_per_thread` multiplies (EXPERIMENTS.md §Perf).
+            let rpt = self.cfg.regs_per_thread;
+
+            /// FP / INT register-register binop over all active threads.
+            macro_rules! binop {
+                ($d:ident, $a:ident, $b:ident, |$va:ident, $vb:ident| $body:expr) => {{
+                    let (d, a, b) = ($d as usize, $a as usize, $b as usize);
+                    let mut base = 0usize;
+                    for _ in 0..active {
+                        let $va = self.regs[base + a];
+                        let $vb = self.regs[base + b];
+                        self.regs[base + d] = $body;
+                        base += rpt;
+                    }
+                }};
+            }
+            /// Unary / immediate-operand op over all active threads.
+            macro_rules! unop {
+                ($d:ident, $a:ident, |$va:ident| $body:expr) => {{
+                    let (d, a) = ($d as usize, $a as usize);
+                    let mut base = 0usize;
+                    for _ in 0..active {
+                        let $va = self.regs[base + a];
+                        self.regs[base + d] = $body;
+                        base += rpt;
+                    }
+                }};
+            }
+            #[inline(always)]
+            fn fp(bits: u32) -> f32 {
+                f32::from_bits(bits)
+            }
+
+            let mut next_pc = pc + 1;
+            match inst {
+                Inst::FAdd { d, a, b } => binop!(d, a, b, |x, y| (fp(x) + fp(y)).to_bits()),
+                Inst::FSub { d, a, b } => binop!(d, a, b, |x, y| (fp(x) - fp(y)).to_bits()),
+                Inst::FMul { d, a, b } => binop!(d, a, b, |x, y| (fp(x) * fp(y)).to_bits()),
+                Inst::IAdd { d, a, b } => binop!(d, a, b, |x, y| x.wrapping_add(y)),
+                Inst::ISub { d, a, b } => binop!(d, a, b, |x, y| x.wrapping_sub(y)),
+                Inst::IXor { d, a, b } => binop!(d, a, b, |x, y| x ^ y),
+                Inst::IAnd { d, a, b } => binop!(d, a, b, |x, y| x & y),
+                Inst::IOr { d, a, b } => binop!(d, a, b, |x, y| x | y),
+                Inst::IAddI { d, a, imm } => unop!(d, a, |x| x.wrapping_add(imm as u32)),
+                Inst::IAndI { d, a, imm } => unop!(d, a, |x| x & imm),
+                Inst::IXorI { d, a, imm, .. } => unop!(d, a, |x| x ^ imm),
+                Inst::IShlI { d, a, sh } => unop!(d, a, |x| x << sh),
+                Inst::IShrI { d, a, sh } => unop!(d, a, |x| x >> sh),
+                Inst::Mov { d, a, .. } => unop!(d, a, |x| x),
+                Inst::Ldi { d, imm } => {
+                    let d = d as usize;
+                    let mut base = 0usize;
+                    for _ in 0..active {
+                        self.regs[base + d] = imm;
+                        base += rpt;
+                    }
+                }
+                Inst::LdiF { d, imm } => {
+                    let (d, bits) = (d as usize, imm.to_bits());
+                    let mut base = 0usize;
+                    for _ in 0..active {
+                        self.regs[base + d] = bits;
+                        base += rpt;
+                    }
+                }
+                Inst::Lds { d, addr, offset } => {
+                    let (d, addr) = (d as usize, addr as usize);
+                    let n_sp = self.cfg.n_sp;
+                    let (mut base, mut sp) = (0usize, 0usize);
+                    for _ in 0..active {
+                        let a = self.regs[base + addr] as i64 + offset as i64;
+                        let v = self.smem.read(sp, a)?;
+                        self.regs[base + d] = v;
+                        base += rpt;
+                        sp += 1;
+                        if sp == n_sp {
+                            sp = 0;
+                        }
+                    }
+                }
+                Inst::Sts { addr, offset, s } => {
+                    let (addr, s) = (addr as usize, s as usize);
+                    let mut base = 0usize;
+                    for _ in 0..active {
+                        let a = self.regs[base + addr] as i64 + offset as i64;
+                        self.smem.write_coherent(a, self.regs[base + s])?;
+                        base += rpt;
+                    }
+                }
+                Inst::StsBank { addr, offset, s } => {
+                    if !self.cfg.variant.vm {
+                        return Err(SimError::VmUnsupported {
+                            variant: self.cfg.variant.name(),
+                        });
+                    }
+                    let (addr, s) = (addr as usize, s as usize);
+                    let n_sp = self.cfg.n_sp;
+                    let (mut base, mut sp) = (0usize, 0usize);
+                    for _ in 0..active {
+                        let a = self.regs[base + addr] as i64 + offset as i64;
+                        self.smem.write_bank(sp, a, self.regs[base + s])?;
+                        base += rpt;
+                        sp += 1;
+                        if sp == n_sp {
+                            sp = 0;
+                        }
+                    }
+                }
+                Inst::LodCoeff { re, im } => {
+                    coeff_ready = clock + pipe;
+                    let (re, im) = (re as usize, im as usize);
+                    let mut base = 0usize;
+                    for t in 0..active {
+                        self.coeff[t] = [fp(self.regs[base + re]), fp(self.regs[base + im])];
+                        base += rpt;
+                    }
+                }
+                Inst::MulReal { d, a, b } => {
+                    let (d, a, b) = (d as usize, a as usize, b as usize);
+                    let mut base = 0usize;
+                    for t in 0..active {
+                        let [cr, ci] = self.coeff[t];
+                        let v = fp(self.regs[base + a]) * cr - fp(self.regs[base + b]) * ci;
+                        self.regs[base + d] = v.to_bits();
+                        base += rpt;
+                    }
+                }
+                Inst::MulImag { d, a, b } => {
+                    let (d, a, b) = (d as usize, a as usize, b as usize);
+                    let mut base = 0usize;
+                    for t in 0..active {
+                        let [cr, ci] = self.coeff[t];
+                        let v = fp(self.regs[base + a]) * ci + fp(self.regs[base + b]) * cr;
+                        self.regs[base + d] = v.to_bits();
+                        base += rpt;
+                    }
+                }
+                Inst::CoeffEn => self.coeff_enabled = true,
+                Inst::CoeffDis => self.coeff_enabled = false,
+                Inst::Bar | Inst::Nop => {}
+                Inst::Bnz { a, target } => {
+                    if target >= program.insts.len() {
+                        return Err(SimError::BadBranchTarget { pc, target });
+                    }
+                    let first = self.reg(0, a) != 0;
+                    for t in 1..active {
+                        if (self.reg(t, a) != 0) != first {
+                            return Err(SimError::DivergentBranch { pc });
+                        }
+                    }
+                    if first {
+                        next_pc = target;
+                    }
+                }
+                Inst::Halt => {
+                    // clock advanced below
+                    break;
+                }
+            }
+
+            clock += dur;
+            pc = next_pc;
+        }
+        Ok(profile)
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.cfg.variant
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{SmConfig, Variant};
+    use crate::isa::asm::assemble;
+
+    fn cfg(variant: Variant, threads: usize) -> SmConfig {
+        SmConfig {
+            variant,
+            n_sp: 16,
+            pipeline_depth: 8,
+            smem_words: 1024,
+            threads,
+            regs_per_thread: 32,
+        }
+    }
+
+    fn sm(variant: Variant, threads: usize) -> Sm {
+        let mut sm = Sm::new(cfg(variant, threads));
+        sm.seed_thread_ids();
+        sm
+    }
+
+    #[test]
+    fn fadd_per_thread_semantics() {
+        let mut sm = sm(Variant::DP, 32);
+        let p = assemble("t", "ldif r1, 1.5\nldif r2, 2.25\nfadd r3, r1, r2\nhalt").unwrap();
+        sm.run(&p, 32).unwrap();
+        for t in 0..32 {
+            assert_eq!(sm.regf(t, 3), 3.75);
+        }
+    }
+
+    #[test]
+    fn thread_ids_seeded_in_r0() {
+        let mut sm = sm(Variant::DP, 64);
+        let p = assemble("t", "ishli r1, r0, 1\nhalt").unwrap();
+        sm.run(&p, 64).unwrap();
+        for t in 0..64 {
+            assert_eq!(sm.reg(t, 1), 2 * t as u32);
+        }
+    }
+
+    /// ALU instruction at wavefront 4 (64 threads / 16 SP) costs 4 cycles;
+    /// a load costs 16 (4 read ports); a DP store costs 64 (1 port).
+    #[test]
+    fn cycle_costs_dp() {
+        let mut sm = sm(Variant::DP, 64);
+        // independent instructions, no hazards
+        let p = assemble(
+            "t",
+            "ishli r1, r0, 1\nldi r2, 0\nlds r3, [r2+0]\nsts [r1+0], r0\nhalt",
+        )
+        .unwrap();
+        let prof = sm.run(&p, 64).unwrap();
+        assert_eq!(prof.get(OpClass::Int), 4);
+        assert_eq!(prof.get(OpClass::Immediate), 4);
+        assert_eq!(prof.get(OpClass::Load), 16);
+        assert_eq!(prof.get(OpClass::Store), 64);
+    }
+
+    #[test]
+    fn cycle_costs_qp_store_halves() {
+        let mut sm_qp = sm(Variant::QP, 64);
+        let p = assemble("t", "ishli r1, r0, 1\nsts [r1+0], r0\nhalt").unwrap();
+        let prof = sm_qp.run(&p, 64).unwrap();
+        assert_eq!(prof.get(OpClass::Store), 32); // 2 write ports
+        assert_eq!(prof.fmax_mhz, 600.0);
+    }
+
+    #[test]
+    fn cycle_costs_vm_store() {
+        let mut s = sm(Variant::DP_VM, 64);
+        let p = assemble("t", "ishli r1, r0, 1\nsave_bank [r1+0], r0\nhalt").unwrap();
+        let prof = s.run(&p, 64).unwrap();
+        assert_eq!(prof.get(OpClass::StoreVm), 16); // 4 virtual ports
+    }
+
+    #[test]
+    fn save_bank_rejected_without_vm() {
+        let mut s = sm(Variant::DP, 16);
+        let p = assemble("t", "save_bank [r0+0], r0\nhalt").unwrap();
+        assert!(matches!(s.run(&p, 16), Err(SimError::VmUnsupported { .. })));
+    }
+
+    /// §6: "hazards are hidden completely if the wavefront depth is
+    /// greater than 8" — dependent back-to-back FP ops produce no NOPs at
+    /// wavefront 16, but stall (8 - w) cycles at wavefront 4.
+    #[test]
+    fn hazard_nops_only_below_pipeline_depth() {
+        for (threads, expect_nop) in [(256usize, 0u64), (64, 4), (16, 7)] {
+            let mut s = sm(Variant::DP, threads);
+            let p = assemble("t", "ldif r1, 1.0\nfadd r2, r1, r1\nfadd r3, r2, r2\nhalt")
+                .unwrap();
+            let prof = s.run(&p, threads).unwrap();
+            // two dependent edges: ldi->fadd and fadd->fadd
+            assert_eq!(prof.get(OpClass::Nop), 2 * expect_nop, "threads={threads}");
+        }
+    }
+
+    /// Independent instructions interleaved between dependent ones cover
+    /// part of the latency, shrinking the stall.
+    #[test]
+    fn independent_work_hides_latency() {
+        let threads = 64; // wavefront 4
+        let mut s = sm(Variant::DP, threads);
+        let p = assemble(
+            "t",
+            "ldif r1, 1.0\nldi r4, 7\nfadd r2, r1, r1\nhalt", // 1 indep op between
+        )
+        .unwrap();
+        let prof = s.run(&p, threads).unwrap();
+        // gap to dependent = 2 issues * 4 cycles = 8 >= pipeline -> 0 NOPs
+        assert_eq!(prof.get(OpClass::Nop), 0);
+    }
+
+    /// The §5 complex-multiply sequence computes the right numbers.
+    #[test]
+    fn complex_fu_sequence() {
+        let mut s = sm(Variant::DP_COMPLEX, 16);
+        // (r8 + i r9) * (r30 + i r31) with values (1+2i) * (3+4i) = -5+10i
+        let p = assemble(
+            "t",
+            "coeff_en
+             ldif r8, 1.0
+             ldif r9, 2.0
+             ldif r30, 3.0
+             ldif r31, 4.0
+             lod_coeff r30, r31
+             mul_real r6, r8, r9
+             mul_imag r7, r8, r9
+             coeff_dis
+             halt",
+        )
+        .unwrap();
+        let prof = s.run(&p, 16).unwrap();
+        for t in 0..16 {
+            assert_eq!(s.regf(t, 6), -5.0);
+            assert_eq!(s.regf(t, 7), 10.0);
+        }
+        // 3 wavefront-wide complex ops + 2 scalar gate toggles
+        assert_eq!(prof.get(OpClass::Complex), 3 + 2);
+    }
+
+    /// save_bank leaves stale banks: reading from a non-congruent SP
+    /// returns the old value (the real failure mode of mis-scheduled VM).
+    #[test]
+    fn save_bank_stale_visibility() {
+        let mut s = sm(Variant::DP_VM, 16);
+        s.smem.host_fill(0, &vec![77u32; 16]).unwrap();
+        // each thread writes its id to word t via save_bank, then reads
+        // word (t+1) mod 16 — neighbouring SP differs by 1 mod 4 -> stale.
+        let p = assemble(
+            "t",
+            "save_bank [r0+0], r0
+             iaddi r1, r0, 1
+             iandi r1, r1, 0xf
+             lds r2, [r1+0]
+             halt",
+        )
+        .unwrap();
+        s.run(&p, 16).unwrap();
+        for t in 0..16 {
+            assert_eq!(s.reg(t, 2), 77, "thread {t} must see the stale value");
+        }
+    }
+
+    #[test]
+    fn bnz_uniform_loop_and_divergence() {
+        let mut s = sm(Variant::DP, 16);
+        let p = assemble(
+            "t",
+            "ldi r1, 3\nldi r2, 0\ntop:\niaddi r2, r2, 5\niaddi r1, r1, -1\nbnz r1, top\nhalt",
+        )
+        .unwrap();
+        let prof = s.run(&p, 16).unwrap();
+        assert_eq!(s.reg(0, 2), 15);
+        assert!(prof.get(OpClass::Branch) >= 3 * 9);
+
+        // divergent predicate -> error
+        let mut s = sm(Variant::DP, 16);
+        let p = assemble("t", "mov r1, r0\nbnz r1, 0\nhalt").unwrap();
+        assert!(matches!(s.run(&p, 16), Err(SimError::DivergentBranch { .. })));
+    }
+
+    #[test]
+    fn reg_budget_enforced() {
+        let mut s = sm(Variant::DP, 16);
+        let p = assemble("t", "mov r31, r0\nhalt").unwrap();
+        assert!(s.run(&p, 16).is_ok());
+        let p = assemble("t", "mov r32, r0\nhalt").unwrap();
+        assert!(matches!(s.run(&p, 16), Err(SimError::RegBudget { .. })));
+    }
+
+    #[test]
+    fn int_fp_work_cycles_tracked() {
+        let mut s = sm(Variant::DP, 32);
+        let src = "ldif r1, 1.0\nixori r2, r1, 0x80000000\nhalt";
+        let mut p = assemble("t", src).unwrap();
+        // tag the xor as FP work (codegen does this directly)
+        if let Inst::IXorI { ref mut fp_work, .. } = p.insts[1] {
+            *fp_work = true;
+        }
+        let prof = s.run(&p, 32).unwrap();
+        assert_eq!(prof.int_fp_work_cycles, 2); // wavefront 2
+        assert_eq!(s.regf(0, 2), -1.0);
+    }
+}

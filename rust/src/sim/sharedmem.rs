@@ -1,0 +1,177 @@
+//! The SM's banked shared memory (§4 of the paper).
+//!
+//! Physically the eGPU shared memory is four parallel M20K banks. A
+//! coherent `sts` writes the same word into all four banks (which is why
+//! DP mode has only one logical write port: the write is broadcast). A
+//! `save_bank` write stores **only** into the bank owned by the issuing
+//! SP (SP index mod 4), quadrupling write bandwidth but leaving the
+//! other three banks stale at that location. Reads always come from the
+//! reading SP's own bank, so a `save_bank`-written word is only valid
+//! when the next reader's SP index is congruent (mod 4) to the writer's.
+//!
+//! Modelling all four banks explicitly means a *mis-scheduled* virtual
+//! bank write produces genuinely wrong numerics — the same failure mode
+//! as the real hardware — which our FFT validation tests would catch.
+
+use thiserror::Error;
+
+pub const NUM_BANKS: usize = 4;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MemError {
+    #[error("shared-memory address {addr} out of bounds ({words} words)")]
+    OutOfBounds { addr: i64, words: usize },
+    #[error("incoherent read at {addr}: banks differ (bank values {values:?})")]
+    Incoherent { addr: usize, values: [u32; NUM_BANKS] },
+}
+
+#[derive(Clone, Debug)]
+pub struct SharedMem {
+    words: usize,
+    banks: [Vec<u32>; NUM_BANKS],
+}
+
+impl SharedMem {
+    pub fn new(words: usize) -> Self {
+        SharedMem {
+            words,
+            banks: std::array::from_fn(|_| vec![0u32; words]),
+        }
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    #[inline]
+    fn check(&self, addr: i64) -> Result<usize, MemError> {
+        if addr < 0 || addr as usize >= self.words {
+            Err(MemError::OutOfBounds { addr, words: self.words })
+        } else {
+            Ok(addr as usize)
+        }
+    }
+
+    /// Read as seen by scalar processor `sp` (bank = sp mod 4).
+    #[inline]
+    pub fn read(&self, sp: usize, addr: i64) -> Result<u32, MemError> {
+        let a = self.check(addr)?;
+        Ok(self.banks[sp % NUM_BANKS][a])
+    }
+
+    /// Coherent store (`sts`): broadcast into all four banks.
+    #[inline]
+    pub fn write_coherent(&mut self, addr: i64, value: u32) -> Result<(), MemError> {
+        let a = self.check(addr)?;
+        for bank in &mut self.banks {
+            bank[a] = value;
+        }
+        Ok(())
+    }
+
+    /// `save_bank` store from scalar processor `sp`: only that SP's bank
+    /// is written; the other three now hold stale data at `addr`.
+    #[inline]
+    pub fn write_bank(&mut self, sp: usize, addr: i64, value: u32) -> Result<(), MemError> {
+        let a = self.check(addr)?;
+        self.banks[sp % NUM_BANKS][a] = value;
+        Ok(())
+    }
+
+    /// Host-side preload (input data, twiddle tables): coherent fill.
+    /// Bulk slice copies per bank (this is on the coordinator's serving
+    /// path — §Perf).
+    pub fn host_fill(&mut self, base: usize, data: &[u32]) -> Result<(), MemError> {
+        let end = base.checked_add(data.len()).ok_or(MemError::OutOfBounds {
+            addr: i64::MAX,
+            words: self.words,
+        })?;
+        if end > self.words {
+            return Err(MemError::OutOfBounds { addr: end as i64 - 1, words: self.words });
+        }
+        for bank in &mut self.banks {
+            bank[base..end].copy_from_slice(data);
+        }
+        Ok(())
+    }
+
+    /// Host-side readback that *requires* coherence — the natural way to
+    /// read final FFT results (the last pass must use a coherent store).
+    pub fn host_read_coherent(&self, base: usize, len: usize) -> Result<Vec<u32>, MemError> {
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len {
+            let a = self.check((base + i) as i64)?;
+            let values: [u32; NUM_BANKS] = std::array::from_fn(|b| self.banks[b][a]);
+            if values.iter().any(|&v| v != values[0]) {
+                return Err(MemError::Incoherent { addr: a, values });
+            }
+            out.push(values[0]);
+        }
+        Ok(out)
+    }
+
+    /// Readback from one bank without the coherence check (debugging).
+    pub fn host_read_bank(&self, bank: usize, base: usize, len: usize) -> Vec<u32> {
+        self.banks[bank % NUM_BANKS][base..base + len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coherent_write_visible_to_all_sps() {
+        let mut m = SharedMem::new(64);
+        m.write_coherent(10, 0xdead_beef).unwrap();
+        for sp in 0..16 {
+            assert_eq!(m.read(sp, 10).unwrap(), 0xdead_beef);
+        }
+    }
+
+    #[test]
+    fn bank_write_visible_only_to_congruent_sps() {
+        let mut m = SharedMem::new(64);
+        m.write_coherent(5, 1).unwrap();
+        // SP 6 writes via save_bank -> bank 2.
+        m.write_bank(6, 5, 99).unwrap();
+        for sp in 0..16 {
+            let expect = if sp % 4 == 2 { 99 } else { 1 };
+            assert_eq!(m.read(sp, 5).unwrap(), expect, "sp {sp}");
+        }
+    }
+
+    /// The paper's mapping: "memory bank 1 maps to SP 1, 5, 9 and 13"
+    /// (1-indexed); in 0-indexed terms bank b serves SPs b, b+4, b+8, b+12.
+    #[test]
+    fn paper_bank_mapping() {
+        let mut m = SharedMem::new(8);
+        for b in 0..4u32 {
+            m.write_bank(b as usize, 0, b + 100).unwrap();
+        }
+        for sp in 0..16 {
+            assert_eq!(m.read(sp, 0).unwrap(), (sp as u32 % 4) + 100);
+        }
+    }
+
+    #[test]
+    fn incoherent_read_detected() {
+        let mut m = SharedMem::new(8);
+        m.write_coherent(3, 7).unwrap();
+        m.write_bank(1, 3, 8).unwrap();
+        let err = m.host_read_coherent(3, 1).unwrap_err();
+        assert!(matches!(err, MemError::Incoherent { addr: 3, .. }));
+        // Re-writing coherently heals it.
+        m.write_coherent(3, 9).unwrap();
+        assert_eq!(m.host_read_coherent(3, 1).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut m = SharedMem::new(16);
+        assert!(m.read(0, 16).is_err());
+        assert!(m.read(0, -1).is_err());
+        assert!(m.write_coherent(16, 0).is_err());
+        assert!(m.write_bank(0, 16, 0).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Service-level integration tests: routing, concurrency, failure
+//! injection, metrics, and sim↔PJRT agreement through the coordinator.
+
+use egpu_fft::arch::Variant;
+use egpu_fft::coordinator::{cross_error, Backend, FftService, ServiceConfig};
+use egpu_fft::fft::{self, reference};
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/fft256.hlo.txt").exists();
+    if !ok {
+        eprintln!("WARNING: artifacts/ missing — run `make artifacts`; skipping PJRT test");
+    }
+    ok
+}
+
+#[test]
+fn concurrent_submitters() {
+    let svc = std::sync::Arc::new(
+        FftService::start(ServiceConfig { cores: 4, ..Default::default() }).unwrap(),
+    );
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let svc = std::sync::Arc::clone(&svc);
+        joins.push(std::thread::spawn(move || {
+            for i in 0..8u64 {
+                let r = svc.submit(signal(256, t * 100 + i)).recv().unwrap().unwrap();
+                assert_eq!(r.output.len(), 256);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(svc.metrics().served, 32);
+}
+
+#[test]
+fn every_variant_serves() {
+    for variant in Variant::ALL6 {
+        let svc = FftService::start(ServiceConfig {
+            cores: 1,
+            variant,
+            radix: 16,
+            ..Default::default()
+        })
+        .unwrap();
+        let r = svc.submit(signal(1024, 5)).recv().unwrap().unwrap();
+        let err = cross_error(
+            &r.output,
+            &reference::fft(&reference::test_signal(1024, 5))
+                .iter()
+                .map(|c| c.to_f32_pair())
+                .collect::<Vec<_>>(),
+        );
+        assert!(err < fft::F32_TOL, "{variant}: {err}");
+        svc.shutdown();
+    }
+}
+
+/// Failure injection: a stream with malformed sizes interleaved — every
+/// bad job errors, every good job still completes, counts are exact.
+#[test]
+fn failure_injection_mixed_stream() {
+    let svc = FftService::start(ServiceConfig { cores: 2, ..Default::default() }).unwrap();
+    let mut pending = Vec::new();
+    let mut expect_err = 0;
+    let mut expect_ok = 0;
+    for i in 0..20u64 {
+        let n = match i % 5 {
+            0 => 100,                   // not a power of two
+            1 => 8192 * 4,              // exceeds shared memory
+            _ => 256,
+        };
+        if n == 256 {
+            expect_ok += 1;
+        } else {
+            expect_err += 1;
+        }
+        pending.push(svc.submit(signal(n, i)));
+    }
+    let (mut ok, mut err) = (0, 0);
+    for p in pending {
+        match p.recv().unwrap() {
+            Ok(r) => {
+                assert_eq!(r.output.len(), 256);
+                ok += 1;
+            }
+            Err(_) => err += 1,
+        }
+    }
+    assert_eq!((ok, err), (expect_ok, expect_err));
+    let m = svc.metrics();
+    assert_eq!(m.served, expect_ok);
+    assert_eq!(m.errors, expect_err);
+}
+
+#[test]
+fn metrics_accumulate_virtual_time_and_efficiency() {
+    let svc = FftService::start(ServiceConfig {
+        cores: 2,
+        variant: Variant::DP_VM_COMPLEX,
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..6).map(|i| signal(1024, i)).collect()).unwrap();
+    let m = svc.metrics();
+    // 6 × ~12.6 us of virtual time
+    assert!((60.0..=100.0).contains(&m.virtual_us), "{}", m.virtual_us);
+    assert!((20.0..=35.0).contains(&m.efficiency_pct()), "{}", m.efficiency_pct());
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_cleanly() {
+    let svc = FftService::start(ServiceConfig { cores: 3, ..Default::default() }).unwrap();
+    let handles: Vec<_> = (0..12).map(|i| svc.submit(signal(256, i))).collect();
+    // results must all arrive even if we shut down right after
+    let results: Vec<_> = handles.into_iter().map(|h| h.recv().unwrap()).collect();
+    svc.shutdown();
+    assert!(results.iter().all(|r| r.is_ok()));
+}
+
+#[test]
+fn pjrt_and_sim_agree_through_the_service() {
+    if !have_artifacts() {
+        return;
+    }
+    let sim = FftService::start(ServiceConfig {
+        cores: 1,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap();
+    let pjrt = FftService::start(ServiceConfig {
+        cores: 1,
+        backend: Backend::Pjrt,
+        ..Default::default()
+    })
+    .unwrap();
+    for n in [256usize, 1024, 4096] {
+        let input = signal(n, 1234);
+        let a = sim.submit(input.clone()).recv().unwrap().unwrap();
+        let b = pjrt.submit(input).recv().unwrap().unwrap();
+        let err = cross_error(&a.output, &b.output);
+        assert!(err < fft::F32_TOL, "n={n}: {err}");
+    }
+}
+
+/// Backpressure sanity: a burst far larger than the worker count
+/// completes without deadlock and preserves per-job ids.
+#[test]
+fn large_burst_completes() {
+    let svc = FftService::start(ServiceConfig { cores: 2, ..Default::default() }).unwrap();
+    let results = svc
+        .run_batch((0..100).map(|i| signal(256, i)).collect())
+        .unwrap();
+    assert_eq!(results.len(), 100);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration tests: the paper's §6 quantitative claims, checked
+//! end-to-end against the simulator (not against hard-coded tables).
+
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::{self, FftPlan};
+use egpu_fft::isa::OpClass;
+use egpu_fft::profile::Profile;
+
+fn profile(points: usize, radix: usize, v: Variant) -> Profile {
+    let cfg = SmConfig::for_radix(v, radix);
+    let (p, err) = fft::validate(&cfg, points, radix, 99).unwrap();
+    assert!(err < fft::F32_TOL, "{points}/{radix}/{v}: rms {err}");
+    p
+}
+
+/// §6: "The twiddle loads accounts for about 10% of all memory
+/// accesses" (radix-16, 4096, DP: 3840 of 34560 = 11.1%).
+#[test]
+fn twiddle_loads_are_about_ten_percent_of_memory() {
+    let p = profile(4096, 16, Variant::DP);
+    // twiddle loads = total loads − data loads (data loads = stores/4)
+    let loads = p.get(OpClass::Load);
+    let data_loads = p.get(OpClass::Store) / 4;
+    let twiddle = loads - data_loads;
+    let mem = loads + p.get(OpClass::Store);
+    let share = twiddle as f64 / mem as f64;
+    assert!((0.08..=0.14).contains(&share), "twiddle share {share}");
+    // the exact §6 arithmetic on our counts
+    assert_eq!(data_loads, 6144);
+    assert_eq!(twiddle, 3840);
+}
+
+/// §6: "The use of the complex multiplier feature reduces the number of
+/// cycles required for FP operations by about 25% ... translates into a
+/// ≈5% performance increase."
+#[test]
+fn complex_fu_reduces_fp_by_quarter_and_total_by_5pct() {
+    for (points, radix) in [(4096usize, 4usize), (4096, 8), (4096, 16)] {
+        let base = profile(points, radix, Variant::DP);
+        let cplx = profile(points, radix, Variant::DP_COMPLEX);
+        let fp_base = base.get(OpClass::Fp) as f64;
+        // FP cycles after = FP + complex-FU cycles doing the same work
+        let fp_after =
+            (cplx.get(OpClass::Fp) + cplx.get(OpClass::Complex)) as f64;
+        let fp_cut = 1.0 - fp_after / fp_base;
+        // the cut shrinks with radix: higher-radix kernels spend more FP
+        // on internal constant rotations that stay on the real-FP path
+        // (radix-4 ≈ 21 %, radix-8 ≈ 17 %, radix-16 ≈ 13 %; the paper's
+        // "about 25 %" is its radix-4 hand assembly)
+        assert!(
+            (0.10..=0.45).contains(&fp_cut),
+            "{points}/{radix}: FP cut {fp_cut}"
+        );
+        let perf_gain = 1.0 - cplx.total() as f64 / base.total() as f64;
+        assert!(
+            (0.01..=0.12).contains(&perf_gain),
+            "{points}/{radix}: perf gain {perf_gain}"
+        );
+    }
+}
+
+/// §4/§6: the VM memory quadruples write bandwidth on eligible passes —
+/// radix-4 4096: stores fall from 49152 to 16384 + 8192 banked.
+#[test]
+fn vm_store_cycles_match_paper_exactly() {
+    let p = profile(4096, 4, Variant::DP_VM);
+    assert_eq!(p.get(OpClass::Store), 16384);
+    assert_eq!(p.get(OpClass::StoreVm), 8192);
+    let dp = profile(4096, 4, Variant::DP);
+    assert_eq!(dp.get(OpClass::Store), 49152);
+    // radix-8: paper 16384 + 4096
+    let p8 = profile(4096, 8, Variant::DP_VM);
+    assert_eq!(p8.get(OpClass::Store), 16384);
+    assert_eq!(p8.get(OpClass::StoreVm), 4096);
+}
+
+/// Abstract of the paper: the two enhancements together "improve the
+/// efficiency of the design by 50% when executing the FFTs".
+#[test]
+fn combined_enhancements_improve_efficiency_by_about_half() {
+    // radix-4 shows the full effect (ours: 14.1 % -> 20.8 %, +48 %)
+    let base = profile(4096, 4, Variant::DP).efficiency_pct();
+    let both = profile(4096, 4, Variant::DP_VM_COMPLEX).efficiency_pct();
+    let gain = both / base - 1.0;
+    assert!(
+        (0.35..=0.65).contains(&gain),
+        "4096/4: efficiency gain {gain:.2} (base {base:.1} -> {both:.1})"
+    );
+    // radix-16 gains less from VM (only pass 1 is bank-eligible; the
+    // paper's Table 3 shows more because of its VM/QP store-cell swap —
+    // EXPERIMENTS.md) but still improves markedly
+    let base16 = profile(4096, 16, Variant::DP).efficiency_pct();
+    let both16 = profile(4096, 16, Variant::DP_VM_COMPLEX).efficiency_pct();
+    let gain16 = both16 / base16 - 1.0;
+    assert!(
+        (0.12..=0.60).contains(&gain16),
+        "4096/16: efficiency gain {gain16:.2} (base {base16:.1} -> {both16:.1})"
+    );
+}
+
+/// §6: "hazards are hidden completely if the wavefront depth is greater
+/// than 8" — no NOP cycles at 4096/1024 points, NOPs appear at 256.
+#[test]
+fn hazard_nops_only_for_shallow_wavefronts() {
+    assert_eq!(profile(4096, 4, Variant::DP).get(OpClass::Nop), 0);
+    assert_eq!(profile(1024, 4, Variant::DP).get(OpClass::Nop), 0);
+    assert_eq!(profile(4096, 8, Variant::DP).get(OpClass::Nop), 0);
+    assert_eq!(profile(4096, 16, Variant::DP).get(OpClass::Nop), 0);
+    assert!(profile(256, 4, Variant::DP).get(OpClass::Nop) > 0);
+    assert!(profile(256, 16, Variant::DP).get(OpClass::Nop) > 0);
+}
+
+/// §6: memory accesses dominate — the Memory % row is 52–85 % across
+/// the whole campaign, and always the majority for the big sizes.
+#[test]
+fn memory_dominates_cycles() {
+    for radix in [4usize, 8, 16] {
+        for v in Variant::ALL6 {
+            let p = profile(4096, radix, v);
+            let m = p.memory_pct();
+            assert!((50.0..=90.0).contains(&m), "{radix}/{v}: memory {m}%");
+        }
+    }
+}
+
+/// §6: QP runs at 600 MHz — better cycle counts but the time advantage
+/// shrinks; DP-VM-Complex is the fastest 4096-pt radix-4 variant.
+#[test]
+fn qp_clock_penalty_shapes_times() {
+    let vmc = profile(4096, 4, Variant::DP_VM_COMPLEX);
+    let qpc = profile(4096, 4, Variant::QP_COMPLEX);
+    assert!(qpc.total() <= vmc.total() + 1000); // similar cycles
+    assert!(vmc.time_us() < qpc.time_us()); // but DP wins on time
+}
+
+/// §6.1: crediting INT ops that perform FP work raises radix-8 DP
+/// efficiency (paper: 19.13 % -> 20.5 %).
+#[test]
+fn effective_efficiency_exceeds_base_for_radix8() {
+    let p = profile(4096, 8, Variant::DP);
+    let base = p.efficiency_pct();
+    let eff = p.effective_efficiency_pct();
+    assert!(eff > base, "{eff} vs {base}");
+    assert!(eff - base < 3.0, "credit too large: {} -> {}", base, eff);
+}
+
+/// §6.2 mixed radix: the 1024-point radix-16 FFT (16·16·4) must beat
+/// the pure radix-4 1024-point FFT on efficiency (Table 3 vs Table 1).
+#[test]
+fn mixed_radix16_beats_radix4_at_1024() {
+    let r16 = profile(1024, 16, Variant::DP);
+    let r4 = profile(1024, 4, Variant::DP);
+    assert!(r16.efficiency_pct() > r4.efficiency_pct());
+    assert!(r16.time_us() < r4.time_us());
+}
+
+/// Higher radices raise efficiency (fewer passes -> fewer memory
+/// round-trips): radix-2 < radix-4 < radix-8 < radix-16 at 4096 points.
+#[test]
+fn efficiency_increases_with_radix() {
+    let effs: Vec<f64> = [2usize, 4, 8, 16]
+        .iter()
+        .map(|&r| profile(4096, r, Variant::DP).efficiency_pct())
+        .collect();
+    for w in effs.windows(2) {
+        assert!(w[1] > w[0], "{effs:?}");
+    }
+}
+
+/// The VM feature must be rejected by planning/simulation only where
+/// the paper marks "-": 256-pt radix-16 has no bank-eligible pass.
+#[test]
+fn vm_dash_cells_match_paper() {
+    let plan = FftPlan::new(256, 16, 512).unwrap();
+    assert!(plan.passes.iter().all(|p| !p.vm_eligible));
+    // but the program still runs correctly on a VM variant (it simply
+    // never uses save_bank)
+    let p = profile(256, 16, Variant::DP_VM);
+    assert_eq!(p.get(OpClass::StoreVm), 0);
+}
+
+/// Figure 1 configuration invariants: 64 KB shared memory and 32 K
+/// registers hold every design point's working set.
+#[test]
+fn working_sets_fit_the_sm() {
+    for radix in [2usize, 4, 8, 16] {
+        for points in [256usize, 512, 1024, 2048, 4096] {
+            let cfg = SmConfig::for_radix(Variant::DP, radix);
+            let fp = fft::generate(&cfg, points, radix).unwrap();
+            assert!(fp.layout.words_used <= cfg.smem_words);
+            assert!((fp.program.max_reg() as usize) < cfg.regs_per_thread);
+        }
+    }
+}

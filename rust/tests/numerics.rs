@@ -1,0 +1,134 @@
+//! Numerics: every design point of the paper's campaign computes a
+//! correct FFT on the simulated eGPU, for multiple input classes.
+
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::{self, reference, Cpx};
+
+fn check_signal(points: usize, radix: usize, v: Variant, input: &[Cpx], label: &str) {
+    let cfg = SmConfig::for_radix(v, radix);
+    let fp = fft::generate(&cfg, points, radix).unwrap();
+    let in32: Vec<(f32, f32)> = input.iter().map(|c| c.to_f32_pair()).collect();
+    let run = fft::run_fft(&fp, &cfg, &in32).unwrap();
+    let got: Vec<Cpx> = run
+        .output
+        .iter()
+        .map(|&(re, im)| Cpx::new(re as f64, im as f64))
+        .collect();
+    // compare against what f32-rounded inputs transform to
+    let rounded: Vec<Cpx> = in32
+        .iter()
+        .map(|&(re, im)| Cpx::new(re as f64, im as f64))
+        .collect();
+    let want = reference::fft(&rounded);
+    let err = reference::rms_rel_error(&got, &want);
+    assert!(err < fft::F32_TOL, "{points}/{radix}/{v}/{label}: rms {err:e}");
+}
+
+/// The paper's full table space (every size × radix × variant cell of
+/// Tables 1–3) on random data.
+#[test]
+fn full_campaign_random() {
+    for (points, radices) in [
+        (256usize, vec![4usize, 16]),
+        (512, vec![8]),
+        (1024, vec![4, 16]),
+        (4096, vec![4, 8, 16]),
+    ] {
+        for radix in radices {
+            for v in Variant::ALL6 {
+                let sig = reference::test_signal(points, (points * radix) as u64);
+                check_signal(points, radix, v, &sig, "random");
+            }
+        }
+    }
+}
+
+/// Radix-2 (measured but unreported in the paper) still computes
+/// correctly, including the capacity-blocked 4096-point case.
+#[test]
+fn radix2_all_sizes() {
+    for points in [256usize, 512, 1024, 2048, 4096] {
+        let sig = reference::test_signal(points, 77);
+        check_signal(points, 2, Variant::DP, &sig, "radix2");
+        check_signal(points, 2, Variant::DP_VM_COMPLEX, &sig, "radix2-vmc");
+    }
+}
+
+/// Structured inputs: impulse, DC, single tones, alternating sign.
+#[test]
+fn structured_inputs() {
+    let n = 1024;
+    let impulse: Vec<Cpx> = (0..n)
+        .map(|i| if i == 0 { Cpx::ONE } else { Cpx::ZERO })
+        .collect();
+    let dc: Vec<Cpx> = vec![Cpx::ONE; n];
+    let alt: Vec<Cpx> = (0..n)
+        .map(|i| Cpx::new(if i % 2 == 0 { 1.0 } else { -1.0 }, 0.0))
+        .collect();
+    let tone: Vec<Cpx> = (0..n)
+        .map(|i| Cpx::cis(2.0 * std::f64::consts::PI * 100.0 * i as f64 / n as f64))
+        .collect();
+    for (sig, label) in [(impulse, "impulse"), (dc, "dc"), (alt, "alternating"), (tone, "tone")] {
+        check_signal(n, 16, Variant::DP_VM_COMPLEX, &sig, label);
+        check_signal(n, 4, Variant::QP_COMPLEX, &sig, label);
+    }
+}
+
+/// Large-magnitude and tiny-magnitude inputs keep relative accuracy.
+#[test]
+fn dynamic_range() {
+    let n = 256;
+    let big: Vec<Cpx> = reference::test_signal(n, 5)
+        .iter()
+        .map(|c| Cpx::new(c.re * 1e6, c.im * 1e6))
+        .collect();
+    let small: Vec<Cpx> = reference::test_signal(n, 6)
+        .iter()
+        .map(|c| Cpx::new(c.re * 1e-6, c.im * 1e-6))
+        .collect();
+    check_signal(n, 4, Variant::DP, &big, "big");
+    check_signal(n, 4, Variant::DP, &small, "small");
+    check_signal(n, 16, Variant::DP_VM_COMPLEX, &big, "big");
+}
+
+/// Linearity of the simulated transform (an end-to-end property of the
+/// whole codegen+simulator stack).
+#[test]
+fn linearity_through_the_simulator() {
+    let n = 256;
+    let cfg = SmConfig::for_radix(Variant::DP_VM, 4);
+    let fp = fft::generate(&cfg, n, 4).unwrap();
+    let a = reference::test_signal(n, 1);
+    let b = reference::test_signal(n, 2);
+    let run_one = |sig: &[Cpx]| -> Vec<Cpx> {
+        let in32: Vec<(f32, f32)> = sig.iter().map(|c| c.to_f32_pair()).collect();
+        fft::run_fft(&fp, &cfg, &in32)
+            .unwrap()
+            .output
+            .iter()
+            .map(|&(re, im)| Cpx::new(re as f64, im as f64))
+            .collect()
+    };
+    let fa = run_one(&a);
+    let fb = run_one(&b);
+    let sum: Vec<Cpx> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+    let fsum = run_one(&sum);
+    let combined: Vec<Cpx> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
+    let err = reference::rms_rel_error(&fsum, &combined);
+    assert!(err < 1e-4, "linearity violated: {err:e}");
+}
+
+/// Parseval's theorem holds through the simulator.
+#[test]
+fn parseval_through_the_simulator() {
+    let n = 1024;
+    let cfg = SmConfig::for_radix(Variant::QP, 16);
+    let fp = fft::generate(&cfg, n, 16).unwrap();
+    let sig = reference::test_signal(n, 21);
+    let in32: Vec<(f32, f32)> = sig.iter().map(|c| c.to_f32_pair()).collect();
+    let out = fft::run_fft(&fp, &cfg, &in32).unwrap().output;
+    let tx: f64 = in32.iter().map(|&(r, i)| (r as f64).powi(2) + (i as f64).powi(2)).sum();
+    let ty: f64 = out.iter().map(|&(r, i)| (r as f64).powi(2) + (i as f64).powi(2)).sum();
+    let ratio = ty / (n as f64 * tx);
+    assert!((ratio - 1.0).abs() < 1e-5, "parseval ratio {ratio}");
+}

@@ -1,0 +1,270 @@
+//! Property-based tests (hand-rolled xorshift generator — proptest is
+//! not in the offline vendor tree). Each property runs a few hundred
+//! random cases; failures print the seed for reproduction.
+
+use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::fft::sched::schedule;
+use egpu_fft::fft::twiddle::{classify, twiddle, TwiddleKind};
+use egpu_fft::fft::FftPlan;
+use egpu_fft::isa::{asm::assemble, Inst, OpClass, Program, Reg};
+use egpu_fft::sim::Sm;
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed | 1)
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn reg(&mut self, max: Reg) -> Reg {
+        (self.below(max as u64)) as Reg
+    }
+    fn f32(&mut self) -> f32 {
+        ((self.next() >> 40) as f32 / (1u64 << 23) as f32) - 1.0
+    }
+}
+
+/// A random straight-line program over a small register window and a
+/// small shared-memory arena. Addresses are built from an `ldi`-seeded
+/// base register so every access stays in bounds.
+fn random_program(rng: &mut Rng, len: usize, regs: Reg, vm: bool) -> Program {
+    let mut insts: Vec<Inst> = Vec::with_capacity(len + 2);
+    // r1 holds a safe base address (0..32); data regs start at r2
+    insts.push(Inst::Ldi { d: 1, imm: rng.below(32) as u32 });
+    for _ in 0..len {
+        let d = 2 + rng.reg(regs - 2);
+        let a = 2 + rng.reg(regs - 2);
+        let b = 2 + rng.reg(regs - 2);
+        let choice = rng.below(if vm { 12 } else { 11 });
+        let inst = match choice {
+            0 => Inst::FAdd { d, a, b },
+            1 => Inst::FSub { d, a, b },
+            2 => Inst::FMul { d, a, b },
+            3 => Inst::IAdd { d, a, b },
+            4 => Inst::IXor { d, a, b },
+            5 => Inst::IAndI { d, a, imm: rng.next() as u32 },
+            6 => Inst::Mov { d, a, fp_work: false },
+            7 => Inst::LdiF { d, imm: rng.f32() },
+            8 => Inst::IShrI { d, a, sh: (rng.below(8) + 1) as u8 },
+            9 => Inst::Lds { d, addr: 1, offset: rng.below(32) as i32 },
+            10 => Inst::Sts { addr: 1, offset: rng.below(32) as i32, s: a },
+            _ => Inst::StsBank { addr: 1, offset: rng.below(32) as i32, s: a },
+        };
+        insts.push(inst);
+    }
+    insts.push(Inst::Halt);
+    Program::new("prop", insts)
+}
+
+fn cfg(variant: Variant, threads: usize) -> SmConfig {
+    SmConfig {
+        variant,
+        n_sp: 16,
+        pipeline_depth: 8,
+        smem_words: 128,
+        threads,
+        regs_per_thread: 16,
+    }
+}
+
+fn run_collect(p: &Program, variant: Variant, threads: usize, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let mut sm = Sm::new(cfg(variant, threads));
+    sm.seed_thread_ids();
+    // deterministic initial memory
+    let mut rng = Rng::new(seed);
+    let init: Vec<u32> = (0..128).map(|_| rng.next() as u32).collect();
+    sm.smem.host_fill(0, &init).unwrap();
+    sm.run(p, threads).unwrap();
+    let mem = sm.smem.host_read_bank(0, 0, 128);
+    (sm.regs.clone(), mem)
+}
+
+/// PROPERTY: the list scheduler preserves program semantics — register
+/// file and memory state are bit-identical after scheduling, for
+/// hundreds of random programs (including save_bank on VM variants).
+#[test]
+fn scheduler_preserves_semantics() {
+    for case in 0..300u64 {
+        let mut rng = Rng::new(0xABCD + case);
+        let vm = case % 3 == 0;
+        let variant = if vm { Variant::DP_VM } else { Variant::DP };
+        let p = random_program(&mut rng, 40, 14, vm);
+        let s = schedule(&p, 8);
+        assert_eq!(s.insts.len(), p.insts.len(), "case {case}");
+        let threads = 16 << (case % 3); // 16/32/64
+        let (r1, m1) = run_collect(&p, variant, threads, case);
+        let (r2, m2) = run_collect(&s, variant, threads, case);
+        assert_eq!(r1, r2, "registers differ, case {case}");
+        assert_eq!(m1, m2, "memory differs, case {case}");
+    }
+}
+
+/// PROPERTY: scheduling (a greedy heuristic) never increases total
+/// cycles beyond a tiny slack, and never changes the non-NOP cycle mix.
+#[test]
+fn scheduler_never_hurts_cycles() {
+    for case in 0..150u64 {
+        let mut rng = Rng::new(0xBEEF + case);
+        let p = random_program(&mut rng, 30, 12, false);
+        let s = schedule(&p, 8);
+        let threads = 16; // wavefront 1: max hazard exposure
+        let total = |prog: &Program| {
+            let mut sm = Sm::new(cfg(Variant::DP, threads));
+            sm.seed_thread_ids();
+            sm.run(prog, threads).unwrap().total()
+        };
+        let (t_orig, t_sched) = (total(&p), total(&s));
+        // greedy list scheduling is not optimal; allow a few cycles of
+        // slack but no systematic regression
+        assert!(
+            t_sched <= t_orig + t_orig / 20 + 4,
+            "case {case}: {t_sched} > {t_orig}"
+        );
+        // non-NOP cycles are identical
+        let classes = |prog: &Program| {
+            let mut sm = Sm::new(cfg(Variant::DP, threads));
+            sm.seed_thread_ids();
+            let prof = sm.run(prog, threads).unwrap();
+            prof.total() - prof.get(OpClass::Nop)
+        };
+        assert_eq!(classes(&p), classes(&s), "case {case}");
+    }
+}
+
+/// PROPERTY: assembler round-trip — Display → assemble reproduces the
+/// exact instruction sequence for random programs.
+#[test]
+fn assembler_round_trips_random_programs() {
+    for case in 0..200u64 {
+        let mut rng = Rng::new(0xF00D + case);
+        let p = random_program(&mut rng, 50, 14, true);
+        let text: String = p.insts.iter().map(|i| format!("{i}\n")).collect();
+        let q = assemble("rt", &text).unwrap();
+        assert_eq!(p.insts, q.insts, "case {case}");
+    }
+}
+
+/// PROPERTY: `save_bank` + congruent-read = coherent-store semantics.
+/// For any address pattern, reading from SP s after all 4 bank-copies
+/// were written by SPs ≡ s (mod 4) gives the same result as sts.
+#[test]
+fn bank_write_congruent_read_equals_coherent() {
+    for case in 0..100u64 {
+        let mut rng = Rng::new(0xD00D + case);
+        let threads = 16;
+        let addr = rng.below(64) as i32;
+        // every thread writes its id to (addr + tid) via each store kind
+        let prog = |bank: bool| -> Program {
+            let mut v = vec![Inst::IAddI { d: 2, a: 0, imm: addr }];
+            v.push(if bank {
+                Inst::StsBank { addr: 2, offset: 0, s: 0 }
+            } else {
+                Inst::Sts { addr: 2, offset: 0, s: 0 }
+            });
+            // read own location back (same SP wrote it: congruent)
+            v.push(Inst::Lds { d: 3, addr: 2, offset: 0 });
+            v.push(Inst::Halt);
+            Program::new("bank", v)
+        };
+        let run = |p: &Program, variant: Variant| -> Vec<u32> {
+            let mut sm = Sm::new(cfg(variant, threads));
+            sm.seed_thread_ids();
+            sm.run(p, threads).unwrap();
+            (0..threads).map(|t| sm.regs[t * 16 + 3]).collect()
+        };
+        let via_bank = run(&prog(true), Variant::DP_VM);
+        let via_coherent = run(&prog(false), Variant::DP);
+        assert_eq!(via_bank, via_coherent, "case {case}");
+    }
+}
+
+/// PROPERTY: plan digit reversal is a permutation and matches the
+/// python-side `digit_reverse_indices` convention (involution base 4).
+#[test]
+fn plan_reversal_properties() {
+    for (points, radix) in [
+        (64usize, 2usize),
+        (256, 2),
+        (256, 4),
+        (1024, 4),
+        (4096, 4),
+        (512, 8),
+        (4096, 8),
+        (256, 16),
+        (1024, 16),
+        (4096, 16),
+    ] {
+        let plan = FftPlan::new(points, radix, 1024).unwrap();
+        let mut seen = vec![false; points];
+        for i in 0..points {
+            let r = plan.natural_of_inplace(i);
+            assert!(!seen[r], "{points}/{radix}: duplicate {r}");
+            seen[r] = true;
+        }
+        if plan.single_radix() {
+            // single-radix reversal is an involution
+            for i in 0..points {
+                let r = plan.natural_of_inplace(i);
+                assert_eq!(plan.natural_of_inplace(r), i, "{points}/{radix}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: twiddle classification is faithful — reconstructing the
+/// rotation from the classified form reproduces the value.
+#[test]
+fn twiddle_classification_faithful() {
+    for n in [4usize, 8, 16, 32, 64, 256, 1024] {
+        for k in 0..n {
+            let w = twiddle(n, k);
+            let rebuilt = match classify(w) {
+                TwiddleKind::One => twiddle(1, 0),
+                TwiddleKind::MinusOne => twiddle(2, 1),
+                TwiddleKind::MinusJ => twiddle(4, 1),
+                TwiddleKind::PlusJ => twiddle(4, 3),
+                TwiddleKind::EqualCoeff { mag, re_neg, im_neg } => {
+                    egpu_fft::fft::Cpx::new(
+                        if re_neg { -mag } else { mag },
+                        if im_neg { -mag } else { mag },
+                    )
+                }
+                TwiddleKind::Full(v) => v,
+            };
+            assert!(
+                (rebuilt - w).abs() < 1e-9,
+                "n={n} k={k}: {w:?} vs {rebuilt:?}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: cycle accounting is deterministic and data-independent —
+/// two random inputs give identical profiles for any variant.
+#[test]
+fn profiles_data_independent_random() {
+    for case in 0..30u64 {
+        let variant = Variant::ALL6[(case % 6) as usize];
+        let radix = [4usize, 8, 16][(case % 3) as usize];
+        let points = 256;
+        if variant.vm {
+            let c = SmConfig::for_radix(variant, radix);
+            let plan = FftPlan::new(points, radix, c.threads).unwrap();
+            if !plan.passes.iter().any(|p| p.vm_eligible) {
+                continue;
+            }
+        }
+        let c = SmConfig::for_radix(variant, radix);
+        let (p1, _) = egpu_fft::fft::validate(&c, points, radix, case).unwrap();
+        let (p2, _) = egpu_fft::fft::validate(&c, points, radix, case + 1000).unwrap();
+        assert_eq!(p1.cycles, p2.cycles, "case {case}");
+    }
+}

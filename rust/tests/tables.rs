@@ -1,0 +1,176 @@
+//! Table regression: our regenerated Tables 1–6 against the paper's
+//! published cells — exact where the architecture fully determines the
+//! count (loads/stores), bounded deltas where the paper's hand-written
+//! assembly differs from our generated code (see EXPERIMENTS.md).
+
+use egpu_fft::arch::Variant;
+use egpu_fft::isa::OpClass;
+use egpu_fft::profile::Profile;
+use egpu_fft::report::{self, ProfileTable};
+
+fn cell<'t>(t: &'t ProfileTable, points: usize, variant_idx: usize) -> &'t Profile {
+    t.rows
+        .iter()
+        .find(|(p, _)| *p == points)
+        .unwrap()
+        .1[variant_idx]
+        .as_ref()
+        .unwrap()
+}
+
+fn within(pct: f64, got: f64, paper: f64, what: &str) {
+    let delta = 100.0 * (got - paper).abs() / paper;
+    assert!(delta <= pct, "{what}: got {got}, paper {paper} ({delta:.1}% off)");
+}
+
+/// Table 1 (radix-4): loads/stores exact; totals/time/efficiency within
+/// 12 % (our generated FP streams are slightly leaner than the paper's
+/// hand assembly).
+#[test]
+fn table1_against_paper() {
+    let t = report::profile_table_for(4, &[4096, 1024, 256]).unwrap();
+    // -- exact memory-system counts, 4096 points --
+    let dp = cell(&t, 4096, 0);
+    assert_eq!(dp.get(OpClass::Load), 19968);
+    assert_eq!(dp.get(OpClass::Store), 49152);
+    let vm = cell(&t, 4096, 1);
+    assert_eq!(vm.get(OpClass::Store), 16384);
+    assert_eq!(vm.get(OpClass::StoreVm), 8192);
+    let qp = cell(&t, 4096, 4);
+    assert_eq!(qp.get(OpClass::Store), 24576);
+    // -- bounded metric deltas --
+    within(12.0, dp.total() as f64, 86817.0, "T1 DP total");
+    within(12.0, dp.time_us(), 112.60, "T1 DP time");
+    within(12.0, dp.efficiency_pct(), 15.48, "T1 DP efficiency");
+    within(12.0, cell(&t, 4096, 3).efficiency_pct(), 22.64, "T1 VM+C efficiency");
+    // 1024 points
+    let dp1k = cell(&t, 1024, 0);
+    assert_eq!(dp1k.get(OpClass::Load), 4096);
+    assert_eq!(dp1k.get(OpClass::Store), 10240);
+    within(12.0, dp1k.time_us(), 23.40, "T1 1024 DP time");
+    // 256 points: NOPs present in DP, fewer after the complex variant
+    let dp256 = cell(&t, 256, 0);
+    assert!(dp256.get(OpClass::Nop) > 0);
+    assert_eq!(dp256.get(OpClass::Store), 2048);
+}
+
+/// Table 2 (radix-8): loads exact (the §6 twiddle-arithmetic check),
+/// FP within 6 % (Table 4's recipe, minus the folded moves).
+#[test]
+fn table2_against_paper() {
+    let t = report::profile_table_for(8, &[4096, 512]).unwrap();
+    let dp = cell(&t, 4096, 0);
+    assert_eq!(dp.get(OpClass::Load), 13568); // paper: 13568 exactly
+    assert_eq!(dp.get(OpClass::Store), 32768);
+    within(6.0, dp.get(OpClass::Fp) as f64, 11840.0, "T2 FP");
+    within(10.0, dp.total() as f64, 61896.0, "T2 DP total");
+    within(10.0, dp.efficiency_pct(), 19.13, "T2 DP efficiency");
+    let vm = cell(&t, 4096, 1);
+    assert_eq!(vm.get(OpClass::StoreVm), 4096);
+    assert_eq!(vm.get(OpClass::Store), 16384);
+    within(10.0, vm.efficiency_pct(), 23.87, "T2 VM efficiency");
+    // complex column: complex-FU op count exact (3 passes × 7 × 3 × 32)
+    let cx = cell(&t, 4096, 2);
+    assert_eq!(cx.get(OpClass::Complex), 2016 + 2); // +2: coeff_en/dis
+    within(10.0, cx.get(OpClass::Fp) as f64, 7808.0, "T2 complex FP");
+}
+
+/// Table 3 (radix-16): loads exact; the paper's 4096 VM/QP store cells
+/// appear swapped (see EXPERIMENTS.md) — our model gives VM 16384+2048
+/// and QP 12288, the consistent assignment.
+#[test]
+fn table3_against_paper() {
+    let t = report::profile_table_for(16, &[4096, 1024]).unwrap();
+    let dp = cell(&t, 4096, 0);
+    assert_eq!(dp.get(OpClass::Load), 9984); // paper: 9984 exactly
+    assert_eq!(dp.get(OpClass::Store), 24576);
+    let vm = cell(&t, 4096, 1);
+    assert_eq!(vm.get(OpClass::StoreVm), 2048); // paper: 2048
+    assert_eq!(vm.get(OpClass::Store), 16384); // paper QP cell (swap)
+    let qp = cell(&t, 4096, 4);
+    assert_eq!(qp.get(OpClass::Store), 12288); // paper VM cell (swap)
+    within(12.0, dp.efficiency_pct(), 25.18, "T3 DP efficiency");
+    // 1024 mixed radix: paper 4096 + 512
+    let vm1k = cell(&t, 1024, 1);
+    assert_eq!(vm1k.get(OpClass::Store), 4096);
+    assert_eq!(vm1k.get(OpClass::StoreVm), 512);
+    within(12.0, cell(&t, 1024, 0).time_us(), 15.51, "T3 1024 DP time");
+}
+
+/// Table 5: the headline — IP core is ~6-7× faster raw but only ~3×
+/// after footprint normalization at 4096 points.
+#[test]
+fn table5_against_paper() {
+    let rows = report::table5().unwrap();
+    let r4096 = rows.iter().find(|r| r.points == 4096).unwrap();
+    assert!((4.0..=9.0).contains(&r4096.perf_ratio), "{}", r4096.perf_ratio);
+    assert!(
+        (2.0..=4.0).contains(&r4096.normalized_ratio),
+        "normalized {}",
+        r4096.normalized_ratio
+    );
+    let r256 = rows.iter().find(|r| r.points == 256).unwrap();
+    assert!((4.0..=8.0).contains(&r256.perf_ratio));
+    // IP resources are the paper's exact figures
+    assert_eq!(r256.ip.alm, 12842);
+    assert_eq!(r4096.ip.m20k, 126);
+}
+
+/// Table 6: the eGPU matches or beats the A100's published cuFFT
+/// efficiency at every size, and clearly beats the V100 (§8).
+#[test]
+fn table6_against_paper() {
+    let rows = report::table6().unwrap();
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert!(
+            r.egpu_eff_pct >= r.a100_published - 2.0,
+            "{}: egpu {:.1} vs A100 {:.1}",
+            r.points,
+            r.egpu_eff_pct,
+            r.a100_published
+        );
+        assert!(r.egpu_eff_pct > r.v100_published + 3.0);
+        // the roofline model reproduces the published GPU numbers
+        assert!((r.a100_modeled - r.a100_published).abs() < 2.0);
+        assert!((r.v100_modeled - r.v100_published).abs() < 2.0);
+    }
+    // efficiency rises with size (paper: 25/27/36; ours: ~23/28/34)
+    assert!(rows[0].egpu_eff_pct < rows[1].egpu_eff_pct);
+    assert!(rows[1].egpu_eff_pct < rows[2].egpu_eff_pct);
+}
+
+/// Figure 2 regression: the exact indexes printed in the paper.
+#[test]
+fn figure2_against_paper() {
+    let fig = report::figure2(32, 3).unwrap();
+    // Pass 1 row 2 starts i064 i065 i066 ...
+    assert!(fig.contains("i064\ti065\ti066"));
+    // Pass 3 T0 = 0,4,8,12 -> rows contain i000/i004/i008/i012 columns
+    assert!(fig.contains("i012"));
+}
+
+/// Figure 4 regression: ~2× footprint, both cores in the 1–4 % device
+/// range (§8: "both ... occupy in the range of 1%-2% of the FPGA").
+#[test]
+fn figure4_against_paper() {
+    let fig = report::figure4();
+    let ratio: f64 = fig
+        .split("ratio ")
+        .nth(1)
+        .unwrap()
+        .split('x')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((1.8..=2.2).contains(&ratio), "ratio {ratio}");
+}
+
+/// The six variants' resource table (§6 prose).
+#[test]
+fn resources_against_paper() {
+    let dp = Variant::DP.resources();
+    assert_eq!((dp.alm, dp.m20k, dp.dsp), (8801, 192, 32));
+    assert_eq!(Variant::QP.resources().m20k, 96); // "about half"
+}
