@@ -1,15 +1,17 @@
 //! END-TO-END driver: the full three-layer system on a real workload.
 //!
-//! Proves all layers compose: the L2/L1 JAX+Pallas FFT was AOT-lowered
-//! to `artifacts/fft{N}.hlo.txt` (`make artifacts`), the L3 rust
-//! coordinator loads it through PJRT, serves a batched mixed-size
-//! request stream across a pool of workers, and cross-validates the
-//! fast path against the cycle-accurate eGPU simulation — reporting
-//! latency, throughput, simulated eGPU time and aggregate efficiency
-//! (the paper's headline metric).
+//! Proves all layers compose: the L3 rust coordinator serves a batched
+//! mixed-size request stream across a pool of workers from one shared
+//! plan cache; when the AOT artifacts exist (`make artifacts`) the
+//! L2/L1 JAX+Pallas FFT additionally serves the PJRT fast path and is
+//! cross-validated against the cycle-accurate eGPU simulation —
+//! reporting latency, throughput, batch occupancy, plan-cache hit rate,
+//! simulated eGPU time and aggregate efficiency (the paper's headline
+//! metric).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example fft_service
+//! cargo run --release --example fft_service          # simulator phases
+//! make artifacts && cargo run --release --example fft_service  # + PJRT
 //! ```
 
 use std::time::Instant;
@@ -37,18 +39,83 @@ fn workload(total: usize) -> Vec<Vec<(f32, f32)>> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let have_artifacts = std::path::Path::new("artifacts/fft256.hlo.txt").exists();
-    if !have_artifacts {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(2);
+    // ---- phase 1: batched dispatch through the shared plan cache ----
+    let svc = FftService::start(ServiceConfig {
+        cores: 4,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })?;
+    let n_requests = 128;
+    // warm-up batch: pays the one-time program generation per size
+    svc.submit_batch(workload(8))?;
+    let inputs = workload(n_requests);
+    let expect: Vec<usize> = inputs.iter().map(Vec::len).collect();
+    let t0 = Instant::now();
+    let results = svc.submit_batch(inputs)?;
+    let wall = t0.elapsed();
+    for (r, n) in results.iter().zip(&expect) {
+        assert_eq!(r.output.len(), *n);
+    }
+    let m = svc.metrics();
+    println!("== batched dispatch (simulator backend, shared plan cache) ==");
+    println!(
+        "  {} mixed-size requests in {:.1} ms -> {:.0} req/s",
+        n_requests,
+        wall.as_secs_f64() * 1e3,
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  plan cache: hit rate {:.3} ({} builds for {} lookups); \
+         batch occupancy mean {:.1}, max {}",
+        m.plan_cache.hit_rate(),
+        m.plan_cache.misses,
+        m.plan_cache.lookups(),
+        m.mean_batch_occupancy(),
+        m.max_batch_jobs
+    );
+    print!("{}", m.render());
+    svc.shutdown();
+
+    // ---- phase 2: scale-out over simulated cores ----
+    println!("\n== scale-out: simulated eGPU cores (paper §8: 'instantiate many') ==");
+    for cores in [1usize, 2, 4, 8] {
+        let svc = FftService::start(ServiceConfig {
+            cores,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })?;
+        let t0 = Instant::now();
+        svc.run_batch((0..64).map(|i| signal(1024, i)).collect())?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {cores} core(s): 64 fft1024 jobs in {:>7.1} ms ({:>6.0} job/s)",
+            wall * 1e3,
+            64.0 / wall
+        );
+        svc.shutdown();
     }
 
-    // ---- phase 1: PJRT fast path (the serving configuration) ----
-    let svc = FftService::start(ServiceConfig {
+    // ---- PJRT phases need the AOT artifacts and the pjrt feature ----
+    let have_artifacts = std::path::Path::new("artifacts/fft256.hlo.txt").exists();
+    if !have_artifacts {
+        println!("\nartifacts/ missing — PJRT phases skipped (run `make artifacts`)");
+        println!("\nE2E OK (simulator phases)");
+        return Ok(());
+    }
+
+    // ---- phase 3: PJRT fast path (the serving configuration) ----
+    let svc = match FftService::start(ServiceConfig {
         cores: 4,
         backend: Backend::Pjrt,
         ..Default::default()
-    })?;
+    }) {
+        Ok(svc) => svc,
+        Err(e) => {
+            println!("\nPJRT unavailable ({e}) — phases skipped");
+            println!("\nE2E OK (simulator phases)");
+            return Ok(());
+        }
+    };
     // warm up: compile the three artifact sizes once (the paid-once
     // startup cost; EXPERIMENTS.md §Perf) so the measurement below is
     // steady-state serving
@@ -63,7 +130,7 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(r.output.len(), *n);
     }
     let m = svc.metrics();
-    println!("== PJRT fast path ==");
+    println!("\n== PJRT fast path ==");
     println!(
         "  {} mixed-size requests in {:.1} ms -> {:.0} req/s",
         n_requests,
@@ -78,7 +145,7 @@ fn main() -> anyhow::Result<()> {
     print!("{}", m.render());
     svc.shutdown();
 
-    // ---- phase 2: cross-validated run (sim numerics == PJRT) ----
+    // ---- phase 4: cross-validated run (sim numerics == PJRT) ----
     let svc = FftService::start(ServiceConfig {
         cores: 4,
         backend: Backend::Validate,
@@ -108,21 +175,6 @@ fn main() -> anyhow::Result<()> {
     );
     svc.shutdown();
 
-    // ---- phase 3: scale-out over simulated cores ----
-    println!("\n== scale-out: simulated eGPU cores (paper §8: 'instantiate many') ==");
-    for cores in [1usize, 2, 4, 8] {
-        let svc = FftService::start(ServiceConfig {
-            cores,
-            backend: Backend::Simulator,
-            ..Default::default()
-        })?;
-        let t0 = Instant::now();
-        svc.run_batch((0..64).map(|i| signal(1024, i)).collect())?;
-        let wall = t0.elapsed().as_secs_f64();
-        println!("  {cores} core(s): 64 fft1024 jobs in {:>7.1} ms ({:>6.0} job/s)",
-            wall * 1e3, 64.0 / wall);
-        svc.shutdown();
-    }
     println!("\nE2E OK");
     Ok(())
 }

@@ -7,7 +7,13 @@ operations (stage_ref computes via complex64, so tolerance is 1 ulp-ish).
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is not in the offline image; fall back to a fixed sweep
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 import jax.numpy as jnp
 
@@ -46,14 +52,23 @@ def test_stage_matches_ref_paper_shapes(g, s):
     run_stage(g, s, seed=g * 10007 + s)
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    log_g=st.integers(min_value=0, max_value=6),
-    log_s=st.integers(min_value=0, max_value=8),
-    seed=st.integers(min_value=0, max_value=2**32 - 1),
-)
-def test_stage_matches_ref_hypothesis(log_g, log_s, seed):
-    run_stage(2**log_g, 2**log_s, seed)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        log_g=st.integers(min_value=0, max_value=6),
+        log_s=st.integers(min_value=0, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_stage_matches_ref_hypothesis(log_g, log_s, seed):
+        run_stage(2**log_g, 2**log_s, seed)
+
+else:  # deterministic stand-in covering the same (G, S) shape space
+
+    @pytest.mark.parametrize("log_g", [0, 2, 4, 6])
+    @pytest.mark.parametrize("log_s", [0, 3, 6, 8])
+    def test_stage_matches_ref_sweep(log_g, log_s):
+        run_stage(2**log_g, 2**log_s, seed=log_g * 1009 + log_s)
 
 
 def test_stage_impulse():

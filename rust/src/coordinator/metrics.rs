@@ -1,9 +1,11 @@
 //! Service metrics: throughput, latency distribution, simulated
-//! (virtual) eGPU time and aggregate efficiency.
+//! (virtual) eGPU time, aggregate efficiency, batched-dispatch
+//! occupancy and shared plan-cache counters.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::fft::cache::CacheStats;
 use crate::profile::Profile;
 
 /// Latency histogram bucket upper bounds, µs (log-spaced).
@@ -27,6 +29,12 @@ struct Inner {
     virtual_us: f64,
     /// Accumulated cycle profile across all simulated jobs.
     profile: Profile,
+    /// Coalesced batches served through `submit_batch`.
+    batches: u64,
+    /// Jobs served inside those batches.
+    batched_jobs: u64,
+    /// Largest batch seen.
+    max_batch_jobs: u64,
 }
 
 impl Metrics {
@@ -48,6 +56,15 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record one completed coalesced batch of `jobs` requests (each
+    /// job is additionally observed individually for latency/profile).
+    pub fn observe_batch(&self, jobs: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_jobs += jobs as u64;
+        m.max_batch_jobs = m.max_batch_jobs.max(jobs as u64);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -59,6 +76,10 @@ impl Metrics {
             latency_hist: m.latency_hist,
             virtual_us: m.virtual_us,
             aggregate_profile: m.profile,
+            batches: m.batches,
+            batched_jobs: m.batched_jobs,
+            max_batch_jobs: m.max_batch_jobs,
+            plan_cache: CacheStats::default(),
         }
     }
 }
@@ -73,9 +94,27 @@ pub struct MetricsSnapshot {
     pub latency_hist: [u64; 8],
     pub virtual_us: f64,
     pub aggregate_profile: Profile,
+    /// Coalesced batches served through `submit_batch`.
+    pub batches: u64,
+    /// Jobs served inside those batches (`served` counts them too).
+    pub batched_jobs: u64,
+    /// Largest coalesced batch seen.
+    pub max_batch_jobs: u64,
+    /// Shared plan-cache counters (filled in by `FftService::metrics`;
+    /// `Metrics::snapshot` alone reports zeros).
+    pub plan_cache: CacheStats,
 }
 
 impl MetricsSnapshot {
+    /// Mean jobs per coalesced batch — the per-batch occupancy.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_jobs as f64 / self.batches as f64
+        }
+    }
+
     /// Approximate latency percentile from the histogram.
     pub fn latency_percentile_us(&self, q: f64) -> f64 {
         let total: u64 = self.latency_hist.iter().sum();
@@ -118,6 +157,26 @@ impl MetricsSnapshot {
                 "  simulated eGPU time: {:.1}us, aggregate efficiency {:.2}%\n",
                 self.virtual_us,
                 self.efficiency_pct()
+            ));
+        }
+        if self.batches > 0 {
+            s.push_str(&format!(
+                "  batches: {} ({} jobs, mean occupancy {:.1}, max {})\n",
+                self.batches,
+                self.batched_jobs,
+                self.mean_batch_occupancy(),
+                self.max_batch_jobs
+            ));
+        }
+        if self.plan_cache.lookups() > 0 {
+            s.push_str(&format!(
+                "  plan cache: {}/{} entries, hit rate {:.3} ({} hits / {} misses, {} evictions)\n",
+                self.plan_cache.entries,
+                self.plan_cache.capacity,
+                self.plan_cache.hit_rate(),
+                self.plan_cache.hits,
+                self.plan_cache.misses,
+                self.plan_cache.evictions
             ));
         }
         s
@@ -163,5 +222,26 @@ mod tests {
         let m = Metrics::default();
         m.observe(1024, 10.0, None);
         assert!(m.snapshot().render().contains("fft1024: 1 jobs"));
+    }
+
+    #[test]
+    fn batch_occupancy_accounting() {
+        let m = Metrics::default();
+        m.observe_batch(8);
+        m.observe_batch(4);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_jobs, 12);
+        assert_eq!(s.max_batch_jobs, 8);
+        assert!((s.mean_batch_occupancy() - 6.0).abs() < 1e-12);
+        assert!(s.render().contains("mean occupancy 6.0"));
+    }
+
+    #[test]
+    fn empty_snapshot_reports_zero_occupancy_and_cache() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_batch_occupancy(), 0.0);
+        assert_eq!(s.plan_cache.lookups(), 0);
+        assert_eq!(s.plan_cache.hit_rate(), 0.0);
     }
 }

@@ -1,0 +1,310 @@
+//! Shared FFT plan cache: one fully-generated program per design point.
+//!
+//! Generating an FFT program is the expensive part of serving a request
+//! — planning, code generation, list scheduling and twiddle-table
+//! synthesis cost ~0.5 ms for a 4096-point program, against a few µs of
+//! per-request data movement. The related bellman GPU FFT kernels
+//! precompute their `pq`/`omega` tables once per size and reuse them
+//! across rounds; [`PlanCache`] is the same idea for the coordinator: a
+//! process-wide memo of `(points, radix, variant) → Arc<FftProgram>`
+//! (program + schedule + twiddle image) behind a mutex, shared by every
+//! worker thread, with LRU eviction and hit/miss/eviction counters that
+//! surface in the service metrics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::codegen::{generate, FftProgram};
+use super::plan::PlanError;
+use crate::arch::{SmConfig, Variant};
+
+/// Default number of resident design points (far above the paper's
+/// 8-size × 4-radix sweep touching a handful of sizes at a time).
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 16;
+
+/// Cache key: one scheduled program per design point. Besides the
+/// `(points, radix, variant)` triple, the key covers every `SmConfig`
+/// field code generation reads (launch geometry, memory size, register
+/// budget, scheduler pipeline depth), so a custom configuration can
+/// never be handed a program generated under a different one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub points: usize,
+    pub radix: usize,
+    pub variant: Variant,
+    pub threads: usize,
+    pub smem_words: usize,
+    pub regs_per_thread: usize,
+    pub pipeline_depth: usize,
+}
+
+impl PlanKey {
+    pub fn for_config(cfg: &SmConfig, points: usize, radix: usize) -> Self {
+        PlanKey {
+            points,
+            radix,
+            variant: cfg.variant,
+            threads: cfg.threads,
+            smem_words: cfg.smem_words,
+            regs_per_thread: cfg.regs_per_thread,
+            pipeline_depth: cfg.pipeline_depth,
+        }
+    }
+}
+
+/// Counter snapshot, exposed through `MetricsSnapshot::plan_cache`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Total lookups (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+struct Slot {
+    program: Arc<FftProgram>,
+    /// Logical timestamp of the last lookup that returned this slot.
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<PlanKey, Slot>,
+    tick: u64,
+}
+
+/// Thread-safe LRU memo of generated FFT programs.
+///
+/// Programs are built *outside* the lock (other design points stay
+/// servable during a ~ms generation) with a double-checked insert, so
+/// concurrent first requests for the same key may generate twice; the
+/// first insert wins and the duplicate is dropped.
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` design points (clamped to 1).
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.inner.lock().unwrap().map.contains_key(key)
+    }
+
+    /// Fetch the shared program for one design point, generating (and
+    /// scheduling) it on a miss. Failed generations cache nothing.
+    pub fn get_or_build(
+        &self,
+        cfg: &SmConfig,
+        points: usize,
+        radix: usize,
+    ) -> Result<Arc<FftProgram>, PlanError> {
+        let key = PlanKey::for_config(cfg, points, radix);
+        if let Some(program) = self.lookup(&key) {
+            return Ok(program);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(generate(cfg, points, radix)?);
+        Ok(self.insert(key, built))
+    }
+
+    fn lookup(&self, key: &PlanKey) -> Option<Arc<FftProgram>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner.map.get_mut(key)?;
+        slot.last_used = tick;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::clone(&slot.program))
+    }
+
+    /// Insert (or adopt a concurrently-inserted duplicate of) `program`,
+    /// evicting the least-recently-used entry when over capacity.
+    fn insert(&self, key: PlanKey, program: Arc<FftProgram>) -> Arc<FftProgram> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(slot) = inner.map.get_mut(&key) {
+            // another worker built the same plan first: share theirs
+            slot.last_used = tick;
+            return Arc::clone(&slot.program);
+        }
+        inner.map.insert(key, Slot { program: Arc::clone(&program), last_used: tick });
+        while inner.map.len() > self.capacity {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| *k)
+                .expect("over-capacity cache is non-empty");
+            inner.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        program
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(radix: usize) -> SmConfig {
+        SmConfig::for_radix(Variant::DP, radix)
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let cache = PlanCache::new(4);
+        let c = cfg(4);
+        let a = cache.get_or_build(&c, 256, 4).unwrap();
+        let b = cache.get_or_build(&c, 256, 4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the first program");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.lookups(), 2);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_design_points_get_distinct_programs() {
+        let cache = PlanCache::new(8);
+        let p4 = cache.get_or_build(&cfg(4), 256, 4).unwrap();
+        let p16 = cache.get_or_build(&cfg(16), 256, 16).unwrap();
+        let vmc = SmConfig::for_radix(Variant::DP_VM_COMPLEX, 4);
+        let pv = cache.get_or_build(&vmc, 256, 4).unwrap();
+        assert!(!Arc::ptr_eq(&p4, &p16));
+        assert!(!Arc::ptr_eq(&p4, &pv), "variant is part of the key");
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    /// A custom launch geometry must never be served a program that was
+    /// generated under a different SmConfig for the same triple.
+    #[test]
+    fn custom_launch_geometry_is_a_distinct_key() {
+        let cache = PlanCache::new(8);
+        let stock = cfg(4); // threads = 1024
+        let narrow = SmConfig { threads: 64, ..stock };
+        let a = cache.get_or_build(&stock, 1024, 4).unwrap();
+        let b = cache.get_or_build(&narrow, 1024, 4).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(a.plan.threads, 256); // min(1024/4, 1024)
+        assert_eq!(b.plan.threads, 64);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cache = PlanCache::new(2);
+        let c = cfg(4);
+        cache.get_or_build(&c, 256, 4).unwrap(); // A
+        cache.get_or_build(&c, 1024, 4).unwrap(); // B
+        cache.get_or_build(&c, 256, 4).unwrap(); // touch A -> B is LRU
+        cache.get_or_build(&c, 4096, 4).unwrap(); // C evicts B
+        assert!(cache.contains(&PlanKey::for_config(&c, 256, 4)));
+        assert!(!cache.contains(&PlanKey::for_config(&c, 1024, 4)));
+        assert!(cache.contains(&PlanKey::for_config(&c, 4096, 4)));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        // the evicted size rebuilds on next access (a fresh miss)
+        cache.get_or_build(&c, 1024, 4).unwrap();
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn plan_errors_propagate_and_cache_nothing() {
+        let cache = PlanCache::new(2);
+        assert!(cache.get_or_build(&cfg(4), 100, 4).is_err());
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let cache = PlanCache::new(0);
+        assert_eq!(cache.capacity(), 1);
+        let c = cfg(4);
+        cache.get_or_build(&c, 256, 4).unwrap();
+        cache.get_or_build(&c, 1024, 4).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn concurrent_access_shares_one_program() {
+        let cache = Arc::new(PlanCache::new(4));
+        let c = cfg(4);
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let cache = Arc::clone(&cache);
+            joins.push(std::thread::spawn(move || cache.get_or_build(&c, 256, 4).unwrap()));
+        }
+        let programs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        for p in &programs[1..] {
+            assert!(Arc::ptr_eq(&programs[0], p));
+        }
+        assert_eq!(cache.len(), 1);
+        let s = cache.stats();
+        assert_eq!(s.lookups(), 4);
+        assert!(s.misses >= 1, "at least the first access generates");
+    }
+}

@@ -18,6 +18,8 @@
 //!   trivial rotations and kernel-internal reordering (Table 4 lists
 //!   those moves; ours fold into addressing — noted in EXPERIMENTS.md).
 
+use std::sync::Arc;
+
 use super::plan::{FftPlan, Layout, Pass, PlanError};
 use super::twiddle::{classify, twiddle, TwiddleKind};
 use crate::arch::{SmConfig, Variant};
@@ -32,8 +34,9 @@ pub struct FftProgram {
     pub variant: Variant,
     /// Precomputed twiddle-table memory image: (base word address,
     /// words). Computed once at generate time so the serving path never
-    /// re-evaluates sin/cos (§Perf).
-    pub twiddle_image: Vec<(usize, Vec<u32>)>,
+    /// re-evaluates sin/cos (§Perf); each table sits behind an `Arc` so
+    /// cloning a program shares the images instead of copying them.
+    pub twiddle_image: Vec<(usize, Arc<[u32]>)>,
 }
 
 /// Generate the FFT program for one design point under `cfg`.
@@ -80,7 +83,7 @@ pub fn generate_batched(
     })
 }
 
-fn twiddle_image_for(plan: &FftPlan, layout: &Layout) -> Vec<(usize, Vec<u32>)> {
+fn twiddle_image_for(plan: &FftPlan, layout: &Layout) -> Vec<(usize, Arc<[u32]>)> {
     plan.passes
         .iter()
         .zip(&layout.twiddle_bases)
@@ -90,7 +93,7 @@ fn twiddle_image_for(plan: &FftPlan, layout: &Layout) -> Vec<(usize, Vec<u32>)> 
                     .into_iter()
                     .flat_map(|(re, im)| [re.to_bits(), im.to_bits()])
                     .collect();
-                (b, words)
+                (b, words.into())
             })
         })
         .collect()

@@ -1,12 +1,16 @@
 //! FFT programs for the eGPU: planning, code generation, execution and
-//! validation against reference transforms.
+//! validation against reference transforms, plus the shared
+//! [`cache::PlanCache`] that memoizes generated programs (program +
+//! schedule + twiddle image) across the serving workers.
 
+pub mod cache;
 pub mod codegen;
 pub mod plan;
 pub mod reference;
 pub mod sched;
 pub mod twiddle;
 
+pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use codegen::{generate, generate_batched, generate_opt, FftProgram};
 pub use plan::{FftPlan, Layout, Pass, PlanError};
 pub use twiddle::Cpx;

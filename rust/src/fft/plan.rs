@@ -10,6 +10,8 @@
 //! radix-16 FFT is 16·16·4, with the radix-4 pass run as four blocks
 //! reusing the radix-16 thread initialization).
 
+use std::sync::Arc;
+
 use thiserror::Error;
 
 #[derive(Debug, Error, PartialEq)]
@@ -65,12 +67,16 @@ impl Pass {
 }
 
 /// A complete FFT plan for one (points, radix) design point.
+///
+/// The pass list sits behind an `Arc` so a plan (and therefore an
+/// [`super::FftProgram`]) clones in O(1): the shared plan cache and
+/// every per-core executor hold the same pass array.
 #[derive(Clone, Debug)]
 pub struct FftPlan {
     pub points: usize,
     /// Nominal radix of the design point (the paper's table row).
     pub radix: usize,
-    pub passes: Vec<Pass>,
+    pub passes: Arc<[Pass]>,
     /// Threads launched (= kernels of the first pass, the paper's
     /// "thread initialization", capped at the SM capacity).
     pub threads: usize,
@@ -129,10 +135,11 @@ impl FftPlan {
         // congruent (mod 4) with the SP that wrote it in pass p. The
         // final pass always stores coherently (host readback).
         for p in 0..n_passes - 1 {
-            passes[p].vm_eligible = vm_check(points, threads, &passes[p], &passes[p + 1]);
+            let eligible = vm_check(points, threads, &passes[p], &passes[p + 1]);
+            passes[p].vm_eligible = eligible;
         }
 
-        Ok(FftPlan { points, radix, passes, threads })
+        Ok(FftPlan { points, radix, passes: passes.into(), threads })
     }
 
     /// Natural (frequency-domain) index of in-place position `i` after
@@ -382,6 +389,14 @@ mod tests {
         let plan = FftPlan::new(4096, 4, 1024).unwrap();
         let layout = Layout::new(&plan, smem).unwrap();
         assert_eq!(layout.words_used, 16376);
+    }
+
+    /// Plans clone in O(1): the pass array is shared, not copied.
+    #[test]
+    fn plans_share_passes_on_clone() {
+        let plan = FftPlan::new(1024, 4, 1024).unwrap();
+        let clone = plan.clone();
+        assert!(Arc::ptr_eq(&plan.passes, &clone.passes));
     }
 
     #[test]

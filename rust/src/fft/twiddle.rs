@@ -227,9 +227,9 @@ mod tests {
     fn pass_table_layout() {
         let t = pass_table(4, 4); // radix-4, stride 4, L = 16
         assert_eq!(t.len(), 4 * 3);
-        // r=1, m=2 -> W_16^2 at index 1*(radix-1) + (2-1)
+        // r=1, m=2 -> W_16^2 at index r*(radix-1) + (m-1) = 1*3 + 1
         let w = twiddle(16, 2).to_f32_pair();
-        assert_eq!(t[1 * 3 + 1], w);
+        assert_eq!(t[4], w);
         // r=0 row is all ones
         assert_eq!(t[0], (1.0, 0.0));
         assert_eq!(t[1], (1.0, 0.0));

@@ -12,7 +12,10 @@
 //!   (banked shared memory with true `save_bank` staleness, coefficient
 //!   cache, hazard model);
 //! * [`fft`] — FFT program generators for radices 2/4/8/16 and sizes
-//!   256–4096, plus a reference transform;
+//!   256–4096, a reference transform, and the shared
+//!   [`fft::cache::PlanCache`] memoizing generated programs
+//!   (plan + schedule + twiddle image) behind `Arc`s with LRU eviction
+//!   and hit/miss counters;
 //! * [`profile`] / [`report`] — the paper's per-op-class accounting and
 //!   the renderers for Tables 1–6 and Figures 2/4;
 //! * [`ipcore`] — the streaming FFT IP-core comparison model (Table 5);
@@ -20,8 +23,18 @@
 //! * [`floorplan`] — footprint-normalized cost comparison (Figure 4);
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX FFT
 //!   artifacts (the numerical oracle on the request path);
-//! * [`coordinator`] — an async FFT service scheduling jobs over a pool
-//!   of simulated eGPU cores and the PJRT fast path.
+//! * [`coordinator`] — an FFT service scheduling jobs over a pool of
+//!   simulated eGPU cores and the PJRT fast path. Requests go through
+//!   `submit` (one job, one queue hop) or `submit_batch` (same-size
+//!   requests coalesced onto one worker, amortizing the plan-cache
+//!   lookup, the resident SM and the queue traffic across the batch);
+//!   `MetricsSnapshot` reports latency, batch occupancy and the
+//!   plan-cache hit rate.
+//!
+//! The PJRT fast path compiles only with the `pjrt` cargo feature
+//! (it binds the vendored `xla` crate); the default build substitutes
+//! a stub whose server spawn fails gracefully, so the simulator
+//! backend works in any environment.
 
 pub mod apps;
 pub mod arch;

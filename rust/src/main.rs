@@ -33,8 +33,10 @@ USAGE:
   egpu-fft reduce [--n N] [--variant V]
                                      sum-reduction workload (§4)
   egpu-fft serve [--cores K] [--requests N] [--points P]
-                 [--backend sim|pjrt|validate]
+                 [--backend sim|pjrt|validate] [--batched]
                                      run the FFT service demo
+                                     (--batched: coalesced submit_batch
+                                      dispatch through the plan cache)
   egpu-fft help
 
 Variants: DP, DP-VM, DP-Complex, DP-VM-Complex, QP, QP-Complex";
@@ -206,12 +208,18 @@ fn run() -> Result<()> {
                         .collect()
                 })
                 .collect();
+            let batched = f.contains_key("batched");
             let t0 = std::time::Instant::now();
-            let results = svc.run_batch(inputs)?;
+            let results = if batched {
+                svc.submit_batch(inputs)?
+            } else {
+                svc.run_batch(inputs)?
+            };
             let wall = t0.elapsed();
             println!(
-                "served {} fft{points} requests on {cores} cores in {:.1} ms ({:.0} req/s)",
+                "served {} fft{points} requests ({}) on {cores} cores in {:.1} ms ({:.0} req/s)",
                 results.len(),
+                if batched { "batched dispatch" } else { "per-request dispatch" },
                 wall.as_secs_f64() * 1e3,
                 results.len() as f64 / wall.as_secs_f64()
             );

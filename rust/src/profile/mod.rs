@@ -87,8 +87,8 @@ impl Add for Profile {
 
 impl AddAssign for Profile {
     fn add_assign(&mut self, rhs: Profile) {
-        for i in 0..9 {
-            self.cycles[i] += rhs.cycles[i];
+        for (c, r) in self.cycles.iter_mut().zip(rhs.cycles.iter()) {
+            *c += r;
         }
         self.int_fp_work_cycles += rhs.int_fp_work_cycles;
         self.instructions += rhs.instructions;

@@ -1,0 +1,110 @@
+//! Resident FFT executor: an SM bound to one prebuilt, shared program.
+//!
+//! The serving path creates one executor per (core, size) and pays the
+//! setup — SM allocation, thread-id seeding and the twiddle-table
+//! upload — exactly once; each request is then only a data fill, a run
+//! and a readback. The program arrives as an `Arc<FftProgram>` from the
+//! shared [`crate::fft::cache::PlanCache`], so no plan, schedule or
+//! twiddle table is ever rebuilt per call.
+
+use std::sync::Arc;
+
+use super::Sm;
+use crate::arch::SmConfig;
+use crate::fft::{self, FftError, FftProgram, FftRun};
+
+pub struct FftExecutor {
+    sm: Sm,
+    program: Arc<FftProgram>,
+}
+
+impl FftExecutor {
+    /// Bind `program` to a fresh SM: seed thread ids and upload the
+    /// precomputed twiddle image once.
+    pub fn new(cfg: SmConfig, program: Arc<FftProgram>) -> Result<Self, FftError> {
+        let mut sm = Sm::new(cfg);
+        sm.seed_thread_ids();
+        fft::load_twiddles(&mut sm, &program)?;
+        Ok(FftExecutor { sm, program })
+    }
+
+    /// The shared program this executor runs.
+    pub fn program(&self) -> &Arc<FftProgram> {
+        &self.program
+    }
+
+    /// Transform size handled per run.
+    pub fn points(&self) -> usize {
+        self.program.plan.points
+    }
+
+    /// Run one FFT: load the input, execute, read back natural order.
+    pub fn run(&mut self, input: &[(f32, f32)]) -> Result<FftRun, FftError> {
+        if input.len() != self.program.plan.points {
+            return Err(FftError::BadInput {
+                got: input.len(),
+                want: self.program.plan.points,
+            });
+        }
+        fft::load_data(&mut self.sm, &self.program, input)?;
+        let profile = self.sm.run(&self.program.program, self.program.plan.threads)?;
+        let output = fft::read_output(&self.sm, &self.program)?;
+        Ok(FftRun { output, profile })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Variant;
+    use crate::fft::reference;
+
+    fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+        reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+    }
+
+    /// The resident executor must be bit-for-bit the one-shot path: the
+    /// same program over the same data on a deterministic SM.
+    #[test]
+    fn executor_matches_one_shot_run_fft_bitwise() {
+        let cfg = SmConfig::for_radix(Variant::DP_VM_COMPLEX, 4);
+        let fp = Arc::new(fft::generate(&cfg, 256, 4).unwrap());
+        let mut ex = FftExecutor::new(cfg, Arc::clone(&fp)).unwrap();
+        for seed in 0..4u64 {
+            let input = signal(256, seed);
+            let resident = ex.run(&input).unwrap();
+            let oneshot = fft::run_fft(&fp, &cfg, &input).unwrap();
+            let a: Vec<(u32, u32)> =
+                resident.output.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect();
+            let b: Vec<(u32, u32)> =
+                oneshot.output.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect();
+            assert_eq!(a, b, "seed {seed}");
+            assert_eq!(resident.profile.total(), oneshot.profile.total());
+        }
+    }
+
+    /// Re-running the same input must be deterministic even though SM
+    /// register/memory state persists between runs.
+    #[test]
+    fn repeated_runs_are_deterministic() {
+        let cfg = SmConfig::for_radix(Variant::DP, 16);
+        let fp = Arc::new(fft::generate(&cfg, 1024, 16).unwrap());
+        let mut ex = FftExecutor::new(cfg, fp).unwrap();
+        let input = signal(1024, 42);
+        let first = ex.run(&input).unwrap();
+        let second = ex.run(&input).unwrap();
+        assert_eq!(first.output, second.output);
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let cfg = SmConfig::for_radix(Variant::DP, 4);
+        let fp = Arc::new(fft::generate(&cfg, 256, 4).unwrap());
+        let mut ex = FftExecutor::new(cfg, fp).unwrap();
+        assert_eq!(ex.points(), 256);
+        assert!(matches!(
+            ex.run(&signal(128, 0)),
+            Err(FftError::BadInput { got: 128, want: 256 })
+        ));
+    }
+}

@@ -18,7 +18,10 @@
 //! data, so a program's numerical output can be validated against an
 //! FFT oracle — including the stale-bank semantics of `save_bank`.
 
+pub mod exec;
 pub mod sharedmem;
+
+pub use exec::FftExecutor;
 
 use crate::arch::{SmConfig, Variant};
 use crate::isa::{Inst, OpClass, Program, Reg};

@@ -1,0 +1,177 @@
+//! Batched-dispatch integration tests: `submit_batch` vs sequential
+//! `submit` (bitwise identity and reference numerics), steady-state
+//! plan-cache behaviour, occupancy metrics, and LRU eviction through
+//! the running service.
+
+use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::fft::{self, reference};
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn service(cores: usize) -> FftService {
+    FftService::start(ServiceConfig {
+        cores,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+/// The acceptance property: a batch submission produces *bitwise* the
+/// same outputs as the same inputs submitted one at a time, and both
+/// match the reference transform.
+#[test]
+fn submit_batch_bitwise_identical_to_sequential_submits() {
+    let seeds: Vec<u64> = (0..8).map(|i| 1000 + i).collect();
+    let inputs: Vec<_> = seeds.iter().map(|&s| signal(256, s)).collect();
+
+    let svc = service(1);
+    let sequential: Vec<Vec<(f32, f32)>> = inputs
+        .iter()
+        .map(|input| svc.submit(input.clone()).recv().unwrap().unwrap().output)
+        .collect();
+    svc.shutdown();
+
+    let svc = service(1);
+    let batched = svc.submit_batch(inputs.clone()).unwrap();
+    svc.shutdown();
+
+    assert_eq!(batched.len(), sequential.len());
+    for ((b, seq), &seed) in batched.iter().zip(&sequential).zip(&seeds) {
+        assert_eq!(bits(&b.output), bits(seq), "seed {seed}");
+        // both paths must also be *correct*, not merely consistent
+        let got: Vec<fft::Cpx> = b
+            .output
+            .iter()
+            .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+            .collect();
+        let want = reference::fft(&reference::test_signal(256, seed));
+        let err = reference::rms_rel_error(&got, &want);
+        assert!(err < fft::F32_TOL, "seed {seed}: rms {err:e}");
+    }
+}
+
+/// Steady-state batch workload: one plan build, then every batch hits
+/// the shared cache — the acceptance bar is a hit rate above 0.9.
+#[test]
+fn plan_cache_hit_rate_exceeds_090_in_steady_state() {
+    let svc = service(1);
+    let rounds = 16u64;
+    for round in 0..rounds {
+        let inputs: Vec<_> = (0..8).map(|i| signal(1024, round * 8 + i)).collect();
+        let results = svc.submit_batch(inputs).unwrap();
+        assert_eq!(results.len(), 8);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.served, rounds * 8);
+    assert_eq!(m.batches, rounds);
+    assert_eq!(m.batched_jobs, rounds * 8);
+    assert_eq!(m.max_batch_jobs, 8);
+    assert!((m.mean_batch_occupancy() - 8.0).abs() < 1e-9);
+    assert_eq!(m.plan_cache.misses, 1, "one size on one core builds once");
+    assert!(
+        m.plan_cache.hit_rate() > 0.9,
+        "steady-state hit rate {:.3} (hits {} / misses {})",
+        m.plan_cache.hit_rate(),
+        m.plan_cache.hits,
+        m.plan_cache.misses
+    );
+    svc.shutdown();
+}
+
+/// A mixed-size batch is coalesced into one batch job per distinct
+/// size; results come back in submission order with monotonic ids.
+#[test]
+fn mixed_size_batch_preserves_order_and_coalesces_by_size() {
+    let svc = service(2);
+    let sizes = [256usize, 1024, 256, 4096, 1024, 256];
+    let inputs: Vec<_> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| signal(n, i as u64))
+        .collect();
+    let results = svc.submit_batch(inputs).unwrap();
+    assert_eq!(results.len(), sizes.len());
+    for (r, &n) in results.iter().zip(&sizes) {
+        assert_eq!(r.output.len(), n);
+        assert!(r.profile.is_some());
+    }
+    for w in results.windows(2) {
+        assert!(w[0].id < w[1].id, "ids follow submission order");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.served, 6);
+    assert_eq!(m.batches, 3, "one coalesced batch per distinct size");
+    assert_eq!(m.batched_jobs, 6);
+    assert_eq!(m.max_batch_jobs, 3, "three 256-point jobs share a batch");
+    svc.shutdown();
+}
+
+/// All jobs in a same-size batch share one worker core; the profile is
+/// reported per job exactly as in the sequential path.
+#[test]
+fn batch_runs_on_a_single_core() {
+    let svc = service(4);
+    let results = svc
+        .submit_batch((0..6).map(|i| signal(512, i)).collect())
+        .unwrap();
+    let cores: Vec<usize> = results.iter().map(|r| r.core).collect();
+    assert!(cores.iter().all(|&c| c == cores[0]), "cores {cores:?}");
+    svc.shutdown();
+}
+
+#[test]
+fn batch_with_bad_size_errors_without_killing_the_service() {
+    let svc = service(1);
+    assert!(svc.submit_batch(vec![signal(100, 0); 3]).is_err());
+    let m = svc.metrics();
+    assert_eq!(m.errors, 3, "per-job error granularity, as the sequential path");
+    assert_eq!(m.served, 0);
+    assert_eq!((m.batches, m.batched_jobs), (1, 3));
+    // the worker survives and keeps serving
+    let ok = svc.submit(signal(256, 1)).recv().unwrap();
+    assert!(ok.is_ok());
+    svc.shutdown();
+}
+
+#[test]
+fn empty_batch_is_a_no_op() {
+    let svc = service(1);
+    let results = svc.submit_batch(Vec::new()).unwrap();
+    assert!(results.is_empty());
+    let m = svc.metrics();
+    assert_eq!((m.served, m.batches), (0, 0));
+    svc.shutdown();
+}
+
+/// Cycling more sizes than the cache holds forces LRU eviction; the
+/// service keeps serving correct results while plans are rebuilt.
+#[test]
+fn plan_cache_lru_eviction_through_the_service() {
+    let svc = FftService::start(ServiceConfig {
+        cores: 1,
+        backend: Backend::Simulator,
+        plan_cache_capacity: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    for n in [256usize, 1024, 4096, 256, 1024, 4096] {
+        let results = svc.submit_batch(vec![signal(n, 0)]).unwrap();
+        assert_eq!(results[0].output.len(), n);
+    }
+    let pc = svc.metrics().plan_cache;
+    assert_eq!(pc.entries, 2);
+    assert_eq!(pc.capacity, 2);
+    assert_eq!(pc.misses, 6, "cycling 3 sizes through 2 slots rebuilds every time");
+    assert!(pc.evictions >= 4, "evictions {}", pc.evictions);
+    svc.shutdown();
+}
