@@ -16,7 +16,9 @@
 
 use std::time::Instant;
 
-use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::coordinator::{
+    Backend, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
+};
 use egpu_fft::fft::reference;
 
 fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
@@ -95,6 +97,34 @@ fn main() -> anyhow::Result<()> {
         svc.shutdown();
     }
 
+    // ---- phase 3: sharded scheduler (per-shard queues + stealing) ----
+    println!("\n== sharded scheduler: size-affinity + work stealing, shared plan cache ==");
+    for shards in [1usize, 2, 4, 8] {
+        let svc = ShardedFftService::start(ShardPoolConfig {
+            shards,
+            steal_threshold: 0, // steal on any backlog: maximum balance
+            service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+            ..Default::default()
+        })?;
+        // warm the shared plan cache and *every* shard's resident
+        // executor before timing (same 64-job shape as the measured
+        // batch, so it chunks across the whole pool)
+        svc.submit_batch((0..64).map(|i| signal(1024, i)).collect())?;
+        let t0 = Instant::now();
+        svc.submit_batch((0..64).map(|i| signal(1024, i)).collect())?;
+        let wall = t0.elapsed().as_secs_f64();
+        let m = svc.metrics();
+        println!(
+            "  {shards} shard(s): 64 fft1024 jobs in {:>7.1} ms ({:>6.0} job/s), \
+             steals {}, plan-cache hit rate {:.3}",
+            wall * 1e3,
+            64.0 / wall,
+            m.steals,
+            m.plan_cache.hit_rate()
+        );
+        svc.shutdown();
+    }
+
     // ---- PJRT phases need the AOT artifacts and the pjrt feature ----
     let have_artifacts = std::path::Path::new("artifacts/fft256.hlo.txt").exists();
     if !have_artifacts {
@@ -103,7 +133,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    // ---- phase 3: PJRT fast path (the serving configuration) ----
+    // ---- phase 4: PJRT fast path (the serving configuration) ----
     let svc = match FftService::start(ServiceConfig {
         cores: 4,
         backend: Backend::Pjrt,
@@ -145,7 +175,7 @@ fn main() -> anyhow::Result<()> {
     print!("{}", m.render());
     svc.shutdown();
 
-    // ---- phase 4: cross-validated run (sim numerics == PJRT) ----
+    // ---- phase 5: cross-validated run (sim numerics == PJRT) ----
     let svc = FftService::start(ServiceConfig {
         cores: 4,
         backend: Backend::Validate,

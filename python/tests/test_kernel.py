@@ -15,6 +15,12 @@ try:  # hypothesis is not in the offline image; fall back to a fixed sweep
 except ImportError:
     HAVE_HYPOTHESIS = False
 
+# Skip (not error) the whole module when the JAX/Pallas stack is absent
+# or broken: these are L1 kernel tests and meaningless without it.
+pytest.importorskip(
+    "jax", reason="JAX is required for the Pallas kernel tests", exc_type=ImportError
+)
+
 import jax.numpy as jnp
 
 from compile.kernels import fft_stage, ref

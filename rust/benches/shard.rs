@@ -1,0 +1,169 @@
+//! Bench: sharded-scheduler throughput scaling, 1/2/4/8 shards across
+//! FFT sizes 256–4096.
+//!
+//! Each configuration serves a homogeneous batch through
+//! `ShardedFftService::submit_batch` with the steal threshold at 0
+//! (steal on any backlog), so the batch chunks across every shard. The
+//! simulated SM work dominates the dispatch cost, so throughput should
+//! scale near-linearly with the shard count up to the host's core
+//! count — the acceptance bar is ≥ 3× aggregate throughput at 4 shards
+//! vs 1 shard on 1024-point batches. Outputs are additionally checked
+//! bitwise against the single-shard results on every size.
+//!
+//! ```sh
+//! cargo bench --bench shard                       # full sweep
+//! cargo bench --bench shard -- --quick            # CI-sized sweep
+//! cargo bench --bench shard -- --json BENCH_shard.json
+//! ```
+
+mod harness;
+
+use std::fmt::Write as _;
+
+use egpu_fft::coordinator::{Backend, ServiceConfig, ShardPoolConfig, ShardedFftService};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+fn service(shards: usize, jobs: usize) -> ShardedFftService {
+    ShardedFftService::start(ShardPoolConfig {
+        shards,
+        steal_threshold: 0,
+        // chunk the batch all the way down to one chunk per shard
+        min_chunk: (jobs / 8).max(1),
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+    })
+    .unwrap()
+}
+
+struct Row {
+    points: usize,
+    shards: usize,
+    jobs_per_s: f64,
+    speedup: f64,
+    steals: u64,
+    hit_rate: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let (sizes, shard_counts, jobs, target_ms): (&[usize], &[usize], usize, u64) = if quick {
+        (&[256, 1024], &[1, 2, 4], 16, 200)
+    } else {
+        (&[256, 512, 1024, 2048, 4096], &[1, 2, 4, 8], 64, 1000)
+    };
+
+    harness::section(&format!(
+        "sharded scaling: {jobs} same-size jobs per batch, steal threshold 0{}",
+        if quick { " (quick mode)" } else { "" }
+    ));
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &points in sizes {
+        let inputs: Vec<Vec<(f32, f32)>> =
+            (0..jobs).map(|i| signal(points, i as u64)).collect();
+
+        // single-shard reference outputs: the bitwise baseline
+        let reference_bits: Vec<Vec<(u32, u32)>> = {
+            let svc = service(1, jobs);
+            let results = svc.submit_batch(inputs.clone()).unwrap();
+            let b = results.iter().map(|r| bits(&r.output)).collect();
+            svc.shutdown();
+            b
+        };
+
+        let mut base_jps = 0.0;
+        for &shards in shard_counts {
+            let svc = service(shards, jobs);
+            // warm the shared plan cache and every shard's executor
+            let warm = svc.submit_batch(inputs.clone()).unwrap();
+            for (r, want) in warm.iter().zip(&reference_bits) {
+                assert_eq!(
+                    bits(&r.output),
+                    *want,
+                    "sharded output diverged from single-shard at fft{points}"
+                );
+            }
+            let res = harness::bench(
+                &format!("submit_batch_{jobs}x_fft{points}_{shards}shard"),
+                target_ms,
+                || {
+                    svc.submit_batch(inputs.clone()).unwrap();
+                },
+            );
+            let jps = jobs as f64 / res.mean.as_secs_f64();
+            if shards == 1 {
+                base_jps = jps;
+            }
+            let m = svc.metrics();
+            rows.push(Row {
+                points,
+                shards,
+                jobs_per_s: jps,
+                speedup: jps / base_jps,
+                steals: m.steals,
+                hit_rate: m.plan_cache.hit_rate(),
+            });
+            svc.shutdown();
+        }
+
+        let per_size: Vec<&Row> = rows.iter().filter(|r| r.points == points).collect();
+        let line = per_size
+            .iter()
+            .map(|r| format!("{}sh {:.0} j/s ({:.2}x)", r.shards, r.jobs_per_s, r.speedup))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("  fft{points}: {line}");
+    }
+
+    let at = |points: usize, shards: usize| {
+        rows.iter()
+            .find(|r| r.points == points && r.shards == shards)
+            .map(|r| r.speedup)
+    };
+    if let Some(s4) = at(1024, 4) {
+        println!(
+            "\n4-shard speedup on fft1024 batches: {s4:.2}x (acceptance bar: >= 3x on a \
+             >= 4-core host)"
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"shard\", \"points\": {}, \"shards\": {}, \
+                 \"jobs_per_s\": {:.1}, \"speedup_vs_1_shard\": {:.3}, \"steals\": {}, \
+                 \"plan_cache_hit_rate\": {:.4}, \"quick\": {}}}{}\n",
+                r.points,
+                r.shards,
+                r.jobs_per_s,
+                r.speedup,
+                r.steals,
+                r.hit_rate,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

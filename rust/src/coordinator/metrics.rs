@@ -1,6 +1,7 @@
 //! Service metrics: throughput, latency distribution, simulated
 //! (virtual) eGPU time, aggregate efficiency, batched-dispatch
-//! occupancy and shared plan-cache counters.
+//! occupancy, shared plan-cache counters, and — for the sharded
+//! scheduler — per-shard occupancy, queue depth and steal counts.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -80,8 +81,37 @@ impl Metrics {
             batched_jobs: m.batched_jobs,
             max_batch_jobs: m.max_batch_jobs,
             plan_cache: CacheStats::default(),
+            shards: Vec::new(),
+            steals: 0,
+            agg_jobs_per_s: 0.0,
         }
     }
+}
+
+/// One shard's scheduler counters, as captured by
+/// `ShardedFftService::metrics` (all zeros / empty for the unsharded
+/// service).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStat {
+    pub shard: usize,
+    /// Jobs processed by this shard — successes *and* errors, counted
+    /// at dequeue (unlike the aggregate `served`, which counts only
+    /// successful jobs).
+    pub handled: u64,
+    /// Jobs served through coalesced batch chunks.
+    pub batch_jobs: u64,
+    /// Jobs that arrived via their size-affinity home route.
+    pub affine: u64,
+    /// Jobs that arrived via the work-stealing overflow route.
+    pub stolen: u64,
+    /// Queued + in-flight jobs at snapshot time.
+    pub queue_depth: usize,
+    /// Peak queue depth observed.
+    pub max_queue_depth: usize,
+    /// Time spent serving jobs, µs.
+    pub busy_us: u64,
+    /// Fraction of wall time this shard spent serving (0.0–1.0).
+    pub occupancy: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -103,6 +133,15 @@ pub struct MetricsSnapshot {
     /// Shared plan-cache counters (filled in by `FftService::metrics`;
     /// `Metrics::snapshot` alone reports zeros).
     pub plan_cache: CacheStats,
+    /// Per-shard scheduler counters (filled in by
+    /// `ShardedFftService::metrics`; empty for the unsharded service).
+    pub shards: Vec<ShardStat>,
+    /// Jobs redirected away from their affine home shard by the
+    /// work-stealing overflow rule (sharded service only).
+    pub steals: u64,
+    /// Aggregate served throughput since service start, jobs/s (sharded
+    /// service only; 0.0 otherwise).
+    pub agg_jobs_per_s: f64,
 }
 
 impl MetricsSnapshot {
@@ -170,14 +209,37 @@ impl MetricsSnapshot {
         }
         if self.plan_cache.lookups() > 0 {
             s.push_str(&format!(
-                "  plan cache: {}/{} entries, hit rate {:.3} ({} hits / {} misses, {} evictions)\n",
+                "  plan cache: {}/{} entries, hit rate {:.3} ({} hits / {} misses, \
+                 {} evictions, {} lock contentions)\n",
                 self.plan_cache.entries,
                 self.plan_cache.capacity,
                 self.plan_cache.hit_rate(),
                 self.plan_cache.hits,
                 self.plan_cache.misses,
-                self.plan_cache.evictions
+                self.plan_cache.evictions,
+                self.plan_cache.lock_contentions
             ));
+        }
+        if !self.shards.is_empty() {
+            s.push_str(&format!(
+                "  shards: {} (steals {}, aggregate {:.0} jobs/s)\n",
+                self.shards.len(),
+                self.steals,
+                self.agg_jobs_per_s
+            ));
+            for sh in &self.shards {
+                s.push_str(&format!(
+                    "    shard {}: handled {} (affine {}, stolen {}), occupancy {:.2}, \
+                     queue {} (peak {})\n",
+                    sh.shard,
+                    sh.handled,
+                    sh.affine,
+                    sh.stolen,
+                    sh.occupancy,
+                    sh.queue_depth,
+                    sh.max_queue_depth
+                ));
+            }
         }
         s
     }
@@ -243,5 +305,30 @@ mod tests {
         assert_eq!(s.mean_batch_occupancy(), 0.0);
         assert_eq!(s.plan_cache.lookups(), 0);
         assert_eq!(s.plan_cache.hit_rate(), 0.0);
+        assert!(s.shards.is_empty());
+        assert_eq!(s.steals, 0);
+        assert_eq!(s.agg_jobs_per_s, 0.0);
+    }
+
+    #[test]
+    fn shard_stats_render() {
+        let mut s = Metrics::default().snapshot();
+        s.steals = 3;
+        s.agg_jobs_per_s = 1234.0;
+        s.shards = vec![
+            ShardStat {
+                shard: 0,
+                handled: 10,
+                affine: 8,
+                stolen: 2,
+                occupancy: 0.5,
+                ..Default::default()
+            },
+            ShardStat { shard: 1, handled: 4, affine: 4, ..Default::default() },
+        ];
+        let out = s.render();
+        assert!(out.contains("shards: 2 (steals 3, aggregate 1234 jobs/s)"), "{out}");
+        assert!(out.contains("shard 0: handled 10 (affine 8, stolen 2)"), "{out}");
+        assert!(out.contains("shard 1: handled 4"), "{out}");
     }
 }

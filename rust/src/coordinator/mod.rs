@@ -26,8 +26,14 @@
 //! paid once per design point rather than once per core or per request.
 //! Cache hit/miss/eviction counters and per-batch occupancy surface in
 //! [`MetricsSnapshot`].
+//!
+//! For multi-core scale-out, [`shard::ShardedFftService`] replaces the
+//! single shared queue with one queue per shard (each shard owning a
+//! resident simulated SM), size-affinity routing and a work-stealing
+//! overflow path — see the module docs in [`shard`].
 
 pub mod metrics;
+pub mod shard;
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -44,7 +50,8 @@ use crate::fft::{self, cache::PlanCache, reference};
 use crate::profile::Profile;
 use crate::runtime::{spawn_pjrt_server, PjrtHandle};
 use crate::sim::FftExecutor;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShardStat};
+pub use shard::{ShardPoolConfig, ShardedFftService};
 
 /// Which execution engine serves a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -210,20 +217,10 @@ impl FftService {
         }
         let ids: Vec<u64> =
             (0..n).map(|_| self.next_id.fetch_add(1, Ordering::Relaxed)).collect();
-        // Coalesce by size, preserving submission order inside a group.
-        let mut sizes: Vec<usize> = Vec::new(); // distinct, first-seen order
-        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
-        for (i, input) in inputs.iter().enumerate() {
-            let group = groups.entry(input.len()).or_default();
-            if group.is_empty() {
-                sizes.push(input.len());
-            }
-            group.push(i);
-        }
+        let groups = coalesce_by_size(&inputs);
         let mut inputs: Vec<Option<Vec<(f32, f32)>>> = inputs.into_iter().map(Some).collect();
-        let mut pending = Vec::with_capacity(sizes.len());
-        for points in sizes {
-            let idxs = groups.remove(&points).expect("group recorded");
+        let mut pending = Vec::with_capacity(groups.len());
+        for (_points, idxs) in groups {
             let batch_ids: Vec<u64> = idxs.iter().map(|&i| ids[i]).collect();
             let batch_inputs: Vec<Vec<(f32, f32)>> = idxs
                 .iter()
@@ -241,18 +238,7 @@ impl FftService {
                 .expect("workers alive");
             pending.push((idxs, reply_rx));
         }
-        let mut slots: Vec<Option<Result<FftResult>>> = (0..n).map(|_| None).collect();
-        for (idxs, rx) in pending {
-            let results =
-                rx.recv().map_err(|e| anyhow!("worker dropped batch reply: {e}"))?;
-            for (i, result) in idxs.into_iter().zip(results) {
-                slots[i] = Some(result);
-            }
-        }
-        slots
-            .into_iter()
-            .map(|s| s.expect("every slot filled"))
-            .collect()
+        collect_batch_results(n, pending)
     }
 
     /// Submit a batch and wait for every result (order preserved). Jobs
@@ -345,6 +331,49 @@ impl Core {
     }
 }
 
+/// Group batch inputs by transform size, preserving submission order
+/// inside each group. Returns `(points, original indices)` per distinct
+/// size in first-seen order. Shared by [`FftService::submit_batch`] and
+/// the sharded scheduler's router.
+fn coalesce_by_size(inputs: &[Vec<(f32, f32)>]) -> Vec<(usize, Vec<usize>)> {
+    let mut sizes: Vec<usize> = Vec::new(); // distinct, first-seen order
+    let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, input) in inputs.iter().enumerate() {
+        let group = groups.entry(input.len()).or_default();
+        if group.is_empty() {
+            sizes.push(input.len());
+        }
+        group.push(i);
+    }
+    sizes
+        .into_iter()
+        .map(|points| {
+            let idxs = groups.remove(&points).expect("group recorded");
+            (points, idxs)
+        })
+        .collect()
+}
+
+/// Dispatched-but-unanswered batch chunks: the original input indices
+/// each chunk covers, plus the reply channel its worker will fill.
+type PendingBatches = Vec<(Vec<usize>, Receiver<Vec<Result<FftResult>>>)>;
+
+/// Await every pending batch reply and reassemble results into the
+/// original submission order (`n` total jobs).
+fn collect_batch_results(n: usize, pending: PendingBatches) -> Result<Vec<FftResult>> {
+    let mut slots: Vec<Option<Result<FftResult>>> = (0..n).map(|_| None).collect();
+    for (idxs, rx) in pending {
+        let results = rx.recv().map_err(|e| anyhow!("worker dropped batch reply: {e}"))?;
+        for (i, result) in idxs.into_iter().zip(results) {
+            slots[i] = Some(result);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every slot filled"))
+        .collect()
+}
+
 fn worker_loop(
     core_id: usize,
     cfg: ServiceConfig,
@@ -359,40 +388,48 @@ fn worker_loop(
             Ok(j) => j,
             Err(_) => return, // queue closed
         };
-        match job.kind {
-            JobKind::Single { id, input, reply } => {
-                let res = serve_one(&mut core, &engine, id, &input);
-                let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
-                match res {
-                    Ok((output, profile, served_by)) => {
-                        metrics.observe(input.len(), wall_us, profile.as_ref());
-                        let _ = reply.send(Ok(FftResult {
-                            id,
-                            output,
-                            profile,
-                            core: served_by,
-                            wall_us,
-                        }));
-                    }
-                    Err(e) => {
-                        metrics.observe_error();
-                        let _ = reply.send(Err(e));
-                    }
+        handle_job(&mut core, &engine, &metrics, job);
+    }
+}
+
+/// Serve one dequeued job on `core`, recording metrics and replying.
+/// Shared by the single-queue worker pool and the sharded scheduler
+/// (identical serving code is what keeps sharded outputs bitwise equal
+/// to the single-queue path).
+fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, job: Job) {
+    match job.kind {
+        JobKind::Single { id, input, reply } => {
+            let res = serve_one(core, engine, id, &input);
+            let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+            match res {
+                Ok((output, profile, served_by)) => {
+                    metrics.observe(input.len(), wall_us, profile.as_ref());
+                    let _ = reply.send(Ok(FftResult {
+                        id,
+                        output,
+                        profile,
+                        core: served_by,
+                        wall_us,
+                    }));
+                }
+                Err(e) => {
+                    metrics.observe_error();
+                    let _ = reply.send(Err(e));
                 }
             }
-            JobKind::Batch { ids, inputs, reply } => {
-                let results = serve_batch(&mut core, &engine, &ids, &inputs, job.submitted);
-                metrics.observe_batch(results.len());
-                for r in &results {
-                    match r {
-                        Ok(res) => {
-                            metrics.observe(res.output.len(), res.wall_us, res.profile.as_ref())
-                        }
-                        Err(_) => metrics.observe_error(),
+        }
+        JobKind::Batch { ids, inputs, reply } => {
+            let results = serve_batch(core, engine, &ids, &inputs, job.submitted);
+            metrics.observe_batch(results.len());
+            for r in &results {
+                match r {
+                    Ok(res) => {
+                        metrics.observe(res.output.len(), res.wall_us, res.profile.as_ref())
                     }
+                    Err(_) => metrics.observe_error(),
                 }
-                let _ = reply.send(results);
             }
+            let _ = reply.send(results);
         }
     }
 }

@@ -1,0 +1,500 @@
+//! Multi-core sharded FFT scheduler.
+//!
+//! The paper's companion work ("A Statically and Dynamically Scalable
+//! Soft GPGPU") makes the case that the eGPU scales by *replication*:
+//! many small, high-fmax SMs rather than one big one. The single-queue
+//! [`super::FftService`] models one leader feeding a pool through a
+//! shared (mutex-guarded) queue; at high core counts that queue — and
+//! the cold executor maps behind it — become the bottleneck. This
+//! module is the replicated deployment:
+//!
+//! * **one queue per shard** — each shard owns a private channel and a
+//!   worker thread with one resident simulated SM, so dispatch never
+//!   takes a shared lock;
+//! * **size-affinity routing** — a given transform size always has the
+//!   same *home* shard, keeping that shard's resident
+//!   [`crate::sim::FftExecutor`] warm (twiddles stay uploaded, no
+//!   executor churn);
+//! * **work-stealing overflow** — when the home shard's queue depth
+//!   (queued + in-flight) exceeds [`ShardPoolConfig::steal_threshold`],
+//!   the job is redirected to the least-loaded shard instead, so a
+//!   skewed size distribution still uses the whole pool;
+//! * **batch chunking** — a coalesced same-size group from
+//!   [`ShardedFftService::submit_batch`] larger than
+//!   [`ShardPoolConfig::min_chunk`] is split into up to one chunk per
+//!   shard, so a homogeneous batch parallelizes instead of serializing
+//!   on its home shard;
+//! * **one process-wide [`PlanCache`]** — every shard hands out `Arc`s
+//!   from the same cache, so a program is generated once and executed
+//!   everywhere (the cache counts lock contention so the sharing cost
+//!   is observable).
+//!
+//! Shards run exactly the same serving code as the single-queue pool
+//! (`handle_job` → `serve_one` / `serve_batch`), so sharded outputs are
+//! bitwise identical to single-shard results — sharding changes
+//! scheduling, never numerics (enforced by `rust/tests/shard.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::ShardStat;
+use super::{
+    coalesce_by_size, collect_batch_results, handle_job, Backend, Core, FftResult, Job, JobKind,
+    Metrics, MetricsSnapshot, ServiceConfig,
+};
+use crate::fft::cache::PlanCache;
+use crate::runtime::{spawn_pjrt_server, PjrtHandle};
+
+/// Configuration for the sharded scheduler.
+#[derive(Clone, Debug)]
+pub struct ShardPoolConfig {
+    /// Number of shards (resident simulated SMs). `0` means one shard
+    /// per available hardware thread.
+    pub shards: usize,
+    /// Queue depth (queued + in-flight jobs) beyond which the router
+    /// overflows an affine job onto the least-loaded shard. `0` steals
+    /// on any backlog (maximum balance); larger values trade balance
+    /// for executor locality.
+    pub steal_threshold: usize,
+    /// Minimum same-size group length per chunk when a coalesced batch
+    /// is split across shards.
+    pub min_chunk: usize,
+    /// Per-shard service settings. `cores` is ignored: each shard runs
+    /// exactly one resident-SM worker.
+    pub service: ServiceConfig,
+}
+
+impl Default for ShardPoolConfig {
+    fn default() -> Self {
+        ShardPoolConfig {
+            shards: 0,
+            steal_threshold: 2,
+            min_chunk: 8,
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+/// Per-shard scheduler counters (lock-free; read by `metrics()`).
+#[derive(Default)]
+struct ShardCounters {
+    /// Jobs processed (successes and errors), counted at dequeue.
+    handled: AtomicU64,
+    /// Jobs served through coalesced batch chunks.
+    batch_jobs: AtomicU64,
+    /// Jobs that arrived via their size-affinity home route.
+    affine: AtomicU64,
+    /// Jobs that arrived via the work-stealing overflow route.
+    stolen: AtomicU64,
+    /// Queued + in-flight jobs right now.
+    depth: AtomicUsize,
+    /// Peak queue depth observed.
+    max_depth: AtomicUsize,
+    /// Time spent serving jobs, µs.
+    busy_us: AtomicU64,
+}
+
+struct Shard {
+    tx: Sender<Job>,
+    counters: Arc<ShardCounters>,
+}
+
+/// The sharded service: N independent shards, each owning a resident
+/// simulated eGPU SM, fed through per-shard queues by a size-affinity
+/// router with work-stealing overflow. All shards share one
+/// [`PlanCache`].
+pub struct ShardedFftService {
+    cfg: ShardPoolConfig,
+    shards: Vec<Shard>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    plans: Arc<PlanCache>,
+    steals: AtomicU64,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl ShardedFftService {
+    pub fn start(cfg: ShardPoolConfig) -> Result<Self> {
+        if !cfg.service.variant.is_valid() {
+            return Err(anyhow!("invalid variant {}", cfg.service.variant));
+        }
+        let n = if cfg.shards == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        } else {
+            cfg.shards
+        };
+        let metrics = Arc::new(Metrics::default());
+        let plans = Arc::new(PlanCache::new(cfg.service.plan_cache_capacity));
+        let (engine, pjrt_join) = match cfg.service.backend {
+            Backend::Pjrt | Backend::Validate => {
+                let (handle, join) = spawn_pjrt_server(&cfg.service.artifacts_dir)?;
+                (Some(handle), Some(join))
+            }
+            Backend::Simulator => (None, None),
+        };
+        let mut shards = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n + 1);
+        for shard_id in 0..n {
+            let (tx, rx) = channel::<Job>();
+            let counters = Arc::new(ShardCounters::default());
+            let scfg = cfg.service.clone();
+            let metrics2 = Arc::clone(&metrics);
+            let plans2 = Arc::clone(&plans);
+            let engine2 = engine.clone();
+            let counters2 = Arc::clone(&counters);
+            workers.push(std::thread::spawn(move || {
+                shard_loop(shard_id, scfg, rx, metrics2, engine2, plans2, counters2)
+            }));
+            shards.push(Shard { tx, counters });
+        }
+        if let Some(j) = pjrt_join {
+            workers.push(j);
+        }
+        Ok(ShardedFftService {
+            cfg,
+            shards,
+            workers,
+            metrics,
+            plans,
+            steals: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    /// Number of shards actually running (after `shards: 0` resolves to
+    /// the available hardware parallelism).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The home shard for a transform size: deterministic, so a size
+    /// always finds its warm resident executor when the pool is not
+    /// overloaded.
+    fn affinity(&self, points: usize) -> usize {
+        (points.trailing_zeros() as usize) % self.shards.len()
+    }
+
+    /// The shard with the fewest queued + in-flight jobs right now
+    /// (first such shard on ties).
+    fn least_loaded(&self) -> usize {
+        self.shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.counters.depth.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .expect("at least one shard")
+    }
+
+    /// Pick the serving shard for a `points`-sized job: the affine home
+    /// shard unless its queue depth (in jobs) exceeds the steal
+    /// threshold, in which case the least-loaded shard takes the job.
+    /// Returns `(shard, served by the affine route)`.
+    fn route(&self, points: usize) -> (usize, bool) {
+        let home = self.affinity(points);
+        let depth = self.shards[home].counters.depth.load(Ordering::Relaxed);
+        if depth <= self.cfg.steal_threshold {
+            return (home, true);
+        }
+        let victim = self.least_loaded();
+        (victim, victim == home)
+    }
+
+    /// Enqueue `job` (carrying `jobs` requests) on `shard`, maintaining
+    /// the queue-depth gauge (in jobs, so a 16-job batch chunk weighs 16
+    /// against the steal threshold) and the routing counters.
+    fn dispatch(&self, shard: usize, job: Job, affine: bool, jobs: u64) {
+        let c = &self.shards[shard].counters;
+        let depth = c.depth.fetch_add(jobs as usize, Ordering::Relaxed) + jobs as usize;
+        c.max_depth.fetch_max(depth, Ordering::Relaxed);
+        if affine {
+            c.affine.fetch_add(jobs, Ordering::Relaxed);
+        } else {
+            c.stolen.fetch_add(jobs, Ordering::Relaxed);
+            self.steals.fetch_add(jobs, Ordering::Relaxed);
+        }
+        self.shards[shard].tx.send(job).expect("shard worker alive");
+    }
+
+    /// Submit one FFT; the returned channel yields the result.
+    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        let (reply_tx, reply_rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (shard, affine) = self.route(input.len());
+        let job = Job {
+            kind: JobKind::Single { id, input, reply: reply_tx },
+            submitted: Instant::now(),
+        };
+        self.dispatch(shard, job, affine, 1);
+        reply_rx
+    }
+
+    /// Batched dispatch across the shard pool: coalesce `inputs` into
+    /// per-size groups exactly as [`super::FftService::submit_batch`],
+    /// then split each group into up to one chunk per shard (chunks of
+    /// at least `min_chunk` jobs). The first chunk follows affinity
+    /// routing; the rest go straight to the least-loaded shards, so a
+    /// homogeneous batch parallelizes pool-wide at any steal threshold.
+    /// Results come back in the original submission order and are
+    /// bitwise identical to the single-shard path.
+    pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+        let n = inputs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let ids: Vec<u64> =
+            (0..n).map(|_| self.next_id.fetch_add(1, Ordering::Relaxed)).collect();
+        let groups = coalesce_by_size(&inputs);
+        let mut inputs: Vec<Option<Vec<(f32, f32)>>> = inputs.into_iter().map(Some).collect();
+        let mut pending = Vec::new();
+        for (points, idxs) in groups {
+            let chunks = self.split_group(&idxs);
+            let spread = chunks.len() > 1;
+            for (ci, chunk) in chunks.into_iter().enumerate() {
+                let batch_ids: Vec<u64> = chunk.iter().map(|&i| ids[i]).collect();
+                let batch_inputs: Vec<Vec<(f32, f32)>> = chunk
+                    .iter()
+                    .map(|&i| inputs[i].take().expect("each input consumed once"))
+                    .collect();
+                let (reply_tx, reply_rx) = channel();
+                let job = Job {
+                    kind: JobKind::Batch { ids: batch_ids, inputs: batch_inputs, reply: reply_tx },
+                    submitted: Instant::now(),
+                };
+                // The first chunk follows normal affinity routing; the
+                // rest of a split group go straight to the least-loaded
+                // shards — spreading must not depend on the steal
+                // threshold, or a locality-biased threshold would
+                // serialize the whole batch on its home shard.
+                let (shard, affine) = if spread && ci > 0 {
+                    let victim = self.least_loaded();
+                    (victim, victim == self.affinity(points))
+                } else {
+                    self.route(points)
+                };
+                self.dispatch(shard, job, affine, chunk.len() as u64);
+                pending.push((chunk, reply_rx));
+            }
+        }
+        collect_batch_results(n, pending)
+    }
+
+    /// Split one same-size group into at most one chunk per shard, each
+    /// of at least `min_chunk` jobs, so a large homogeneous batch runs
+    /// pool-wide instead of serializing on its home shard.
+    fn split_group(&self, idxs: &[usize]) -> Vec<Vec<usize>> {
+        let chunks = (idxs.len() / self.cfg.min_chunk.max(1)).clamp(1, self.shards.len());
+        let per = idxs.len().div_ceil(chunks);
+        idxs.chunks(per).map(|c| c.to_vec()).collect()
+    }
+
+    /// Submit every input individually and wait for all results in
+    /// submission order.
+    pub fn run_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+        let handles: Vec<_> = inputs.into_iter().map(|i| self.submit(i)).collect();
+        handles
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|e| anyhow!("shard dropped reply: {e}"))?)
+            .collect()
+    }
+
+    /// Service metrics including per-shard scheduler counters, steal
+    /// totals, aggregate throughput and shared plan-cache stats.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        snap.plan_cache = self.plans.stats();
+        snap.steals = self.steals.load(Ordering::Relaxed);
+        let elapsed_us = (self.started.elapsed().as_micros() as u64).max(1);
+        snap.agg_jobs_per_s = snap.served as f64 / (elapsed_us as f64 / 1e6);
+        snap.shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let c = &s.counters;
+                let busy_us = c.busy_us.load(Ordering::Relaxed);
+                ShardStat {
+                    shard: i,
+                    handled: c.handled.load(Ordering::Relaxed),
+                    batch_jobs: c.batch_jobs.load(Ordering::Relaxed),
+                    affine: c.affine.load(Ordering::Relaxed),
+                    stolen: c.stolen.load(Ordering::Relaxed),
+                    queue_depth: c.depth.load(Ordering::Relaxed),
+                    max_queue_depth: c.max_depth.load(Ordering::Relaxed),
+                    busy_us,
+                    occupancy: (busy_us as f64 / elapsed_us as f64).min(1.0),
+                }
+            })
+            .collect();
+        snap
+    }
+
+    /// The process-wide plan cache shared by every shard.
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    pub fn config(&self) -> &ShardPoolConfig {
+        &self.cfg
+    }
+
+    /// Drain and stop all shard workers.
+    pub fn shutdown(mut self) {
+        self.shards.clear(); // drops every sender -> queues close
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ShardedFftService {
+    fn drop(&mut self) {
+        self.shards.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One shard's worker: a private queue feeding one resident simulated
+/// SM, serving jobs with exactly the same code as the single-queue
+/// pool. The depth gauge counts a job until it is *served* (not merely
+/// dequeued), so the router sees in-flight work as load.
+fn shard_loop(
+    shard_id: usize,
+    cfg: ServiceConfig,
+    rx: Receiver<Job>,
+    metrics: Arc<Metrics>,
+    engine: Option<PjrtHandle>,
+    plans: Arc<PlanCache>,
+    counters: Arc<ShardCounters>,
+) {
+    let mut core = Core { id: shard_id, cfg, plans, execs: HashMap::new(), tick: 0 };
+    while let Ok(job) = rx.recv() {
+        let (jobs, is_batch) = match &job.kind {
+            JobKind::Single { .. } => (1u64, false),
+            JobKind::Batch { ids, .. } => (ids.len() as u64, true),
+        };
+        // Count the job *before* serving: replies are sent inside
+        // `handle_job`, so a snapshot taken after a caller's `recv`
+        // returns must never be behind on these counters.
+        counters.handled.fetch_add(jobs, Ordering::Relaxed);
+        if is_batch {
+            counters.batch_jobs.fetch_add(jobs, Ordering::Relaxed);
+        }
+        let t0 = Instant::now();
+        handle_job(&mut core, &engine, &metrics, job);
+        counters
+            .busy_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        counters.depth.fetch_sub(jobs as usize, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{self, reference};
+
+    fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+        reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+    }
+
+    fn pool(shards: usize, steal_threshold: usize) -> ShardedFftService {
+        ShardedFftService::start(ShardPoolConfig {
+            shards,
+            steal_threshold,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn sharded_service_end_to_end() {
+        let svc = pool(2, 2);
+        let results = svc.run_batch((0..8).map(|i| signal(256, i)).collect()).unwrap();
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            let want = reference::fft(&reference::test_signal(256, i as u64));
+            let got: Vec<_> = r
+                .output
+                .iter()
+                .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+                .collect();
+            assert!(reference::rms_rel_error(&got, &want) < fft::F32_TOL);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.served, 8);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.shards.len(), 2);
+        assert_eq!(m.shards.iter().map(|s| s.handled).sum::<u64>(), 8);
+        assert!(m.agg_jobs_per_s > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_shard_count_uses_available_parallelism() {
+        let svc = pool(0, 2);
+        assert!(svc.shards() >= 1);
+        let r = svc.submit(signal(256, 1)).recv().unwrap().unwrap();
+        assert_eq!(r.output.len(), 256);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn split_group_respects_min_chunk_and_shard_count() {
+        let svc = ShardedFftService::start(ShardPoolConfig {
+            shards: 4,
+            min_chunk: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        let idxs: Vec<usize> = (0..64).collect();
+        let chunks = svc.split_group(&idxs);
+        assert_eq!(chunks.len(), 4, "64 jobs / min_chunk 8 caps at 4 shards");
+        assert!(chunks.iter().all(|c| c.len() == 16));
+        let small: Vec<usize> = (0..5).collect();
+        assert_eq!(svc.split_group(&small).len(), 1, "below min_chunk stays whole");
+        let rejoined: Vec<usize> = chunks.into_iter().flatten().collect();
+        assert_eq!(rejoined, idxs, "chunking preserves order");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_size_errors_without_killing_shards() {
+        let svc = pool(2, 2);
+        let bad = svc.submit(signal(100, 0)).recv().unwrap();
+        assert!(bad.is_err());
+        let ok = svc.submit(signal(256, 1)).recv().unwrap();
+        assert!(ok.is_ok());
+        assert_eq!(svc.metrics().errors, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let svc = pool(2, 2);
+        assert!(svc.submit_batch(Vec::new()).unwrap().is_empty());
+        assert_eq!(svc.metrics().served, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_variant_rejected() {
+        let bad = crate::arch::Variant { mem: crate::arch::MemPorts::Qp, vm: true, complex: false };
+        let err = ShardedFftService::start(ShardPoolConfig {
+            shards: 1,
+            service: ServiceConfig { variant: bad, ..Default::default() },
+            ..Default::default()
+        });
+        assert!(err.is_err());
+    }
+}

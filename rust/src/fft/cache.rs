@@ -61,6 +61,10 @@ pub struct CacheStats {
     pub evictions: u64,
     pub entries: usize,
     pub capacity: usize,
+    /// Times a caller found the cache mutex held by another thread and
+    /// had to block — the observable cost of sharing one cache across
+    /// many workers/shards.
+    pub lock_contentions: u64,
 }
 
 impl CacheStats {
@@ -102,6 +106,7 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    contentions: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -119,7 +124,18 @@ impl PlanCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            contentions: AtomicU64::new(0),
         }
+    }
+
+    /// Take the cache lock, counting the acquisitions that found it
+    /// already held (sharing cost surfaced in [`CacheStats`]).
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        if let Ok(guard) = self.inner.try_lock() {
+            return guard;
+        }
+        self.contentions.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap()
     }
 
     pub fn capacity(&self) -> usize {
@@ -127,7 +143,7 @@ impl PlanCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.lock().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -135,7 +151,7 @@ impl PlanCache {
     }
 
     pub fn contains(&self, key: &PlanKey) -> bool {
-        self.inner.lock().unwrap().map.contains_key(key)
+        self.lock().map.contains_key(key)
     }
 
     /// Fetch the shared program for one design point, generating (and
@@ -156,7 +172,7 @@ impl PlanCache {
     }
 
     fn lookup(&self, key: &PlanKey) -> Option<Arc<FftProgram>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         inner.tick += 1;
         let tick = inner.tick;
         let slot = inner.map.get_mut(key)?;
@@ -168,7 +184,7 @@ impl PlanCache {
     /// Insert (or adopt a concurrently-inserted duplicate of) `program`,
     /// evicting the least-recently-used entry when over capacity.
     fn insert(&self, key: PlanKey, program: Arc<FftProgram>) -> Arc<FftProgram> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(slot) = inner.map.get_mut(&key) {
@@ -197,6 +213,7 @@ impl PlanCache {
             evictions: self.evictions.load(Ordering::Relaxed),
             entries: self.len(),
             capacity: self.capacity,
+            lock_contentions: self.contentions.load(Ordering::Relaxed),
         }
     }
 }
@@ -287,6 +304,16 @@ mod tests {
         cache.get_or_build(&c, 1024, 4).unwrap();
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn serial_access_never_contends() {
+        let cache = PlanCache::new(4);
+        let c = cfg(4);
+        cache.get_or_build(&c, 256, 4).unwrap();
+        cache.get_or_build(&c, 256, 4).unwrap();
+        cache.get_or_build(&c, 1024, 4).unwrap();
+        assert_eq!(cache.stats().lock_contentions, 0, "single thread never blocks");
     }
 
     #[test]

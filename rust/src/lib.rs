@@ -29,7 +29,11 @@
 //!   requests coalesced onto one worker, amortizing the plan-cache
 //!   lookup, the resident SM and the queue traffic across the batch);
 //!   `MetricsSnapshot` reports latency, batch occupancy and the
-//!   plan-cache hit rate.
+//!   plan-cache hit rate. [`coordinator::ShardedFftService`] scales the
+//!   pool out multi-core: one queue per shard, size-affinity routing
+//!   with work-stealing overflow, batch chunking, and per-shard
+//!   occupancy/queue/steal metrics — all shards sharing the one plan
+//!   cache.
 //!
 //! The PJRT fast path compiles only with the `pjrt` cargo feature
 //! (it binds the vendored `xla` crate); the default build substitutes

@@ -7,7 +7,9 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 use egpu_fft::arch::{SmConfig, Variant};
-use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::coordinator::{
+    Backend, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
+};
 use egpu_fft::fft::{self, reference};
 use egpu_fft::report;
 
@@ -34,9 +36,15 @@ USAGE:
                                      sum-reduction workload (§4)
   egpu-fft serve [--cores K] [--requests N] [--points P]
                  [--backend sim|pjrt|validate] [--batched]
+                 [--shards N] [--steal-threshold T]
                                      run the FFT service demo
                                      (--batched: coalesced submit_batch
-                                      dispatch through the plan cache)
+                                      dispatch through the plan cache;
+                                      --shards: per-shard queues with
+                                      size-affinity + work stealing,
+                                      0 = one shard per hardware thread;
+                                      --shards replaces --cores — each
+                                      shard runs one resident-SM worker)
   egpu-fft help
 
 Variants: DP, DP-VM, DP-Complex, DP-VM-Complex, QP, QP-Complex";
@@ -195,11 +203,6 @@ fn run() -> Result<()> {
                 "validate" => Backend::Validate,
                 b => bail!("unknown backend `{b}`"),
             };
-            let svc = FftService::start(ServiceConfig {
-                cores,
-                backend,
-                ..Default::default()
-            })?;
             let inputs: Vec<Vec<(f32, f32)>> = (0..requests)
                 .map(|i| {
                     reference::test_signal(points, i as u64)
@@ -209,6 +212,47 @@ fn run() -> Result<()> {
                 })
                 .collect();
             let batched = f.contains_key("batched");
+            let mode = if batched { "batched dispatch" } else { "per-request dispatch" };
+            if let Some(shards) = f.get("shards") {
+                let shards: usize = shards.parse()?;
+                if f.contains_key("cores") {
+                    eprintln!(
+                        "note: --cores is ignored with --shards \
+                         (each shard runs one resident-SM worker)"
+                    );
+                }
+                let steal_threshold: usize =
+                    f.get("steal-threshold").map(|s| s.parse()).transpose()?.unwrap_or(2);
+                let svc = ShardedFftService::start(ShardPoolConfig {
+                    shards,
+                    steal_threshold,
+                    service: ServiceConfig { backend, ..Default::default() },
+                    ..Default::default()
+                })?;
+                let t0 = std::time::Instant::now();
+                let results = if batched {
+                    svc.submit_batch(inputs)?
+                } else {
+                    svc.run_batch(inputs)?
+                };
+                let wall = t0.elapsed();
+                println!(
+                    "served {} fft{points} requests ({mode}) on {} shards in {:.1} ms \
+                     ({:.0} req/s)",
+                    results.len(),
+                    svc.shards(),
+                    wall.as_secs_f64() * 1e3,
+                    results.len() as f64 / wall.as_secs_f64()
+                );
+                print!("{}", svc.metrics().render());
+                svc.shutdown();
+                return Ok(());
+            }
+            let svc = FftService::start(ServiceConfig {
+                cores,
+                backend,
+                ..Default::default()
+            })?;
             let t0 = std::time::Instant::now();
             let results = if batched {
                 svc.submit_batch(inputs)?
@@ -217,9 +261,9 @@ fn run() -> Result<()> {
             };
             let wall = t0.elapsed();
             println!(
-                "served {} fft{points} requests ({}) on {cores} cores in {:.1} ms ({:.0} req/s)",
+                "served {} fft{points} requests ({mode}) on {cores} cores in {:.1} ms \
+                 ({:.0} req/s)",
                 results.len(),
-                if batched { "batched dispatch" } else { "per-request dispatch" },
                 wall.as_secs_f64() * 1e3,
                 results.len() as f64 / wall.as_secs_f64()
             );

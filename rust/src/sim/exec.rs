@@ -16,6 +16,7 @@ use crate::fft::{self, FftError, FftProgram, FftRun};
 pub struct FftExecutor {
     sm: Sm,
     program: Arc<FftProgram>,
+    runs: u64,
 }
 
 impl FftExecutor {
@@ -25,7 +26,7 @@ impl FftExecutor {
         let mut sm = Sm::new(cfg);
         sm.seed_thread_ids();
         fft::load_twiddles(&mut sm, &program)?;
-        Ok(FftExecutor { sm, program })
+        Ok(FftExecutor { sm, program, runs: 0 })
     }
 
     /// The shared program this executor runs.
@@ -36,6 +37,12 @@ impl FftExecutor {
     /// Transform size handled per run.
     pub fn points(&self) -> usize {
         self.program.plan.points
+    }
+
+    /// FFTs served by this resident executor since it was bound — the
+    /// per-SM amortization counter (setup cost ÷ `runs`).
+    pub fn runs(&self) -> u64 {
+        self.runs
     }
 
     /// Run one FFT: load the input, execute, read back natural order.
@@ -49,6 +56,7 @@ impl FftExecutor {
         fft::load_data(&mut self.sm, &self.program, input)?;
         let profile = self.sm.run(&self.program.program, self.program.plan.threads)?;
         let output = fft::read_output(&self.sm, &self.program)?;
+        self.runs += 1;
         Ok(FftRun { output, profile })
     }
 }
@@ -90,10 +98,12 @@ mod tests {
         let cfg = SmConfig::for_radix(Variant::DP, 16);
         let fp = Arc::new(fft::generate(&cfg, 1024, 16).unwrap());
         let mut ex = FftExecutor::new(cfg, fp).unwrap();
+        assert_eq!(ex.runs(), 0);
         let input = signal(1024, 42);
         let first = ex.run(&input).unwrap();
         let second = ex.run(&input).unwrap();
         assert_eq!(first.output, second.output);
+        assert_eq!(ex.runs(), 2, "amortization counter tracks served FFTs");
     }
 
     #[test]

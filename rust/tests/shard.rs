@@ -1,0 +1,239 @@
+//! Sharded-scheduler integration tests: size-affinity routing,
+//! work-stealing under skewed load, bitwise identity of sharded vs
+//! single-shard results, and plan-cache behaviour with N > 1 shards.
+
+use egpu_fft::coordinator::{
+    Backend, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
+};
+use egpu_fft::fft::{self, reference};
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn pool(shards: usize, steal_threshold: usize) -> ShardedFftService {
+    ShardedFftService::start(ShardPoolConfig {
+        shards,
+        steal_threshold,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+/// With a generous steal threshold and strictly sequential traffic,
+/// every job of one size lands on exactly one shard — its home — and
+/// nothing is ever stolen.
+#[test]
+fn same_size_affinity_routes_to_one_home_shard() {
+    let svc = pool(4, 64);
+    for seed in 0..6u64 {
+        let r = svc.submit(signal(1024, seed)).recv().unwrap().unwrap();
+        assert_eq!(r.output.len(), 1024);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.served, 6);
+    assert_eq!(m.steals, 0, "sequential light load never overflows");
+    let serving: Vec<_> = m.shards.iter().filter(|s| s.handled > 0).collect();
+    assert_eq!(serving.len(), 1, "one size -> one home shard: {:?}", m.shards);
+    assert_eq!(serving[0].handled, 6);
+    assert_eq!(serving[0].affine, 6);
+    assert_eq!(serving[0].stolen, 0);
+    svc.shutdown();
+}
+
+/// Two different sizes have different home shards (with 4 shards,
+/// 256 -> tz 8 -> shard 0, 1024 -> tz 10 -> shard 2).
+#[test]
+fn distinct_sizes_get_distinct_homes() {
+    let svc = pool(4, 64);
+    for seed in 0..3u64 {
+        svc.submit(signal(256, seed)).recv().unwrap().unwrap();
+        svc.submit(signal(1024, seed)).recv().unwrap().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.shards[0].handled, 3, "fft256 home");
+    assert_eq!(m.shards[2].handled, 3, "fft1024 home");
+    assert_eq!(m.shards[1].handled + m.shards[3].handled, 0);
+    svc.shutdown();
+}
+
+/// A skewed burst — every request the same size — must spill past its
+/// home shard through the work-stealing overflow and use the pool.
+#[test]
+fn work_stealing_spreads_skewed_load() {
+    let svc = pool(4, 0);
+    let handles: Vec<_> = (0..32).map(|i| svc.submit(signal(1024, i))).collect();
+    for h in handles {
+        let r = h.recv().unwrap().unwrap();
+        assert_eq!(r.output.len(), 1024);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.served, 32);
+    assert!(m.steals >= 1, "a 32-deep same-size burst must overflow its home shard");
+    let serving = m.shards.iter().filter(|s| s.handled > 0).count();
+    assert!(serving >= 2, "stolen work must reach other shards: {:?}", m.shards);
+    let stolen: u64 = m.shards.iter().map(|s| s.stolen).sum();
+    assert!(stolen >= 1);
+    assert_eq!(
+        m.shards.iter().map(|s| s.handled).sum::<u64>(),
+        32,
+        "per-shard counts account for every job"
+    );
+    svc.shutdown();
+}
+
+/// The acceptance property: sharded `run_batch` output bits equal the
+/// single-shard service's bits (which themselves equal the unsharded
+/// `FftService`'s) — scheduling never changes numerics.
+#[test]
+fn sharded_run_batch_bitwise_identical_to_single_shard() {
+    let inputs: Vec<_> = (0..12)
+        .map(|i| signal(if i % 3 == 0 { 256 } else { 1024 }, 4000 + i as u64))
+        .collect();
+
+    let single = pool(1, 2);
+    let base: Vec<Vec<(u32, u32)>> = single
+        .run_batch(inputs.clone())
+        .unwrap()
+        .iter()
+        .map(|r| bits(&r.output))
+        .collect();
+    single.shutdown();
+
+    let sharded = pool(4, 0);
+    let got = sharded.run_batch(inputs.clone()).unwrap();
+    sharded.shutdown();
+    assert_eq!(got.len(), base.len());
+    for (i, (r, want)) in got.iter().zip(&base).enumerate() {
+        assert_eq!(bits(&r.output), *want, "job {i}");
+    }
+
+    // and both match the unsharded single-queue service
+    let flat = FftService::start(ServiceConfig {
+        cores: 2,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap();
+    let flat_results = flat.run_batch(inputs).unwrap();
+    for (i, (r, want)) in flat_results.iter().zip(&base).enumerate() {
+        assert_eq!(bits(&r.output), *want, "unsharded job {i}");
+    }
+    flat.shutdown();
+}
+
+/// `submit_batch` chunks a homogeneous batch across shards and still
+/// returns bitwise-identical results in submission order.
+#[test]
+fn sharded_submit_batch_chunks_bitwise_identical_and_ordered() {
+    let inputs: Vec<_> = (0..32).map(|i| signal(512, 7000 + i as u64)).collect();
+
+    let flat = FftService::start(ServiceConfig {
+        cores: 1,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap();
+    let base: Vec<Vec<(u32, u32)>> = flat
+        .submit_batch(inputs.clone())
+        .unwrap()
+        .iter()
+        .map(|r| bits(&r.output))
+        .collect();
+    flat.shutdown();
+
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 4,
+        steal_threshold: 0,
+        min_chunk: 4,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+    })
+    .unwrap();
+    let got = svc.submit_batch(inputs).unwrap();
+    assert_eq!(got.len(), 32);
+    for w in got.windows(2) {
+        assert!(w[0].id < w[1].id, "ids follow submission order");
+    }
+    for (i, (r, want)) in got.iter().zip(&base).enumerate() {
+        assert_eq!(bits(&r.output), *want, "job {i}");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.served, 32);
+    assert_eq!(m.batches, 4, "32 jobs / min_chunk 4 caps at one chunk per shard");
+    let serving = m.shards.iter().filter(|s| s.handled > 0).count();
+    assert!(serving >= 2, "chunks spread across the pool: {:?}", m.shards);
+    svc.shutdown();
+}
+
+/// Steady-state traffic over N > 1 shards keeps the shared plan cache
+/// hot: one generation (plus at most per-shard races) serves everyone.
+#[test]
+fn plan_cache_hit_rate_exceeds_090_with_multiple_shards() {
+    let svc = pool(4, 0);
+    let inputs: Vec<_> = (0..128).map(|i| signal(1024, i)).collect();
+    let results = svc.run_batch(inputs).unwrap();
+    assert_eq!(results.len(), 128);
+    let m = svc.metrics();
+    let pc = m.plan_cache;
+    assert_eq!(pc.entries, 1, "one design point resident");
+    assert!(
+        pc.misses <= 4,
+        "at most one double-build race per shard: {} misses",
+        pc.misses
+    );
+    assert!(
+        pc.hit_rate() > 0.9,
+        "hit rate {:.3} ({} hits / {} misses)",
+        pc.hit_rate(),
+        pc.hits,
+        pc.misses
+    );
+    svc.shutdown();
+}
+
+/// Mixed sizes through the sharded batch path: coalescing, chunking and
+/// reassembly preserve order and correctness.
+#[test]
+fn sharded_mixed_size_batch_correct_and_ordered() {
+    let svc = pool(3, 2);
+    let sizes = [256usize, 1024, 256, 4096, 1024, 256];
+    let inputs: Vec<_> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| signal(n, i as u64))
+        .collect();
+    let results = svc.submit_batch(inputs).unwrap();
+    assert_eq!(results.len(), sizes.len());
+    for (idx, (r, &n)) in results.iter().zip(&sizes).enumerate() {
+        assert_eq!(r.output.len(), n);
+        let got: Vec<_> = r
+            .output
+            .iter()
+            .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+            .collect();
+        let want = reference::fft(&reference::test_signal(n, idx as u64));
+        assert!(reference::rms_rel_error(&got, &want) < fft::F32_TOL);
+    }
+    svc.shutdown();
+}
+
+/// Errors stay per-job and shards survive them.
+#[test]
+fn sharded_batch_with_bad_size_errors_cleanly() {
+    let svc = pool(2, 2);
+    assert!(svc.submit_batch(vec![signal(100, 0); 3]).is_err());
+    let m = svc.metrics();
+    assert_eq!(m.errors, 3);
+    assert_eq!(m.served, 0);
+    let ok = svc.submit(signal(256, 1)).recv().unwrap();
+    assert!(ok.is_ok());
+    svc.shutdown();
+}
