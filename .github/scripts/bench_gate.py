@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Reads the quick-mode JSON rows written by `benches/shard.rs`
+(`jobs_per_s` per row) and `benches/loadtest.rs` (`achieved_rps` per
+row), reduces each to an aggregate throughput (geometric mean across
+rows), and fails when either aggregate falls more than the threshold
+below the committed `BENCH_baseline.json`.
+
+The baseline is a conservative floor, not a point estimate: CI runners
+are noisy, so the gate only trips on real cliffs (default threshold:
+15%). When a run lands far above the floor, the gate prints the values
+to ratchet the baseline up to (baseline * 1.0 is always safe to raise
+toward ~80% of a typical run).
+
+Usage:
+    bench_gate.py --baseline BENCH_baseline.json \
+                  --shard BENCH_shard.json --loadtest BENCH_loadtest.json
+"""
+
+import argparse
+import json
+import math
+import sys
+
+
+def geomean(values):
+    vals = [v for v in values if v > 0]
+    if not vals:
+        return 0.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def aggregate(path, field):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list) or not rows:
+        raise SystemExit(f"{path}: expected a non-empty JSON array of bench rows")
+    missing = [r for r in rows if field not in r]
+    if missing:
+        raise SystemExit(f"{path}: {len(missing)} rows lack the `{field}` field")
+    return geomean(r[field] for r in rows), len(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--shard", required=True)
+    ap.add_argument("--loadtest", required=True)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    threshold = float(baseline.get("threshold", 0.15))
+
+    checks = [
+        ("shard", args.shard, "jobs_per_s", baseline["shard"]["agg_jobs_per_s"]),
+        ("loadtest", args.loadtest, "achieved_rps", baseline["loadtest"]["agg_achieved_rps"]),
+    ]
+
+    failed = False
+    for name, path, field, base in checks:
+        cur, nrows = aggregate(path, field)
+        floor = base * (1.0 - threshold)
+        status = "OK" if cur >= floor else "REGRESSION"
+        print(
+            f"bench-gate {name:<9} aggregate {field} = {cur:10.1f} "
+            f"({nrows} rows) | baseline {base:10.1f} | floor {floor:10.1f} | {status}"
+        )
+        if cur < floor:
+            failed = True
+        elif base > 0 and cur > base * 1.5:
+            print(
+                f"  note: {name} runs {cur / base:.1f}x above the committed floor — "
+                f"consider ratcheting BENCH_baseline.json up toward {0.8 * cur:.0f}"
+            )
+
+    if failed:
+        print(
+            f"\nFAIL: aggregate throughput regressed more than "
+            f"{threshold:.0%} below the committed baseline.",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print("\nbench-gate passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,11 @@
 //! make artifacts && cargo run --release --example fft_service  # + PJRT
 //! ```
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
-    Backend, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
+    loadgen, AdmissionPolicy, ArrivalPattern, Backend, FftService, LoadgenConfig, ServerConfig,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -124,6 +125,37 @@ fn main() -> anyhow::Result<()> {
         );
         svc.shutdown();
     }
+
+    // ---- phase 4: the traffic frontend under open-loop overload ----
+    println!("\n== traffic frontend: admission control + deadlines under open-loop load ==");
+    let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+        shards: 4,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })?);
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            queue_capacity: 128,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 4,
+            aging: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )?;
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            pattern: ArrivalPattern::Poisson,
+            rate_hz: 2000.0,
+            duration: Duration::from_millis(1500),
+            deadline: Some(Duration::from_millis(25)),
+            ..Default::default()
+        },
+    );
+    print!("{}", report.render());
+    assert!(report.accounted, "every request must get a result or a typed error");
+    server.shutdown();
 
     // ---- PJRT phases need the AOT artifacts and the pjrt feature ----
     let have_artifacts = std::path::Path::new("artifacts/fft256.hlo.txt").exists();

@@ -6,7 +6,8 @@ use std::time::Instant;
 fn main() {
     let cfg = SmConfig::for_radix(Variant::DP, 16);
     let fp = fft::generate(&cfg, 4096, 16).unwrap();
-    let input: Vec<(f32,f32)> = reference::test_signal(4096, 3).iter().map(|c| c.to_f32_pair()).collect();
+    let input: Vec<(f32, f32)> =
+        reference::test_signal(4096, 3).iter().map(|c| c.to_f32_pair()).collect();
     let iters = 2000;
 
     let t0 = Instant::now();

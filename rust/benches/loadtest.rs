@@ -1,0 +1,152 @@
+//! Bench: traffic-frontend serving capacity under open-loop overload.
+//!
+//! Each configuration floods a freshly started admission-controlled
+//! frontend (4 shards, shed policy) with an offered rate far above
+//! service capacity, so `achieved_rps` measures the sustainable
+//! serving throughput — the number the CI `bench-gate` job regression-
+//! checks against `BENCH_baseline.json`. Shed rate, deadline-miss rate
+//! and the queue-wait / service-time p99s ride along in the JSON rows.
+//!
+//! ```sh
+//! cargo bench --bench loadtest                      # full sweep
+//! cargo bench --bench loadtest -- --quick           # CI-sized sweep
+//! cargo bench --bench loadtest -- --json BENCH_loadtest.json
+//! ```
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, ArrivalPattern, Backend, LoadReport, LoadgenConfig, ServerConfig,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+};
+
+/// Start a frontend whose *backend* is already warm (plan cache built,
+/// shard executors resident for every size). Warming goes through the
+/// execution service directly, before the `TrafficServer` wraps it, so
+/// the frontend's cumulative latency histograms — which `loadgen::run`
+/// reports from — only ever see the measured run.
+fn server(sizes: &[usize]) -> TrafficServer {
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 4,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    for &points in sizes {
+        let warm: Vec<Vec<(f32, f32)>> = (0..8)
+            .map(|i| {
+                egpu_fft::fft::reference::test_signal(points, i as u64)
+                    .iter()
+                    .map(|c| c.to_f32_pair())
+                    .collect()
+            })
+            .collect();
+        svc.run_batch(warm).unwrap();
+    }
+    TrafficServer::start(
+        ServiceHandle::Sharded(svc),
+        ServerConfig {
+            queue_capacity: 256,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 4,
+            aging: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+struct Row {
+    config: &'static str,
+    report: LoadReport,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let duration = if quick { Duration::from_millis(1500) } else { Duration::from_secs(4) };
+    let rate = 20_000.0; // far above capacity: achieved == sustainable
+    let mixed = vec![256, 512, 1024, 2048, 4096];
+    let configs: &[(&'static str, ArrivalPattern, Vec<usize>)] = &[
+        ("poisson_fft1024", ArrivalPattern::Poisson, vec![1024]),
+        ("poisson_mixed", ArrivalPattern::Poisson, mixed.clone()),
+        ("burst_mixed", ArrivalPattern::Burst, mixed),
+    ];
+
+    println!(
+        "\n=== loadtest capacity: {rate:.0} req/s offered for {:.1}s per config, shed policy{} ===",
+        duration.as_secs_f64(),
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (config, pattern, sizes) in configs {
+        let srv = server(sizes);
+        let report = loadgen::run(
+            &srv,
+            &LoadgenConfig {
+                pattern: *pattern,
+                rate_hz: rate,
+                duration,
+                sizes: sizes.clone(),
+                deadline: Some(Duration::from_millis(25)),
+                ..Default::default()
+            },
+        );
+        assert!(report.accounted, "{config}: every request must be answered");
+        println!(
+            "  {config:<16} achieved {:>7.0} rps (offered {:.0}), shed {:.1}%, \
+             miss {:.1}%, q-p99 {:.0}us, s-p99 {:.0}us",
+            report.achieved_rps,
+            report.offered_rps,
+            100.0 * report.shed_rate,
+            100.0 * report.deadline_miss_rate,
+            report.queue_wait_us[2],
+            report.service_time_us[2]
+        );
+        rows.push(Row { config: *config, report });
+        srv.shutdown();
+    }
+
+    let geomean = rows
+        .iter()
+        .map(|r| r.report.achieved_rps.max(1e-9).ln())
+        .sum::<f64>()
+        / rows.len() as f64;
+    println!("\naggregate achieved throughput (geomean): {:.0} rps", geomean.exp());
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let rep = &r.report;
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"loadtest\", \"config\": \"{}\", \"pattern\": \"{}\", \
+                 \"achieved_rps\": {:.1}, \"offered_rps\": {:.1}, \"shed_rate\": {:.4}, \
+                 \"deadline_miss_rate\": {:.4}, \"queue_p99_us\": {:.1}, \
+                 \"service_p99_us\": {:.1}, \"quick\": {}}}{}\n",
+                r.config,
+                rep.pattern,
+                rep.achieved_rps,
+                rep.offered_rps,
+                rep.shed_rate,
+                rep.deadline_miss_rate,
+                rep.queue_wait_us[2],
+                rep.service_time_us[2],
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

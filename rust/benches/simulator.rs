@@ -58,7 +58,13 @@ fn main() {
 
     harness::section("feature ablations (4096-pt radix-16 totals)");
     let base = run_total(4096, 16, Variant::DP);
-    for v in [Variant::DP_VM, Variant::DP_COMPLEX, Variant::DP_VM_COMPLEX, Variant::QP, Variant::QP_COMPLEX] {
+    for v in [
+        Variant::DP_VM,
+        Variant::DP_COMPLEX,
+        Variant::DP_VM_COMPLEX,
+        Variant::QP,
+        Variant::QP_COMPLEX,
+    ] {
         let t = run_total(4096, 16, v);
         println!(
             "  {:<18} total {:>6} cycles ({:+.1}% vs DP), time {:>6.2} us, eff {:>5.2}%",

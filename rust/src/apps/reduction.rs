@@ -20,7 +20,7 @@ use crate::arch::SmConfig;
 use crate::fft::plan::PlanError;
 use crate::isa::{Inst, Program, Reg};
 use crate::profile::Profile;
-use crate::sim::{Sm, SimError};
+use crate::sim::{SimError, Sm};
 use thiserror::Error;
 
 #[derive(Debug, Error)]

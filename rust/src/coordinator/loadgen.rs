@@ -1,0 +1,479 @@
+//! Open-loop load generator for the traffic frontend.
+//!
+//! Drives a [`TrafficServer`] with a realistic arrival process —
+//! requests are submitted on their own clock regardless of how fast
+//! the service drains them (open loop), which is what exposes queueing,
+//! shedding and deadline behaviour that a closed submit-and-wait loop
+//! structurally cannot produce. Two arrival patterns:
+//!
+//! * **Poisson** — exponentially distributed interarrival gaps at the
+//!   offered rate (the classic open-network model of independent
+//!   users);
+//! * **Burst** — the same mean rate delivered as back-to-back groups of
+//!   [`LoadgenConfig::burst_size`] requests, stressing the admission
+//!   queue and the shed path.
+//!
+//! Requests draw transform sizes from a mixed 256–4096 pool, split
+//! between the two priority classes, and may carry a deadline. The
+//! [`LoadReport`] accounts every submission — completed, shed,
+//! expired, failed; `lost` (a reply channel dropped with no answer)
+//! must be zero, which `rust/tests/server.rs` pins — and reports
+//! offered vs achieved throughput, shed rate, deadline-miss rate and
+//! tail latencies (queue wait and service time separately) as text or
+//! JSON. The RNG is a seeded xorshift so a load test is reproducible.
+
+use std::fmt::Write as _;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Error, Result};
+
+use super::server::{Priority, RequestOpts, ServerResult, TrafficServer};
+use super::ServiceError;
+use crate::fft::reference;
+
+/// Small deterministic xorshift64* generator — the offline image has no
+/// `rand`, and load tests must be reproducible from a seed anyway.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+}
+
+/// Arrival process shape (both deliver the same mean offered rate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    Poisson,
+    Burst,
+}
+
+impl std::fmt::Display for ArrivalPattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArrivalPattern::Poisson => write!(f, "poisson"),
+            ArrivalPattern::Burst => write!(f, "burst"),
+        }
+    }
+}
+
+impl std::str::FromStr for ArrivalPattern {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "poisson" => Ok(ArrivalPattern::Poisson),
+            "burst" => Ok(ArrivalPattern::Burst),
+            other => bail!("unknown arrival pattern `{other}` (poisson|burst)"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub pattern: ArrivalPattern,
+    /// Offered load, requests/s.
+    pub rate_hz: f64,
+    pub duration: Duration,
+    /// Requests per burst (Burst pattern only).
+    pub burst_size: usize,
+    /// Transform-size pool, drawn uniformly per request.
+    pub sizes: Vec<usize>,
+    /// Fraction of requests submitted at `Priority::High`.
+    pub high_fraction: f64,
+    /// Per-request deadline (None = whatever the server defaults to).
+    pub deadline: Option<Duration>,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            pattern: ArrivalPattern::Poisson,
+            rate_hz: 1000.0,
+            duration: Duration::from_secs(2),
+            burst_size: 32,
+            sizes: vec![256, 512, 1024, 2048, 4096],
+            high_fraction: 0.5,
+            deadline: Some(Duration::from_millis(25)),
+            seed: 42,
+        }
+    }
+}
+
+/// Everything a load-test run observed. Constructed by [`run`];
+/// serialized by [`LoadReport::to_json`] / rendered by
+/// [`LoadReport::render`].
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub pattern: ArrivalPattern,
+    pub rate_hz: f64,
+    pub duration_s: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub late: u64,
+    pub degraded: u64,
+    pub failed: u64,
+    /// Reply channels that closed without any answer — always 0 unless
+    /// the frontend dropped a request on the floor.
+    pub lost: u64,
+    pub served_high: u64,
+    pub served_low: u64,
+    pub aged: u64,
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub shed_rate: f64,
+    pub deadline_miss_rate: f64,
+    /// p50/p90/p99/p999/mean/max, µs.
+    pub queue_wait_us: [f64; 6],
+    pub service_time_us: [f64; 6],
+    pub elapsed_s: f64,
+    /// Every submission got a result or a typed error.
+    pub accounted: bool,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> String {
+        let lat = |l: &[f64; 6]| {
+            format!(
+                "{{\"p50\": {:.1}, \"p90\": {:.1}, \"p99\": {:.1}, \"p999\": {:.1}, \
+                 \"mean\": {:.1}, \"max\": {:.1}}}",
+                l[0], l[1], l[2], l[3], l[4], l[5]
+            )
+        };
+        let mut s = String::from("{\n");
+        let _ = writeln!(s, "  \"pattern\": \"{}\",", self.pattern);
+        let _ = writeln!(s, "  \"rate_hz\": {:.1},", self.rate_hz);
+        let _ = writeln!(s, "  \"duration_s\": {:.3},", self.duration_s);
+        let _ = writeln!(s, "  \"submitted\": {},", self.submitted);
+        let _ = writeln!(s, "  \"completed\": {},", self.completed);
+        let _ = writeln!(s, "  \"shed\": {},", self.shed);
+        let _ = writeln!(s, "  \"expired\": {},", self.expired);
+        let _ = writeln!(s, "  \"late\": {},", self.late);
+        let _ = writeln!(s, "  \"degraded\": {},", self.degraded);
+        let _ = writeln!(s, "  \"failed\": {},", self.failed);
+        let _ = writeln!(s, "  \"lost\": {},", self.lost);
+        let _ = writeln!(s, "  \"served_high\": {},", self.served_high);
+        let _ = writeln!(s, "  \"served_low\": {},", self.served_low);
+        let _ = writeln!(s, "  \"aged\": {},", self.aged);
+        let _ = writeln!(s, "  \"offered_rps\": {:.1},", self.offered_rps);
+        let _ = writeln!(s, "  \"achieved_rps\": {:.1},", self.achieved_rps);
+        let _ = writeln!(s, "  \"shed_rate\": {:.4},", self.shed_rate);
+        let _ = writeln!(s, "  \"deadline_miss_rate\": {:.4},", self.deadline_miss_rate);
+        let _ = writeln!(s, "  \"queue_wait_us\": {},", lat(&self.queue_wait_us));
+        let _ = writeln!(s, "  \"service_time_us\": {},", lat(&self.service_time_us));
+        let _ = writeln!(s, "  \"elapsed_s\": {:.3},", self.elapsed_s);
+        let _ = writeln!(s, "  \"accounted\": {}", self.accounted);
+        s.push('}');
+        s
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "loadtest: {} arrivals at {:.0} req/s offered for {:.1}s",
+            self.pattern, self.rate_hz, self.duration_s
+        );
+        let _ = writeln!(
+            s,
+            "  offered {:.0} rps -> achieved {:.0} rps ({} submitted, {} completed)",
+            self.offered_rps, self.achieved_rps, self.submitted, self.completed
+        );
+        let _ = writeln!(
+            s,
+            "  shed {} ({:.1}%), degraded {}, expired {} + late {} \
+             (deadline miss rate {:.1}%), failed {}, lost {}",
+            self.shed,
+            100.0 * self.shed_rate,
+            self.degraded,
+            self.expired,
+            self.late,
+            100.0 * self.deadline_miss_rate,
+            self.failed,
+            self.lost
+        );
+        let _ = writeln!(
+            s,
+            "  priorities: {} high / {} low served, {} aged promotions",
+            self.served_high, self.served_low, self.aged
+        );
+        let _ = writeln!(
+            s,
+            "  queue wait   p50 {:>7.0}us  p90 {:>7.0}us  p99 {:>7.0}us  p999 {:>7.0}us",
+            self.queue_wait_us[0], self.queue_wait_us[1], self.queue_wait_us[2],
+            self.queue_wait_us[3]
+        );
+        let _ = writeln!(
+            s,
+            "  service time p50 {:>7.0}us  p90 {:>7.0}us  p99 {:>7.0}us  p999 {:>7.0}us",
+            self.service_time_us[0], self.service_time_us[1], self.service_time_us[2],
+            self.service_time_us[3]
+        );
+        let _ = writeln!(
+            s,
+            "  accounting: every request answered = {}",
+            if self.accounted { "yes" } else { "NO — BUG" }
+        );
+        s
+    }
+}
+
+/// Arrival offsets (seconds from start) for one run of `cfg`.
+fn arrivals(cfg: &LoadgenConfig, rng: &mut Rng) -> Vec<f64> {
+    let dur = cfg.duration.as_secs_f64();
+    let mut out = Vec::new();
+    match cfg.pattern {
+        ArrivalPattern::Poisson => {
+            let mut t = 0.0;
+            loop {
+                t += -(1.0 - rng.next_f64()).ln() / cfg.rate_hz;
+                if t >= dur {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+        ArrivalPattern::Burst => {
+            let period = cfg.burst_size as f64 / cfg.rate_hz;
+            let mut t = 0.0;
+            while t < dur {
+                for _ in 0..cfg.burst_size {
+                    out.push(t);
+                }
+                t += period;
+            }
+        }
+    }
+    out
+}
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+/// Run one open-loop load test against `server` and account for every
+/// submission. The server should be freshly started: tail latencies are
+/// read from its cumulative frontend histograms.
+pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
+    let mut rng = Rng::new(cfg.seed);
+    let offsets = arrivals(cfg, &mut rng);
+    // One prototype signal per distinct size, generated *before* the
+    // clock starts: generating a fresh 4096-point test signal per
+    // request would eat a large slice of a 50µs interarrival gap and
+    // silently erode the offered rate. Submission clones a prototype
+    // (one memcpy), which is the cheapest input the API allows.
+    let prototypes: Vec<Vec<(f32, f32)>> = cfg
+        .sizes
+        .iter()
+        .enumerate()
+        .map(|(k, &points)| signal(points, cfg.seed.wrapping_add(k as u64)))
+        .collect();
+    let start = Instant::now();
+    let mut pending: Vec<Receiver<ServerResult>> = Vec::with_capacity(offsets.len());
+    let mut submitted = 0u64;
+    let mut shed = 0u64;
+    let mut rejected = 0u64;
+    for &offset in &offsets {
+        let target = start + Duration::from_secs_f64(offset);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let idx = (rng.next_u64() % prototypes.len() as u64) as usize;
+        let priority = if rng.next_f64() < cfg.high_fraction {
+            Priority::High
+        } else {
+            Priority::Low
+        };
+        submitted += 1;
+        let opts = RequestOpts { priority, deadline: cfg.deadline };
+        match server.submit(prototypes[idx].clone(), opts) {
+            Ok(rx) => pending.push(rx),
+            Err(ServiceError::QueueFull { .. }) => shed += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    let gen_elapsed = start.elapsed().as_secs_f64();
+
+    let (mut completed, mut expired, mut late, mut degraded) = (0u64, 0u64, 0u64, 0u64);
+    let (mut failed, mut lost) = (0u64, 0u64);
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(s)) => {
+                completed += 1;
+                if s.degraded {
+                    degraded += 1;
+                }
+                if s.deadline_missed {
+                    late += 1;
+                }
+            }
+            Ok(Err(ServiceError::DeadlineExceeded { .. })) => expired += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => lost += 1,
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+
+    let snap = server.metrics();
+    let sv = &snap.server;
+    let lat = |l: &super::metrics::LatencyStats| {
+        [
+            l.percentile_us(0.50),
+            l.percentile_us(0.90),
+            l.percentile_us(0.99),
+            l.percentile_us(0.999),
+            l.mean_us(),
+            l.max_us,
+        ]
+    };
+    LoadReport {
+        pattern: cfg.pattern,
+        rate_hz: cfg.rate_hz,
+        duration_s: cfg.duration.as_secs_f64(),
+        submitted,
+        completed,
+        shed,
+        expired,
+        late,
+        degraded,
+        failed: failed + rejected,
+        lost,
+        served_high: sv.served_high,
+        served_low: sv.served_low,
+        aged: sv.aged,
+        offered_rps: if gen_elapsed > 0.0 { submitted as f64 / gen_elapsed } else { 0.0 },
+        achieved_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+        shed_rate: if submitted == 0 { 0.0 } else { shed as f64 / submitted as f64 },
+        deadline_miss_rate: sv.deadline_miss_rate(),
+        queue_wait_us: lat(&sv.queue_wait),
+        service_time_us: lat(&sv.service_time),
+        elapsed_s: elapsed,
+        accounted: lost == 0 && completed + expired + shed + failed + rejected == submitted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic_and_uniformish() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut r = Rng::new(9);
+        let mean: f64 = (0..10_000).map(|_| r.next_f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "xorshift mean {mean}");
+    }
+
+    #[test]
+    fn poisson_arrivals_hit_the_offered_rate() {
+        let cfg = LoadgenConfig {
+            rate_hz: 5000.0,
+            duration: Duration::from_secs(2),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let a = arrivals(&cfg, &mut rng);
+        let expect = 10_000.0;
+        assert!(
+            (a.len() as f64 - expect).abs() < expect * 0.1,
+            "poisson arrival count {} vs expected {expect}",
+            a.len()
+        );
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+        assert!(a.last().copied().unwrap_or(0.0) < 2.0);
+    }
+
+    #[test]
+    fn burst_arrivals_come_in_groups_at_the_same_mean_rate() {
+        let cfg = LoadgenConfig {
+            pattern: ArrivalPattern::Burst,
+            rate_hz: 1000.0,
+            burst_size: 50,
+            duration: Duration::from_secs(1),
+            ..Default::default()
+        };
+        let mut rng = Rng::new(3);
+        let a = arrivals(&cfg, &mut rng);
+        assert_eq!(a.len() % 50, 0, "whole bursts only");
+        assert!((a.len() as f64 - 1000.0).abs() <= 50.0, "mean rate held: {}", a.len());
+        assert_eq!(a[0], a[49], "a burst arrives back-to-back");
+        assert!(a[50] > a[49], "bursts are separated by the period");
+    }
+
+    #[test]
+    fn pattern_parsing_round_trips() {
+        assert_eq!("poisson".parse::<ArrivalPattern>().unwrap(), ArrivalPattern::Poisson);
+        assert_eq!("BURST".parse::<ArrivalPattern>().unwrap(), ArrivalPattern::Burst);
+        assert!("uniform".parse::<ArrivalPattern>().is_err());
+        assert_eq!(ArrivalPattern::Poisson.to_string(), "poisson");
+    }
+
+    #[test]
+    fn report_json_has_the_gated_fields() {
+        let r = LoadReport {
+            pattern: ArrivalPattern::Poisson,
+            rate_hz: 5000.0,
+            duration_s: 5.0,
+            submitted: 10,
+            completed: 8,
+            shed: 1,
+            expired: 1,
+            late: 0,
+            degraded: 0,
+            failed: 0,
+            lost: 0,
+            served_high: 5,
+            served_low: 3,
+            aged: 1,
+            offered_rps: 5000.0,
+            achieved_rps: 4000.0,
+            shed_rate: 0.1,
+            deadline_miss_rate: 0.111,
+            queue_wait_us: [10.0, 20.0, 40.0, 80.0, 15.0, 100.0],
+            service_time_us: [5.0, 10.0, 20.0, 40.0, 8.0, 50.0],
+            elapsed_s: 5.2,
+            accounted: true,
+        };
+        let j = r.to_json();
+        for key in [
+            "\"achieved_rps\"",
+            "\"shed_rate\"",
+            "\"deadline_miss_rate\"",
+            "\"queue_wait_us\"",
+            "\"service_time_us\"",
+            "\"p50\"",
+            "\"p99\"",
+            "\"accounted\": true",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(r.render().contains("every request answered = yes"));
+    }
+}

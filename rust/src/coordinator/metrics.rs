@@ -1,9 +1,12 @@
 //! Service metrics: throughput, latency distribution, simulated
 //! (virtual) eGPU time, aggregate efficiency, batched-dispatch
-//! occupancy, shared plan-cache counters, and — for the sharded
-//! scheduler — per-shard occupancy, queue depth and steal counts.
+//! occupancy, shared plan-cache counters, per-shard scheduler counters,
+//! and — for the admission-controlled [`super::server::TrafficServer`]
+//! — queue-wait vs service-time latency recorders plus admission /
+//! shedding / deadline / priority accounting.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::fft::cache::CacheStats;
@@ -12,6 +15,154 @@ use crate::profile::Profile;
 /// Latency histogram bucket upper bounds, µs (log-spaced).
 pub const LATENCY_BUCKETS_US: [f64; 8] =
     [50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 10_000.0, f64::INFINITY];
+
+/// Number of log₂ buckets in a [`LatencyRecorder`]: bucket `i` counts
+/// samples whose bit length in µs is `i`, i.e. values in
+/// `[2^(i-1), 2^i)`. 32 buckets cover up to ~2^31 µs (~36 minutes).
+pub const LATENCY_LOG_BUCKETS: usize = 32;
+
+/// Lock-free log₂-bucketed latency recorder (µs resolution).
+///
+/// The traffic frontend records *queue wait* and *service time* into
+/// two separate recorders so head-of-line blocking is distinguishable
+/// from slow backends. Buckets are powers of two, so percentile
+/// estimates are upper bounds accurate to within 2×, which is the
+/// right fidelity for p99/p999 gating without a lock on the hot path.
+#[derive(Default)]
+pub struct LatencyRecorder {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    buckets: [AtomicU64; LATENCY_LOG_BUCKETS],
+}
+
+impl LatencyRecorder {
+    /// Record one sample, in µs.
+    pub fn record(&self, us: f64) {
+        let v = us.max(0.0) as u64;
+        let bucket = if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(LATENCY_LOG_BUCKETS - 1)
+        };
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
+        self.max_us.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencyStats {
+        let mut buckets = [0u64; LATENCY_LOG_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        LatencyStats {
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed) as f64,
+            max_us: self.max_us.load(Ordering::Relaxed) as f64,
+            buckets,
+        }
+    }
+}
+
+/// A point-in-time copy of a [`LatencyRecorder`].
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub sum_us: f64,
+    pub max_us: f64,
+    pub buckets: [u64; LATENCY_LOG_BUCKETS],
+}
+
+impl LatencyStats {
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Percentile estimate (upper bound of the covering bucket), µs.
+    /// `q` in `[0, 1]`; returns 0 with no samples.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 { 1.0 } else { (1u64 << i) as f64 };
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Traffic-frontend counters, as captured by
+/// `TrafficServer::metrics` (all zeros / empty for services running
+/// without an admission layer).
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// All `submit` calls, whether admitted or shed.
+    pub submitted: u64,
+    /// Requests that entered an admission queue.
+    pub admitted: u64,
+    /// Requests that completed with a successful FFT result.
+    pub completed: u64,
+    /// Requests rejected at admission with `ServiceError::QueueFull`.
+    pub shed: u64,
+    /// Requests served at reduced resolution by the Degrade policy.
+    pub degraded: u64,
+    /// Requests whose deadline expired while queued (typed error, never
+    /// served).
+    pub expired: u64,
+    /// Requests served to completion but past their deadline.
+    pub late: u64,
+    /// Requests that failed in the backend (typed error delivered).
+    pub failed: u64,
+    /// Completions by priority class.
+    pub served_high: u64,
+    pub served_low: u64,
+    /// Low-priority dequeues forced ahead of waiting high-priority work
+    /// by the aging rule (the starvation-freedom mechanism firing).
+    pub aged: u64,
+    /// Peak admission-queue depth (both classes) observed.
+    pub max_queue_depth: usize,
+    /// Time from admission to dispatch.
+    pub queue_wait: LatencyStats,
+    /// Time from dispatch to backend completion.
+    pub service_time: LatencyStats,
+}
+
+impl ServerStats {
+    /// Fraction of submissions rejected at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+
+    /// Fraction of admitted requests that missed their deadline —
+    /// expired in queue or served late.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            (self.expired + self.late) as f64 / self.admitted as f64
+        }
+    }
+
+    /// Every admitted request is accounted for: completed, expired, or
+    /// failed with a typed error. Nothing is silently dropped.
+    pub fn accounted(&self) -> bool {
+        self.completed + self.expired + self.failed == self.admitted
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -84,6 +235,7 @@ impl Metrics {
             shards: Vec::new(),
             steals: 0,
             agg_jobs_per_s: 0.0,
+            server: ServerStats::default(),
         }
     }
 }
@@ -142,6 +294,9 @@ pub struct MetricsSnapshot {
     /// Aggregate served throughput since service start, jobs/s (sharded
     /// service only; 0.0 otherwise).
     pub agg_jobs_per_s: f64,
+    /// Traffic-frontend counters (filled in by `TrafficServer::metrics`;
+    /// all-zero for services running without an admission layer).
+    pub server: ServerStats,
 }
 
 impl MetricsSnapshot {
@@ -218,6 +373,45 @@ impl MetricsSnapshot {
                 self.plan_cache.misses,
                 self.plan_cache.evictions,
                 self.plan_cache.lock_contentions
+            ));
+        }
+        if self.server.submitted > 0 {
+            let sv = &self.server;
+            s.push_str(&format!(
+                "  frontend: {} submitted, {} admitted, {} completed, {} shed \
+                 ({:.3}), {} degraded, {} expired + {} late (miss rate {:.3}), \
+                 {} aged, peak queue {}\n",
+                sv.submitted,
+                sv.admitted,
+                sv.completed,
+                sv.shed,
+                sv.shed_rate(),
+                sv.degraded,
+                sv.expired,
+                sv.late,
+                sv.deadline_miss_rate(),
+                sv.aged,
+                sv.max_queue_depth
+            ));
+            s.push_str(&format!(
+                "    queue wait   p50 {:.0}us p90 {:.0}us p99 {:.0}us p999 {:.0}us \
+                 (mean {:.0}us, max {:.0}us)\n",
+                sv.queue_wait.percentile_us(0.50),
+                sv.queue_wait.percentile_us(0.90),
+                sv.queue_wait.percentile_us(0.99),
+                sv.queue_wait.percentile_us(0.999),
+                sv.queue_wait.mean_us(),
+                sv.queue_wait.max_us
+            ));
+            s.push_str(&format!(
+                "    service time p50 {:.0}us p90 {:.0}us p99 {:.0}us p999 {:.0}us \
+                 (mean {:.0}us, max {:.0}us)\n",
+                sv.service_time.percentile_us(0.50),
+                sv.service_time.percentile_us(0.90),
+                sv.service_time.percentile_us(0.99),
+                sv.service_time.percentile_us(0.999),
+                sv.service_time.mean_us(),
+                sv.service_time.max_us
             ));
         }
         if !self.shards.is_empty() {
@@ -308,6 +502,68 @@ mod tests {
         assert!(s.shards.is_empty());
         assert_eq!(s.steals, 0);
         assert_eq!(s.agg_jobs_per_s, 0.0);
+    }
+
+    #[test]
+    fn latency_recorder_buckets_and_percentiles() {
+        let r = LatencyRecorder::default();
+        for _ in 0..90 {
+            r.record(12.0); // bit length 4 -> bucket 4, upper bound 16
+        }
+        for _ in 0..9 {
+            r.record(900.0); // bit length 10 -> bucket 10, upper bound 1024
+        }
+        r.record(60_000.0); // bit length 16 -> bucket 16, upper bound 65536
+        let s = r.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.percentile_us(0.50), 16.0);
+        assert_eq!(s.percentile_us(0.90), 16.0);
+        assert_eq!(s.percentile_us(0.99), 1024.0);
+        assert_eq!(s.percentile_us(0.999), 65_536.0);
+        assert_eq!(s.max_us, 60_000.0);
+        assert!((s.mean_us() - (90.0 * 12.0 + 9.0 * 900.0 + 60_000.0) / 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn latency_recorder_edge_cases() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.snapshot().percentile_us(0.99), 0.0);
+        assert_eq!(r.snapshot().mean_us(), 0.0);
+        r.record(0.0);
+        r.record(1e18); // clamps into the last bucket
+        let s = r.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.percentile_us(0.0), 1.0);
+        assert!(s.percentile_us(1.0) >= (1u64 << (LATENCY_LOG_BUCKETS - 1)) as f64);
+    }
+
+    #[test]
+    fn server_stats_rates_and_accounting() {
+        let mut sv = ServerStats { submitted: 10, admitted: 8, shed: 2, ..Default::default() };
+        sv.completed = 6;
+        sv.expired = 1;
+        sv.failed = 1;
+        sv.late = 1;
+        assert!((sv.shed_rate() - 0.2).abs() < 1e-12);
+        assert!((sv.deadline_miss_rate() - 0.25).abs() < 1e-12);
+        assert!(sv.accounted());
+        sv.completed = 5;
+        assert!(!sv.accounted());
+        assert_eq!(ServerStats::default().shed_rate(), 0.0);
+        assert_eq!(ServerStats::default().deadline_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn render_includes_frontend_section() {
+        let mut s = Metrics::default().snapshot();
+        assert!(!s.render().contains("frontend:"));
+        s.server.submitted = 4;
+        s.server.admitted = 3;
+        s.server.shed = 1;
+        let out = s.render();
+        assert!(out.contains("frontend: 4 submitted, 3 admitted"), "{out}");
+        assert!(out.contains("queue wait"), "{out}");
+        assert!(out.contains("service time"), "{out}");
     }
 
     #[test]

@@ -31,27 +31,64 @@
 //! single shared queue with one queue per shard (each shard owning a
 //! resident simulated SM), size-affinity routing and a work-stealing
 //! overflow path — see the module docs in [`shard`].
+//!
+//! In front of either service sits the traffic frontend
+//! ([`server::TrafficServer`]): bounded admission queues with a
+//! configurable backpressure policy (block / shed / degrade), two
+//! priority classes with an aging rule, per-request deadlines, and a
+//! queue-wait vs service-time latency recorder — plus the open-loop
+//! load generator in [`loadgen`] driving it with Poisson or burst
+//! arrivals (`egpu-fft loadtest`). Failures are typed: every submit
+//! path answers with a [`ServiceError`] instead of panicking when the
+//! worker pool is gone.
 
+pub mod loadgen;
 pub mod metrics;
+pub mod server;
 pub mod shard;
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
+use thiserror::Error;
 
 use crate::arch::{SmConfig, Variant};
 use crate::fft::{self, cache::PlanCache, reference};
 use crate::profile::Profile;
 use crate::runtime::{spawn_pjrt_server, PjrtHandle};
 use crate::sim::FftExecutor;
-pub use metrics::{Metrics, MetricsSnapshot, ShardStat};
+pub use loadgen::{ArrivalPattern, LoadReport, LoadgenConfig};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat};
+pub use server::{AdmissionPolicy, Priority, RequestOpts, ServedFft, ServerConfig};
+pub use server::{ServerResult, ServiceHandle, TrafficServer};
 pub use shard::{ShardPoolConfig, ShardedFftService};
+
+/// Typed, matchable errors from the serving stack. Execution services
+/// deliver these wrapped in `anyhow::Error` (downcast to match); the
+/// traffic frontend returns them directly.
+#[derive(Debug, Error)]
+pub enum ServiceError {
+    /// The worker pool is gone: the service is shut down or every
+    /// worker died. Replaces the old panic on a closed queue.
+    #[error("worker pool gone: the service is shut down or every worker died")]
+    WorkerGone,
+    /// Admission control shed the request (queue at capacity).
+    #[error("admission queue full ({capacity} requests queued): request shed")]
+    QueueFull { capacity: usize },
+    /// The request's deadline expired while it waited in the admission
+    /// queue; it was never dispatched.
+    #[error("deadline exceeded after {waited_us:.0}us in the admission queue")]
+    DeadlineExceeded { waited_us: f64 },
+    /// The execution backend failed the request (rendered message).
+    #[error("backend error: {0}")]
+    Backend(String),
+}
 
 /// Which execution engine serves a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -180,7 +217,10 @@ impl FftService {
         })
     }
 
-    /// Submit one FFT; the returned channel yields the result.
+    /// Submit one FFT; the returned channel yields the result. If the
+    /// worker pool is gone (shutdown raced, or every worker died) the
+    /// channel yields a typed [`ServiceError::WorkerGone`] — it never
+    /// panics and never leaves the caller hanging on a dead channel.
     pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -188,11 +228,10 @@ impl FftService {
             kind: JobKind::Single { id, input, reply: reply_tx },
             submitted: Instant::now(),
         };
-        self.tx
-            .as_ref()
-            .expect("service running")
-            .send(job)
-            .expect("workers alive");
+        match self.tx.as_ref() {
+            Some(tx) => send_or_fail(tx, job),
+            None => fail_job(job),
+        }
         reply_rx
     }
 
@@ -231,11 +270,10 @@ impl FftService {
                 kind: JobKind::Batch { ids: batch_ids, inputs: batch_inputs, reply: reply_tx },
                 submitted: Instant::now(),
             };
-            self.tx
-                .as_ref()
-                .expect("service running")
-                .send(job)
-                .expect("workers alive");
+            match self.tx.as_ref() {
+                Some(tx) => send_or_fail(tx, job),
+                None => fail_job(job),
+            }
             pending.push((idxs, reply_rx));
         }
         collect_batch_results(n, pending)
@@ -248,7 +286,7 @@ impl FftService {
         let handles: Vec<_> = inputs.into_iter().map(|i| self.submit(i)).collect();
         handles
             .into_iter()
-            .map(|rx| rx.recv().map_err(|e| anyhow!("worker dropped reply: {e}"))?)
+            .map(|rx| rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))?)
             .collect()
     }
 
@@ -268,7 +306,11 @@ impl FftService {
         &self.cfg
     }
 
-    /// Drain and stop all workers.
+    /// Drain and stop all workers. Closing the queue stops new
+    /// submissions, but every job already queued or in flight is still
+    /// served (workers drain the channel before exiting, and `join`
+    /// waits for that), so replies handed out by `submit` before the
+    /// shutdown always arrive — pinned by `shutdown_drains_queued_jobs`.
     pub fn shutdown(mut self) {
         self.tx.take(); // closes the queue
         for w in self.workers.drain(..) {
@@ -331,6 +373,30 @@ impl Core {
     }
 }
 
+/// Send `job` to a worker queue; if the receiving side is gone (every
+/// worker exited), answer the job's reply channel with a typed
+/// [`ServiceError::WorkerGone`] instead of panicking. Shared by both
+/// schedulers.
+fn send_or_fail(tx: &Sender<Job>, job: Job) {
+    if let Err(SendError(job)) = tx.send(job) {
+        fail_job(job);
+    }
+}
+
+/// Answer every reply slot of an undeliverable job with
+/// [`ServiceError::WorkerGone`], so callers holding the receiver get a
+/// typed error rather than a dead channel.
+fn fail_job(job: Job) {
+    match job.kind {
+        JobKind::Single { reply, .. } => {
+            let _ = reply.send(Err(ServiceError::WorkerGone.into()));
+        }
+        JobKind::Batch { ids, reply, .. } => {
+            let _ = reply.send(ids.iter().map(|_| Err(ServiceError::WorkerGone.into())).collect());
+        }
+    }
+}
+
 /// Group batch inputs by transform size, preserving submission order
 /// inside each group. Returns `(points, original indices)` per distinct
 /// size in first-seen order. Shared by [`FftService::submit_batch`] and
@@ -363,7 +429,7 @@ type PendingBatches = Vec<(Vec<usize>, Receiver<Vec<Result<FftResult>>>)>;
 fn collect_batch_results(n: usize, pending: PendingBatches) -> Result<Vec<FftResult>> {
     let mut slots: Vec<Option<Result<FftResult>>> = (0..n).map(|_| None).collect();
     for (idxs, rx) in pending {
-        let results = rx.recv().map_err(|e| anyhow!("worker dropped batch reply: {e}"))?;
+        let results = rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))?;
         for (i, result) in idxs.into_iter().zip(results) {
             slots[i] = Some(result);
         }
@@ -598,6 +664,62 @@ mod tests {
         let ok = svc.submit(signal(256, 1)).recv().unwrap();
         assert!(ok.is_ok());
         assert_eq!(svc.metrics().errors, 1);
+    }
+
+    #[test]
+    fn dead_worker_surfaces_typed_worker_gone() {
+        // a queue whose receiving side is gone stands in for a pool
+        // where every worker died
+        let (tx, rx) = channel::<Job>();
+        drop(rx);
+        let (reply_tx, reply_rx) = channel();
+        let job = Job {
+            kind: JobKind::Single { id: 0, input: signal(256, 0), reply: reply_tx },
+            submitted: Instant::now(),
+        };
+        send_or_fail(&tx, job);
+        let err = reply_rx.recv().expect("typed reply, not a dead channel").unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServiceError>(), Some(ServiceError::WorkerGone)),
+            "want WorkerGone, got {err:#}"
+        );
+    }
+
+    #[test]
+    fn dead_worker_fails_batches_per_job() {
+        let (tx, rx) = channel::<Job>();
+        drop(rx);
+        let (reply_tx, reply_rx) = channel();
+        let job = Job {
+            kind: JobKind::Batch {
+                ids: vec![0, 1, 2],
+                inputs: (0..3).map(|i| signal(256, i)).collect(),
+                reply: reply_tx,
+            },
+            submitted: Instant::now(),
+        };
+        send_or_fail(&tx, job);
+        let results = reply_rx.recv().unwrap();
+        assert_eq!(results.len(), 3, "one typed error per job in the batch");
+        for r in results {
+            let err = r.unwrap_err();
+            assert!(matches!(
+                err.downcast_ref::<ServiceError>(),
+                Some(ServiceError::WorkerGone)
+            ));
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        // one core, several queued jobs: shutdown must serve them all
+        // before joining, so every receiver yields a real result
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let handles: Vec<_> = (0..6).map(|i| svc.submit(signal(256, i))).collect();
+        svc.shutdown();
+        for rx in handles {
+            assert!(rx.recv().expect("reply sent before worker exit").is_ok());
+        }
     }
 
     #[test]

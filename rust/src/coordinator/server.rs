@@ -1,0 +1,546 @@
+//! Traffic frontend: admission control, deadlines, and priority
+//! scheduling in front of the FFT execution services.
+//!
+//! PR 1/2 built the execution side (batched dispatch, shared plan
+//! cache, sharded scheduler); this module is the front door the
+//! ROADMAP's "heavy traffic" north star needs. A [`TrafficServer`]
+//! wraps either execution service (see [`ServiceHandle`]) with:
+//!
+//! * **bounded admission queues** — one FIFO per priority class, with a
+//!   shared capacity and a configurable [`AdmissionPolicy`] when full:
+//!   `Block` (backpressure onto the caller), `Shed` (reject with the
+//!   typed [`ServiceError::QueueFull`] — never a silent drop), or
+//!   `Degrade` (admit at half resolution under pressure, shed only at
+//!   the hard limit);
+//! * **per-request deadlines** — a request whose deadline expires while
+//!   queued is answered with [`ServiceError::DeadlineExceeded`] instead
+//!   of wasting a backend slot; one served past its deadline is
+//!   delivered but flagged and counted as a late miss;
+//! * **two priority classes with aging** — `High` is served first, but
+//!   once the oldest `Low` request has waited [`ServerConfig::aging`]
+//!   it jumps the line, so sustained high-priority load can delay low
+//!   priority by at most the aging bound plus one service time per
+//!   dispatcher (pinned by `rust/tests/server.rs`);
+//! * **a latency recorder** — queue wait and service time go into two
+//!   separate log₂-bucketed histograms
+//!   ([`super::metrics::LatencyRecorder`]), so p50/p90/p99/p999 of
+//!   "waiting for a slot" and "the backend being slow" are separately
+//!   visible in [`MetricsSnapshot::server`].
+//!
+//! Dispatch is a small pool of dispatcher threads, each forwarding one
+//! admitted request at a time into the wrapped service and waiting for
+//! its reply — so [`ServerConfig::dispatchers`] is also the in-flight
+//! bound seen by the execution layer. `shutdown` closes admission,
+//! drains every already-admitted request (serving it or answering with
+//! a typed error), joins the dispatchers, and only then shuts the inner
+//! service down.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::{LatencyRecorder, ServerStats};
+use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService};
+
+/// Request priority class. `High` is served first; `Low` is protected
+/// from starvation by the aging rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    High,
+    Low,
+}
+
+/// What happens when a request arrives and the admission queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the submitting thread until a slot frees (closed-loop
+    /// backpressure; `submit` never returns `QueueFull`).
+    Block,
+    /// Reject immediately with [`ServiceError::QueueFull`] — load is
+    /// shed at the edge, and the caller always gets a typed error.
+    Shed,
+    /// Two-level degradation: once the queue is at half capacity,
+    /// admit requests at *half resolution* (the input is truncated to
+    /// the leading `points/2` samples, a coarser spectrum that costs
+    /// roughly half the backend time — flagged in
+    /// [`ServedFft::degraded`]); at the hard capacity limit, shed with
+    /// a typed error exactly as [`AdmissionPolicy::Shed`].
+    Degrade,
+}
+
+/// Per-request submission options.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestOpts {
+    pub priority: Priority,
+    /// Relative deadline; `None` falls back to
+    /// [`ServerConfig::default_deadline`].
+    pub deadline: Option<Duration>,
+}
+
+impl Default for RequestOpts {
+    fn default() -> Self {
+        RequestOpts { priority: Priority::High, deadline: None }
+    }
+}
+
+/// Traffic-frontend configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Admission-queue capacity, shared across both priority classes.
+    pub queue_capacity: usize,
+    pub policy: AdmissionPolicy,
+    /// Dispatcher threads — also the in-flight bound on the wrapped
+    /// execution service.
+    pub dispatchers: usize,
+    /// Once the oldest low-priority request has waited this long it is
+    /// served before any high-priority work (starvation freedom).
+    pub aging: Duration,
+    /// Deadline applied to requests that do not carry their own.
+    pub default_deadline: Option<Duration>,
+    /// `Degrade` never truncates below this many points.
+    pub min_degraded_points: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_capacity: 64,
+            policy: AdmissionPolicy::Block,
+            dispatchers: 4,
+            aging: Duration::from_millis(10),
+            default_deadline: None,
+            min_degraded_points: 256,
+        }
+    }
+}
+
+/// A successfully served request, with its latency split into queue
+/// wait and service time.
+#[derive(Clone, Debug)]
+pub struct ServedFft {
+    pub result: FftResult,
+    pub priority: Priority,
+    /// Admission to dispatch, µs.
+    pub queue_us: f64,
+    /// Dispatch to backend completion, µs.
+    pub service_us: f64,
+    /// Served at half resolution by the `Degrade` policy.
+    pub degraded: bool,
+    /// Completed after its deadline (still delivered; counted as a
+    /// late miss in [`ServerStats`]).
+    pub deadline_missed: bool,
+}
+
+/// What a [`TrafficServer::submit`] reply channel yields.
+pub type ServerResult = std::result::Result<ServedFft, ServiceError>;
+
+/// Either execution service, so the frontend (and the load generator)
+/// can sit on the single-queue pool or the sharded scheduler.
+pub enum ServiceHandle {
+    Pool(FftService),
+    Sharded(ShardedFftService),
+}
+
+impl ServiceHandle {
+    fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        match self {
+            ServiceHandle::Pool(s) => s.submit(input),
+            ServiceHandle::Sharded(s) => s.submit(input),
+        }
+    }
+
+    /// Execution-layer metrics (the frontend merges its own on top).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        match self {
+            ServiceHandle::Pool(s) => s.metrics(),
+            ServiceHandle::Sharded(s) => s.metrics(),
+        }
+    }
+
+    pub fn shutdown(self) {
+        match self {
+            ServiceHandle::Pool(s) => s.shutdown(),
+            ServiceHandle::Sharded(s) => s.shutdown(),
+        }
+    }
+}
+
+/// One admitted-but-not-yet-dispatched request.
+struct Pending {
+    input: Vec<(f32, f32)>,
+    priority: Priority,
+    deadline: Option<Instant>,
+    degraded: bool,
+    enqueued: Instant,
+    reply: Sender<ServerResult>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    high: VecDeque<Pending>,
+    low: VecDeque<Pending>,
+    closed: bool,
+}
+
+impl QueueState {
+    fn depth(&self) -> usize {
+        self.high.len() + self.low.len()
+    }
+}
+
+/// The shared admission queue: one mutex-guarded state, a condvar for
+/// dispatchers waiting for work and one for blocked submitters waiting
+/// for space.
+struct Admission {
+    state: Mutex<QueueState>,
+    work: Condvar,
+    space: Condvar,
+}
+
+#[derive(Default)]
+struct ServerMetrics {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    degraded: AtomicU64,
+    expired: AtomicU64,
+    late: AtomicU64,
+    failed: AtomicU64,
+    served_high: AtomicU64,
+    served_low: AtomicU64,
+    aged: AtomicU64,
+    max_queue_depth: AtomicUsize,
+    queue_wait: LatencyRecorder,
+    service_time: LatencyRecorder,
+}
+
+impl ServerMetrics {
+    fn snapshot(&self) -> ServerStats {
+        ServerStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            late: self.late.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            served_high: self.served_high.load(Ordering::Relaxed),
+            served_low: self.served_low.load(Ordering::Relaxed),
+            aged: self.aged.load(Ordering::Relaxed),
+            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
+            queue_wait: self.queue_wait.snapshot(),
+            service_time: self.service_time.snapshot(),
+        }
+    }
+}
+
+/// Pop the next request to dispatch: the oldest low-priority request if
+/// it has aged past the threshold (counted as an aged promotion when it
+/// actually jumps waiting high-priority work), otherwise high before
+/// low.
+fn pop_next(st: &mut QueueState, aging: Duration, m: &ServerMetrics) -> Option<Pending> {
+    if let Some(front) = st.low.front() {
+        if front.enqueued.elapsed() >= aging {
+            if !st.high.is_empty() {
+                m.aged.fetch_add(1, Ordering::Relaxed);
+            }
+            return st.low.pop_front();
+        }
+    }
+    if let Some(r) = st.high.pop_front() {
+        return Some(r);
+    }
+    st.low.pop_front()
+}
+
+/// The admission-controlled frontend over an FFT execution service.
+pub struct TrafficServer {
+    cfg: ServerConfig,
+    admission: Arc<Admission>,
+    metrics: Arc<ServerMetrics>,
+    inner: Option<Arc<ServiceHandle>>,
+    dispatchers: Vec<JoinHandle<()>>,
+}
+
+impl TrafficServer {
+    pub fn start(inner: ServiceHandle, cfg: ServerConfig) -> Result<Self> {
+        if cfg.queue_capacity == 0 {
+            return Err(anyhow!("queue_capacity must be at least 1"));
+        }
+        if cfg.dispatchers == 0 {
+            return Err(anyhow!("need at least one dispatcher"));
+        }
+        let admission = Arc::new(Admission {
+            state: Mutex::new(QueueState::default()),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        });
+        let metrics = Arc::new(ServerMetrics::default());
+        let inner = Arc::new(inner);
+        let mut dispatchers = Vec::with_capacity(cfg.dispatchers);
+        for _ in 0..cfg.dispatchers {
+            let admission = Arc::clone(&admission);
+            let metrics = Arc::clone(&metrics);
+            let inner = Arc::clone(&inner);
+            let aging = cfg.aging;
+            dispatchers.push(std::thread::spawn(move || {
+                dispatcher_loop(admission, metrics, inner, aging)
+            }));
+        }
+        Ok(TrafficServer { cfg, admission, metrics, inner: Some(inner), dispatchers })
+    }
+
+    /// Submit one FFT through admission control. Returns the reply
+    /// channel on admission, or a typed error when the request is shed
+    /// (`Shed`/`Degrade` at the hard limit) or the server is shut down.
+    /// Every admitted request is answered — with a [`ServedFft`] or a
+    /// typed [`ServiceError`] — never silently dropped.
+    pub fn submit(
+        &self,
+        input: Vec<(f32, f32)>,
+        opts: RequestOpts,
+    ) -> std::result::Result<Receiver<ServerResult>, ServiceError> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let deadline = opts.deadline.or(self.cfg.default_deadline).map(|d| now + d);
+        let mut st = self.admission.state.lock().unwrap();
+        let degraded = loop {
+            if st.closed {
+                return Err(ServiceError::WorkerGone);
+            }
+            let depth = st.depth();
+            if depth < self.cfg.queue_capacity {
+                // Degrade kicks in at half capacity: coarser answers
+                // under pressure, full resolution when the queue is
+                // healthy.
+                break self.cfg.policy == AdmissionPolicy::Degrade
+                    && depth >= self.cfg.queue_capacity / 2
+                    && input.len() / 2 >= self.cfg.min_degraded_points;
+            }
+            match self.cfg.policy {
+                AdmissionPolicy::Block => st = self.admission.space.wait(st).unwrap(),
+                AdmissionPolicy::Shed | AdmissionPolicy::Degrade => {
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServiceError::QueueFull { capacity: self.cfg.queue_capacity });
+                }
+            }
+        };
+        let (reply, rx) = channel();
+        let req = Pending {
+            input,
+            priority: opts.priority,
+            deadline,
+            degraded,
+            enqueued: now,
+            reply,
+        };
+        match opts.priority {
+            Priority::High => st.high.push_back(req),
+            Priority::Low => st.low.push_back(req),
+        }
+        let depth = st.depth();
+        drop(st);
+        self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+        self.admission.work.notify_one();
+        Ok(rx)
+    }
+
+    /// Queued (admitted, not yet dispatched) requests right now.
+    pub fn queue_depth(&self) -> usize {
+        self.admission.state.lock().unwrap().depth()
+    }
+
+    /// Execution-layer metrics with the frontend counters merged in
+    /// ([`MetricsSnapshot::server`]).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut snap = self
+            .inner
+            .as_ref()
+            .expect("inner service present until shutdown")
+            .metrics();
+        snap.server = self.metrics.snapshot();
+        snap
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Close admission, drain every admitted request (each is served or
+    /// answered with a typed error), join the dispatchers, then shut
+    /// the inner execution service down.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+        if let Some(inner) = self.inner.take() {
+            if let Ok(handle) = Arc::try_unwrap(inner) {
+                handle.shutdown();
+            }
+        }
+    }
+
+    fn close_and_join(&mut self) {
+        self.admission.state.lock().unwrap().closed = true;
+        self.admission.work.notify_all();
+        self.admission.space.notify_all();
+        for d in self.dispatchers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for TrafficServer {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+fn dispatcher_loop(
+    admission: Arc<Admission>,
+    metrics: Arc<ServerMetrics>,
+    inner: Arc<ServiceHandle>,
+    aging: Duration,
+) {
+    loop {
+        let req = {
+            let mut st = admission.state.lock().unwrap();
+            loop {
+                if let Some(r) = pop_next(&mut st, aging, &metrics) {
+                    break Some(r);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = admission.work.wait(st).unwrap();
+            }
+        };
+        let Some(mut req) = req else { return };
+        admission.space.notify_one();
+
+        let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+        metrics.queue_wait.record(queue_us);
+        if let Some(d) = req.deadline {
+            if Instant::now() > d {
+                metrics.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req
+                    .reply
+                    .send(Err(ServiceError::DeadlineExceeded { waited_us: queue_us }));
+                continue;
+            }
+        }
+        if req.degraded {
+            let half = req.input.len() / 2;
+            req.input.truncate(half);
+            metrics.degraded.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let t0 = Instant::now();
+        let backend = inner.submit(req.input).recv();
+        let service_us = t0.elapsed().as_secs_f64() * 1e6;
+        metrics.service_time.record(service_us);
+
+        let outcome = match backend {
+            Err(_) => Err(ServiceError::WorkerGone),
+            Ok(Err(e)) => Err(match e.downcast::<ServiceError>() {
+                Ok(se) => se,
+                Err(e) => ServiceError::Backend(format!("{e:#}")),
+            }),
+            Ok(Ok(r)) => Ok(r),
+        };
+        match outcome {
+            Ok(result) => {
+                let deadline_missed = req.deadline.is_some_and(|d| Instant::now() > d);
+                if deadline_missed {
+                    metrics.late.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                match req.priority {
+                    Priority::High => metrics.served_high.fetch_add(1, Ordering::Relaxed),
+                    Priority::Low => metrics.served_low.fetch_add(1, Ordering::Relaxed),
+                };
+                let _ = req.reply.send(Ok(ServedFft {
+                    result,
+                    priority: req.priority,
+                    queue_us,
+                    service_us,
+                    degraded: req.degraded,
+                    deadline_missed,
+                }));
+            }
+            Err(e) => {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(e));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+
+    fn pending(priority: Priority, age: Duration) -> Pending {
+        let (reply, _rx) = channel();
+        Pending {
+            input: Vec::new(),
+            priority,
+            deadline: None,
+            degraded: false,
+            enqueued: Instant::now() - age,
+            reply,
+        }
+    }
+
+    #[test]
+    fn pop_prefers_high_until_low_ages() {
+        let m = ServerMetrics::default();
+        let mut st = QueueState::default();
+        st.high.push_back(pending(Priority::High, Duration::ZERO));
+        st.low.push_back(pending(Priority::Low, Duration::ZERO));
+        let first = pop_next(&mut st, Duration::from_secs(3600), &m).unwrap();
+        assert_eq!(first.priority, Priority::High);
+        assert_eq!(m.aged.load(Ordering::Relaxed), 0);
+        let second = pop_next(&mut st, Duration::from_secs(3600), &m).unwrap();
+        assert_eq!(second.priority, Priority::Low, "low still drains when high is empty");
+        assert_eq!(m.aged.load(Ordering::Relaxed), 0, "no promotion without waiting high work");
+    }
+
+    #[test]
+    fn aged_low_jumps_waiting_high_work() {
+        let m = ServerMetrics::default();
+        let mut st = QueueState::default();
+        st.high.push_back(pending(Priority::High, Duration::ZERO));
+        st.low.push_back(pending(Priority::Low, Duration::from_secs(5)));
+        let first = pop_next(&mut st, Duration::from_millis(1), &m).unwrap();
+        assert_eq!(first.priority, Priority::Low);
+        assert_eq!(m.aged.load(Ordering::Relaxed), 1);
+        assert_eq!(st.high.len(), 1);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let pool = || {
+            ServiceHandle::Pool(
+                FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap(),
+            )
+        };
+        assert!(TrafficServer::start(
+            pool(),
+            ServerConfig { queue_capacity: 0, ..Default::default() }
+        )
+        .is_err());
+        assert!(TrafficServer::start(
+            pool(),
+            ServerConfig { dispatchers: 0, ..Default::default() }
+        )
+        .is_err());
+    }
+}

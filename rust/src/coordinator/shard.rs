@@ -45,8 +45,8 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::ShardStat;
 use super::{
-    coalesce_by_size, collect_batch_results, handle_job, Backend, Core, FftResult, Job, JobKind,
-    Metrics, MetricsSnapshot, ServiceConfig,
+    coalesce_by_size, collect_batch_results, fail_job, handle_job, Backend, Core, FftResult, Job,
+    JobKind, Metrics, MetricsSnapshot, ServiceConfig, ServiceError,
 };
 use crate::fft::cache::PlanCache;
 use crate::runtime::{spawn_pjrt_server, PjrtHandle};
@@ -209,7 +209,9 @@ impl ShardedFftService {
 
     /// Enqueue `job` (carrying `jobs` requests) on `shard`, maintaining
     /// the queue-depth gauge (in jobs, so a 16-job batch chunk weighs 16
-    /// against the steal threshold) and the routing counters.
+    /// against the steal threshold) and the routing counters. If the
+    /// shard's worker is gone, the job is answered with a typed
+    /// [`ServiceError::WorkerGone`] instead of panicking.
     fn dispatch(&self, shard: usize, job: Job, affine: bool, jobs: u64) {
         let c = &self.shards[shard].counters;
         let depth = c.depth.fetch_add(jobs as usize, Ordering::Relaxed) + jobs as usize;
@@ -220,7 +222,10 @@ impl ShardedFftService {
             c.stolen.fetch_add(jobs, Ordering::Relaxed);
             self.steals.fetch_add(jobs, Ordering::Relaxed);
         }
-        self.shards[shard].tx.send(job).expect("shard worker alive");
+        if let Err(std::sync::mpsc::SendError(job)) = self.shards[shard].tx.send(job) {
+            c.depth.fetch_sub(jobs as usize, Ordering::Relaxed);
+            fail_job(job);
+        }
     }
 
     /// Submit one FFT; the returned channel yields the result.
@@ -301,7 +306,7 @@ impl ShardedFftService {
         let handles: Vec<_> = inputs.into_iter().map(|i| self.submit(i)).collect();
         handles
             .into_iter()
-            .map(|rx| rx.recv().map_err(|e| anyhow!("shard dropped reply: {e}"))?)
+            .map(|rx| rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))?)
             .collect()
     }
 

@@ -857,9 +857,17 @@ mod tests {
 
     #[test]
     fn register_budget_respected() {
-        for (points, radix) in
-            [(256, 2), (256, 4), (1024, 4), (4096, 4), (512, 8), (4096, 8), (256, 16), (1024, 16), (4096, 16)]
-        {
+        for (points, radix) in [
+            (256, 2),
+            (256, 4),
+            (1024, 4),
+            (4096, 4),
+            (512, 8),
+            (4096, 8),
+            (256, 16),
+            (1024, 16),
+            (4096, 16),
+        ] {
             for v in Variant::ALL6 {
                 let cfg = SmConfig::for_radix(v, radix);
                 let f = generate(&cfg, points, radix).unwrap();

@@ -17,7 +17,7 @@ pub use twiddle::Cpx;
 
 use crate::arch::SmConfig;
 use crate::profile::Profile;
-use crate::sim::{Sm, SimError};
+use crate::sim::{SimError, Sm};
 use thiserror::Error;
 
 #[derive(Debug, Error)]

@@ -33,7 +33,13 @@
 //!   pool out multi-core: one queue per shard, size-affinity routing
 //!   with work-stealing overflow, batch chunking, and per-shard
 //!   occupancy/queue/steal metrics — all shards sharing the one plan
-//!   cache.
+//!   cache. [`coordinator::TrafficServer`] is the admission-controlled
+//!   front door over either service: bounded queues with block / shed /
+//!   degrade backpressure, two priority classes with an aging rule,
+//!   per-request deadlines, and separate queue-wait vs service-time
+//!   latency histograms; [`coordinator::loadgen`] drives it with
+//!   open-loop Poisson or burst traffic (`egpu-fft loadtest`) and every
+//!   failure is a typed [`coordinator::ServiceError`].
 //!
 //! The PJRT fast path compiles only with the `pjrt` cargo feature
 //! (it binds the vendored `xla` crate); the default build substitutes

@@ -4,11 +4,13 @@
 //! argument parsing is deliberately simple.)
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 use egpu_fft::arch::{SmConfig, Variant};
 use egpu_fft::coordinator::{
-    Backend, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
+    loadgen, AdmissionPolicy, ArrivalPattern, Backend, FftService, LoadgenConfig, ServerConfig,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::{self, reference};
 use egpu_fft::report;
@@ -45,6 +47,20 @@ USAGE:
                                       0 = one shard per hardware thread;
                                       --shards replaces --cores — each
                                       shard runs one resident-SM worker)
+  egpu-fft loadtest [--pattern poisson|burst] [--rate R] [--duration S]
+                 [--policy block|shed|degrade] [--queue-capacity N]
+                 [--shards N] [--dispatchers N] [--sizes 256,1024,...]
+                 [--deadline-ms D] [--aging-ms A] [--high-frac F]
+                 [--burst N] [--seed S] [--json [PATH]]
+                                     open-loop load test through the
+                                     admission-controlled traffic
+                                     frontend: offered vs achieved
+                                     throughput, shed rate, deadline
+                                     miss rate, and queue-wait /
+                                     service-time tail latencies
+                                     (--json alone prints the JSON
+                                      report to stdout; --json PATH
+                                      writes it to a file)
   egpu-fft help
 
 Variants: DP, DP-VM, DP-Complex, DP-VM-Complex, QP, QP-Complex";
@@ -60,6 +76,12 @@ fn parse_variant(s: &str) -> Result<Variant> {
         _ => bail!("unknown variant `{s}`"),
     };
     Ok(v)
+}
+
+fn parse_sizes(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| p.trim().parse::<usize>().map_err(|e| anyhow!("bad size `{p}`: {e}")))
+        .collect()
 }
 
 fn flags(args: &[String]) -> HashMap<String, String> {
@@ -167,7 +189,8 @@ fn run() -> Result<()> {
             let variant = parse_variant(f.get("variant").map(String::as_str).unwrap_or("DP-VM"))?;
             let cfg = SmConfig::for_radix(variant, 4);
             let rp = egpu_fft::apps::reduction::generate(&cfg, n)?;
-            let input: Vec<f32> = reference::test_signal(n, 3).iter().map(|c| c.re as f32).collect();
+            let input: Vec<f32> =
+                reference::test_signal(n, 3).iter().map(|c| c.re as f32).collect();
             let want: f64 = input.iter().map(|&v| v as f64).sum();
             let (sum, prof) = egpu_fft::apps::reduction::run(&rp, &cfg, &input)?;
             println!("reduce {n} on {variant}: sum {sum:.4} (reference {want:.4})");
@@ -269,6 +292,91 @@ fn run() -> Result<()> {
             );
             print!("{}", svc.metrics().render());
             svc.shutdown();
+            Ok(())
+        }
+        Some("loadtest") => {
+            let f = flags(&args[1..]);
+            let pattern: ArrivalPattern =
+                f.get("pattern").map(String::as_str).unwrap_or("poisson").parse()?;
+            let rate: f64 = f.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(1000.0);
+            if rate <= 0.0 {
+                bail!("--rate must be positive");
+            }
+            let duration: f64 =
+                f.get("duration").map(|s| s.parse()).transpose()?.unwrap_or(2.0);
+            if duration <= 0.0 {
+                bail!("--duration must be positive");
+            }
+            let burst: usize = f.get("burst").map(|s| s.parse()).transpose()?.unwrap_or(32);
+            let sizes: Vec<usize> = f
+                .get("sizes")
+                .map(|s| parse_sizes(s))
+                .transpose()?
+                .unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
+            let high_frac: f64 =
+                f.get("high-frac").map(|s| s.parse()).transpose()?.unwrap_or(0.5);
+            let deadline_ms: f64 =
+                f.get("deadline-ms").map(|s| s.parse()).transpose()?.unwrap_or(25.0);
+            if deadline_ms < 0.0 {
+                bail!("--deadline-ms must be >= 0 (0 disables deadlines)");
+            }
+            let aging_ms: f64 =
+                f.get("aging-ms").map(|s| s.parse()).transpose()?.unwrap_or(10.0);
+            if aging_ms < 0.0 {
+                bail!("--aging-ms must be >= 0");
+            }
+            let seed: u64 = f.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+            let policy = match f.get("policy").map(String::as_str).unwrap_or("shed") {
+                "block" => AdmissionPolicy::Block,
+                "shed" => AdmissionPolicy::Shed,
+                "degrade" => AdmissionPolicy::Degrade,
+                p => bail!("unknown policy `{p}` (block|shed|degrade)"),
+            };
+            let queue_capacity: usize =
+                f.get("queue-capacity").map(|s| s.parse()).transpose()?.unwrap_or(256);
+            let dispatchers: usize =
+                f.get("dispatchers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let shards: usize = f.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+            let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+                shards,
+                service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+                ..Default::default()
+            })?);
+            let server = TrafficServer::start(
+                inner,
+                ServerConfig {
+                    queue_capacity,
+                    policy,
+                    dispatchers,
+                    aging: Duration::from_secs_f64(aging_ms / 1e3),
+                    ..Default::default()
+                },
+            )?;
+            let cfg = LoadgenConfig {
+                pattern,
+                rate_hz: rate,
+                duration: Duration::from_secs_f64(duration),
+                burst_size: burst,
+                sizes,
+                high_fraction: high_frac,
+                deadline: (deadline_ms > 0.0)
+                    .then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
+                seed,
+            };
+            let report = loadgen::run(&server, &cfg);
+            match f.get("json").map(String::as_str) {
+                Some("true") => println!("{}", report.to_json()),
+                Some(path) => {
+                    std::fs::write(path, report.to_json() + "\n")?;
+                    eprintln!("wrote {path}");
+                }
+                None => {
+                    print!("{}", report.render());
+                    print!("{}", server.metrics().render());
+                }
+            }
+            server.shutdown();
             Ok(())
         }
         Some("help") | None => {

@@ -1,0 +1,423 @@
+//! Integration tests for the traffic frontend: backpressure policies
+//! (block / shed / degrade), per-request deadlines, priority aging
+//! (starvation freedom), full accounting (no request is ever silently
+//! dropped), drain-on-shutdown, and the open-loop load generator.
+//!
+//! Timing-sensitive assertions calibrate against a measured service
+//! time instead of assuming one, so they hold on slow CI hosts and
+//! under parallel test execution.
+
+use std::time::Duration;
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, ArrivalPattern, Backend, FftService, LoadgenConfig, Priority,
+    RequestOpts, ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig,
+    ShardedFftService, TrafficServer,
+};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+fn pool_server(cores: usize, cfg: ServerConfig) -> TrafficServer {
+    let inner = ServiceHandle::Pool(
+        FftService::start(ServiceConfig {
+            cores,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    TrafficServer::start(inner, cfg).unwrap()
+}
+
+fn high() -> RequestOpts {
+    RequestOpts { priority: Priority::High, deadline: None }
+}
+
+fn low() -> RequestOpts {
+    RequestOpts { priority: Priority::Low, deadline: None }
+}
+
+/// Warm the server on `points` and measure one steady-state service
+/// time, µs (plan build and executor residency already paid).
+fn calibrate_service_us(server: &TrafficServer, points: usize) -> f64 {
+    let mut last = 0.0;
+    for seed in 0..2 {
+        let rx = server.submit(signal(points, seed), high()).unwrap();
+        last = rx.recv().unwrap().unwrap().service_us;
+    }
+    last
+}
+
+#[test]
+fn shed_policy_returns_typed_queue_full_and_accounts_everything() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 2,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    let input = signal(1024, 0);
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..40 {
+        match server.submit(input.clone(), high()) {
+            Ok(rx) => admitted.push(rx),
+            Err(ServiceError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 2);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(shed >= 1, "40 instant submissions into a capacity-2 queue must shed");
+    // every admitted request is answered with a real result
+    for rx in admitted {
+        let served = rx.recv().expect("reply delivered").expect("served");
+        assert_eq!(served.result.output.len(), 1024);
+        assert!(served.queue_us >= 0.0 && served.service_us > 0.0);
+    }
+    let sv = server.metrics().server;
+    assert_eq!(sv.submitted, 40);
+    assert_eq!(sv.admitted + sv.shed, sv.submitted);
+    assert_eq!(sv.shed, shed);
+    assert!(sv.accounted(), "admitted == completed + expired + failed: {sv:?}");
+    assert!(sv.queue_wait.count > 0 && sv.service_time.count > 0);
+    server.shutdown();
+}
+
+#[test]
+fn block_policy_serves_every_request_without_shedding() {
+    let server = pool_server(
+        2,
+        ServerConfig {
+            queue_capacity: 2,
+            policy: AdmissionPolicy::Block,
+            dispatchers: 2,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> = (0..12)
+        .map(|i| server.submit(signal(256, i), high()).expect("block policy never sheds"))
+        .collect();
+    for rx in handles {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let sv = server.metrics().server;
+    assert_eq!(sv.shed, 0);
+    assert_eq!(sv.completed, 12);
+    assert!(sv.accounted());
+    server.shutdown();
+}
+
+#[test]
+fn queued_deadline_expiry_surfaces_typed_error_without_serving() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 16,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    // occupy the single dispatcher with a slow job, then queue two
+    // requests whose deadline is long past by the time it finishes
+    let slow = server.submit(signal(4096, 0), high()).unwrap();
+    let opts = RequestOpts {
+        priority: Priority::High,
+        deadline: Some(Duration::from_micros(1)),
+    };
+    let doomed: Vec<_> =
+        (0..2).map(|i| server.submit(signal(256, i), opts).unwrap()).collect();
+    assert!(slow.recv().unwrap().is_ok());
+    for rx in doomed {
+        match rx.recv().unwrap() {
+            Err(ServiceError::DeadlineExceeded { waited_us }) => assert!(waited_us > 0.0),
+            other => panic!("want DeadlineExceeded, got {other:?}"),
+        }
+    }
+    let sv = server.metrics().server;
+    assert_eq!(sv.expired, 2);
+    assert_eq!(sv.completed, 1);
+    assert!(sv.accounted());
+    assert!(sv.deadline_miss_rate() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn late_service_is_delivered_but_flagged_and_counted() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 16,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    // a deadline at a third of the measured service time expires while
+    // the job is *in service*: it was dispatchable, but finishes late
+    let service_us = calibrate_service_us(&server, 4096);
+    let opts = RequestOpts {
+        priority: Priority::High,
+        deadline: Some(Duration::from_secs_f64(service_us / 3.0 * 1e-6)),
+    };
+    let served = server.submit(signal(4096, 9), opts).unwrap().recv().unwrap().unwrap();
+    assert!(served.deadline_missed, "served past its deadline must be flagged");
+    assert_eq!(served.result.output.len(), 4096);
+    let sv = server.metrics().server;
+    assert_eq!(sv.late, 1);
+    assert_eq!(sv.expired, 0);
+    assert!(sv.deadline_miss_rate() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn aged_low_priority_is_served_while_high_backlog_remains() {
+    let aging = Duration::from_millis(10);
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 8192,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            aging,
+            ..Default::default()
+        },
+    );
+    // build a high-priority backlog worth ~400ms of service, so an
+    // unaged low-priority request would wait far beyond the bound
+    let service_us = calibrate_service_us(&server, 1024);
+    let n_high = ((400_000.0 / service_us).ceil() as usize).clamp(50, 2000);
+    let input = signal(1024, 1);
+    let highs: Vec<_> = (0..n_high)
+        .map(|_| server.submit(input.clone(), high()).expect("capacity is ample"))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let served_low = server
+        .submit(signal(1024, 2), low())
+        .unwrap()
+        .recv()
+        .unwrap()
+        .expect("low priority request must complete");
+    let low_latency = t0.elapsed();
+    let backlog_left = server.queue_depth();
+    assert!(
+        backlog_left > 0,
+        "low priority finished only after the whole high backlog drained \
+         (n_high={n_high}, low waited {low_latency:?}): starvation"
+    );
+    assert!(
+        served_low.queue_us < 200_000.0,
+        "aging bound is 10ms + one service time; low waited {:.0}us with {} highs queued",
+        served_low.queue_us,
+        backlog_left
+    );
+    let sv = server.metrics().server;
+    assert!(sv.aged >= 1, "the aging rule must have promoted the low request");
+    assert_eq!(sv.served_low, 1);
+    drop(highs); // receivers may be dropped; the server still serves and counts
+    server.shutdown();
+}
+
+#[test]
+fn degrade_policy_halves_resolution_under_pressure_and_sheds_at_the_limit() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 8,
+            policy: AdmissionPolicy::Degrade,
+            dispatchers: 1,
+            min_degraded_points: 256,
+            ..Default::default()
+        },
+    );
+    // occupy the dispatcher so the queue actually fills
+    let slow = server.submit(signal(4096, 0), high()).unwrap();
+    let input = signal(1024, 3);
+    let mut handles = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..10 {
+        match server.submit(input.clone(), high()) {
+            Ok(rx) => handles.push(rx),
+            Err(ServiceError::QueueFull { .. }) => shed += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(shed >= 1, "beyond capacity the Degrade policy sheds with a typed error");
+    assert!(slow.recv().unwrap().is_ok());
+    let mut degraded = 0u64;
+    for rx in handles {
+        let served = rx.recv().unwrap().unwrap();
+        if served.degraded {
+            degraded += 1;
+            assert_eq!(
+                served.result.output.len(),
+                512,
+                "degraded 1024-point request serves a half-resolution spectrum"
+            );
+        } else {
+            assert_eq!(served.result.output.len(), 1024);
+        }
+    }
+    assert!(degraded >= 1, "requests admitted past half capacity must degrade");
+    let sv = server.metrics().server;
+    assert_eq!(sv.degraded, degraded);
+    assert!(sv.accounted());
+    server.shutdown();
+}
+
+#[test]
+fn degraded_output_matches_reference_fft_of_truncated_signal() {
+    // fill the queue to the degrade region deterministically: capacity
+    // 1 means every admission happens at depth >= capacity/2 == 0
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 1,
+            policy: AdmissionPolicy::Degrade,
+            dispatchers: 1,
+            min_degraded_points: 256,
+            ..Default::default()
+        },
+    );
+    let served = server.submit(signal(1024, 7), high()).unwrap().recv().unwrap().unwrap();
+    assert!(served.degraded);
+    assert_eq!(served.result.output.len(), 512);
+    let truncated: Vec<_> = reference::test_signal(1024, 7)[..512].to_vec();
+    let want = reference::fft(&truncated);
+    let got: Vec<_> = served
+        .result
+        .output
+        .iter()
+        .map(|&(re, im)| egpu_fft::fft::Cpx::new(re as f64, im as f64))
+        .collect();
+    assert!(reference::rms_rel_error(&got, &want) < egpu_fft::fft::F32_TOL);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_every_admitted_request() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 16,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> =
+        (0..6).map(|i| server.submit(signal(256, i), high()).unwrap()).collect();
+    server.shutdown();
+    for rx in handles {
+        let served = rx.recv().expect("admitted request answered during drain");
+        assert!(served.is_ok(), "drained request served: {served:?}");
+    }
+}
+
+#[test]
+fn drop_without_shutdown_still_drains_admitted_requests() {
+    let server = pool_server(1, ServerConfig::default());
+    let rx = server.submit(signal(256, 0), high()).unwrap();
+    drop(server); // Drop closes admission and joins dispatchers
+    assert!(rx.recv().expect("drained on drop").is_ok());
+}
+
+#[test]
+fn loadgen_accounts_every_request_open_loop() {
+    let inner = ServiceHandle::Sharded(
+        ShardedFftService::start(ShardPoolConfig {
+            shards: 2,
+            service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            queue_capacity: 32,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            pattern: ArrivalPattern::Poisson,
+            rate_hz: 2000.0,
+            duration: Duration::from_millis(500),
+            sizes: vec![256, 1024],
+            deadline: Some(Duration::from_millis(10)),
+            high_fraction: 0.5,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+    assert!(report.submitted > 100, "open loop kept submitting: {report:?}");
+    assert!(report.completed > 0);
+    assert_eq!(report.lost, 0, "no reply channel may die unanswered");
+    assert!(report.accounted, "submitted == completed + shed + expired + failed");
+    assert!(report.achieved_rps > 0.0 && report.offered_rps > 0.0);
+    let sv = server.metrics().server;
+    assert!(sv.accounted());
+    // histogram sanity: percentiles are monotone in q
+    assert!(sv.service_time.percentile_us(0.5) <= sv.service_time.percentile_us(0.99));
+    assert!(sv.queue_wait.percentile_us(0.5) <= sv.queue_wait.percentile_us(0.999));
+    let json = report.to_json();
+    assert!(json.contains("\"deadline_miss_rate\""));
+    server.shutdown();
+}
+
+#[test]
+fn burst_pattern_stresses_the_queue_harder_than_poisson() {
+    let mk = || {
+        let inner = ServiceHandle::Pool(
+            FftService::start(ServiceConfig { cores: 2, ..Default::default() }).unwrap(),
+        );
+        TrafficServer::start(
+            inner,
+            ServerConfig {
+                queue_capacity: 16,
+                policy: AdmissionPolicy::Shed,
+                dispatchers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let cfg = |pattern| LoadgenConfig {
+        pattern,
+        rate_hz: 3000.0,
+        duration: Duration::from_millis(400),
+        burst_size: 64,
+        sizes: vec![1024],
+        deadline: None,
+        seed: 5,
+        ..Default::default()
+    };
+    let srv = mk();
+    let burst = loadgen::run(&srv, &cfg(ArrivalPattern::Burst));
+    srv.shutdown();
+    assert!(burst.accounted);
+    assert!(
+        burst.shed + burst.completed == burst.submitted,
+        "with no deadline every request is served or shed: {burst:?}"
+    );
+    let srv = mk();
+    let poisson = loadgen::run(&srv, &cfg(ArrivalPattern::Poisson));
+    srv.shutdown();
+    assert!(poisson.accounted);
+    // both overload the service; the burst pattern must shed at least
+    // as it delivers 64-deep arrival spikes into a 16-slot queue
+    assert!(burst.shed > 0, "64-request bursts into a 16-slot queue must shed: {burst:?}");
+}
