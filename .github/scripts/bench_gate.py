@@ -1,27 +1,70 @@
 #!/usr/bin/env python3
-"""CI bench-regression gate.
+"""CI bench-regression gate, with a self-ratcheting baseline.
 
 Reads the quick-mode JSON rows written by `benches/shard.rs`
-(`jobs_per_s` per row) and `benches/loadtest.rs` (`achieved_rps` per
-row), reduces each to an aggregate throughput (geometric mean across
-rows), and fails when either aggregate falls more than the threshold
-below the committed `BENCH_baseline.json`.
+(`jobs_per_s` per row), `benches/loadtest.rs` (`achieved_rps` per row)
+and `benches/autoscale.rs` (`recovered_rps` / `shed_rate_after` /
+`p99_recovery_ms` per row), reduces each metric to an aggregate, and
+fails when an aggregate crosses the committed `BENCH_baseline.json`
+limit by more than the threshold.
 
-The baseline is a conservative floor, not a point estimate: CI runners
-are noisy, so the gate only trips on real cliffs (default threshold:
-15%). When a run lands far above the floor, the gate prints the values
-to ratchet the baseline up to (baseline * 1.0 is always safe to raise
-toward ~80% of a typical run).
+Two check directions:
+
+* **floor** (throughput-like, higher is better): aggregate is the
+  geometric mean across rows; fails when it drops more than the
+  threshold below the committed value.
+* **ceiling** (latency/shed-like, lower is better): aggregate is the
+  max across rows; fails when it rises more than the threshold above
+  the committed value.
+
+The baseline is a conservative envelope, not a point estimate: CI
+runners are noisy, so the gate only trips on real cliffs (default
+threshold: 15%).
+
+**Ratcheting.** `--emit-ratchet PATH` writes a suggested baseline:
+floors move up to 80% of the observed aggregate (never down), ceilings
+tighten to 125% of the observed aggregate (never up, and never below an
+absolute per-metric minimum so a lucky zero does not weld the gate
+shut). CI uploads this file as the `suggested-baseline` artifact;
+committing it is a human decision. When a committed floor is more than
+2x stale (the observed aggregate is over twice the floor), the gate
+says so on stdout and in the GitHub job summary.
 
 Usage:
     bench_gate.py --baseline BENCH_baseline.json \
-                  --shard BENCH_shard.json --loadtest BENCH_loadtest.json
+                  --shard BENCH_shard.json --loadtest BENCH_loadtest.json \
+                  [--autoscale BENCH_autoscale.json] \
+                  [--emit-ratchet suggested_baseline.json]
 """
 
 import argparse
 import json
 import math
+import os
 import sys
+
+# (section, baseline key, row field, aggregate, direction)
+CHECKS = [
+    ("shard", "agg_jobs_per_s", "jobs_per_s", "geomean", "floor"),
+    ("loadtest", "agg_achieved_rps", "achieved_rps", "geomean", "floor"),
+    ("autoscale", "agg_recovered_rps", "recovered_rps", "geomean", "floor"),
+    ("autoscale", "shed_rate_after_max", "shed_rate_after", "max", "ceiling"),
+    ("autoscale", "p99_recovery_ms_max", "p99_recovery_ms", "max", "ceiling"),
+]
+
+# Ratchet tuning: floors rise toward 80% of observed; ceilings tighten
+# toward 125% of observed but never below an *absolute* per-metric
+# minimum. The guard must be absolute, not a fraction of the committed
+# value: a relative guard decays geometrically across repeated ratchet
+# commits fed by lucky-zero observations, welding the gate shut.
+RATCHET_FLOOR_FRACTION = 0.8
+RATCHET_CEILING_FACTOR = 1.25
+RATCHET_CEILING_MIN = {
+    "shed_rate_after_max": 0.02,
+    "p99_recovery_ms_max": 250.0,
+}
+
+STALE_FACTOR = 2.0
 
 
 def geomean(values):
@@ -31,54 +74,191 @@ def geomean(values):
     return math.exp(sum(math.log(v) for v in vals) / len(vals))
 
 
-def aggregate(path, field):
+def load_rows(path):
     with open(path) as f:
         rows = json.load(f)
     if not isinstance(rows, list) or not rows:
         raise SystemExit(f"{path}: expected a non-empty JSON array of bench rows")
+    return rows
+
+
+def column(rows, path, field):
     missing = [r for r in rows if field not in r]
     if missing:
         raise SystemExit(f"{path}: {len(missing)} rows lack the `{field}` field")
-    return geomean(r[field] for r in rows), len(rows)
+    return [float(r[field]) for r in rows]
 
 
-def main():
+def run_gate(baseline, files):
+    """Evaluate every gated metric.
+
+    `baseline` is the parsed BENCH_baseline.json; `files` maps section
+    name -> bench JSON path (value may be absent/None for sections the
+    caller did not provide). Returns (results, threshold) where each
+    result dict carries section/key/field/aggregate/direction/current/
+    base/limit/ok/stale. Raises SystemExit on malformed input or when
+    the baseline gates a section no file was given for.
+    """
+    threshold = float(baseline.get("threshold", 0.15))
+    rows_cache = {}
+    results = []
+    for section, key, field, agg, direction in CHECKS:
+        sec = baseline.get(section)
+        if not isinstance(sec, dict) or key not in sec:
+            continue
+        path = files.get(section)
+        if not path:
+            raise SystemExit(
+                f"baseline gates `{section}.{key}` but no --{section} file was given"
+            )
+        if path not in rows_cache:
+            rows_cache[path] = load_rows(path)
+        vals = column(rows_cache[path], path, field)
+        cur = geomean(vals) if agg == "geomean" else max(vals)
+        base = float(sec[key])
+        if direction == "floor":
+            limit = base * (1.0 - threshold)
+            ok = cur >= limit
+            stale = base > 0 and cur > STALE_FACTOR * base
+        else:
+            limit = base * (1.0 + threshold)
+            ok = cur <= limit
+            stale = base > STALE_FACTOR * cur + 1e-12
+        results.append(
+            {
+                "section": section,
+                "key": key,
+                "field": field,
+                "aggregate": agg,
+                "direction": direction,
+                "rows": len(vals),
+                "current": cur,
+                "base": base,
+                "limit": limit,
+                "ok": ok,
+                "stale": stale,
+            }
+        )
+    return results, threshold
+
+
+def suggest(result):
+    """The ratcheted baseline value for one check result."""
+    cur, base = result["current"], result["base"]
+    if result["direction"] == "floor":
+        return max(base, RATCHET_FLOOR_FRACTION * cur)
+    guard = RATCHET_CEILING_MIN.get(result["key"], 0.0)
+    return min(base, max(RATCHET_CEILING_FACTOR * cur, guard))
+
+
+def ratchet_baseline(baseline, results):
+    """A copy of `baseline` with every gated value ratcheted."""
+    out = json.loads(json.dumps(baseline))
+    for r in results:
+        out[r["section"]][r["key"]] = round(suggest(r), 4)
+    out["_comment"] = (
+        "Suggested baseline emitted by bench_gate.py --emit-ratchet: floors at "
+        f"{RATCHET_FLOOR_FRACTION:.0%} of the observed aggregate (never lowered), "
+        f"ceilings at {RATCHET_CEILING_FACTOR:.0%} of the observed aggregate "
+        "(never raised). Review against a few runs before committing as "
+        "BENCH_baseline.json."
+    )
+    return out
+
+
+def render_line(r):
+    status = "OK" if r["ok"] else "REGRESSION"
+    bound = "floor" if r["direction"] == "floor" else "ceiling"
+    return (
+        f"bench-gate {r['section'] + '.' + r['field']:<28} "
+        f"{r['aggregate']:<7} = {r['current']:10.1f} ({r['rows']} rows) | "
+        f"baseline {r['base']:10.1f} | {bound} {r['limit']:10.1f} | {status}"
+    )
+
+
+def write_summary(results, threshold, ratchet_path):
+    """Append a markdown table (and staleness warnings) to the GitHub
+    job summary, when running under Actions."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "## bench-gate",
+        "",
+        f"Threshold: {threshold:.0%} against the committed `BENCH_baseline.json`.",
+        "",
+        "| metric | aggregate | observed | committed | limit | status |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        status = "✅ OK" if r["ok"] else "❌ REGRESSION"
+        lines.append(
+            f"| `{r['section']}.{r['field']}` | {r['aggregate']} "
+            f"({r['direction']}) | {r['current']:.1f} | {r['base']:.1f} | "
+            f"{r['limit']:.1f} | {status} |"
+        )
+    stale = [r for r in results if r["stale"]]
+    if stale:
+        lines.append("")
+        lines.append(
+            f"⚠️ **{len(stale)} committed limit(s) are >{STALE_FACTOR:.0f}x stale** — "
+            "the gate cannot catch regressions it should. Ratchet "
+            "`BENCH_baseline.json` from the `suggested-baseline` artifact:"
+        )
+        for r in stale:
+            lines.append(
+                f"- `{r['section']}.{r['key']}`: committed {r['base']:g} vs "
+                f"observed {r['current']:g} → suggest {suggest(r):g}"
+            )
+    if ratchet_path:
+        lines.append("")
+        lines.append(f"Suggested ratchet written to `{ratchet_path}`.")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--shard", required=True)
     ap.add_argument("--loadtest", required=True)
-    args = ap.parse_args()
+    ap.add_argument("--autoscale")
+    ap.add_argument(
+        "--emit-ratchet",
+        metavar="PATH",
+        help="write the suggested (ratcheted) baseline JSON to PATH",
+    )
+    args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
         baseline = json.load(f)
-    threshold = float(baseline.get("threshold", 0.15))
-
-    checks = [
-        ("shard", args.shard, "jobs_per_s", baseline["shard"]["agg_jobs_per_s"]),
-        ("loadtest", args.loadtest, "achieved_rps", baseline["loadtest"]["agg_achieved_rps"]),
-    ]
+    files = {"shard": args.shard, "loadtest": args.loadtest, "autoscale": args.autoscale}
+    results, threshold = run_gate(baseline, files)
 
     failed = False
-    for name, path, field, base in checks:
-        cur, nrows = aggregate(path, field)
-        floor = base * (1.0 - threshold)
-        status = "OK" if cur >= floor else "REGRESSION"
-        print(
-            f"bench-gate {name:<9} aggregate {field} = {cur:10.1f} "
-            f"({nrows} rows) | baseline {base:10.1f} | floor {floor:10.1f} | {status}"
-        )
-        if cur < floor:
+    for r in results:
+        print(render_line(r))
+        if not r["ok"]:
             failed = True
-        elif base > 0 and cur > base * 1.5:
+        elif r["stale"]:
             print(
-                f"  note: {name} runs {cur / base:.1f}x above the committed floor — "
-                f"consider ratcheting BENCH_baseline.json up toward {0.8 * cur:.0f}"
+                f"  note: `{r['section']}.{r['key']}` is >{STALE_FACTOR:.0f}x stale "
+                f"(observed {r['current']:g} vs committed {r['base']:g}) — "
+                f"ratchet BENCH_baseline.json toward {suggest(r):g}"
             )
+
+    if args.emit_ratchet:
+        with open(args.emit_ratchet, "w") as f:
+            json.dump(ratchet_baseline(baseline, results), f, indent=2)
+            f.write("\n")
+        print(f"\nwrote suggested baseline ratchet to {args.emit_ratchet}")
+
+    write_summary(results, threshold, args.emit_ratchet)
 
     if failed:
         print(
-            f"\nFAIL: aggregate throughput regressed more than "
-            f"{threshold:.0%} below the committed baseline.",
+            f"\nFAIL: an aggregate crossed the committed baseline by more than "
+            f"{threshold:.0%}.",
             file=sys.stderr,
         )
         sys.exit(1)

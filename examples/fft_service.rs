@@ -17,8 +17,9 @@
 use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, Backend, FftService, LoadgenConfig, ServerConfig,
-    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
+    FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
+    ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -157,6 +158,52 @@ fn main() -> anyhow::Result<()> {
     assert!(report.accounted, "every request must get a result or a typed error");
     server.shutdown();
 
+    // ---- phase 5: elastic serving (SLO-driven shard autoscaling) ----
+    println!("\n== autoscaler: capacity follows traffic (1 shard grows under overload) ==");
+    let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+        shards: 1,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })?);
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            queue_capacity: 128,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 8,
+            ..Default::default()
+        },
+    )?;
+    let controller = AutoscaleController::spawn(
+        &server,
+        AutoscalePolicy {
+            min_shards: 1,
+            max_shards: 4,
+            target_p99_ms: 25.0,
+            max_shed_rate: 0.02,
+            scale_up_cooldown: Duration::from_millis(100),
+            scale_down_cooldown: Duration::from_millis(600),
+            interval: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )?;
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: 3000.0,
+            duration: Duration::from_millis(1500),
+            sizes: vec![1024],
+            deadline: None,
+            ..Default::default()
+        },
+    );
+    print!("{}", report.render());
+    let log = controller.stop();
+    print!("{}", log.render());
+    assert!(report.accounted, "every request must get a result or a typed error");
+    server.shutdown();
+
     // ---- PJRT phases need the AOT artifacts and the pjrt feature ----
     let have_artifacts = std::path::Path::new("artifacts/fft256.hlo.txt").exists();
     if !have_artifacts {
@@ -165,7 +212,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    // ---- phase 4: PJRT fast path (the serving configuration) ----
+    // ---- phase 6: PJRT fast path (the serving configuration) ----
     let svc = match FftService::start(ServiceConfig {
         cores: 4,
         backend: Backend::Pjrt,
@@ -207,7 +254,7 @@ fn main() -> anyhow::Result<()> {
     print!("{}", m.render());
     svc.shutdown();
 
-    // ---- phase 5: cross-validated run (sim numerics == PJRT) ----
+    // ---- phase 7: cross-validated run (sim numerics == PJRT) ----
     let svc = FftService::start(ServiceConfig {
         cores: 4,
         backend: Backend::Validate,

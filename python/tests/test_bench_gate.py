@@ -1,0 +1,213 @@
+"""Unit tests for the CI bench-regression gate
+(.github/scripts/bench_gate.py): pass/fail at the 15% threshold in both
+check directions, missing-key handling, and the --emit-ratchet output.
+
+The script lives outside any package (``.github`` is not importable),
+so it is loaded by file path.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+SCRIPT = (
+    pathlib.Path(__file__).resolve().parents[2] / ".github" / "scripts" / "bench_gate.py"
+)
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("bench_gate", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_gate = _load()
+
+
+def baseline(threshold=0.15, autoscale=True):
+    base = {
+        "threshold": threshold,
+        "shard": {"agg_jobs_per_s": 100.0},
+        "loadtest": {"agg_achieved_rps": 200.0},
+    }
+    if autoscale:
+        base["autoscale"] = {
+            "agg_recovered_rps": 100.0,
+            "shed_rate_after_max": 0.5,
+            "p99_recovery_ms_max": 1000.0,
+        }
+    return base
+
+
+def write_rows(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def files_for(tmp_path, shard_jps=100.0, rps=200.0, recovered=100.0, shed=0.1, p99=500.0):
+    return {
+        "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
+        "loadtest": write_rows(tmp_path, "loadtest.json", [{"achieved_rps": rps}]),
+        "autoscale": write_rows(
+            tmp_path,
+            "autoscale.json",
+            [{"recovered_rps": recovered, "shed_rate_after": shed, "p99_recovery_ms": p99}],
+        ),
+    }
+
+
+def by_key(results, key):
+    return next(r for r in results if r["key"] == key)
+
+
+class TestThreshold:
+    def test_passes_within_15_percent(self, tmp_path):
+        # 14% below the floor baseline: inside the threshold
+        results, threshold = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, shard_jps=86.0)
+        )
+        assert threshold == 0.15
+        assert all(r["ok"] for r in results)
+
+    def test_fails_beyond_15_percent(self, tmp_path):
+        # 16% below the floor baseline: a real regression
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shard_jps=84.0))
+        r = by_key(results, "agg_jobs_per_s")
+        assert not r["ok"]
+        assert by_key(results, "agg_achieved_rps")["ok"], "other checks unaffected"
+
+    def test_ceiling_fails_above_threshold(self, tmp_path):
+        # shed_rate_after 0.6 > 0.5 * 1.15 ceiling
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shed=0.6))
+        assert not by_key(results, "shed_rate_after_max")["ok"]
+        # 0.55 <= 0.575 stays inside
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shed=0.55))
+        assert by_key(results, "shed_rate_after_max")["ok"]
+
+    def test_geomean_aggregates_rows(self, tmp_path):
+        files = files_for(tmp_path)
+        files["shard"] = write_rows(
+            tmp_path, "shard2.json", [{"jobs_per_s": 50.0}, {"jobs_per_s": 200.0}]
+        )
+        results, _ = bench_gate.run_gate(baseline(), files)
+        r = by_key(results, "agg_jobs_per_s")
+        assert r["current"] == pytest.approx(100.0)  # sqrt(50 * 200)
+        assert r["rows"] == 2
+
+
+class TestMissingInputs:
+    def test_rows_missing_the_field_raise(self, tmp_path):
+        files = files_for(tmp_path)
+        files["shard"] = write_rows(tmp_path, "bad.json", [{"wrong_field": 1.0}])
+        with pytest.raises(SystemExit, match="lack the `jobs_per_s` field"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_empty_rows_raise(self, tmp_path):
+        files = files_for(tmp_path)
+        files["loadtest"] = write_rows(tmp_path, "empty.json", [])
+        with pytest.raises(SystemExit, match="non-empty JSON array"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_gated_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["autoscale"] = None
+        with pytest.raises(SystemExit, match="no --autoscale file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_ungated_section_is_skipped(self, tmp_path):
+        # baseline without an autoscale section: no file needed
+        files = files_for(tmp_path)
+        files["autoscale"] = None
+        results, _ = bench_gate.run_gate(baseline(autoscale=False), files)
+        assert all(r["section"] != "autoscale" for r in results)
+
+
+class TestRatchet:
+    def test_floor_ratchets_up_to_80_percent_of_observed(self, tmp_path):
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shard_jps=1000.0))
+        r = by_key(results, "agg_jobs_per_s")
+        assert r["stale"], "10x above the floor is >2x stale"
+        assert bench_gate.suggest(r) == pytest.approx(800.0)
+
+    def test_floor_never_ratchets_down(self, tmp_path):
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shard_jps=90.0))
+        r = by_key(results, "agg_jobs_per_s")
+        assert not r["stale"]
+        assert bench_gate.suggest(r) == pytest.approx(100.0), "keeps the committed floor"
+
+    def test_ceiling_tightens_but_keeps_a_guard_band(self, tmp_path):
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shed=0.1))
+        r = by_key(results, "shed_rate_after_max")
+        assert bench_gate.suggest(r) == pytest.approx(0.125), "1.25x observed"
+        # a perfect 0.0 observation must not weld the gate shut
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shed=0.0))
+        r = by_key(results, "shed_rate_after_max")
+        assert bench_gate.suggest(r) == pytest.approx(0.02), "absolute guard minimum"
+
+    def test_ceiling_guard_is_stable_across_repeated_ratchets(self, tmp_path):
+        # repeated lucky-zero observations must converge to the absolute
+        # minimum, not decay geometrically toward zero
+        base = baseline()
+        for _ in range(3):
+            results, _ = bench_gate.run_gate(base, files_for(tmp_path, shed=0.0, p99=0.0))
+            base = bench_gate.ratchet_baseline(base, results)
+        assert base["autoscale"]["shed_rate_after_max"] == pytest.approx(0.02)
+        assert base["autoscale"]["p99_recovery_ms_max"] == pytest.approx(250.0)
+
+    def test_ratchet_baseline_preserves_structure(self, tmp_path):
+        base = baseline()
+        results, _ = bench_gate.run_gate(base, files_for(tmp_path, shard_jps=1000.0))
+        out = bench_gate.ratchet_baseline(base, results)
+        assert out["shard"]["agg_jobs_per_s"] == pytest.approx(800.0)
+        assert out["threshold"] == 0.15
+        assert "suggested baseline" in out["_comment"].lower()
+        assert base["shard"]["agg_jobs_per_s"] == 100.0, "input baseline untouched"
+
+
+class TestMain:
+    def argv(self, tmp_path, files, extra=()):
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(baseline()))
+        return [
+            "--baseline",
+            str(base_path),
+            "--shard",
+            files["shard"],
+            "--loadtest",
+            files["loadtest"],
+            "--autoscale",
+            files["autoscale"],
+            *extra,
+        ]
+
+    def test_main_passes_and_emits_ratchet(self, tmp_path, capsys):
+        out_path = tmp_path / "suggested.json"
+        files = files_for(tmp_path, shard_jps=1000.0)
+        bench_gate.main(self.argv(tmp_path, files, ["--emit-ratchet", str(out_path)]))
+        captured = capsys.readouterr().out
+        assert "bench-gate passed" in captured
+        assert ">2x stale" in captured
+        suggested = json.loads(out_path.read_text())
+        assert suggested["shard"]["agg_jobs_per_s"] == pytest.approx(800.0)
+
+    def test_main_exits_nonzero_on_regression(self, tmp_path, capsys):
+        files = files_for(tmp_path, shard_jps=10.0)
+        with pytest.raises(SystemExit) as exc:
+            bench_gate.main(self.argv(tmp_path, files))
+        assert exc.value.code == 1
+        assert "REGRESSION" in capsys.readouterr().out
+
+    def test_main_writes_github_step_summary(self, tmp_path, monkeypatch, capsys):
+        summary = tmp_path / "summary.md"
+        monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+        files = files_for(tmp_path, shard_jps=1000.0)
+        bench_gate.main(self.argv(tmp_path, files))
+        capsys.readouterr()
+        text = summary.read_text()
+        assert "## bench-gate" in text
+        assert "stale" in text
+        assert "shard.jobs_per_s" in text

@@ -1,0 +1,263 @@
+//! Bench: SLO-driven shard autoscaling under a step overload.
+//!
+//! Each configuration starts the sharded service at ONE shard behind
+//! the admission-controlled frontend, attaches the autoscale
+//! controller, and offers a two-phase open-loop load: a healthy
+//! baseline rate (~0.5× single-shard capacity, measured on this host),
+//! then a step to ~1.5× single-shard capacity — more than one shard
+//! can serve, less than the scaled-up pool can. The bench reports
+//! shards-over-time, the p99/shed recovery time after the step, and
+//! the shed rate before vs after the controller reacts. `recovered_rps`
+//! (phase-2 achieved throughput) plus the `shed_rate_after` /
+//! `p99_recovery_ms` columns are what the CI `bench-gate` job
+//! regression-checks against `BENCH_baseline.json`.
+//!
+//! ```sh
+//! cargo bench --bench autoscale                      # full sweep
+//! cargo bench --bench autoscale -- --quick           # CI-sized sweep
+//! cargo bench --bench autoscale -- --json BENCH_autoscale.json
+//! ```
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
+    LoadgenConfig, PressureSample, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
+    ShardedFftService, TrafficServer,
+};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+/// Measured single-shard fft1024 serving capacity on this host,
+/// jobs/s — the anchor that keeps the offered step meaningful on fast
+/// and slow runners alike.
+fn calibrate_single_shard_rps() -> f64 {
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 1,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    let t0 = Instant::now();
+    svc.run_batch((0..32).map(|i| signal(1024, i)).collect()).unwrap();
+    let rps = 32.0 / t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    rps
+}
+
+struct Row {
+    config: &'static str,
+    recovered_rps: f64,
+    shed_rate_before: f64,
+    shed_rate_after: f64,
+    p99_recovery_ms: f64,
+    shards_final: usize,
+    scale_ups: usize,
+}
+
+fn run_config(
+    config: &'static str,
+    pattern: ArrivalPattern,
+    base_rps: f64,
+    phase: Duration,
+    max_shards: usize,
+) -> Row {
+    let policy = AutoscalePolicy {
+        min_shards: 1,
+        max_shards,
+        target_p99_ms: 25.0,
+        max_shed_rate: 0.02,
+        scale_up_cooldown: Duration::from_millis(100),
+        scale_down_cooldown: Duration::from_secs(10), // never down mid-bench
+        interval: Duration::from_millis(25),
+        ..Default::default()
+    };
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 1,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(svc),
+        ServerConfig {
+            queue_capacity: 256,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: (2 * max_shards).max(4),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let controller = AutoscaleController::spawn(&server, policy.clone()).unwrap();
+
+    let mut meter = server.pressure_meter();
+    let done = AtomicBool::new(false);
+    let (step_tx, step_rx) = channel::<Instant>();
+    let (report_tx, report_rx) = channel();
+    let mut samples: Vec<(Instant, PressureSample)> = Vec::new();
+    std::thread::scope(|scope| {
+        let server = &server;
+        let done = &done;
+        scope.spawn(move || {
+            let lg = |rate_hz: f64| LoadgenConfig {
+                pattern,
+                rate_hz,
+                duration: phase,
+                sizes: vec![1024],
+                deadline: None,
+                ..Default::default()
+            };
+            let baseline = loadgen::run(server, &lg(0.5 * base_rps));
+            assert!(baseline.accounted, "{config}: baseline phase must account all requests");
+            step_tx.send(Instant::now()).unwrap();
+            let step = loadgen::run(server, &lg(1.5 * base_rps));
+            assert!(step.accounted, "{config}: step phase must account all requests");
+            report_tx.send(step).unwrap();
+            done.store(true, Ordering::Release);
+        });
+        while !done.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(25));
+            samples.push((Instant::now(), meter.sample()));
+        }
+    });
+    let step_at = step_rx.recv().expect("step instant sent");
+    let report = report_rx.recv().expect("step-phase report sent");
+    let log = controller.stop();
+
+    let since_step = |t: Instant| t.checked_duration_since(step_at).map(|d| d.as_secs_f64());
+    // worst shedding in the first 300ms after the step, before the
+    // controller has had time to act
+    let shed_rate_before = samples
+        .iter()
+        .filter(|(t, _)| matches!(since_step(*t), Some(s) if s <= 0.3))
+        .map(|(_, s)| s.shed_rate)
+        .fold(0.0f64, f64::max);
+    // steady state: the last quarter of the step phase
+    let tail: Vec<f64> = samples
+        .iter()
+        .filter(|(t, _)| matches!(since_step(*t), Some(s) if s >= 0.75 * phase.as_secs_f64()))
+        .map(|(_, s)| s.shed_rate)
+        .collect();
+    let shed_rate_after = if tail.is_empty() {
+        1.0
+    } else {
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    // Recovery: the overload takes a moment to manifest after the step
+    // (the first post-step samples still cover baseline traffic), so
+    // find the first post-step sample that *violates* the SLO, then the
+    // first compliant sample after it. No violation at all means the
+    // step never breached the SLO (recovery 0); a violation that never
+    // clears caps at the phase duration.
+    let slo_ok = |s: &PressureSample| {
+        s.shed_rate <= policy.max_shed_rate && s.queue_p99_us / 1e3 <= policy.target_p99_ms
+    };
+    let violation_at = samples
+        .iter()
+        .find_map(|(t, s)| since_step(*t).filter(|_| !slo_ok(s)));
+    let p99_recovery_ms = match violation_at {
+        None => 0.0,
+        Some(v) => samples
+            .iter()
+            .find_map(|(t, s)| since_step(*t).filter(|at| *at > v && slo_ok(s)))
+            .map_or(phase.as_secs_f64() * 1e3, |s| s * 1e3),
+    };
+
+    let shards_final = log.samples.last().map_or(1, |s| s.shards);
+    let scale_ups = log.events.iter().filter(|e| e.to_shards > e.from_shards).count();
+    println!(
+        "  {config:<16} recovered {:>7.0} rps, shed {:.1}% -> {:.1}%, \
+         p99 recovery {:.0} ms, shards 1 -> {shards_final} ({scale_ups} up)",
+        report.achieved_rps,
+        100.0 * shed_rate_before,
+        100.0 * shed_rate_after,
+        p99_recovery_ms
+    );
+    print!("{}", log.render());
+    server.shutdown();
+    Row {
+        config,
+        recovered_rps: report.achieved_rps,
+        shed_rate_before,
+        shed_rate_after,
+        p99_recovery_ms,
+        shards_final,
+        scale_ups,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let (phase, max_shards) = if quick {
+        (Duration::from_millis(1500), 4)
+    } else {
+        (Duration::from_secs(4), 8)
+    };
+    let base_rps = calibrate_single_shard_rps();
+    println!(
+        "\n=== autoscale step-overload: 1 shard (capacity ~{base_rps:.0} rps) offered \
+         0.5x then 1.5x capacity, {:.1}s per phase, max {max_shards} shards{} ===",
+        phase.as_secs_f64(),
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    let configs: &[(&'static str, ArrivalPattern)] = if quick {
+        &[("poisson_step", ArrivalPattern::Poisson)]
+    } else {
+        &[
+            ("poisson_step", ArrivalPattern::Poisson),
+            ("burst_step", ArrivalPattern::Burst),
+        ]
+    };
+    let rows: Vec<Row> = configs
+        .iter()
+        .map(|&(c, p)| run_config(c, p, base_rps, phase, max_shards))
+        .collect();
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"autoscale\", \"config\": \"{}\", \
+                 \"recovered_rps\": {:.1}, \"shed_rate_before\": {:.4}, \
+                 \"shed_rate_after\": {:.4}, \"p99_recovery_ms\": {:.1}, \
+                 \"shards_final\": {}, \"scale_ups\": {}, \"max_shards\": {}, \
+                 \"quick\": {}}}{}\n",
+                r.config,
+                r.recovered_rps,
+                r.shed_rate_before,
+                r.shed_rate_after,
+                r.p99_recovery_ms,
+                r.shards_final,
+                r.scale_ups,
+                max_shards,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

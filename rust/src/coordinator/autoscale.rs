@@ -1,0 +1,560 @@
+//! SLO-driven shard autoscaler: capacity follows traffic.
+//!
+//! "A Statically and Dynamically Scalable Soft GPGPU" (arXiv:2401.04261)
+//! argues that a soft GPGPU approaches IP-core efficiency only when its
+//! compute-unit count is sized to the workload — and that the sizing
+//! should be *dynamic*. Our serving stack measures exactly the demand
+//! signals that paper proposes reacting to: queue depth, shed rate and
+//! deadline misses, per [`PressureSample`]. This module closes the
+//! loop: an [`AutoscaleController`] consumes the traffic frontend's
+//! periodic pressure feed and grows or shrinks the shard pool of the
+//! running [`super::ShardedFftService`] against an SLO target.
+//!
+//! The control law ([`ControllerCore::decide`]) is deliberately simple
+//! and fully unit-testable:
+//!
+//! * **scale up** (one shard) when the interval shed rate exceeds
+//!   [`AutoscalePolicy::max_shed_rate`] or the interval queue-wait p99
+//!   exceeds `target_p99_ms * scale_up_threshold`, the pool is below
+//!   `max_shards`, and `scale_up_cooldown` has elapsed since the last
+//!   resize;
+//! * **scale down** (one shard) when nothing was shed, the queue-wait
+//!   p99 is below `target_p99_ms * scale_down_threshold`, the
+//!   admission queue is shallow, the pool is above `min_shards`, and
+//!   `scale_down_cooldown` has elapsed — so the pool drains back to
+//!   `min_shards` when traffic goes away;
+//! * **hold** otherwise.
+//!
+//! The SLO targets *queue wait*, not service time: adding shards
+//! removes queueing, while per-job service time is a property of the
+//! workload — gating on it would make the controller chase a signal it
+//! cannot move. Cooldowns are asymmetric by default (scale up fast,
+//! scale down slowly) so a bursty workload does not thrash the pool.
+//!
+//! Shutdown order matters: [`AutoscaleController::stop`] first (it
+//! holds a clone of the server's service handle), then
+//! `TrafficServer::shutdown`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::server::{PressureSample, ServiceHandle, TrafficServer};
+
+/// The SLO target and actuation limits for one controller.
+#[derive(Clone, Debug)]
+pub struct AutoscalePolicy {
+    /// The pool never shrinks below this many shards.
+    pub min_shards: usize,
+    /// The pool never grows beyond this many shards. Must not exceed
+    /// the server's `ServerConfig::dispatchers` (the backend in-flight
+    /// bound) — shards beyond it can never receive concurrent work, so
+    /// [`AutoscaleController::spawn`] rejects such a pairing.
+    pub max_shards: usize,
+    /// SLO: interval queue-wait p99 target, milliseconds.
+    pub target_p99_ms: f64,
+    /// SLO: maximum tolerable interval shed rate (fraction of
+    /// submissions rejected at admission).
+    pub max_shed_rate: f64,
+    /// Scale up once the interval p99 exceeds `target_p99_ms` times
+    /// this factor (1.0 = react exactly at the SLO; below 1.0 reacts
+    /// early, leaving headroom).
+    pub scale_up_threshold: f64,
+    /// Scale down only while the interval p99 is below `target_p99_ms`
+    /// times this factor (and nothing is being shed).
+    pub scale_down_threshold: f64,
+    /// Minimum time between a resize and the next scale-up.
+    pub scale_up_cooldown: Duration,
+    /// Minimum time between a resize and the next scale-down (longer
+    /// than the scale-up cooldown by default: grow fast, shrink slow).
+    pub scale_down_cooldown: Duration,
+    /// Pressure-feed sampling interval.
+    pub interval: Duration,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            min_shards: 1,
+            // Capped at ServerConfig::default()'s dispatcher count so
+            // the two defaults compose on any host — raise both
+            // together for wider pools.
+            max_shards: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .min(4),
+            target_p99_ms: 10.0,
+            max_shed_rate: 0.01,
+            scale_up_threshold: 1.0,
+            scale_down_threshold: 0.25,
+            scale_up_cooldown: Duration::from_millis(250),
+            scale_down_cooldown: Duration::from_secs(2),
+            interval: Duration::from_millis(50),
+        }
+    }
+}
+
+impl AutoscalePolicy {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_shards == 0 {
+            return Err(anyhow!("min_shards must be at least 1"));
+        }
+        if self.max_shards < self.min_shards {
+            return Err(anyhow!(
+                "max_shards ({}) must be >= min_shards ({})",
+                self.max_shards,
+                self.min_shards
+            ));
+        }
+        if self.target_p99_ms <= 0.0 {
+            return Err(anyhow!("target_p99_ms must be positive"));
+        }
+        if !(0.0..=1.0).contains(&self.max_shed_rate) {
+            return Err(anyhow!("max_shed_rate must be in [0, 1]"));
+        }
+        if self.scale_down_threshold >= self.scale_up_threshold {
+            return Err(anyhow!(
+                "scale_down_threshold ({}) must be below scale_up_threshold ({}) \
+                 or the controller oscillates",
+                self.scale_down_threshold,
+                self.scale_up_threshold
+            ));
+        }
+        if self.interval.is_zero() {
+            return Err(anyhow!("interval must be positive"));
+        }
+        Ok(())
+    }
+}
+
+/// What the control law decided for one sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    Up,
+    Down,
+    Hold,
+}
+
+/// The pure control law: policy + cooldown state, no threads, no
+/// service — fully unit-testable by feeding synthetic samples.
+pub struct ControllerCore {
+    policy: AutoscalePolicy,
+    /// Last resize (initialized to construction time, so the first
+    /// action waits out a full cooldown — a freshly started controller
+    /// never reacts to an empty first interval).
+    last_resize: Instant,
+}
+
+impl ControllerCore {
+    pub fn new(policy: AutoscalePolicy) -> Self {
+        ControllerCore { policy, last_resize: Instant::now() }
+    }
+
+    pub fn policy(&self) -> &AutoscalePolicy {
+        &self.policy
+    }
+
+    /// Decide on one sample, given the current shard count. Returning
+    /// `Up`/`Down` records the resize for cooldown purposes — the
+    /// caller is expected to apply it.
+    pub fn decide(&mut self, s: &PressureSample, shards: usize) -> ScaleAction {
+        let p99_ms = s.queue_p99_us / 1e3;
+        let since_resize = s.at.checked_duration_since(self.last_resize).unwrap_or_default();
+        let overloaded = s.shed_rate > self.policy.max_shed_rate
+            || p99_ms > self.policy.target_p99_ms * self.policy.scale_up_threshold;
+        if overloaded {
+            if shards < self.policy.max_shards && since_resize >= self.policy.scale_up_cooldown {
+                self.last_resize = s.at;
+                return ScaleAction::Up;
+            }
+            return ScaleAction::Hold;
+        }
+        let underloaded = s.shed == 0
+            && p99_ms < self.policy.target_p99_ms * self.policy.scale_down_threshold
+            && s.queue_depth <= shards;
+        if underloaded
+            && shards > self.policy.min_shards
+            && since_resize >= self.policy.scale_down_cooldown
+        {
+            self.last_resize = s.at;
+            return ScaleAction::Down;
+        }
+        ScaleAction::Hold
+    }
+}
+
+/// One applied resize, for the log.
+#[derive(Clone, Debug)]
+pub struct AutoscaleEvent {
+    /// Seconds since the controller started.
+    pub at_s: f64,
+    pub from_shards: usize,
+    pub to_shards: usize,
+    /// Human-readable trigger (which SLO signal fired, with values).
+    pub reason: String,
+}
+
+/// One observed sample, for shards-over-time reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleSample {
+    /// Seconds since the controller started.
+    pub at_s: f64,
+    /// Shard count *after* any action this tick applied.
+    pub shards: usize,
+    pub queue_depth: usize,
+    pub shed_rate: f64,
+    /// Interval queue-wait p99, milliseconds.
+    pub queue_p99_ms: f64,
+    pub action: ScaleAction,
+}
+
+/// Everything a controller run observed and did.
+#[derive(Clone, Debug, Default)]
+pub struct AutoscaleLog {
+    pub samples: Vec<AutoscaleSample>,
+    pub events: Vec<AutoscaleEvent>,
+}
+
+impl AutoscaleLog {
+    /// `(seconds, shards)` per tick — the bench's shards-over-time
+    /// series.
+    pub fn shards_over_time(&self) -> Vec<(f64, usize)> {
+        self.samples.iter().map(|s| (s.at_s, s.shards)).collect()
+    }
+
+    /// Seconds from `from_s` until the first subsequent sample meeting
+    /// both SLO thresholds (shed rate and queue-wait p99), or `None`
+    /// if the run never recovered.
+    pub fn recovery_after_s(&self, from_s: f64, policy: &AutoscalePolicy) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| {
+                s.at_s >= from_s
+                    && s.shed_rate <= policy.max_shed_rate
+                    && s.queue_p99_ms <= policy.target_p99_ms
+            })
+            .map(|s| s.at_s - from_s)
+    }
+
+    pub fn render(&self) -> String {
+        let ups = self.events.iter().filter(|e| e.to_shards > e.from_shards).count();
+        let downs = self.events.len() - ups;
+        let span = self.samples.last().map(|s| s.at_s).unwrap_or(0.0);
+        let mut s = format!(
+            "autoscale: {} scale-up(s), {} scale-down(s) over {:.1}s ({} samples)\n",
+            ups,
+            downs,
+            span,
+            self.samples.len()
+        );
+        for e in &self.events {
+            s.push_str(&format!(
+                "  t={:>6.2}s  {} -> {} shards  ({})\n",
+                e.at_s, e.from_shards, e.to_shards, e.reason
+            ));
+        }
+        if !self.samples.is_empty() {
+            let series = self
+                .samples
+                .iter()
+                .map(|p| p.shards.to_string())
+                .collect::<Vec<_>>()
+                .join(" ");
+            s.push_str(&format!("  shards over time: {series}\n"));
+        }
+        s
+    }
+}
+
+/// The running feedback controller: a thread consuming the server's
+/// pressure feed and resizing the sharded backend against the policy.
+pub struct AutoscaleController {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<AutoscaleLog>>,
+}
+
+impl AutoscaleController {
+    /// Start a controller over `server`'s backend. Fails when the
+    /// policy is invalid or the server does not wrap the sharded
+    /// (resizable) service.
+    pub fn spawn(server: &TrafficServer, policy: AutoscalePolicy) -> Result<Self> {
+        policy.validate()?;
+        let service = server.service();
+        if service.as_sharded().is_none() {
+            return Err(anyhow!(
+                "autoscaling requires ServiceHandle::Sharded (the pool service is not resizable)"
+            ));
+        }
+        // The dispatcher pool bounds backend in-flight work, so shards
+        // beyond it add zero capacity: scaling past it would weld the
+        // pool at max with the SLO never recovering.
+        let dispatchers = server.config().dispatchers;
+        if policy.max_shards > dispatchers {
+            return Err(anyhow!(
+                "max_shards ({}) exceeds the server's dispatcher count ({}): shards \
+                 beyond the in-flight bound add no capacity — raise \
+                 ServerConfig::dispatchers or lower max_shards",
+                policy.max_shards,
+                dispatchers
+            ));
+        }
+        let feed = server.pressure_feed(policy.interval);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || controller_loop(feed, service, policy, stop2));
+        Ok(AutoscaleController { stop, thread: Some(thread) })
+    }
+
+    /// Stop the controller and return everything it observed and did.
+    /// This drops the controller's service handle, so call it *before*
+    /// `TrafficServer::shutdown`.
+    pub fn stop(mut self) -> AutoscaleLog {
+        self.stop.store(true, Ordering::Release);
+        self.thread
+            .take()
+            .map(|t| t.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for AutoscaleController {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn controller_loop(
+    feed: std::sync::mpsc::Receiver<PressureSample>,
+    service: Arc<ServiceHandle>,
+    policy: AutoscalePolicy,
+    stop: Arc<AtomicBool>,
+) -> AutoscaleLog {
+    let started = Instant::now();
+    let target_ms = policy.target_p99_ms;
+    let max_shed = policy.max_shed_rate;
+    let mut core = ControllerCore::new(policy.clone());
+    let mut log = AutoscaleLog::default();
+    let sharded = service.as_sharded().expect("validated in spawn");
+    while !stop.load(Ordering::Acquire) {
+        let sample = match feed.recv_timeout(policy.interval) {
+            Ok(s) => s,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let shards = sharded.shards();
+        let action = core.decide(&sample, shards);
+        let at_s = sample.at.checked_duration_since(started).unwrap_or_default().as_secs_f64();
+        let p99_ms = sample.queue_p99_us / 1e3;
+        let after = match action {
+            ScaleAction::Up => {
+                sharded.add_shard();
+                log.events.push(AutoscaleEvent {
+                    at_s,
+                    from_shards: shards,
+                    to_shards: shards + 1,
+                    reason: format!(
+                        "shed rate {:.3} (SLO {:.3}), queue p99 {:.1}ms (SLO {:.1}ms)",
+                        sample.shed_rate, max_shed, p99_ms, target_ms
+                    ),
+                });
+                shards + 1
+            }
+            ScaleAction::Down => match sharded.retire_shard() {
+                Ok(_) => {
+                    log.events.push(AutoscaleEvent {
+                        at_s,
+                        from_shards: shards,
+                        to_shards: shards - 1,
+                        reason: format!(
+                            "idle: no shedding, queue p99 {:.1}ms well under {:.1}ms SLO",
+                            p99_ms, target_ms
+                        ),
+                    });
+                    shards - 1
+                }
+                Err(_) => shards, // raced shutdown; nothing to do
+            },
+            ScaleAction::Hold => shards,
+        };
+        log.samples.push(AutoscaleSample {
+            at_s,
+            shards: after,
+            queue_depth: sample.queue_depth,
+            shed_rate: sample.shed_rate,
+            queue_p99_ms: p99_ms,
+            action,
+        });
+    }
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy {
+            min_shards: 1,
+            max_shards: 4,
+            target_p99_ms: 10.0,
+            max_shed_rate: 0.05,
+            scale_up_threshold: 1.0,
+            scale_down_threshold: 0.25,
+            scale_up_cooldown: Duration::from_millis(100),
+            scale_down_cooldown: Duration::from_millis(400),
+            interval: Duration::from_millis(25),
+        }
+    }
+
+    fn sample(
+        at: Instant,
+        shed_rate: f64,
+        queue_p99_us: f64,
+        queue_depth: usize,
+    ) -> PressureSample {
+        PressureSample {
+            at,
+            queue_depth,
+            submitted: 100,
+            completed: 90,
+            shed: if shed_rate > 0.0 { (shed_rate * 100.0) as u64 } else { 0 },
+            expired: 0,
+            shed_rate,
+            deadline_miss_rate: 0.0,
+            queue_p99_us,
+            service_p99_us: 500.0,
+        }
+    }
+
+    #[test]
+    fn policy_validation_rejects_nonsense() {
+        assert!(policy().validate().is_ok());
+        assert!(AutoscalePolicy { min_shards: 0, ..policy() }.validate().is_err());
+        assert!(AutoscalePolicy { max_shards: 1, min_shards: 2, ..policy() }
+            .validate()
+            .is_err());
+        assert!(AutoscalePolicy { target_p99_ms: 0.0, ..policy() }.validate().is_err());
+        assert!(AutoscalePolicy { max_shed_rate: 1.5, ..policy() }.validate().is_err());
+        assert!(AutoscalePolicy {
+            scale_down_threshold: 1.0,
+            scale_up_threshold: 1.0,
+            ..policy()
+        }
+        .validate()
+        .is_err());
+        assert!(AutoscalePolicy { interval: Duration::ZERO, ..policy() }.validate().is_err());
+    }
+
+    #[test]
+    fn shedding_triggers_scale_up_after_cooldown() {
+        let mut core = ControllerCore::new(policy());
+        let t0 = Instant::now();
+        // inside the initial cooldown: held even under pressure
+        assert_eq!(core.decide(&sample(t0, 0.5, 100.0, 32), 1), ScaleAction::Hold);
+        let t1 = t0 + Duration::from_millis(150);
+        assert_eq!(core.decide(&sample(t1, 0.5, 100.0, 32), 1), ScaleAction::Up);
+        // immediately after: cooldown holds the next step
+        let t2 = t1 + Duration::from_millis(25);
+        assert_eq!(core.decide(&sample(t2, 0.5, 100.0, 32), 2), ScaleAction::Hold);
+        let t3 = t1 + Duration::from_millis(150);
+        assert_eq!(core.decide(&sample(t3, 0.5, 100.0, 32), 2), ScaleAction::Up);
+    }
+
+    #[test]
+    fn p99_breach_triggers_scale_up_without_shedding() {
+        let mut core = ControllerCore::new(policy());
+        let t = Instant::now() + Duration::from_secs(1);
+        // 15ms interval queue p99 > 10ms SLO, zero shed
+        assert_eq!(core.decide(&sample(t, 0.0, 15_000.0, 8), 2), ScaleAction::Up);
+    }
+
+    #[test]
+    fn max_shards_caps_growth() {
+        let mut core = ControllerCore::new(policy());
+        let t = Instant::now() + Duration::from_secs(1);
+        assert_eq!(core.decide(&sample(t, 0.9, 90_000.0, 64), 4), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn idle_scales_down_to_min_and_no_further() {
+        let mut core = ControllerCore::new(policy());
+        let t1 = Instant::now() + Duration::from_secs(1);
+        assert_eq!(core.decide(&sample(t1, 0.0, 100.0, 0), 3), ScaleAction::Down);
+        // scale-down cooldown holds the next shrink
+        let t2 = t1 + Duration::from_millis(100);
+        assert_eq!(core.decide(&sample(t2, 0.0, 100.0, 0), 2), ScaleAction::Hold);
+        let t3 = t1 + Duration::from_millis(500);
+        assert_eq!(core.decide(&sample(t3, 0.0, 100.0, 0), 2), ScaleAction::Down);
+        let t4 = t3 + Duration::from_secs(1);
+        assert_eq!(core.decide(&sample(t4, 0.0, 100.0, 0), 1), ScaleAction::Hold, "at min");
+    }
+
+    #[test]
+    fn healthy_midband_holds() {
+        let mut core = ControllerCore::new(policy());
+        let t = Instant::now() + Duration::from_secs(1);
+        // p99 at 5ms: above the 2.5ms scale-down band, below the 10ms SLO
+        assert_eq!(core.decide(&sample(t, 0.0, 5_000.0, 2), 2), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn deep_queue_blocks_scale_down() {
+        let mut core = ControllerCore::new(policy());
+        let t = Instant::now() + Duration::from_secs(1);
+        // p99 looks calm but a backlog is sitting in admission
+        assert_eq!(core.decide(&sample(t, 0.0, 100.0, 64), 3), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn log_reports_recovery_and_series() {
+        let pol = policy();
+        let log = AutoscaleLog {
+            samples: vec![
+                AutoscaleSample {
+                    at_s: 0.1,
+                    shards: 1,
+                    queue_depth: 50,
+                    shed_rate: 0.4,
+                    queue_p99_ms: 40.0,
+                    action: ScaleAction::Hold,
+                },
+                AutoscaleSample {
+                    at_s: 0.2,
+                    shards: 2,
+                    queue_depth: 30,
+                    shed_rate: 0.2,
+                    queue_p99_ms: 20.0,
+                    action: ScaleAction::Up,
+                },
+                AutoscaleSample {
+                    at_s: 0.3,
+                    shards: 3,
+                    queue_depth: 2,
+                    shed_rate: 0.0,
+                    queue_p99_ms: 2.0,
+                    action: ScaleAction::Up,
+                },
+            ],
+            events: vec![AutoscaleEvent {
+                at_s: 0.2,
+                from_shards: 1,
+                to_shards: 2,
+                reason: "shed rate 0.400".into(),
+            }],
+        };
+        assert_eq!(log.shards_over_time(), vec![(0.1, 1), (0.2, 2), (0.3, 3)]);
+        let rec = log.recovery_after_s(0.1, &pol).expect("recovered");
+        assert!((rec - 0.2).abs() < 1e-9, "first compliant sample at 0.3s");
+        assert!(log.recovery_after_s(0.35, &pol).is_none(), "no sample after 0.35s");
+        let out = log.render();
+        assert!(out.contains("1 -> 2 shards"), "{out}");
+        assert!(out.contains("shards over time: 1 2 3"), "{out}");
+    }
+}

@@ -83,6 +83,26 @@ impl LatencyStats {
         }
     }
 
+    /// The samples recorded between `prev` (an earlier snapshot of the
+    /// same recorder) and this snapshot, as their own distribution —
+    /// the interval view the autoscaler's pressure feed is built on.
+    /// `max_us` stays cumulative: a per-interval max is not recoverable
+    /// from bucket counts.
+    pub fn delta_since(&self, prev: &LatencyStats) -> LatencyStats {
+        let mut buckets = [0u64; LATENCY_LOG_BUCKETS];
+        for (out, (cur, old)) in
+            buckets.iter_mut().zip(self.buckets.iter().zip(&prev.buckets))
+        {
+            *out = cur.saturating_sub(*old);
+        }
+        LatencyStats {
+            count: self.count.saturating_sub(prev.count),
+            sum_us: (self.sum_us - prev.sum_us).max(0.0),
+            max_us: self.max_us,
+            buckets,
+        }
+    }
+
     /// Percentile estimate (upper bound of the covering bucket), µs.
     /// `q` in `[0, 1]`; returns 0 with no samples.
     pub fn percentile_us(&self, q: f64) -> f64 {
@@ -161,6 +181,31 @@ impl ServerStats {
     /// failed with a typed error. Nothing is silently dropped.
     pub fn accounted(&self) -> bool {
         self.completed + self.expired + self.failed == self.admitted
+    }
+
+    /// The traffic accumulated between `prev` (an earlier snapshot of
+    /// the same frontend) and this snapshot: counter fields subtract,
+    /// the latency recorders become interval distributions
+    /// ([`LatencyStats::delta_since`]), and `max_queue_depth` stays
+    /// cumulative. `shed_rate()` / `deadline_miss_rate()` on the result
+    /// are interval rates — the signals the autoscaler reacts to.
+    pub fn interval_since(&self, prev: &ServerStats) -> ServerStats {
+        ServerStats {
+            submitted: self.submitted.saturating_sub(prev.submitted),
+            admitted: self.admitted.saturating_sub(prev.admitted),
+            completed: self.completed.saturating_sub(prev.completed),
+            shed: self.shed.saturating_sub(prev.shed),
+            degraded: self.degraded.saturating_sub(prev.degraded),
+            expired: self.expired.saturating_sub(prev.expired),
+            late: self.late.saturating_sub(prev.late),
+            failed: self.failed.saturating_sub(prev.failed),
+            served_high: self.served_high.saturating_sub(prev.served_high),
+            served_low: self.served_low.saturating_sub(prev.served_low),
+            aged: self.aged.saturating_sub(prev.aged),
+            max_queue_depth: self.max_queue_depth,
+            queue_wait: self.queue_wait.delta_since(&prev.queue_wait),
+            service_time: self.service_time.delta_since(&prev.service_time),
+        }
     }
 }
 
@@ -245,6 +290,10 @@ impl Metrics {
 /// service).
 #[derive(Clone, Debug, Default)]
 pub struct ShardStat {
+    /// Stable shard id: assigned once at spawn and never reused, so a
+    /// snapshot taken across `add_shard` / `retire_shard` resizes keys
+    /// counters by identity, not by position in the pool. Ids may be
+    /// non-contiguous after a resize.
     pub shard: usize,
     /// Jobs processed by this shard — successes *and* errors, counted
     /// at dequeue (unlike the aggregate `served`, which counts only
@@ -262,8 +311,17 @@ pub struct ShardStat {
     pub max_queue_depth: usize,
     /// Time spent serving jobs, µs.
     pub busy_us: u64,
-    /// Fraction of wall time this shard spent serving (0.0–1.0).
+    /// Fraction of wall time this shard spent serving (0.0–1.0). For a
+    /// retired shard this is frozen at retirement time.
     pub occupancy: f64,
+    /// The shard has left the routing table via
+    /// `ShardedFftService::retire_shard`. While the retirement is still
+    /// draining, snapshots report the shard's *live* counters under
+    /// this flag (they may still advance between snapshots); once the
+    /// drain completes the counters are frozen final values. Either
+    /// way, retired entries keep aggregate accounting (e.g. summing
+    /// `handled`) complete across resizes.
+    pub retired: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -423,9 +481,10 @@ impl MetricsSnapshot {
             ));
             for sh in &self.shards {
                 s.push_str(&format!(
-                    "    shard {}: handled {} (affine {}, stolen {}), occupancy {:.2}, \
+                    "    shard {}{}: handled {} (affine {}, stolen {}), occupancy {:.2}, \
                      queue {} (peak {})\n",
                     sh.shard,
+                    if sh.retired { " [retired]" } else { "" },
                     sh.handled,
                     sh.affine,
                     sh.stolen,
@@ -535,6 +594,66 @@ mod tests {
         assert_eq!(s.count, 2);
         assert_eq!(s.percentile_us(0.0), 1.0);
         assert!(s.percentile_us(1.0) >= (1u64 << (LATENCY_LOG_BUCKETS - 1)) as f64);
+    }
+
+    #[test]
+    fn latency_delta_isolates_the_interval() {
+        let r = LatencyRecorder::default();
+        for _ in 0..50 {
+            r.record(12.0);
+        }
+        let first = r.snapshot();
+        for _ in 0..10 {
+            r.record(900.0);
+        }
+        let iv = r.snapshot().delta_since(&first);
+        assert_eq!(iv.count, 10, "only the new samples");
+        assert_eq!(iv.percentile_us(0.50), 1024.0, "interval p50 sees only the slow burst");
+        assert!((iv.mean_us() - 900.0).abs() < 1.0);
+        let empty = r.snapshot().delta_since(&r.snapshot());
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.percentile_us(0.99), 0.0);
+    }
+
+    #[test]
+    fn server_stats_interval_since_subtracts_counters() {
+        let prev = ServerStats {
+            submitted: 100,
+            admitted: 90,
+            completed: 80,
+            shed: 10,
+            ..Default::default()
+        };
+        let cur = ServerStats {
+            submitted: 150,
+            admitted: 130,
+            completed: 120,
+            shed: 20,
+            max_queue_depth: 64,
+            ..Default::default()
+        };
+        let iv = cur.interval_since(&prev);
+        assert_eq!(iv.submitted, 50);
+        assert_eq!(iv.admitted, 40);
+        assert_eq!(iv.completed, 40);
+        assert_eq!(iv.shed, 10);
+        assert!((iv.shed_rate() - 0.2).abs() < 1e-12, "interval shed rate, not cumulative");
+        assert_eq!(iv.max_queue_depth, 64, "peaks stay cumulative");
+        let noop = cur.interval_since(&cur);
+        assert_eq!(noop.submitted, 0);
+        assert_eq!(noop.shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn retired_shards_render_with_stable_ids() {
+        let mut s = Metrics::default().snapshot();
+        s.shards = vec![
+            ShardStat { shard: 0, handled: 10, ..Default::default() },
+            ShardStat { shard: 3, handled: 4, retired: true, ..Default::default() },
+        ];
+        let out = s.render();
+        assert!(out.contains("shard 0: handled 10"), "{out}");
+        assert!(out.contains("shard 3 [retired]: handled 4"), "{out}");
     }
 
     #[test]

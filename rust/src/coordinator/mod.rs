@@ -41,7 +41,15 @@
 //! arrivals (`egpu-fft loadtest`). Failures are typed: every submit
 //! path answers with a [`ServiceError`] instead of panicking when the
 //! worker pool is gone.
+//!
+//! The sharded pool is *elastic*: `add_shard` / `retire_shard` resize
+//! it while serving (epoch-versioned routing, drain-and-reroute
+//! retirement), and the [`autoscale`] controller drives those calls
+//! from the frontend's periodic [`server::PressureSample`] feed against
+//! an SLO target — capacity follows traffic instead of being
+//! provisioned for peak (`egpu-fft serve --autoscale`).
 
+pub mod autoscale;
 pub mod loadgen;
 pub mod metrics;
 pub mod server;
@@ -63,10 +71,14 @@ use crate::fft::{self, cache::PlanCache, reference};
 use crate::profile::Profile;
 use crate::runtime::{spawn_pjrt_server, PjrtHandle};
 use crate::sim::FftExecutor;
+pub use autoscale::{
+    AutoscaleController, AutoscaleEvent, AutoscaleLog, AutoscalePolicy, AutoscaleSample,
+    ControllerCore, ScaleAction,
+};
 pub use loadgen::{ArrivalPattern, LoadReport, LoadgenConfig};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat};
 pub use server::{AdmissionPolicy, Priority, RequestOpts, ServedFft, ServerConfig};
-pub use server::{ServerResult, ServiceHandle, TrafficServer};
+pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
 pub use shard::{ShardPoolConfig, ShardedFftService};
 
 /// Typed, matchable errors from the serving stack. Execution services
@@ -145,6 +157,26 @@ pub struct FftResult {
 struct Job {
     kind: JobKind,
     submitted: Instant,
+}
+
+impl Job {
+    /// Number of requests this job carries (a batch chunk weighs its
+    /// job count against queue depths and the steal threshold).
+    fn weight(&self) -> u64 {
+        match &self.kind {
+            JobKind::Single { .. } => 1,
+            JobKind::Batch { ids, .. } => ids.len() as u64,
+        }
+    }
+
+    /// Transform size, for affinity routing (batches are same-size by
+    /// construction).
+    fn points(&self) -> usize {
+        match &self.kind {
+            JobKind::Single { input, .. } => input.len(),
+            JobKind::Batch { inputs, .. } => inputs.first().map(Vec::len).unwrap_or(0),
+        }
+    }
 }
 
 enum JobKind {

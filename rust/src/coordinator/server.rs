@@ -162,6 +162,15 @@ impl ServiceHandle {
         }
     }
 
+    /// The sharded scheduler, when that is what this handle wraps —
+    /// the resizable backend the autoscale controller needs.
+    pub fn as_sharded(&self) -> Option<&ShardedFftService> {
+        match self {
+            ServiceHandle::Sharded(s) => Some(s),
+            ServiceHandle::Pool(_) => None,
+        }
+    }
+
     pub fn shutdown(self) {
         match self {
             ServiceHandle::Pool(s) => s.shutdown(),
@@ -260,6 +269,71 @@ fn pop_next(st: &mut QueueState, aging: Duration, m: &ServerMetrics) -> Option<P
     st.low.pop_front()
 }
 
+/// One reading of the frontend's pressure signals, covering the
+/// interval since the previous sample from the same
+/// [`PressureMeter`] — exactly the demand signals the scalable-GPGPU
+/// companion paper proposes sizing the pool with, and what
+/// `coordinator::autoscale` consumes.
+#[derive(Clone, Copy, Debug)]
+pub struct PressureSample {
+    /// When the sample was taken.
+    pub at: Instant,
+    /// Admitted-but-not-yet-dispatched requests right now (a gauge,
+    /// not an interval counter).
+    pub queue_depth: usize,
+    /// Submissions in the interval.
+    pub submitted: u64,
+    /// Completions in the interval.
+    pub completed: u64,
+    /// Requests shed at admission in the interval.
+    pub shed: u64,
+    /// Requests whose deadline expired in queue in the interval.
+    pub expired: u64,
+    /// Interval shed fraction (`shed / submitted`).
+    pub shed_rate: f64,
+    /// Interval deadline-miss fraction (expired + late, over admitted).
+    pub deadline_miss_rate: f64,
+    /// Interval queue-wait p99, µs — the component of latency that
+    /// adding capacity actually removes.
+    pub queue_p99_us: f64,
+    /// Interval service-time p99, µs.
+    pub service_p99_us: f64,
+}
+
+/// Computes [`PressureSample`]s as deltas between successive frontend
+/// snapshots. Each meter carries its own `last` snapshot, so several
+/// consumers (an autoscaler, a bench, a dashboard) can sample the same
+/// server at independent cadences.
+pub struct PressureMeter {
+    admission: Arc<Admission>,
+    metrics: Arc<ServerMetrics>,
+    last: ServerStats,
+}
+
+impl PressureMeter {
+    /// Take one sample covering the interval since the previous call
+    /// (or since the meter was created).
+    pub fn sample(&mut self) -> PressureSample {
+        let cur = self.metrics.snapshot();
+        let iv = cur.interval_since(&self.last);
+        let queue_depth = self.admission.state.lock().unwrap().depth();
+        let sample = PressureSample {
+            at: Instant::now(),
+            queue_depth,
+            submitted: iv.submitted,
+            completed: iv.completed,
+            shed: iv.shed,
+            expired: iv.expired,
+            shed_rate: iv.shed_rate(),
+            deadline_miss_rate: iv.deadline_miss_rate(),
+            queue_p99_us: iv.queue_wait.percentile_us(0.99),
+            service_p99_us: iv.service_time.percentile_us(0.99),
+        };
+        self.last = cur;
+        sample
+    }
+}
+
 /// The admission-controlled frontend over an FFT execution service.
 pub struct TrafficServer {
     cfg: ServerConfig,
@@ -267,6 +341,8 @@ pub struct TrafficServer {
     metrics: Arc<ServerMetrics>,
     inner: Option<Arc<ServiceHandle>>,
     dispatchers: Vec<JoinHandle<()>>,
+    /// Periodic pressure-feed sampler threads (see `pressure_feed`).
+    samplers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl TrafficServer {
@@ -294,7 +370,55 @@ impl TrafficServer {
                 dispatcher_loop(admission, metrics, inner, aging)
             }));
         }
-        Ok(TrafficServer { cfg, admission, metrics, inner: Some(inner), dispatchers })
+        Ok(TrafficServer {
+            cfg,
+            admission,
+            metrics,
+            inner: Some(inner),
+            dispatchers,
+            samplers: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// A shared handle to the wrapped execution service, so a
+    /// controller (e.g. `coordinator::autoscale`) can resize the shard
+    /// pool the server dispatches into. Drop the clone before calling
+    /// [`TrafficServer::shutdown`], or the inner service cannot be
+    /// unwrapped and shut down.
+    pub fn service(&self) -> Arc<ServiceHandle> {
+        Arc::clone(self.inner.as_ref().expect("inner service present until shutdown"))
+    }
+
+    /// A fresh pressure meter over this server's frontend counters
+    /// (first `sample()` covers everything since server start).
+    pub fn pressure_meter(&self) -> PressureMeter {
+        PressureMeter {
+            admission: Arc::clone(&self.admission),
+            metrics: Arc::clone(&self.metrics),
+            last: ServerStats::default(),
+        }
+    }
+
+    /// A periodic [`PressureSample`] feed: a sampler thread meters the
+    /// frontend every `interval` and sends the sample down the returned
+    /// channel. The sampler exits when the receiver is dropped or the
+    /// server shuts down (shutdown joins it, waiting at most one
+    /// interval).
+    pub fn pressure_feed(&self, interval: Duration) -> Receiver<PressureSample> {
+        let (tx, rx) = channel();
+        let mut meter = self.pressure_meter();
+        let admission = Arc::clone(&self.admission);
+        let handle = std::thread::spawn(move || loop {
+            std::thread::sleep(interval);
+            if tx.send(meter.sample()).is_err() {
+                return; // consumer gone
+            }
+            if admission.state.lock().unwrap().closed {
+                return; // server shut down
+            }
+        });
+        self.samplers.lock().unwrap().push(handle);
+        rx
     }
 
     /// Submit one FFT through admission control. Returns the reply
@@ -380,8 +504,14 @@ impl TrafficServer {
     pub fn shutdown(mut self) {
         self.close_and_join();
         if let Some(inner) = self.inner.take() {
-            if let Ok(handle) = Arc::try_unwrap(inner) {
-                handle.shutdown();
+            match Arc::try_unwrap(inner) {
+                Ok(handle) => handle.shutdown(),
+                Err(_) => eprintln!(
+                    "warning: TrafficServer::shutdown could not stop the inner \
+                     service — a handle from TrafficServer::service() is still \
+                     alive (stop the AutoscaleController first); backend worker \
+                     threads stop when the last handle drops"
+                ),
             }
         }
     }
@@ -392,6 +522,11 @@ impl TrafficServer {
         self.admission.space.notify_all();
         for d in self.dispatchers.drain(..) {
             let _ = d.join();
+        }
+        // Pressure-feed samplers notice the closed flag within one
+        // interval (or exit early when their receiver is gone).
+        for s in self.samplers.lock().unwrap().drain(..) {
+            let _ = s.join();
         }
     }
 }
@@ -523,6 +658,36 @@ mod tests {
         assert_eq!(first.priority, Priority::Low);
         assert_eq!(m.aged.load(Ordering::Relaxed), 1);
         assert_eq!(st.high.len(), 1);
+    }
+
+    #[test]
+    fn pressure_meter_reports_interval_deltas() {
+        let m = Arc::new(ServerMetrics::default());
+        let adm = Arc::new(Admission {
+            state: Mutex::new(QueueState::default()),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        });
+        let mut meter = PressureMeter {
+            admission: Arc::clone(&adm),
+            metrics: Arc::clone(&m),
+            last: ServerStats::default(),
+        };
+        m.submitted.fetch_add(10, Ordering::Relaxed);
+        m.shed.fetch_add(5, Ordering::Relaxed);
+        let s1 = meter.sample();
+        assert_eq!(s1.submitted, 10);
+        assert_eq!(s1.shed, 5);
+        assert!((s1.shed_rate - 0.5).abs() < 1e-12);
+        // no new traffic: the next interval is clean, not cumulative
+        let s2 = meter.sample();
+        assert_eq!(s2.submitted, 0);
+        assert_eq!(s2.shed_rate, 0.0);
+        m.submitted.fetch_add(4, Ordering::Relaxed);
+        let s3 = meter.sample();
+        assert_eq!(s3.submitted, 4);
+        assert_eq!(s3.shed, 0);
+        assert_eq!(s3.queue_depth, 0);
     }
 
     #[test]

@@ -1,8 +1,9 @@
-//! Multi-core sharded FFT scheduler.
+//! Multi-core sharded FFT scheduler with a dynamically sizable pool.
 //!
 //! The paper's companion work ("A Statically and Dynamically Scalable
 //! Soft GPGPU") makes the case that the eGPU scales by *replication*:
-//! many small, high-fmax SMs rather than one big one. The single-queue
+//! many small, high-fmax SMs rather than one big one — and that the
+//! replica count itself should track demand. The single-queue
 //! [`super::FftService`] models one leader feeding a pool through a
 //! shared (mutex-guarded) queue; at high core counts that queue — and
 //! the cold executor maps behind it — become the bottleneck. This
@@ -10,11 +11,13 @@
 //!
 //! * **one queue per shard** — each shard owns a private channel and a
 //!   worker thread with one resident simulated SM, so dispatch never
-//!   takes a shared lock;
+//!   takes a shared lock on the hot path (routing takes a read lock on
+//!   the epoch-versioned table, which is uncontended unless the pool is
+//!   resizing);
 //! * **size-affinity routing** — a given transform size always has the
-//!   same *home* shard, keeping that shard's resident
-//!   [`crate::sim::FftExecutor`] warm (twiddles stay uploaded, no
-//!   executor churn);
+//!   same *home* shard within a routing epoch, keeping that shard's
+//!   resident [`crate::sim::FftExecutor`] warm (twiddles stay uploaded,
+//!   no executor churn);
 //! * **work-stealing overflow** — when the home shard's queue depth
 //!   (queued + in-flight) exceeds [`ShardPoolConfig::steal_threshold`],
 //!   the job is redirected to the least-loaded shard instead, so a
@@ -29,15 +32,32 @@
 //!   everywhere (the cache counts lock contention so the sharing cost
 //!   is observable).
 //!
+//! **Elasticity.** The pool is resizable while serving:
+//! [`ShardedFftService::add_shard`] spawns a new shard and
+//! [`ShardedFftService::retire_shard`] removes one — the retiring
+//! worker finishes its in-flight job, hands every still-queued job back
+//! through a drain channel, and `retire_shard` re-routes each through
+//! the current affinity map before the worker exits, so no admitted job
+//! is ever lost. The routing table is *epoch-versioned*: every resize
+//! bumps [`ShardedFftService::epoch`], and each routing decision is
+//! made and dispatched under one read lock, so a job is never routed
+//! with one epoch's affinity map and enqueued under another. Shard ids
+//! are stable (assigned once, never reused) and a retired shard's final
+//! counters stay in [`MetricsSnapshot::shards`] flagged
+//! [`ShardStat::retired`], so snapshots across resizes keep complete
+//! aggregate accounting. The `coordinator::autoscale` controller drives
+//! these two calls from the traffic frontend's pressure feed.
+//!
 //! Shards run exactly the same serving code as the single-queue pool
 //! (`handle_job` → `serve_one` / `serve_batch`), so sharded outputs are
-//! bitwise identical to single-shard results — sharding changes
-//! scheduling, never numerics (enforced by `rust/tests/shard.rs`).
+//! bitwise identical to single-shard results — sharding *and resizing*
+//! change scheduling, never numerics (enforced by `rust/tests/shard.rs`
+//! and `rust/tests/autoscale.rs`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -54,8 +74,9 @@ use crate::runtime::{spawn_pjrt_server, PjrtHandle};
 /// Configuration for the sharded scheduler.
 #[derive(Clone, Debug)]
 pub struct ShardPoolConfig {
-    /// Number of shards (resident simulated SMs). `0` means one shard
-    /// per available hardware thread.
+    /// Number of shards (resident simulated SMs) at startup. `0` means
+    /// one shard per available hardware thread. The pool can be resized
+    /// afterwards with `add_shard` / `retire_shard`.
     pub shards: usize,
     /// Queue depth (queued + in-flight jobs) beyond which the router
     /// overflows an affine job onto the least-loaded shard. `0` steals
@@ -100,23 +121,104 @@ struct ShardCounters {
     busy_us: AtomicU64,
 }
 
-struct Shard {
+/// One live shard: a stable id (assigned once, never reused), its
+/// queue, its counters, the retirement flag its worker polls, and the
+/// drain channel queued jobs come back through at retirement.
+struct ShardSlot {
+    id: usize,
     tx: Sender<Job>,
     counters: Arc<ShardCounters>,
+    retiring: Arc<AtomicBool>,
+    /// Receiver for jobs the worker hands back during retirement. The
+    /// Mutex exists only to keep `RoutingState: Sync`; it is locked
+    /// exactly once, by `retire_shard`, after the slot leaves the
+    /// table.
+    drain: Mutex<Receiver<Job>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// The epoch-versioned routing table. A routing decision (affinity /
+/// least-loaded / steal) is only meaningful against one consistent view
+/// of the pool, so decisions and the dispatch they produce happen under
+/// a single read lock; every resize takes the write lock and bumps
+/// `epoch`.
+struct RoutingState {
+    slots: Vec<ShardSlot>,
+    epoch: u64,
+}
+
+impl RoutingState {
+    /// The home shard *position* for a transform size: deterministic
+    /// within an epoch, so a size always finds its warm resident
+    /// executor when the pool is not overloaded.
+    fn affinity(&self, points: usize) -> usize {
+        (points.trailing_zeros() as usize) % self.slots.len()
+    }
+
+    /// The position of the shard with the fewest queued + in-flight
+    /// jobs right now (first such shard on ties).
+    fn least_loaded(&self) -> usize {
+        self.slots
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.counters.depth.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .expect("at least one shard")
+    }
+
+    /// Pick the serving shard for a `points`-sized job: the affine home
+    /// shard unless its queue depth (in jobs) exceeds the steal
+    /// threshold, in which case the least-loaded shard takes the job.
+    /// Returns `(position, served by the affine route)`.
+    fn route(&self, steal_threshold: usize, points: usize) -> (usize, bool) {
+        let home = self.affinity(points);
+        let depth = self.slots[home].counters.depth.load(Ordering::Relaxed);
+        if depth <= steal_threshold {
+            return (home, true);
+        }
+        let victim = self.least_loaded();
+        (victim, victim == home)
+    }
+}
+
+/// Everything one shard worker owns (bundled so `shard_loop` stays a
+/// single-argument function).
+struct ShardWorker {
+    id: usize,
+    cfg: ServiceConfig,
+    rx: Receiver<Job>,
+    metrics: Arc<Metrics>,
+    engine: Option<PjrtHandle>,
+    plans: Arc<PlanCache>,
+    counters: Arc<ShardCounters>,
+    retiring: Arc<AtomicBool>,
+    drain: Sender<Job>,
 }
 
 /// The sharded service: N independent shards, each owning a resident
 /// simulated eGPU SM, fed through per-shard queues by a size-affinity
 /// router with work-stealing overflow. All shards share one
-/// [`PlanCache`].
+/// [`PlanCache`]. The pool is elastic: see [`Self::add_shard`] and
+/// [`Self::retire_shard`].
 pub struct ShardedFftService {
     cfg: ShardPoolConfig,
-    shards: Vec<Shard>,
-    workers: Vec<JoinHandle<()>>,
+    routing: RwLock<RoutingState>,
+    /// Shards mid-retirement: popped from the routing table but not yet
+    /// frozen into `retired`. Snapshots read these live counters so a
+    /// retiring shard's history never vanishes from aggregate
+    /// accounting, even for the duration of its drain.
+    draining: Mutex<Vec<(usize, Arc<ShardCounters>)>>,
+    /// Final counters of retired shards, merged into every snapshot
+    /// (individually up to [`RETIRED_STATS_CAP`], folded into one
+    /// cumulative entry beyond that).
+    retired: Mutex<Vec<ShardStat>>,
+    pjrt_workers: Vec<JoinHandle<()>>,
+    engine: Option<PjrtHandle>,
     metrics: Arc<Metrics>,
     plans: Arc<PlanCache>,
     steals: AtomicU64,
     next_id: AtomicU64,
+    next_shard_id: AtomicUsize,
     started: Instant,
 }
 
@@ -139,81 +241,161 @@ impl ShardedFftService {
             }
             Backend::Simulator => (None, None),
         };
-        let mut shards = Vec::with_capacity(n);
-        let mut workers = Vec::with_capacity(n + 1);
-        for shard_id in 0..n {
-            let (tx, rx) = channel::<Job>();
-            let counters = Arc::new(ShardCounters::default());
-            let scfg = cfg.service.clone();
-            let metrics2 = Arc::clone(&metrics);
-            let plans2 = Arc::clone(&plans);
-            let engine2 = engine.clone();
-            let counters2 = Arc::clone(&counters);
-            workers.push(std::thread::spawn(move || {
-                shard_loop(shard_id, scfg, rx, metrics2, engine2, plans2, counters2)
-            }));
-            shards.push(Shard { tx, counters });
-        }
-        if let Some(j) = pjrt_join {
-            workers.push(j);
-        }
-        Ok(ShardedFftService {
+        let svc = ShardedFftService {
             cfg,
-            shards,
-            workers,
+            routing: RwLock::new(RoutingState { slots: Vec::with_capacity(n), epoch: 0 }),
+            draining: Mutex::new(Vec::new()),
+            retired: Mutex::new(Vec::new()),
+            pjrt_workers: pjrt_join.into_iter().collect(),
+            engine,
             metrics,
             plans,
             steals: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
+            next_shard_id: AtomicUsize::new(0),
             started: Instant::now(),
-        })
+        };
+        {
+            let mut rt = svc.routing.write().unwrap();
+            for _ in 0..n {
+                let slot = svc.spawn_slot();
+                rt.slots.push(slot);
+            }
+        }
+        Ok(svc)
+    }
+
+    /// Spawn one shard worker with a fresh stable id. The caller
+    /// decides when (and under which epoch) the slot joins the table.
+    fn spawn_slot(&self) -> ShardSlot {
+        let id = self.next_shard_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel::<Job>();
+        let (drain_tx, drain_rx) = channel::<Job>();
+        let counters = Arc::new(ShardCounters::default());
+        let retiring = Arc::new(AtomicBool::new(false));
+        let worker = ShardWorker {
+            id,
+            cfg: self.cfg.service.clone(),
+            rx,
+            metrics: Arc::clone(&self.metrics),
+            engine: self.engine.clone(),
+            plans: Arc::clone(&self.plans),
+            counters: Arc::clone(&counters),
+            retiring: Arc::clone(&retiring),
+            drain: drain_tx,
+        };
+        let handle = std::thread::spawn(move || shard_loop(worker));
+        ShardSlot {
+            id,
+            tx,
+            counters,
+            retiring,
+            drain: Mutex::new(drain_rx),
+            worker: Some(handle),
+        }
     }
 
     /// Number of shards actually running (after `shards: 0` resolves to
-    /// the available hardware parallelism).
+    /// the available hardware parallelism, and after any resizes).
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.routing.read().unwrap().slots.len()
     }
 
-    /// The home shard for a transform size: deterministic, so a size
-    /// always finds its warm resident executor when the pool is not
-    /// overloaded.
-    fn affinity(&self, points: usize) -> usize {
-        (points.trailing_zeros() as usize) % self.shards.len()
+    /// The routing-table epoch: bumped by every `add_shard` /
+    /// `retire_shard` (and by shutdown). Routing decisions are made and
+    /// dispatched under one read lock, so every job is routed and
+    /// enqueued within a single epoch.
+    pub fn epoch(&self) -> u64 {
+        self.routing.read().unwrap().epoch
     }
 
-    /// The shard with the fewest queued + in-flight jobs right now
-    /// (first such shard on ties).
-    fn least_loaded(&self) -> usize {
-        self.shards
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, s)| s.counters.depth.load(Ordering::Relaxed))
-            .map(|(i, _)| i)
-            .expect("at least one shard")
+    /// Grow the pool by one shard; returns its stable id. The new shard
+    /// joins the affinity map at the next epoch, so in-flight routing
+    /// decisions are unaffected.
+    pub fn add_shard(&self) -> usize {
+        let slot = self.spawn_slot();
+        let id = slot.id;
+        let mut rt = self.routing.write().unwrap();
+        rt.slots.push(slot);
+        rt.epoch += 1;
+        id
     }
 
-    /// Pick the serving shard for a `points`-sized job: the affine home
-    /// shard unless its queue depth (in jobs) exceeds the steal
-    /// threshold, in which case the least-loaded shard takes the job.
-    /// Returns `(shard, served by the affine route)`.
-    fn route(&self, points: usize) -> (usize, bool) {
-        let home = self.affinity(points);
-        let depth = self.shards[home].counters.depth.load(Ordering::Relaxed);
-        if depth <= self.cfg.steal_threshold {
-            return (home, true);
+    /// Shrink the pool by one shard (the most recently added position);
+    /// returns the retired shard's stable id, or an error when only one
+    /// shard remains.
+    ///
+    /// Retirement never loses an admitted job: the slot leaves the
+    /// routing table first (so no new work can reach it), the retiring
+    /// worker finishes its in-flight job and hands every still-queued
+    /// job back through its drain channel, and each handed-back job is
+    /// re-routed through the current (post-resize) affinity map before
+    /// this call returns. Outputs stay bitwise identical to a
+    /// fixed-size run — resizing changes scheduling, never numerics.
+    ///
+    /// Accounting note: the retired shard keeps the `affine` / `stolen`
+    /// attribution of jobs it never served; a re-routed job is counted
+    /// again at its new home, so routing counters summed across all
+    /// shards may exceed `handled` totals after a retirement.
+    pub fn retire_shard(&self) -> Result<usize> {
+        let slot = {
+            let mut rt = self.routing.write().unwrap();
+            if rt.slots.len() <= 1 {
+                return Err(anyhow!("cannot retire the last shard"));
+            }
+            let slot = rt.slots.pop().expect("len checked above");
+            slot.retiring.store(true, Ordering::Release);
+            rt.epoch += 1;
+            // Registered before the routing lock drops, so there is no
+            // instant at which this shard's counters are in neither the
+            // active table nor the draining list — snapshots taken
+            // mid-retirement stay complete.
+            self.draining.lock().unwrap().push((slot.id, Arc::clone(&slot.counters)));
+            slot
+        };
+        let ShardSlot { id, tx, counters, drain, worker, .. } = slot;
+        // Closing the queue wakes the worker; with the retiring flag
+        // set it hands queued jobs back instead of serving them.
+        drop(tx);
+        let drain = drain.into_inner().unwrap();
+        while let Ok(job) = drain.recv() {
+            let weight = job.weight();
+            counters.depth.fetch_sub(weight as usize, Ordering::Relaxed);
+            let points = job.points();
+            let rt = self.routing.read().unwrap();
+            if rt.slots.is_empty() {
+                // Only reachable if shutdown raced this retirement.
+                drop(rt);
+                fail_job(job);
+                continue;
+            }
+            let (pos, affine) = rt.route(self.cfg.steal_threshold, points);
+            self.dispatch_in(&rt, pos, job, affine, weight);
         }
-        let victim = self.least_loaded();
-        (victim, victim == home)
+        if let Some(h) = worker {
+            let _ = h.join();
+        }
+        let elapsed_us = (self.started.elapsed().as_micros() as u64).max(1);
+        // Move from draining to retired under the draining lock, so a
+        // concurrent snapshot (which takes draining before retired, in
+        // this same order) sees the shard in exactly one of the two.
+        let mut draining = self.draining.lock().unwrap();
+        draining.retain(|(slot_id, _)| *slot_id != id);
+        let mut retired = self.retired.lock().unwrap();
+        retired.push(stat_of(id, &counters, elapsed_us, true));
+        fold_retired(&mut retired);
+        Ok(id)
     }
 
-    /// Enqueue `job` (carrying `jobs` requests) on `shard`, maintaining
-    /// the queue-depth gauge (in jobs, so a 16-job batch chunk weighs 16
-    /// against the steal threshold) and the routing counters. If the
-    /// shard's worker is gone, the job is answered with a typed
-    /// [`ServiceError::WorkerGone`] instead of panicking.
-    fn dispatch(&self, shard: usize, job: Job, affine: bool, jobs: u64) {
-        let c = &self.shards[shard].counters;
+    /// Enqueue `job` (carrying `jobs` requests) on the slot at `pos` —
+    /// a position in `rt.slots`, valid for the epoch the caller's read
+    /// lock pins — maintaining the queue-depth gauge (in jobs, so a
+    /// 16-job batch chunk weighs 16 against the steal threshold) and
+    /// the routing counters. If the shard's worker is gone, the job is
+    /// answered with a typed [`ServiceError::WorkerGone`] instead of
+    /// panicking.
+    fn dispatch_in(&self, rt: &RoutingState, pos: usize, job: Job, affine: bool, jobs: u64) {
+        let c = &rt.slots[pos].counters;
         let depth = c.depth.fetch_add(jobs as usize, Ordering::Relaxed) + jobs as usize;
         c.max_depth.fetch_max(depth, Ordering::Relaxed);
         if affine {
@@ -222,7 +404,7 @@ impl ShardedFftService {
             c.stolen.fetch_add(jobs, Ordering::Relaxed);
             self.steals.fetch_add(jobs, Ordering::Relaxed);
         }
-        if let Err(std::sync::mpsc::SendError(job)) = self.shards[shard].tx.send(job) {
+        if let Err(std::sync::mpsc::SendError(job)) = rt.slots[pos].tx.send(job) {
             c.depth.fetch_sub(jobs as usize, Ordering::Relaxed);
             fail_job(job);
         }
@@ -232,12 +414,19 @@ impl ShardedFftService {
     pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (shard, affine) = self.route(input.len());
         let job = Job {
             kind: JobKind::Single { id, input, reply: reply_tx },
             submitted: Instant::now(),
         };
-        self.dispatch(shard, job, affine, 1);
+        let points = job.points();
+        let rt = self.routing.read().unwrap();
+        if rt.slots.is_empty() {
+            drop(rt);
+            fail_job(job);
+            return reply_rx;
+        }
+        let (pos, affine) = rt.route(self.cfg.steal_threshold, points);
+        self.dispatch_in(&rt, pos, job, affine, 1);
         reply_rx
     }
 
@@ -247,6 +436,8 @@ impl ShardedFftService {
     /// at least `min_chunk` jobs). The first chunk follows affinity
     /// routing; the rest go straight to the least-loaded shards, so a
     /// homogeneous batch parallelizes pool-wide at any steal threshold.
+    /// The whole batch is routed under one read lock — one epoch —
+    /// so a concurrent resize cannot split its view of the pool.
     /// Results come back in the original submission order and are
     /// bitwise identical to the single-shard path.
     pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
@@ -259,45 +450,47 @@ impl ShardedFftService {
         let groups = coalesce_by_size(&inputs);
         let mut inputs: Vec<Option<Vec<(f32, f32)>>> = inputs.into_iter().map(Some).collect();
         let mut pending = Vec::new();
-        for (points, idxs) in groups {
-            let chunks = self.split_group(&idxs);
-            let spread = chunks.len() > 1;
-            for (ci, chunk) in chunks.into_iter().enumerate() {
-                let batch_ids: Vec<u64> = chunk.iter().map(|&i| ids[i]).collect();
-                let batch_inputs: Vec<Vec<(f32, f32)>> = chunk
-                    .iter()
-                    .map(|&i| inputs[i].take().expect("each input consumed once"))
-                    .collect();
-                let (reply_tx, reply_rx) = channel();
-                let job = Job {
-                    kind: JobKind::Batch { ids: batch_ids, inputs: batch_inputs, reply: reply_tx },
-                    submitted: Instant::now(),
-                };
-                // The first chunk follows normal affinity routing; the
-                // rest of a split group go straight to the least-loaded
-                // shards — spreading must not depend on the steal
-                // threshold, or a locality-biased threshold would
-                // serialize the whole batch on its home shard.
-                let (shard, affine) = if spread && ci > 0 {
-                    let victim = self.least_loaded();
-                    (victim, victim == self.affinity(points))
-                } else {
-                    self.route(points)
-                };
-                self.dispatch(shard, job, affine, chunk.len() as u64);
-                pending.push((chunk, reply_rx));
+        {
+            let rt = self.routing.read().unwrap();
+            if rt.slots.is_empty() {
+                return Err(ServiceError::WorkerGone.into());
+            }
+            for (points, idxs) in groups {
+                let chunks = split_group(&idxs, self.cfg.min_chunk, rt.slots.len());
+                let spread = chunks.len() > 1;
+                for (ci, chunk) in chunks.into_iter().enumerate() {
+                    let batch_ids: Vec<u64> = chunk.iter().map(|&i| ids[i]).collect();
+                    let batch_inputs: Vec<Vec<(f32, f32)>> = chunk
+                        .iter()
+                        .map(|&i| inputs[i].take().expect("each input consumed once"))
+                        .collect();
+                    let (reply_tx, reply_rx) = channel();
+                    let job = Job {
+                        kind: JobKind::Batch {
+                            ids: batch_ids,
+                            inputs: batch_inputs,
+                            reply: reply_tx,
+                        },
+                        submitted: Instant::now(),
+                    };
+                    // The first chunk follows normal affinity routing;
+                    // the rest of a split group go straight to the
+                    // least-loaded shards — spreading must not depend
+                    // on the steal threshold, or a locality-biased
+                    // threshold would serialize the whole batch on its
+                    // home shard.
+                    let (pos, affine) = if spread && ci > 0 {
+                        let victim = rt.least_loaded();
+                        (victim, victim == rt.affinity(points))
+                    } else {
+                        rt.route(self.cfg.steal_threshold, points)
+                    };
+                    self.dispatch_in(&rt, pos, job, affine, chunk.len() as u64);
+                    pending.push((chunk, reply_rx));
+                }
             }
         }
         collect_batch_results(n, pending)
-    }
-
-    /// Split one same-size group into at most one chunk per shard, each
-    /// of at least `min_chunk` jobs, so a large homogeneous batch runs
-    /// pool-wide instead of serializing on its home shard.
-    fn split_group(&self, idxs: &[usize]) -> Vec<Vec<usize>> {
-        let chunks = (idxs.len() / self.cfg.min_chunk.max(1)).clamp(1, self.shards.len());
-        let per = idxs.len().div_ceil(chunks);
-        idxs.chunks(per).map(|c| c.to_vec()).collect()
     }
 
     /// Submit every input individually and wait for all results in
@@ -310,34 +503,34 @@ impl ShardedFftService {
             .collect()
     }
 
-    /// Service metrics including per-shard scheduler counters, steal
-    /// totals, aggregate throughput and shared plan-cache stats.
+    /// Service metrics including per-shard scheduler counters (active
+    /// shards first, then retired shards with frozen final counters —
+    /// all keyed by stable id), steal totals, aggregate throughput and
+    /// shared plan-cache stats.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.plan_cache = self.plans.stats();
         snap.steals = self.steals.load(Ordering::Relaxed);
         let elapsed_us = (self.started.elapsed().as_micros() as u64).max(1);
         snap.agg_jobs_per_s = snap.served as f64 / (elapsed_us as f64 / 1e6);
-        snap.shards = self
-            .shards
+        // Lock order matches retire_shard (routing → draining →
+        // retired), and the routing read lock is held until the
+        // draining list has been captured: a retirement cannot move a
+        // shard from the active table to `draining` mid-snapshot, so
+        // every shard appears exactly once — active, draining, or
+        // retired.
+        let rt = self.routing.read().unwrap();
+        snap.shards = rt
+            .slots
             .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let c = &s.counters;
-                let busy_us = c.busy_us.load(Ordering::Relaxed);
-                ShardStat {
-                    shard: i,
-                    handled: c.handled.load(Ordering::Relaxed),
-                    batch_jobs: c.batch_jobs.load(Ordering::Relaxed),
-                    affine: c.affine.load(Ordering::Relaxed),
-                    stolen: c.stolen.load(Ordering::Relaxed),
-                    queue_depth: c.depth.load(Ordering::Relaxed),
-                    max_queue_depth: c.max_depth.load(Ordering::Relaxed),
-                    busy_us,
-                    occupancy: (busy_us as f64 / elapsed_us as f64).min(1.0),
-                }
-            })
+            .map(|s| stat_of(s.id, &s.counters, elapsed_us, false))
             .collect();
+        let draining = self.draining.lock().unwrap();
+        snap.shards
+            .extend(draining.iter().map(|(id, c)| stat_of(*id, c, elapsed_us, true)));
+        snap.shards.extend(self.retired.lock().unwrap().iter().cloned());
+        drop(draining);
+        drop(rt);
         snap
     }
 
@@ -350,43 +543,122 @@ impl ShardedFftService {
         &self.cfg
     }
 
+    /// Drop every shard's queue sender and join the workers (each one
+    /// serves its remaining queue before exiting), then join the PJRT
+    /// server if one is running.
+    fn stop_all(&mut self) {
+        let slots = {
+            let mut rt = self.routing.write().unwrap();
+            rt.epoch += 1;
+            std::mem::take(&mut rt.slots)
+        };
+        let mut handles = Vec::with_capacity(slots.len());
+        for slot in slots {
+            drop(slot.tx); // closes the queue
+            if let Some(h) = slot.worker {
+                handles.push(h);
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        // The PJRT server thread exits when the last PjrtHandle drops;
+        // the workers just released theirs, so the service's own clone
+        // (kept for add_shard) must go before the join or it blocks
+        // forever.
+        self.engine = None;
+        for h in std::mem::take(&mut self.pjrt_workers) {
+            let _ = h.join();
+        }
+    }
+
     /// Drain and stop all shard workers.
     pub fn shutdown(mut self) {
-        self.shards.clear(); // drops every sender -> queues close
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.stop_all();
     }
 }
 
 impl Drop for ShardedFftService {
     fn drop(&mut self) {
-        self.shards.clear();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        self.stop_all();
+    }
+}
+
+/// Retired-shard stats are kept individually up to this count; older
+/// entries beyond it are folded into one cumulative entry (stable id
+/// `usize::MAX`), so a long-running autoscaled deployment that retires
+/// shards for months cannot grow snapshots (or `render()`) without
+/// bound.
+const RETIRED_STATS_CAP: usize = 64;
+
+/// Fold the oldest individual retired entries into the cumulative
+/// accumulator (created on first fold, at index 0, `shard: usize::MAX`)
+/// until at most [`RETIRED_STATS_CAP`] entries remain. Counter fields
+/// add; `occupancy` is meaningless for a merged entry and reports 0.
+fn fold_retired(retired: &mut Vec<ShardStat>) {
+    while retired.len() > RETIRED_STATS_CAP {
+        let oldest = usize::from(retired[0].shard == usize::MAX);
+        let s = retired.remove(oldest);
+        if retired[0].shard != usize::MAX {
+            retired.insert(
+                0,
+                ShardStat { shard: usize::MAX, retired: true, ..Default::default() },
+            );
         }
+        let acc = &mut retired[0];
+        acc.handled += s.handled;
+        acc.batch_jobs += s.batch_jobs;
+        acc.affine += s.affine;
+        acc.stolen += s.stolen;
+        acc.max_queue_depth = acc.max_queue_depth.max(s.max_queue_depth);
+        acc.busy_us += s.busy_us;
+    }
+}
+
+/// Split one same-size group into at most one chunk per shard, each of
+/// at least `min_chunk` jobs, so a large homogeneous batch runs
+/// pool-wide instead of serializing on its home shard.
+fn split_group(idxs: &[usize], min_chunk: usize, shards: usize) -> Vec<Vec<usize>> {
+    let chunks = (idxs.len() / min_chunk.max(1)).clamp(1, shards);
+    let per = idxs.len().div_ceil(chunks);
+    idxs.chunks(per).map(|c| c.to_vec()).collect()
+}
+
+/// A point-in-time copy of one shard's counters.
+fn stat_of(id: usize, c: &ShardCounters, elapsed_us: u64, retired: bool) -> ShardStat {
+    let busy_us = c.busy_us.load(Ordering::Relaxed);
+    ShardStat {
+        shard: id,
+        handled: c.handled.load(Ordering::Relaxed),
+        batch_jobs: c.batch_jobs.load(Ordering::Relaxed),
+        affine: c.affine.load(Ordering::Relaxed),
+        stolen: c.stolen.load(Ordering::Relaxed),
+        queue_depth: c.depth.load(Ordering::Relaxed),
+        max_queue_depth: c.max_depth.load(Ordering::Relaxed),
+        busy_us,
+        occupancy: (busy_us as f64 / elapsed_us as f64).min(1.0),
+        retired,
     }
 }
 
 /// One shard's worker: a private queue feeding one resident simulated
 /// SM, serving jobs with exactly the same code as the single-queue
 /// pool. The depth gauge counts a job until it is *served* (not merely
-/// dequeued), so the router sees in-flight work as load.
-fn shard_loop(
-    shard_id: usize,
-    cfg: ServiceConfig,
-    rx: Receiver<Job>,
-    metrics: Arc<Metrics>,
-    engine: Option<PjrtHandle>,
-    plans: Arc<PlanCache>,
-    counters: Arc<ShardCounters>,
-) {
-    let mut core = Core { id: shard_id, cfg, plans, execs: HashMap::new(), tick: 0 };
+/// dequeued), so the router sees in-flight work as load. Once the
+/// shard's retiring flag is set, every remaining queued job is handed
+/// back through the drain channel for `retire_shard` to re-route.
+fn shard_loop(w: ShardWorker) {
+    let ShardWorker { id, cfg, rx, metrics, engine, plans, counters, retiring, drain } = w;
+    let mut core = Core { id, cfg, plans, execs: HashMap::new(), tick: 0 };
     while let Ok(job) = rx.recv() {
-        let (jobs, is_batch) = match &job.kind {
-            JobKind::Single { .. } => (1u64, false),
-            JobKind::Batch { ids, .. } => (ids.len() as u64, true),
-        };
+        if retiring.load(Ordering::Acquire) {
+            // Hand queued work back to the router instead of serving it
+            // on a shard that is leaving the pool.
+            let _ = drain.send(job);
+            continue;
+        }
+        let jobs = job.weight();
+        let is_batch = matches!(job.kind, JobKind::Batch { .. });
         // Count the job *before* serving: replies are sent inside
         // `handle_job`, so a snapshot taken after a caller's `recv`
         // returns must never be behind on these counters.
@@ -456,21 +728,14 @@ mod tests {
 
     #[test]
     fn split_group_respects_min_chunk_and_shard_count() {
-        let svc = ShardedFftService::start(ShardPoolConfig {
-            shards: 4,
-            min_chunk: 8,
-            ..Default::default()
-        })
-        .unwrap();
         let idxs: Vec<usize> = (0..64).collect();
-        let chunks = svc.split_group(&idxs);
+        let chunks = split_group(&idxs, 8, 4);
         assert_eq!(chunks.len(), 4, "64 jobs / min_chunk 8 caps at 4 shards");
         assert!(chunks.iter().all(|c| c.len() == 16));
         let small: Vec<usize> = (0..5).collect();
-        assert_eq!(svc.split_group(&small).len(), 1, "below min_chunk stays whole");
+        assert_eq!(split_group(&small, 8, 4).len(), 1, "below min_chunk stays whole");
         let rejoined: Vec<usize> = chunks.into_iter().flatten().collect();
         assert_eq!(rejoined, idxs, "chunking preserves order");
-        svc.shutdown();
     }
 
     #[test]
@@ -501,5 +766,108 @@ mod tests {
             ..Default::default()
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn add_and_retire_reshape_the_pool_with_stable_ids() {
+        let svc = pool(2, 2);
+        assert_eq!(svc.shards(), 2);
+        let e0 = svc.epoch();
+        let id = svc.add_shard();
+        assert_eq!(id, 2, "stable ids are monotonic");
+        assert_eq!(svc.shards(), 3);
+        assert!(svc.epoch() > e0, "resize bumps the routing epoch");
+        let retired = svc.retire_shard().unwrap();
+        assert_eq!(retired, 2, "last position retires first");
+        assert_eq!(svc.shards(), 2);
+        // the pool still serves after the round trip
+        let r = svc.submit(signal(256, 1)).recv().unwrap().unwrap();
+        assert_eq!(r.output.len(), 256);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cannot_retire_the_last_shard() {
+        let svc = pool(2, 2);
+        svc.retire_shard().unwrap();
+        assert_eq!(svc.shards(), 1);
+        assert!(svc.retire_shard().is_err());
+        assert_eq!(svc.shards(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn retire_drains_queued_jobs_without_loss() {
+        // With 3 shards, fft256 (trailing zeros 8) homes on position 2 —
+        // the exact slot retire_shard pops — and a huge steal threshold
+        // pins every job there, so retirement must drain a loaded queue.
+        let svc = pool(3, 1024);
+        let handles: Vec<_> = (0..16).map(|i| svc.submit(signal(256, i))).collect();
+        let retired = svc.retire_shard().unwrap();
+        assert_eq!(svc.shards(), 2);
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.recv().expect("reply arrives").unwrap_or_else(|e| {
+                panic!("job {i} lost across retirement: {e:#}");
+            });
+            assert_eq!(r.output.len(), 256);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.served, 16, "every admitted job served");
+        assert_eq!(
+            m.shards.iter().map(|s| s.handled).sum::<u64>(),
+            16,
+            "per-shard counts (active + retired) account for every job: {:?}",
+            m.shards
+        );
+        let frozen = m.shards.iter().find(|s| s.retired).expect("retired stat kept");
+        assert_eq!(frozen.shard, retired);
+        assert_eq!(frozen.queue_depth, 0, "retired shard drained completely");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn retired_stats_fold_beyond_the_cap_without_losing_counts() {
+        let n = RETIRED_STATS_CAP + 5;
+        let mut retired: Vec<ShardStat> = (0..n)
+            .map(|i| ShardStat { shard: i, handled: 2, retired: true, ..Default::default() })
+            .collect();
+        fold_retired(&mut retired);
+        assert_eq!(retired.len(), RETIRED_STATS_CAP);
+        assert_eq!(retired[0].shard, usize::MAX, "cumulative entry leads");
+        assert!(retired[0].retired);
+        assert_eq!(
+            retired.iter().map(|s| s.handled).sum::<u64>(),
+            2 * n as u64,
+            "folding loses no counts"
+        );
+        let mut few: Vec<ShardStat> = (0..3)
+            .map(|i| ShardStat { shard: i, ..Default::default() })
+            .collect();
+        fold_retired(&mut few);
+        assert_eq!(few.len(), 3, "under the cap nothing folds");
+        assert!(few.iter().all(|s| s.shard != usize::MAX));
+    }
+
+    #[test]
+    fn snapshots_tolerate_resize_with_stable_ids() {
+        let svc = pool(2, 2);
+        svc.submit(signal(256, 0)).recv().unwrap().unwrap();
+        svc.add_shard(); // id 2
+        svc.retire_shard().unwrap(); // retires id 2
+        svc.add_shard(); // id 3
+        svc.submit(signal(256, 1)).recv().unwrap().unwrap();
+        let m = svc.metrics();
+        let ids: Vec<usize> = m.shards.iter().map(|s| s.shard).collect();
+        assert_eq!(ids.len(), 4, "3 active + 1 retired");
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4, "no id reuse across resizes: {ids:?}");
+        assert!(ids.contains(&3), "non-contiguous ids survive the snapshot");
+        assert_eq!(m.shards.iter().filter(|s| s.retired).count(), 1);
+        assert_eq!(m.shards.iter().map(|s| s.handled).sum::<u64>(), 2);
+        // render must not index by position
+        assert!(m.render().contains("[retired]"));
+        svc.shutdown();
     }
 }

@@ -231,7 +231,11 @@ mod tests {
     #[test]
     fn war_respected() {
         // r1 is read then rewritten: the rewrite must not move above the read
-        let p = assemble("t", "ldif r1, 1.0\nfadd r2, r1, r1\nldif r1, 3.0\nfadd r3, r1, r1\nhalt").unwrap();
+        let p = assemble(
+            "t",
+            "ldif r1, 1.0\nfadd r2, r1, r1\nldif r1, 3.0\nfadd r3, r1, r1\nhalt",
+        )
+        .unwrap();
         let s = schedule(&p, 8);
         let txt: Vec<String> = s.insts.iter().map(|i| format!("{i}")).collect();
         let pos = |needle: &str| txt.iter().position(|t| t == needle).unwrap();

@@ -9,8 +9,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 use egpu_fft::arch::{SmConfig, Variant};
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, Backend, FftService, LoadgenConfig, ServerConfig,
-    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
+    FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
+    ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::{self, reference};
 use egpu_fft::report;
@@ -47,6 +48,16 @@ USAGE:
                                       0 = one shard per hardware thread;
                                       --shards replaces --cores — each
                                       shard runs one resident-SM worker)
+  egpu-fft serve --autoscale [--min-shards A] [--max-shards B]
+                 [--target-p99-ms X] [--max-shed-rate F]
+                 [--rate R] [--duration S] [--queue-capacity N]
+                                     elastic serving demo: an SLO-driven
+                                     controller grows/shrinks the shard
+                                     pool from the traffic frontend's
+                                     pressure feed while an open-loop
+                                     load step (rate R, then 2R) runs;
+                                     prints scale events, shards over
+                                     time, and before/after shed rates
   egpu-fft loadtest [--pattern poisson|burst] [--rate R] [--duration S]
                  [--policy block|shed|degrade] [--queue-capacity N]
                  [--shards N] [--dispatchers N] [--sizes 256,1024,...]
@@ -216,6 +227,9 @@ fn run() -> Result<()> {
         }
         Some("serve") => {
             let f = flags(&args[1..]);
+            if f.contains_key("autoscale") {
+                return serve_autoscale(&f);
+            }
             let cores: usize = f.get("cores").map(|s| s.parse()).transpose()?.unwrap_or(4);
             let requests: usize =
                 f.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(64);
@@ -385,6 +399,76 @@ fn run() -> Result<()> {
         }
         Some(other) => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
+}
+
+/// `serve --autoscale`: an elastic-serving demo. Starts the sharded
+/// service at `--min-shards`, wraps it in the admission-controlled
+/// frontend, and lets the SLO-driven controller resize the pool while
+/// an open-loop load step runs (`--rate` for the first half of
+/// `--duration`, doubled for the second half).
+fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
+    let min_shards: usize = f.get("min-shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let max_shards: usize = f.get("max-shards").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let target_p99_ms: f64 =
+        f.get("target-p99-ms").map(|s| s.parse()).transpose()?.unwrap_or(10.0);
+    let max_shed_rate: f64 =
+        f.get("max-shed-rate").map(|s| s.parse()).transpose()?.unwrap_or(0.01);
+    let rate: f64 = f.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(2000.0);
+    if rate <= 0.0 {
+        bail!("--rate must be positive");
+    }
+    let duration: f64 = f.get("duration").map(|s| s.parse()).transpose()?.unwrap_or(4.0);
+    if duration <= 0.0 {
+        bail!("--duration must be positive");
+    }
+    let queue_capacity: usize =
+        f.get("queue-capacity").map(|s| s.parse()).transpose()?.unwrap_or(256);
+
+    let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+        shards: min_shards,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })?);
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            queue_capacity,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: (2 * max_shards).max(4),
+            ..Default::default()
+        },
+    )?;
+    let policy = AutoscalePolicy {
+        min_shards,
+        max_shards,
+        target_p99_ms,
+        max_shed_rate,
+        ..Default::default()
+    };
+    let controller = AutoscaleController::spawn(&server, policy)?;
+
+    let phase = Duration::from_secs_f64(duration / 2.0);
+    println!(
+        "autoscale serve: {min_shards}..{max_shards} shards, SLO queue p99 \
+         {target_p99_ms:.1}ms / shed {max_shed_rate:.3}; offered {rate:.0} rps then \
+         {:.0} rps ({:.1}s each)",
+        2.0 * rate,
+        phase.as_secs_f64()
+    );
+    for (label, phase_rate) in [("baseline", rate), ("step (2x offered)", 2.0 * rate)] {
+        let report = loadgen::run(
+            &server,
+            &LoadgenConfig { rate_hz: phase_rate, duration: phase, ..Default::default() },
+        );
+        println!("-- {label} --");
+        print!("{}", report.render());
+    }
+    let log = controller.stop();
+    print!("{}", log.render());
+    print!("{}", server.metrics().render());
+    server.shutdown();
+    Ok(())
 }
 
 fn print_table(n: u32) -> Result<()> {
