@@ -2,11 +2,13 @@
 """CI bench-regression gate, with a self-ratcheting baseline.
 
 Reads the quick-mode JSON rows written by `benches/shard.rs`
-(`jobs_per_s` per row), `benches/loadtest.rs` (`achieved_rps` per row)
-and `benches/autoscale.rs` (`recovered_rps` / `shed_rate_after` /
-`p99_recovery_ms` per row), reduces each metric to an aggregate, and
-fails when an aggregate crosses the committed `BENCH_baseline.json`
-limit by more than the threshold.
+(`jobs_per_s` per row), `benches/loadtest.rs` (`achieved_rps` per row),
+`benches/autoscale.rs` (`recovered_rps` / `shed_rate_after` /
+`p99_recovery_ms` per row) and `benches/qos.rs` (per-class
+`achieved_rps` / `share_err` rows — the WFQ share-conformance metric),
+reduces each metric to an aggregate, and fails when an aggregate
+crosses the committed `BENCH_baseline.json` limit by more than the
+threshold.
 
 Two check directions:
 
@@ -34,6 +36,7 @@ Usage:
     bench_gate.py --baseline BENCH_baseline.json \
                   --shard BENCH_shard.json --loadtest BENCH_loadtest.json \
                   [--autoscale BENCH_autoscale.json] \
+                  [--qos BENCH_qos.json] \
                   [--emit-ratchet suggested_baseline.json]
 """
 
@@ -50,6 +53,8 @@ CHECKS = [
     ("autoscale", "agg_recovered_rps", "recovered_rps", "geomean", "floor"),
     ("autoscale", "shed_rate_after_max", "shed_rate_after", "max", "ceiling"),
     ("autoscale", "p99_recovery_ms_max", "p99_recovery_ms", "max", "ceiling"),
+    ("qos", "agg_qos_rps", "achieved_rps", "geomean", "floor"),
+    ("qos", "share_err_max", "share_err", "max", "ceiling"),
 ]
 
 # Ratchet tuning: floors rise toward 80% of observed; ceilings tighten
@@ -62,14 +67,21 @@ RATCHET_CEILING_FACTOR = 1.25
 RATCHET_CEILING_MIN = {
     "shed_rate_after_max": 0.02,
     "p99_recovery_ms_max": 250.0,
+    # WFQ conformance: a perfect-share run must not weld the gate onto
+    # zero tolerance — queue-boundary effects are real.
+    "share_err_max": 0.05,
 }
 
 STALE_FACTOR = 2.0
 
 
 def geomean(values):
-    vals = [v for v in values if v > 0]
-    if not vals:
+    """Geometric mean. Any non-positive value collapses the aggregate to
+    0.0: a zero-throughput row (e.g. a fully starved QoS class) is a
+    catastrophic regression and must fail its floor, not be silently
+    dropped from the mean."""
+    vals = list(values)
+    if not vals or any(v <= 0 for v in vals):
         return 0.0
     return math.exp(sum(math.log(v) for v in vals) / len(vals))
 
@@ -123,7 +135,12 @@ def run_gate(baseline, files):
         else:
             limit = base * (1.0 + threshold)
             ok = cur <= limit
-            stale = base > STALE_FACTOR * cur + 1e-12
+            # A ceiling already at its absolute ratchet guard cannot be
+            # tightened further, so a tiny healthy observation must not
+            # flag it stale forever (permanent warnings train people to
+            # ignore the staleness signal entirely).
+            guard = RATCHET_CEILING_MIN.get(key, 0.0)
+            stale = base > STALE_FACTOR * cur + 1e-12 and base > guard + 1e-12
         results.append(
             {
                 "section": section,
@@ -223,6 +240,7 @@ def main(argv=None):
     ap.add_argument("--shard", required=True)
     ap.add_argument("--loadtest", required=True)
     ap.add_argument("--autoscale")
+    ap.add_argument("--qos")
     ap.add_argument(
         "--emit-ratchet",
         metavar="PATH",
@@ -232,7 +250,12 @@ def main(argv=None):
 
     with open(args.baseline) as f:
         baseline = json.load(f)
-    files = {"shard": args.shard, "loadtest": args.loadtest, "autoscale": args.autoscale}
+    files = {
+        "shard": args.shard,
+        "loadtest": args.loadtest,
+        "autoscale": args.autoscale,
+        "qos": args.qos,
+    }
     results, threshold = run_gate(baseline, files)
 
     failed = False

@@ -18,8 +18,8 @@ use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
-    ShardedFftService, TrafficServer,
+    FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig, ServiceHandle,
+    ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -151,6 +151,42 @@ fn main() -> anyhow::Result<()> {
             rate_hz: 2000.0,
             duration: Duration::from_millis(1500),
             deadline: Some(Duration::from_millis(25)),
+            ..Default::default()
+        },
+    );
+    print!("{}", report.render());
+    assert!(report.accounted, "every request must get a result or a typed error");
+    server.shutdown();
+
+    // ---- phase 4b: N-class QoS under overload (WFQ + EDF + ladder) ----
+    println!("\n== QoS frontend: 3 weighted classes under overload (WFQ shares) ==");
+    let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+        shards: 2,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })?);
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            classes: vec![
+                QosClass::new("gold", 5).with_capacity(32),
+                QosClass::new("silver", 3).with_capacity(32),
+                QosClass::new("bronze", 1).with_capacity(32),
+            ],
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 2,
+            ..Default::default()
+        },
+    )?;
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: 4000.0,
+            duration: Duration::from_millis(1500),
+            sizes: vec![1024],
+            class_mix: vec![1.0, 1.0, 1.0], // equal arrivals; serve shares follow weights
+            deadline: None,
             ..Default::default()
         },
     );

@@ -27,7 +27,7 @@ def _load():
 bench_gate = _load()
 
 
-def baseline(threshold=0.15, autoscale=True):
+def baseline(threshold=0.15, autoscale=True, qos=True):
     base = {
         "threshold": threshold,
         "shard": {"agg_jobs_per_s": 100.0},
@@ -39,6 +39,11 @@ def baseline(threshold=0.15, autoscale=True):
             "shed_rate_after_max": 0.5,
             "p99_recovery_ms_max": 1000.0,
         }
+    if qos:
+        base["qos"] = {
+            "agg_qos_rps": 50.0,
+            "share_err_max": 0.2,
+        }
     return base
 
 
@@ -48,7 +53,26 @@ def write_rows(tmp_path, name, rows):
     return str(path)
 
 
-def files_for(tmp_path, shard_jps=100.0, rps=200.0, recovered=100.0, shed=0.1, p99=500.0):
+def qos_rows(qos_rps=50.0, share_err=0.05):
+    """Per-class rows, the shape benches/qos.rs emits (one row per
+    class plus crossover rows with share_err 0)."""
+    return [
+        {"class": "gold", "achieved_rps": qos_rps * 2, "share_err": share_err},
+        {"class": "bronze", "achieved_rps": qos_rps / 2, "share_err": share_err / 2},
+        {"class": "all", "achieved_rps": qos_rps, "share_err": 0.0},
+    ]
+
+
+def files_for(
+    tmp_path,
+    shard_jps=100.0,
+    rps=200.0,
+    recovered=100.0,
+    shed=0.1,
+    p99=500.0,
+    qos_rps=50.0,
+    share_err=0.05,
+):
     return {
         "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
         "loadtest": write_rows(tmp_path, "loadtest.json", [{"achieved_rps": rps}]),
@@ -57,6 +81,7 @@ def files_for(tmp_path, shard_jps=100.0, rps=200.0, recovered=100.0, shed=0.1, p
             "autoscale.json",
             [{"recovered_rps": recovered, "shed_rate_after": shed, "p99_recovery_ms": p99}],
         ),
+        "qos": write_rows(tmp_path, "qos.json", qos_rows(qos_rps, share_err)),
     }
 
 
@@ -98,6 +123,48 @@ class TestThreshold:
         assert r["current"] == pytest.approx(100.0)  # sqrt(50 * 200)
         assert r["rows"] == 2
 
+    def test_qos_per_class_rows_aggregate_and_pass(self, tmp_path):
+        # geomean over the per-class rps rows; max over share_err rows
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path))
+        rps = by_key(results, "agg_qos_rps")
+        assert rps["ok"]
+        assert rps["current"] == pytest.approx(50.0)  # cbrt(100 * 25 * 50)
+        assert rps["rows"] == 3
+        err = by_key(results, "share_err_max")
+        assert err["ok"]
+        assert err["current"] == pytest.approx(0.05), "max across class rows"
+
+    def test_fully_starved_class_fails_the_floor(self, tmp_path):
+        # a zero-throughput row must collapse the geomean to 0, not be
+        # dropped from it — one starved class fails the gate
+        files = files_for(tmp_path)
+        files["qos"] = write_rows(
+            tmp_path,
+            "starved.json",
+            [
+                {"class": "gold", "achieved_rps": 500.0, "share_err": 0.05},
+                {"class": "bronze", "achieved_rps": 0.0, "share_err": 0.111},
+            ],
+        )
+        results, _ = bench_gate.run_gate(baseline(), files)
+        r = by_key(results, "agg_qos_rps")
+        assert r["current"] == 0.0
+        assert not r["ok"]
+
+    def test_qos_throughput_floor_trips(self, tmp_path):
+        # 20% below the committed per-class throughput floor
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, qos_rps=40.0))
+        assert not by_key(results, "agg_qos_rps")["ok"]
+        assert by_key(results, "share_err_max")["ok"], "conformance unaffected"
+
+    def test_qos_share_conformance_ceiling_trips(self, tmp_path):
+        # a 0.3 worst-class share error breaches the 0.2 * 1.15 ceiling
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, share_err=0.3))
+        assert not by_key(results, "share_err_max")["ok"]
+        # 0.22 <= 0.23 stays inside
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, share_err=0.22))
+        assert by_key(results, "share_err_max")["ok"]
+
 
 class TestMissingInputs:
     def test_rows_missing_the_field_raise(self, tmp_path):
@@ -118,12 +185,30 @@ class TestMissingInputs:
         with pytest.raises(SystemExit, match="no --autoscale file"):
             bench_gate.run_gate(baseline(), files)
 
+    def test_gated_qos_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["qos"] = None
+        with pytest.raises(SystemExit, match="no --qos file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_qos_rows_missing_share_err_raise(self, tmp_path):
+        files = files_for(tmp_path)
+        files["qos"] = write_rows(tmp_path, "bad_qos.json", [{"achieved_rps": 50.0}])
+        with pytest.raises(SystemExit, match="lack the `share_err` field"):
+            bench_gate.run_gate(baseline(), files)
+
     def test_ungated_section_is_skipped(self, tmp_path):
         # baseline without an autoscale section: no file needed
         files = files_for(tmp_path)
         files["autoscale"] = None
         results, _ = bench_gate.run_gate(baseline(autoscale=False), files)
         assert all(r["section"] != "autoscale" for r in results)
+
+    def test_ungated_qos_section_is_skipped(self, tmp_path):
+        files = files_for(tmp_path)
+        files["qos"] = None
+        results, _ = bench_gate.run_gate(baseline(qos=False), files)
+        assert all(r["section"] != "qos" for r in results)
 
 
 class TestRatchet:
@@ -147,6 +232,35 @@ class TestRatchet:
         results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, shed=0.0))
         r = by_key(results, "shed_rate_after_max")
         assert bench_gate.suggest(r) == pytest.approx(0.02), "absolute guard minimum"
+
+    def test_ceiling_at_its_guard_minimum_is_never_stale(self, tmp_path):
+        # a ceiling already ratcheted to its absolute guard cannot be
+        # tightened further: a healthy near-zero run must not flag it
+        # stale forever
+        base = baseline()
+        base["qos"]["share_err_max"] = 0.05  # == RATCHET_CEILING_MIN
+        base["autoscale"]["shed_rate_after_max"] = 0.02
+        results, _ = bench_gate.run_gate(
+            base, files_for(tmp_path, shed=0.001, share_err=0.001)
+        )
+        assert not by_key(results, "share_err_max")["stale"]
+        assert not by_key(results, "shed_rate_after_max")["stale"]
+        # above the guard, the staleness signal still fires and is
+        # actionable (ratcheting clears it)
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, shed=0.001, share_err=0.001)
+        )
+        assert by_key(results, "share_err_max")["stale"]
+
+    def test_share_err_ceiling_keeps_its_guard_band(self, tmp_path):
+        # perfectly fair shares must not ratchet the conformance gate
+        # onto zero tolerance
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, share_err=0.0))
+        r = by_key(results, "share_err_max")
+        assert bench_gate.suggest(r) == pytest.approx(0.05), "absolute guard minimum"
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, share_err=0.1))
+        r = by_key(results, "share_err_max")
+        assert bench_gate.suggest(r) == pytest.approx(0.125), "1.25x observed"
 
     def test_ceiling_guard_is_stable_across_repeated_ratchets(self, tmp_path):
         # repeated lucky-zero observations must converge to the absolute
@@ -181,6 +295,8 @@ class TestMain:
             files["loadtest"],
             "--autoscale",
             files["autoscale"],
+            "--qos",
+            files["qos"],
             *extra,
         ]
 

@@ -39,21 +39,10 @@ fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
 
 /// Measured single-shard fft1024 serving capacity on this host,
 /// jobs/s — the anchor that keeps the offered step meaningful on fast
-/// and slow runners alike.
+/// and slow runners alike (shared library helper, so every calibrated
+/// bench and test measures capacity the same way).
 fn calibrate_single_shard_rps() -> f64 {
-    let svc = ShardedFftService::start(ShardPoolConfig {
-        shards: 1,
-        steal_threshold: 0,
-        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
-        ..Default::default()
-    })
-    .unwrap();
-    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
-    let t0 = Instant::now();
-    svc.run_batch((0..32).map(|i| signal(1024, i)).collect()).unwrap();
-    let rps = 32.0 / t0.elapsed().as_secs_f64();
-    svc.shutdown();
-    rps
+    ShardedFftService::calibrate_single_shard_rps(1024).unwrap()
 }
 
 struct Row {

@@ -1,0 +1,306 @@
+//! Bench: N-class QoS under overload — weight-share conformance,
+//! per-class tail latency, and the degrade-vs-scale crossover.
+//!
+//! Two scenarios, both calibrated against this host's measured
+//! single-shard capacity so the overload means the same thing on fast
+//! and slow runners:
+//!
+//! * **share**: three weighted classes (gold 5 / silver 3 / bronze 1)
+//!   offered equal thirds of a saturating load through a fixed
+//!   two-shard pool. Reports each class's achieved throughput, its
+//!   served share vs the weight share (`share_err` — the WFQ
+//!   conformance number the CI gate ceilings), and the per-class
+//!   queue-wait p99.
+//! * **crossover**: a one-shard pool behind a degrade-armed controller.
+//!   A short burst must be absorbed by the resolution ladder (degrade
+//!   events, zero shard adds — the scale-up cooldown outlasts the
+//!   burst), and a sustained overload must spend the ladder, add
+//!   shards, and end restored to full resolution. Violations panic, so
+//!   the crossover is hard-gated by the bench run itself; the share
+//!   metrics ride in the JSON rows for the numeric gate.
+//!
+//! ```sh
+//! cargo bench --bench qos                      # full sweep
+//! cargo bench --bench qos -- --quick           # CI-sized sweep
+//! cargo bench --bench qos -- --json BENCH_qos.json
+//! ```
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, AutoscaleController, AutoscaleLog, AutoscalePolicy, Backend,
+    DegradeLevel, LoadReport, LoadgenConfig, QosClass, ServerConfig, ServiceConfig,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn sharded(shards: usize) -> ShardedFftService {
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    svc
+}
+
+/// Measured single-shard fft1024 serving capacity on this host, jobs/s
+/// (shared library helper — same anchor as the autoscale bench/tests).
+fn calibrate_single_shard_rps() -> f64 {
+    ShardedFftService::calibrate_single_shard_rps(1024).unwrap()
+}
+
+struct Row {
+    config: String,
+    class: String,
+    weight: u32,
+    achieved_rps: f64,
+    share_err: f64,
+    served_fraction: f64,
+    weight_fraction: f64,
+    queue_p99_ms: f64,
+}
+
+/// Saturate a fixed two-shard pool with an equal-thirds mix over three
+/// weighted classes; one row per class.
+fn run_share(base_rps: f64, duration: Duration) -> Vec<Row> {
+    let weights = [("gold", 5u32), ("silver", 3), ("bronze", 1)];
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(sharded(2)),
+        ServerConfig {
+            classes: weights.iter().map(|&(n, w)| QosClass::new(n, w).with_capacity(32)).collect(),
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: 6.0 * base_rps, // ~3x the two-shard pool: saturated
+            duration,
+            sizes: vec![1024],
+            class_mix: vec![1.0, 1.0, 1.0],
+            deadline: None,
+            ..Default::default()
+        },
+    );
+    assert!(report.accounted, "share scenario must account every request");
+    assert!(report.shed > 0, "share scenario must saturate (no shed observed)");
+    let elapsed = report.elapsed_s.max(1e-9);
+    let total_completed: u64 = report.per_class.iter().map(|c| c.completed).sum();
+    let total_w: u32 = weights.iter().map(|&(_, w)| w).sum();
+    let rows = report
+        .per_class
+        .iter()
+        .map(|c| {
+            let weight_fraction = c.weight as f64 / total_w as f64;
+            let served_fraction = if total_completed == 0 {
+                0.0
+            } else {
+                c.completed as f64 / total_completed as f64
+            };
+            Row {
+                config: "share_3class".into(),
+                class: c.name.clone(),
+                weight: c.weight,
+                achieved_rps: c.completed as f64 / elapsed,
+                share_err: (served_fraction - weight_fraction).abs(),
+                served_fraction,
+                weight_fraction,
+                queue_p99_ms: c.queue_p99_us / 1e3,
+            }
+        })
+        .collect();
+    print!("{}", report.render());
+    server.shutdown();
+    rows
+}
+
+/// One crossover phase: a fresh one-shard pool behind a degrade-armed
+/// controller, one open-loop overload, then an idle drain until the
+/// operating level is back at `Full`. Only the offered-rate factor,
+/// the duration and the scale-up cooldown differ between the two
+/// phases — everything else is shared here so they stay comparable.
+/// Returns `(load report, controller log, final shard count)`.
+fn crossover_phase(
+    label: &str,
+    rate_factor: f64,
+    duration: Duration,
+    scale_up_cooldown: Duration,
+    base_rps: f64,
+) -> (LoadReport, AutoscaleLog, usize) {
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(sharded(1)),
+        ServerConfig {
+            queue_capacity: 128,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let control = server.degrade_control();
+    let controller = AutoscaleController::spawn(
+        &server,
+        AutoscalePolicy {
+            min_shards: 1,
+            max_shards: 4,
+            target_p99_ms: 10.0,
+            max_shed_rate: 0.02,
+            max_degrade: DegradeLevel::Quarter,
+            degrade_cooldown: Duration::from_millis(50),
+            restore_cooldown: Duration::from_millis(100),
+            scale_up_cooldown,
+            scale_down_cooldown: Duration::from_secs(120),
+            interval: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: rate_factor * base_rps,
+            duration,
+            sizes: vec![1024],
+            deadline: None,
+            ..Default::default()
+        },
+    );
+    // idle-drain until resolution is restored
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while control.get() != DegradeLevel::Full && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let restored = control.get() == DegradeLevel::Full;
+    let log = controller.stop();
+    let shards = server.service().as_sharded().unwrap().shards();
+    println!("-- crossover {label} --");
+    print!("{}", log.render());
+    assert!(report.accounted, "{label} phase must account every request");
+    assert!(restored, "{label}: resolution restored once the load cleared");
+    server.shutdown();
+    (report, log, shards)
+}
+
+fn crossover_row(config: &str, report: &LoadReport) -> Row {
+    Row {
+        config: config.into(),
+        class: "all".into(),
+        weight: 1,
+        achieved_rps: report.achieved_rps,
+        share_err: 0.0,
+        served_fraction: 1.0,
+        weight_fraction: 1.0,
+        queue_p99_ms: report.queue_wait_us[2] / 1e3,
+    }
+}
+
+/// The degrade-vs-scale crossover on a one-shard pool. Returns a burst
+/// row and a sustained row; panics (failing the bench job) when either
+/// side of the crossover does not happen.
+fn run_crossover(base_rps: f64, burst: Duration, sustained: Duration) -> Vec<Row> {
+    // burst at 3x one shard: the 60s scale-up cooldown outlasts the
+    // burst, so the ladder is the only admissible lever
+    let (report, log, shards) =
+        crossover_phase("burst", 3.0, burst, Duration::from_secs(60), base_rps);
+    assert!(
+        log.degrades() >= 1,
+        "burst must be served down the ladder (no degrade event):\n{}",
+        log.render()
+    );
+    assert_eq!(log.scale_ups(), 0, "a short burst must not add a shard:\n{}", log.render());
+    assert_eq!(shards, 1, "burst left the pool at one shard");
+    let burst_row = crossover_row("crossover_burst", &report);
+
+    // sustained at 6x one shard: beyond the whole ladder budget
+    // (Quarter ≈ 4x), so degradation alone cannot absorb it, capacity
+    // must be added, and the run ends scaled up at full resolution
+    let (report, log, shards) =
+        crossover_phase("sustained", 6.0, sustained, Duration::from_millis(250), base_rps);
+    assert!(log.scale_ups() >= 1, "sustained overload must add capacity:\n{}", log.render());
+    assert!(shards > 1, "sustained overload ends with a wider pool");
+    vec![burst_row, crossover_row("crossover_sustained", &report)]
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let (share_dur, burst_dur, sustained_dur) = if quick {
+        (
+            Duration::from_millis(1200),
+            Duration::from_millis(700),
+            Duration::from_millis(1800),
+        )
+    } else {
+        (
+            Duration::from_secs(4),
+            Duration::from_millis(900),
+            Duration::from_secs(4),
+        )
+    };
+    let base_rps = calibrate_single_shard_rps();
+    println!(
+        "\n=== qos: 3-class WFQ shares + degrade-vs-scale crossover \
+         (single-shard capacity ~{base_rps:.0} rps{}) ===",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let mut rows = run_share(base_rps, share_dur);
+    rows.extend(run_crossover(base_rps, burst_dur, sustained_dur));
+
+    println!(
+        "\n  {:<20} {:<8} {:>12} {:>10} {:>12}",
+        "config", "class", "rps", "share_err", "queue_p99_ms"
+    );
+    for r in &rows {
+        println!(
+            "  {:<20} {:<8} {:>12.0} {:>10.3} {:>12.1}",
+            r.config, r.class, r.achieved_rps, r.share_err, r.queue_p99_ms
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"qos\", \"config\": \"{}\", \"class\": \"{}\", \
+                 \"weight\": {}, \"achieved_rps\": {:.1}, \"share_err\": {:.4}, \
+                 \"served_fraction\": {:.4}, \"weight_fraction\": {:.4}, \
+                 \"queue_p99_ms\": {:.1}, \"quick\": {}}}{}\n",
+                r.config,
+                r.class,
+                r.weight,
+                r.achieved_rps,
+                r.share_err,
+                r.served_fraction,
+                r.weight_fraction,
+                r.queue_p99_ms,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

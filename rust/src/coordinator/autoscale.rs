@@ -25,6 +25,32 @@
 //!   `min_shards` when traffic goes away;
 //! * **hold** otherwise.
 //!
+//! **The degrade lever.** With [`AutoscalePolicy::max_degrade`] above
+//! `Full`, [`ControllerCore::decide_qos`] extends the law with the
+//! frontend's resolution ladder, modelling the cost of both levers: a
+//! degrade step *halves per-request service cost* (the transform
+//! shrinks by 2×), takes effect immediately, and costs quality but no
+//! hardware; a shard adds one shard's fixed capacity, costs hardware,
+//! and persists. The law therefore reaches for resolution first and
+//! capacity second:
+//!
+//! * under overload, **degrade** one step (after the short
+//!   `degrade_cooldown`) while the ladder has depth left — a burst is
+//!   served coarser instead of triggering a shard add;
+//! * if overload *persists* after the ladder budget is spent, **scale
+//!   up** exactly as before — the sustained-demand lever;
+//! * once the pressure clears, **restore** resolution one step at a
+//!   time (after `restore_cooldown`) before any scale-down — so a
+//!   scaled-up pool returns to `Full` resolution, and only then sheds
+//!   idle shards. Restore uses its own band — p99 below *half* the
+//!   overload trigger with nothing shed — looser than the scale-down
+//!   band, because a restore step roughly doubles per-request cost
+//!   (half-trigger headroom absorbs it) and a workload that settles
+//!   mid-band must not be pinned at reduced resolution.
+//!
+//! Every decision (including degrade/restore steps) lands in the
+//! [`AutoscaleLog`] with the operating level before and after.
+//!
 //! The SLO targets *queue wait*, not service time: adding shards
 //! removes queueing, while per-job service time is a property of the
 //! workload — gating on it would make the controller chase a signal it
@@ -43,7 +69,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::server::{PressureSample, ServiceHandle, TrafficServer};
+use super::qos::DegradeLevel;
+use super::server::{DegradeControl, PressureSample, ServiceHandle, TrafficServer};
 
 /// The SLO target and actuation limits for one controller.
 #[derive(Clone, Debug)]
@@ -74,6 +101,19 @@ pub struct AutoscalePolicy {
     pub scale_down_cooldown: Duration,
     /// Pressure-feed sampling interval.
     pub interval: Duration,
+    /// Deepest operating degrade level the controller may set. `Full`
+    /// (the default) disables the degrade lever entirely, preserving
+    /// the shard-only control law.
+    pub max_degrade: DegradeLevel,
+    /// Minimum time between actions and the next degrade step. Must
+    /// not exceed `scale_up_cooldown` when the lever is enabled:
+    /// degrading is the cheap, instant lever, so it reacts at least as
+    /// fast as a shard add — which is what lets a short burst be served
+    /// coarser without any resize.
+    pub degrade_cooldown: Duration,
+    /// Minimum time between actions and the next resolution-restore
+    /// step once the SLO is healthy again.
+    pub restore_cooldown: Duration,
 }
 
 impl Default for AutoscalePolicy {
@@ -94,6 +134,9 @@ impl Default for AutoscalePolicy {
             scale_up_cooldown: Duration::from_millis(250),
             scale_down_cooldown: Duration::from_secs(2),
             interval: Duration::from_millis(50),
+            max_degrade: DegradeLevel::Full,
+            degrade_cooldown: Duration::from_millis(100),
+            restore_cooldown: Duration::from_millis(500),
         }
     }
 }
@@ -127,11 +170,34 @@ impl AutoscalePolicy {
         if self.interval.is_zero() {
             return Err(anyhow!("interval must be positive"));
         }
+        if self.max_degrade != DegradeLevel::Full
+            && self.degrade_cooldown > self.scale_up_cooldown
+        {
+            return Err(anyhow!(
+                "degrade_cooldown ({:?}) must not exceed scale_up_cooldown ({:?}): \
+                 degrading is the cheap lever and must react at least as fast as a \
+                 shard add",
+                self.degrade_cooldown,
+                self.scale_up_cooldown
+            ));
+        }
+        if self.max_degrade != DegradeLevel::Full
+            && self.restore_cooldown > self.scale_down_cooldown
+        {
+            return Err(anyhow!(
+                "restore_cooldown ({:?}) must not exceed scale_down_cooldown ({:?}): \
+                 resolution must be restorable before capacity is retired, or a \
+                 still-degraded pool could shed the shards its effective capacity \
+                 depends on",
+                self.restore_cooldown,
+                self.scale_down_cooldown
+            ));
+        }
         Ok(())
     }
 }
 
-/// What the control law decided for one sample.
+/// What the shard-only control law decided for one sample.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScaleAction {
     Up,
@@ -139,77 +205,143 @@ pub enum ScaleAction {
     Hold,
 }
 
+/// What the degrade-aware control law decided for one sample: shard
+/// actions plus the two resolution-ladder actions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosAction {
+    ScaleUp,
+    ScaleDown,
+    /// Step the operating level one rung deeper (halves per-request
+    /// service cost — the burst lever).
+    Degrade,
+    /// Step the operating level one rung back toward full resolution.
+    Restore,
+    Hold,
+}
+
 /// The pure control law: policy + cooldown state, no threads, no
 /// service — fully unit-testable by feeding synthetic samples.
 pub struct ControllerCore {
     policy: AutoscalePolicy,
-    /// Last resize (initialized to construction time, so the first
-    /// action waits out a full cooldown — a freshly started controller
-    /// never reacts to an empty first interval).
-    last_resize: Instant,
+    /// Last applied action (initialized to construction time, so the
+    /// first action waits out a full cooldown — a freshly started
+    /// controller never reacts to an empty first interval).
+    last_action: Instant,
 }
 
 impl ControllerCore {
     pub fn new(policy: AutoscalePolicy) -> Self {
-        ControllerCore { policy, last_resize: Instant::now() }
+        ControllerCore { policy, last_action: Instant::now() }
     }
 
     pub fn policy(&self) -> &AutoscalePolicy {
         &self.policy
     }
 
-    /// Decide on one sample, given the current shard count. Returning
-    /// `Up`/`Down` records the resize for cooldown purposes — the
-    /// caller is expected to apply it.
+    /// The shard-only law: decide on one sample, given the current
+    /// shard count, ignoring the degrade lever (equivalent to
+    /// [`ControllerCore::decide_qos`] with the lever disabled and the
+    /// level at `Full`). Returning `Up`/`Down` records the action for
+    /// cooldown purposes — the caller is expected to apply it.
     pub fn decide(&mut self, s: &PressureSample, shards: usize) -> ScaleAction {
+        match self.decide_inner(s, shards, DegradeLevel::Full, DegradeLevel::Full) {
+            QosAction::ScaleUp => ScaleAction::Up,
+            QosAction::ScaleDown => ScaleAction::Down,
+            _ => ScaleAction::Hold,
+        }
+    }
+
+    /// The degrade-aware law: decide on one sample given the current
+    /// shard count *and* operating degrade level. Cost model: a degrade
+    /// step halves per-request service cost instantly at zero
+    /// provisioning cost (quality is the price), so it is tried first
+    /// on overload; a shard adds fixed capacity and is the durable
+    /// lever once the ladder budget (`max_degrade`) is spent. When
+    /// healthy, resolution is restored before any shard is retired.
+    pub fn decide_qos(
+        &mut self,
+        s: &PressureSample,
+        shards: usize,
+        level: DegradeLevel,
+    ) -> QosAction {
+        self.decide_inner(s, shards, level, self.policy.max_degrade)
+    }
+
+    fn decide_inner(
+        &mut self,
+        s: &PressureSample,
+        shards: usize,
+        level: DegradeLevel,
+        max_degrade: DegradeLevel,
+    ) -> QosAction {
         let p99_ms = s.queue_p99_us / 1e3;
-        let since_resize = s.at.checked_duration_since(self.last_resize).unwrap_or_default();
+        let since = s.at.checked_duration_since(self.last_action).unwrap_or_default();
         let overloaded = s.shed_rate > self.policy.max_shed_rate
             || p99_ms > self.policy.target_p99_ms * self.policy.scale_up_threshold;
         if overloaded {
-            if shards < self.policy.max_shards && since_resize >= self.policy.scale_up_cooldown {
-                self.last_resize = s.at;
-                return ScaleAction::Up;
+            if level < max_degrade && since >= self.policy.degrade_cooldown {
+                self.last_action = s.at;
+                return QosAction::Degrade;
             }
-            return ScaleAction::Hold;
+            if shards < self.policy.max_shards && since >= self.policy.scale_up_cooldown {
+                self.last_action = s.at;
+                return QosAction::ScaleUp;
+            }
+            return QosAction::Hold;
         }
-        let underloaded = s.shed == 0
+        // Restore has its own, looser band than scale-down: a restore
+        // step roughly doubles per-request cost, so it is safe once the
+        // p99 sits below half the overload trigger — and without the
+        // looser band, a workload that settles mid-band after a burst
+        // would be served at reduced resolution forever despite ample
+        // SLO headroom (the tight scale-down band exists to avoid
+        // capacity thrash, not to gate quality).
+        let calm = s.shed == 0
+            && p99_ms < 0.5 * self.policy.target_p99_ms * self.policy.scale_up_threshold;
+        if calm && level > DegradeLevel::Full && since >= self.policy.restore_cooldown {
+            self.last_action = s.at;
+            return QosAction::Restore;
+        }
+        let healthy = s.shed == 0
             && p99_ms < self.policy.target_p99_ms * self.policy.scale_down_threshold
             && s.queue_depth <= shards;
-        if underloaded
-            && shards > self.policy.min_shards
-            && since_resize >= self.policy.scale_down_cooldown
-        {
-            self.last_resize = s.at;
-            return ScaleAction::Down;
+        if healthy && shards > self.policy.min_shards && since >= self.policy.scale_down_cooldown {
+            self.last_action = s.at;
+            return QosAction::ScaleDown;
         }
-        ScaleAction::Hold
+        QosAction::Hold
     }
 }
 
-/// One applied resize, for the log.
+/// One applied action (resize or degrade-ladder step), for the log.
 #[derive(Clone, Debug)]
 pub struct AutoscaleEvent {
     /// Seconds since the controller started.
     pub at_s: f64,
     pub from_shards: usize,
     pub to_shards: usize,
+    /// Operating degrade level before / after (equal for pure resizes,
+    /// as the shard counts are for pure ladder steps).
+    pub from_level: DegradeLevel,
+    pub to_level: DegradeLevel,
     /// Human-readable trigger (which SLO signal fired, with values).
     pub reason: String,
 }
 
-/// One observed sample, for shards-over-time reporting.
+/// One observed sample, for shards/level-over-time reporting.
 #[derive(Clone, Copy, Debug)]
 pub struct AutoscaleSample {
     /// Seconds since the controller started.
     pub at_s: f64,
     /// Shard count *after* any action this tick applied.
     pub shards: usize,
+    /// Operating degrade level *after* any action this tick applied.
+    pub level: DegradeLevel,
     pub queue_depth: usize,
     pub shed_rate: f64,
     /// Interval queue-wait p99, milliseconds.
     pub queue_p99_ms: f64,
-    pub action: ScaleAction,
+    pub action: QosAction,
 }
 
 /// Everything a controller run observed and did.
@@ -240,22 +372,47 @@ impl AutoscaleLog {
             .map(|s| s.at_s - from_s)
     }
 
+    /// Applied degrade steps (operating level deepened).
+    pub fn degrades(&self) -> usize {
+        self.events.iter().filter(|e| e.to_level > e.from_level).count()
+    }
+
+    /// Applied restore steps (operating level moved back toward Full).
+    pub fn restores(&self) -> usize {
+        self.events.iter().filter(|e| e.to_level < e.from_level).count()
+    }
+
+    /// Applied scale-ups.
+    pub fn scale_ups(&self) -> usize {
+        self.events.iter().filter(|e| e.to_shards > e.from_shards).count()
+    }
+
     pub fn render(&self) -> String {
-        let ups = self.events.iter().filter(|e| e.to_shards > e.from_shards).count();
-        let downs = self.events.len() - ups;
+        let ups = self.scale_ups();
+        let downs = self.events.iter().filter(|e| e.to_shards < e.from_shards).count();
         let span = self.samples.last().map(|s| s.at_s).unwrap_or(0.0);
         let mut s = format!(
-            "autoscale: {} scale-up(s), {} scale-down(s) over {:.1}s ({} samples)\n",
+            "autoscale: {} scale-up(s), {} scale-down(s), {} degrade(s), {} restore(s) \
+             over {:.1}s ({} samples)\n",
             ups,
             downs,
+            self.degrades(),
+            self.restores(),
             span,
             self.samples.len()
         );
         for e in &self.events {
-            s.push_str(&format!(
-                "  t={:>6.2}s  {} -> {} shards  ({})\n",
-                e.at_s, e.from_shards, e.to_shards, e.reason
-            ));
+            if e.from_level != e.to_level {
+                s.push_str(&format!(
+                    "  t={:>6.2}s  level {} -> {}  ({})\n",
+                    e.at_s, e.from_level, e.to_level, e.reason
+                ));
+            } else {
+                s.push_str(&format!(
+                    "  t={:>6.2}s  {} -> {} shards  ({})\n",
+                    e.at_s, e.from_shards, e.to_shards, e.reason
+                ));
+            }
         }
         if !self.samples.is_empty() {
             let series = self
@@ -265,6 +422,15 @@ impl AutoscaleLog {
                 .collect::<Vec<_>>()
                 .join(" ");
             s.push_str(&format!("  shards over time: {series}\n"));
+            if self.samples.iter().any(|p| p.level != DegradeLevel::Full) {
+                let levels = self
+                    .samples
+                    .iter()
+                    .map(|p| p.level.shift().to_string())
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                s.push_str(&format!("  degrade shift over time: {levels}\n"));
+            }
         }
         s
     }
@@ -303,9 +469,11 @@ impl AutoscaleController {
             ));
         }
         let feed = server.pressure_feed(policy.interval);
+        let control = server.degrade_control();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
-        let thread = std::thread::spawn(move || controller_loop(feed, service, policy, stop2));
+        let thread =
+            std::thread::spawn(move || controller_loop(feed, service, control, policy, stop2));
         Ok(AutoscaleController { stop, thread: Some(thread) })
     }
 
@@ -333,6 +501,7 @@ impl Drop for AutoscaleController {
 fn controller_loop(
     feed: std::sync::mpsc::Receiver<PressureSample>,
     service: Arc<ServiceHandle>,
+    control: DegradeControl,
     policy: AutoscalePolicy,
     stop: Arc<AtomicBool>,
 ) -> AutoscaleLog {
@@ -349,43 +518,82 @@ fn controller_loop(
             Err(RecvTimeoutError::Disconnected) => break,
         };
         let shards = sharded.shards();
-        let action = core.decide(&sample, shards);
+        let level = control.get();
+        let action = core.decide_qos(&sample, shards, level);
         let at_s = sample.at.checked_duration_since(started).unwrap_or_default().as_secs_f64();
         let p99_ms = sample.queue_p99_us / 1e3;
-        let after = match action {
-            ScaleAction::Up => {
+        let overload_reason = || {
+            format!(
+                "shed rate {:.3} (SLO {:.3}), queue p99 {:.1}ms (SLO {:.1}ms)",
+                sample.shed_rate, max_shed, p99_ms, target_ms
+            )
+        };
+        let (shards_after, level_after) = match action {
+            QosAction::ScaleUp => {
                 sharded.add_shard();
                 log.events.push(AutoscaleEvent {
                     at_s,
                     from_shards: shards,
                     to_shards: shards + 1,
-                    reason: format!(
-                        "shed rate {:.3} (SLO {:.3}), queue p99 {:.1}ms (SLO {:.1}ms)",
-                        sample.shed_rate, max_shed, p99_ms, target_ms
-                    ),
+                    from_level: level,
+                    to_level: level,
+                    reason: overload_reason(),
                 });
-                shards + 1
+                (shards + 1, level)
             }
-            ScaleAction::Down => match sharded.retire_shard() {
+            QosAction::ScaleDown => match sharded.retire_shard() {
                 Ok(_) => {
                     log.events.push(AutoscaleEvent {
                         at_s,
                         from_shards: shards,
                         to_shards: shards - 1,
+                        from_level: level,
+                        to_level: level,
                         reason: format!(
                             "idle: no shedding, queue p99 {:.1}ms well under {:.1}ms SLO",
                             p99_ms, target_ms
                         ),
                     });
-                    shards - 1
+                    (shards - 1, level)
                 }
-                Err(_) => shards, // raced shutdown; nothing to do
+                Err(_) => (shards, level), // raced shutdown; nothing to do
             },
-            ScaleAction::Hold => shards,
+            QosAction::Degrade => {
+                let to = control.deepen(policy.max_degrade);
+                log.events.push(AutoscaleEvent {
+                    at_s,
+                    from_shards: shards,
+                    to_shards: shards,
+                    from_level: level,
+                    to_level: to,
+                    reason: format!(
+                        "{} — degrading instead of adding a shard",
+                        overload_reason()
+                    ),
+                });
+                (shards, to)
+            }
+            QosAction::Restore => {
+                let to = control.restore();
+                log.events.push(AutoscaleEvent {
+                    at_s,
+                    from_shards: shards,
+                    to_shards: shards,
+                    from_level: level,
+                    to_level: to,
+                    reason: format!(
+                        "healthy: queue p99 {p99_ms:.1}ms under {target_ms:.1}ms SLO — \
+                         restoring resolution"
+                    ),
+                });
+                (shards, to)
+            }
+            QosAction::Hold => (shards, level),
         };
         log.samples.push(AutoscaleSample {
             at_s,
-            shards: after,
+            shards: shards_after,
+            level: level_after,
             queue_depth: sample.queue_depth,
             shed_rate: sample.shed_rate,
             queue_p99_ms: p99_ms,
@@ -410,6 +618,7 @@ mod tests {
             scale_up_cooldown: Duration::from_millis(100),
             scale_down_cooldown: Duration::from_millis(400),
             interval: Duration::from_millis(25),
+            ..Default::default()
         }
     }
 
@@ -430,6 +639,7 @@ mod tests {
             deadline_miss_rate: 0.0,
             queue_p99_us,
             service_p99_us: 500.0,
+            operating_level: DegradeLevel::Full,
         }
     }
 
@@ -515,46 +725,182 @@ mod tests {
     #[test]
     fn log_reports_recovery_and_series() {
         let pol = policy();
+        let sam = |at_s, shards, level, queue_depth, shed_rate, queue_p99_ms, action| {
+            AutoscaleSample { at_s, shards, level, queue_depth, shed_rate, queue_p99_ms, action }
+        };
         let log = AutoscaleLog {
             samples: vec![
-                AutoscaleSample {
-                    at_s: 0.1,
-                    shards: 1,
-                    queue_depth: 50,
-                    shed_rate: 0.4,
-                    queue_p99_ms: 40.0,
-                    action: ScaleAction::Hold,
+                sam(0.1, 1, DegradeLevel::Full, 50, 0.4, 40.0, QosAction::Hold),
+                sam(0.2, 2, DegradeLevel::Half, 30, 0.2, 20.0, QosAction::ScaleUp),
+                sam(0.3, 3, DegradeLevel::Full, 2, 0.0, 2.0, QosAction::ScaleUp),
+            ],
+            events: vec![
+                AutoscaleEvent {
+                    at_s: 0.15,
+                    from_shards: 1,
+                    to_shards: 1,
+                    from_level: DegradeLevel::Full,
+                    to_level: DegradeLevel::Half,
+                    reason: "shed rate 0.400 — degrading".into(),
                 },
-                AutoscaleSample {
+                AutoscaleEvent {
                     at_s: 0.2,
-                    shards: 2,
-                    queue_depth: 30,
-                    shed_rate: 0.2,
-                    queue_p99_ms: 20.0,
-                    action: ScaleAction::Up,
+                    from_shards: 1,
+                    to_shards: 2,
+                    from_level: DegradeLevel::Half,
+                    to_level: DegradeLevel::Half,
+                    reason: "shed rate 0.400".into(),
                 },
-                AutoscaleSample {
-                    at_s: 0.3,
-                    shards: 3,
-                    queue_depth: 2,
-                    shed_rate: 0.0,
-                    queue_p99_ms: 2.0,
-                    action: ScaleAction::Up,
+                AutoscaleEvent {
+                    at_s: 0.25,
+                    from_shards: 2,
+                    to_shards: 2,
+                    from_level: DegradeLevel::Half,
+                    to_level: DegradeLevel::Full,
+                    reason: "healthy — restoring resolution".into(),
                 },
             ],
-            events: vec![AutoscaleEvent {
-                at_s: 0.2,
-                from_shards: 1,
-                to_shards: 2,
-                reason: "shed rate 0.400".into(),
-            }],
         };
         assert_eq!(log.shards_over_time(), vec![(0.1, 1), (0.2, 2), (0.3, 3)]);
+        assert_eq!((log.scale_ups(), log.degrades(), log.restores()), (1, 1, 1));
         let rec = log.recovery_after_s(0.1, &pol).expect("recovered");
         assert!((rec - 0.2).abs() < 1e-9, "first compliant sample at 0.3s");
         assert!(log.recovery_after_s(0.35, &pol).is_none(), "no sample after 0.35s");
         let out = log.render();
+        let head = "1 scale-up(s), 0 scale-down(s), 1 degrade(s), 1 restore(s)";
+        assert!(out.contains(head), "{out}");
         assert!(out.contains("1 -> 2 shards"), "{out}");
+        assert!(out.contains("level full -> half"), "{out}");
+        assert!(out.contains("level half -> full"), "{out}");
         assert!(out.contains("shards over time: 1 2 3"), "{out}");
+        assert!(out.contains("degrade shift over time: 0 1 0"), "{out}");
+    }
+
+    #[test]
+    fn degrade_cooldown_must_not_exceed_scale_up_cooldown_when_enabled() {
+        let bad = AutoscalePolicy {
+            max_degrade: DegradeLevel::Quarter,
+            degrade_cooldown: Duration::from_secs(1),
+            scale_up_cooldown: Duration::from_millis(100),
+            ..policy()
+        };
+        assert!(bad.validate().is_err());
+        // with the lever disabled the same cooldowns are fine
+        assert!(AutoscalePolicy { max_degrade: DegradeLevel::Full, ..bad }.validate().is_ok());
+    }
+
+    #[test]
+    fn restore_cooldown_must_not_exceed_scale_down_cooldown_when_enabled() {
+        // otherwise a healthy-but-still-degraded pool could retire the
+        // shards its effective capacity depends on before restoring
+        let bad = AutoscalePolicy {
+            max_degrade: DegradeLevel::Quarter,
+            restore_cooldown: Duration::from_secs(5),
+            scale_down_cooldown: Duration::from_secs(1),
+            ..policy()
+        };
+        assert!(bad.validate().is_err());
+        assert!(AutoscalePolicy { max_degrade: DegradeLevel::Full, ..bad }.validate().is_ok());
+    }
+
+    fn qos_policy() -> AutoscalePolicy {
+        AutoscalePolicy {
+            max_degrade: DegradeLevel::Quarter,
+            degrade_cooldown: Duration::from_millis(50),
+            restore_cooldown: Duration::from_millis(50),
+            ..policy()
+        }
+    }
+
+    #[test]
+    fn overload_degrades_down_the_ladder_before_scaling_up() {
+        // the crossover law: Half, then Quarter, and only with the
+        // ladder spent does a sustained overload add a shard
+        let mut core = ControllerCore::new(qos_policy());
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(200);
+        let over = |t| sample(t, 0.5, 90_000.0, 64);
+        assert_eq!(core.decide_qos(&over(t1), 1, DegradeLevel::Full), QosAction::Degrade);
+        let t2 = t1 + Duration::from_millis(25);
+        assert_eq!(
+            core.decide_qos(&over(t2), 1, DegradeLevel::Half),
+            QosAction::Hold,
+            "degrade cooldown"
+        );
+        let t3 = t1 + Duration::from_millis(60);
+        assert_eq!(core.decide_qos(&over(t3), 1, DegradeLevel::Half), QosAction::Degrade);
+        let t4 = t3 + Duration::from_millis(60);
+        assert_eq!(
+            core.decide_qos(&over(t4), 1, DegradeLevel::Quarter),
+            QosAction::Hold,
+            "ladder spent, scale-up cooldown (100ms) not yet elapsed"
+        );
+        let t5 = t3 + Duration::from_millis(150);
+        assert_eq!(
+            core.decide_qos(&over(t5), 1, DegradeLevel::Quarter),
+            QosAction::ScaleUp,
+            "sustained overload reaches for capacity once the ladder is spent"
+        );
+    }
+
+    #[test]
+    fn mid_band_load_still_restores_resolution() {
+        // p99 at 4ms: above the 2.5ms scale-down band, below half the
+        // 10ms overload trigger — a degraded pool must not be pinned at
+        // reduced resolution just because it never goes fully idle
+        let mut core = ControllerCore::new(qos_policy());
+        let t1 = Instant::now() + Duration::from_secs(1);
+        let mid = |t| sample(t, 0.0, 4_000.0, 2);
+        assert_eq!(core.decide_qos(&mid(t1), 2, DegradeLevel::Half), QosAction::Restore);
+        // ...but the same band never sheds capacity, and at Full it holds
+        let t2 = t1 + Duration::from_secs(1);
+        assert_eq!(core.decide_qos(&mid(t2), 2, DegradeLevel::Full), QosAction::Hold);
+        // above half the trigger (6ms), restore waits for more headroom
+        let t3 = t2 + Duration::from_secs(1);
+        let warm = sample(t3, 0.0, 6_000.0, 2);
+        assert_eq!(core.decide_qos(&warm, 2, DegradeLevel::Half), QosAction::Hold);
+    }
+
+    #[test]
+    fn healthy_restores_resolution_before_scaling_down() {
+        let mut core = ControllerCore::new(qos_policy());
+        let t1 = Instant::now() + Duration::from_secs(1);
+        let calm = |t| sample(t, 0.0, 100.0, 0);
+        assert_eq!(
+            core.decide_qos(&calm(t1), 3, DegradeLevel::Quarter),
+            QosAction::Restore,
+            "resolution comes back before shards go away"
+        );
+        let t2 = t1 + Duration::from_millis(60);
+        assert_eq!(core.decide_qos(&calm(t2), 3, DegradeLevel::Half), QosAction::Restore);
+        let t3 = t2 + Duration::from_millis(450);
+        assert_eq!(
+            core.decide_qos(&calm(t3), 3, DegradeLevel::Full),
+            QosAction::ScaleDown,
+            "only a Full-resolution healthy pool sheds capacity"
+        );
+    }
+
+    #[test]
+    fn decide_qos_with_lever_disabled_matches_the_shard_only_law() {
+        let t1 = Instant::now() + Duration::from_secs(1);
+        let cases = [
+            sample(t1, 0.5, 100.0, 32),
+            sample(t1, 0.0, 15_000.0, 8),
+            sample(t1, 0.0, 100.0, 0),
+            sample(t1, 0.0, 5_000.0, 2),
+        ];
+        for (i, s) in cases.iter().enumerate() {
+            let mut a = ControllerCore::new(policy());
+            let mut b = ControllerCore::new(policy());
+            let plain = a.decide(s, 2);
+            let qos = b.decide_qos(s, 2, DegradeLevel::Full);
+            let mapped = match qos {
+                QosAction::ScaleUp => ScaleAction::Up,
+                QosAction::ScaleDown => ScaleAction::Down,
+                _ => ScaleAction::Hold,
+            };
+            assert_eq!(plain, mapped, "case {i}");
+        }
     }
 }

@@ -14,13 +14,15 @@
 //!   queue and the shed path.
 //!
 //! Requests draw transform sizes from a mixed 256–4096 pool, split
-//! between the two priority classes, and may carry a deadline. The
+//! across the server's QoS classes by [`LoadgenConfig::class_mix`]
+//! (arrival fractions per class index), and may carry a deadline. The
 //! [`LoadReport`] accounts every submission — completed, shed,
 //! expired, failed; `lost` (a reply channel dropped with no answer)
 //! must be zero, which `rust/tests/server.rs` pins — and reports
-//! offered vs achieved throughput, shed rate, deadline-miss rate and
-//! tail latencies (queue wait and service time separately) as text or
-//! JSON. The RNG is a seeded xorshift so a load test is reproducible.
+//! offered vs achieved throughput, shed rate, deadline-miss rate,
+//! tail latencies (queue wait and service time separately) and a
+//! per-class breakdown as text or JSON. The RNG is a seeded xorshift
+//! so a load test is reproducible.
 
 use std::fmt::Write as _;
 use std::sync::mpsc::Receiver;
@@ -28,7 +30,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Error, Result};
 
-use super::server::{Priority, RequestOpts, ServerResult, TrafficServer};
+use super::metrics::ClassStats;
+use super::server::{RequestOpts, ServerResult, TrafficServer};
 use super::ServiceError;
 use crate::fft::reference;
 
@@ -98,8 +101,14 @@ pub struct LoadgenConfig {
     pub burst_size: usize,
     /// Transform-size pool, drawn uniformly per request.
     pub sizes: Vec<usize>,
-    /// Fraction of requests submitted at `Priority::High`.
+    /// Legacy two-class split: fraction of requests submitted to class
+    /// 0 ("high"); the rest go to class 1 ("low"). Ignored when
+    /// `class_mix` is non-empty.
     pub high_fraction: f64,
+    /// Per-class arrival fractions, by class index (normalized over
+    /// their sum). Empty derives the legacy two-class split from
+    /// `high_fraction`.
+    pub class_mix: Vec<f64>,
     /// Per-request deadline (None = whatever the server defaults to).
     pub deadline: Option<Duration>,
     pub seed: u64,
@@ -114,8 +123,44 @@ impl Default for LoadgenConfig {
             burst_size: 32,
             sizes: vec![256, 512, 1024, 2048, 4096],
             high_fraction: 0.5,
+            class_mix: Vec::new(),
             deadline: Some(Duration::from_millis(25)),
             seed: 42,
+        }
+    }
+}
+
+/// One QoS class's slice of a load-test run, pulled from the server's
+/// per-class frontend counters after the run.
+#[derive(Clone, Debug)]
+pub struct ClassLoadRow {
+    pub name: String,
+    pub weight: u32,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    /// Expired in queue + served late.
+    pub deadline_misses: u64,
+    /// Served at reduced resolution (any ladder level).
+    pub degraded: u64,
+    /// This class's share of all completions.
+    pub served_fraction: f64,
+    /// Per-class queue-wait p99, µs.
+    pub queue_p99_us: f64,
+}
+
+impl ClassLoadRow {
+    fn from_stats(c: &ClassStats, total_completed: u64) -> ClassLoadRow {
+        ClassLoadRow {
+            name: c.name.clone(),
+            weight: c.weight,
+            submitted: c.submitted,
+            completed: c.completed,
+            shed: c.shed,
+            deadline_misses: c.expired + c.late,
+            degraded: c.degraded(),
+            served_fraction: c.served_fraction(total_completed),
+            queue_p99_us: c.queue_wait.percentile_us(0.99),
         }
     }
 }
@@ -151,6 +196,8 @@ pub struct LoadReport {
     pub elapsed_s: f64,
     /// Every submission got a result or a typed error.
     pub accounted: bool,
+    /// Per-QoS-class breakdown, in the server's class order.
+    pub per_class: Vec<ClassLoadRow>,
 }
 
 impl LoadReport {
@@ -184,8 +231,47 @@ impl LoadReport {
         let _ = writeln!(s, "  \"queue_wait_us\": {},", lat(&self.queue_wait_us));
         let _ = writeln!(s, "  \"service_time_us\": {},", lat(&self.service_time_us));
         let _ = writeln!(s, "  \"elapsed_s\": {:.3},", self.elapsed_s);
-        let _ = writeln!(s, "  \"accounted\": {}", self.accounted);
-        s.push('}');
+        let _ = writeln!(s, "  \"accounted\": {},", self.accounted);
+        // class names are user-supplied (QosClass::new takes any str):
+        // escape everything RFC 8259 forbids inside a string literal —
+        // backslash, quote, and the U+0000..=U+001F control range
+        let esc = |name: &str| -> String {
+            let mut out = String::with_capacity(name.len());
+            for ch in name.chars() {
+                match ch {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(out, "\\u{:04x}", c as u32);
+                    }
+                    c => out.push(c),
+                }
+            }
+            out
+        };
+        s.push_str("  \"classes\": [");
+        for (i, c) in self.per_class.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}\n    {{\"name\": \"{}\", \"weight\": {}, \"submitted\": {}, \
+                 \"completed\": {}, \"shed\": {}, \"deadline_misses\": {}, \
+                 \"degraded\": {}, \"served_fraction\": {:.4}, \"queue_p99_us\": {:.1}}}",
+                if i == 0 { "" } else { "," },
+                esc(&c.name),
+                c.weight,
+                c.submitted,
+                c.completed,
+                c.shed,
+                c.deadline_misses,
+                c.degraded,
+                c.served_fraction,
+                c.queue_p99_us
+            );
+        }
+        if !self.per_class.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}");
         s
     }
 
@@ -231,6 +317,22 @@ impl LoadReport {
             self.service_time_us[0], self.service_time_us[1], self.service_time_us[2],
             self.service_time_us[3]
         );
+        for c in &self.per_class {
+            let _ = writeln!(
+                s,
+                "  class {:<10} (w{}): {:>6} submitted, {:>6} served ({:.3} share), \
+                 {} shed, {} miss, {} degraded, queue p99 {:>7.0}us",
+                c.name,
+                c.weight,
+                c.submitted,
+                c.completed,
+                c.served_fraction,
+                c.shed,
+                c.deadline_misses,
+                c.degraded,
+                c.queue_p99_us
+            );
+        }
         let _ = writeln!(
             s,
             "  accounting: every request answered = {}",
@@ -273,12 +375,47 @@ fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
     reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
 }
 
+/// The effective class-arrival distribution: an explicit per-class
+/// mix, truncated to the server's class count so a long mix never
+/// submits to an unknown class, with negative fractions clamped to
+/// zero. An empty mix derives a default that covers *every* class: the
+/// legacy `high_fraction` split when the server has exactly the
+/// two-class legacy configuration, a uniform split otherwise (so an
+/// N-class server without an explicit `--class-mix` still receives
+/// traffic on all N classes instead of silently starving classes 2+).
+fn resolve_class_mix(cfg: &LoadgenConfig, n_classes: usize) -> Vec<f64> {
+    let mix = if !cfg.class_mix.is_empty() {
+        cfg.class_mix.clone()
+    } else if n_classes == 2 {
+        vec![cfg.high_fraction, 1.0 - cfg.high_fraction]
+    } else {
+        vec![1.0; n_classes.max(1)]
+    };
+    mix.into_iter().take(n_classes.max(1)).map(|f| f.max(0.0)).collect()
+}
+
+/// Map `r` in `[0, 1)` onto a class index by the cumulative mix (a mix
+/// summing to zero lands everything on the last class).
+fn pick_from_mix(mix: &[f64], r: f64) -> usize {
+    let total: f64 = mix.iter().sum();
+    let mut acc = 0.0;
+    for (c, &f) in mix.iter().enumerate() {
+        acc += f;
+        if r * total < acc {
+            return c;
+        }
+    }
+    mix.len().saturating_sub(1)
+}
+
 /// Run one open-loop load test against `server` and account for every
 /// submission. The server should be freshly started: tail latencies are
 /// read from its cumulative frontend histograms.
 pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
     let mut rng = Rng::new(cfg.seed);
     let offsets = arrivals(cfg, &mut rng);
+    let mix = resolve_class_mix(cfg, server.config().classes.len());
+    let pick_class = |r: f64| pick_from_mix(&mix, r);
     // One prototype signal per distinct size, generated *before* the
     // clock starts: generating a fresh 4096-point test signal per
     // request would eat a large slice of a 50µs interarrival gap and
@@ -302,13 +439,9 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
             std::thread::sleep(target - now);
         }
         let idx = (rng.next_u64() % prototypes.len() as u64) as usize;
-        let priority = if rng.next_f64() < cfg.high_fraction {
-            Priority::High
-        } else {
-            Priority::Low
-        };
+        let class = pick_class(rng.next_f64());
         submitted += 1;
-        let opts = RequestOpts { priority, deadline: cfg.deadline };
+        let opts = RequestOpts { class, deadline: cfg.deadline };
         match server.submit(prototypes[idx].clone(), opts) {
             Ok(rx) => pending.push(rx),
             Err(ServiceError::QueueFull { .. }) => shed += 1,
@@ -372,6 +505,7 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         service_time_us: lat(&sv.service_time),
         elapsed_s: elapsed,
         accounted: lost == 0 && completed + expired + shed + failed + rejected == submitted,
+        per_class: sv.per_class.iter().map(|c| ClassLoadRow::from_stats(c, sv.completed)).collect(),
     }
 }
 
@@ -460,6 +594,30 @@ mod tests {
             service_time_us: [5.0, 10.0, 20.0, 40.0, 8.0, 50.0],
             elapsed_s: 5.2,
             accounted: true,
+            per_class: vec![
+                ClassLoadRow {
+                    name: "gold".into(),
+                    weight: 5,
+                    submitted: 6,
+                    completed: 5,
+                    shed: 1,
+                    deadline_misses: 1,
+                    degraded: 2,
+                    served_fraction: 0.625,
+                    queue_p99_us: 40.0,
+                },
+                ClassLoadRow {
+                    name: "we\"ird\\\nx".into(),
+                    weight: 1,
+                    submitted: 1,
+                    completed: 1,
+                    shed: 0,
+                    deadline_misses: 0,
+                    degraded: 0,
+                    served_fraction: 0.125,
+                    queue_p99_us: 10.0,
+                },
+            ],
         };
         let j = r.to_json();
         for key in [
@@ -471,9 +629,43 @@ mod tests {
             "\"p50\"",
             "\"p99\"",
             "\"accounted\": true",
+            "\"classes\": [",
+            "\"name\": \"gold\"",
+            "\"served_fraction\": 0.6250",
+            "\"name\": \"we\\\"ird\\\\\\u000ax\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
-        assert!(r.render().contains("every request answered = yes"));
+        let text = r.render();
+        assert!(text.contains("every request answered = yes"));
+        assert!(text.contains("class gold"), "{text}");
+    }
+
+    #[test]
+    fn class_mix_resolution_and_cumulative_pick() {
+        // empty mix + two classes: the legacy high/low split
+        let legacy = LoadgenConfig { high_fraction: 0.8, ..Default::default() };
+        assert_eq!(resolve_class_mix(&legacy, 2), vec![0.8, 0.19999999999999996]);
+        // empty mix + N != 2 classes: uniform, so every class gets
+        // traffic (a 2-entry legacy split would starve classes 2+)
+        assert_eq!(resolve_class_mix(&legacy, 3), vec![1.0, 1.0, 1.0]);
+        assert_eq!(resolve_class_mix(&legacy, 1), vec![1.0]);
+        // explicit mixes pass through (clamped at zero, truncated)
+        let cfg = LoadgenConfig {
+            class_mix: vec![0.5, 0.3, 0.2, -1.0],
+            ..Default::default()
+        };
+        assert_eq!(resolve_class_mix(&cfg, 3), vec![0.5, 0.3, 0.2]);
+
+        let mix = [0.5, 0.3, 0.2];
+        assert_eq!(pick_from_mix(&mix, 0.0), 0);
+        assert_eq!(pick_from_mix(&mix, 0.49), 0);
+        assert_eq!(pick_from_mix(&mix, 0.51), 1);
+        assert_eq!(pick_from_mix(&mix, 0.79), 1);
+        assert_eq!(pick_from_mix(&mix, 0.81), 2);
+        assert_eq!(pick_from_mix(&mix, 0.999), 2);
+        // unnormalized mixes work by ratio; an all-zero mix degenerates
+        assert_eq!(pick_from_mix(&[5.0, 3.0], 0.7), 1);
+        assert_eq!(pick_from_mix(&[0.0, 0.0], 0.3), 1);
     }
 }

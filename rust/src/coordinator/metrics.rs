@@ -121,6 +121,80 @@ impl LatencyStats {
     }
 }
 
+/// One QoS class's frontend counters, as captured by
+/// `TrafficServer::metrics` — the per-class slice of [`ServerStats`].
+#[derive(Clone, Debug, Default)]
+pub struct ClassStats {
+    pub name: String,
+    /// Fair-share weight (0 = background class).
+    pub weight: u32,
+    /// Resolved admission-queue capacity for this class.
+    pub capacity: usize,
+    pub submitted: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub late: u64,
+    pub failed: u64,
+    /// Dispatches served at half / quarter resolution (the degrade
+    /// ladder's per-level accounting).
+    pub degraded_half: u64,
+    pub degraded_quarter: u64,
+    /// Aged promotions of this class's requests ahead of weighted work.
+    pub aged: u64,
+    /// Peak queue depth observed for this class.
+    pub max_queue_depth: usize,
+    /// Time from admission to dispatch, this class only.
+    pub queue_wait: LatencyStats,
+}
+
+impl ClassStats {
+    /// Fraction of admitted requests that missed their deadline.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            (self.expired + self.late) as f64 / self.admitted as f64
+        }
+    }
+
+    /// This class's share of `total_completed` dispatches — what the
+    /// WFQ share-conformance checks compare against weight/Σweights.
+    pub fn served_fraction(&self, total_completed: u64) -> f64 {
+        if total_completed == 0 {
+            0.0
+        } else {
+            self.completed as f64 / total_completed as f64
+        }
+    }
+
+    /// Total degraded dispatches at any level.
+    pub fn degraded(&self) -> u64 {
+        self.degraded_half + self.degraded_quarter
+    }
+
+    fn interval_since(&self, prev: &ClassStats) -> ClassStats {
+        ClassStats {
+            name: self.name.clone(),
+            weight: self.weight,
+            capacity: self.capacity,
+            submitted: self.submitted.saturating_sub(prev.submitted),
+            admitted: self.admitted.saturating_sub(prev.admitted),
+            completed: self.completed.saturating_sub(prev.completed),
+            shed: self.shed.saturating_sub(prev.shed),
+            expired: self.expired.saturating_sub(prev.expired),
+            late: self.late.saturating_sub(prev.late),
+            failed: self.failed.saturating_sub(prev.failed),
+            degraded_half: self.degraded_half.saturating_sub(prev.degraded_half),
+            degraded_quarter: self.degraded_quarter.saturating_sub(prev.degraded_quarter),
+            aged: self.aged.saturating_sub(prev.aged),
+            max_queue_depth: self.max_queue_depth,
+            queue_wait: self.queue_wait.delta_since(&prev.queue_wait),
+        }
+    }
+}
+
 /// Traffic-frontend counters, as captured by
 /// `TrafficServer::metrics` (all zeros / empty for services running
 /// without an admission layer).
@@ -155,6 +229,9 @@ pub struct ServerStats {
     pub queue_wait: LatencyStats,
     /// Time from dispatch to backend completion.
     pub service_time: LatencyStats,
+    /// Per-QoS-class counters, in configuration order (empty for
+    /// services running without an admission layer).
+    pub per_class: Vec<ClassStats>,
 }
 
 impl ServerStats {
@@ -205,6 +282,17 @@ impl ServerStats {
             max_queue_depth: self.max_queue_depth,
             queue_wait: self.queue_wait.delta_since(&prev.queue_wait),
             service_time: self.service_time.delta_since(&prev.service_time),
+            per_class: self
+                .per_class
+                .iter()
+                .enumerate()
+                .map(|(i, cur)| match prev.per_class.get(i) {
+                    Some(p) => cur.interval_since(p),
+                    // a fresh meter starts from ServerStats::default()
+                    // (no classes): the whole history is the interval
+                    None => cur.clone(),
+                })
+                .collect(),
         }
     }
 }
@@ -471,6 +559,26 @@ impl MetricsSnapshot {
                 sv.service_time.mean_us(),
                 sv.service_time.max_us
             ));
+            for c in &sv.per_class {
+                s.push_str(&format!(
+                    "    class {} (w{}, cap {}): {} served ({:.3} share), {} shed, \
+                     {} miss ({:.3}), degraded {}+{}, {} aged, queue p99 {:.0}us \
+                     (peak {})\n",
+                    c.name,
+                    c.weight,
+                    c.capacity,
+                    c.completed,
+                    c.served_fraction(sv.completed),
+                    c.shed,
+                    c.expired + c.late,
+                    c.deadline_miss_rate(),
+                    c.degraded_half,
+                    c.degraded_quarter,
+                    c.aged,
+                    c.queue_wait.percentile_us(0.99),
+                    c.max_queue_depth
+                ));
+            }
         }
         if !self.shards.is_empty() {
             s.push_str(&format!(
@@ -670,6 +778,46 @@ mod tests {
         assert!(!sv.accounted());
         assert_eq!(ServerStats::default().shed_rate(), 0.0);
         assert_eq!(ServerStats::default().deadline_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn class_stats_rates_interval_and_render() {
+        let prev = ClassStats {
+            name: "gold".into(),
+            weight: 5,
+            capacity: 64,
+            submitted: 10,
+            admitted: 8,
+            completed: 6,
+            shed: 2,
+            expired: 1,
+            late: 1,
+            degraded_half: 1,
+            ..Default::default()
+        };
+        assert!((prev.deadline_miss_rate() - 0.25).abs() < 1e-12);
+        assert!((prev.served_fraction(12) - 0.5).abs() < 1e-12);
+        assert_eq!(prev.degraded(), 1);
+        assert_eq!(ClassStats::default().deadline_miss_rate(), 0.0);
+        assert_eq!(ClassStats::default().served_fraction(0), 0.0);
+
+        let cur = ClassStats { submitted: 25, admitted: 20, completed: 15, ..prev.clone() };
+        let mut a = ServerStats { per_class: vec![prev], ..Default::default() };
+        let b = ServerStats { per_class: vec![cur], ..Default::default() };
+        let iv = b.interval_since(&a);
+        assert_eq!(iv.per_class[0].submitted, 15);
+        assert_eq!(iv.per_class[0].completed, 9);
+        assert_eq!(iv.per_class[0].name, "gold");
+        // a fresh meter (empty prev) sees the whole history
+        a.per_class.clear();
+        assert_eq!(b.interval_since(&a).per_class[0].submitted, 25);
+
+        let mut snap = Metrics::default().snapshot();
+        snap.server = b;
+        snap.server.submitted = 25;
+        snap.server.completed = 15;
+        let out = snap.render();
+        assert!(out.contains("class gold (w5, cap 64)"), "{out}");
     }
 
     #[test]

@@ -33,14 +33,18 @@
 //! overflow path — see the module docs in [`shard`].
 //!
 //! In front of either service sits the traffic frontend
-//! ([`server::TrafficServer`]): bounded admission queues with a
-//! configurable backpressure policy (block / shed / degrade), two
-//! priority classes with an aging rule, per-request deadlines, and a
-//! queue-wait vs service-time latency recorder — plus the open-loop
-//! load generator in [`loadgen`] driving it with Poisson or burst
-//! arrivals (`egpu-fft loadtest`). Failures are typed: every submit
-//! path answers with a [`ServiceError`] instead of panicking when the
-//! worker pool is gone.
+//! ([`server::TrafficServer`]): N QoS classes ([`qos::QosClass`]) with
+//! weighted fair queueing across classes (deficit round-robin),
+//! earliest-deadline-first ordering within a class, bounded per-class
+//! admission queues with a configurable backpressure policy (block /
+//! shed / degrade down a floor-clamped `Full → Half → Quarter`
+//! resolution ladder), an aging rule protecting background classes,
+//! per-request deadlines, and queue-wait vs service-time latency
+//! recorders with per-class breakdowns — plus the open-loop load
+//! generator in [`loadgen`] driving it with Poisson or burst arrivals
+//! over a per-class mix (`egpu-fft loadtest --class-mix`). Failures
+//! are typed: every submit path answers with a [`ServiceError`]
+//! instead of panicking when the worker pool is gone.
 //!
 //! The sharded pool is *elastic*: `add_shard` / `retire_shard` resize
 //! it while serving (epoch-versioned routing, drain-and-reroute
@@ -52,6 +56,7 @@
 pub mod autoscale;
 pub mod loadgen;
 pub mod metrics;
+pub mod qos;
 pub mod server;
 pub mod shard;
 
@@ -73,11 +78,12 @@ use crate::runtime::{spawn_pjrt_server, PjrtHandle};
 use crate::sim::FftExecutor;
 pub use autoscale::{
     AutoscaleController, AutoscaleEvent, AutoscaleLog, AutoscalePolicy, AutoscaleSample,
-    ControllerCore, ScaleAction,
+    ControllerCore, QosAction, ScaleAction,
 };
-pub use loadgen::{ArrivalPattern, LoadReport, LoadgenConfig};
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat};
-pub use server::{AdmissionPolicy, Priority, RequestOpts, ServedFft, ServerConfig};
+pub use loadgen::{ArrivalPattern, ClassLoadRow, LoadReport, LoadgenConfig};
+pub use metrics::{ClassStats, LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat};
+pub use qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
+pub use server::{AdmissionPolicy, DegradeControl, RequestOpts, ServedFft, ServerConfig};
 pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
 pub use shard::{ShardPoolConfig, ShardedFftService};
 
@@ -97,6 +103,10 @@ pub enum ServiceError {
     /// queue; it was never dispatched.
     #[error("deadline exceeded after {waited_us:.0}us in the admission queue")]
     DeadlineExceeded { waited_us: f64 },
+    /// The request named a QoS class the server was not configured
+    /// with.
+    #[error("unknown QoS class index {class}")]
+    UnknownClass { class: usize },
     /// The execution backend failed the request (rendered message).
     #[error("backend error: {0}")]
     Backend(String),
@@ -157,6 +167,11 @@ pub struct FftResult {
 struct Job {
     kind: JobKind,
     submitted: Instant,
+    /// QoS degrade level threaded through dispatch: the worker
+    /// truncates the input to `len >> level.shift()` before serving, so
+    /// routing, metrics and the executor all see the *served* size.
+    /// Batch jobs always run at `Full`.
+    level: qos::DegradeLevel,
 }
 
 impl Job {
@@ -169,11 +184,11 @@ impl Job {
         }
     }
 
-    /// Transform size, for affinity routing (batches are same-size by
-    /// construction).
+    /// Effective (post-degrade) transform size, for affinity routing
+    /// (batches are same-size by construction and always `Full`).
     fn points(&self) -> usize {
         match &self.kind {
-            JobKind::Single { input, .. } => input.len(),
+            JobKind::Single { input, .. } => input.len() >> self.level.shift(),
             JobKind::Batch { inputs, .. } => inputs.first().map(Vec::len).unwrap_or(0),
         }
     }
@@ -254,11 +269,24 @@ impl FftService {
     /// channel yields a typed [`ServiceError::WorkerGone`] — it never
     /// panics and never leaves the caller hanging on a dead channel.
     pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        self.submit_degraded(input, qos::DegradeLevel::Full)
+    }
+
+    /// [`FftService::submit`] with a QoS degrade level threaded through
+    /// dispatch: the serving worker truncates the input to
+    /// `len >> level.shift()` before running it, so the backend meters
+    /// and serves the transform at its degraded size.
+    pub fn submit_degraded(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: qos::DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Job {
             kind: JobKind::Single { id, input, reply: reply_tx },
             submitted: Instant::now(),
+            level,
         };
         match self.tx.as_ref() {
             Some(tx) => send_or_fail(tx, job),
@@ -301,6 +329,7 @@ impl FftService {
             let job = Job {
                 kind: JobKind::Batch { ids: batch_ids, inputs: batch_inputs, reply: reply_tx },
                 submitted: Instant::now(),
+                level: qos::DegradeLevel::Full,
             };
             match self.tx.as_ref() {
                 Some(tx) => send_or_fail(tx, job),
@@ -495,8 +524,16 @@ fn worker_loop(
 /// (identical serving code is what keeps sharded outputs bitwise equal
 /// to the single-queue path).
 fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, job: Job) {
+    let level = job.level;
     match job.kind {
-        JobKind::Single { id, input, reply } => {
+        JobKind::Single { id, mut input, reply } => {
+            // Apply the QoS degrade level where the job is served: the
+            // executor, the metrics and the routing all see the
+            // truncated (served) size, on both schedulers alike.
+            if level != qos::DegradeLevel::Full {
+                let keep = input.len() >> level.shift();
+                input.truncate(keep);
+            }
             let res = serve_one(core, engine, id, &input);
             let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
             match res {
@@ -708,6 +745,7 @@ mod tests {
         let job = Job {
             kind: JobKind::Single { id: 0, input: signal(256, 0), reply: reply_tx },
             submitted: Instant::now(),
+            level: qos::DegradeLevel::Full,
         };
         send_or_fail(&tx, job);
         let err = reply_rx.recv().expect("typed reply, not a dead channel").unwrap_err();
@@ -729,6 +767,7 @@ mod tests {
                 reply: reply_tx,
             },
             submitted: Instant::now(),
+            level: qos::DegradeLevel::Full,
         };
         send_or_fail(&tx, job);
         let results = reply_rx.recv().unwrap();
@@ -740,6 +779,20 @@ mod tests {
                 Some(ServiceError::WorkerGone)
             ));
         }
+    }
+
+    #[test]
+    fn degraded_dispatch_serves_and_meters_the_truncated_size() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let r = svc
+            .submit_degraded(signal(1024, 3), qos::DegradeLevel::Quarter)
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.output.len(), 256, "quarter resolution of a 1024-point request");
+        let m = svc.metrics();
+        assert_eq!(m.by_points.get(&256).copied().unwrap_or(0), 1, "metered at served size");
+        svc.shutdown();
     }
 
     #[test]

@@ -1,0 +1,589 @@
+//! QoS scheduling core: N traffic classes under weighted fair queueing,
+//! earliest-deadline-first ordering within each class, an aging rule
+//! for background classes, and a floor-clamped degrade ladder.
+//!
+//! This module is the pure heart of the traffic frontend — no threads,
+//! no channels, time injected through every call — so every scheduling
+//! invariant the serving layer depends on is provable by the property
+//! suite in `rust/tests/proptests.rs`:
+//!
+//! * **Weighted fair queueing** across classes is deficit round-robin
+//!   ([`QosScheduler::pop`]): each positive-weight class in rotation
+//!   receives a quantum equal to its weight and serves one request per
+//!   unit of deficit, so under sustained saturation class `c` receives
+//!   a `weight_c / Σ weights` share of dispatches, exact to within one
+//!   round.
+//! * **EDF within a class**: a pop takes the queued request with the
+//!   earliest absolute deadline (ties broken by admission order;
+//!   deadline-less requests come after all deadlined peers, in FIFO
+//!   order). When every request in a class carries the same *relative*
+//!   deadline, absolute-deadline order equals arrival order, so EDF
+//!   degenerates to the FIFO the two-class server used — which is what
+//!   keeps the legacy configuration's dispatch order reproducible. The
+//!   one exception is an aging promotion (below), which dispatches the
+//!   aged request itself.
+//! * **Aging** protects *background* classes (weight 0, excluded from
+//!   the fair-share rotation): once a background class's oldest waiter
+//!   has waited [`QosScheduler::aging`], that *request* wins the next
+//!   dispatch slot ahead of all weighted work — the bound is
+//!   per-request, so a deadline-less request cannot starve behind a
+//!   stream of deadlined peers in its own class. Positive-weight
+//!   classes need no aging — DRR already guarantees each non-empty
+//!   class a quantum every rotation, which is the N-class
+//!   starvation-freedom bound. The legacy two-priority server is the
+//!   special case `[{high, weight 1}, {low, weight 0}]`: high strictly
+//!   first, low promoted by aging, low drains when high is idle.
+//! * **The degrade ladder** (`Full → Half → Quarter`) maps admission
+//!   pressure (or a controller decision) to a resolution level; the
+//!   [`DegradeLadder`] clamps every request to the deepest level whose
+//!   truncated transform still has at least `min_points` samples, so
+//!   degradation can never emit an unservable (or uselessly small)
+//!   design point. `min_points` is the radix/variant-aware floor: use
+//!   [`DegradeLadder::for_radix`] to keep every degraded transform a
+//!   legal pass shape for the deployed radix.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+/// Resolution level of the degrade ladder. `Ord` follows depth:
+/// `Full < Half < Quarter`, so `a.max(b)` is "the more degraded of the
+/// two" — which is how admission merges the queue-pressure level with
+/// the controller's operating level.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DegradeLevel {
+    #[default]
+    Full,
+    Half,
+    Quarter,
+}
+
+impl DegradeLevel {
+    /// Right-shift applied to the transform size at this level.
+    pub fn shift(self) -> u32 {
+        match self {
+            DegradeLevel::Full => 0,
+            DegradeLevel::Half => 1,
+            DegradeLevel::Quarter => 2,
+        }
+    }
+
+    /// Relative per-request service cost at this level (a degrade step
+    /// halves the transform size, and therefore roughly halves the
+    /// backend time) — the controller's cost model for the degrade
+    /// lever.
+    pub fn cost_factor(self) -> f64 {
+        1.0 / (1u32 << self.shift()) as f64
+    }
+
+    /// One step deeper on the ladder (saturates at `Quarter`).
+    pub fn deeper(self) -> DegradeLevel {
+        match self {
+            DegradeLevel::Full => DegradeLevel::Half,
+            _ => DegradeLevel::Quarter,
+        }
+    }
+
+    /// One step back toward full resolution (saturates at `Full`).
+    pub fn shallower(self) -> DegradeLevel {
+        match self {
+            DegradeLevel::Quarter => DegradeLevel::Half,
+            _ => DegradeLevel::Full,
+        }
+    }
+
+    /// Stable wire encoding for the shared atomic operating level.
+    pub fn as_u8(self) -> u8 {
+        self.shift() as u8
+    }
+
+    /// Inverse of [`DegradeLevel::as_u8`] (out-of-range clamps to
+    /// `Quarter`).
+    pub fn from_u8(v: u8) -> DegradeLevel {
+        match v {
+            0 => DegradeLevel::Full,
+            1 => DegradeLevel::Half,
+            _ => DegradeLevel::Quarter,
+        }
+    }
+}
+
+impl std::fmt::Display for DegradeLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DegradeLevel::Full => write!(f, "full"),
+            DegradeLevel::Half => write!(f, "half"),
+            DegradeLevel::Quarter => write!(f, "quarter"),
+        }
+    }
+}
+
+impl std::str::FromStr for DegradeLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "full" => Ok(DegradeLevel::Full),
+            "half" => Ok(DegradeLevel::Half),
+            "quarter" => Ok(DegradeLevel::Quarter),
+            other => Err(anyhow!("unknown degrade level `{other}` (full|half|quarter)")),
+        }
+    }
+}
+
+/// The floor-clamped degrade ladder: requests are never truncated below
+/// `min_points` samples, whatever level pressure (or the controller)
+/// asks for.
+#[derive(Clone, Copy, Debug)]
+pub struct DegradeLadder {
+    pub min_points: usize,
+}
+
+impl DegradeLadder {
+    /// A ladder whose floor keeps every degraded transform a legal
+    /// design point for `radix` (two full passes: `radix²` points) —
+    /// the radix/variant-aware construction.
+    pub fn for_radix(radix: usize) -> DegradeLadder {
+        DegradeLadder { min_points: (radix * radix).max(4) }
+    }
+
+    /// The deepest level not deeper than `requested` whose truncated
+    /// size stays at or above the floor. `Full` is always allowed, even
+    /// for inputs already below the floor.
+    pub fn clamp(&self, requested: DegradeLevel, points: usize) -> DegradeLevel {
+        let mut level = requested;
+        while level != DegradeLevel::Full && (points >> level.shift()) < self.min_points {
+            level = level.shallower();
+        }
+        level
+    }
+
+    /// Clamp and resolve: `(effective level, truncated point count)`.
+    pub fn apply(&self, requested: DegradeLevel, points: usize) -> (DegradeLevel, usize) {
+        let level = self.clamp(requested, points);
+        (level, points >> level.shift())
+    }
+}
+
+/// One traffic class of the QoS frontend.
+#[derive(Clone, Debug)]
+pub struct QosClass {
+    pub name: String,
+    /// Fair-share weight. Positive weights share dispatch slots in
+    /// proportion (deficit round-robin); weight 0 marks a *background*
+    /// class, served only when every weighted queue is empty or via the
+    /// aging rule — exactly the legacy low-priority semantics.
+    pub weight: u32,
+    /// Bounded admission-queue capacity for this class. `0` derives the
+    /// cap from the deprecated shared `ServerConfig::queue_capacity`
+    /// (each class then gets the legacy shared value as its own cap).
+    pub capacity: usize,
+    /// Deadline applied to this class's requests when the submission
+    /// carries none (falls back to `ServerConfig::default_deadline`).
+    pub deadline_default: Option<Duration>,
+}
+
+impl QosClass {
+    pub fn new(name: &str, weight: u32) -> QosClass {
+        QosClass { name: name.into(), weight, capacity: 0, deadline_default: None }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> QosClass {
+        self.capacity = capacity;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> QosClass {
+        self.deadline_default = Some(deadline);
+        self
+    }
+}
+
+/// The legacy two-priority configuration: `high` (weight 1) strictly
+/// before `low` (weight 0, promoted by aging) — class indices 0 and 1
+/// match the old `Priority::High` / `Priority::Low`.
+pub fn default_two_class() -> Vec<QosClass> {
+    vec![QosClass::new("high", 1), QosClass::new("low", 0)]
+}
+
+/// Per-class caps after the legacy fallback: explicit capacities are
+/// honored; `0` derives the deprecated shared `queue_capacity`.
+pub fn resolve_capacities(classes: &[QosClass], shared: usize) -> Vec<usize> {
+    classes
+        .iter()
+        .map(|c| if c.capacity > 0 { c.capacity } else { shared })
+        .collect()
+}
+
+/// One admitted-but-not-yet-dispatched request, as the scheduler core
+/// sees it. The payload is opaque so the core stays thread-free and
+/// property-testable with plain values.
+pub struct Queued<T> {
+    /// Admission sequence number (monotonic, scheduler-wide): the EDF
+    /// tiebreak and the FIFO order for deadline-less requests.
+    pub seq: u64,
+    pub class: usize,
+    pub deadline: Option<Instant>,
+    pub enqueued: Instant,
+    pub payload: T,
+}
+
+/// A dispatched request plus whether the aging rule promoted it ahead
+/// of waiting weighted work.
+pub struct Popped<T> {
+    pub item: Queued<T>,
+    pub aged: bool,
+}
+
+/// The N-class scheduler: bounded per-class queues, deficit round-robin
+/// across positive-weight classes, EDF within a class, aging for
+/// background (weight-0) classes. All time is injected, so behaviour is
+/// a pure function of the call sequence.
+///
+/// **Complexity note:** per-class queues are plain `Vec`s, so a pop
+/// scans O(class depth) under the admission lock (EDF min, oldest
+/// waiter). At the capacities this frontend supports (hundreds of
+/// queued requests per class) that scan is tens of nanoseconds per
+/// entry — noise next to the µs-to-ms service time of a single FFT —
+/// and it keeps the core trivially auditable for the property suite.
+/// If per-class caps ever grow by orders of magnitude, swap the `Vec`
+/// for a `BinaryHeap` keyed on `(deadline, seq)` plus an arrival-order
+/// index for the aging scan.
+pub struct QosScheduler<T> {
+    classes: Vec<QosClass>,
+    caps: Vec<usize>,
+    queues: Vec<Vec<Queued<T>>>,
+    deficit: Vec<u32>,
+    /// Indices of positive-weight classes, in configuration order (the
+    /// DRR rotation) — and of background classes (weight 0).
+    weighted: Vec<usize>,
+    background: Vec<usize>,
+    cursor: usize,
+    aging: Duration,
+    next_seq: u64,
+}
+
+impl<T> QosScheduler<T> {
+    /// `caps` are the resolved per-class capacities (see
+    /// [`resolve_capacities`]); `aging` is the background-class
+    /// promotion threshold.
+    pub fn new(classes: Vec<QosClass>, caps: Vec<usize>, aging: Duration) -> QosScheduler<T> {
+        assert_eq!(classes.len(), caps.len(), "one capacity per class");
+        let weighted: Vec<usize> = (0..classes.len()).filter(|&c| classes[c].weight > 0).collect();
+        let background: Vec<usize> =
+            (0..classes.len()).filter(|&c| classes[c].weight == 0).collect();
+        let n = classes.len();
+        QosScheduler {
+            classes,
+            caps,
+            queues: (0..n).map(|_| Vec::new()).collect(),
+            deficit: vec![0; n],
+            weighted,
+            background,
+            cursor: 0,
+            aging,
+            next_seq: 0,
+        }
+    }
+
+    pub fn classes(&self) -> &[QosClass] {
+        &self.classes
+    }
+
+    pub fn capacity(&self, class: usize) -> usize {
+        self.caps[class]
+    }
+
+    pub fn depth(&self, class: usize) -> usize {
+        self.queues[class].len()
+    }
+
+    pub fn total_depth(&self) -> usize {
+        self.queues.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(Vec::is_empty)
+    }
+
+    /// Admit one request into its class queue. Fails with the class's
+    /// capacity when the queue is full (the caller applies its
+    /// admission policy: block, shed, or degrade-then-shed).
+    pub fn try_enqueue(
+        &mut self,
+        class: usize,
+        deadline: Option<Instant>,
+        now: Instant,
+        payload: T,
+    ) -> std::result::Result<u64, usize> {
+        let cap = self.caps[class];
+        if self.queues[class].len() >= cap {
+            return Err(cap);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queues[class].push(Queued { seq, class, deadline, enqueued: now, payload });
+        Ok(seq)
+    }
+
+    /// Dispatch the next request: an aged background request first,
+    /// then deficit round-robin over the weighted classes, then
+    /// background drain when no weighted work is queued. Within the
+    /// chosen class the pop is always EDF.
+    pub fn pop(&mut self, now: Instant) -> Option<Popped<T>> {
+        // 1. Aging: a background class whose oldest waiter has waited
+        // past the threshold wins the slot (oldest waiter first among
+        // several classes), and the promotion dispatches that oldest
+        // waiter *itself* — not the class's EDF-min. The bound protects
+        // the individual request: were the promotion to serve the
+        // EDF-min instead, a deadline-less request could starve forever
+        // behind a steady stream of deadlined peers. EDF ordering
+        // therefore holds between promotions; an aged pop is the
+        // explicit, counted exception. Counted as a promotion only when
+        // weighted work was actually jumped.
+        if let Some(class) = self.aged_background(now) {
+            let aged = self.weighted.iter().any(|&w| !self.queues[w].is_empty());
+            let item = self.pop_oldest(class).expect("aged class is non-empty");
+            return Some(Popped { item, aged });
+        }
+        // 2. Deficit round-robin across positive-weight classes: the
+        // cursor class serves one request per unit of deficit and the
+        // rotation advances when its quantum (== weight) is spent, so
+        // saturated classes split slots in weight proportion.
+        for _ in 0..self.weighted.len() {
+            let class = self.weighted[self.cursor % self.weighted.len()];
+            if self.queues[class].is_empty() {
+                self.deficit[class] = 0;
+                self.cursor = (self.cursor + 1) % self.weighted.len();
+                continue;
+            }
+            if self.deficit[class] == 0 {
+                self.deficit[class] = self.classes[class].weight;
+            }
+            self.deficit[class] -= 1;
+            if self.deficit[class] == 0 {
+                self.cursor = (self.cursor + 1) % self.weighted.len();
+            }
+            let item = self.pop_edf(class).expect("checked non-empty");
+            return Some(Popped { item, aged: false });
+        }
+        // 3. No weighted work: drain background classes, oldest waiter
+        // first (not a promotion — nothing was jumped).
+        let class = self
+            .background
+            .iter()
+            .copied()
+            .filter(|&c| !self.queues[c].is_empty())
+            .min_by_key(|&c| self.oldest(c).expect("filtered non-empty"))?;
+        let item = self.pop_edf(class).expect("chosen non-empty");
+        Some(Popped { item, aged: false })
+    }
+
+    /// Enqueue instant of the class's oldest waiter.
+    fn oldest(&self, class: usize) -> Option<Instant> {
+        self.queues[class].iter().map(|q| q.enqueued).min()
+    }
+
+    /// The background class owed an aged promotion, if any (oldest
+    /// waiter past the aging threshold; oldest first on ties).
+    fn aged_background(&self, now: Instant) -> Option<usize> {
+        self.background
+            .iter()
+            .copied()
+            .filter_map(|c| self.oldest(c).map(|t| (c, t)))
+            .filter(|&(_, t)| now.checked_duration_since(t).unwrap_or_default() >= self.aging)
+            .min_by_key(|&(_, t)| t)
+            .map(|(c, _)| c)
+    }
+
+    /// EDF pop: earliest absolute deadline first, admission order as
+    /// the tiebreak, deadline-less requests after all deadlined peers
+    /// (in admission order).
+    fn pop_edf(&mut self, class: usize) -> Option<Queued<T>> {
+        let queue = &self.queues[class];
+        let idx = queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| (q.deadline.is_none(), q.deadline, q.seq))
+            .map(|(i, _)| i)?;
+        Some(self.queues[class].swap_remove(idx))
+    }
+
+    /// Oldest-waiter pop: the request the aging bound protects. Used
+    /// only for aging promotions — see [`QosScheduler::pop`].
+    fn pop_oldest(&mut self, class: usize) -> Option<Queued<T>> {
+        let queue = &self.queues[class];
+        let idx = queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| (q.enqueued, q.seq))
+            .map(|(i, _)| i)?;
+        Some(self.queues[class].swap_remove(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(specs: &[(&str, u32)], cap: usize, aging: Duration) -> QosScheduler<u64> {
+        let classes: Vec<QosClass> = specs.iter().map(|&(n, w)| QosClass::new(n, w)).collect();
+        let caps = resolve_capacities(&classes, cap);
+        QosScheduler::new(classes, caps, aging)
+    }
+
+    #[test]
+    fn legacy_two_class_pop_order_is_preserved() {
+        // the PR 3 frontend: high strictly before low, low drains when
+        // high is empty, aged low jumps waiting high work
+        let aging = Duration::from_secs(3600);
+        let mut s = sched(&[("high", 1), ("low", 0)], 16, aging);
+        let t0 = Instant::now();
+        s.try_enqueue(1, None, t0, 100).unwrap();
+        s.try_enqueue(0, None, t0, 1).unwrap();
+        s.try_enqueue(0, None, t0, 2).unwrap();
+        let p = s.pop(t0).unwrap();
+        assert_eq!((p.item.class, p.item.payload, p.aged), (0, 1, false));
+        let p = s.pop(t0).unwrap();
+        assert_eq!((p.item.class, p.item.payload), (0, 2));
+        let p = s.pop(t0).unwrap();
+        assert_eq!((p.item.class, p.item.payload, p.aged), (1, 100, false), "low drains");
+        assert!(s.pop(t0).is_none());
+    }
+
+    #[test]
+    fn aged_background_jumps_weighted_work_and_is_counted() {
+        let aging = Duration::from_millis(10);
+        let mut s = sched(&[("high", 1), ("low", 0)], 16, aging);
+        let t0 = Instant::now();
+        s.try_enqueue(1, None, t0, 100).unwrap();
+        s.try_enqueue(0, None, t0, 1).unwrap();
+        let later = t0 + Duration::from_millis(50);
+        let p = s.pop(later).unwrap();
+        assert_eq!((p.item.class, p.aged), (1, true), "aged low jumps waiting high");
+        let p = s.pop(later).unwrap();
+        assert_eq!((p.item.class, p.aged), (0, false));
+    }
+
+    #[test]
+    fn aged_promotion_serves_the_oldest_waiter_not_the_edf_min() {
+        // the aging bound is per-request: a deadline-less background
+        // request must not be starved by later-arriving deadlined peers
+        let aging = Duration::from_millis(10);
+        let mut s = sched(&[("high", 1), ("low", 0)], 16, aging);
+        let t0 = Instant::now();
+        s.try_enqueue(1, None, t0, 100).unwrap(); // the starvation candidate
+        let later = t0 + Duration::from_millis(50);
+        // deadlined peers keep arriving and would win any EDF pop
+        s.try_enqueue(1, Some(later + Duration::from_millis(1)), later, 200).unwrap();
+        s.try_enqueue(0, None, later, 1).unwrap();
+        let p = s.pop(later).unwrap();
+        assert_eq!(
+            (p.item.class, p.item.payload, p.aged),
+            (1, 100, true),
+            "the aged request itself is dispatched"
+        );
+        // with the aged request served, EDF resumes for the peers
+        let p = s.pop(later).unwrap();
+        assert_eq!((p.item.class, p.item.payload), (0, 1), "weighted work next");
+    }
+
+    #[test]
+    fn aged_pop_without_weighted_work_is_not_a_promotion() {
+        let mut s = sched(&[("high", 1), ("low", 0)], 16, Duration::from_millis(1));
+        let t0 = Instant::now();
+        s.try_enqueue(1, None, t0, 7).unwrap();
+        let p = s.pop(t0 + Duration::from_secs(1)).unwrap();
+        assert_eq!((p.item.class, p.aged), (1, false), "nothing was jumped");
+    }
+
+    #[test]
+    fn drr_shares_follow_weights_under_saturation() {
+        let weights = [(("gold", 5u32)), ("silver", 3), ("bronze", 1)];
+        let mut s = sched(&weights, 1024, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        // keep every queue saturated while popping
+        let mut served = [0u64; 3];
+        for round in 0..900u64 {
+            for c in 0..3 {
+                while s.depth(c) < 8 {
+                    s.try_enqueue(c, None, t0, round).unwrap();
+                }
+            }
+            let p = s.pop(t0).unwrap();
+            served[p.item.class] += 1;
+        }
+        let total: u64 = served.iter().sum();
+        for (c, &(_, w)) in weights.iter().enumerate() {
+            let frac = served[c] as f64 / total as f64;
+            let want = w as f64 / 9.0;
+            assert!(
+                (frac - want).abs() < 0.02,
+                "class {c}: share {frac:.3} vs weight share {want:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn edf_orders_within_a_class() {
+        let mut s = sched(&[("rt", 1)], 16, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        let d = |ms: u64| Some(t0 + Duration::from_millis(ms));
+        s.try_enqueue(0, d(50), t0, 1).unwrap();
+        s.try_enqueue(0, d(10), t0, 2).unwrap();
+        s.try_enqueue(0, None, t0, 3).unwrap();
+        s.try_enqueue(0, d(30), t0, 4).unwrap();
+        let order: Vec<u64> = (0..4).map(|_| s.pop(t0).unwrap().item.payload).collect();
+        assert_eq!(order, vec![2, 4, 1, 3], "earliest deadline first, None last");
+    }
+
+    #[test]
+    fn capacity_bounds_each_class_independently() {
+        let mut s = sched(&[("a", 1), ("b", 1)], 2, Duration::ZERO);
+        let t0 = Instant::now();
+        assert!(s.try_enqueue(0, None, t0, 1).is_ok());
+        assert!(s.try_enqueue(0, None, t0, 2).is_ok());
+        assert_eq!(s.try_enqueue(0, None, t0, 3).unwrap_err(), 2, "class a full");
+        assert!(s.try_enqueue(1, None, t0, 4).is_ok(), "class b unaffected");
+        assert_eq!(s.depth(0), 2);
+        assert_eq!(s.depth(1), 1);
+        assert_eq!(s.total_depth(), 3);
+    }
+
+    #[test]
+    fn capacities_resolve_explicit_or_legacy_shared() {
+        let classes = vec![
+            QosClass::new("a", 2).with_capacity(7),
+            QosClass::new("b", 1), // unset -> legacy shared value
+        ];
+        assert_eq!(resolve_capacities(&classes, 64), vec![7, 64]);
+        assert_eq!(resolve_capacities(&classes, 0), vec![7, 0], "underivable stays 0");
+    }
+
+    #[test]
+    fn ladder_clamps_at_the_floor_and_resolves_sizes() {
+        let ladder = DegradeLadder { min_points: 256 };
+        assert_eq!(ladder.apply(DegradeLevel::Quarter, 4096), (DegradeLevel::Quarter, 1024));
+        assert_eq!(ladder.apply(DegradeLevel::Quarter, 1024), (DegradeLevel::Quarter, 256));
+        assert_eq!(ladder.apply(DegradeLevel::Quarter, 512), (DegradeLevel::Half, 256));
+        assert_eq!(ladder.apply(DegradeLevel::Quarter, 256), (DegradeLevel::Full, 256));
+        assert_eq!(ladder.apply(DegradeLevel::Half, 128), (DegradeLevel::Full, 128), "tiny ok");
+        assert_eq!(DegradeLadder::for_radix(16).min_points, 256, "radix-aware floor");
+    }
+
+    #[test]
+    fn level_encoding_round_trips_and_orders_by_depth() {
+        for l in [DegradeLevel::Full, DegradeLevel::Half, DegradeLevel::Quarter] {
+            assert_eq!(DegradeLevel::from_u8(l.as_u8()), l);
+        }
+        assert!(DegradeLevel::Full < DegradeLevel::Half);
+        assert!(DegradeLevel::Half < DegradeLevel::Quarter);
+        assert_eq!(DegradeLevel::Full.deeper(), DegradeLevel::Half);
+        assert_eq!(DegradeLevel::Quarter.deeper(), DegradeLevel::Quarter);
+        assert_eq!(DegradeLevel::Quarter.shallower(), DegradeLevel::Half);
+        assert_eq!(DegradeLevel::Full.shallower(), DegradeLevel::Full);
+        assert_eq!(DegradeLevel::Quarter.cost_factor(), 0.25);
+        assert_eq!("half".parse::<DegradeLevel>().unwrap(), DegradeLevel::Half);
+        assert!("third".parse::<DegradeLevel>().is_err());
+    }
+}

@@ -1,42 +1,53 @@
-//! Traffic frontend: admission control, deadlines, and priority
+//! Traffic frontend: admission control, deadlines, and N-class QoS
 //! scheduling in front of the FFT execution services.
 //!
 //! PR 1/2 built the execution side (batched dispatch, shared plan
-//! cache, sharded scheduler); this module is the front door the
-//! ROADMAP's "heavy traffic" north star needs. A [`TrafficServer`]
-//! wraps either execution service (see [`ServiceHandle`]) with:
+//! cache, sharded scheduler) and PR 4 made capacity elastic; this
+//! module is the front door that decides *who* gets that capacity. A
+//! [`TrafficServer`] wraps either execution service (see
+//! [`ServiceHandle`]) with:
 //!
-//! * **bounded admission queues** — one FIFO per priority class, with a
-//!   shared capacity and a configurable [`AdmissionPolicy`] when full:
+//! * **N QoS classes** ([`super::qos::QosClass`], configured through
+//!   [`ServerConfig::classes`]) — each with a fair-share weight, a
+//!   bounded admission queue, and an optional per-class default
+//!   deadline. Dispatch order across classes is weighted fair queueing
+//!   (deficit round-robin); within a class it is earliest-deadline
+//!   first. Weight-0 *background* classes are served only when the
+//!   weighted queues are idle or via the aging rule, which preserves
+//!   the original two-priority frontend as the special case
+//!   `[{high, w1}, {low, w0}]` (see [`super::qos::default_two_class`]).
+//! * **a configurable [`AdmissionPolicy`]** when a class queue fills:
 //!   `Block` (backpressure onto the caller), `Shed` (reject with the
 //!   typed [`ServiceError::QueueFull`] — never a silent drop), or
-//!   `Degrade` (admit at half resolution under pressure, shed only at
-//!   the hard limit);
+//!   `Degrade` (walk the `Full → Half → Quarter` resolution ladder as
+//!   the class queue deepens, floor-clamped by
+//!   [`ServerConfig::min_degraded_points`]; shed only at the hard
+//!   class limit);
+//! * **a controller-driven operating level** — [`DegradeControl`]
+//!   exposes a shared degrade level that the autoscale controller can
+//!   raise under pressure instead of (or before) adding shards; it
+//!   applies to every admitted request, on top of any queue-driven
+//!   degradation, and is floor-clamped by the same ladder;
 //! * **per-request deadlines** — a request whose deadline expires while
 //!   queued is answered with [`ServiceError::DeadlineExceeded`] instead
 //!   of wasting a backend slot; one served past its deadline is
 //!   delivered but flagged and counted as a late miss;
-//! * **two priority classes with aging** — `High` is served first, but
-//!   once the oldest `Low` request has waited [`ServerConfig::aging`]
-//!   it jumps the line, so sustained high-priority load can delay low
-//!   priority by at most the aging bound plus one service time per
-//!   dispatcher (pinned by `rust/tests/server.rs`);
-//! * **a latency recorder** — queue wait and service time go into two
-//!   separate log₂-bucketed histograms
-//!   ([`super::metrics::LatencyRecorder`]), so p50/p90/p99/p999 of
-//!   "waiting for a slot" and "the backend being slow" are separately
-//!   visible in [`MetricsSnapshot::server`].
+//! * **latency recorders** — queue wait and service time go into two
+//!   separate log₂-bucketed histograms, plus a per-class queue-wait
+//!   histogram, so per-class p99s surface in
+//!   [`MetricsSnapshot::server`] ([`super::metrics::ClassStats`]).
 //!
 //! Dispatch is a small pool of dispatcher threads, each forwarding one
 //! admitted request at a time into the wrapped service and waiting for
 //! its reply — so [`ServerConfig::dispatchers`] is also the in-flight
-//! bound seen by the execution layer. `shutdown` closes admission,
-//! drains every already-admitted request (serving it or answering with
-//! a typed error), joins the dispatchers, and only then shuts the inner
-//! service down.
+//! bound seen by the execution layer. The degrade level travels *with*
+//! the job into the execution service (`submit_degraded`), so the
+//! backend truncates, routes and meters the transform at its served
+//! size. `shutdown` closes admission, drains every already-admitted
+//! request (serving it or answering with a typed error), joins the
+//! dispatchers, and only then shuts the inner service down.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -44,71 +55,96 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::metrics::{LatencyRecorder, ServerStats};
+use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
+use super::qos::{
+    default_two_class, resolve_capacities, DegradeLadder, DegradeLevel, QosClass, QosScheduler,
+};
 use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService};
 
-/// Request priority class. `High` is served first; `Low` is protected
-/// from starvation by the aging rule.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Priority {
-    High,
-    Low,
-}
-
-/// What happens when a request arrives and the admission queue is full.
+/// What happens when a request arrives and its class queue is full.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmissionPolicy {
-    /// Block the submitting thread until a slot frees (closed-loop
-    /// backpressure; `submit` never returns `QueueFull`).
+    /// Block the submitting thread until a slot frees in the request's
+    /// class (closed-loop backpressure; `submit` never returns
+    /// `QueueFull`).
     Block,
     /// Reject immediately with [`ServiceError::QueueFull`] — load is
     /// shed at the edge, and the caller always gets a typed error.
     Shed,
-    /// Two-level degradation: once the queue is at half capacity,
-    /// admit requests at *half resolution* (the input is truncated to
-    /// the leading `points/2` samples, a coarser spectrum that costs
-    /// roughly half the backend time — flagged in
-    /// [`ServedFft::degraded`]); at the hard capacity limit, shed with
-    /// a typed error exactly as [`AdmissionPolicy::Shed`].
+    /// Degrade-ladder admission: as a class queue deepens, requests are
+    /// admitted at reduced resolution — `Half` once the queue is at
+    /// half its capacity, `Quarter` at three quarters (each truncating
+    /// the input to its leading samples, a coarser spectrum that costs
+    /// roughly proportionally less backend time — level recorded in
+    /// [`ServedFft::level`]). The ladder never truncates below
+    /// [`ServerConfig::min_degraded_points`]; at the hard class limit
+    /// the request is shed with a typed error exactly as
+    /// [`AdmissionPolicy::Shed`].
     Degrade,
 }
 
 /// Per-request submission options.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct RequestOpts {
-    pub priority: Priority,
-    /// Relative deadline; `None` falls back to
-    /// [`ServerConfig::default_deadline`].
+    /// Index into [`ServerConfig::classes`] (the default, 0, is the
+    /// highest-priority class of the default two-class configuration).
+    pub class: usize,
+    /// Relative deadline; `None` falls back to the class's
+    /// `deadline_default`, then [`ServerConfig::default_deadline`].
     pub deadline: Option<Duration>,
 }
 
-impl Default for RequestOpts {
-    fn default() -> Self {
-        RequestOpts { priority: Priority::High, deadline: None }
+impl RequestOpts {
+    pub fn class(class: usize) -> RequestOpts {
+        RequestOpts { class, deadline: None }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> RequestOpts {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
 /// Traffic-frontend configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Admission-queue capacity, shared across both priority classes.
+    /// QoS classes, in priority/configuration order (requests address
+    /// them by index through [`RequestOpts::class`]).
+    pub classes: Vec<QosClass>,
+    /// **Deprecated** shared admission-queue capacity. With per-class
+    /// capacities on [`QosClass`] this shared knob is ambiguous; it is
+    /// kept only as the fallback a class with `capacity: 0` derives its
+    /// own cap from. Note the semantics shift under derivation: each
+    /// deriving class gets this value as its *own* cap, so per-class
+    /// shed/degrade thresholds match the old shared-queue behaviour
+    /// exactly, but the total buffered across N classes is now bounded
+    /// by `N * queue_capacity` rather than `queue_capacity` (the legacy
+    /// bound was shared across both priority queues). Deployments that
+    /// need a tight total memory bound should set `QosClass::capacity`
+    /// explicitly.
     pub queue_capacity: usize,
     pub policy: AdmissionPolicy,
     /// Dispatcher threads — also the in-flight bound on the wrapped
     /// execution service.
     pub dispatchers: usize,
-    /// Once the oldest low-priority request has waited this long it is
-    /// served before any high-priority work (starvation freedom).
+    /// Once the oldest request of a background (weight-0) class has
+    /// waited this long it is served before any weighted work
+    /// (starvation freedom for classes outside the fair-share
+    /// rotation).
     pub aging: Duration,
-    /// Deadline applied to requests that do not carry their own.
+    /// Deadline applied to requests that carry none of their own and
+    /// whose class has no `deadline_default`.
     pub default_deadline: Option<Duration>,
-    /// `Degrade` never truncates below this many points.
+    /// The degrade ladder never truncates below this many points
+    /// (radix/variant-aware floor: see
+    /// [`super::qos::DegradeLadder::for_radix`]).
     pub min_degraded_points: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
+            classes: default_two_class(),
             queue_capacity: 64,
             policy: AdmissionPolicy::Block,
             dispatchers: 4,
@@ -124,12 +160,15 @@ impl Default for ServerConfig {
 #[derive(Clone, Debug)]
 pub struct ServedFft {
     pub result: FftResult,
-    pub priority: Priority,
+    /// The QoS class this request was submitted under.
+    pub class: usize,
     /// Admission to dispatch, µs.
     pub queue_us: f64,
     /// Dispatch to backend completion, µs.
     pub service_us: f64,
-    /// Served at half resolution by the `Degrade` policy.
+    /// Resolution level the request was served at.
+    pub level: DegradeLevel,
+    /// Served at reduced resolution (`level != Full`).
     pub degraded: bool,
     /// Completed after its deadline (still delivered; counted as a
     /// late miss in [`ServerStats`]).
@@ -147,10 +186,10 @@ pub enum ServiceHandle {
 }
 
 impl ServiceHandle {
-    fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+    fn submit(&self, input: Vec<(f32, f32)>, level: DegradeLevel) -> Receiver<Result<FftResult>> {
         match self {
-            ServiceHandle::Pool(s) => s.submit(input),
-            ServiceHandle::Sharded(s) => s.submit(input),
+            ServiceHandle::Pool(s) => s.submit_degraded(input, level),
+            ServiceHandle::Sharded(s) => s.submit_degraded(input, level),
         }
     }
 
@@ -179,39 +218,47 @@ impl ServiceHandle {
     }
 }
 
-/// One admitted-but-not-yet-dispatched request.
+/// One admitted-but-not-yet-dispatched request (the scheduler core
+/// carries class, deadline and enqueue time).
 struct Pending {
     input: Vec<(f32, f32)>,
-    priority: Priority,
-    deadline: Option<Instant>,
-    degraded: bool,
-    enqueued: Instant,
+    /// Effective degrade level decided at admission (queue-driven level
+    /// merged with the controller's operating level, floor-clamped).
+    level: DegradeLevel,
     reply: Sender<ServerResult>,
 }
 
-#[derive(Default)]
 struct QueueState {
-    high: VecDeque<Pending>,
-    low: VecDeque<Pending>,
+    sched: QosScheduler<Pending>,
     closed: bool,
 }
 
-impl QueueState {
-    fn depth(&self) -> usize {
-        self.high.len() + self.low.len()
-    }
-}
-
-/// The shared admission queue: one mutex-guarded state, a condvar for
-/// dispatchers waiting for work and one for blocked submitters waiting
-/// for space.
+/// The shared admission queue: one mutex-guarded scheduler, a condvar
+/// for dispatchers waiting for work and one for blocked submitters
+/// waiting for space in their class.
 struct Admission {
     state: Mutex<QueueState>,
     work: Condvar,
     space: Condvar,
 }
 
+/// Per-class atomic counters behind [`ClassStats`].
 #[derive(Default)]
+struct ClassCounters {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    late: AtomicU64,
+    failed: AtomicU64,
+    degraded_half: AtomicU64,
+    degraded_quarter: AtomicU64,
+    aged: AtomicU64,
+    max_queue_depth: AtomicUsize,
+    queue_wait: LatencyRecorder,
+}
+
 struct ServerMetrics {
     submitted: AtomicU64,
     admitted: AtomicU64,
@@ -221,16 +268,64 @@ struct ServerMetrics {
     expired: AtomicU64,
     late: AtomicU64,
     failed: AtomicU64,
-    served_high: AtomicU64,
-    served_low: AtomicU64,
     aged: AtomicU64,
     max_queue_depth: AtomicUsize,
     queue_wait: LatencyRecorder,
     service_time: LatencyRecorder,
+    /// One counter block per QoS class, plus the metadata snapshots
+    /// need (name, weight, resolved capacity).
+    classes: Vec<(QosClass, usize, ClassCounters)>,
 }
 
 impl ServerMetrics {
+    fn new(classes: &[QosClass], caps: &[usize]) -> ServerMetrics {
+        ServerMetrics {
+            submitted: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            late: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            aged: AtomicU64::new(0),
+            max_queue_depth: AtomicUsize::new(0),
+            queue_wait: LatencyRecorder::default(),
+            service_time: LatencyRecorder::default(),
+            classes: classes
+                .iter()
+                .zip(caps)
+                .map(|(c, &cap)| (c.clone(), cap, ClassCounters::default()))
+                .collect(),
+        }
+    }
+
+    fn class(&self, c: usize) -> &ClassCounters {
+        &self.classes[c].2
+    }
+
     fn snapshot(&self) -> ServerStats {
+        let per_class: Vec<ClassStats> = self
+            .classes
+            .iter()
+            .map(|(meta, cap, c)| ClassStats {
+                name: meta.name.clone(),
+                weight: meta.weight,
+                capacity: *cap,
+                submitted: c.submitted.load(Ordering::Relaxed),
+                admitted: c.admitted.load(Ordering::Relaxed),
+                completed: c.completed.load(Ordering::Relaxed),
+                shed: c.shed.load(Ordering::Relaxed),
+                expired: c.expired.load(Ordering::Relaxed),
+                late: c.late.load(Ordering::Relaxed),
+                failed: c.failed.load(Ordering::Relaxed),
+                degraded_half: c.degraded_half.load(Ordering::Relaxed),
+                degraded_quarter: c.degraded_quarter.load(Ordering::Relaxed),
+                aged: c.aged.load(Ordering::Relaxed),
+                max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed),
+                queue_wait: c.queue_wait.snapshot(),
+            })
+            .collect();
         ServerStats {
             submitted: self.submitted.load(Ordering::Relaxed),
             admitted: self.admitted.load(Ordering::Relaxed),
@@ -240,33 +335,52 @@ impl ServerMetrics {
             expired: self.expired.load(Ordering::Relaxed),
             late: self.late.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
-            served_high: self.served_high.load(Ordering::Relaxed),
-            served_low: self.served_low.load(Ordering::Relaxed),
+            // legacy aggregates: class 0 vs the rest (exact for the
+            // default two-class configuration)
+            served_high: per_class.first().map(|c| c.completed).unwrap_or(0),
+            served_low: per_class.iter().skip(1).map(|c| c.completed).sum(),
             aged: self.aged.load(Ordering::Relaxed),
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
             queue_wait: self.queue_wait.snapshot(),
             service_time: self.service_time.snapshot(),
+            per_class,
         }
     }
 }
 
-/// Pop the next request to dispatch: the oldest low-priority request if
-/// it has aged past the threshold (counted as an aged promotion when it
-/// actually jumps waiting high-priority work), otherwise high before
-/// low.
-fn pop_next(st: &mut QueueState, aging: Duration, m: &ServerMetrics) -> Option<Pending> {
-    if let Some(front) = st.low.front() {
-        if front.enqueued.elapsed() >= aging {
-            if !st.high.is_empty() {
-                m.aged.fetch_add(1, Ordering::Relaxed);
-            }
-            return st.low.pop_front();
-        }
+/// A shared handle on the frontend's *operating* degrade level — the
+/// controller-driven lever. The level applies to every admitted
+/// request (merged with any queue-driven degradation by taking the
+/// deeper of the two, then floor-clamped), so a controller can halve
+/// per-request service cost across the board instead of adding a
+/// shard.
+#[derive(Clone)]
+pub struct DegradeControl {
+    level: Arc<AtomicU8>,
+}
+
+impl DegradeControl {
+    pub fn get(&self) -> DegradeLevel {
+        DegradeLevel::from_u8(self.level.load(Ordering::Relaxed))
     }
-    if let Some(r) = st.high.pop_front() {
-        return Some(r);
+
+    pub fn set(&self, level: DegradeLevel) {
+        self.level.store(level.as_u8(), Ordering::Relaxed);
     }
-    st.low.pop_front()
+
+    /// One step deeper, clamped at `max`; returns the new level.
+    pub fn deepen(&self, max: DegradeLevel) -> DegradeLevel {
+        let next = self.get().deeper().min(max);
+        self.set(next);
+        next
+    }
+
+    /// One step back toward full resolution; returns the new level.
+    pub fn restore(&self) -> DegradeLevel {
+        let next = self.get().shallower();
+        self.set(next);
+        next
+    }
 }
 
 /// One reading of the frontend's pressure signals, covering the
@@ -298,6 +412,9 @@ pub struct PressureSample {
     pub queue_p99_us: f64,
     /// Interval service-time p99, µs.
     pub service_p99_us: f64,
+    /// The controller-driven operating degrade level right now (a
+    /// gauge).
+    pub operating_level: DegradeLevel,
 }
 
 /// Computes [`PressureSample`]s as deltas between successive frontend
@@ -307,6 +424,7 @@ pub struct PressureSample {
 pub struct PressureMeter {
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
+    operating: Arc<AtomicU8>,
     last: ServerStats,
 }
 
@@ -316,7 +434,7 @@ impl PressureMeter {
     pub fn sample(&mut self) -> PressureSample {
         let cur = self.metrics.snapshot();
         let iv = cur.interval_since(&self.last);
-        let queue_depth = self.admission.state.lock().unwrap().depth();
+        let queue_depth = self.admission.state.lock().unwrap().sched.total_depth();
         let sample = PressureSample {
             at: Instant::now(),
             queue_depth,
@@ -328,17 +446,22 @@ impl PressureMeter {
             deadline_miss_rate: iv.deadline_miss_rate(),
             queue_p99_us: iv.queue_wait.percentile_us(0.99),
             service_p99_us: iv.service_time.percentile_us(0.99),
+            operating_level: DegradeLevel::from_u8(self.operating.load(Ordering::Relaxed)),
         };
         self.last = cur;
         sample
     }
 }
 
-/// The admission-controlled frontend over an FFT execution service.
+/// The admission-controlled QoS frontend over an FFT execution service.
 pub struct TrafficServer {
     cfg: ServerConfig,
+    /// Resolved per-class queue capacities.
+    caps: Vec<usize>,
+    ladder: DegradeLadder,
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
+    operating: Arc<AtomicU8>,
     inner: Option<Arc<ServiceHandle>>,
     dispatchers: Vec<JoinHandle<()>>,
     /// Periodic pressure-feed sampler threads (see `pressure_feed`).
@@ -347,33 +470,53 @@ pub struct TrafficServer {
 
 impl TrafficServer {
     pub fn start(inner: ServiceHandle, cfg: ServerConfig) -> Result<Self> {
-        if cfg.queue_capacity == 0 {
-            return Err(anyhow!("queue_capacity must be at least 1"));
+        if cfg.classes.is_empty() {
+            return Err(anyhow!("at least one QoS class is required"));
+        }
+        for (i, a) in cfg.classes.iter().enumerate() {
+            if cfg.classes[..i].iter().any(|b| b.name == a.name) {
+                return Err(anyhow!("duplicate QoS class name `{}`", a.name));
+            }
+        }
+        let caps = resolve_capacities(&cfg.classes, cfg.queue_capacity);
+        if let Some(i) = caps.iter().position(|&c| c == 0) {
+            return Err(anyhow!(
+                "class `{}` has no queue capacity: set QosClass::capacity or the \
+                 (deprecated) shared ServerConfig::queue_capacity",
+                cfg.classes[i].name
+            ));
         }
         if cfg.dispatchers == 0 {
             return Err(anyhow!("need at least one dispatcher"));
         }
+        let ladder = DegradeLadder { min_points: cfg.min_degraded_points };
         let admission = Arc::new(Admission {
-            state: Mutex::new(QueueState::default()),
+            state: Mutex::new(QueueState {
+                sched: QosScheduler::new(cfg.classes.clone(), caps.clone(), cfg.aging),
+                closed: false,
+            }),
             work: Condvar::new(),
             space: Condvar::new(),
         });
-        let metrics = Arc::new(ServerMetrics::default());
+        let metrics = Arc::new(ServerMetrics::new(&cfg.classes, &caps));
+        let operating = Arc::new(AtomicU8::new(DegradeLevel::Full.as_u8()));
         let inner = Arc::new(inner);
         let mut dispatchers = Vec::with_capacity(cfg.dispatchers);
         for _ in 0..cfg.dispatchers {
             let admission = Arc::clone(&admission);
             let metrics = Arc::clone(&metrics);
             let inner = Arc::clone(&inner);
-            let aging = cfg.aging;
             dispatchers.push(std::thread::spawn(move || {
-                dispatcher_loop(admission, metrics, inner, aging)
+                dispatcher_loop(admission, metrics, inner)
             }));
         }
         Ok(TrafficServer {
             cfg,
+            caps,
+            ladder,
             admission,
             metrics,
+            operating,
             inner: Some(inner),
             dispatchers,
             samplers: Mutex::new(Vec::new()),
@@ -389,12 +532,18 @@ impl TrafficServer {
         Arc::clone(self.inner.as_ref().expect("inner service present until shutdown"))
     }
 
+    /// The controller-facing handle on the operating degrade level.
+    pub fn degrade_control(&self) -> DegradeControl {
+        DegradeControl { level: Arc::clone(&self.operating) }
+    }
+
     /// A fresh pressure meter over this server's frontend counters
     /// (first `sample()` covers everything since server start).
     pub fn pressure_meter(&self) -> PressureMeter {
         PressureMeter {
             admission: Arc::clone(&self.admission),
             metrics: Arc::clone(&self.metrics),
+            operating: Arc::clone(&self.operating),
             last: ServerStats::default(),
         }
     }
@@ -423,63 +572,82 @@ impl TrafficServer {
 
     /// Submit one FFT through admission control. Returns the reply
     /// channel on admission, or a typed error when the request is shed
-    /// (`Shed`/`Degrade` at the hard limit) or the server is shut down.
-    /// Every admitted request is answered — with a [`ServedFft`] or a
-    /// typed [`ServiceError`] — never silently dropped.
+    /// (`Shed`/`Degrade` at the hard class limit), names an unknown
+    /// class, or the server is shut down. Every admitted request is
+    /// answered — with a [`ServedFft`] or a typed [`ServiceError`] —
+    /// never silently dropped.
     pub fn submit(
         &self,
         input: Vec<(f32, f32)>,
         opts: RequestOpts,
     ) -> std::result::Result<Receiver<ServerResult>, ServiceError> {
+        let class = opts.class;
+        if class >= self.cfg.classes.len() {
+            return Err(ServiceError::UnknownClass { class });
+        }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.class(class).submitted.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
-        let deadline = opts.deadline.or(self.cfg.default_deadline).map(|d| now + d);
+        let deadline = opts
+            .deadline
+            .or(self.cfg.classes[class].deadline_default)
+            .or(self.cfg.default_deadline)
+            .map(|d| now + d);
         let mut st = self.admission.state.lock().unwrap();
-        let degraded = loop {
+        let level = loop {
             if st.closed {
                 return Err(ServiceError::WorkerGone);
             }
-            let depth = st.depth();
-            if depth < self.cfg.queue_capacity {
-                // Degrade kicks in at half capacity: coarser answers
-                // under pressure, full resolution when the queue is
-                // healthy.
-                break self.cfg.policy == AdmissionPolicy::Degrade
-                    && depth >= self.cfg.queue_capacity / 2
-                    && input.len() / 2 >= self.cfg.min_degraded_points;
+            let depth = st.sched.depth(class);
+            let cap = self.caps[class];
+            if depth < cap {
+                // Queue-driven ladder (Degrade policy only): Half at
+                // half the class capacity, Quarter at three quarters —
+                // coarser answers as this class's pressure builds, full
+                // resolution when its queue is healthy.
+                let queue_level = if self.cfg.policy == AdmissionPolicy::Degrade {
+                    if depth >= (3 * cap) / 4 {
+                        DegradeLevel::Quarter
+                    } else if depth >= cap / 2 {
+                        DegradeLevel::Half
+                    } else {
+                        DegradeLevel::Full
+                    }
+                } else {
+                    DegradeLevel::Full
+                };
+                let operating = DegradeLevel::from_u8(self.operating.load(Ordering::Relaxed));
+                break self.ladder.clamp(queue_level.max(operating), input.len());
             }
             match self.cfg.policy {
                 AdmissionPolicy::Block => st = self.admission.space.wait(st).unwrap(),
                 AdmissionPolicy::Shed | AdmissionPolicy::Degrade => {
                     self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                    return Err(ServiceError::QueueFull { capacity: self.cfg.queue_capacity });
+                    self.metrics.class(class).shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServiceError::QueueFull { capacity: cap });
                 }
             }
         };
         let (reply, rx) = channel();
-        let req = Pending {
-            input,
-            priority: opts.priority,
-            deadline,
-            degraded,
-            enqueued: now,
-            reply,
-        };
-        match opts.priority {
-            Priority::High => st.high.push_back(req),
-            Priority::Low => st.low.push_back(req),
-        }
-        let depth = st.depth();
+        st.sched
+            .try_enqueue(class, deadline, now, Pending { input, level, reply })
+            .expect("capacity checked under the same lock");
+        let class_depth = st.sched.depth(class);
+        let depth = st.sched.total_depth();
         drop(st);
         self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+        let cc = self.metrics.class(class);
+        cc.admitted.fetch_add(1, Ordering::Relaxed);
+        cc.max_queue_depth.fetch_max(class_depth, Ordering::Relaxed);
         self.admission.work.notify_one();
         Ok(rx)
     }
 
-    /// Queued (admitted, not yet dispatched) requests right now.
+    /// Queued (admitted, not yet dispatched) requests right now, all
+    /// classes.
     pub fn queue_depth(&self) -> usize {
-        self.admission.state.lock().unwrap().depth()
+        self.admission.state.lock().unwrap().sched.total_depth()
     }
 
     /// Execution-layer metrics with the frontend counters merged in
@@ -496,6 +664,12 @@ impl TrafficServer {
 
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// Resolved per-class queue capacities (explicit, or derived from
+    /// the deprecated shared `queue_capacity`).
+    pub fn class_capacities(&self) -> &[usize] {
+        &self.caps
     }
 
     /// Close admission, drain every admitted request (each is served or
@@ -541,14 +715,13 @@ fn dispatcher_loop(
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
     inner: Arc<ServiceHandle>,
-    aging: Duration,
 ) {
     loop {
-        let req = {
+        let popped = {
             let mut st = admission.state.lock().unwrap();
             loop {
-                if let Some(r) = pop_next(&mut st, aging, &metrics) {
-                    break Some(r);
+                if let Some(p) = st.sched.pop(Instant::now()) {
+                    break Some(p);
                 }
                 if st.closed {
                     break None;
@@ -556,28 +729,46 @@ fn dispatcher_loop(
                 st = admission.work.wait(st).unwrap();
             }
         };
-        let Some(mut req) = req else { return };
-        admission.space.notify_one();
+        let Some(popped) = popped else { return };
+        // Per-class caps mean a freed slot only helps submitters of
+        // this class; wake them all so the right one rechecks.
+        admission.space.notify_all();
+        let class = popped.item.class;
+        let cc = metrics.class(class);
+        if popped.aged {
+            metrics.aged.fetch_add(1, Ordering::Relaxed);
+            cc.aged.fetch_add(1, Ordering::Relaxed);
+        }
 
-        let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+        let queue_us = popped.item.enqueued.elapsed().as_secs_f64() * 1e6;
         metrics.queue_wait.record(queue_us);
-        if let Some(d) = req.deadline {
+        cc.queue_wait.record(queue_us);
+        let deadline = popped.item.deadline;
+        let req = popped.item.payload;
+        if let Some(d) = deadline {
             if Instant::now() > d {
                 metrics.expired.fetch_add(1, Ordering::Relaxed);
+                cc.expired.fetch_add(1, Ordering::Relaxed);
                 let _ = req
                     .reply
                     .send(Err(ServiceError::DeadlineExceeded { waited_us: queue_us }));
                 continue;
             }
         }
-        if req.degraded {
-            let half = req.input.len() / 2;
-            req.input.truncate(half);
-            metrics.degraded.fetch_add(1, Ordering::Relaxed);
+        match req.level {
+            DegradeLevel::Full => {}
+            DegradeLevel::Half => {
+                metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                cc.degraded_half.fetch_add(1, Ordering::Relaxed);
+            }
+            DegradeLevel::Quarter => {
+                metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                cc.degraded_quarter.fetch_add(1, Ordering::Relaxed);
+            }
         }
 
         let t0 = Instant::now();
-        let backend = inner.submit(req.input).recv();
+        let backend = inner.submit(req.input, req.level).recv();
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
         metrics.service_time.record(service_us);
 
@@ -591,26 +782,26 @@ fn dispatcher_loop(
         };
         match outcome {
             Ok(result) => {
-                let deadline_missed = req.deadline.is_some_and(|d| Instant::now() > d);
+                let deadline_missed = deadline.is_some_and(|d| Instant::now() > d);
                 if deadline_missed {
                     metrics.late.fetch_add(1, Ordering::Relaxed);
+                    cc.late.fetch_add(1, Ordering::Relaxed);
                 }
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
-                match req.priority {
-                    Priority::High => metrics.served_high.fetch_add(1, Ordering::Relaxed),
-                    Priority::Low => metrics.served_low.fetch_add(1, Ordering::Relaxed),
-                };
+                cc.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Ok(ServedFft {
                     result,
-                    priority: req.priority,
+                    class,
                     queue_us,
                     service_us,
-                    degraded: req.degraded,
+                    level: req.level,
+                    degraded: req.level != DegradeLevel::Full,
                     deadline_missed,
                 }));
             }
             Err(e) => {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
+                cc.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(e));
             }
         }
@@ -622,55 +813,24 @@ mod tests {
     use super::*;
     use crate::coordinator::ServiceConfig;
 
-    fn pending(priority: Priority, age: Duration) -> Pending {
-        let (reply, _rx) = channel();
-        Pending {
-            input: Vec::new(),
-            priority,
-            deadline: None,
-            degraded: false,
-            enqueued: Instant::now() - age,
-            reply,
-        }
-    }
-
     #[test]
-    fn pop_prefers_high_until_low_ages() {
-        let m = ServerMetrics::default();
-        let mut st = QueueState::default();
-        st.high.push_back(pending(Priority::High, Duration::ZERO));
-        st.low.push_back(pending(Priority::Low, Duration::ZERO));
-        let first = pop_next(&mut st, Duration::from_secs(3600), &m).unwrap();
-        assert_eq!(first.priority, Priority::High);
-        assert_eq!(m.aged.load(Ordering::Relaxed), 0);
-        let second = pop_next(&mut st, Duration::from_secs(3600), &m).unwrap();
-        assert_eq!(second.priority, Priority::Low, "low still drains when high is empty");
-        assert_eq!(m.aged.load(Ordering::Relaxed), 0, "no promotion without waiting high work");
-    }
-
-    #[test]
-    fn aged_low_jumps_waiting_high_work() {
-        let m = ServerMetrics::default();
-        let mut st = QueueState::default();
-        st.high.push_back(pending(Priority::High, Duration::ZERO));
-        st.low.push_back(pending(Priority::Low, Duration::from_secs(5)));
-        let first = pop_next(&mut st, Duration::from_millis(1), &m).unwrap();
-        assert_eq!(first.priority, Priority::Low);
-        assert_eq!(m.aged.load(Ordering::Relaxed), 1);
-        assert_eq!(st.high.len(), 1);
-    }
-
-    #[test]
-    fn pressure_meter_reports_interval_deltas() {
-        let m = Arc::new(ServerMetrics::default());
+    fn pressure_meter_reports_interval_deltas_and_level() {
+        let classes = default_two_class();
+        let caps = vec![64, 64];
+        let m = Arc::new(ServerMetrics::new(&classes, &caps));
         let adm = Arc::new(Admission {
-            state: Mutex::new(QueueState::default()),
+            state: Mutex::new(QueueState {
+                sched: QosScheduler::new(classes, caps, Duration::from_millis(10)),
+                closed: false,
+            }),
             work: Condvar::new(),
             space: Condvar::new(),
         });
+        let operating = Arc::new(AtomicU8::new(DegradeLevel::Full.as_u8()));
         let mut meter = PressureMeter {
             admission: Arc::clone(&adm),
             metrics: Arc::clone(&m),
+            operating: Arc::clone(&operating),
             last: ServerStats::default(),
         };
         m.submitted.fetch_add(10, Ordering::Relaxed);
@@ -679,15 +839,49 @@ mod tests {
         assert_eq!(s1.submitted, 10);
         assert_eq!(s1.shed, 5);
         assert!((s1.shed_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s1.operating_level, DegradeLevel::Full);
         // no new traffic: the next interval is clean, not cumulative
         let s2 = meter.sample();
         assert_eq!(s2.submitted, 0);
         assert_eq!(s2.shed_rate, 0.0);
+        operating.store(DegradeLevel::Half.as_u8(), Ordering::Relaxed);
         m.submitted.fetch_add(4, Ordering::Relaxed);
         let s3 = meter.sample();
         assert_eq!(s3.submitted, 4);
         assert_eq!(s3.shed, 0);
         assert_eq!(s3.queue_depth, 0);
+        assert_eq!(s3.operating_level, DegradeLevel::Half);
+    }
+
+    #[test]
+    fn per_class_snapshot_carries_meta_and_legacy_aggregates() {
+        let classes = vec![QosClass::new("gold", 5), QosClass::new("bg", 0)];
+        let m = ServerMetrics::new(&classes, &[8, 16]);
+        m.class(0).completed.fetch_add(3, Ordering::Relaxed);
+        m.class(1).completed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.per_class.len(), 2);
+        assert_eq!(s.per_class[0].name, "gold");
+        assert_eq!(s.per_class[0].weight, 5);
+        assert_eq!(s.per_class[0].capacity, 8);
+        assert_eq!(s.per_class[1].capacity, 16);
+        assert_eq!(s.served_high, 3, "legacy aggregate = class 0");
+        assert_eq!(s.served_low, 2, "legacy aggregate = the rest");
+    }
+
+    #[test]
+    fn degrade_control_walks_the_ladder() {
+        let ctl = DegradeControl { level: Arc::new(AtomicU8::new(0)) };
+        assert_eq!(ctl.get(), DegradeLevel::Full);
+        assert_eq!(ctl.deepen(DegradeLevel::Quarter), DegradeLevel::Half);
+        assert_eq!(ctl.deepen(DegradeLevel::Quarter), DegradeLevel::Quarter);
+        assert_eq!(ctl.deepen(DegradeLevel::Quarter), DegradeLevel::Quarter, "saturates");
+        assert_eq!(ctl.restore(), DegradeLevel::Half);
+        assert_eq!(ctl.restore(), DegradeLevel::Full);
+        assert_eq!(ctl.restore(), DegradeLevel::Full, "saturates at Full");
+        ctl.set(DegradeLevel::Full);
+        assert_eq!(ctl.deepen(DegradeLevel::Half), DegradeLevel::Half);
+        assert_eq!(ctl.deepen(DegradeLevel::Half), DegradeLevel::Half, "max clamps");
     }
 
     #[test]
@@ -697,6 +891,7 @@ mod tests {
                 FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap(),
             )
         };
+        // underivable capacity (legacy shared cap 0, class caps unset)
         assert!(TrafficServer::start(
             pool(),
             ServerConfig { queue_capacity: 0, ..Default::default() }
@@ -707,5 +902,45 @@ mod tests {
             ServerConfig { dispatchers: 0, ..Default::default() }
         )
         .is_err());
+        assert!(TrafficServer::start(
+            pool(),
+            ServerConfig { classes: Vec::new(), ..Default::default() }
+        )
+        .is_err());
+        assert!(TrafficServer::start(
+            pool(),
+            ServerConfig {
+                classes: vec![QosClass::new("a", 1), QosClass::new("a", 2)],
+                ..Default::default()
+            }
+        )
+        .is_err());
+        // explicit class caps make the shared capacity irrelevant
+        assert!(TrafficServer::start(
+            pool(),
+            ServerConfig {
+                classes: vec![QosClass::new("only", 1).with_capacity(4)],
+                queue_capacity: 0,
+                ..Default::default()
+            }
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn unknown_class_is_a_typed_error() {
+        let server = TrafficServer::start(
+            ServiceHandle::Pool(
+                FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap(),
+            ),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        match server.submit(vec![(0.0, 0.0); 256], RequestOpts::class(9)) {
+            Err(ServiceError::UnknownClass { class }) => assert_eq!(class, 9),
+            other => panic!("want UnknownClass, got {:?}", other.map(|_| ())),
+        }
+        assert_eq!(server.metrics().server.submitted, 0, "not counted as traffic");
+        server.shutdown();
     }
 }

@@ -412,11 +412,25 @@ impl ShardedFftService {
 
     /// Submit one FFT; the returned channel yields the result.
     pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        self.submit_degraded(input, super::qos::DegradeLevel::Full)
+    }
+
+    /// [`ShardedFftService::submit`] with a QoS degrade level threaded
+    /// through dispatch: affinity routing, queue weights and the
+    /// serving shard's resident executor all see the truncated (served)
+    /// size, so a degraded request lands on the home shard of the size
+    /// it actually runs at.
+    pub fn submit_degraded(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: super::qos::DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Job {
             kind: JobKind::Single { id, input, reply: reply_tx },
             submitted: Instant::now(),
+            level,
         };
         let points = job.points();
         let rt = self.routing.read().unwrap();
@@ -472,6 +486,7 @@ impl ShardedFftService {
                             reply: reply_tx,
                         },
                         submitted: Instant::now(),
+                        level: super::qos::DegradeLevel::Full,
                     };
                     // The first chunk follows normal affinity routing;
                     // the rest of a split group go straight to the
@@ -575,6 +590,33 @@ impl ShardedFftService {
     /// Drain and stop all shard workers.
     pub fn shutdown(mut self) {
         self.stop_all();
+    }
+
+    /// Measured serving capacity of a fresh single-shard simulator pool
+    /// for `points`-sized jobs on this host, jobs/s: warm 8 jobs (plan
+    /// build + resident executor), then time 32. This is the shared
+    /// calibration anchor for the load benches and integration tests,
+    /// so "N× one shard's capacity" means the same thing in every file
+    /// (and stays meaningful across fast and slow runners).
+    pub fn calibrate_single_shard_rps(points: usize) -> Result<f64> {
+        let svc = ShardedFftService::start(ShardPoolConfig {
+            shards: 1,
+            steal_threshold: 0,
+            service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+            ..Default::default()
+        })?;
+        let signal = |seed: u64| -> Vec<(f32, f32)> {
+            crate::fft::reference::test_signal(points, seed)
+                .iter()
+                .map(|c| c.to_f32_pair())
+                .collect()
+        };
+        svc.run_batch((0..8).map(signal).collect())?;
+        let t0 = Instant::now();
+        svc.run_batch((0..32).map(signal).collect())?;
+        let rps = 32.0 / t0.elapsed().as_secs_f64();
+        svc.shutdown();
+        Ok(rps)
     }
 }
 
@@ -736,6 +778,26 @@ mod tests {
         assert_eq!(split_group(&small, 8, 4).len(), 1, "below min_chunk stays whole");
         let rejoined: Vec<usize> = chunks.into_iter().flatten().collect();
         assert_eq!(rejoined, idxs, "chunking preserves order");
+    }
+
+    #[test]
+    fn degraded_submit_routes_and_serves_at_the_truncated_size() {
+        use crate::coordinator::qos::DegradeLevel;
+        let svc = pool(2, 2);
+        let r = svc
+            .submit_degraded(signal(1024, 5), DegradeLevel::Half)
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.output.len(), 512, "half resolution of a 1024-point request");
+        // bitwise identical to submitting the truncated signal directly
+        let direct = svc.submit(signal(1024, 5)[..512].to_vec()).recv().unwrap().unwrap();
+        assert_eq!(
+            r.output.iter().map(|&(a, b)| (a.to_bits(), b.to_bits())).collect::<Vec<_>>(),
+            direct.output.iter().map(|&(a, b)| (a.to_bits(), b.to_bits())).collect::<Vec<_>>(),
+            "degrade changes dispatch, never numerics"
+        );
+        svc.shutdown();
     }
 
     #[test]

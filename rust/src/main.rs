@@ -10,8 +10,8 @@ use anyhow::{anyhow, bail, Result};
 use egpu_fft::arch::{SmConfig, Variant};
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
-    ShardedFftService, TrafficServer,
+    DegradeLevel, FftService, LoadgenConfig, QosClass, RequestOpts, ServerConfig, ServiceConfig,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::{self, reference};
 use egpu_fft::report;
@@ -48,8 +48,18 @@ USAGE:
                                       0 = one shard per hardware thread;
                                       --shards replaces --cores — each
                                       shard runs one resident-SM worker)
+  egpu-fft serve --qos-classes NAME:W[:CAP[:DL_MS]],...
+                 [--requests N] [--points P] [--shards N]
+                 [--policy block|shed|degrade]
+                                     multi-class QoS frontend demo:
+                                     submit N requests round-robin over
+                                     the configured classes through the
+                                     WFQ/EDF scheduler and print the
+                                     per-class serve shares (weight 0 =
+                                     background class, aging-protected)
   egpu-fft serve --autoscale [--min-shards A] [--max-shards B]
                  [--target-p99-ms X] [--max-shed-rate F]
+                 [--degrade half|quarter]
                  [--rate R] [--duration S] [--queue-capacity N]
                                      elastic serving demo: an SLO-driven
                                      controller grows/shrinks the shard
@@ -58,17 +68,22 @@ USAGE:
                                      load step (rate R, then 2R) runs;
                                      prints scale events, shards over
                                      time, and before/after shed rates
+                                     (--degrade arms the resolution
+                                      ladder: bursts are served coarser
+                                      before any shard is added)
   egpu-fft loadtest [--pattern poisson|burst] [--rate R] [--duration S]
                  [--policy block|shed|degrade] [--queue-capacity N]
+                 [--qos-classes NAME:W[:CAP[:DL_MS]],...]
+                 [--class-mix F0,F1,...]
                  [--shards N] [--dispatchers N] [--sizes 256,1024,...]
                  [--deadline-ms D] [--aging-ms A] [--high-frac F]
                  [--burst N] [--seed S] [--json [PATH]]
                                      open-loop load test through the
-                                     admission-controlled traffic
-                                     frontend: offered vs achieved
-                                     throughput, shed rate, deadline
-                                     miss rate, and queue-wait /
-                                     service-time tail latencies
+                                     admission-controlled QoS frontend:
+                                     offered vs achieved throughput,
+                                     shed rate, deadline miss rate,
+                                     queue-wait / service-time tails,
+                                     and a per-class breakdown
                                      (--json alone prints the JSON
                                       report to stdout; --json PATH
                                       writes it to a file)
@@ -92,6 +107,40 @@ fn parse_variant(s: &str) -> Result<Variant> {
 fn parse_sizes(s: &str) -> Result<Vec<usize>> {
     s.split(',')
         .map(|p| p.trim().parse::<usize>().map_err(|e| anyhow!("bad size `{p}`: {e}")))
+        .collect()
+}
+
+/// `NAME:WEIGHT[:CAPACITY[:DEADLINE_MS]],...` — e.g.
+/// `gold:5:64:25,silver:3:64,bg:0`.
+fn parse_qos_classes(s: &str) -> Result<Vec<QosClass>> {
+    s.split(',')
+        .map(|spec| {
+            let parts: Vec<&str> = spec.trim().split(':').collect();
+            if parts.len() < 2 || parts.len() > 4 || parts[0].is_empty() {
+                bail!("bad class spec `{spec}` (NAME:WEIGHT[:CAPACITY[:DEADLINE_MS]])");
+            }
+            if !parts[0].chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                bail!("class name `{}` must be alphanumeric/_/- only", parts[0]);
+            }
+            let weight: u32 = parts[1].parse().map_err(|e| anyhow!("bad weight in `{spec}`: {e}"))?;
+            let mut class = QosClass::new(parts[0], weight);
+            if let Some(cap) = parts.get(2) {
+                class.capacity = cap.parse().map_err(|e| anyhow!("bad capacity in `{spec}`: {e}"))?;
+            }
+            if let Some(dl) = parts.get(3) {
+                let ms: f64 = dl.parse().map_err(|e| anyhow!("bad deadline in `{spec}`: {e}"))?;
+                if ms > 0.0 {
+                    class.deadline_default = Some(Duration::from_secs_f64(ms / 1e3));
+                }
+            }
+            Ok(class)
+        })
+        .collect()
+}
+
+fn parse_mix(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|p| p.trim().parse::<f64>().map_err(|e| anyhow!("bad mix fraction `{p}`: {e}")))
         .collect()
 }
 
@@ -230,6 +279,9 @@ fn run() -> Result<()> {
             if f.contains_key("autoscale") {
                 return serve_autoscale(&f);
             }
+            if f.contains_key("qos-classes") {
+                return serve_qos(&f);
+            }
             let cores: usize = f.get("cores").map(|s| s.parse()).transpose()?.unwrap_or(4);
             let requests: usize =
                 f.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(64);
@@ -351,22 +403,40 @@ fn run() -> Result<()> {
             let dispatchers: usize =
                 f.get("dispatchers").map(|s| s.parse()).transpose()?.unwrap_or(4);
             let shards: usize = f.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let classes = f.get("qos-classes").map(|s| parse_qos_classes(s)).transpose()?;
+            let class_mix = f
+                .get("class-mix")
+                .map(|s| parse_mix(s))
+                .transpose()?
+                .unwrap_or_default();
+            // an explicit mix without explicit classes gets one
+            // equal-weight class per fraction
+            let classes = match classes {
+                Some(c) => Some(c),
+                None if !class_mix.is_empty() => Some(
+                    (0..class_mix.len())
+                        .map(|i| QosClass::new(&format!("class{i}"), 1))
+                        .collect(),
+                ),
+                None => None,
+            };
 
             let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
                 shards,
                 service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
                 ..Default::default()
             })?);
-            let server = TrafficServer::start(
-                inner,
-                ServerConfig {
-                    queue_capacity,
-                    policy,
-                    dispatchers,
-                    aging: Duration::from_secs_f64(aging_ms / 1e3),
-                    ..Default::default()
-                },
-            )?;
+            let mut server_cfg = ServerConfig {
+                queue_capacity,
+                policy,
+                dispatchers,
+                aging: Duration::from_secs_f64(aging_ms / 1e3),
+                ..Default::default()
+            };
+            if let Some(classes) = classes {
+                server_cfg.classes = classes;
+            }
+            let server = TrafficServer::start(inner, server_cfg)?;
             let cfg = LoadgenConfig {
                 pattern,
                 rate_hz: rate,
@@ -374,6 +444,7 @@ fn run() -> Result<()> {
                 burst_size: burst,
                 sizes,
                 high_fraction: high_frac,
+                class_mix,
                 deadline: (deadline_ms > 0.0)
                     .then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
                 seed,
@@ -401,11 +472,58 @@ fn run() -> Result<()> {
     }
 }
 
+/// `serve --qos-classes`: a multi-class QoS frontend demo. Submits
+/// `--requests` FFTs round-robin across the configured classes through
+/// the WFQ/EDF scheduler and prints the per-class serve shares.
+fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
+    let classes = parse_qos_classes(
+        f.get("qos-classes").expect("dispatched on the flag's presence"),
+    )?;
+    let requests: usize = f.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(96);
+    let points: usize = f.get("points").map(|s| s.parse()).transpose()?.unwrap_or(1024);
+    let shards: usize = f.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let policy = match f.get("policy").map(String::as_str).unwrap_or("shed") {
+        "block" => AdmissionPolicy::Block,
+        "shed" => AdmissionPolicy::Shed,
+        "degrade" => AdmissionPolicy::Degrade,
+        p => bail!("unknown policy `{p}` (block|shed|degrade)"),
+    };
+    let n_classes = classes.len();
+    let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+        shards,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })?);
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig { classes, policy, queue_capacity: 256, ..Default::default() },
+    )?;
+    let input: Vec<(f32, f32)> =
+        reference::test_signal(points, 11).iter().map(|c| c.to_f32_pair()).collect();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .filter_map(|i| server.submit(input.clone(), RequestOpts::class(i % n_classes)).ok())
+        .collect();
+    let served = handles.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+    let wall = t0.elapsed();
+    println!(
+        "qos serve: {served}/{requests} fft{points} requests over {n_classes} classes \
+         in {:.1} ms ({:.0} req/s)",
+        wall.as_secs_f64() * 1e3,
+        served as f64 / wall.as_secs_f64()
+    );
+    print!("{}", server.metrics().render());
+    server.shutdown();
+    Ok(())
+}
+
 /// `serve --autoscale`: an elastic-serving demo. Starts the sharded
 /// service at `--min-shards`, wraps it in the admission-controlled
 /// frontend, and lets the SLO-driven controller resize the pool while
 /// an open-loop load step runs (`--rate` for the first half of
-/// `--duration`, doubled for the second half).
+/// `--duration`, doubled for the second half). `--degrade half|quarter`
+/// arms the resolution ladder: the controller serves bursts coarser
+/// before reaching for a shard.
 fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
     let min_shards: usize = f.get("min-shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let max_shards: usize = f.get("max-shards").map(|s| s.parse()).transpose()?.unwrap_or(8);
@@ -439,11 +557,17 @@ fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
             ..Default::default()
         },
     )?;
+    let max_degrade: DegradeLevel = f
+        .get("degrade")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(DegradeLevel::Full);
     let policy = AutoscalePolicy {
         min_shards,
         max_shards,
         target_p99_ms,
         max_shed_rate,
+        max_degrade,
         ..Default::default()
     };
     let controller = AutoscaleController::spawn(&server, policy)?;

@@ -11,7 +11,7 @@
 //! single-shard capacity so the step means the same thing on fast and
 //! slow runners.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, FftService,
@@ -41,15 +41,10 @@ fn sharded(shards: usize) -> ShardedFftService {
     .unwrap()
 }
 
-/// Measured single-shard fft1024 serving capacity, jobs/s.
+/// Measured single-shard fft1024 serving capacity, jobs/s (shared
+/// library helper — the same anchor the benches calibrate with).
 fn single_shard_rps() -> f64 {
-    let svc = sharded(1);
-    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
-    let t0 = Instant::now();
-    svc.run_batch((0..32).map(|i| signal(1024, i)).collect()).unwrap();
-    let rps = 32.0 / t0.elapsed().as_secs_f64();
-    svc.shutdown();
-    rps
+    ShardedFftService::calibrate_single_shard_rps(1024).unwrap()
 }
 
 /// (a) A step overload onto a one-shard pool: the controller must grow

@@ -1,8 +1,18 @@
 //! Property-based tests (hand-rolled xorshift generator — proptest is
 //! not in the offline vendor tree). Each property runs a few hundred
 //! random cases; failures print the seed for reproduction.
+//!
+//! The QoS properties at the bottom drive the thread-free scheduler
+//! core (`coordinator::qos::QosScheduler`) with injected clocks, so
+//! WFQ share conformance, EDF ordering, the N-class aging bound and
+//! the degrade ladder's floor/numerics are checked deterministically —
+//! no timing, no sleeps.
+
+use std::time::{Duration, Instant};
 
 use egpu_fft::arch::{SmConfig, Variant};
+use egpu_fft::coordinator::{DegradeLadder, DegradeLevel, QosClass, QosScheduler};
+use egpu_fft::coordinator::{FftService, ServiceConfig};
 use egpu_fft::fft::sched::schedule;
 use egpu_fft::fft::twiddle::{classify, twiddle, TwiddleKind};
 use egpu_fft::fft::FftPlan;
@@ -245,6 +255,211 @@ fn twiddle_classification_faithful() {
             );
         }
     }
+}
+
+fn qos_sched(weights: &[u32], cap: usize, aging: Duration) -> QosScheduler<u64> {
+    let classes: Vec<QosClass> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| QosClass::new(&format!("c{i}"), w))
+        .collect();
+    let caps = vec![cap; weights.len()];
+    QosScheduler::new(classes, caps, aging)
+}
+
+/// PROPERTY (a): WFQ share conformance — under sustained saturation of
+/// every class, each positive-weight class's served fraction is within
+/// ε of weight/Σweights, for random weight vectors.
+#[test]
+fn qos_wfq_shares_converge_to_weight_fractions() {
+    for case in 0..60u64 {
+        let mut rng = Rng::new(0x0F51 + case);
+        let n = 2 + (rng.below(4) as usize); // 2..=5 classes
+        let weights: Vec<u32> = (0..n).map(|_| 1 + rng.below(6) as u32).collect();
+        let mut s = qos_sched(&weights, 64, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        let pops = 1200u64;
+        let mut served = vec![0u64; n];
+        for i in 0..pops {
+            // keep every queue saturated: the property is about shares
+            // under load, not arrival luck
+            for c in 0..n {
+                while s.depth(c) < 8 {
+                    s.try_enqueue(c, None, t0, i).unwrap();
+                }
+            }
+            let p = s.pop(t0).expect("saturated scheduler always pops");
+            served[p.item.class] += 1;
+        }
+        let total_w: u32 = weights.iter().sum();
+        for (c, &w) in weights.iter().enumerate() {
+            let frac = served[c] as f64 / pops as f64;
+            let want = w as f64 / total_w as f64;
+            // DRR is exact to within one rotation of Σweights pops
+            let eps = (total_w as f64 / pops as f64).max(0.02);
+            assert!(
+                (frac - want).abs() <= eps,
+                "case {case}: class {c} share {frac:.4} vs {want:.4} (weights {weights:?})"
+            );
+        }
+    }
+}
+
+/// PROPERTY (b): EDF ordering — within a class, no request is
+/// dispatched while a queued peer of the same class holds an earlier
+/// absolute deadline, across random interleavings of enqueues and pops.
+#[test]
+fn qos_edf_never_dispatches_past_an_earlier_deadline_peer() {
+    for case in 0..120u64 {
+        let mut rng = Rng::new(0xEDF0 + case);
+        let n = 1 + (rng.below(3) as usize);
+        let mut weights: Vec<u32> = (0..n).map(|_| rng.below(3) as u32).collect();
+        if weights.iter().all(|&w| w == 0) {
+            // at least one weighted class so DRR has a rotation
+            weights = vec![1; n];
+        }
+        let mut s = qos_sched(&weights, 256, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        // shadow copy of queued deadlines per class, keyed by seq
+        let mut queued: Vec<Vec<(u64, Option<Instant>)>> = vec![Vec::new(); n];
+        for step in 0..400u64 {
+            if rng.below(3) < 2 {
+                let c = (rng.below(n as u64)) as usize;
+                let deadline = if rng.below(4) == 0 {
+                    None
+                } else {
+                    Some(t0 + Duration::from_micros(rng.below(10_000)))
+                };
+                if let Ok(seq) = s.try_enqueue(c, deadline, t0, step) {
+                    queued[c].push((seq, deadline));
+                }
+            } else if let Some(p) = s.pop(t0) {
+                let c = p.item.class;
+                let pos = queued[c]
+                    .iter()
+                    .position(|&(seq, _)| seq == p.item.seq)
+                    .expect("popped item was queued");
+                let (_, deadline) = queued[c].swap_remove(pos);
+                if let Some(d) = deadline {
+                    for &(seq, peer) in &queued[c] {
+                        if let Some(pd) = peer {
+                            assert!(
+                                pd >= d,
+                                "case {case} step {step}: dispatched deadline {d:?} \
+                                 after queued peer seq {seq} with earlier {pd:?}"
+                            );
+                        }
+                    }
+                } else {
+                    assert!(
+                        queued[c].iter().all(|&(_, peer)| peer.is_none()),
+                        "case {case} step {step}: deadline-less request dispatched \
+                         while a deadlined peer waited"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY (c): the aging bound holds with N classes — whatever the
+/// weighted traffic, a background request is dispatched by the first
+/// pop at or after its enqueue time plus the aging threshold.
+#[test]
+fn qos_aging_bound_holds_with_n_classes() {
+    for case in 0..80u64 {
+        let mut rng = Rng::new(0xA6E + case);
+        let n_weighted = 1 + (rng.below(3) as usize);
+        let mut weights: Vec<u32> = (0..n_weighted).map(|_| 1 + rng.below(5) as u32).collect();
+        weights.push(0); // the background class under test
+        let bg = weights.len() - 1;
+        let aging = Duration::from_millis(1 + rng.below(50));
+        let mut s = qos_sched(&weights, 64, aging);
+        let t0 = Instant::now();
+        for c in 0..n_weighted {
+            for i in 0..8u64 {
+                s.try_enqueue(c, None, t0, i).unwrap();
+            }
+        }
+        s.try_enqueue(bg, None, t0, 999).unwrap();
+        // pops strictly before the threshold serve weighted work only
+        let before = t0 + aging - Duration::from_nanos(1);
+        for _ in 0..3 {
+            let p = s.pop(before).unwrap();
+            assert_ne!(p.item.class, bg, "case {case}: promoted before the bound");
+        }
+        // the first pop at/after the threshold serves the aged request
+        let after = t0 + aging;
+        let p = s.pop(after).unwrap();
+        assert_eq!(p.item.class, bg, "case {case}: aged request must win the slot");
+        assert!(p.aged, "case {case}: the promotion is counted");
+    }
+}
+
+/// PROPERTY (d): the degrade ladder never emits below `min_points`,
+/// never deepens the requested level, and resolves exactly
+/// `points >> shift` — for random points/floors/levels. The bitwise
+/// part (degraded serving == serving the truncated signal) is pinned by
+/// `qos_degraded_dispatch_is_bitwise_truncated_reference` below.
+#[test]
+fn qos_degrade_ladder_respects_the_floor() {
+    let levels = [DegradeLevel::Full, DegradeLevel::Half, DegradeLevel::Quarter];
+    for case in 0..300u64 {
+        let mut rng = Rng::new(0x1ADD + case);
+        let points = 1usize << (6 + rng.below(9)); // 64..16384
+        let min_points = 1usize << (4 + rng.below(8)); // 16..2048
+        let requested = levels[(rng.below(3)) as usize];
+        let ladder = DegradeLadder { min_points };
+        let (level, out) = ladder.apply(requested, points);
+        assert!(level <= requested, "case {case}: clamp never deepens");
+        assert_eq!(out, points >> level.shift(), "case {case}");
+        if level != DegradeLevel::Full {
+            assert!(
+                out >= min_points,
+                "case {case}: degraded below the floor ({out} < {min_points})"
+            );
+        }
+        // the clamp is maximal: one step deeper would break the floor
+        // (when a deeper step was requested and denied)
+        if level < requested {
+            assert!(
+                points >> level.deeper().shift() < min_points,
+                "case {case}: clamp was stricter than the floor requires"
+            );
+        }
+    }
+}
+
+/// PROPERTY (d, numerics): a degraded dispatch is bitwise equal to
+/// serving the truncated signal directly, at every ladder level — the
+/// ladder changes dispatch, never numerics.
+#[test]
+fn qos_degraded_dispatch_is_bitwise_truncated_reference() {
+    let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+    let bits = |v: &[(f32, f32)]| -> Vec<(u32, u32)> {
+        v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+    };
+    for (points, level) in [
+        (1024usize, DegradeLevel::Half),
+        (1024, DegradeLevel::Quarter),
+        (4096, DegradeLevel::Half),
+        (4096, DegradeLevel::Quarter),
+    ] {
+        let input: Vec<(f32, f32)> = egpu_fft::fft::reference::test_signal(points, 77)
+            .iter()
+            .map(|c| c.to_f32_pair())
+            .collect();
+        let keep = points >> level.shift();
+        let degraded = svc.submit_degraded(input.clone(), level).recv().unwrap().unwrap();
+        let direct = svc.submit(input[..keep].to_vec()).recv().unwrap().unwrap();
+        assert_eq!(degraded.output.len(), keep);
+        assert_eq!(
+            bits(&degraded.output),
+            bits(&direct.output),
+            "{points} @ {level}: degraded output must be bitwise the truncated reference"
+        );
+    }
+    svc.shutdown();
 }
 
 /// PROPERTY: cycle accounting is deterministic and data-independent —

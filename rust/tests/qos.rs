@@ -1,0 +1,409 @@
+//! Integration tests for the N-class QoS frontend and the degrade-aware
+//! controller — the ISSUE's acceptance criteria:
+//!
+//! (a) a 3-class overload keeps per-class shed / deadline / serve
+//!     accounting exact (per-class counters sum to the globals, nothing
+//!     silently dropped);
+//! (b) the degrade-aware controller serves a short burst by walking the
+//!     resolution ladder — no shard add — and restores full resolution
+//!     once the burst clears; the pure control law pins the
+//!     degrade-before-scale-up ordering deterministically in
+//!     `coordinator::autoscale` unit tests, this file exercises the
+//!     threaded loop end to end;
+//! (c) backwards compatibility: the default two-class configuration
+//!     reproduces the PR 3 server semantics — high before low, aging
+//!     promotion, and outputs bitwise identical to the direct execution
+//!     service;
+//! (d) per-class capacities: explicit caps are honored independently,
+//!     unset caps derive from the deprecated shared `queue_capacity`.
+
+use std::time::{Duration, Instant};
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, DegradeLevel,
+    FftService, LoadgenConfig, QosClass, RequestOpts, ServerConfig, ServiceConfig, ServiceError,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+fn pool_server(cores: usize, cfg: ServerConfig) -> TrafficServer {
+    let inner = ServiceHandle::Pool(
+        FftService::start(ServiceConfig {
+            cores,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    TrafficServer::start(inner, cfg).unwrap()
+}
+
+fn three_classes() -> Vec<QosClass> {
+    vec![
+        QosClass::new("gold", 5).with_capacity(16),
+        QosClass::new("silver", 3).with_capacity(16),
+        QosClass::new("bronze", 1).with_capacity(4),
+    ]
+}
+
+/// (a) Overloading three classes keeps the per-class accounting exact:
+/// every class's submitted/admitted/shed/completed line up, and the
+/// per-class counters sum to the global ones.
+#[test]
+fn three_class_overload_accounts_per_class() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            classes: three_classes(),
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    // occupy the single dispatcher so queues actually fill
+    let slow = server.submit(signal(4096, 0), RequestOpts::class(0)).unwrap();
+    let input = signal(1024, 3);
+    let mut handles = Vec::new();
+    let mut shed_by_class = [0u64; 3];
+    for round in 0..24 {
+        let class = round % 3;
+        match server.submit(input.clone(), RequestOpts::class(class)) {
+            Ok(rx) => handles.push(rx),
+            Err(ServiceError::QueueFull { capacity }) => {
+                shed_by_class[class] += 1;
+                let expect = server.config().classes[class].capacity;
+                assert_eq!(capacity, expect, "shed reports the class's own cap");
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(
+        shed_by_class[2] >= 1,
+        "bronze (cap 4) must shed out of 8 submissions: {shed_by_class:?}"
+    );
+    assert!(slow.recv().unwrap().is_ok());
+    for rx in handles {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let sv = server.metrics().server;
+    assert_eq!(sv.per_class.len(), 3);
+    for (c, stats) in sv.per_class.iter().enumerate() {
+        let submitted = if c == 0 { 9 } else { 8 }; // + the slow warmer
+        assert_eq!(stats.submitted, submitted, "class {c}");
+        assert_eq!(stats.shed, shed_by_class[c], "class {c}");
+        assert_eq!(stats.admitted, stats.submitted - stats.shed, "class {c}");
+        assert_eq!(stats.completed, stats.admitted, "class {c}: all admitted served");
+    }
+    let sum = |f: fn(&egpu_fft::coordinator::ClassStats) -> u64| -> u64 {
+        sv.per_class.iter().map(f).sum()
+    };
+    assert_eq!(sum(|c| c.submitted), sv.submitted, "per-class sums to global");
+    assert_eq!(sum(|c| c.shed), sv.shed);
+    assert_eq!(sum(|c| c.completed), sv.completed);
+    assert!(sv.accounted());
+    server.shutdown();
+}
+
+/// Measured single-shard fft1024 serving capacity, jobs/s (shared
+/// library helper — the same anchor the benches calibrate with).
+fn single_shard_rps() -> f64 {
+    ShardedFftService::calibrate_single_shard_rps(1024).unwrap()
+}
+
+/// (b) A short burst against a degrade-armed controller is absorbed by
+/// the resolution ladder — the operating level deepens, no shard is
+/// added (the scale-up cooldown is deliberately longer than the burst)
+/// — and full resolution is restored once the burst clears.
+#[test]
+fn short_burst_degrades_without_scaling_and_restores_after() {
+    let base_rps = single_shard_rps();
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 1,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(svc),
+        ServerConfig {
+            queue_capacity: 128,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let control = server.degrade_control();
+    let controller = AutoscaleController::spawn(
+        &server,
+        AutoscalePolicy {
+            min_shards: 1,
+            max_shards: 4,
+            target_p99_ms: 10.0,
+            max_shed_rate: 0.02,
+            max_degrade: DegradeLevel::Quarter,
+            degrade_cooldown: Duration::from_millis(50),
+            restore_cooldown: Duration::from_millis(100),
+            // the burst (≤ 800ms) ends before a shard add is even
+            // allowed, so any overload reaction must be a degrade
+            scale_up_cooldown: Duration::from_secs(30),
+            scale_down_cooldown: Duration::from_secs(60),
+            interval: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // burst: ~3x one shard's capacity for 800ms
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: 3.0 * base_rps,
+            duration: Duration::from_millis(800),
+            sizes: vec![1024],
+            deadline: None,
+            ..Default::default()
+        },
+    );
+    assert!(report.accounted);
+    let shards_now = server.service().as_sharded().unwrap().shards();
+    assert_eq!(shards_now, 1, "a burst inside the scale-up cooldown adds no shard");
+
+    // idle: healthy samples restore resolution step by step
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while control.get() != DegradeLevel::Full && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(control.get(), DegradeLevel::Full, "resolution restored after the burst");
+
+    let log = controller.stop();
+    assert!(log.degrades() >= 1, "degrade events logged:\n{}", log.render());
+    assert!(log.restores() >= 1, "restore events logged:\n{}", log.render());
+    assert_eq!(log.scale_ups(), 0, "no shard add for a short burst:\n{}", log.render());
+    assert!(report.degraded > 0, "burst requests actually served degraded: {report:?}");
+    server.shutdown();
+}
+
+/// (c) Backwards compatibility, semantics: with the default two-class
+/// configuration, outputs are bitwise identical to the direct execution
+/// service — the QoS frontend changes scheduling, never numerics.
+#[test]
+fn two_class_config_outputs_bitwise_match_direct_service() {
+    let inputs: Vec<_> = (0..10)
+        .map(|i| signal(if i % 2 == 0 { 256 } else { 1024 }, 4000 + i as u64))
+        .collect();
+
+    let direct = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+    let want: Vec<Vec<(u32, u32)>> = direct
+        .run_batch(inputs.clone())
+        .unwrap()
+        .iter()
+        .map(|r| bits(&r.output))
+        .collect();
+    direct.shutdown();
+
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 64,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    assert_eq!(server.config().classes.len(), 2, "default config is the legacy pair");
+    assert_eq!(server.config().classes[0].name, "high");
+    assert_eq!(server.config().classes[1].weight, 0, "low is a background class");
+    for (i, input) in inputs.iter().enumerate() {
+        let class = i % 2; // alternate high/low
+        let served = server
+            .submit(input.clone(), RequestOpts::class(class))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(served.class, class);
+        assert_eq!(served.level, DegradeLevel::Full, "Shed policy never degrades");
+        assert_eq!(bits(&served.result.output), want[i], "request {i} diverged");
+    }
+    let sv = server.metrics().server;
+    assert_eq!(sv.served_high, 5);
+    assert_eq!(sv.served_low, 5);
+    assert!(sv.accounted());
+    server.shutdown();
+}
+
+/// (c) Backwards compatibility, scheduling: under a high-priority
+/// backlog the aged low request is still promoted within the bound —
+/// the PR 3 starvation-freedom semantics through the N-class scheduler.
+#[test]
+fn two_class_aging_still_promotes_low_under_backlog() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            queue_capacity: 4096,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            aging: Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    // a high backlog worth ~400ms of service (calibrated, so the test
+    // means the same thing on fast and slow hosts), then one low
+    // request
+    let input = signal(1024, 1);
+    let service_us = {
+        let mut last = 0.0;
+        for seed in 0..2 {
+            let rx = server.submit(signal(1024, seed), RequestOpts::class(0)).unwrap();
+            last = rx.recv().unwrap().unwrap().service_us;
+        }
+        last
+    };
+    let n_high = ((400_000.0 / service_us).ceil() as usize).clamp(50, 2000);
+    let highs: Vec<_> = (0..n_high)
+        .map(|_| server.submit(input.clone(), RequestOpts::class(0)).unwrap())
+        .collect();
+    let low = server
+        .submit(signal(1024, 2), RequestOpts::class(1))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .expect("low must complete");
+    assert!(
+        server.queue_depth() > 0,
+        "the low request completed while high work was still queued — no starvation"
+    );
+    let sv = server.metrics().server;
+    assert!(sv.aged >= 1, "the aging promotion fired");
+    assert_eq!(sv.per_class[1].aged, sv.aged, "attributed to the background class");
+    assert_eq!(sv.per_class[1].completed, 1);
+    assert!(low.queue_us < 500_000.0, "served within the aging bound, not after drain");
+    drop(highs);
+    server.shutdown();
+}
+
+/// (d) Per-class capacities: an explicit cap sheds independently while
+/// a sibling class (deriving the shared legacy cap) still admits — and
+/// the resolved caps are observable.
+#[test]
+fn explicit_and_derived_class_capacities_coexist() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            classes: vec![
+                QosClass::new("tiny", 1).with_capacity(2),
+                QosClass::new("roomy", 1), // derives queue_capacity
+            ],
+            queue_capacity: 64,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    );
+    assert_eq!(server.class_capacities(), &[2, 64]);
+    // hold the dispatcher down so queues fill
+    let slow = server.submit(signal(4096, 0), RequestOpts::class(1)).unwrap();
+    let input = signal(256, 1);
+    let mut tiny_shed = 0;
+    let mut tiny_handles = Vec::new();
+    for _ in 0..6 {
+        match server.submit(input.clone(), RequestOpts::class(0)) {
+            Ok(rx) => tiny_handles.push(rx),
+            Err(ServiceError::QueueFull { capacity }) => {
+                assert_eq!(capacity, 2);
+                tiny_shed += 1;
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(tiny_shed >= 1, "the 2-slot class sheds");
+    // the sibling with the derived 64-slot cap still admits everything
+    let roomy_handles: Vec<_> = (0..16)
+        .map(|_| {
+            server
+                .submit(input.clone(), RequestOpts::class(1))
+                .expect("roomy class must admit while tiny sheds")
+        })
+        .collect();
+    assert!(slow.recv().unwrap().is_ok());
+    for rx in tiny_handles.into_iter().chain(roomy_handles) {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let sv = server.metrics().server;
+    assert_eq!(sv.per_class[0].shed, tiny_shed);
+    assert_eq!(sv.per_class[1].shed, 0);
+    assert!(sv.accounted());
+    server.shutdown();
+}
+
+/// WFQ end to end: three weighted classes under sustained overload see
+/// served shares near weight/Σweights, and per-class queue p99s are
+/// populated — the frontend-level view of the scheduler-core property.
+#[test]
+fn three_class_overload_shares_track_weights_end_to_end() {
+    let inner = ServiceHandle::Sharded(
+        ShardedFftService::start(ShardPoolConfig {
+            shards: 2,
+            steal_threshold: 0,
+            service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            classes: vec![
+                QosClass::new("gold", 5).with_capacity(32),
+                QosClass::new("silver", 3).with_capacity(32),
+                QosClass::new("bronze", 1).with_capacity(32),
+            ],
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // 6x one shard's capacity across a two-shard pool: guaranteed
+    // saturation, whatever this host's absolute speed
+    let base_rps = single_shard_rps();
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: 6.0 * base_rps,
+            duration: Duration::from_millis(1500),
+            sizes: vec![1024],
+            class_mix: vec![1.0, 1.0, 1.0],
+            deadline: None,
+            seed: 9,
+            ..Default::default()
+        },
+    );
+    assert!(report.accounted, "{report:?}");
+    assert!(report.shed > 0, "the run must actually saturate: {report:?}");
+    assert_eq!(report.per_class.len(), 3);
+    let total: u64 = report.per_class.iter().map(|c| c.completed).sum();
+    assert!(total > 50, "enough completions to measure shares: {report:?}");
+    for (c, want) in report.per_class.iter().zip([5.0 / 9.0, 3.0 / 9.0, 1.0 / 9.0]) {
+        let frac = c.completed as f64 / total as f64;
+        assert!(
+            (frac - want).abs() < 0.15,
+            "{}: share {frac:.3} vs weight share {want:.3}\n{}",
+            c.name,
+            report.render()
+        );
+        assert!(c.queue_p99_us > 0.0, "{}: per-class queue p99 populated", c.name);
+    }
+    server.shutdown();
+}

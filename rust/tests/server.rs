@@ -10,7 +10,7 @@
 use std::time::Duration;
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, Backend, FftService, LoadgenConfig, Priority,
+    loadgen, AdmissionPolicy, ArrivalPattern, Backend, DegradeLevel, FftService, LoadgenConfig,
     RequestOpts, ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig,
     ShardedFftService, TrafficServer,
 };
@@ -32,12 +32,14 @@ fn pool_server(cores: usize, cfg: ServerConfig) -> TrafficServer {
     TrafficServer::start(inner, cfg).unwrap()
 }
 
+/// Class 0 of the default two-class configuration ("high").
 fn high() -> RequestOpts {
-    RequestOpts { priority: Priority::High, deadline: None }
+    RequestOpts::class(0)
 }
 
+/// Class 1 of the default two-class configuration ("low", weight 0).
 fn low() -> RequestOpts {
-    RequestOpts { priority: Priority::Low, deadline: None }
+    RequestOpts::class(1)
 }
 
 /// Warm the server on `points` and measure one steady-state service
@@ -129,10 +131,7 @@ fn queued_deadline_expiry_surfaces_typed_error_without_serving() {
     // occupy the single dispatcher with a slow job, then queue two
     // requests whose deadline is long past by the time it finishes
     let slow = server.submit(signal(4096, 0), high()).unwrap();
-    let opts = RequestOpts {
-        priority: Priority::High,
-        deadline: Some(Duration::from_micros(1)),
-    };
+    let opts = high().with_deadline(Duration::from_micros(1));
     let doomed: Vec<_> =
         (0..2).map(|i| server.submit(signal(256, i), opts).unwrap()).collect();
     assert!(slow.recv().unwrap().is_ok());
@@ -164,10 +163,7 @@ fn late_service_is_delivered_but_flagged_and_counted() {
     // a deadline at a third of the measured service time expires while
     // the job is *in service*: it was dispatchable, but finishes late
     let service_us = calibrate_service_us(&server, 4096);
-    let opts = RequestOpts {
-        priority: Priority::High,
-        deadline: Some(Duration::from_secs_f64(service_us / 3.0 * 1e-6)),
-    };
+    let opts = high().with_deadline(Duration::from_secs_f64(service_us / 3.0 * 1e-6));
     let served = server.submit(signal(4096, 9), opts).unwrap().recv().unwrap().unwrap();
     assert!(served.deadline_missed, "served past its deadline must be flagged");
     assert_eq!(served.result.output.len(), 4096);
@@ -227,7 +223,7 @@ fn aged_low_priority_is_served_while_high_backlog_remains() {
 }
 
 #[test]
-fn degrade_policy_halves_resolution_under_pressure_and_sheds_at_the_limit() {
+fn degrade_policy_walks_the_ladder_under_pressure_and_sheds_at_the_limit() {
     let server = pool_server(
         1,
         ServerConfig {
@@ -243,32 +239,33 @@ fn degrade_policy_halves_resolution_under_pressure_and_sheds_at_the_limit() {
     let input = signal(1024, 3);
     let mut handles = Vec::new();
     let mut shed = 0u64;
-    for _ in 0..10 {
+    for _ in 0..12 {
         match server.submit(input.clone(), high()) {
             Ok(rx) => handles.push(rx),
             Err(ServiceError::QueueFull { .. }) => shed += 1,
             Err(e) => panic!("unexpected error: {e}"),
         }
     }
-    assert!(shed >= 1, "beyond capacity the Degrade policy sheds with a typed error");
+    assert!(shed >= 1, "beyond class capacity the Degrade policy sheds with a typed error");
     assert!(slow.recv().unwrap().is_ok());
-    let mut degraded = 0u64;
+    let (mut halves, mut quarters) = (0u64, 0u64);
     for rx in handles {
         let served = rx.recv().unwrap().unwrap();
-        if served.degraded {
-            degraded += 1;
-            assert_eq!(
-                served.result.output.len(),
-                512,
-                "degraded 1024-point request serves a half-resolution spectrum"
-            );
-        } else {
-            assert_eq!(served.result.output.len(), 1024);
+        // the served length always matches the reported ladder level
+        assert_eq!(served.result.output.len(), 1024 >> served.level.shift());
+        assert_eq!(served.degraded, served.level != DegradeLevel::Full);
+        match served.level {
+            DegradeLevel::Full => {}
+            DegradeLevel::Half => halves += 1,
+            DegradeLevel::Quarter => quarters += 1,
         }
     }
-    assert!(degraded >= 1, "requests admitted past half capacity must degrade");
+    assert!(halves >= 1, "requests admitted past half capacity serve at Half");
+    assert!(quarters >= 1, "requests admitted past 3/4 capacity serve at Quarter");
     let sv = server.metrics().server;
-    assert_eq!(sv.degraded, degraded);
+    assert_eq!(sv.degraded, halves + quarters);
+    assert_eq!(sv.per_class[0].degraded_half, halves);
+    assert_eq!(sv.per_class[0].degraded_quarter, quarters);
     assert!(sv.accounted());
     server.shutdown();
 }
@@ -276,7 +273,9 @@ fn degrade_policy_halves_resolution_under_pressure_and_sheds_at_the_limit() {
 #[test]
 fn degraded_output_matches_reference_fft_of_truncated_signal() {
     // fill the queue to the degrade region deterministically: capacity
-    // 1 means every admission happens at depth >= capacity/2 == 0
+    // 1 means every admission happens at depth >= 3*cap/4 == 0, i.e. at
+    // the deepest ladder level the floor allows (1024 -> Quarter: 256
+    // points, exactly the min_degraded_points floor)
     let server = pool_server(
         1,
         ServerConfig {
@@ -289,8 +288,9 @@ fn degraded_output_matches_reference_fft_of_truncated_signal() {
     );
     let served = server.submit(signal(1024, 7), high()).unwrap().recv().unwrap().unwrap();
     assert!(served.degraded);
-    assert_eq!(served.result.output.len(), 512);
-    let truncated: Vec<_> = reference::test_signal(1024, 7)[..512].to_vec();
+    assert_eq!(served.level, DegradeLevel::Quarter);
+    assert_eq!(served.result.output.len(), 256);
+    let truncated: Vec<_> = reference::test_signal(1024, 7)[..256].to_vec();
     let want = reference::fft(&truncated);
     let got: Vec<_> = served
         .result
@@ -299,6 +299,11 @@ fn degraded_output_matches_reference_fft_of_truncated_signal() {
         .map(|&(re, im)| egpu_fft::fft::Cpx::new(re as f64, im as f64))
         .collect();
     assert!(reference::rms_rel_error(&got, &want) < egpu_fft::fft::F32_TOL);
+
+    // a 512-point request floor-clamps to Half (512 >> 2 < 256)
+    let served = server.submit(signal(512, 8), high()).unwrap().recv().unwrap().unwrap();
+    assert_eq!(served.level, DegradeLevel::Half, "ladder floor-clamps at min_points");
+    assert_eq!(served.result.output.len(), 256);
     server.shutdown();
 }
 
