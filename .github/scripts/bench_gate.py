@@ -4,8 +4,11 @@
 Reads the quick-mode JSON rows written by `benches/shard.rs`
 (`jobs_per_s` per row), `benches/loadtest.rs` (`achieved_rps` per row),
 `benches/autoscale.rs` (`recovered_rps` / `shed_rate_after` /
-`p99_recovery_ms` per row) and `benches/qos.rs` (per-class
-`achieved_rps` / `share_err` rows — the WFQ share-conformance metric),
+`p99_recovery_ms` per row), `benches/qos.rs` (per-class
+`achieved_rps` / `share_err` rows — the WFQ share-conformance metric)
+and `benches/backend.rs` (per-config `routed_rps` /
+`validate_overhead` rows — multi-backend routing throughput and the
+cost of validation sampling),
 reduces each metric to an aggregate, and fails when an aggregate
 crosses the committed `BENCH_baseline.json` limit by more than the
 threshold.
@@ -37,6 +40,7 @@ Usage:
                   --shard BENCH_shard.json --loadtest BENCH_loadtest.json \
                   [--autoscale BENCH_autoscale.json] \
                   [--qos BENCH_qos.json] \
+                  [--backend BENCH_backend.json] \
                   [--emit-ratchet suggested_baseline.json]
 """
 
@@ -55,6 +59,8 @@ CHECKS = [
     ("autoscale", "p99_recovery_ms_max", "p99_recovery_ms", "max", "ceiling"),
     ("qos", "agg_qos_rps", "achieved_rps", "geomean", "floor"),
     ("qos", "share_err_max", "share_err", "max", "ceiling"),
+    ("backend", "agg_routed_rps", "routed_rps", "geomean", "floor"),
+    ("backend", "validate_overhead_max", "validate_overhead", "max", "ceiling"),
 ]
 
 # Ratchet tuning: floors rise toward 80% of observed; ceilings tighten
@@ -70,6 +76,10 @@ RATCHET_CEILING_MIN = {
     # WFQ conformance: a perfect-share run must not weld the gate onto
     # zero tolerance — queue-boundary effects are real.
     "share_err_max": 0.05,
+    # Validation sampling re-serves sampled requests on the simulator,
+    # so some throughput loss is structural; a lucky zero-overhead run
+    # must not gate future runs onto it.
+    "validate_overhead_max": 0.1,
 }
 
 STALE_FACTOR = 2.0
@@ -241,6 +251,7 @@ def main(argv=None):
     ap.add_argument("--loadtest", required=True)
     ap.add_argument("--autoscale")
     ap.add_argument("--qos")
+    ap.add_argument("--backend")
     ap.add_argument(
         "--emit-ratchet",
         metavar="PATH",
@@ -255,6 +266,7 @@ def main(argv=None):
         "loadtest": args.loadtest,
         "autoscale": args.autoscale,
         "qos": args.qos,
+        "backend": args.backend,
     }
     results, threshold = run_gate(baseline, files)
 

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the CI docs job.
+
+Walks the markdown files given on the command line (directories are
+expanded to every ``*.md`` they contain), extracts inline links and
+images (``[text](target)`` / ``![alt](target)``), and fails when a
+*relative* target does not exist on disk. Anchors within this repo's
+own files (``file.md#section`` or bare ``#section``) are checked
+against the target file's ATX headings using GitHub's slug rules
+(lowercase, punctuation stripped, spaces to hyphens).
+
+External URLs (``http://``, ``https://``, ``mailto:``) are deliberately
+out of scope: they rot on the far end's schedule, not this repo's, and
+checking them makes CI flaky. No third-party dependencies.
+
+Usage:
+    check_links.py README.md ROADMAP.md docs
+"""
+
+import pathlib
+import re
+import sys
+
+# Inline links/images. Targets never contain whitespace or a closing
+# paren in this repo's docs, which keeps the pattern honest about
+# nested-paren edge cases instead of mis-parsing them.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^()\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slug(heading):
+    """GitHub's heading-to-anchor slug: strip markdown emphasis/code
+    markers and punctuation, lowercase, hyphenate spaces."""
+    text = re.sub(r"[`*_]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = re.sub(r"[^\w\s-]", "", text.lower())
+    return re.sub(r"\s+", "-", text.strip())
+
+
+def collect_md(args):
+    files = []
+    for arg in args:
+        p = pathlib.Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            raise SystemExit(f"check_links: no such file or directory: {arg}")
+    return files
+
+
+def links_in(path):
+    """(line number, target) pairs for every inline link outside code
+    fences."""
+    out = []
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            out.append((lineno, m.group(1)))
+    return out
+
+
+def anchors_in(path, cache={}):
+    if path not in cache:
+        slugs = set()
+        in_fence = False
+        for line in path.read_text().splitlines():
+            if CODE_FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            m = None if in_fence else HEADING_RE.match(line)
+            if m:
+                slugs.add(slug(m.group(1)))
+        cache[path] = slugs
+    return cache[path]
+
+
+def check(files):
+    errors = []
+    for path in files:
+        for lineno, target in links_in(path):
+            if target.startswith(EXTERNAL):
+                continue
+            base, _, frag = target.partition("#")
+            dest = path.parent / base if base else path
+            if not dest.exists():
+                errors.append(f"{path}:{lineno}: broken link `{target}` (no {dest})")
+            elif frag and dest.suffix == ".md" and slug(frag) not in anchors_in(dest):
+                errors.append(
+                    f"{path}:{lineno}: broken anchor `{target}` (no heading "
+                    f"`#{frag}` in {dest})"
+                )
+    return errors
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        raise SystemExit("usage: check_links.py FILE_OR_DIR [...]")
+    files = collect_md(argv)
+    errors = check(files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        raise SystemExit(1)
+    print(f"check_links: {len(files)} markdown files, all relative links resolve.")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,7 @@ def _load():
 bench_gate = _load()
 
 
-def baseline(threshold=0.15, autoscale=True, qos=True):
+def baseline(threshold=0.15, autoscale=True, qos=True, backend=True):
     base = {
         "threshold": threshold,
         "shard": {"agg_jobs_per_s": 100.0},
@@ -43,6 +43,11 @@ def baseline(threshold=0.15, autoscale=True, qos=True):
         base["qos"] = {
             "agg_qos_rps": 50.0,
             "share_err_max": 0.2,
+        }
+    if backend:
+        base["backend"] = {
+            "agg_routed_rps": 100.0,
+            "validate_overhead_max": 0.4,
         }
     return base
 
@@ -63,6 +68,16 @@ def qos_rows(qos_rps=50.0, share_err=0.05):
     ]
 
 
+def backend_rows(routed_rps=200.0, overhead=0.1):
+    """Per-config rows, the shape benches/backend.rs emits (pinned and
+    routed throughput rows plus validation-sampling rows)."""
+    return [
+        {"config": "pinned_sim", "routed_rps": routed_rps / 2, "validate_overhead": 0.0},
+        {"config": "routed_fastpath", "routed_rps": routed_rps * 2, "validate_overhead": 0.0},
+        {"config": "validate_10pct", "routed_rps": routed_rps, "validate_overhead": overhead},
+    ]
+
+
 def files_for(
     tmp_path,
     shard_jps=100.0,
@@ -72,6 +87,8 @@ def files_for(
     p99=500.0,
     qos_rps=50.0,
     share_err=0.05,
+    routed_rps=200.0,
+    overhead=0.1,
 ):
     return {
         "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
@@ -82,6 +99,9 @@ def files_for(
             [{"recovered_rps": recovered, "shed_rate_after": shed, "p99_recovery_ms": p99}],
         ),
         "qos": write_rows(tmp_path, "qos.json", qos_rows(qos_rps, share_err)),
+        "backend": write_rows(
+            tmp_path, "backend.json", backend_rows(routed_rps, overhead)
+        ),
     }
 
 
@@ -165,6 +185,21 @@ class TestThreshold:
         results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, share_err=0.22))
         assert by_key(results, "share_err_max")["ok"]
 
+    def test_backend_routed_throughput_floor_trips(self, tmp_path):
+        # geomean over the per-config rows (40, 160, 80) = 80 < 85 floor
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, routed_rps=80.0))
+        assert not by_key(results, "agg_routed_rps")["ok"]
+        assert by_key(results, "validate_overhead_max")["ok"], "overhead unaffected"
+
+    def test_backend_validate_overhead_ceiling_trips(self, tmp_path):
+        # 0.5 breaches the 0.4 * 1.15 committed ceiling
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.5))
+        assert not by_key(results, "validate_overhead_max")["ok"]
+        assert by_key(results, "agg_routed_rps")["ok"], "throughput unaffected"
+        # 0.45 <= 0.46 stays inside
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.45))
+        assert by_key(results, "validate_overhead_max")["ok"]
+
 
 class TestMissingInputs:
     def test_rows_missing_the_field_raise(self, tmp_path):
@@ -210,6 +245,19 @@ class TestMissingInputs:
         results, _ = bench_gate.run_gate(baseline(qos=False), files)
         assert all(r["section"] != "qos" for r in results)
 
+    def test_gated_backend_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["backend"] = None
+        with pytest.raises(SystemExit, match="no --backend file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_ungated_backend_section_is_skipped(self, tmp_path):
+        # pre-routing baselines carry no backend section: no file needed
+        files = files_for(tmp_path)
+        files["backend"] = None
+        results, _ = bench_gate.run_gate(baseline(backend=False), files)
+        assert all(r["section"] != "backend" for r in results)
+
 
 class TestRatchet:
     def test_floor_ratchets_up_to_80_percent_of_observed(self, tmp_path):
@@ -251,6 +299,16 @@ class TestRatchet:
             baseline(), files_for(tmp_path, shed=0.001, share_err=0.001)
         )
         assert by_key(results, "share_err_max")["stale"]
+
+    def test_validate_overhead_ceiling_keeps_its_guard_band(self, tmp_path):
+        # a zero-overhead run must leave room for the structural cost of
+        # validation sampling, not gate future runs onto zero
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.0))
+        r = by_key(results, "validate_overhead_max")
+        assert bench_gate.suggest(r) == pytest.approx(0.1), "absolute guard minimum"
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.2))
+        r = by_key(results, "validate_overhead_max")
+        assert bench_gate.suggest(r) == pytest.approx(0.25), "1.25x observed"
 
     def test_share_err_ceiling_keeps_its_guard_band(self, tmp_path):
         # perfectly fair shares must not ratchet the conformance gate
@@ -297,6 +355,8 @@ class TestMain:
             files["autoscale"],
             "--qos",
             files["qos"],
+            "--backend",
+            files["backend"],
             *extra,
         ]
 

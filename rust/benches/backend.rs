@@ -1,0 +1,242 @@
+//! Bench: multi-backend routing — routed vs pinned throughput, router
+//! overhead, and the cost of validation sampling.
+//!
+//! The alternate lane is synthetic and calibrated against this host's
+//! *measured* simulator service time (it serves the f64 reference
+//! transform after sleeping a quarter of the sim time), so "4x faster
+//! lane" means the same thing on fast and slow runners. Scenarios:
+//!
+//! * **pinned_sim** — the unrouted pool service: the pre-routing
+//!   baseline every other row is compared against.
+//! * **routed_sim_only** — the same pool behind a [`BackendSet`] with
+//!   no alternates: pure router overhead, which must be noise.
+//! * **routed_fastpath** — the 4x lane registered; the router must
+//!   send it at least 90% of steady-state traffic (asserted, so the
+//!   bench run itself hard-gates the routing acceptance criterion).
+//! * **validate_1pct / validate_10pct** — the 4x lane with validation
+//!   sampling at 1% / 10%; `validate_overhead` is the throughput
+//!   fraction lost vs `routed_fastpath` (every sampled request pays a
+//!   full simulator re-serve).
+//!
+//! ```sh
+//! cargo bench --bench backend                  # full sweep
+//! cargo bench --bench backend -- --quick       # CI-sized sweep
+//! cargo bench --bench backend -- --json BENCH_backend.json
+//! ```
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use egpu_fft::coordinator::{
+    BackendSet, BackendSetConfig, FftBackend, FftService, ServiceConfig, ServiceHandle,
+};
+use egpu_fft::fft::{reference, Cpx};
+
+const POINTS: usize = 1024;
+const CORES: usize = 2;
+const WORKERS: usize = 4;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+/// A synthetic fast lane: correct output (the f64 reference transform)
+/// delivered in a fixed fraction of the measured simulator time.
+struct FastPath {
+    sleep: Duration,
+}
+
+impl FftBackend for FastPath {
+    fn name(&self) -> &str {
+        "fastpath"
+    }
+
+    fn fft(&self, input: &[(f32, f32)]) -> anyhow::Result<Vec<(f32, f32)>> {
+        std::thread::sleep(self.sleep);
+        let cpx: Vec<Cpx> = input
+            .iter()
+            .map(|&(r, i)| Cpx::new(r as f64, i as f64))
+            .collect();
+        Ok(reference::fft(&cpx).iter().map(|c| c.to_f32_pair()).collect())
+    }
+}
+
+fn pool() -> ServiceHandle {
+    ServiceHandle::Pool(
+        FftService::start(ServiceConfig { cores: CORES, ..Default::default() }).unwrap(),
+    )
+}
+
+/// Measured steady-state simulator service time for [`POINTS`], µs.
+fn calibrate_sim_us() -> f64 {
+    let probe = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+    let mut us: f64 = 0.0;
+    for seed in 0..3 {
+        let r = probe.run_batch(vec![signal(POINTS, seed)]).unwrap();
+        us = r[0].wall_us; // keep the last (warmed) sample
+    }
+    probe.shutdown();
+    us.max(100.0)
+}
+
+fn build_set(fraction: f64, fastpath: Option<Duration>) -> BackendSet {
+    let mut set = BackendSet::new(
+        pool(),
+        BackendSetConfig {
+            validate_fraction: fraction,
+            calibrate_sizes: vec![POINTS],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    if let Some(sleep) = fastpath {
+        set.register("fastpath", Box::new(FastPath { sleep }), WORKERS).unwrap();
+    }
+    set.calibrate().unwrap();
+    set
+}
+
+/// Serve `requests` through the set and return (rps, fastpath share,
+/// validate checks, validate mismatches).
+fn run_routed(set: &BackendSet, requests: usize) -> (f64, f64, u64, u64) {
+    let inputs: Vec<_> = (0..requests).map(|i| signal(POINTS, i as u64)).collect();
+    let t0 = Instant::now();
+    let results = set.run_batch(inputs, WORKERS).unwrap();
+    let rps = results.len() as f64 / t0.elapsed().as_secs_f64();
+    let stats = set.stats();
+    let total: u64 = stats.iter().map(|s| s.served).sum();
+    let fast = stats.iter().find(|s| s.name == "fastpath");
+    let share = match (fast, total) {
+        (Some(f), t) if t > 0 => f.served as f64 / t as f64,
+        _ => 0.0,
+    };
+    let checks: u64 = stats.iter().map(|s| s.validate_checks).sum();
+    let mismatches: u64 = stats.iter().map(|s| s.validate_mismatches).sum();
+    assert_eq!(mismatches, 0, "an honest lane must never mismatch: {stats:?}");
+    (rps, share, checks, mismatches)
+}
+
+struct Row {
+    config: String,
+    routed_rps: f64,
+    validate_overhead: f64,
+    fastpath_share: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let requests = if quick { 48 } else { 240 };
+
+    let sim_us = calibrate_sim_us();
+    let fast = Duration::from_secs_f64(sim_us / 4.0 / 1e6);
+    println!(
+        "\n=== backend: routed vs pinned fft{POINTS} (sim ~{sim_us:.0}us/req, synthetic \
+         fast lane at 1/4x{}) ===",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+
+    // pinned_sim: the unrouted pool — the pre-routing baseline
+    let svc = FftService::start(ServiceConfig { cores: CORES, ..Default::default() }).unwrap();
+    svc.run_batch((0..4).map(|i| signal(POINTS, i)).collect()).unwrap(); // warm
+    let inputs: Vec<_> = (0..requests).map(|i| signal(POINTS, i as u64)).collect();
+    let t0 = Instant::now();
+    let served = svc.run_batch(inputs).unwrap();
+    let pinned_rps = served.len() as f64 / t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    rows.push(Row {
+        config: "pinned_sim".into(),
+        routed_rps: pinned_rps,
+        validate_overhead: 0.0,
+        fastpath_share: 0.0,
+    });
+
+    // routed_sim_only: router in the path, nothing to route to
+    let set = build_set(0.0, None);
+    let (rps, _, _, _) = run_routed(&set, requests);
+    set.shutdown();
+    rows.push(Row {
+        config: "routed_sim_only".into(),
+        routed_rps: rps,
+        validate_overhead: 0.0,
+        fastpath_share: 0.0,
+    });
+
+    // routed_fastpath: the 4x lane must win ≥90% of the traffic
+    let set = build_set(0.0, Some(fast));
+    let (base_rps, share, _, _) = run_routed(&set, requests);
+    set.shutdown();
+    assert!(
+        share >= 0.9,
+        "router must send >=90% of steady-state traffic to the 4x lane (got {share:.2})"
+    );
+    assert!(
+        base_rps > pinned_rps,
+        "routing to a 4x lane must beat the pinned pool ({base_rps:.0} vs {pinned_rps:.0} rps)"
+    );
+    rows.push(Row {
+        config: "routed_fastpath".into(),
+        routed_rps: base_rps,
+        validate_overhead: 0.0,
+        fastpath_share: share,
+    });
+
+    // validation sampling: throughput fraction lost vs routed_fastpath
+    for (label, fraction) in [("validate_1pct", 0.01), ("validate_10pct", 0.1)] {
+        let set = build_set(fraction, Some(fast));
+        let (rps, share, checks, _) = run_routed(&set, requests);
+        set.shutdown();
+        assert!(
+            checks > 0 || requests < (1.0 / fraction) as usize,
+            "{label}: sampling at {fraction} over {requests} requests never fired"
+        );
+        rows.push(Row {
+            config: label.into(),
+            routed_rps: rps,
+            validate_overhead: (1.0 - rps / base_rps).max(0.0),
+            fastpath_share: share,
+        });
+    }
+
+    println!(
+        "\n  {:<18} {:>12} {:>18} {:>15}",
+        "config", "routed_rps", "validate_overhead", "fastpath_share"
+    );
+    for r in &rows {
+        println!(
+            "  {:<18} {:>12.0} {:>18.3} {:>15.2}",
+            r.config, r.routed_rps, r.validate_overhead, r.fastpath_share
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"backend\", \"config\": \"{}\", \"routed_rps\": {:.1}, \
+                 \"validate_overhead\": {:.4}, \"fastpath_share\": {:.4}, \
+                 \"quick\": {}}}{}\n",
+                r.config,
+                r.routed_rps,
+                r.validate_overhead,
+                r.fastpath_share,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

@@ -48,8 +48,21 @@
 //!   (half-trigger headroom absorbs it) and a workload that settles
 //!   mid-band must not be pinned at reduced resolution.
 //!
-//! Every decision (including degrade/restore steps) lands in the
-//! [`AutoscaleLog`] with the operating level before and after.
+//! **The swap lever (third actuator).** With
+//! [`AutoscalePolicy::swap_service_p99_ms`] positive and the server
+//! wrapping a routed backend set ([`super::BackendSet`]), an
+//! overloaded interval whose *service-time* p99 exceeds the threshold
+//! first pins the router to its measured-fastest lane
+//! ([`super::RouteMode::Fastest`]) — service time is the one latency
+//! component that neither shards nor resolution can move, so swapping
+//! the backend is tried before either. The swap is one-shot per
+//! overload episode (re-arming only after release), costs nothing and
+//! is instant; when the SLO is calm again the pin is released back to
+//! load-balanced routing before resolution is restored.
+//!
+//! Every decision (including degrade/restore and swap/release steps)
+//! lands in the [`AutoscaleLog`] with the operating level before and
+//! after.
 //!
 //! The SLO targets *queue wait*, not service time: adding shards
 //! removes queueing, while per-job service time is a property of the
@@ -69,6 +82,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::backend::RouteMode;
 use super::qos::DegradeLevel;
 use super::server::{DegradeControl, PressureSample, ServiceHandle, TrafficServer};
 
@@ -114,6 +128,15 @@ pub struct AutoscalePolicy {
     /// Minimum time between actions and the next resolution-restore
     /// step once the SLO is healthy again.
     pub restore_cooldown: Duration,
+    /// Swap-before-scale: when positive, an overloaded interval whose
+    /// *service-time* p99 exceeds this many milliseconds first pins the
+    /// routed backend set to its measured-fastest lane before any
+    /// degrade or resize — service time is the one latency component
+    /// shards and resolution cannot move, and only a faster backend
+    /// can. Requires the server to wrap a routed set
+    /// ([`AutoscaleController::spawn`] rejects the pairing otherwise).
+    /// `0.0` (the default) disables the swap actuator.
+    pub swap_service_p99_ms: f64,
 }
 
 impl Default for AutoscalePolicy {
@@ -137,11 +160,15 @@ impl Default for AutoscalePolicy {
             max_degrade: DegradeLevel::Full,
             degrade_cooldown: Duration::from_millis(100),
             restore_cooldown: Duration::from_millis(500),
+            swap_service_p99_ms: 0.0,
         }
     }
 }
 
 impl AutoscalePolicy {
+    /// Reject configurations the control law cannot run safely on
+    /// (inverted bounds, thresholds that oscillate, cooldowns that
+    /// invert the lever ordering).
     pub fn validate(&self) -> Result<()> {
         if self.min_shards == 0 {
             return Err(anyhow!("min_shards must be at least 1"));
@@ -169,6 +196,9 @@ impl AutoscalePolicy {
         }
         if self.interval.is_zero() {
             return Err(anyhow!("interval must be positive"));
+        }
+        if self.swap_service_p99_ms < 0.0 {
+            return Err(anyhow!("swap_service_p99_ms must be non-negative (0 disables)"));
         }
         if self.max_degrade != DegradeLevel::Full
             && self.degrade_cooldown > self.scale_up_cooldown
@@ -200,22 +230,34 @@ impl AutoscalePolicy {
 /// What the shard-only control law decided for one sample.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScaleAction {
+    /// Add one shard.
     Up,
+    /// Retire one shard.
     Down,
+    /// No change this sample.
     Hold,
 }
 
 /// What the degrade-aware control law decided for one sample: shard
-/// actions plus the two resolution-ladder actions.
+/// actions, the two resolution-ladder actions, and the two
+/// backend-routing actions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QosAction {
+    /// Add one shard (the durable capacity lever).
     ScaleUp,
+    /// Retire one shard.
     ScaleDown,
     /// Step the operating level one rung deeper (halves per-request
     /// service cost — the burst lever).
     Degrade,
     /// Step the operating level one rung back toward full resolution.
     Restore,
+    /// Pin the routed backend set to its measured-fastest lane (the
+    /// swap-before-scale lever, fired on service-time pressure).
+    SwapBackend,
+    /// Release the backend pin back to load-balanced routing.
+    ReleaseBackend,
+    /// No change this sample.
     Hold,
 }
 
@@ -227,13 +269,19 @@ pub struct ControllerCore {
     /// first action waits out a full cooldown — a freshly started
     /// controller never reacts to an empty first interval).
     last_action: Instant,
+    /// The swap actuator has fired and not yet been released: the swap
+    /// is one-shot per overload episode.
+    swapped: bool,
 }
 
 impl ControllerCore {
+    /// A fresh control-law core over `policy`, with cooldown state
+    /// starting at construction time.
     pub fn new(policy: AutoscalePolicy) -> Self {
-        ControllerCore { policy, last_action: Instant::now() }
+        ControllerCore { policy, last_action: Instant::now(), swapped: false }
     }
 
+    /// The policy this core decides against.
     pub fn policy(&self) -> &AutoscalePolicy {
         &self.policy
     }
@@ -244,7 +292,7 @@ impl ControllerCore {
     /// level at `Full`). Returning `Up`/`Down` records the action for
     /// cooldown purposes — the caller is expected to apply it.
     pub fn decide(&mut self, s: &PressureSample, shards: usize) -> ScaleAction {
-        match self.decide_inner(s, shards, DegradeLevel::Full, DegradeLevel::Full) {
+        match self.decide_inner(s, shards, DegradeLevel::Full, DegradeLevel::Full, false) {
             QosAction::ScaleUp => ScaleAction::Up,
             QosAction::ScaleDown => ScaleAction::Down,
             _ => ScaleAction::Hold,
@@ -258,13 +306,21 @@ impl ControllerCore {
     /// on overload; a shard adds fixed capacity and is the durable
     /// lever once the ladder budget (`max_degrade`) is spent. When
     /// healthy, resolution is restored before any shard is retired.
+    ///
+    /// With [`AutoscalePolicy::swap_service_p99_ms`] positive, the law
+    /// gains a swap-before-scale step: an overloaded interval whose
+    /// service-time p99 exceeds the threshold returns
+    /// [`QosAction::SwapBackend`] before any degrade or resize (once
+    /// per overload episode), and a calm interval releases the pin
+    /// ([`QosAction::ReleaseBackend`]) before restoring resolution.
     pub fn decide_qos(
         &mut self,
         s: &PressureSample,
         shards: usize,
         level: DegradeLevel,
     ) -> QosAction {
-        self.decide_inner(s, shards, level, self.policy.max_degrade)
+        let swap = self.policy.swap_service_p99_ms > 0.0;
+        self.decide_inner(s, shards, level, self.policy.max_degrade, swap)
     }
 
     fn decide_inner(
@@ -273,12 +329,26 @@ impl ControllerCore {
         shards: usize,
         level: DegradeLevel,
         max_degrade: DegradeLevel,
+        swap_enabled: bool,
     ) -> QosAction {
         let p99_ms = s.queue_p99_us / 1e3;
         let since = s.at.checked_duration_since(self.last_action).unwrap_or_default();
         let overloaded = s.shed_rate > self.policy.max_shed_rate
             || p99_ms > self.policy.target_p99_ms * self.policy.scale_up_threshold;
         if overloaded {
+            // Swap before scale: service time is the one component of
+            // latency that shards and resolution cannot move, so when
+            // it is what breaches, try the free lever — a faster
+            // backend — first. One-shot until released.
+            if swap_enabled
+                && !self.swapped
+                && s.service_p99_us / 1e3 > self.policy.swap_service_p99_ms
+                && since >= self.policy.degrade_cooldown
+            {
+                self.swapped = true;
+                self.last_action = s.at;
+                return QosAction::SwapBackend;
+            }
             if level < max_degrade && since >= self.policy.degrade_cooldown {
                 self.last_action = s.at;
                 return QosAction::Degrade;
@@ -298,6 +368,14 @@ impl ControllerCore {
         // capacity thrash, not to gate quality).
         let calm = s.shed == 0
             && p99_ms < 0.5 * self.policy.target_p99_ms * self.policy.scale_up_threshold;
+        // Release the backend pin first: routing returns to
+        // load-balanced before resolution (and then capacity) recover,
+        // mirroring the overload ordering in reverse.
+        if calm && swap_enabled && self.swapped && since >= self.policy.restore_cooldown {
+            self.swapped = false;
+            self.last_action = s.at;
+            return QosAction::ReleaseBackend;
+        }
         if calm && level > DegradeLevel::Full && since >= self.policy.restore_cooldown {
             self.last_action = s.at;
             return QosAction::Restore;
@@ -318,11 +396,16 @@ impl ControllerCore {
 pub struct AutoscaleEvent {
     /// Seconds since the controller started.
     pub at_s: f64,
+    /// Shard count before the action.
     pub from_shards: usize,
+    /// Shard count after the action (equal to `from_shards` for ladder
+    /// and routing steps).
     pub to_shards: usize,
-    /// Operating degrade level before / after (equal for pure resizes,
-    /// as the shard counts are for pure ladder steps).
+    /// Operating degrade level before the action (equal to `to_level`
+    /// for pure resizes, as the shard counts are for pure ladder
+    /// steps).
     pub from_level: DegradeLevel,
+    /// Operating degrade level after the action.
     pub to_level: DegradeLevel,
     /// Human-readable trigger (which SLO signal fired, with values).
     pub reason: String,
@@ -337,17 +420,22 @@ pub struct AutoscaleSample {
     pub shards: usize,
     /// Operating degrade level *after* any action this tick applied.
     pub level: DegradeLevel,
+    /// Admitted-but-undispatched requests at sample time.
     pub queue_depth: usize,
+    /// Interval shed fraction.
     pub shed_rate: f64,
     /// Interval queue-wait p99, milliseconds.
     pub queue_p99_ms: f64,
+    /// What the control law decided this tick.
     pub action: QosAction,
 }
 
 /// Everything a controller run observed and did.
 #[derive(Clone, Debug, Default)]
 pub struct AutoscaleLog {
+    /// One entry per pressure-feed tick.
     pub samples: Vec<AutoscaleSample>,
+    /// One entry per applied action (resize, ladder or routing step).
     pub events: Vec<AutoscaleEvent>,
 }
 
@@ -387,6 +475,7 @@ impl AutoscaleLog {
         self.events.iter().filter(|e| e.to_shards > e.from_shards).count()
     }
 
+    /// Human-readable event/series report of the run.
     pub fn render(&self) -> String {
         let ups = self.scale_ups();
         let downs = self.events.iter().filter(|e| e.to_shards < e.from_shards).count();
@@ -407,11 +496,14 @@ impl AutoscaleLog {
                     "  t={:>6.2}s  level {} -> {}  ({})\n",
                     e.at_s, e.from_level, e.to_level, e.reason
                 ));
-            } else {
+            } else if e.from_shards != e.to_shards {
                 s.push_str(&format!(
                     "  t={:>6.2}s  {} -> {} shards  ({})\n",
                     e.at_s, e.from_shards, e.to_shards, e.reason
                 ));
+            } else {
+                // neither shards nor level moved: a routing step
+                s.push_str(&format!("  t={:>6.2}s  routing  ({})\n", e.at_s, e.reason));
             }
         }
         if !self.samples.is_empty() {
@@ -453,6 +545,13 @@ impl AutoscaleController {
         if service.as_sharded().is_none() {
             return Err(anyhow!(
                 "autoscaling requires ServiceHandle::Sharded (the pool service is not resizable)"
+            ));
+        }
+        if policy.swap_service_p99_ms > 0.0 && service.as_routed().is_none() {
+            return Err(anyhow!(
+                "swap_service_p99_ms is set but the server does not wrap a routed \
+                 backend set (ServiceHandle::Routed) — the swap actuator has nothing \
+                 to drive"
             ));
         }
         // The dispatcher pool bounds backend in-flight work, so shards
@@ -511,6 +610,7 @@ fn controller_loop(
     let mut core = ControllerCore::new(policy.clone());
     let mut log = AutoscaleLog::default();
     let sharded = service.as_sharded().expect("validated in spawn");
+    let routed = service.as_routed();
     while !stop.load(Ordering::Acquire) {
         let sample = match feed.recv_timeout(policy.interval) {
             Ok(s) => s,
@@ -587,6 +687,42 @@ fn controller_loop(
                     ),
                 });
                 (shards, to)
+            }
+            QosAction::SwapBackend => {
+                if let Some(set) = routed {
+                    set.set_mode(RouteMode::Fastest);
+                }
+                log.events.push(AutoscaleEvent {
+                    at_s,
+                    from_shards: shards,
+                    to_shards: shards,
+                    from_level: level,
+                    to_level: level,
+                    reason: format!(
+                        "service p99 {:.1}ms over swap threshold {:.1}ms — pinning the \
+                         fastest backend",
+                        sample.service_p99_us / 1e3,
+                        policy.swap_service_p99_ms
+                    ),
+                });
+                (shards, level)
+            }
+            QosAction::ReleaseBackend => {
+                if let Some(set) = routed {
+                    set.set_mode(RouteMode::Balance);
+                }
+                log.events.push(AutoscaleEvent {
+                    at_s,
+                    from_shards: shards,
+                    to_shards: shards,
+                    from_level: level,
+                    to_level: level,
+                    reason: format!(
+                        "healthy: queue p99 {p99_ms:.1}ms under {target_ms:.1}ms SLO — \
+                         releasing the backend pin"
+                    ),
+                });
+                (shards, level)
             }
             QosAction::Hold => (shards, level),
         };
@@ -879,6 +1015,88 @@ mod tests {
             QosAction::ScaleDown,
             "only a Full-resolution healthy pool sheds capacity"
         );
+    }
+
+    fn swap_policy() -> AutoscalePolicy {
+        AutoscalePolicy { swap_service_p99_ms: 1.0, ..qos_policy() }
+    }
+
+    fn sample_svc(
+        at: Instant,
+        shed_rate: f64,
+        queue_p99_us: f64,
+        service_p99_us: f64,
+    ) -> PressureSample {
+        PressureSample { service_p99_us, ..sample(at, shed_rate, queue_p99_us, 32) }
+    }
+
+    #[test]
+    fn negative_swap_threshold_rejected() {
+        assert!(AutoscalePolicy { swap_service_p99_ms: -1.0, ..policy() }
+            .validate()
+            .is_err());
+        assert!(swap_policy().validate().is_ok());
+    }
+
+    #[test]
+    fn swap_fires_once_then_degrade_and_releases_on_calm() {
+        let mut core = ControllerCore::new(swap_policy());
+        let t0 = Instant::now();
+        // overloaded with a 5ms service p99 over the 1ms swap threshold:
+        // the free lever fires first
+        let t1 = t0 + Duration::from_millis(200);
+        assert_eq!(
+            core.decide_qos(&sample_svc(t1, 0.5, 90_000.0, 5_000.0), 1, DegradeLevel::Full),
+            QosAction::SwapBackend
+        );
+        // overload persists: the swap is one-shot, so the ladder is next
+        let t2 = t1 + Duration::from_millis(60);
+        assert_eq!(
+            core.decide_qos(&sample_svc(t2, 0.5, 90_000.0, 5_000.0), 1, DegradeLevel::Full),
+            QosAction::Degrade
+        );
+        // calm again: the pin is released before resolution is restored
+        let t3 = t2 + Duration::from_millis(60);
+        assert_eq!(
+            core.decide_qos(&sample_svc(t3, 0.0, 100.0, 200.0), 1, DegradeLevel::Half),
+            QosAction::ReleaseBackend
+        );
+        let t4 = t3 + Duration::from_millis(60);
+        assert_eq!(
+            core.decide_qos(&sample_svc(t4, 0.0, 100.0, 200.0), 1, DegradeLevel::Half),
+            QosAction::Restore
+        );
+    }
+
+    #[test]
+    fn swap_requires_service_time_pressure() {
+        // overloaded, but the 0.5ms service p99 is under the 1ms swap
+        // threshold: queueing is the problem, not the backend — the
+        // ladder (then capacity) handles it
+        let mut core = ControllerCore::new(swap_policy());
+        let t1 = Instant::now() + Duration::from_millis(200);
+        assert_eq!(
+            core.decide_qos(&sample_svc(t1, 0.5, 90_000.0, 500.0), 1, DegradeLevel::Full),
+            QosAction::Degrade
+        );
+    }
+
+    #[test]
+    fn routing_events_render_without_fake_resizes() {
+        let log = AutoscaleLog {
+            samples: Vec::new(),
+            events: vec![AutoscaleEvent {
+                at_s: 0.5,
+                from_shards: 2,
+                to_shards: 2,
+                from_level: DegradeLevel::Full,
+                to_level: DegradeLevel::Full,
+                reason: "pinning the fastest backend".into(),
+            }],
+        };
+        let out = log.render();
+        assert!(out.contains("routing  (pinning the fastest backend)"), "{out}");
+        assert!(!out.contains("2 -> 2 shards"), "{out}");
     }
 
     #[test]

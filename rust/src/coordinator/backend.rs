@@ -1,0 +1,684 @@
+//! Multi-backend routing: the controller's third actuator.
+//!
+//! The companion paper "A Statically and Dynamically Scalable Soft
+//! GPGPU" (arXiv:2401.04261) scales one engine across backends of
+//! different capability; this module is that split on the request path.
+//! A [`BackendSet`] holds the simulator execution service (the pool or
+//! the sharded scheduler, wrapped in a [`ServiceHandle`]) plus any
+//! number of registered *alternate* lanes implementing [`FftBackend`]
+//! (the PJRT fast path, when the `pjrt` feature and artifacts exist),
+//! and routes each request to the lane the **measured** cost model says
+//! is cheapest right now.
+//!
+//! Invariants:
+//!
+//! * **The cost model is measured, never assumed.** Per-lane,
+//!   per-size service time is an EWMA seeded by a calibration pass
+//!   ([`BackendSet::calibrate`]) and updated from every served request
+//!   — there is no hardcoded speedup constant anywhere. An alternate
+//!   lane is only routable for sizes it proved it can serve during
+//!   calibration; every other size goes to the simulator.
+//! * **Routing never changes numerics.** A set with no (or only
+//!   quarantined) alternates sends every request down the simulator
+//!   path unchanged, bitwise identical to the unrouted handle. The QoS
+//!   degrade level truncates the input to `len >> level.shift()`
+//!   *before* an alternate serves it — the same truncation the
+//!   simulator worker applies — so a degraded request is served on the
+//!   same samples whichever lane takes it.
+//! * **Fast-path results are spot-checked.** A configurable sampled
+//!   fraction of alternate-served requests
+//!   ([`BackendSetConfig::validate_fraction`], deterministic
+//!   fixed-point sampling — exact for 1%/10%/100%) is re-served by the
+//!   simulator and compared with [`super::cross_error`] against
+//!   [`crate::fft::F32_TOL`]. A mismatch increments the lane's counter,
+//!   **quarantines** the lane (the router stops sending it traffic),
+//!   and the caller receives the *simulator's* result — a corrupted
+//!   fast path can never leak a wrong answer that a scheduled check
+//!   caught.
+//! * **The router is the swap actuator.** [`RouteMode::Balance`] (the
+//!   default) scores a lane as `ewma_us * (1 + inflight/parallelism)`,
+//!   spreading load in proportion to measured capacity;
+//!   [`RouteMode::Fastest`] scores by raw EWMA, pinning all traffic to
+//!   the measured-fastest lane. The autoscale controller flips the mode
+//!   under service-time pressure
+//!   ([`super::AutoscalePolicy::swap_service_p99_ms`]) — the
+//!   swap-before-scale step — and releases it when the SLO is healthy.
+//!
+//! An alternate lane that *errors* is not trusted again blindly: the
+//! failure is counted, its cost entry for that size is penalized so the
+//! router backs off, and the request falls back to the simulator —
+//! every submitted request is still answered.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::BackendStat;
+use super::qos::DegradeLevel;
+use super::server::ServiceHandle;
+use super::{cross_error, FftResult, ServiceError};
+use crate::fft::{self, reference};
+use crate::runtime::PjrtHandle;
+
+/// An alternate FFT execution lane the router can send requests to.
+///
+/// Implementations must be thread-safe: the router calls [`FftBackend::fft`]
+/// concurrently from every dispatcher thread.
+pub trait FftBackend: Send + Sync {
+    /// Stable lane name, for metrics and rendering.
+    fn name(&self) -> &str;
+
+    /// Serve one transform on an interleaved `(re, im)` signal. The
+    /// input is already truncated to its served (post-degrade) size.
+    fn fft(&self, input: &[(f32, f32)]) -> Result<Vec<(f32, f32)>>;
+}
+
+impl FftBackend for PjrtHandle {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn fft(&self, input: &[(f32, f32)]) -> Result<Vec<(f32, f32)>> {
+        PjrtHandle::fft(self, input)
+    }
+}
+
+/// How the router weighs the measured cost model — the state the
+/// controller's swap actuator flips.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Score each lane as `ewma_us * (1 + inflight / parallelism)`:
+    /// requests spread across lanes in proportion to measured capacity
+    /// and back off a lane as its in-flight load builds.
+    Balance,
+    /// Score each lane by raw EWMA: every request goes to the
+    /// measured-fastest lane regardless of load — the controller's
+    /// swap-before-scale pin under service-time pressure.
+    Fastest,
+}
+
+impl RouteMode {
+    fn as_u8(self) -> u8 {
+        match self {
+            RouteMode::Balance => 0,
+            RouteMode::Fastest => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> RouteMode {
+        if v == 1 {
+            RouteMode::Fastest
+        } else {
+            RouteMode::Balance
+        }
+    }
+}
+
+/// Configuration for a [`BackendSet`].
+#[derive(Clone, Debug)]
+pub struct BackendSetConfig {
+    /// Fraction of alternate-served requests to cross-check against the
+    /// simulator, in `[0, 1]`. Sampling is deterministic (fixed-point
+    /// accumulator in 1/1000 steps), so 0.01 validates exactly every
+    /// 100th alternate-served request. `0.0` disables validation.
+    pub validate_fraction: f64,
+    /// Transform sizes the calibration pass seeds the cost model with.
+    /// Every size must be servable by the simulator; an alternate that
+    /// fails a size during calibration is simply not routable for it.
+    pub calibrate_sizes: Vec<usize>,
+    /// Timed samples per `(lane, size)` during calibration (after one
+    /// untimed warm-up serve).
+    pub calibrate_samples: usize,
+    /// EWMA smoothing factor in `(0, 1]` — the weight of the newest
+    /// measured service time.
+    pub ewma_alpha: f64,
+}
+
+impl Default for BackendSetConfig {
+    fn default() -> Self {
+        BackendSetConfig {
+            validate_fraction: 0.0,
+            calibrate_sizes: vec![256, 1024, 4096],
+            calibrate_samples: 2,
+            ewma_alpha: 0.25,
+        }
+    }
+}
+
+/// One lane's live counters and its slice of the cost model.
+#[derive(Default)]
+struct LaneStats {
+    inflight: AtomicU64,
+    served: AtomicU64,
+    failed: AtomicU64,
+    validate_checks: AtomicU64,
+    validate_mismatches: AtomicU64,
+    /// Accumulated measured service time over served requests, µs.
+    sum_us: AtomicU64,
+    quarantined: AtomicBool,
+    /// EWMA of measured service time by served size, µs.
+    cost: Mutex<HashMap<usize, f64>>,
+}
+
+impl LaneStats {
+    fn stat(&self, name: &str) -> BackendStat {
+        let served = self.served.load(Ordering::Relaxed);
+        BackendStat {
+            name: name.to_string(),
+            served,
+            failed: self.failed.load(Ordering::Relaxed),
+            validate_checks: self.validate_checks.load(Ordering::Relaxed),
+            validate_mismatches: self.validate_mismatches.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            mean_service_us: if served == 0 {
+                0.0
+            } else {
+                self.sum_us.load(Ordering::Relaxed) as f64 / served as f64
+            },
+        }
+    }
+}
+
+/// A registered alternate lane.
+struct Alternate {
+    name: String,
+    backend: Box<dyn FftBackend>,
+    /// Concurrent requests the lane serves without queueing (1 for the
+    /// single-threaded PJRT server).
+    parallelism: usize,
+    stats: LaneStats,
+}
+
+/// The simulator service plus alternate lanes, a measured per-backend
+/// cost model, and the router that picks a lane per request.
+///
+/// Wrapped in [`ServiceHandle::Routed`], the whole serving stack —
+/// `TrafficServer`, metrics, the autoscale controller — sees it as just
+/// another execution service; [`ServiceHandle::as_sharded`] delegates
+/// to the inner simulator handle, so shard autoscaling composes with
+/// routing.
+pub struct BackendSet {
+    cfg: BackendSetConfig,
+    /// The simulator execution service (never `Routed` — rejected at
+    /// construction, so routing never nests).
+    sim: Box<ServiceHandle>,
+    sim_stats: LaneStats,
+    alternates: Vec<Alternate>,
+    mode: AtomicU8,
+    /// Fixed-point (1/1000) validation-sampling accumulator.
+    validate_acc: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl BackendSet {
+    /// Build a set over the simulator service. Fails when `sim` is
+    /// itself routed (routing does not nest), or the configuration is
+    /// out of range.
+    pub fn new(sim: ServiceHandle, cfg: BackendSetConfig) -> Result<BackendSet> {
+        if matches!(sim, ServiceHandle::Routed(_)) {
+            return Err(anyhow!("BackendSet cannot wrap an already-routed ServiceHandle"));
+        }
+        if !(0.0..=1.0).contains(&cfg.validate_fraction) {
+            return Err(anyhow!(
+                "validate_fraction ({}) must be in [0, 1]",
+                cfg.validate_fraction
+            ));
+        }
+        if !(cfg.ewma_alpha > 0.0 && cfg.ewma_alpha <= 1.0) {
+            return Err(anyhow!("ewma_alpha ({}) must be in (0, 1]", cfg.ewma_alpha));
+        }
+        if cfg.calibrate_samples == 0 {
+            return Err(anyhow!("calibrate_samples must be at least 1"));
+        }
+        if cfg.calibrate_sizes.is_empty() {
+            return Err(anyhow!("calibrate_sizes must name at least one transform size"));
+        }
+        Ok(BackendSet {
+            cfg,
+            sim: Box::new(sim),
+            sim_stats: LaneStats::default(),
+            alternates: Vec::new(),
+            mode: AtomicU8::new(RouteMode::Balance.as_u8()),
+            validate_acc: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Register an alternate lane. `parallelism` is the number of
+    /// concurrent requests the lane serves without queueing (1 for the
+    /// single-threaded PJRT server). Names must be unique and not
+    /// `sim`.
+    pub fn register(
+        &mut self,
+        name: &str,
+        backend: Box<dyn FftBackend>,
+        parallelism: usize,
+    ) -> Result<()> {
+        if name == "sim" || self.alternates.iter().any(|a| a.name == name) {
+            return Err(anyhow!("backend lane name `{name}` already taken"));
+        }
+        if parallelism == 0 {
+            return Err(anyhow!("lane `{name}` needs parallelism of at least 1"));
+        }
+        self.alternates.push(Alternate {
+            name: name.to_string(),
+            backend,
+            parallelism,
+            stats: LaneStats::default(),
+        });
+        Ok(())
+    }
+
+    /// Seed the cost model: for each configured size, serve one warm-up
+    /// plus [`BackendSetConfig::calibrate_samples`] timed transforms on
+    /// the simulator and on every alternate, recording the mean as the
+    /// initial EWMA. An alternate that fails a size is left without a
+    /// cost entry for it — the router will never send it that size.
+    /// Calibration traffic does not count toward lane serve counters.
+    pub fn calibrate(&self) -> Result<()> {
+        for &points in &self.cfg.calibrate_sizes {
+            let input: Vec<(f32, f32)> =
+                reference::test_signal(points, 7).iter().map(|c| c.to_f32_pair()).collect();
+            self.sim_recv(input.clone())?; // warm: plan cache + resident SM
+            let mut total = 0.0;
+            for _ in 0..self.cfg.calibrate_samples {
+                let t0 = Instant::now();
+                self.sim_recv(input.clone())?;
+                total += t0.elapsed().as_secs_f64() * 1e6;
+            }
+            self.sim_stats
+                .cost
+                .lock()
+                .unwrap()
+                .insert(points, total / self.cfg.calibrate_samples as f64);
+            for alt in &self.alternates {
+                if alt.backend.fft(&input).is_err() {
+                    continue; // size unsupported by this lane
+                }
+                let mut total = 0.0;
+                let mut ok = true;
+                for _ in 0..self.cfg.calibrate_samples {
+                    let t0 = Instant::now();
+                    if alt.backend.fft(&input).is_err() {
+                        ok = false;
+                        break;
+                    }
+                    total += t0.elapsed().as_secs_f64() * 1e6;
+                }
+                if ok {
+                    alt.stats
+                        .cost
+                        .lock()
+                        .unwrap()
+                        .insert(points, total / self.cfg.calibrate_samples as f64);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The current routing mode (the swap actuator's state).
+    pub fn mode(&self) -> RouteMode {
+        RouteMode::from_u8(self.mode.load(Ordering::Relaxed))
+    }
+
+    /// Set the routing mode — the autoscale controller's swap actuator.
+    pub fn set_mode(&self, mode: RouteMode) {
+        self.mode.store(mode.as_u8(), Ordering::Relaxed);
+    }
+
+    /// The wrapped simulator execution service.
+    pub fn sim(&self) -> &ServiceHandle {
+        &self.sim
+    }
+
+    /// The configured validation sampling fraction.
+    pub fn validate_fraction(&self) -> f64 {
+        self.cfg.validate_fraction
+    }
+
+    /// Per-lane counters; the first entry is always the simulator lane.
+    pub fn stats(&self) -> Vec<BackendStat> {
+        let mut out = vec![self.sim_stats.stat("sim")];
+        out.extend(self.alternates.iter().map(|a| a.stats.stat(&a.name)));
+        out
+    }
+
+    /// Route one request and serve it. The returned channel is already
+    /// resolved or resolves when the simulator finishes — semantically
+    /// identical to the other [`ServiceHandle`] variants, whose
+    /// dispatcher blocks on the reply immediately after submitting.
+    pub fn submit(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
+        let points = input.len() >> level.shift();
+        let result = match self.route(points) {
+            None => self.serve_sim(input, level),
+            Some(idx) => self.serve_alternate(idx, input, level),
+        };
+        let (tx, rx) = channel();
+        let _ = tx.send(result);
+        rx
+    }
+
+    /// Drive every input through the router with `workers` concurrent
+    /// submitters; results come back in submission order and the first
+    /// failure, if any, is returned (mirroring
+    /// [`super::FftService::run_batch`]).
+    pub fn run_batch(
+        &self,
+        inputs: Vec<Vec<(f32, f32)>>,
+        workers: usize,
+    ) -> Result<Vec<FftResult>> {
+        let n = inputs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let jobs: Vec<Mutex<Option<Vec<(f32, f32)>>>> =
+            inputs.into_iter().map(|i| Mutex::new(Some(i))).collect();
+        let slots: Vec<Mutex<Option<Result<FftResult>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers.clamp(1, n) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let input = jobs[i].lock().unwrap().take().expect("each job taken once");
+                    let r = self
+                        .submit(input, DegradeLevel::Full)
+                        .recv()
+                        .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))
+                        .and_then(|r| r);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every slot filled"))
+            .collect()
+    }
+
+    /// Shut the simulator service down; alternate lanes are dropped
+    /// (the PJRT server thread exits when its last handle drops).
+    pub fn shutdown(self) {
+        (*self.sim).shutdown();
+    }
+
+    /// Pick a lane for a request of `points` served samples: `None` is
+    /// the simulator, `Some(i)` an alternate. Quarantined lanes and
+    /// lanes with no cost entry for the size are never chosen.
+    fn route(&self, points: usize) -> Option<usize> {
+        let mode = self.mode();
+        let mut best = None;
+        let mut best_score = self
+            .lane_score(&self.sim_stats, points, self.sim_parallelism(), mode)
+            .unwrap_or(f64::INFINITY);
+        for (i, alt) in self.alternates.iter().enumerate() {
+            if alt.stats.quarantined.load(Ordering::Relaxed) {
+                continue;
+            }
+            let Some(score) = self.lane_score(&alt.stats, points, alt.parallelism, mode) else {
+                continue;
+            };
+            if score < best_score {
+                best_score = score;
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    fn lane_score(
+        &self,
+        stats: &LaneStats,
+        points: usize,
+        parallelism: usize,
+        mode: RouteMode,
+    ) -> Option<f64> {
+        let ewma = stats.cost.lock().unwrap().get(&points).copied()?;
+        Some(match mode {
+            RouteMode::Fastest => ewma,
+            RouteMode::Balance => {
+                let load = stats.inflight.load(Ordering::Relaxed) as f64;
+                ewma * (1.0 + load / parallelism.max(1) as f64)
+            }
+        })
+    }
+
+    /// The simulator lane's parallelism, live — it tracks shard
+    /// autoscaling.
+    fn sim_parallelism(&self) -> usize {
+        match &*self.sim {
+            ServiceHandle::Pool(s) => s.config().cores,
+            ServiceHandle::Sharded(s) => s.shards().max(1),
+            ServiceHandle::Routed(_) => unreachable!("rejected in BackendSet::new"),
+        }
+    }
+
+    /// Deterministic sampling: accumulate `fraction` in 1/1000 steps
+    /// and validate each time the accumulator crosses a whole unit —
+    /// exact for 1%/10%/100%, and independent of timing.
+    fn should_validate(&self) -> bool {
+        if self.cfg.validate_fraction <= 0.0 {
+            return false;
+        }
+        let inc = (self.cfg.validate_fraction * 1000.0).round() as u64;
+        let prev = self.validate_acc.fetch_add(inc, Ordering::Relaxed);
+        (prev + inc) / 1000 > prev / 1000
+    }
+
+    fn update_cost(&self, stats: &LaneStats, points: usize, us: f64) {
+        let mut cost = stats.cost.lock().unwrap();
+        let entry = cost.entry(points).or_insert(us);
+        *entry = self.cfg.ewma_alpha * us + (1.0 - self.cfg.ewma_alpha) * *entry;
+    }
+
+    /// Serve through the simulator, metering the lane.
+    fn serve_sim(&self, input: Vec<(f32, f32)>, level: DegradeLevel) -> Result<FftResult> {
+        let points = input.len() >> level.shift();
+        self.sim_stats.inflight.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let result = self.sim.submit(input, level).recv();
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        self.sim_stats.inflight.fetch_sub(1, Ordering::Relaxed);
+        let result = result
+            .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))
+            .and_then(|r| r);
+        match &result {
+            Ok(_) => {
+                self.sim_stats.served.fetch_add(1, Ordering::Relaxed);
+                self.sim_stats.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+                self.update_cost(&self.sim_stats, points, us);
+            }
+            Err(_) => {
+                self.sim_stats.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        result
+    }
+
+    /// One un-metered simulator round-trip (calibration and validation
+    /// re-serves — traffic that must not skew the lane counters the
+    /// router tests and benches assert on).
+    fn sim_recv(&self, input: Vec<(f32, f32)>) -> Result<FftResult> {
+        self.sim
+            .submit(input, DegradeLevel::Full)
+            .recv()
+            .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))
+            .and_then(|r| r)
+    }
+
+    /// Serve on alternate `idx`, spot-checking a sampled fraction
+    /// against the simulator and falling back to it on lane failure.
+    fn serve_alternate(
+        &self,
+        idx: usize,
+        mut input: Vec<(f32, f32)>,
+        level: DegradeLevel,
+    ) -> Result<FftResult> {
+        let alt = &self.alternates[idx];
+        if level != DegradeLevel::Full {
+            // Same truncation the simulator worker applies: both lanes
+            // serve the identical degraded signal.
+            let keep = input.len() >> level.shift();
+            input.truncate(keep);
+        }
+        let points = input.len();
+        alt.stats.inflight.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let fast = alt.backend.fft(&input);
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        alt.stats.inflight.fetch_sub(1, Ordering::Relaxed);
+        match fast {
+            Ok(output) => {
+                if self.should_validate() {
+                    alt.stats.validate_checks.fetch_add(1, Ordering::Relaxed);
+                    let reference = self.sim_recv(input)?;
+                    if cross_error(&reference.output, &output) > fft::F32_TOL {
+                        alt.stats.validate_mismatches.fetch_add(1, Ordering::Relaxed);
+                        alt.stats.quarantined.store(true, Ordering::Relaxed);
+                        // The simulator is the trusted oracle: its
+                        // result is what the caller receives.
+                        return Ok(reference);
+                    }
+                }
+                alt.stats.served.fetch_add(1, Ordering::Relaxed);
+                alt.stats.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+                self.update_cost(&alt.stats, points, us);
+                Ok(FftResult {
+                    id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                    output,
+                    profile: None,
+                    core: usize::MAX,
+                    wall_us: us,
+                })
+            }
+            Err(_) => {
+                alt.stats.failed.fetch_add(1, Ordering::Relaxed);
+                // Penalize the lane's cost entry so the router backs
+                // off, then serve the request anyway via the simulator.
+                if let Some(e) = alt.stats.cost.lock().unwrap().get_mut(&points) {
+                    *e *= 8.0;
+                }
+                self.serve_sim(input, DegradeLevel::Full)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FftService, ServiceConfig};
+    use super::*;
+
+    fn sim_pool() -> ServiceHandle {
+        ServiceHandle::Pool(
+            FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap(),
+        )
+    }
+
+    fn set_with(fraction: f64) -> BackendSet {
+        BackendSet::new(
+            sim_pool(),
+            BackendSetConfig { validate_fraction: fraction, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(BackendSet::new(
+            sim_pool(),
+            BackendSetConfig { validate_fraction: 1.5, ..Default::default() }
+        )
+        .is_err());
+        assert!(BackendSet::new(
+            sim_pool(),
+            BackendSetConfig { ewma_alpha: 0.0, ..Default::default() }
+        )
+        .is_err());
+        assert!(BackendSet::new(
+            sim_pool(),
+            BackendSetConfig { calibrate_samples: 0, ..Default::default() }
+        )
+        .is_err());
+        assert!(BackendSet::new(
+            sim_pool(),
+            BackendSetConfig { calibrate_sizes: Vec::new(), ..Default::default() }
+        )
+        .is_err());
+        let set = set_with(0.0);
+        assert!(matches!(
+            BackendSet::new(ServiceHandle::Routed(set), BackendSetConfig::default()),
+            Err(_)
+        ));
+    }
+
+    #[test]
+    fn validation_sampling_is_deterministic_and_exact() {
+        for (fraction, want) in [(0.0, 0), (0.01, 10), (0.1, 100), (1.0, 1000)] {
+            let set = set_with(fraction);
+            let fired = (0..1000).filter(|_| set.should_validate()).count();
+            assert_eq!(fired, want, "fraction {fraction}");
+            set.shutdown();
+        }
+    }
+
+    #[test]
+    fn router_prefers_the_measured_cheaper_lane() {
+        struct Nop;
+        impl FftBackend for Nop {
+            fn name(&self) -> &str {
+                "nop"
+            }
+            fn fft(&self, input: &[(f32, f32)]) -> Result<Vec<(f32, f32)>> {
+                Ok(input.to_vec())
+            }
+        }
+        let mut set = set_with(0.0);
+        set.register("nop", Box::new(Nop), 1).unwrap();
+        set.sim_stats.cost.lock().unwrap().insert(256, 1000.0);
+        set.alternates[0].stats.cost.lock().unwrap().insert(256, 10.0);
+        assert_eq!(set.route(256), Some(0), "cheaper alternate wins");
+        // no cost entry for 1024 on the alternate: sim keeps the size
+        set.sim_stats.cost.lock().unwrap().insert(1024, 1000.0);
+        assert_eq!(set.route(1024), None);
+        // quarantine removes the lane from routing entirely
+        set.alternates[0].stats.quarantined.store(true, Ordering::Relaxed);
+        assert_eq!(set.route(256), None);
+        set.shutdown();
+    }
+
+    #[test]
+    fn balance_mode_backs_off_a_loaded_lane_and_fastest_pins_it() {
+        struct Nop;
+        impl FftBackend for Nop {
+            fn name(&self) -> &str {
+                "nop"
+            }
+            fn fft(&self, input: &[(f32, f32)]) -> Result<Vec<(f32, f32)>> {
+                Ok(input.to_vec())
+            }
+        }
+        let mut set = set_with(0.0);
+        set.register("nop", Box::new(Nop), 1).unwrap();
+        set.sim_stats.cost.lock().unwrap().insert(256, 100.0);
+        set.alternates[0].stats.cost.lock().unwrap().insert(256, 60.0);
+        // 4 requests in flight on the alternate: 60 * (1 + 4) = 300 > 100
+        set.alternates[0].stats.inflight.store(4, Ordering::Relaxed);
+        assert_eq!(set.route(256), None, "Balance backs off the loaded lane");
+        set.set_mode(RouteMode::Fastest);
+        assert_eq!(set.route(256), Some(0), "Fastest ignores load");
+        set.shutdown();
+    }
+}

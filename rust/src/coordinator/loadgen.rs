@@ -40,10 +40,12 @@ use crate::fft::reference;
 pub struct Rng(u64);
 
 impl Rng {
+    /// Seed the generator (0 is remapped — xorshift has no zero state).
     pub fn new(seed: u64) -> Self {
         Rng(seed.max(1))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x << 13;
@@ -58,6 +60,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Uniform pick from a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[(self.next_u64() % xs.len() as u64) as usize]
     }
@@ -66,7 +69,10 @@ impl Rng {
 /// Arrival process shape (both deliver the same mean offered rate).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArrivalPattern {
+    /// Exponentially distributed interarrival gaps at the offered rate.
     Poisson,
+    /// Back-to-back groups of `burst_size` requests at the same mean
+    /// rate.
     Burst,
 }
 
@@ -91,11 +97,15 @@ impl std::str::FromStr for ArrivalPattern {
     }
 }
 
+/// One load-test run: arrival process, offered rate and duration, the
+/// request mix, and the seed that makes the run reproducible.
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
+    /// Arrival process shape.
     pub pattern: ArrivalPattern,
     /// Offered load, requests/s.
     pub rate_hz: f64,
+    /// Length of the arrival window.
     pub duration: Duration,
     /// Requests per burst (Burst pattern only).
     pub burst_size: usize,
@@ -111,6 +121,7 @@ pub struct LoadgenConfig {
     pub class_mix: Vec<f64>,
     /// Per-request deadline (None = whatever the server defaults to).
     pub deadline: Option<Duration>,
+    /// RNG seed: same seed, same arrival offsets and request mix.
     pub seed: u64,
 }
 
@@ -134,10 +145,15 @@ impl Default for LoadgenConfig {
 /// per-class frontend counters after the run.
 #[derive(Clone, Debug)]
 pub struct ClassLoadRow {
+    /// Class name, as configured on the server.
     pub name: String,
+    /// The class's fair-share weight.
     pub weight: u32,
+    /// Requests the generator submitted to this class.
     pub submitted: u64,
+    /// Requests served to completion.
     pub completed: u64,
+    /// Requests rejected at admission (queue full).
     pub shed: u64,
     /// Expired in queue + served late.
     pub deadline_misses: u64,
@@ -170,29 +186,48 @@ impl ClassLoadRow {
 /// [`LoadReport::render`].
 #[derive(Clone, Debug)]
 pub struct LoadReport {
+    /// Arrival process the run used.
     pub pattern: ArrivalPattern,
+    /// Configured offered rate, requests/s.
     pub rate_hz: f64,
+    /// Configured arrival-window length, seconds.
     pub duration_s: f64,
+    /// Total submissions attempted.
     pub submitted: u64,
+    /// Requests served to completion.
     pub completed: u64,
+    /// Requests rejected at admission (queue full).
     pub shed: u64,
+    /// Requests that expired in queue past their deadline.
     pub expired: u64,
+    /// Requests served after their deadline had passed.
     pub late: u64,
+    /// Requests served at reduced resolution (any ladder level).
     pub degraded: u64,
+    /// Requests that failed with any other typed error.
     pub failed: u64,
     /// Reply channels that closed without any answer — always 0 unless
     /// the frontend dropped a request on the floor.
     pub lost: u64,
+    /// Completions dispatched from the high-priority (class 0) queue.
     pub served_high: u64,
+    /// Completions dispatched from lower-priority queues.
     pub served_low: u64,
+    /// Aged background promotions observed during the run.
     pub aged: u64,
+    /// Submission rate actually generated, requests/s.
     pub offered_rps: f64,
+    /// Completion rate actually achieved, requests/s.
     pub achieved_rps: f64,
+    /// `shed / submitted`.
     pub shed_rate: f64,
+    /// `(expired + late) / (completed + expired)`.
     pub deadline_miss_rate: f64,
     /// p50/p90/p99/p999/mean/max, µs.
     pub queue_wait_us: [f64; 6],
+    /// p50/p90/p99/p999/mean/max, µs.
     pub service_time_us: [f64; 6],
+    /// Wall time from first submission to last reply, seconds.
     pub elapsed_s: f64,
     /// Every submission got a result or a typed error.
     pub accounted: bool,
@@ -201,6 +236,8 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
+    /// Serialize the report as a self-contained JSON object (no
+    /// dependencies — hand-written RFC 8259 escaping for class names).
     pub fn to_json(&self) -> String {
         let lat = |l: &[f64; 6]| {
             format!(
@@ -275,6 +312,7 @@ impl LoadReport {
         s
     }
 
+    /// Human-readable multi-line summary of the run.
     pub fn render(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(

@@ -51,6 +51,7 @@ impl LatencyRecorder {
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A point-in-time copy of the recorder's counters.
     pub fn snapshot(&self) -> LatencyStats {
         let mut buckets = [0u64; LATENCY_LOG_BUCKETS];
         for (out, b) in buckets.iter_mut().zip(&self.buckets) {
@@ -68,13 +69,18 @@ impl LatencyRecorder {
 /// A point-in-time copy of a [`LatencyRecorder`].
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
+    /// Samples recorded.
     pub count: u64,
+    /// Sum of all samples, µs.
     pub sum_us: f64,
+    /// Largest sample, µs.
     pub max_us: f64,
+    /// Log₂ bucket counts (see [`LATENCY_LOG_BUCKETS`]).
     pub buckets: [u64; LATENCY_LOG_BUCKETS],
 }
 
 impl LatencyStats {
+    /// Mean sample, µs (0 with no samples).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -125,21 +131,30 @@ impl LatencyStats {
 /// `TrafficServer::metrics` — the per-class slice of [`ServerStats`].
 #[derive(Clone, Debug, Default)]
 pub struct ClassStats {
+    /// Class name, from the [`super::qos::QosClass`] configuration.
     pub name: String,
     /// Fair-share weight (0 = background class).
     pub weight: u32,
     /// Resolved admission-queue capacity for this class.
     pub capacity: usize,
+    /// `submit` calls naming this class, admitted or shed.
     pub submitted: u64,
+    /// Requests that entered this class's admission queue.
     pub admitted: u64,
+    /// Requests served to successful completion.
     pub completed: u64,
+    /// Requests rejected at admission (queue full).
     pub shed: u64,
+    /// Requests whose deadline expired while queued.
     pub expired: u64,
+    /// Requests served to completion but past their deadline.
     pub late: u64,
+    /// Requests that failed in the backend.
     pub failed: u64,
-    /// Dispatches served at half / quarter resolution (the degrade
-    /// ladder's per-level accounting).
+    /// Dispatches served at half resolution (the degrade ladder's
+    /// per-level accounting).
     pub degraded_half: u64,
+    /// Dispatches served at quarter resolution.
     pub degraded_quarter: u64,
     /// Aged promotions of this class's requests ahead of weighted work.
     pub aged: u64,
@@ -217,8 +232,9 @@ pub struct ServerStats {
     pub late: u64,
     /// Requests that failed in the backend (typed error delivered).
     pub failed: u64,
-    /// Completions by priority class.
+    /// Completions in class 0 (the legacy "high priority" aggregate).
     pub served_high: u64,
+    /// Completions in every other class (legacy "low priority").
     pub served_low: u64,
     /// Low-priority dequeues forced ahead of waiting high-priority work
     /// by the aging rule (the starvation-freedom mechanism firing).
@@ -297,6 +313,9 @@ impl ServerStats {
     }
 }
 
+/// The execution layer's shared counter block: workers call
+/// [`Metrics::observe`] per job and consumers read a coherent
+/// [`MetricsSnapshot`].
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -323,6 +342,8 @@ struct Inner {
 }
 
 impl Metrics {
+    /// Record one successfully served job: its (post-degrade) size,
+    /// wall latency, and cycle profile when the simulator ran it.
     pub fn observe(&self, points: usize, wall_us: f64, profile: Option<&Profile>) {
         let mut m = self.inner.lock().unwrap();
         m.served += 1;
@@ -337,6 +358,7 @@ impl Metrics {
         }
     }
 
+    /// Record one failed job.
     pub fn observe_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
@@ -350,6 +372,9 @@ impl Metrics {
         m.max_batch_jobs = m.max_batch_jobs.max(jobs as u64);
     }
 
+    /// A coherent copy of the counters. Layer-specific fields
+    /// (plan cache, shards, frontend, backends) are zero/empty here —
+    /// each service's own `metrics()` fills in the parts it owns.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -369,8 +394,34 @@ impl Metrics {
             steals: 0,
             agg_jobs_per_s: 0.0,
             server: ServerStats::default(),
+            backends: Vec::new(),
         }
     }
+}
+
+/// One routed backend lane's counters, as captured by
+/// `ServiceHandle::metrics` on a routed set (empty for unrouted
+/// services). The first entry is always the simulator lane.
+#[derive(Clone, Debug, Default)]
+pub struct BackendStat {
+    /// Lane name (`sim`, `pjrt`, ...).
+    pub name: String,
+    /// Requests this lane served to completion (excludes calibration
+    /// and validation re-serves).
+    pub served: u64,
+    /// Requests that failed on this lane (alternate-lane failures fall
+    /// back to the simulator, but are still counted here).
+    pub failed: u64,
+    /// Alternate-served results cross-checked against the simulator.
+    pub validate_checks: u64,
+    /// Cross-checks that disagreed beyond tolerance. Any mismatch
+    /// quarantines the lane.
+    pub validate_mismatches: u64,
+    /// The router no longer sends this lane traffic (a validation
+    /// cross-check failed).
+    pub quarantined: bool,
+    /// Mean measured service time over served requests, µs.
+    pub mean_service_us: f64,
 }
 
 /// One shard's scheduler counters, as captured by
@@ -412,15 +463,26 @@ pub struct ShardStat {
     pub retired: bool,
 }
 
+/// A coherent point-in-time view of the whole serving stack's
+/// counters: execution layer, plan cache, shards, traffic frontend,
+/// and routed backends — each layer fills in the parts it owns.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Jobs served to successful completion.
     pub served: u64,
+    /// Jobs that failed with an error.
     pub errors: u64,
+    /// Served jobs by (post-degrade) transform size.
     pub by_points: HashMap<usize, u64>,
+    /// Mean wall latency over served jobs, µs.
     pub mean_wall_us: f64,
+    /// Largest wall latency observed, µs.
     pub max_wall_us: f64,
+    /// Wall-latency histogram over [`LATENCY_BUCKETS_US`].
     pub latency_hist: [u64; 8],
+    /// Accumulated simulated eGPU time (µs at the variant Fmax).
     pub virtual_us: f64,
+    /// Accumulated cycle profile across all simulated jobs.
     pub aggregate_profile: Profile,
     /// Coalesced batches served through `submit_batch`.
     pub batches: u64,
@@ -443,6 +505,9 @@ pub struct MetricsSnapshot {
     /// Traffic-frontend counters (filled in by `TrafficServer::metrics`;
     /// all-zero for services running without an admission layer).
     pub server: ServerStats,
+    /// Per-backend routing counters (filled in by
+    /// `ServiceHandle::metrics` on a routed set; empty otherwise).
+    pub backends: Vec<BackendStat>,
 }
 
 impl MetricsSnapshot {
@@ -481,6 +546,8 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Human-readable multi-line rendering; sections appear only for
+    /// the layers that saw traffic.
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
@@ -599,6 +666,22 @@ impl MetricsSnapshot {
                     sh.occupancy,
                     sh.queue_depth,
                     sh.max_queue_depth
+                ));
+            }
+        }
+        if !self.backends.is_empty() {
+            s.push_str(&format!("  backends: {}\n", self.backends.len()));
+            for b in &self.backends {
+                s.push_str(&format!(
+                    "    {}{}: served {} (failed {}), mean {:.0}us, validate {}/{} \
+                     mismatched\n",
+                    b.name,
+                    if b.quarantined { " [quarantined]" } else { "" },
+                    b.served,
+                    b.failed,
+                    b.mean_service_us,
+                    b.validate_mismatches,
+                    b.validate_checks
                 ));
             }
         }
@@ -831,6 +914,35 @@ mod tests {
         assert!(out.contains("frontend: 4 submitted, 3 admitted"), "{out}");
         assert!(out.contains("queue wait"), "{out}");
         assert!(out.contains("service time"), "{out}");
+    }
+
+    #[test]
+    fn backend_stats_render() {
+        let mut s = Metrics::default().snapshot();
+        assert!(!s.render().contains("backends:"));
+        s.backends = vec![
+            BackendStat {
+                name: "sim".into(),
+                served: 90,
+                mean_service_us: 1500.0,
+                ..Default::default()
+            },
+            BackendStat {
+                name: "pjrt".into(),
+                served: 10,
+                failed: 1,
+                validate_checks: 5,
+                validate_mismatches: 1,
+                quarantined: true,
+                mean_service_us: 80.0,
+                ..Default::default()
+            },
+        ];
+        let out = s.render();
+        assert!(out.contains("backends: 2"), "{out}");
+        assert!(out.contains("sim: served 90 (failed 0), mean 1500us"), "{out}");
+        assert!(out.contains("pjrt [quarantined]: served 10 (failed 1)"), "{out}");
+        assert!(out.contains("validate 1/5 mismatched"), "{out}");
     }
 
     #[test]

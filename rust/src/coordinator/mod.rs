@@ -52,8 +52,19 @@
 //! from the frontend's periodic [`server::PressureSample`] feed against
 //! an SLO target — capacity follows traffic instead of being
 //! provisioned for peak (`egpu-fft serve --autoscale`).
+//!
+//! Above both execution services sits multi-backend routing
+//! ([`backend::BackendSet`], `egpu-fft serve --backends sim,pjrt`): a
+//! measured per-backend, per-size cost model (EWMA seeded by a
+//! startup calibration pass) picks a lane per request, a sampled
+//! fraction of fast-path results is cross-checked bitwise against the
+//! simulator (mismatch ⇒ counter + quarantine), and the autoscale
+//! controller drives the routing mode as its third actuator — pinning
+//! the measured-fastest lane under service-time pressure before it
+//! degrades resolution or resizes the pool.
 
 pub mod autoscale;
+pub mod backend;
 pub mod loadgen;
 pub mod metrics;
 pub mod qos;
@@ -80,8 +91,11 @@ pub use autoscale::{
     AutoscaleController, AutoscaleEvent, AutoscaleLog, AutoscalePolicy, AutoscaleSample,
     ControllerCore, QosAction, ScaleAction,
 };
+pub use backend::{BackendSet, BackendSetConfig, FftBackend, RouteMode};
 pub use loadgen::{ArrivalPattern, ClassLoadRow, LoadReport, LoadgenConfig};
-pub use metrics::{ClassStats, LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat};
+pub use metrics::{
+    BackendStat, ClassStats, LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat,
+};
 pub use qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
 pub use server::{AdmissionPolicy, DegradeControl, RequestOpts, ServedFft, ServerConfig};
 pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
@@ -110,6 +124,12 @@ pub enum ServiceError {
     /// The execution backend failed the request (rendered message).
     #[error("backend error: {0}")]
     Backend(String),
+    /// An actuator was configured over a service shape that cannot
+    /// support it (e.g. autoscaling the fixed-size pool service, or
+    /// the backend-swap actuator without a routed backend set) —
+    /// rejected up front instead of erroring after startup work.
+    #[error("actuator/service mismatch: {0}")]
+    ActuatorMismatch(String),
 }
 
 /// Which execution engine serves a request.
@@ -123,13 +143,16 @@ pub enum Backend {
     Validate,
 }
 
+/// Configuration for an [`FftService`] worker pool.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Number of simulated eGPU cores (worker threads).
     pub cores: usize,
+    /// The simulated eGPU design point each core models.
     pub variant: Variant,
     /// Nominal radix for generated programs (16 = the paper's best).
     pub radix: usize,
+    /// Which execution engine serves requests.
     pub backend: Backend,
     /// Directory holding `fft{N}.hlo.txt` artifacts.
     pub artifacts_dir: String,
@@ -153,7 +176,9 @@ impl Default for ServiceConfig {
 /// A served FFT result.
 #[derive(Clone, Debug)]
 pub struct FftResult {
+    /// Service-assigned job id (submission order).
     pub id: u64,
+    /// The transform, interleaved `(re, im)` at the served size.
     pub output: Vec<(f32, f32)>,
     /// Cycle profile (simulator backends only).
     pub profile: Option<Profile>,
@@ -221,6 +246,9 @@ pub struct FftService {
 }
 
 impl FftService {
+    /// Spawn the worker pool (and, for PJRT-backed configurations, the
+    /// dedicated PJRT server thread). Fails on a zero-core or invalid
+    /// variant configuration, or when the PJRT engine cannot start.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         if cfg.cores == 0 {
             return Err(anyhow!("need at least one core"));
@@ -363,6 +391,7 @@ impl FftService {
         &self.plans
     }
 
+    /// The configuration the service was started with.
     pub fn config(&self) -> &ServiceConfig {
         &self.cfg
     }

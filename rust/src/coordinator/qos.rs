@@ -52,9 +52,12 @@ use anyhow::{anyhow, Result};
 /// the controller's operating level.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DegradeLevel {
+    /// Serve the request at its submitted size.
     #[default]
     Full,
+    /// Serve the first half of the input (one right-shift of the size).
     Half,
+    /// Serve the first quarter of the input (two right-shifts).
     Quarter,
 }
 
@@ -136,6 +139,7 @@ impl std::str::FromStr for DegradeLevel {
 /// asks for.
 #[derive(Clone, Copy, Debug)]
 pub struct DegradeLadder {
+    /// Smallest truncated transform size any degrade level may produce.
     pub min_points: usize,
 }
 
@@ -168,6 +172,7 @@ impl DegradeLadder {
 /// One traffic class of the QoS frontend.
 #[derive(Clone, Debug)]
 pub struct QosClass {
+    /// Class name, as reported in metrics and load reports.
     pub name: String,
     /// Fair-share weight. Positive weights share dispatch slots in
     /// proportion (deficit round-robin); weight 0 marks a *background*
@@ -184,15 +189,19 @@ pub struct QosClass {
 }
 
 impl QosClass {
+    /// A class with the given name and fair-share weight; capacity and
+    /// default deadline fall back to server-level settings.
     pub fn new(name: &str, weight: u32) -> QosClass {
         QosClass { name: name.into(), weight, capacity: 0, deadline_default: None }
     }
 
+    /// Builder: set an explicit per-class admission-queue capacity.
     pub fn with_capacity(mut self, capacity: usize) -> QosClass {
         self.capacity = capacity;
         self
     }
 
+    /// Builder: set the class's default relative deadline.
     pub fn with_deadline(mut self, deadline: Duration) -> QosClass {
         self.deadline_default = Some(deadline);
         self
@@ -222,16 +231,23 @@ pub struct Queued<T> {
     /// Admission sequence number (monotonic, scheduler-wide): the EDF
     /// tiebreak and the FIFO order for deadline-less requests.
     pub seq: u64,
+    /// Index of the class this request was admitted into.
     pub class: usize,
+    /// Absolute deadline, if the submission (or class default) set one.
     pub deadline: Option<Instant>,
+    /// Admission instant, as injected by the caller — the aging clock.
     pub enqueued: Instant,
+    /// The caller's opaque request payload.
     pub payload: T,
 }
 
 /// A dispatched request plus whether the aging rule promoted it ahead
 /// of waiting weighted work.
 pub struct Popped<T> {
+    /// The dispatched request.
     pub item: Queued<T>,
+    /// `true` when the aging rule jumped this request ahead of queued
+    /// weighted work.
     pub aged: bool,
 }
 
@@ -249,6 +265,27 @@ pub struct Popped<T> {
 /// If per-class caps ever grow by orders of magnitude, swap the `Vec`
 /// for a `BinaryHeap` keyed on `(deadline, seq)` plus an arrival-order
 /// index for the aging scan.
+///
+/// ```
+/// use std::time::{Duration, Instant};
+///
+/// use egpu_fft::coordinator::{QosClass, QosScheduler};
+///
+/// // The legacy two-priority shape: high (weight 1) strictly before
+/// // low (weight 0, background).
+/// let classes = vec![QosClass::new("high", 1), QosClass::new("low", 0)];
+/// let mut sched: QosScheduler<&str> =
+///     QosScheduler::new(classes, vec![16, 16], Duration::from_secs(1));
+///
+/// let now = Instant::now();
+/// sched.try_enqueue(1, None, now, "background").unwrap();
+/// sched.try_enqueue(0, None, now, "urgent").unwrap();
+///
+/// // Weighted work wins the slot; background drains afterwards.
+/// assert_eq!(sched.pop(now).unwrap().item.payload, "urgent");
+/// assert_eq!(sched.pop(now).unwrap().item.payload, "background");
+/// assert!(sched.is_empty());
+/// ```
 pub struct QosScheduler<T> {
     classes: Vec<QosClass>,
     caps: Vec<usize>,
@@ -286,22 +323,27 @@ impl<T> QosScheduler<T> {
         }
     }
 
+    /// The configured classes, in index order.
     pub fn classes(&self) -> &[QosClass] {
         &self.classes
     }
 
+    /// Resolved admission capacity of `class`.
     pub fn capacity(&self, class: usize) -> usize {
         self.caps[class]
     }
 
+    /// Number of requests currently queued in `class`.
     pub fn depth(&self, class: usize) -> usize {
         self.queues[class].len()
     }
 
+    /// Total queued requests across every class.
     pub fn total_depth(&self) -> usize {
         self.queues.iter().map(Vec::len).sum()
     }
 
+    /// `true` when no class has queued work.
     pub fn is_empty(&self) -> bool {
         self.queues.iter().all(Vec::is_empty)
     }

@@ -4,8 +4,9 @@
 //! PR 1/2 built the execution side (batched dispatch, shared plan
 //! cache, sharded scheduler) and PR 4 made capacity elastic; this
 //! module is the front door that decides *who* gets that capacity. A
-//! [`TrafficServer`] wraps either execution service (see
-//! [`ServiceHandle`]) with:
+//! [`TrafficServer`] wraps an execution service — the single-queue
+//! pool, the sharded scheduler, or a routed multi-backend set (see
+//! [`ServiceHandle`]) — with:
 //!
 //! * **N QoS classes** ([`super::qos::QosClass`], configured through
 //!   [`ServerConfig::classes`]) — each with a fair-share weight, a
@@ -55,6 +56,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::backend::BackendSet;
 use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
 use super::qos::{
     default_two_class, resolve_capacities, DegradeLadder, DegradeLevel, QosClass, QosScheduler,
@@ -95,10 +97,12 @@ pub struct RequestOpts {
 }
 
 impl RequestOpts {
+    /// Options addressing QoS class `class`, with no explicit deadline.
     pub fn class(class: usize) -> RequestOpts {
         RequestOpts { class, deadline: None }
     }
 
+    /// Attach a relative deadline to these options.
     pub fn with_deadline(mut self, deadline: Duration) -> RequestOpts {
         self.deadline = Some(deadline);
         self
@@ -123,6 +127,7 @@ pub struct ServerConfig {
     /// need a tight total memory bound should set `QosClass::capacity`
     /// explicitly.
     pub queue_capacity: usize,
+    /// What happens when a request's class queue is full.
     pub policy: AdmissionPolicy,
     /// Dispatcher threads — also the in-flight bound on the wrapped
     /// execution service.
@@ -159,6 +164,7 @@ impl Default for ServerConfig {
 /// wait and service time.
 #[derive(Clone, Debug)]
 pub struct ServedFft {
+    /// The execution-layer result (output, profile, serving core).
     pub result: FftResult,
     /// The QoS class this request was submitted under.
     pub class: usize,
@@ -178,42 +184,75 @@ pub struct ServedFft {
 /// What a [`TrafficServer::submit`] reply channel yields.
 pub type ServerResult = std::result::Result<ServedFft, ServiceError>;
 
-/// Either execution service, so the frontend (and the load generator)
-/// can sit on the single-queue pool or the sharded scheduler.
+/// An execution service behind the frontend: the single-queue pool,
+/// the sharded scheduler, or a routed multi-backend set (which itself
+/// wraps one of the first two as its simulator lane).
 pub enum ServiceHandle {
+    /// The single shared-queue worker pool ([`FftService`]).
     Pool(FftService),
+    /// The elastic sharded scheduler ([`ShardedFftService`]).
     Sharded(ShardedFftService),
+    /// A routed multi-backend set ([`BackendSet`]): a simulator lane
+    /// plus alternate lanes behind a measured cost model and sampled
+    /// validation.
+    Routed(BackendSet),
 }
 
 impl ServiceHandle {
-    fn submit(&self, input: Vec<(f32, f32)>, level: DegradeLevel) -> Receiver<Result<FftResult>> {
+    pub(super) fn submit(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
         match self {
             ServiceHandle::Pool(s) => s.submit_degraded(input, level),
             ServiceHandle::Sharded(s) => s.submit_degraded(input, level),
+            ServiceHandle::Routed(s) => s.submit(input, level),
         }
     }
 
     /// Execution-layer metrics (the frontend merges its own on top).
+    /// For a routed set this is the simulator lane's snapshot with the
+    /// per-backend counters ([`MetricsSnapshot::backends`]) merged in.
     pub fn metrics(&self) -> MetricsSnapshot {
         match self {
             ServiceHandle::Pool(s) => s.metrics(),
             ServiceHandle::Sharded(s) => s.metrics(),
+            ServiceHandle::Routed(s) => {
+                let mut snap = s.sim().metrics();
+                snap.backends = s.stats();
+                snap
+            }
         }
     }
 
     /// The sharded scheduler, when that is what this handle wraps —
-    /// the resizable backend the autoscale controller needs.
+    /// the resizable backend the autoscale controller needs. A routed
+    /// set delegates to its simulator lane, so shard autoscaling
+    /// composes with backend routing.
     pub fn as_sharded(&self) -> Option<&ShardedFftService> {
         match self {
             ServiceHandle::Sharded(s) => Some(s),
             ServiceHandle::Pool(_) => None,
+            ServiceHandle::Routed(s) => s.sim().as_sharded(),
         }
     }
 
+    /// The routed backend set, when that is what this handle wraps —
+    /// the swap actuator the autoscale controller drives.
+    pub fn as_routed(&self) -> Option<&BackendSet> {
+        match self {
+            ServiceHandle::Routed(s) => Some(s),
+            ServiceHandle::Pool(_) | ServiceHandle::Sharded(_) => None,
+        }
+    }
+
+    /// Shut the wrapped execution service down (drains in-flight work).
     pub fn shutdown(self) {
         match self {
             ServiceHandle::Pool(s) => s.shutdown(),
             ServiceHandle::Sharded(s) => s.shutdown(),
+            ServiceHandle::Routed(s) => s.shutdown(),
         }
     }
 }
@@ -360,10 +399,12 @@ pub struct DegradeControl {
 }
 
 impl DegradeControl {
+    /// The current operating degrade level.
     pub fn get(&self) -> DegradeLevel {
         DegradeLevel::from_u8(self.level.load(Ordering::Relaxed))
     }
 
+    /// Set the operating degrade level directly.
     pub fn set(&self, level: DegradeLevel) {
         self.level.store(level.as_u8(), Ordering::Relaxed);
     }
@@ -469,6 +510,26 @@ pub struct TrafficServer {
 }
 
 impl TrafficServer {
+    /// Start the frontend over an execution service: validate the QoS
+    /// class configuration, resolve per-class queue capacities, and
+    /// spawn the dispatcher pool.
+    ///
+    /// ```
+    /// use egpu_fft::coordinator::{
+    ///     FftService, RequestOpts, ServerConfig, ServiceConfig, ServiceHandle, TrafficServer,
+    /// };
+    ///
+    /// let service = ServiceHandle::Pool(FftService::start(ServiceConfig {
+    ///     cores: 1,
+    ///     ..Default::default()
+    /// })?);
+    /// let server = TrafficServer::start(service, ServerConfig::default())?;
+    /// let reply = server.submit(vec![(1.0, 0.0); 256], RequestOpts::default())?;
+    /// let served = reply.recv()?.expect("request served");
+    /// assert_eq!(served.result.output.len(), 256);
+    /// server.shutdown();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn start(inner: ServiceHandle, cfg: ServerConfig) -> Result<Self> {
         if cfg.classes.is_empty() {
             return Err(anyhow!("at least one QoS class is required"));
@@ -662,6 +723,7 @@ impl TrafficServer {
         snap
     }
 
+    /// The configuration the server was started with.
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
     }

@@ -223,6 +223,9 @@ pub struct ShardedFftService {
 }
 
 impl ShardedFftService {
+    /// Spawn the shard pool: `cfg.shards` worker shards (0 = one per
+    /// hardware thread), a shared plan cache, and — for the PJRT
+    /// backends — the runtime server thread.
     pub fn start(cfg: ShardPoolConfig) -> Result<Self> {
         if !cfg.service.variant.is_valid() {
             return Err(anyhow!("invalid variant {}", cfg.service.variant));
@@ -554,6 +557,7 @@ impl ShardedFftService {
         &self.plans
     }
 
+    /// The configuration the pool was started with.
     pub fn config(&self) -> &ShardPoolConfig {
         &self.cfg
     }

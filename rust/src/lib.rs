@@ -40,6 +40,12 @@
 //!   latency histograms; [`coordinator::loadgen`] drives it with
 //!   open-loop Poisson or burst traffic (`egpu-fft loadtest`) and every
 //!   failure is a typed [`coordinator::ServiceError`].
+//!   [`coordinator::BackendSet`] adds multi-backend routing on top: a
+//!   measured per-backend cost model picks the simulator or the PJRT
+//!   fast path per request, a sampled fraction of fast-path results is
+//!   cross-checked against the simulator, and the autoscale controller
+//!   can pin the fastest lane under service-time pressure
+//!   (`egpu-fft serve --backends sim,pjrt`).
 //!
 //! The PJRT fast path compiles only with the `pjrt` cargo feature
 //! (it binds the vendored `xla` crate); the default build substitutes
@@ -48,6 +54,7 @@
 
 pub mod apps;
 pub mod arch;
+#[deny(missing_docs)]
 pub mod coordinator;
 pub mod fft;
 pub mod floorplan;

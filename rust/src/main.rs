@@ -10,10 +10,12 @@ use anyhow::{anyhow, bail, Result};
 use egpu_fft::arch::{SmConfig, Variant};
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    DegradeLevel, FftService, LoadgenConfig, QosClass, RequestOpts, ServerConfig, ServiceConfig,
-    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    BackendSet, BackendSetConfig, DegradeLevel, FftService, LoadgenConfig, QosClass, RequestOpts,
+    ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService,
+    TrafficServer,
 };
 use egpu_fft::fft::{self, reference};
+use egpu_fft::runtime::spawn_pjrt_server;
 use egpu_fft::report;
 
 fn main() {
@@ -48,6 +50,18 @@ USAGE:
                                       0 = one shard per hardware thread;
                                       --shards replaces --cores — each
                                       shard runs one resident-SM worker)
+  egpu-fft serve --backends sim,pjrt [--validate-fraction F]
+                 [--cores K | --shards N] [--requests N] [--points P]
+                 [--workers W]
+                                     multi-backend routing demo: a
+                                     calibration pass seeds a measured
+                                     per-lane cost model, the router
+                                     picks a lane per request, and a
+                                     sampled fraction F of fast-path
+                                     results is cross-checked against
+                                     the simulator (when the pjrt lane
+                                     is unavailable the set degrades to
+                                     sim-only routing)
   egpu-fft serve --qos-classes NAME:W[:CAP[:DL_MS]],...
                  [--requests N] [--points P] [--shards N]
                  [--policy block|shed|degrade]
@@ -60,6 +74,7 @@ USAGE:
   egpu-fft serve --autoscale [--min-shards A] [--max-shards B]
                  [--target-p99-ms X] [--max-shed-rate F]
                  [--degrade half|quarter]
+                 [--swap-p99-ms X --backends sim,pjrt]
                  [--rate R] [--duration S] [--queue-capacity N]
                                      elastic serving demo: an SLO-driven
                                      controller grows/shrinks the shard
@@ -70,7 +85,12 @@ USAGE:
                                      time, and before/after shed rates
                                      (--degrade arms the resolution
                                       ladder: bursts are served coarser
-                                      before any shard is added)
+                                      before any shard is added;
+                                      --swap-p99-ms arms the backend
+                                      swap: when service p99 exceeds X
+                                      ms the controller pins the
+                                      measured-fastest lane before
+                                      scaling — requires --backends)
   egpu-fft loadtest [--pattern poisson|burst] [--rate R] [--duration S]
                  [--policy block|shed|degrade] [--queue-capacity N]
                  [--qos-classes NAME:W[:CAP[:DL_MS]],...]
@@ -281,6 +301,9 @@ fn run() -> Result<()> {
             }
             if f.contains_key("qos-classes") {
                 return serve_qos(&f);
+            }
+            if f.contains_key("backends") {
+                return serve_routed(&f);
             }
             let cores: usize = f.get("cores").map(|s| s.parse()).transpose()?.unwrap_or(4);
             let requests: usize =
@@ -517,6 +540,109 @@ fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Register each lane from a `--backends` comma list. `sim` is the
+/// always-present reference lane; a `pjrt` lane that cannot spawn (no
+/// `pjrt` feature, or missing artifacts) degrades to sim-only routing
+/// with a note, so the command runs in any build.
+fn register_backends(set: &mut BackendSet, spec: &str) -> Result<()> {
+    for name in spec.split(',').map(str::trim).filter(|n| !n.is_empty()) {
+        match name {
+            "sim" => {}
+            "pjrt" => match spawn_pjrt_server("artifacts") {
+                Ok((handle, _server)) => set.register("pjrt", Box::new(handle), 1)?,
+                Err(e) => {
+                    eprintln!("note: pjrt lane unavailable ({e:#}); routing sim-only");
+                }
+            },
+            other => bail!("unknown backend `{other}` in --backends (sim|pjrt)"),
+        }
+    }
+    Ok(())
+}
+
+/// `serve --backends`: the multi-backend routing demo. Builds the
+/// simulator service (pool, or sharded with `--shards`), registers the
+/// requested alternate lanes, seeds the measured cost model with a
+/// calibration pass, then drives `--requests` transforms through the
+/// router and prints the per-lane serve counters.
+fn serve_routed(f: &HashMap<String, String>) -> Result<()> {
+    let spec = f.get("backends").expect("dispatched on the flag's presence");
+    let requests: usize = f.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let points: usize = f.get("points").map(|s| s.parse()).transpose()?.unwrap_or(1024);
+    let validate_fraction: f64 =
+        f.get("validate-fraction").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    let workers: usize = f.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let sim = if let Some(shards) = f.get("shards") {
+        ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+            shards: shards.parse()?,
+            service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+            ..Default::default()
+        })?)
+    } else {
+        let cores: usize = f.get("cores").map(|s| s.parse()).transpose()?.unwrap_or(4);
+        ServiceHandle::Pool(FftService::start(ServiceConfig { cores, ..Default::default() })?)
+    };
+    let mut set = BackendSet::new(
+        sim,
+        BackendSetConfig {
+            validate_fraction,
+            calibrate_sizes: vec![points],
+            ..Default::default()
+        },
+    )?;
+    register_backends(&mut set, spec)?;
+    set.calibrate()?;
+    let handle = ServiceHandle::Routed(set);
+    let inputs: Vec<Vec<(f32, f32)>> = (0..requests)
+        .map(|i| {
+            reference::test_signal(points, i as u64)
+                .iter()
+                .map(|c| c.to_f32_pair())
+                .collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = handle
+        .as_routed()
+        .expect("just wrapped")
+        .run_batch(inputs, workers)?;
+    let wall = t0.elapsed();
+    println!(
+        "served {} fft{points} requests routed over [{spec}] in {:.1} ms ({:.0} req/s)",
+        results.len(),
+        wall.as_secs_f64() * 1e3,
+        results.len() as f64 / wall.as_secs_f64()
+    );
+    print!("{}", handle.metrics().render());
+    handle.shutdown();
+    Ok(())
+}
+
+/// Validate the `serve --autoscale` flag combination before any
+/// service threads start: the controller resizes the *sharded*
+/// service, so the fixed-size pool (`--cores`) cannot be its scaling
+/// actuator, and the backend-swap threshold needs a routed backend set
+/// to act on.
+fn validate_autoscale_flags(
+    f: &HashMap<String, String>,
+) -> std::result::Result<(), ServiceError> {
+    if f.contains_key("cores") {
+        return Err(ServiceError::ActuatorMismatch(
+            "--cores selects the fixed-size pool service, but --autoscale resizes the \
+             sharded service; use --min-shards/--max-shards instead"
+                .into(),
+        ));
+    }
+    if f.contains_key("swap-p99-ms") && !f.contains_key("backends") {
+        return Err(ServiceError::ActuatorMismatch(
+            "--swap-p99-ms drives the backend-swap actuator, which needs --backends \
+             sim,pjrt to build a routed backend set"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
 /// `serve --autoscale`: an elastic-serving demo. Starts the sharded
 /// service at `--min-shards`, wraps it in the admission-controlled
 /// frontend, and lets the SLO-driven controller resize the pool while
@@ -525,6 +651,7 @@ fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
 /// arms the resolution ladder: the controller serves bursts coarser
 /// before reaching for a shard.
 fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
+    validate_autoscale_flags(f)?;
     let min_shards: usize = f.get("min-shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let max_shards: usize = f.get("max-shards").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let target_p99_ms: f64 =
@@ -541,13 +668,24 @@ fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
     }
     let queue_capacity: usize =
         f.get("queue-capacity").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let swap_p99_ms: f64 =
+        f.get("swap-p99-ms").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
 
-    let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
+    let sharded = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
         shards: min_shards,
         steal_threshold: 0,
         service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
         ..Default::default()
     })?);
+    let inner = match f.get("backends") {
+        Some(spec) => {
+            let mut set = BackendSet::new(sharded, BackendSetConfig::default())?;
+            register_backends(&mut set, spec)?;
+            set.calibrate()?;
+            ServiceHandle::Routed(set)
+        }
+        None => sharded,
+    };
     let server = TrafficServer::start(
         inner,
         ServerConfig {
@@ -568,6 +706,7 @@ fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
         target_p99_ms,
         max_shed_rate,
         max_degrade,
+        swap_service_p99_ms: swap_p99_ms,
         ..Default::default()
     };
     let controller = AutoscaleController::spawn(&server, policy)?;
@@ -606,4 +745,44 @@ fn print_table(n: u32) -> Result<()> {
         _ => bail!("tables 1-6 exist"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fl(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn autoscale_rejects_the_fixed_size_pool_up_front() {
+        let err = validate_autoscale_flags(&fl(&[("autoscale", "true"), ("cores", "4")]))
+            .expect_err("--cores selects the pool service");
+        assert!(err.to_string().contains("actuator/service mismatch"), "{err}");
+        assert!(err.to_string().contains("--min-shards"), "{err}");
+    }
+
+    #[test]
+    fn swap_threshold_requires_a_routed_backend_set() {
+        let err = validate_autoscale_flags(&fl(&[("autoscale", "true"), ("swap-p99-ms", "5")]))
+            .expect_err("swap needs a routed set to act on");
+        assert!(err.to_string().contains("--backends"), "{err}");
+        let armed =
+            fl(&[("autoscale", "true"), ("swap-p99-ms", "5"), ("backends", "sim,pjrt")]);
+        assert!(validate_autoscale_flags(&armed).is_ok());
+        assert!(validate_autoscale_flags(&fl(&[("autoscale", "true")])).is_ok());
+    }
+
+    #[test]
+    fn flag_parsing_splits_values_and_presence_flags() {
+        let args: Vec<String> = ["--cores", "8", "--batched", "--points", "512"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = flags(&args);
+        assert_eq!(f.get("cores").map(String::as_str), Some("8"));
+        assert_eq!(f.get("batched").map(String::as_str), Some("true"));
+        assert_eq!(f.get("points").map(String::as_str), Some("512"));
+    }
 }

@@ -1,0 +1,265 @@
+//! Integration tests for multi-backend routing: the measured cost
+//! model steers traffic to the faster lane, validation spot-checks
+//! catch a corrupted fast path (counter + quarantine + the simulator's
+//! answer), and a sim-only routed set is bitwise identical to the
+//! unrouted service.
+//!
+//! Timing-sensitive assertions calibrate against a measured simulator
+//! service time instead of assuming one, so they hold on slow CI hosts
+//! and under parallel test execution.
+
+use std::time::Duration;
+
+use egpu_fft::coordinator::{
+    cross_error, AutoscaleController, AutoscalePolicy, BackendSet, BackendSetConfig,
+    DegradeLevel, FftBackend, FftService, RequestOpts, ServerConfig, ServiceConfig,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+};
+use egpu_fft::fft::{self, reference, Cpx};
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+/// An honest fast lane: the f64 reference transform, which is both
+/// orders of magnitude faster than the cycle-accurate simulator and
+/// numerically within [`fft::F32_TOL`] of it.
+struct Oracle;
+
+impl Oracle {
+    fn transform(input: &[(f32, f32)]) -> Vec<(f32, f32)> {
+        let cpx: Vec<Cpx> =
+            input.iter().map(|&(r, i)| Cpx::new(r as f64, i as f64)).collect();
+        reference::fft(&cpx).iter().map(|c| c.to_f32_pair()).collect()
+    }
+}
+
+impl FftBackend for Oracle {
+    fn name(&self) -> &str {
+        "oracle"
+    }
+
+    fn fft(&self, input: &[(f32, f32)]) -> anyhow::Result<Vec<(f32, f32)>> {
+        Ok(Oracle::transform(input))
+    }
+}
+
+/// A correct but artificially slow lane, for forcing the router away.
+struct Slow {
+    sleep: Duration,
+}
+
+impl FftBackend for Slow {
+    fn name(&self) -> &str {
+        "slow"
+    }
+
+    fn fft(&self, input: &[(f32, f32)]) -> anyhow::Result<Vec<(f32, f32)>> {
+        std::thread::sleep(self.sleep);
+        Ok(Oracle::transform(input))
+    }
+}
+
+/// A fast lane that silently corrupts one output sample — what the
+/// validation spot-check exists to catch.
+struct Corrupt;
+
+impl FftBackend for Corrupt {
+    fn name(&self) -> &str {
+        "corrupt"
+    }
+
+    fn fft(&self, input: &[(f32, f32)]) -> anyhow::Result<Vec<(f32, f32)>> {
+        let mut out = Oracle::transform(input);
+        out[0].0 += 1000.0;
+        Ok(out)
+    }
+}
+
+fn sim_pool(cores: usize) -> ServiceHandle {
+    ServiceHandle::Pool(
+        FftService::start(ServiceConfig { cores, ..Default::default() }).unwrap(),
+    )
+}
+
+#[test]
+fn router_sends_at_least_90pct_to_the_measured_faster_lane() {
+    let mut set = BackendSet::new(
+        sim_pool(1),
+        BackendSetConfig { calibrate_sizes: vec![256], ..Default::default() },
+    )
+    .unwrap();
+    set.register("oracle", Box::new(Oracle), 4).unwrap();
+    set.calibrate().unwrap();
+    let inputs: Vec<_> = (0..100).map(|i| signal(256, i)).collect();
+    let results = set.run_batch(inputs, 4).unwrap();
+    assert_eq!(results.len(), 100);
+    let stats = set.stats();
+    assert_eq!(stats[1].name, "oracle");
+    assert!(
+        stats[1].served >= 90,
+        "oracle lane served {}/100 (sim {})",
+        stats[1].served,
+        stats[0].served
+    );
+    assert_eq!(stats[0].served + stats[1].served, 100, "every request lands on a lane");
+    // routed results are still correct transforms
+    let want = Oracle::transform(&signal(256, 0));
+    assert!(cross_error(&results[0].output, &want) < fft::F32_TOL);
+    set.shutdown();
+}
+
+#[test]
+fn forced_slow_lane_loses_traffic_to_the_simulator() {
+    // Measure the simulator's own service time first, so "slow" is
+    // slow relative to it on any host.
+    let probe = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+    let mut sim_us: f64 = 0.0;
+    for seed in 0..3 {
+        let r = probe.run_batch(vec![signal(256, seed)]).unwrap();
+        sim_us = sim_us.max(r[0].wall_us);
+    }
+    probe.shutdown();
+    let sleep = Duration::from_secs_f64((sim_us * 20.0).max(10_000.0) / 1e6);
+
+    let mut set = BackendSet::new(
+        sim_pool(1),
+        BackendSetConfig {
+            calibrate_sizes: vec![256],
+            calibrate_samples: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    set.register("slow", Box::new(Slow { sleep }), 1).unwrap();
+    set.calibrate().unwrap();
+    let results = set.run_batch((0..30).map(|i| signal(256, i)).collect(), 2).unwrap();
+    assert_eq!(results.len(), 30);
+    let stats = set.stats();
+    assert!(
+        stats[0].served >= 27,
+        "sim kept {}/30 against a 20x-slower lane (slow lane {})",
+        stats[0].served,
+        stats[1].served
+    );
+    set.shutdown();
+}
+
+#[test]
+fn validate_mismatch_counts_quarantines_and_returns_the_simulator_result() {
+    let mut set = BackendSet::new(
+        sim_pool(1),
+        BackendSetConfig {
+            validate_fraction: 1.0,
+            calibrate_sizes: vec![256],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    set.register("corrupt", Box::new(Corrupt), 4).unwrap();
+    set.calibrate().unwrap();
+
+    let input = signal(256, 9);
+    let served = set.submit(input.clone(), DegradeLevel::Full).recv().unwrap().unwrap();
+    let stats = set.stats();
+    assert_eq!(stats[1].name, "corrupt");
+    assert!(stats[1].validate_checks >= 1);
+    assert_eq!(stats[1].validate_mismatches, 1, "the corruption was caught");
+    assert!(stats[1].quarantined, "a mismatching lane is quarantined");
+    assert_eq!(stats[1].served, 0, "a caught mismatch is not a serve");
+
+    // The caller received the simulator's answer: re-serving the same
+    // input (now quarantined, so sim takes it) is bitwise identical.
+    let again = set.submit(input, DegradeLevel::Full).recv().unwrap().unwrap();
+    assert_eq!(bits(&served.output), bits(&again.output));
+
+    // Quarantine holds: all subsequent traffic is simulator-served.
+    for i in 0..5 {
+        set.submit(signal(256, 100 + i), DegradeLevel::Full).recv().unwrap().unwrap();
+    }
+    let stats = set.stats();
+    assert_eq!(stats[1].served, 0);
+    assert_eq!(stats[0].served, 6, "re-serve plus five follow-ups, all on sim");
+    set.shutdown();
+}
+
+#[test]
+fn sim_only_routed_set_is_bitwise_identical_to_the_unrouted_service() {
+    let cfg = ServiceConfig { cores: 1, ..Default::default() };
+    let direct = FftService::start(cfg.clone()).unwrap();
+    let want = direct.run_batch(vec![signal(1024, 3)]).unwrap();
+    direct.shutdown();
+
+    // No alternates, no calibration: every request takes the simulator
+    // path unchanged.
+    let set = BackendSet::new(
+        ServiceHandle::Pool(FftService::start(cfg).unwrap()),
+        BackendSetConfig::default(),
+    )
+    .unwrap();
+    let got = set.submit(signal(1024, 3), DegradeLevel::Full).recv().unwrap().unwrap();
+    assert_eq!(bits(&want[0].output), bits(&got.output));
+    set.shutdown();
+}
+
+#[test]
+fn traffic_server_over_a_routed_set_serves_and_reports_backend_stats() {
+    let sim = ServiceHandle::Sharded(
+        ShardedFftService::start(ShardPoolConfig { shards: 2, ..Default::default() }).unwrap(),
+    );
+    let mut set = BackendSet::new(
+        sim,
+        BackendSetConfig { calibrate_sizes: vec![256], ..Default::default() },
+    )
+    .unwrap();
+    set.register("oracle", Box::new(Oracle), 4).unwrap();
+    set.calibrate().unwrap();
+    let server =
+        TrafficServer::start(ServiceHandle::Routed(set), ServerConfig::default()).unwrap();
+    let replies: Vec<_> = (0..20)
+        .filter_map(|i| server.submit(signal(256, i), RequestOpts::default()).ok())
+        .collect();
+    let served = replies.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+    assert_eq!(served, 20);
+    let snap = server.metrics();
+    assert_eq!(snap.backends.len(), 2, "sim lane plus the oracle lane");
+    assert_eq!(snap.backends[0].name, "sim");
+    let total: u64 = snap.backends.iter().map(|b| b.served).sum();
+    assert_eq!(total, 20);
+    assert!(
+        snap.backends[1].served >= 18,
+        "oracle lane took the traffic: {:?}",
+        snap.backends[1].served
+    );
+    assert!(snap.render().contains("backends: 2"), "{}", snap.render());
+    server.shutdown();
+}
+
+#[test]
+fn autoscale_swap_requires_a_routed_service_and_accepts_one() {
+    let policy = AutoscalePolicy { swap_service_p99_ms: 1.0, ..Default::default() };
+
+    let inner = ServiceHandle::Sharded(
+        ShardedFftService::start(ShardPoolConfig { shards: 1, ..Default::default() }).unwrap(),
+    );
+    let server = TrafficServer::start(inner, ServerConfig::default()).unwrap();
+    let err = AutoscaleController::spawn(&server, policy.clone())
+        .err()
+        .expect("a sharded-only server cannot drive the swap actuator");
+    assert!(err.to_string().contains("routed"), "{err}");
+    server.shutdown();
+
+    let sharded = ServiceHandle::Sharded(
+        ShardedFftService::start(ShardPoolConfig { shards: 1, ..Default::default() }).unwrap(),
+    );
+    let set = BackendSet::new(sharded, BackendSetConfig::default()).unwrap();
+    let server =
+        TrafficServer::start(ServiceHandle::Routed(set), ServerConfig::default()).unwrap();
+    let controller = AutoscaleController::spawn(&server, policy).unwrap();
+    controller.stop();
+    server.shutdown();
+}
