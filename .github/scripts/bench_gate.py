@@ -6,9 +6,11 @@ Reads the quick-mode JSON rows written by `benches/shard.rs`
 `benches/autoscale.rs` (`recovered_rps` / `shed_rate_after` /
 `p99_recovery_ms` per row), `benches/qos.rs` (per-class
 `achieved_rps` / `share_err` rows — the WFQ share-conformance metric)
-and `benches/backend.rs` (per-config `routed_rps` /
+`benches/backend.rs` (per-config `routed_rps` /
 `validate_overhead` rows — multi-backend routing throughput and the
-cost of validation sampling),
+cost of validation sampling) and `benches/largefft.rs` (per-size,
+per-strategy `mp_rps` rows — multi-pass large-N FFT requests per
+second past the single-pass ceiling),
 reduces each metric to an aggregate, and fails when an aggregate
 crosses the committed `BENCH_baseline.json` limit by more than the
 threshold.
@@ -41,6 +43,7 @@ Usage:
                   [--autoscale BENCH_autoscale.json] \
                   [--qos BENCH_qos.json] \
                   [--backend BENCH_backend.json] \
+                  [--largefft BENCH_largefft.json] \
                   [--emit-ratchet suggested_baseline.json]
 """
 
@@ -61,6 +64,7 @@ CHECKS = [
     ("qos", "share_err_max", "share_err", "max", "ceiling"),
     ("backend", "agg_routed_rps", "routed_rps", "geomean", "floor"),
     ("backend", "validate_overhead_max", "validate_overhead", "max", "ceiling"),
+    ("largefft", "agg_mp_rps", "mp_rps", "geomean", "floor"),
 ]
 
 # Ratchet tuning: floors rise toward 80% of observed; ceilings tighten
@@ -252,6 +256,7 @@ def main(argv=None):
     ap.add_argument("--autoscale")
     ap.add_argument("--qos")
     ap.add_argument("--backend")
+    ap.add_argument("--largefft")
     ap.add_argument(
         "--emit-ratchet",
         metavar="PATH",
@@ -267,6 +272,7 @@ def main(argv=None):
         "autoscale": args.autoscale,
         "qos": args.qos,
         "backend": args.backend,
+        "largefft": args.largefft,
     }
     results, threshold = run_gate(baseline, files)
 

@@ -18,8 +18,8 @@ use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig, ServiceHandle,
-    ShardPoolConfig, ShardedFftService, TrafficServer,
+    FftRequest, FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -51,11 +51,11 @@ fn main() -> anyhow::Result<()> {
     })?;
     let n_requests = 128;
     // warm-up batch: pays the one-time program generation per size
-    svc.submit_batch(workload(8))?;
+    svc.request_all(workload(8).into_iter().map(FftRequest::new).collect())?;
     let inputs = workload(n_requests);
     let expect: Vec<usize> = inputs.iter().map(Vec::len).collect();
     let t0 = Instant::now();
-    let results = svc.submit_batch(inputs)?;
+    let results = svc.request_all(inputs.into_iter().map(FftRequest::new).collect())?;
     let wall = t0.elapsed();
     for (r, n) in results.iter().zip(&expect) {
         assert_eq!(r.output.len(), *n);
@@ -111,9 +111,9 @@ fn main() -> anyhow::Result<()> {
         // warm the shared plan cache and *every* shard's resident
         // executor before timing (same 64-job shape as the measured
         // batch, so it chunks across the whole pool)
-        svc.submit_batch((0..64).map(|i| signal(1024, i)).collect())?;
+        svc.request_all((0..64).map(|i| FftRequest::new(signal(1024, i))).collect())?;
         let t0 = Instant::now();
-        svc.submit_batch((0..64).map(|i| signal(1024, i)).collect())?;
+        svc.request_all((0..64).map(|i| FftRequest::new(signal(1024, i))).collect())?;
         let wall = t0.elapsed().as_secs_f64();
         let m = svc.metrics();
         println!(

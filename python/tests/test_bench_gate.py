@@ -27,7 +27,7 @@ def _load():
 bench_gate = _load()
 
 
-def baseline(threshold=0.15, autoscale=True, qos=True, backend=True):
+def baseline(threshold=0.15, autoscale=True, qos=True, backend=True, largefft=True):
     base = {
         "threshold": threshold,
         "shard": {"agg_jobs_per_s": 100.0},
@@ -49,6 +49,8 @@ def baseline(threshold=0.15, autoscale=True, qos=True, backend=True):
             "agg_routed_rps": 100.0,
             "validate_overhead_max": 0.4,
         }
+    if largefft:
+        base["largefft"] = {"agg_mp_rps": 1.0}
     return base
 
 
@@ -65,6 +67,16 @@ def qos_rows(qos_rps=50.0, share_err=0.05):
         {"class": "gold", "achieved_rps": qos_rps * 2, "share_err": share_err},
         {"class": "bronze", "achieved_rps": qos_rps / 2, "share_err": share_err / 2},
         {"class": "all", "achieved_rps": qos_rps, "share_err": 0.0},
+    ]
+
+
+def largefft_rows(mp_rps=2.0):
+    """Per-size, per-strategy rows, the shape benches/largefft.rs
+    emits (pipelined and serialize-passes rows for each large N)."""
+    return [
+        {"points": 8192, "mode": "pipelined", "mp_rps": mp_rps * 2},
+        {"points": 8192, "mode": "serialized", "mp_rps": mp_rps / 2},
+        {"points": 65536, "mode": "pipelined", "mp_rps": mp_rps},
     ]
 
 
@@ -89,6 +101,7 @@ def files_for(
     share_err=0.05,
     routed_rps=200.0,
     overhead=0.1,
+    mp_rps=2.0,
 ):
     return {
         "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
@@ -102,6 +115,7 @@ def files_for(
         "backend": write_rows(
             tmp_path, "backend.json", backend_rows(routed_rps, overhead)
         ),
+        "largefft": write_rows(tmp_path, "largefft.json", largefft_rows(mp_rps)),
     }
 
 
@@ -191,6 +205,20 @@ class TestThreshold:
         assert not by_key(results, "agg_routed_rps")["ok"]
         assert by_key(results, "validate_overhead_max")["ok"], "overhead unaffected"
 
+    def test_largefft_rows_aggregate_and_pass(self, tmp_path):
+        # geomean over the per-size/per-strategy mp_rps rows
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path))
+        r = by_key(results, "agg_mp_rps")
+        assert r["ok"]
+        assert r["current"] == pytest.approx(2.0)  # cbrt(4 * 1 * 2)
+        assert r["rows"] == 3
+
+    def test_largefft_throughput_floor_trips(self, tmp_path):
+        # geomean 0.5 is far below the committed 1.0 floor
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, mp_rps=0.5))
+        assert not by_key(results, "agg_mp_rps")["ok"]
+        assert by_key(results, "agg_jobs_per_s")["ok"], "other floors unaffected"
+
     def test_backend_validate_overhead_ceiling_trips(self, tmp_path):
         # 0.5 breaches the 0.4 * 1.15 committed ceiling
         results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.5))
@@ -257,6 +285,19 @@ class TestMissingInputs:
         files["backend"] = None
         results, _ = bench_gate.run_gate(baseline(backend=False), files)
         assert all(r["section"] != "backend" for r in results)
+
+    def test_gated_largefft_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["largefft"] = None
+        with pytest.raises(SystemExit, match="no --largefft file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_ungated_largefft_section_is_skipped(self, tmp_path):
+        # pre-multipass baselines carry no largefft section
+        files = files_for(tmp_path)
+        files["largefft"] = None
+        results, _ = bench_gate.run_gate(baseline(largefft=False), files)
+        assert all(r["section"] != "largefft" for r in results)
 
 
 class TestRatchet:
@@ -357,6 +398,8 @@ class TestMain:
             files["qos"],
             "--backend",
             files["backend"],
+            "--largefft",
+            files["largefft"],
             *extra,
         ]
 

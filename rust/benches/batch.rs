@@ -2,7 +2,7 @@
 //! coordinator, across FFT sizes 256–4096.
 //!
 //! The sequential path pays a queue hop, a shared-queue lock, a reply
-//! channel and two thread wake-ups per job; `submit_batch` rides one
+//! channel and two thread wake-ups per job; `request_all` rides one
 //! hop per size group and serves every job from one plan-cache lookup
 //! and one resident SM. Same simulated work, less dispatch overhead —
 //! batched throughput must come out ahead.
@@ -11,7 +11,7 @@
 
 mod harness;
 
-use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::coordinator::{Backend, FftRequest, FftService, ServiceConfig};
 use egpu_fft::fft::reference;
 
 const BATCH: usize = 64;
@@ -39,15 +39,15 @@ fn main() {
         let inputs: Vec<Vec<(f32, f32)>> =
             (0..BATCH).map(|i| signal(points, i as u64)).collect();
         // warm the plan cache and the worker's resident executor
-        svc.submit_batch(inputs.clone()).unwrap();
+        svc.request_all(inputs.clone().into_iter().map(FftRequest::new).collect()).unwrap();
 
         let seq = harness::bench(&format!("sequential_submit_{BATCH}x_fft{points}"), 1200, || {
             for input in inputs.clone() {
-                svc.submit(input).recv().unwrap().unwrap();
+                svc.request(FftRequest::new(input)).recv().unwrap().unwrap();
             }
         });
         let bat = harness::bench(&format!("submit_batch_{BATCH}x_fft{points}"), 1200, || {
-            svc.submit_batch(inputs.clone()).unwrap();
+            svc.request_all(inputs.clone().into_iter().map(FftRequest::new).collect()).unwrap();
         });
 
         let seq_jps = BATCH as f64 / seq.mean.as_secs_f64();

@@ -1,0 +1,165 @@
+//! Bench: multi-pass large-N FFT throughput past the 4096-point
+//! single-pass ceiling, by size and serving strategy.
+//!
+//! Each request is one four-step decomposition served through the
+//! unified `FftRequest` API on a 4-shard pool. Two strategies per size:
+//!
+//! * **pipelined** — the reservation path: each stage arrives as one
+//!   coalesced `request_all` batch, chunked across every shard, so the
+//!   row and column passes use the whole pool.
+//! * **serialized** — the spill path (zero reservation permits): every
+//!   sub-job is a separate `request` round trip, one at a time — the
+//!   degraded mode a saturated gate falls back to, and the bound the
+//!   pipelined path must beat.
+//!
+//! `mp_rps` (multi-pass requests per second) is the gated metric; the
+//! run also hard-asserts that the pipelined strategy spreads stage
+//! batches across shards and comes out ahead of serialize-passes.
+//!
+//! ```sh
+//! cargo bench --bench largefft                  # full sweep (adds 2^20)
+//! cargo bench --bench largefft -- --quick       # CI-sized sweep
+//! cargo bench --bench largefft -- --json BENCH_largefft.json
+//! ```
+
+mod harness;
+
+use std::fmt::Write as _;
+
+use egpu_fft::coordinator::{
+    Backend, FftRequest, ServiceConfig, ShardPoolConfig, ShardedFftService,
+};
+use egpu_fft::fft::reference;
+
+const SHARDS: usize = 4;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+/// A 4-shard pool; `serialize` forces the spill path by granting zero
+/// multi-pass reservation permits.
+fn service(serialize: bool) -> ShardedFftService {
+    ShardedFftService::start(ShardPoolConfig {
+        shards: SHARDS,
+        steal_threshold: 0,
+        service: ServiceConfig {
+            backend: Backend::Simulator,
+            max_inflight_multipass: if serialize { 0 } else { 2 },
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+struct Row {
+    points: usize,
+    mode: &'static str,
+    mp_rps: f64,
+    stage_jobs: u64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let (sizes, target_ms): (&[usize], u64) = if quick {
+        (&[1 << 13, 1 << 16], 200)
+    } else {
+        (&[1 << 13, 1 << 16, 1 << 20], 1000)
+    };
+
+    harness::section(&format!(
+        "multi-pass large-N FFT: four-step requests on {SHARDS} shards, pipelined vs \
+         serialize-passes{}",
+        if quick { " (quick mode)" } else { "" }
+    ));
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &points in sizes {
+        let input = signal(points, 11);
+        let mut pipelined_rps = 0.0;
+        for (mode, serialize) in [("pipelined", false), ("serialized", true)] {
+            let svc = service(serialize);
+            // warm the plan/twiddle caches and every shard's executor
+            svc.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+            let res = harness::bench(
+                &format!("multipass_fft{points}_{mode}"),
+                target_ms,
+                || {
+                    svc.request(FftRequest::new(input.clone()))
+                        .recv()
+                        .unwrap()
+                        .unwrap();
+                },
+            );
+            let rps = 1.0 / res.mean.as_secs_f64();
+            let m = svc.metrics();
+            // per-request sub-job count (the counters accumulate over
+            // the warmup and every timed iteration)
+            let stage_jobs = m.multipass.stage_jobs() / m.multipass.requests.max(1);
+            if serialize {
+                assert!(
+                    m.multipass.spilled == m.multipass.requests,
+                    "zero permits must spill every request: {:?}",
+                    m.multipass
+                );
+            } else {
+                pipelined_rps = rps;
+                assert!(
+                    m.multipass.reserved == m.multipass.requests,
+                    "an idle gate must reserve every request: {:?}",
+                    m.multipass
+                );
+                let serving = m.shards.iter().filter(|s| s.handled > 0).count();
+                assert!(
+                    serving >= 2,
+                    "pipelined stage batches must chunk across shards: {:?}",
+                    m.shards
+                );
+            }
+            rows.push(Row { points, mode, mp_rps: rps, stage_jobs });
+            svc.shutdown();
+        }
+        let serialized_rps = rows.last().map(|r| r.mp_rps).unwrap_or(0.0);
+        println!(
+            "  fft{points}: pipelined {pipelined_rps:.2} req/s vs serialized \
+             {serialized_rps:.2} req/s ({:.2}x)",
+            pipelined_rps / serialized_rps
+        );
+        assert!(
+            pipelined_rps > serialized_rps,
+            "pipelining stage batches across shards must beat per-sub-job round trips \
+             at fft{points}"
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"largefft\", \"points\": {}, \"mode\": \"{}\", \
+                 \"mp_rps\": {:.4}, \"stage_jobs\": {}, \"quick\": {}}}{}\n",
+                r.points,
+                r.mode,
+                r.mp_rps,
+                r.stage_jobs,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

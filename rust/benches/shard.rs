@@ -2,7 +2,7 @@
 //! FFT sizes 256–4096.
 //!
 //! Each configuration serves a homogeneous batch through
-//! `ShardedFftService::submit_batch` with the steal threshold at 0
+//! `ShardedFftService::request_all` with the steal threshold at 0
 //! (steal on any backlog), so the batch chunks across every shard. The
 //! simulated SM work dominates the dispatch cost, so throughput should
 //! scale near-linearly with the shard count up to the host's core
@@ -20,7 +20,9 @@ mod harness;
 
 use std::fmt::Write as _;
 
-use egpu_fft::coordinator::{Backend, ServiceConfig, ShardPoolConfig, ShardedFftService};
+use egpu_fft::coordinator::{
+    Backend, FftRequest, ServiceConfig, ShardPoolConfig, ShardedFftService,
+};
 use egpu_fft::fft::reference;
 
 fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
@@ -82,7 +84,7 @@ fn main() {
         // single-shard reference outputs: the bitwise baseline
         let reference_bits: Vec<Vec<(u32, u32)>> = {
             let svc = service(1, jobs);
-            let results = svc.submit_batch(inputs.clone()).unwrap();
+            let results = svc.request_all(inputs.clone().into_iter().map(FftRequest::new).collect()).unwrap();
             let b = results.iter().map(|r| bits(&r.output)).collect();
             svc.shutdown();
             b
@@ -92,7 +94,7 @@ fn main() {
         for &shards in shard_counts {
             let svc = service(shards, jobs);
             // warm the shared plan cache and every shard's executor
-            let warm = svc.submit_batch(inputs.clone()).unwrap();
+            let warm = svc.request_all(inputs.clone().into_iter().map(FftRequest::new).collect()).unwrap();
             for (r, want) in warm.iter().zip(&reference_bits) {
                 assert_eq!(
                     bits(&r.output),
@@ -104,7 +106,7 @@ fn main() {
                 &format!("submit_batch_{jobs}x_fft{points}_{shards}shard"),
                 target_ms,
                 || {
-                    svc.submit_batch(inputs.clone()).unwrap();
+                    svc.request_all(inputs.clone().into_iter().map(FftRequest::new).collect()).unwrap();
                 },
             );
             let jps = jobs as f64 / res.mean.as_secs_f64();

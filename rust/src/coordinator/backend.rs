@@ -59,6 +59,7 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::BackendStat;
 use super::qos::DegradeLevel;
+use super::request::{FftCompute, FftRequest};
 use super::server::ServiceHandle;
 use super::{cross_error, FftResult, ServiceError};
 use crate::fft::{self, reference};
@@ -348,15 +349,23 @@ impl BackendSet {
         out
     }
 
-    /// Route one request and serve it. The returned channel is already
-    /// resolved or resolves when the simulator finishes — semantically
-    /// identical to the other [`ServiceHandle`] variants, whose
-    /// dispatcher blocks on the reply immediately after submitting.
-    pub fn submit(
-        &self,
-        input: Vec<(f32, f32)>,
-        level: DegradeLevel,
-    ) -> Receiver<Result<FftResult>> {
+    /// Route one [`FftRequest`] and serve it. The returned channel is
+    /// already resolved or resolves when the simulator finishes —
+    /// semantically identical to the other [`ServiceHandle`] variants,
+    /// whose dispatcher blocks on the reply immediately after
+    /// submitting.
+    ///
+    /// A request whose effective size exceeds its pass ceiling bypasses
+    /// the lane router entirely and is delegated whole to the simulator
+    /// service, which serves it by four-step decomposition (see
+    /// [`FftCompute::request`]); alternate lanes only ever see
+    /// single-pass sizes, which is also all the calibration pass ever
+    /// seeds cost entries for.
+    pub fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        if req.needs_decomposition() {
+            return self.sim.request(req);
+        }
+        let FftRequest { input, level, .. } = req;
         let points = input.len() >> level.shift();
         let result = match self.route(points) {
             None => self.serve_sim(input, level),
@@ -365,6 +374,31 @@ impl BackendSet {
         let (tx, rx) = channel();
         let _ = tx.send(result);
         rx
+    }
+
+    /// Submit a set of requests and wait for every result, in
+    /// submission order. Requests are routed individually (lane choice
+    /// is per-request by measured cost, so there is no cross-request
+    /// coalescing here); the first failure, if any, is returned.
+    pub fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        let handles: Vec<_> = reqs.into_iter().map(|r| self.request(r)).collect();
+        handles
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))?)
+            .collect()
+    }
+
+    /// Deprecated pre-[`FftRequest`] submit surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use request(FftRequest::new(input).with_level(level))"
+    )]
+    pub fn submit(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
+        self.request(FftRequest::new(input).with_level(level))
     }
 
     /// Drive every input through the router with `workers` concurrent
@@ -394,7 +428,7 @@ impl BackendSet {
                     }
                     let input = jobs[i].lock().unwrap().take().expect("each job taken once");
                     let r = self
-                        .submit(input, DegradeLevel::Full)
+                        .request(FftRequest::new(input))
                         .recv()
                         .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))
                         .and_then(|r| r);
@@ -488,7 +522,7 @@ impl BackendSet {
         let points = input.len() >> level.shift();
         self.sim_stats.inflight.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let result = self.sim.submit(input, level).recv();
+        let result = self.sim.request(FftRequest::new(input).with_level(level)).recv();
         let us = t0.elapsed().as_secs_f64() * 1e6;
         self.sim_stats.inflight.fetch_sub(1, Ordering::Relaxed);
         let result = result
@@ -512,7 +546,7 @@ impl BackendSet {
     /// router tests and benches assert on).
     fn sim_recv(&self, input: Vec<(f32, f32)>) -> Result<FftResult> {
         self.sim
-            .submit(input, DegradeLevel::Full)
+            .request(FftRequest::new(input))
             .recv()
             .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))
             .and_then(|r| r)
@@ -573,6 +607,16 @@ impl BackendSet {
                 self.serve_sim(input, DegradeLevel::Full)
             }
         }
+    }
+}
+
+impl FftCompute for BackendSet {
+    fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        BackendSet::request(self, req)
+    }
+
+    fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        BackendSet::request_all(self, reqs)
     }
 }
 

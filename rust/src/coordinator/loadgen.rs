@@ -13,7 +13,9 @@
 //!   [`LoadgenConfig::burst_size`] requests, stressing the admission
 //!   queue and the shed path.
 //!
-//! Requests draw transform sizes from a mixed 256–4096 pool, split
+//! Requests draw transform sizes from a mixed 256–4096 pool (or the
+//! [`LoadgenConfig::large_n`] mix, which reaches past the single-pass
+//! ceiling to 65536 points through the multi-pass path), split
 //! across the server's QoS classes by [`LoadgenConfig::class_mix`]
 //! (arrival fractions per class index), and may carry a deadline. The
 //! [`LoadReport`] accounts every submission — completed, shed,
@@ -31,7 +33,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Error, Result};
 
 use super::metrics::ClassStats;
-use super::server::{RequestOpts, ServerResult, TrafficServer};
+use super::request::FftRequest;
+use super::server::{ServerResult, TrafficServer};
 use super::ServiceError;
 use crate::fft::reference;
 
@@ -137,6 +140,25 @@ impl Default for LoadgenConfig {
             class_mix: Vec::new(),
             deadline: Some(Duration::from_millis(25)),
             seed: 42,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// A size mix that reaches past the 4096-point single-pass ceiling
+    /// (8192 and 65536 points alongside ordinary sizes), exercising the
+    /// four-step multi-pass path under open-loop load. The offered rate
+    /// is far below the default because admission accounts each large
+    /// request at its true multi-pass cost — a 65536-point request
+    /// weighs 512 single-pass jobs against its class queue — and
+    /// deadlines are off so large transforms are not preempted at the
+    /// between-pass checkpoint before a run can measure them.
+    pub fn large_n() -> Self {
+        LoadgenConfig {
+            rate_hz: 20.0,
+            sizes: vec![1024, 4096, 8192, 65536],
+            deadline: None,
+            ..Default::default()
         }
     }
 }
@@ -479,8 +501,11 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         let idx = (rng.next_u64() % prototypes.len() as u64) as usize;
         let class = pick_class(rng.next_f64());
         submitted += 1;
-        let opts = RequestOpts { class, deadline: cfg.deadline };
-        match server.submit(prototypes[idx].clone(), opts) {
+        let mut req = FftRequest::new(prototypes[idx].clone()).with_class(class);
+        if let Some(d) = cfg.deadline {
+            req = req.with_deadline(d);
+        }
+        match server.request(req) {
             Ok(rx) => pending.push(rx),
             Err(ServiceError::QueueFull { .. }) => shed += 1,
             Err(_) => rejected += 1,
@@ -597,6 +622,15 @@ mod tests {
         assert!((a.len() as f64 - 1000.0).abs() <= 50.0, "mean rate held: {}", a.len());
         assert_eq!(a[0], a[49], "a burst arrives back-to-back");
         assert!(a[50] > a[49], "bursts are separated by the period");
+    }
+
+    #[test]
+    fn large_n_mix_reaches_past_the_single_pass_ceiling() {
+        let cfg = LoadgenConfig::large_n();
+        assert!(cfg.sizes.iter().any(|&s| s > crate::fft::MAX_SINGLE_PASS_POINTS));
+        assert!(cfg.sizes.iter().all(|&s| s.is_power_of_two()));
+        assert!(cfg.rate_hz < LoadgenConfig::default().rate_hz);
+        assert!(cfg.deadline.is_none());
     }
 
     #[test]

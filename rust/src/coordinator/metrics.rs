@@ -137,7 +137,7 @@ pub struct ClassStats {
     pub weight: u32,
     /// Resolved admission-queue capacity for this class.
     pub capacity: usize,
-    /// `submit` calls naming this class, admitted or shed.
+    /// `request` calls naming this class, admitted or shed.
     pub submitted: u64,
     /// Requests that entered this class's admission queue.
     pub admitted: u64,
@@ -215,7 +215,7 @@ impl ClassStats {
 /// without an admission layer).
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
-    /// All `submit` calls, whether admitted or shed.
+    /// All `request` calls, whether admitted or shed.
     pub submitted: u64,
     /// Requests that entered an admission queue.
     pub admitted: u64,
@@ -333,7 +333,7 @@ struct Inner {
     virtual_us: f64,
     /// Accumulated cycle profile across all simulated jobs.
     profile: Profile,
-    /// Coalesced batches served through `submit_batch`.
+    /// Coalesced batches served through `request_all`.
     batches: u64,
     /// Jobs served inside those batches.
     batched_jobs: u64,
@@ -390,12 +390,44 @@ impl Metrics {
             batched_jobs: m.batched_jobs,
             max_batch_jobs: m.max_batch_jobs,
             plan_cache: CacheStats::default(),
+            multipass: MultipassSnapshot::default(),
             shards: Vec::new(),
             steals: 0,
             agg_jobs_per_s: 0.0,
             server: ServerStats::default(),
             backends: Vec::new(),
         }
+    }
+}
+
+/// Multi-pass (four-step) decomposition counters, as captured by the
+/// services that orchestrate large-N requests (all zeros for a stack
+/// that never saw a request above the single-pass ceiling).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MultipassSnapshot {
+    /// Large requests that entered the four-step decomposition path.
+    pub requests: u64,
+    /// Decomposed requests served to successful completion.
+    pub completed: u64,
+    /// Requests that reserved an inflight-multipass slot and had their
+    /// stage batches pipelined across the pool.
+    pub reserved: u64,
+    /// Requests that found no slot free and spilled to strictly
+    /// serialized sub-jobs (the no-deadlock admission path).
+    pub spilled: u64,
+    /// Requests abandoned at the between-pass cooperative preemption
+    /// point (deadline expired after stage 1).
+    pub preempted: u64,
+    /// Stage-1 (row FFT) sub-jobs submitted to the executors.
+    pub row_jobs: u64,
+    /// Stage-2 (column FFT) sub-jobs submitted to the executors.
+    pub col_jobs: u64,
+}
+
+impl MultipassSnapshot {
+    /// Total sub-jobs across both stages.
+    pub fn stage_jobs(&self) -> u64 {
+        self.row_jobs + self.col_jobs
     }
 }
 
@@ -484,7 +516,7 @@ pub struct MetricsSnapshot {
     pub virtual_us: f64,
     /// Accumulated cycle profile across all simulated jobs.
     pub aggregate_profile: Profile,
-    /// Coalesced batches served through `submit_batch`.
+    /// Coalesced batches served through `request_all`.
     pub batches: u64,
     /// Jobs served inside those batches (`served` counts them too).
     pub batched_jobs: u64,
@@ -493,6 +525,9 @@ pub struct MetricsSnapshot {
     /// Shared plan-cache counters (filled in by `FftService::metrics`;
     /// `Metrics::snapshot` alone reports zeros).
     pub plan_cache: CacheStats,
+    /// Multi-pass decomposition counters (filled in by the services'
+    /// `metrics()`; all zeros when no request exceeded the ceiling).
+    pub multipass: MultipassSnapshot,
     /// Per-shard scheduler counters (filled in by
     /// `ShardedFftService::metrics`; empty for the unsharded service).
     pub shards: Vec<ShardStat>,
@@ -586,6 +621,20 @@ impl MetricsSnapshot {
                 self.plan_cache.misses,
                 self.plan_cache.evictions,
                 self.plan_cache.lock_contentions
+            ));
+        }
+        if self.multipass.requests > 0 {
+            let mp = &self.multipass;
+            s.push_str(&format!(
+                "  multipass: {} requests ({} completed, {} preempted), \
+                 {} reserved / {} spilled, {} row + {} col sub-jobs\n",
+                mp.requests,
+                mp.completed,
+                mp.preempted,
+                mp.reserved,
+                mp.spilled,
+                mp.row_jobs,
+                mp.col_jobs
             ));
         }
         if self.server.submitted > 0 {
@@ -901,6 +950,27 @@ mod tests {
         snap.server.completed = 15;
         let out = snap.render();
         assert!(out.contains("class gold (w5, cap 64)"), "{out}");
+    }
+
+    #[test]
+    fn multipass_stats_render_only_with_traffic() {
+        let mut s = Metrics::default().snapshot();
+        assert_eq!(s.multipass, MultipassSnapshot::default());
+        assert!(!s.render().contains("multipass:"));
+        s.multipass = MultipassSnapshot {
+            requests: 3,
+            completed: 2,
+            reserved: 2,
+            spilled: 1,
+            preempted: 1,
+            row_jobs: 192,
+            col_jobs: 384,
+        };
+        assert_eq!(s.multipass.stage_jobs(), 576);
+        let out = s.render();
+        assert!(out.contains("multipass: 3 requests (2 completed, 1 preempted)"), "{out}");
+        assert!(out.contains("2 reserved / 1 spilled"), "{out}");
+        assert!(out.contains("192 row + 384 col sub-jobs"), "{out}");
     }
 
     #[test]

@@ -10,15 +10,25 @@
 //! an honest model of a leader process feeding independent accelerator
 //! cores.
 //!
-//! Two dispatch paths:
+//! Every execution service presents one submission surface, the
+//! [`request::FftCompute`] trait over a [`request::FftRequest`]
+//! builder, with two dispatch paths:
 //!
-//! * [`FftService::submit`] — one request, one queue hop; workers race
+//! * [`FftService::request`] — one request, one queue hop; workers race
 //!   for jobs on a shared queue (natural load balance);
-//! * [`FftService::submit_batch`] — requests are coalesced into
-//!   per-size batches, and each batch rides one queue hop to one worker
-//!   that serves every job with a single plan-cache lookup and one
-//!   resident SM. Distinct sizes become distinct batch jobs, so a
-//!   mixed-size batch still spreads across the pool.
+//! * [`FftService::request_all`] — same-size Full-level requests are
+//!   coalesced into per-size batches, and each batch rides one queue
+//!   hop to one worker that serves every job with a single plan-cache
+//!   lookup and one resident SM. Distinct sizes become distinct batch
+//!   jobs, so a mixed-size batch still spreads across the pool.
+//!
+//! A request above the single-pass ceiling (4096 points) is served by
+//! four-step decomposition ([`crate::fft::multipass`]): two stages of
+//! ordinary ≤4096-point sub-jobs — pipelined through the batch path
+//! when a [`request::MultipassGate`] permit is free, strictly
+//! serialized otherwise — with a cooperative deadline checkpoint
+//! between the passes. The legacy `submit` / `submit_degraded` /
+//! `submit_batch` method families remain as thin deprecated shims.
 //!
 //! All workers share one [`PlanCache`]: generated FFT programs
 //! (plan + schedule + twiddle image) are memoized per
@@ -68,6 +78,7 @@ pub mod backend;
 pub mod loadgen;
 pub mod metrics;
 pub mod qos;
+pub mod request;
 pub mod server;
 pub mod shard;
 
@@ -94,11 +105,15 @@ pub use autoscale::{
 pub use backend::{BackendSet, BackendSetConfig, FftBackend, RouteMode};
 pub use loadgen::{ArrivalPattern, ClassLoadRow, LoadReport, LoadgenConfig};
 pub use metrics::{
-    BackendStat, ClassStats, LatencyStats, Metrics, MetricsSnapshot, ServerStats, ShardStat,
+    BackendStat, ClassStats, LatencyStats, Metrics, MetricsSnapshot, MultipassSnapshot,
+    ServerStats, ShardStat,
 };
 pub use qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
-pub use server::{AdmissionPolicy, DegradeControl, RequestOpts, ServedFft, ServerConfig};
+pub use request::{FftCompute, FftRequest, MultipassGate, MultipassStats};
+pub use server::{AdmissionPolicy, DegradeControl, ServedFft, ServerConfig};
 pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
+#[allow(deprecated)]
+pub use server::RequestOpts;
 pub use shard::{ShardPoolConfig, ShardedFftService};
 
 /// Typed, matchable errors from the serving stack. Execution services
@@ -158,6 +173,11 @@ pub struct ServiceConfig {
     pub artifacts_dir: String,
     /// Design points resident in the shared plan cache (LRU beyond).
     pub plan_cache_capacity: usize,
+    /// How many above-ceiling (multi-pass) requests may have their
+    /// stage batches pipelined through the pool concurrently; requests
+    /// beyond this spill to strictly serialized sub-jobs (see
+    /// [`request::MultipassGate`]). 0 = every large request spills.
+    pub max_inflight_multipass: usize,
 }
 
 impl Default for ServiceConfig {
@@ -169,6 +189,7 @@ impl Default for ServiceConfig {
             backend: Backend::Simulator,
             artifacts_dir: "artifacts".into(),
             plan_cache_capacity: fft::cache::DEFAULT_PLAN_CACHE_CAPACITY,
+            max_inflight_multipass: 2,
         }
     }
 }
@@ -242,6 +263,8 @@ pub struct FftService {
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     plans: Arc<PlanCache>,
+    mp_gate: request::MultipassGate,
+    mp_stats: request::MultipassStats,
     next_id: AtomicU64,
 }
 
@@ -282,29 +305,90 @@ impl FftService {
         if let Some(j) = pjrt_join {
             workers.push(j);
         }
+        let mp_gate = request::MultipassGate::new(cfg.max_inflight_multipass);
         Ok(FftService {
             cfg,
             tx: Some(tx),
             workers,
             metrics,
             plans,
+            mp_gate,
+            mp_stats: request::MultipassStats::default(),
             next_id: AtomicU64::new(0),
         })
     }
 
-    /// Submit one FFT; the returned channel yields the result. If the
-    /// worker pool is gone (shutdown raced, or every worker died) the
-    /// channel yields a typed [`ServiceError::WorkerGone`] — it never
-    /// panics and never leaves the caller hanging on a dead channel.
-    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
-        self.submit_degraded(input, qos::DegradeLevel::Full)
+    /// Submit one request through the unified API; the returned channel
+    /// yields the result. If the worker pool is gone (shutdown raced,
+    /// or every worker died) the channel yields a typed
+    /// [`ServiceError::WorkerGone`] — it never panics and never leaves
+    /// the caller hanging on a dead channel.
+    ///
+    /// A request whose effective (post-degrade) size exceeds its pass
+    /// ceiling is served by four-step decomposition over ordinary
+    /// sub-jobs (see [`FftCompute::request`]): the orchestration runs
+    /// on the calling thread and the channel is already resolved when
+    /// this returns.
+    pub fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        if req.needs_decomposition() {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            return request::serve_staged(self, &self.plans, &self.mp_stats, &self.mp_gate, id, req);
+        }
+        self.enqueue(req.input, req.level)
     }
 
-    /// [`FftService::submit`] with a QoS degrade level threaded through
-    /// dispatch: the serving worker truncates the input to
-    /// `len >> level.shift()` before running it, so the backend meters
-    /// and serves the transform at its degraded size.
+    /// Submit a set of requests and wait for every result, in
+    /// submission order. Same-size Full-level requests within the pass
+    /// ceiling are coalesced into per-size batch jobs — one plan-cache
+    /// lookup and one resident SM per group, amortizing codegen,
+    /// scheduling, twiddle upload and queue traffic — while degraded or
+    /// above-ceiling requests are served individually. Output bits are
+    /// identical to sequential [`FftService::request`] calls — batching
+    /// changes dispatch, never numerics.
+    ///
+    /// Jobs fail individually (metrics record per-job served/error
+    /// counts exactly as the sequential path); this convenience wrapper
+    /// returns the first failure, if any.
+    pub fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        request::serve_request_all(
+            self,
+            |inputs| self.enqueue_batch(inputs),
+            |input, level| self.enqueue(input, level),
+            reqs,
+        )
+    }
+
+    /// Deprecated pre-[`FftRequest`] single-submit surface.
+    #[deprecated(since = "0.3.0", note = "use request(FftRequest::new(input))")]
+    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        self.enqueue(input, qos::DegradeLevel::Full)
+    }
+
+    /// Deprecated pre-[`FftRequest`] degraded-submit surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use request(FftRequest::new(input).with_level(level))"
+    )]
     pub fn submit_degraded(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: qos::DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
+        self.enqueue(input, level)
+    }
+
+    /// Deprecated pre-[`FftRequest`] batch surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use request_all(inputs.into_iter().map(FftRequest::new).collect())"
+    )]
+    pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+        self.enqueue_batch(inputs)
+    }
+
+    /// Queue one single job at `level` (the old `submit_degraded` body;
+    /// the unified [`FftService::request`] fronts it now).
+    fn enqueue(
         &self,
         input: Vec<(f32, f32)>,
         level: qos::DegradeLevel,
@@ -323,21 +407,10 @@ impl FftService {
         reply_rx
     }
 
-    /// Batched dispatch: coalesce `inputs` into per-size groups (stable
-    /// within each group), submit one batch job per group, and return
-    /// every result in the original submission order.
-    ///
-    /// Each group is served by a single worker with one plan-cache
-    /// lookup and one resident SM, amortizing codegen, scheduling,
-    /// twiddle upload and queue traffic across the whole batch; distinct
-    /// sizes run concurrently on different workers. Output bits are
-    /// identical to `inputs.len()` sequential [`FftService::submit`]
-    /// calls — batching changes dispatch, never numerics.
-    ///
-    /// Jobs fail individually (metrics record per-job served/error
-    /// counts exactly as the sequential path); this convenience wrapper
-    /// returns the first failure, if any.
-    pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+    /// Coalesce `inputs` into per-size groups (stable within each
+    /// group), queue one batch job per group, and return every result
+    /// in the original submission order (the old `submit_batch` body).
+    fn enqueue_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
         let n = inputs.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -369,20 +442,23 @@ impl FftService {
     }
 
     /// Submit a batch and wait for every result (order preserved). Jobs
-    /// are dispatched individually — use [`FftService::submit_batch`]
+    /// are dispatched individually — use [`FftService::request_all`]
     /// for coalesced same-size dispatch.
     pub fn run_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
-        let handles: Vec<_> = inputs.into_iter().map(|i| self.submit(i)).collect();
+        let handles: Vec<_> =
+            inputs.into_iter().map(|i| self.request(FftRequest::new(i))).collect();
         handles
             .into_iter()
             .map(|rx| rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))?)
             .collect()
     }
 
-    /// Service metrics, including shared plan-cache counters.
+    /// Service metrics, including shared plan-cache and multi-pass
+    /// counters.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.plan_cache = self.plans.stats();
+        snap.multipass = self.mp_stats.snapshot();
         snap
     }
 
@@ -406,6 +482,16 @@ impl FftService {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+impl FftCompute for FftService {
+    fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        FftService::request(self, req)
+    }
+
+    fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        FftService::request_all(self, reqs)
     }
 }
 
@@ -489,7 +575,7 @@ fn fail_job(job: Job) {
 
 /// Group batch inputs by transform size, preserving submission order
 /// inside each group. Returns `(points, original indices)` per distinct
-/// size in first-seen order. Shared by [`FftService::submit_batch`] and
+/// size in first-seen order. Shared by [`FftService::request_all`] and
 /// the sharded scheduler's router.
 fn coalesce_by_size(inputs: &[Vec<(f32, f32)>]) -> Vec<(usize, Vec<usize>)> {
     let mut sizes: Vec<usize> = Vec::new(); // distinct, first-seen order
@@ -756,10 +842,10 @@ mod tests {
     #[test]
     fn bad_size_surfaces_error_without_killing_workers() {
         let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
-        let bad = svc.submit(signal(100, 0)).recv().unwrap();
+        let bad = svc.request(FftRequest::new(signal(100, 0))).recv().unwrap();
         assert!(bad.is_err());
         // service still alive
-        let ok = svc.submit(signal(256, 1)).recv().unwrap();
+        let ok = svc.request(FftRequest::new(signal(256, 1))).recv().unwrap();
         assert!(ok.is_ok());
         assert_eq!(svc.metrics().errors, 1);
     }
@@ -814,7 +900,7 @@ mod tests {
     fn degraded_dispatch_serves_and_meters_the_truncated_size() {
         let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
         let r = svc
-            .submit_degraded(signal(1024, 3), qos::DegradeLevel::Quarter)
+            .request(FftRequest::new(signal(1024, 3)).with_level(qos::DegradeLevel::Quarter))
             .recv()
             .unwrap()
             .unwrap();
@@ -829,7 +915,8 @@ mod tests {
         // one core, several queued jobs: shutdown must serve them all
         // before joining, so every receiver yields a real result
         let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
-        let handles: Vec<_> = (0..6).map(|i| svc.submit(signal(256, i))).collect();
+        let handles: Vec<_> =
+            (0..6).map(|i| svc.request(FftRequest::new(signal(256, i)))).collect();
         svc.shutdown();
         for rx in handles {
             assert!(rx.recv().expect("reply sent before worker exit").is_ok());
@@ -854,7 +941,7 @@ mod tests {
                 return;
             }
         };
-        let r = svc.submit(signal(256, 7)).recv().unwrap().unwrap();
+        let r = svc.request(FftRequest::new(signal(256, 7))).recv().unwrap().unwrap();
         assert!(r.profile.is_none());
         let want = reference::fft(&test_signal(256, 7));
         let got: Vec<_> = r
@@ -882,7 +969,167 @@ mod tests {
                 return;
             }
         };
-        let r = svc.submit(signal(1024, 9)).recv().unwrap().unwrap();
+        let r = svc.request(FftRequest::new(signal(1024, 9))).recv().unwrap().unwrap();
         assert!(r.profile.is_some()); // sim ran too
+    }
+
+    /// The deprecated pre-`FftRequest` surface still works, bit-for-bit
+    /// equal to the unified API (shim-compat pin until removal).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_submit_shims_match_request() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let old = svc.submit(signal(256, 11)).recv().unwrap().unwrap();
+        let new = svc.request(FftRequest::new(signal(256, 11))).recv().unwrap().unwrap();
+        assert_eq!(old.output, new.output, "shim and unified path are bitwise equal");
+        let old_deg = svc
+            .submit_degraded(signal(1024, 12), qos::DegradeLevel::Half)
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(old_deg.output.len(), 512);
+        let old_batch = svc.submit_batch(vec![signal(256, 13), signal(256, 14)]).unwrap();
+        let new_batch = svc
+            .request_all(vec![
+                FftRequest::new(signal(256, 13)),
+                FftRequest::new(signal(256, 14)),
+            ])
+            .unwrap();
+        for (o, n) in old_batch.iter().zip(&new_batch) {
+            assert_eq!(o.output, n.output);
+        }
+        svc.shutdown();
+    }
+
+    /// An above-ceiling request decomposes into sub-jobs and comes back
+    /// within f32 tolerance of the direct reference transform; the
+    /// multipass counters account for it.
+    #[test]
+    fn large_request_decomposes_and_matches_reference() {
+        let svc = FftService::start(ServiceConfig { cores: 2, ..Default::default() }).unwrap();
+        // a 1024-point request under a forced 64-point ceiling: 32 row
+        // jobs of 32 points + 32 col jobs of 32 points
+        let r = svc
+            .request(FftRequest::new(signal(1024, 21)).with_max_pass_points(64))
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.output.len(), 1024);
+        assert_eq!(r.core, usize::MAX, "no single core served a decomposed request");
+        assert!(r.profile.is_none());
+        let got: Vec<_> =
+            r.output.iter().map(|&(re, im)| fft::Cpx::new(re as f64, im as f64)).collect();
+        let want = reference::fft(&test_signal(1024, 21));
+        let err = reference::rms_rel_error(&got, &want);
+        assert!(err < 5.0 * fft::F32_TOL, "multi-pass rms {err}");
+        let m = svc.metrics();
+        assert_eq!(m.multipass.requests, 1);
+        assert_eq!(m.multipass.completed, 1);
+        assert_eq!(m.multipass.reserved, 1, "permits free: the request pipelines");
+        assert_eq!(m.multipass.row_jobs, 32);
+        assert_eq!(m.multipass.col_jobs, 32);
+        assert_eq!(m.served, 64, "every sub-job metered individually");
+        svc.shutdown();
+    }
+
+    /// With a zero-permit gate every large request spills to serialized
+    /// sub-jobs — and the output is bitwise identical to the pipelined
+    /// path (the gate changes scheduling, never numerics).
+    #[test]
+    fn spilled_multipass_is_bitwise_identical_to_reserved() {
+        let reserved = FftService::start(ServiceConfig { cores: 2, ..Default::default() })
+            .unwrap();
+        let spilled = FftService::start(ServiceConfig {
+            cores: 2,
+            max_inflight_multipass: 0,
+            ..Default::default()
+        })
+        .unwrap();
+        let req = || FftRequest::new(signal(2048, 33)).with_max_pass_points(128);
+        let a = reserved.request(req()).recv().unwrap().unwrap();
+        let b = spilled.request(req()).recv().unwrap().unwrap();
+        assert_eq!(a.output, b.output, "reserve and spill paths are bitwise equal");
+        assert_eq!(reserved.metrics().multipass.reserved, 1);
+        assert_eq!(spilled.metrics().multipass.spilled, 1);
+        assert_eq!(spilled.metrics().multipass.reserved, 0);
+    }
+
+    /// A Half-level above-ceiling request truncates *before*
+    /// decomposition: it serves as one 512-point transform of the
+    /// truncated signal, not per-pass truncation.
+    #[test]
+    fn degraded_large_request_truncates_before_decomposition() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let r = svc
+            .request(
+                FftRequest::new(signal(1024, 5))
+                    .with_level(qos::DegradeLevel::Half)
+                    .with_max_pass_points(64),
+            )
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.output.len(), 512, "half of 1024, decomposed at 512");
+        let mut truncated = test_signal(1024, 5);
+        truncated.truncate(512);
+        let want = reference::fft(&truncated);
+        let got: Vec<_> =
+            r.output.iter().map(|&(re, im)| fft::Cpx::new(re as f64, im as f64)).collect();
+        let err = reference::rms_rel_error(&got, &want);
+        assert!(err < 5.0 * fft::F32_TOL, "truncated-then-decomposed rms {err}");
+        // 512 = 16 x 32: 16 row jobs + 32 col jobs
+        assert_eq!(svc.metrics().multipass.stage_jobs(), 48);
+        svc.shutdown();
+    }
+
+    /// The between-pass deadline checkpoint preempts a large request
+    /// whose deadline already passed, with a typed error.
+    #[test]
+    fn multipass_deadline_preempts_between_passes() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let err = svc
+            .request(
+                FftRequest::new(signal(1024, 9))
+                    .with_max_pass_points(64)
+                    .with_deadline(std::time::Duration::ZERO),
+            )
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServiceError>(),
+                Some(ServiceError::DeadlineExceeded { .. })
+            ),
+            "want DeadlineExceeded, got {err:#}"
+        );
+        let m = svc.metrics();
+        assert_eq!(m.multipass.preempted, 1);
+        assert_eq!(m.multipass.completed, 0);
+        assert_eq!(m.multipass.col_jobs, 0, "stage 2 never submitted");
+        assert_eq!(m.multipass.row_jobs, 32, "stage 1 had already run");
+        svc.shutdown();
+    }
+
+    /// An undecomposable large size surfaces a typed multipass error.
+    #[test]
+    fn oversized_request_rejected_with_typed_error() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        // 1024 > 16^2: no single four-step level over a 16-point
+        // ceiling can decompose it (the same typed error a 2^25-point
+        // request gets against the real 4096 ceiling)
+        let err = svc
+            .request(FftRequest::new(signal(1024, 1)).with_max_pass_points(16))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::fft::MultipassError>(),
+                Some(crate::fft::MultipassError::TooLarge { .. })
+            ),
+            "want MultipassError::TooLarge, got {err:#}"
+        );
+        svc.shutdown();
     }
 }

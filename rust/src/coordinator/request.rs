@@ -1,0 +1,454 @@
+//! The unified request API: one [`FftRequest`] builder and one
+//! [`FftCompute`] trait replace the triplicated `submit` /
+//! `submit_degraded` / `submit_batch` method families that had grown on
+//! [`super::FftService`], [`super::shard::ShardedFftService`] and
+//! [`super::backend::BackendSet`] — and the multi-pass size hint rides
+//! the same struct instead of becoming a fourth method variant.
+//!
+//! This module also owns the large-N orchestration shared by every
+//! execution service: [`serve_staged`] decomposes a request above the
+//! single-pass ceiling with [`crate::fft::multipass`] and serves each
+//! stage as a batch of ordinary sub-jobs through the same `FftCompute`
+//! surface, under a reserve-or-spill admission gate
+//! ([`MultipassGate`]) so staged continuation passes can never
+//! monopolize the pool.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::MultipassSnapshot;
+use super::qos::DegradeLevel;
+use super::{FftResult, ServiceError};
+use crate::fft::cache::PlanCache;
+use crate::fft::multipass::{self, MultipassPlan, Stage, MAX_SINGLE_PASS_POINTS};
+
+/// One FFT request, as accepted by every service in the stack.
+///
+/// Built with the `with_*` chain; only the input signal is mandatory.
+/// The execution services ([`super::FftService`],
+/// [`super::shard::ShardedFftService`], [`super::backend::BackendSet`])
+/// honor `level` and `max_pass_points` directly; `class` and `deadline`
+/// are read by the traffic frontend at admission, and `deadline` is
+/// additionally re-checked at the cooperative preemption point between
+/// the passes of a decomposed large request.
+#[derive(Clone, Debug)]
+pub struct FftRequest {
+    /// The signal to transform, interleaved `(re, im)`.
+    pub input: Vec<(f32, f32)>,
+    /// QoS degrade level: the request is truncated to
+    /// `len >> level.shift()` where it is served — and, for a request
+    /// above the pass ceiling, *before* decomposition, so a Half-level
+    /// 2^20-point request decomposes as one 2^19-point transform.
+    pub level: DegradeLevel,
+    /// QoS class index (frontend admission only; execution services
+    /// ignore it).
+    pub class: usize,
+    /// Relative deadline from submission. Enforced while queued at the
+    /// frontend and at the between-pass checkpoint of a decomposed
+    /// request; a plain small request already dispatched is never
+    /// aborted.
+    pub deadline: Option<Duration>,
+    /// Largest sub-FFT one pass may serve for this request, at most
+    /// (and defaulting to)
+    /// [`MAX_SINGLE_PASS_POINTS`](crate::fft::multipass::MAX_SINGLE_PASS_POINTS).
+    /// Must be a power of two ≥ 16; a smaller hint forces earlier
+    /// four-step decomposition (useful for tests and for spreading one
+    /// request wider across shards).
+    pub max_pass_points: Option<usize>,
+}
+
+impl FftRequest {
+    /// A Full-level, class-0, no-deadline request for `input`.
+    pub fn new(input: Vec<(f32, f32)>) -> Self {
+        FftRequest {
+            input,
+            level: DegradeLevel::Full,
+            class: 0,
+            deadline: None,
+            max_pass_points: None,
+        }
+    }
+
+    /// Set the QoS degrade level.
+    pub fn with_level(mut self, level: DegradeLevel) -> Self {
+        self.level = level;
+        self
+    }
+
+    /// Set the QoS class index (frontend admission).
+    pub fn with_class(mut self, class: usize) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Set a relative deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Hint a smaller per-pass size ceiling (see
+    /// [`FftRequest::max_pass_points`]).
+    pub fn with_max_pass_points(mut self, points: usize) -> Self {
+        self.max_pass_points = Some(points);
+        self
+    }
+
+    /// The effective (post-degrade) transform size this request serves.
+    pub fn effective_points(&self) -> usize {
+        self.input.len() >> self.level.shift()
+    }
+
+    /// The per-pass ceiling this request runs under, clamped into the
+    /// hardware's legal range. (A hint that is not a power of two still
+    /// surfaces as a typed [`multipass::MultipassError::BadCeiling`]
+    /// when the request actually needs to decompose.)
+    pub fn pass_ceiling(&self) -> usize {
+        self.max_pass_points
+            .unwrap_or(MAX_SINGLE_PASS_POINTS)
+            .clamp(16, MAX_SINGLE_PASS_POINTS)
+    }
+
+    /// Whether this request exceeds its pass ceiling and therefore
+    /// takes the four-step decomposition path.
+    pub fn needs_decomposition(&self) -> bool {
+        self.effective_points() > self.pass_ceiling()
+    }
+}
+
+/// The one submission surface every execution service presents.
+///
+/// `request` is the single-request path (a channel now, the result
+/// later); `request_all` is the batch path, absorbing the old
+/// `submit_batch` coalescing semantics: same-size Full-level requests
+/// within the pass ceiling are coalesced into per-size batch jobs,
+/// everything else (degraded, deadline-carrying, or above-ceiling
+/// requests) is served individually, and results come back in
+/// submission order either way. Numerics never depend on which path a
+/// request took.
+pub trait FftCompute {
+    /// Submit one request; the returned channel yields the result or a
+    /// typed error (wrapped in `anyhow::Error`). For a request above
+    /// the pass ceiling the four-step orchestration runs on the calling
+    /// thread, so the channel is already resolved when this returns —
+    /// identical observable behavior, since every serving path `recv`s
+    /// promptly.
+    fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>>;
+
+    /// Submit a set of requests and wait for every result, in
+    /// submission order. Returns the first failure, if any (per-job
+    /// metrics still record individual outcomes).
+    fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>>;
+}
+
+/// Reserve-or-spill admission for decomposed requests: at most
+/// `permits` large requests may have their stage batches *pipelined*
+/// through the pool concurrently; a request that finds no permit free
+/// spills to strictly serialized sub-jobs (one in flight at a time), so
+/// staged continuation passes can never deadlock or monopolize the pool
+/// no matter how many large requests arrive at once. Both paths are
+/// bitwise identical — the gate changes scheduling, never numerics.
+pub struct MultipassGate {
+    available: AtomicUsize,
+}
+
+impl MultipassGate {
+    /// A gate with `permits` concurrent pipelined slots (0 = every
+    /// large request spills).
+    pub fn new(permits: usize) -> Self {
+        MultipassGate { available: AtomicUsize::new(permits) }
+    }
+
+    /// Try to take a pipelined slot; the permit releases on drop.
+    pub fn try_reserve(&self) -> Option<MultipassPermit<'_>> {
+        let mut cur = self.available.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.available.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(MultipassPermit { gate: self }),
+                Err(seen) => cur = seen,
+            }
+        }
+        None
+    }
+
+    /// Pipelined slots currently free.
+    pub fn available(&self) -> usize {
+        self.available.load(Ordering::Relaxed)
+    }
+}
+
+/// An RAII pipelined-multipass slot (see [`MultipassGate`]).
+pub struct MultipassPermit<'a> {
+    gate: &'a MultipassGate,
+}
+
+impl Drop for MultipassPermit<'_> {
+    fn drop(&mut self) {
+        self.gate.available.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// Lock-free multi-pass counters owned by each execution service;
+/// snapshots surface as [`MultipassSnapshot`] in the service metrics.
+#[derive(Default)]
+pub struct MultipassStats {
+    requests: AtomicU64,
+    completed: AtomicU64,
+    reserved: AtomicU64,
+    spilled: AtomicU64,
+    preempted: AtomicU64,
+    row_jobs: AtomicU64,
+    col_jobs: AtomicU64,
+}
+
+impl MultipassStats {
+    /// A point-in-time copy of the counters.
+    pub fn snapshot(&self) -> MultipassSnapshot {
+        MultipassSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            reserved: self.reserved.load(Ordering::Relaxed),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            preempted: self.preempted.load(Ordering::Relaxed),
+            row_jobs: self.row_jobs.load(Ordering::Relaxed),
+            col_jobs: self.col_jobs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Serve one above-ceiling request by four-step decomposition over
+/// `compute`'s ordinary sub-job paths (the shared large-N orchestration
+/// behind both [`super::FftService`] and
+/// [`super::shard::ShardedFftService`]):
+///
+/// 1. apply the degrade level to the *whole* input (truncate before
+///    decomposition);
+/// 2. factor with [`MultipassPlan`] and fetch the cached inter-stage
+///    twiddle table;
+/// 3. reserve-or-spill on `gate`: with a permit, each stage batch goes
+///    through `request_all` (coalesced, chunked across the pool —
+///    passes pipeline across shards); without one, sub-jobs are
+///    submitted strictly one at a time;
+/// 4. between the passes, re-check the deadline — the cooperative
+///    preemption point (a miss aborts with
+///    [`ServiceError::DeadlineExceeded`] before stage 2 is submitted).
+///
+/// Orchestration runs on the calling thread; the returned channel is
+/// already resolved. The result reports `core: usize::MAX` and no
+/// profile (each sub-job's profile was metered individually).
+pub(crate) fn serve_staged(
+    compute: &dyn FftCompute,
+    plans: &PlanCache,
+    stats: &MultipassStats,
+    gate: &MultipassGate,
+    id: u64,
+    req: FftRequest,
+) -> Receiver<Result<FftResult>> {
+    let (tx, rx) = channel();
+    let started = Instant::now();
+    let ceiling = req.pass_ceiling();
+    let deadline = req.deadline;
+    let mut input = req.input;
+    if req.level != DegradeLevel::Full {
+        let keep = input.len() >> req.level.shift();
+        input.truncate(keep);
+    }
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    let plan = match MultipassPlan::new(input.len(), ceiling) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = tx.send(Err(anyhow::Error::new(e)));
+            return rx;
+        }
+    };
+    let twiddles = plans.stage_twiddles(&plan);
+    let permit = gate.try_reserve();
+    if permit.is_some() {
+        stats.reserved.fetch_add(1, Ordering::Relaxed);
+    } else {
+        stats.spilled.fetch_add(1, Ordering::Relaxed);
+    }
+    let run = multipass::run_with(
+        &plan,
+        &input,
+        &twiddles,
+        |jobs, stage| {
+            match stage {
+                Stage::Rows => stats.row_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed),
+                Stage::Cols => stats.col_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed),
+            };
+            if permit.is_some() {
+                // pipelined: one coalesced stage batch, chunked across
+                // the pool by the service's batch path
+                let results =
+                    compute.request_all(jobs.into_iter().map(FftRequest::new).collect())?;
+                Ok(results.into_iter().map(|r| r.output).collect())
+            } else {
+                // spilled: strictly one sub-job in flight at a time —
+                // zero pool monopolization, deadlock-free by
+                // construction, bitwise identical output
+                jobs.into_iter()
+                    .map(|j| {
+                        let r = compute
+                            .request(FftRequest::new(j))
+                            .recv()
+                            .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))??;
+                        Ok(r.output)
+                    })
+                    .collect()
+            }
+        },
+        || match deadline {
+            Some(d) if started.elapsed() > d => {
+                stats.preempted.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow::Error::new(ServiceError::DeadlineExceeded {
+                    waited_us: started.elapsed().as_secs_f64() * 1e6,
+                }))
+            }
+            _ => Ok(()),
+        },
+    );
+    drop(permit);
+    match run {
+        Ok(output) => {
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Ok(FftResult {
+                id,
+                output,
+                profile: None,
+                core: usize::MAX,
+                wall_us: started.elapsed().as_secs_f64() * 1e6,
+            }));
+        }
+        Err(e) => {
+            let _ = tx.send(Err(e));
+        }
+    }
+    rx
+}
+
+/// The shared `request_all` shape for the pool and sharded services:
+/// coalesce what the old `submit_batch` coalesced (same-size Full-level
+/// requests within the ceiling, via `batch`), serve degraded requests
+/// individually (via `single`), route above-ceiling requests through
+/// `compute.request` (the staged path), and reassemble everything in
+/// submission order.
+pub(crate) fn serve_request_all(
+    compute: &dyn FftCompute,
+    batch: impl FnOnce(Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>>,
+    single: impl Fn(Vec<(f32, f32)>, DegradeLevel) -> Receiver<Result<FftResult>>,
+    reqs: Vec<FftRequest>,
+) -> Result<Vec<FftResult>> {
+    let n = reqs.len();
+    let mut slots: Vec<Option<FftResult>> = (0..n).map(|_| None).collect();
+    let mut simple: Vec<(usize, Vec<(f32, f32)>)> = Vec::new();
+    let mut staged: Vec<(usize, FftRequest)> = Vec::new();
+    let mut pending: Vec<(usize, Receiver<Result<FftResult>>)> = Vec::new();
+    for (i, req) in reqs.into_iter().enumerate() {
+        if req.needs_decomposition() {
+            staged.push((i, req));
+        } else if req.level == DegradeLevel::Full {
+            simple.push((i, req.input));
+        } else {
+            // degraded requests keep per-request truncation semantics:
+            // dispatched individually, in flight while the batch runs
+            pending.push((i, single(req.input, req.level)));
+        }
+    }
+    if !simple.is_empty() {
+        let (idxs, inputs): (Vec<usize>, Vec<Vec<(f32, f32)>>) = simple.into_iter().unzip();
+        for (i, r) in idxs.into_iter().zip(batch(inputs)?) {
+            slots[i] = Some(r);
+        }
+    }
+    for (i, req) in staged {
+        // staged orchestration is synchronous: the receiver is resolved
+        pending.push((i, compute.request(req)));
+    }
+    for (i, rx) in pending {
+        slots[i] =
+            Some(rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))??);
+    }
+    Ok(slots.into_iter().map(|s| s.expect("every slot filled")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_chain() {
+        let req = FftRequest::new(vec![(0.0, 0.0); 1024]);
+        assert_eq!(req.level, DegradeLevel::Full);
+        assert_eq!(req.class, 0);
+        assert_eq!(req.deadline, None);
+        assert_eq!(req.pass_ceiling(), MAX_SINGLE_PASS_POINTS);
+        assert!(!req.needs_decomposition());
+        let req = req
+            .with_level(DegradeLevel::Half)
+            .with_class(2)
+            .with_deadline(Duration::from_millis(5))
+            .with_max_pass_points(256);
+        assert_eq!(req.effective_points(), 512);
+        assert_eq!(req.pass_ceiling(), 256);
+        assert!(req.needs_decomposition(), "512 effective > 256 ceiling");
+    }
+
+    #[test]
+    fn degrade_can_bring_a_request_under_the_ceiling() {
+        let req = FftRequest::new(vec![(0.0, 0.0); 8192]);
+        assert!(req.needs_decomposition());
+        let req = req.with_level(DegradeLevel::Quarter);
+        assert_eq!(req.effective_points(), 2048);
+        assert!(!req.needs_decomposition(), "quarter of 8192 fits one pass");
+    }
+
+    #[test]
+    fn pass_ceiling_clamps_into_legal_range() {
+        let base = FftRequest::new(Vec::new());
+        assert_eq!(base.clone().with_max_pass_points(1 << 20).pass_ceiling(), 4096);
+        assert_eq!(base.clone().with_max_pass_points(4).pass_ceiling(), 16);
+        assert_eq!(base.with_max_pass_points(1024).pass_ceiling(), 1024);
+    }
+
+    #[test]
+    fn gate_reserves_and_releases() {
+        let gate = MultipassGate::new(2);
+        assert_eq!(gate.available(), 2);
+        let a = gate.try_reserve().expect("first permit");
+        let b = gate.try_reserve().expect("second permit");
+        assert!(gate.try_reserve().is_none(), "gate exhausted");
+        assert_eq!(gate.available(), 0);
+        drop(a);
+        assert_eq!(gate.available(), 1);
+        assert!(gate.try_reserve().is_some());
+        drop(b);
+    }
+
+    #[test]
+    fn zero_permit_gate_always_spills() {
+        let gate = MultipassGate::new(0);
+        assert!(gate.try_reserve().is_none());
+        assert_eq!(gate.available(), 0);
+    }
+
+    #[test]
+    fn stats_snapshot_copies_counters() {
+        let stats = MultipassStats::default();
+        stats.requests.fetch_add(2, Ordering::Relaxed);
+        stats.row_jobs.fetch_add(64, Ordering::Relaxed);
+        stats.col_jobs.fetch_add(128, Ordering::Relaxed);
+        let s = stats.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.stage_jobs(), 192);
+        assert_eq!(s.completed, 0);
+    }
+}

@@ -39,14 +39,22 @@
 //!   [`MetricsSnapshot::server`] ([`super::metrics::ClassStats`]).
 //!
 //! Dispatch is a small pool of dispatcher threads, each forwarding one
-//! admitted request at a time into the wrapped service and waiting for
-//! its reply — so [`ServerConfig::dispatchers`] is also the in-flight
-//! bound seen by the execution layer. The degrade level travels *with*
-//! the job into the execution service (`submit_degraded`), so the
-//! backend truncates, routes and meters the transform at its served
-//! size. `shutdown` closes admission, drains every already-admitted
-//! request (serving it or answering with a typed error), joins the
-//! dispatchers, and only then shuts the inner service down.
+//! admitted request at a time into the wrapped service as an
+//! [`FftRequest`] and waiting for its reply — so
+//! [`ServerConfig::dispatchers`] is also the in-flight bound seen by
+//! the execution layer. The degrade level travels *with* the request
+//! ([`FftRequest::level`]), so the backend truncates, routes and meters
+//! the transform at its served size, and the remaining deadline budget
+//! rides along so a decomposed large transform can be preempted at its
+//! between-pass checkpoint. Admission itself accounts queued work in
+//! single-pass job units ([`crate::fft::multipass::job_cost`]): a
+//! request above the 4096-point single-pass ceiling weighs its full
+//! `n1 + n2` decomposition against its class queue, so the full-check,
+//! the degrade ladder and the pressure feed all see the true backend
+//! cost of large-N traffic. `shutdown` closes admission, drains every
+//! already-admitted request (serving it or answering with a typed
+//! error), joins the dispatchers, and only then shuts the inner
+//! service down.
 
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -61,7 +69,9 @@ use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
 use super::qos::{
     default_two_class, resolve_capacities, DegradeLadder, DegradeLevel, QosClass, QosScheduler,
 };
+use super::request::{FftCompute, FftRequest};
 use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService};
+use crate::fft::multipass;
 
 /// What happens when a request arrives and its class queue is full.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -85,7 +95,10 @@ pub enum AdmissionPolicy {
     Degrade,
 }
 
-/// Per-request submission options.
+/// Deprecated per-request submission options, absorbed into
+/// [`FftRequest`] (class, deadline and input now travel in one struct
+/// through every layer).
+#[deprecated(since = "0.3.0", note = "use FftRequest (class and deadline ride the request)")]
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RequestOpts {
     /// Index into [`ServerConfig::classes`] (the default, 0, is the
@@ -96,6 +109,7 @@ pub struct RequestOpts {
     pub deadline: Option<Duration>,
 }
 
+#[allow(deprecated)]
 impl RequestOpts {
     /// Options addressing QoS class `class`, with no explicit deadline.
     pub fn class(class: usize) -> RequestOpts {
@@ -113,7 +127,7 @@ impl RequestOpts {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// QoS classes, in priority/configuration order (requests address
-    /// them by index through [`RequestOpts::class`]).
+    /// them by index through [`FftRequest::with_class`]).
     pub classes: Vec<QosClass>,
     /// **Deprecated** shared admission-queue capacity. With per-class
     /// capacities on [`QosClass`] this shared knob is ambiguous; it is
@@ -181,7 +195,7 @@ pub struct ServedFft {
     pub deadline_missed: bool,
 }
 
-/// What a [`TrafficServer::submit`] reply channel yields.
+/// What a [`TrafficServer::request`] reply channel yields.
 pub type ServerResult = std::result::Result<ServedFft, ServiceError>;
 
 /// An execution service behind the frontend: the single-queue pool,
@@ -199,15 +213,16 @@ pub enum ServiceHandle {
 }
 
 impl ServiceHandle {
-    pub(super) fn submit(
-        &self,
-        input: Vec<(f32, f32)>,
-        level: DegradeLevel,
-    ) -> Receiver<Result<FftResult>> {
+    /// The wrapped service as the unified [`FftCompute`] surface — one
+    /// match for every variant, so the three lanes cannot drift apart
+    /// in method naming or submit semantics again (the pre-redesign
+    /// dispatch called `submit_degraded` on two variants and `submit`
+    /// on the third).
+    fn compute(&self) -> &dyn FftCompute {
         match self {
-            ServiceHandle::Pool(s) => s.submit_degraded(input, level),
-            ServiceHandle::Sharded(s) => s.submit_degraded(input, level),
-            ServiceHandle::Routed(s) => s.submit(input, level),
+            ServiceHandle::Pool(s) => s,
+            ServiceHandle::Sharded(s) => s,
+            ServiceHandle::Routed(s) => s,
         }
     }
 
@@ -257,6 +272,16 @@ impl ServiceHandle {
     }
 }
 
+impl FftCompute for ServiceHandle {
+    fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        self.compute().request(req)
+    }
+
+    fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        self.compute().request_all(reqs)
+    }
+}
+
 /// One admitted-but-not-yet-dispatched request (the scheduler core
 /// carries class, deadline and enqueue time).
 struct Pending {
@@ -264,11 +289,23 @@ struct Pending {
     /// Effective degrade level decided at admission (queue-driven level
     /// merged with the controller's operating level, floor-clamped).
     level: DegradeLevel,
+    /// Admission cost in single-pass job units: 1 for a request the
+    /// backend serves in one pass, `n1 + n2` for one it serves by
+    /// four-step decomposition ([`multipass::job_cost`]) — so a
+    /// 2^20-point request weighs its true 2048 sub-jobs against its
+    /// class queue, not 1.
+    cost: u64,
     reply: Sender<ServerResult>,
 }
 
 struct QueueState {
     sched: QosScheduler<Pending>,
+    /// Per-class queued backlog in single-pass job units (the sum of
+    /// queued [`Pending::cost`]s): what the admission full-check and
+    /// the queue-driven degrade ladder measure pressure in. For
+    /// all-single-pass traffic every cost is 1, so this equals the
+    /// request depth and legacy thresholds are unchanged.
+    cost: Vec<u64>,
     closed: bool,
 }
 
@@ -516,7 +553,7 @@ impl TrafficServer {
     ///
     /// ```
     /// use egpu_fft::coordinator::{
-    ///     FftService, RequestOpts, ServerConfig, ServiceConfig, ServiceHandle, TrafficServer,
+    ///     FftRequest, FftService, ServerConfig, ServiceConfig, ServiceHandle, TrafficServer,
     /// };
     ///
     /// let service = ServiceHandle::Pool(FftService::start(ServiceConfig {
@@ -524,7 +561,7 @@ impl TrafficServer {
     ///     ..Default::default()
     /// })?);
     /// let server = TrafficServer::start(service, ServerConfig::default())?;
-    /// let reply = server.submit(vec![(1.0, 0.0); 256], RequestOpts::default())?;
+    /// let reply = server.request(FftRequest::new(vec![(1.0, 0.0); 256]))?;
     /// let served = reply.recv()?.expect("request served");
     /// assert_eq!(served.result.output.len(), 256);
     /// server.shutdown();
@@ -554,6 +591,7 @@ impl TrafficServer {
         let admission = Arc::new(Admission {
             state: Mutex::new(QueueState {
                 sched: QosScheduler::new(cfg.classes.clone(), caps.clone(), cfg.aging),
+                cost: vec![0; cfg.classes.len()],
                 closed: false,
             }),
             work: Condvar::new(),
@@ -631,29 +669,40 @@ impl TrafficServer {
         rx
     }
 
-    /// Submit one FFT through admission control. Returns the reply
-    /// channel on admission, or a typed error when the request is shed
-    /// (`Shed`/`Degrade` at the hard class limit), names an unknown
-    /// class, or the server is shut down. Every admitted request is
-    /// answered — with a [`ServedFft`] or a typed [`ServiceError`] —
-    /// never silently dropped.
-    pub fn submit(
+    /// Submit one [`FftRequest`] through admission control. Returns the
+    /// reply channel on admission, or a typed error when the request is
+    /// shed (`Shed`/`Degrade` at the hard class limit), names an
+    /// unknown class, or the server is shut down. Every admitted
+    /// request is answered — with a [`ServedFft`] or a typed
+    /// [`ServiceError`] — never silently dropped.
+    ///
+    /// Admission measures class pressure in **single-pass job units**
+    /// ([`multipass::job_cost`]): a request the backend must serve by
+    /// four-step decomposition counts as its full `n1 + n2` sub-jobs
+    /// against the class queue (a 2^20-point request weighs 2048, not
+    /// 1), so the full-check, the `Degrade` ladder thresholds and
+    /// `Block` backpressure all see the true backend work a queued
+    /// large transform represents. A large request is always admissible
+    /// when its class queue is empty — accounting adds pressure, never
+    /// a permanent rejection.
+    pub fn request(
         &self,
-        input: Vec<(f32, f32)>,
-        opts: RequestOpts,
+        req: FftRequest,
     ) -> std::result::Result<Receiver<ServerResult>, ServiceError> {
-        let class = opts.class;
+        let class = req.class;
         if class >= self.cfg.classes.len() {
             return Err(ServiceError::UnknownClass { class });
         }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.class(class).submitted.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
-        let deadline = opts
+        let deadline = req
             .deadline
             .or(self.cfg.classes[class].deadline_default)
             .or(self.cfg.default_deadline)
             .map(|d| now + d);
+        let ceiling = req.pass_ceiling();
+        let input = req.input;
         let mut st = self.admission.state.lock().unwrap();
         let level = loop {
             if st.closed {
@@ -661,15 +710,20 @@ impl TrafficServer {
             }
             let depth = st.sched.depth(class);
             let cap = self.caps[class];
-            if depth < cap {
+            // Queued backlog in single-pass job units; equals `depth`
+            // when every queued request is single-pass.
+            let backlog = st.cost[class];
+            if depth < cap && (backlog < cap as u64 || depth == 0) {
                 // Queue-driven ladder (Degrade policy only): Half at
                 // half the class capacity, Quarter at three quarters —
                 // coarser answers as this class's pressure builds, full
-                // resolution when its queue is healthy.
+                // resolution when its queue is healthy. Pressure is the
+                // job-unit backlog, so one queued multi-pass request
+                // can push the ladder on its own.
                 let queue_level = if self.cfg.policy == AdmissionPolicy::Degrade {
-                    if depth >= (3 * cap) / 4 {
+                    if backlog >= (3 * cap as u64) / 4 {
                         DegradeLevel::Quarter
-                    } else if depth >= cap / 2 {
+                    } else if backlog >= cap as u64 / 2 {
                         DegradeLevel::Half
                     } else {
                         DegradeLevel::Full
@@ -689,10 +743,13 @@ impl TrafficServer {
                 }
             }
         };
+        let served_points = input.len() >> level.shift();
+        let cost = multipass::job_cost(served_points, ceiling);
         let (reply, rx) = channel();
         st.sched
-            .try_enqueue(class, deadline, now, Pending { input, level, reply })
+            .try_enqueue(class, deadline, now, Pending { input, level, cost, reply })
             .expect("capacity checked under the same lock");
+        st.cost[class] += cost;
         let class_depth = st.sched.depth(class);
         let depth = st.sched.total_depth();
         drop(st);
@@ -703,6 +760,24 @@ impl TrafficServer {
         cc.max_queue_depth.fetch_max(class_depth, Ordering::Relaxed);
         self.admission.work.notify_one();
         Ok(rx)
+    }
+
+    /// Deprecated pre-[`FftRequest`] submit surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use request(FftRequest::new(input).with_class(opts.class))"
+    )]
+    #[allow(deprecated)]
+    pub fn submit(
+        &self,
+        input: Vec<(f32, f32)>,
+        opts: RequestOpts,
+    ) -> std::result::Result<Receiver<ServerResult>, ServiceError> {
+        let mut req = FftRequest::new(input).with_class(opts.class);
+        if let Some(d) = opts.deadline {
+            req = req.with_deadline(d);
+        }
+        self.request(req)
     }
 
     /// Queued (admitted, not yet dispatched) requests right now, all
@@ -783,6 +858,7 @@ fn dispatcher_loop(
             let mut st = admission.state.lock().unwrap();
             loop {
                 if let Some(p) = st.sched.pop(Instant::now()) {
+                    st.cost[p.item.class] -= p.item.payload.cost;
                     break Some(p);
                 }
                 if st.closed {
@@ -830,7 +906,14 @@ fn dispatcher_loop(
         }
 
         let t0 = Instant::now();
-        let backend = inner.submit(req.input, req.level).recv();
+        let mut freq = FftRequest::new(req.input).with_level(req.level);
+        if let Some(d) = deadline {
+            // Remaining budget rides the request so a decomposed large
+            // transform can be preempted at its between-pass checkpoint
+            // instead of burning backend time past the deadline.
+            freq = freq.with_deadline(d.saturating_duration_since(t0));
+        }
+        let backend = inner.request(freq).recv();
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
         metrics.service_time.record(service_us);
 
@@ -883,6 +966,7 @@ mod tests {
         let adm = Arc::new(Admission {
             state: Mutex::new(QueueState {
                 sched: QosScheduler::new(classes, caps, Duration::from_millis(10)),
+                cost: vec![0; 2],
                 closed: false,
             }),
             work: Condvar::new(),
@@ -998,7 +1082,7 @@ mod tests {
             ServerConfig::default(),
         )
         .unwrap();
-        match server.submit(vec![(0.0, 0.0); 256], RequestOpts::class(9)) {
+        match server.request(FftRequest::new(vec![(0.0, 0.0); 256]).with_class(9)) {
             Err(ServiceError::UnknownClass { class }) => assert_eq!(class, 9),
             other => panic!("want UnknownClass, got {:?}", other.map(|_| ())),
         }

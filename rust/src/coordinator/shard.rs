@@ -23,10 +23,12 @@
 //!   the job is redirected to the least-loaded shard instead, so a
 //!   skewed size distribution still uses the whole pool;
 //! * **batch chunking** — a coalesced same-size group from
-//!   [`ShardedFftService::submit_batch`] larger than
+//!   [`ShardedFftService::request_all`] larger than
 //!   [`ShardPoolConfig::min_chunk`] is split into up to one chunk per
 //!   shard, so a homogeneous batch parallelizes instead of serializing
-//!   on its home shard;
+//!   on its home shard. Multi-pass large-N requests ride this same
+//!   path: each four-step stage arrives as one same-size group, so a
+//!   single 2^20-point transform pipelines across the whole pool;
 //! * **one process-wide [`PlanCache`]** — every shard hands out `Arc`s
 //!   from the same cache, so a program is generated once and executed
 //!   everywhere (the cache counts lock contention so the sharing cost
@@ -64,6 +66,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::metrics::ShardStat;
+use super::request::{self, FftCompute, FftRequest};
 use super::{
     coalesce_by_size, collect_batch_results, fail_job, handle_job, Backend, Core, FftResult, Job,
     JobKind, Metrics, MetricsSnapshot, ServiceConfig, ServiceError,
@@ -219,6 +222,11 @@ pub struct ShardedFftService {
     steals: AtomicU64,
     next_id: AtomicU64,
     next_shard_id: AtomicUsize,
+    /// Admission gate for pipelined multi-pass requests (see
+    /// [`super::ServiceConfig::max_inflight_multipass`]).
+    mp_gate: request::MultipassGate,
+    /// Multi-pass orchestration counters, merged into every snapshot.
+    mp_stats: request::MultipassStats,
     started: Instant,
 }
 
@@ -244,6 +252,7 @@ impl ShardedFftService {
             }
             Backend::Simulator => (None, None),
         };
+        let mp_gate = request::MultipassGate::new(cfg.service.max_inflight_multipass);
         let svc = ShardedFftService {
             cfg,
             routing: RwLock::new(RoutingState { slots: Vec::with_capacity(n), epoch: 0 }),
@@ -256,6 +265,8 @@ impl ShardedFftService {
             steals: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             next_shard_id: AtomicUsize::new(0),
+            mp_gate,
+            mp_stats: request::MultipassStats::default(),
             started: Instant::now(),
         };
         {
@@ -413,17 +424,66 @@ impl ShardedFftService {
         }
     }
 
-    /// Submit one FFT; the returned channel yields the result.
-    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
-        self.submit_degraded(input, super::qos::DegradeLevel::Full)
+    /// Submit one [`FftRequest`]; the returned channel yields the
+    /// result. The QoS degrade level is threaded through dispatch:
+    /// affinity routing, queue weights and the serving shard's resident
+    /// executor all see the truncated (served) size, so a degraded
+    /// request lands on the home shard of the size it actually runs at.
+    ///
+    /// A request whose effective (post-degrade) size exceeds its pass
+    /// ceiling is served by four-step decomposition (see
+    /// [`FftCompute::request`]): each stage becomes a coalesced batch
+    /// that [`ShardedFftService::request_all`] chunks across the pool,
+    /// so one large transform pipelines over every shard. The
+    /// orchestration runs on the calling thread and the channel is
+    /// already resolved when this returns.
+    pub fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        if req.needs_decomposition() {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            return request::serve_staged(self, &self.plans, &self.mp_stats, &self.mp_gate, id, req);
+        }
+        self.enqueue(req.input, req.level)
     }
 
-    /// [`ShardedFftService::submit`] with a QoS degrade level threaded
-    /// through dispatch: affinity routing, queue weights and the
-    /// serving shard's resident executor all see the truncated (served)
-    /// size, so a degraded request lands on the home shard of the size
-    /// it actually runs at.
+    /// Submit a set of requests and wait for every result, in
+    /// submission order. Same-size Full-level requests within the pass
+    /// ceiling coalesce into per-size batch chunks spread across the
+    /// pool (see [`ShardedFftService::request_all`] chunking notes on
+    /// the deprecated [`ShardedFftService::submit_batch`]); degraded or
+    /// above-ceiling requests are served individually. Output bits are
+    /// identical to sequential [`ShardedFftService::request`] calls.
+    pub fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        request::serve_request_all(
+            self,
+            |inputs| self.enqueue_batch(inputs),
+            |input, level| self.enqueue(input, level),
+            reqs,
+        )
+    }
+
+    /// Deprecated pre-[`FftRequest`] single-submit surface.
+    #[deprecated(since = "0.3.0", note = "use request(FftRequest::new(input))")]
+    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
+        self.enqueue(input, super::qos::DegradeLevel::Full)
+    }
+
+    /// Deprecated pre-[`FftRequest`] degraded-submit surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use request(FftRequest::new(input).with_level(level))"
+    )]
     pub fn submit_degraded(
+        &self,
+        input: Vec<(f32, f32)>,
+        level: super::qos::DegradeLevel,
+    ) -> Receiver<Result<FftResult>> {
+        self.enqueue(input, level)
+    }
+
+    /// Route and queue one single job at `level` (the old
+    /// `submit_degraded` body; the unified
+    /// [`ShardedFftService::request`] fronts it now).
+    fn enqueue(
         &self,
         input: Vec<(f32, f32)>,
         level: super::qos::DegradeLevel,
@@ -447,17 +507,30 @@ impl ShardedFftService {
         reply_rx
     }
 
-    /// Batched dispatch across the shard pool: coalesce `inputs` into
-    /// per-size groups exactly as [`super::FftService::submit_batch`],
-    /// then split each group into up to one chunk per shard (chunks of
-    /// at least `min_chunk` jobs). The first chunk follows affinity
-    /// routing; the rest go straight to the least-loaded shards, so a
-    /// homogeneous batch parallelizes pool-wide at any steal threshold.
-    /// The whole batch is routed under one read lock — one epoch —
-    /// so a concurrent resize cannot split its view of the pool.
-    /// Results come back in the original submission order and are
-    /// bitwise identical to the single-shard path.
+    /// Deprecated pre-[`FftRequest`] batch surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use request_all(inputs.into_iter().map(FftRequest::new).collect())"
+    )]
     pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+        self.enqueue_batch(inputs)
+    }
+
+    /// Batched dispatch across the shard pool (the old `submit_batch`
+    /// body; [`ShardedFftService::request_all`] fronts it now):
+    /// coalesce `inputs` into per-size groups exactly as the
+    /// single-queue pool, then split each group into up to one chunk
+    /// per shard (chunks of at least `min_chunk` jobs). The first chunk
+    /// follows affinity routing; the rest go straight to the
+    /// least-loaded shards, so a homogeneous batch parallelizes
+    /// pool-wide at any steal threshold. The whole batch is routed
+    /// under one read lock — one epoch — so a concurrent resize cannot
+    /// split its view of the pool. Results come back in the original
+    /// submission order and are bitwise identical to the single-shard
+    /// path. This is also what gives one decomposed large transform its
+    /// cross-shard pipeline: every multi-pass stage arrives here as one
+    /// same-size group and fans out over the pool.
+    fn enqueue_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
         let n = inputs.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -514,7 +587,8 @@ impl ShardedFftService {
     /// Submit every input individually and wait for all results in
     /// submission order.
     pub fn run_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
-        let handles: Vec<_> = inputs.into_iter().map(|i| self.submit(i)).collect();
+        let handles: Vec<_> =
+            inputs.into_iter().map(|i| self.request(FftRequest::new(i))).collect();
         handles
             .into_iter()
             .map(|rx| rx.recv().map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))?)
@@ -528,6 +602,7 @@ impl ShardedFftService {
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.plan_cache = self.plans.stats();
+        snap.multipass = self.mp_stats.snapshot();
         snap.steals = self.steals.load(Ordering::Relaxed);
         let elapsed_us = (self.started.elapsed().as_micros() as u64).max(1);
         snap.agg_jobs_per_s = snap.served as f64 / (elapsed_us as f64 / 1e6);
@@ -621,6 +696,16 @@ impl ShardedFftService {
         let rps = 32.0 / t0.elapsed().as_secs_f64();
         svc.shutdown();
         Ok(rps)
+    }
+}
+
+impl FftCompute for ShardedFftService {
+    fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
+        ShardedFftService::request(self, req)
+    }
+
+    fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
+        ShardedFftService::request_all(self, reqs)
     }
 }
 
@@ -767,7 +852,7 @@ mod tests {
     fn auto_shard_count_uses_available_parallelism() {
         let svc = pool(0, 2);
         assert!(svc.shards() >= 1);
-        let r = svc.submit(signal(256, 1)).recv().unwrap().unwrap();
+        let r = svc.request(FftRequest::new(signal(256, 1))).recv().unwrap().unwrap();
         assert_eq!(r.output.len(), 256);
         svc.shutdown();
     }
@@ -789,13 +874,17 @@ mod tests {
         use crate::coordinator::qos::DegradeLevel;
         let svc = pool(2, 2);
         let r = svc
-            .submit_degraded(signal(1024, 5), DegradeLevel::Half)
+            .request(FftRequest::new(signal(1024, 5)).with_level(DegradeLevel::Half))
             .recv()
             .unwrap()
             .unwrap();
         assert_eq!(r.output.len(), 512, "half resolution of a 1024-point request");
         // bitwise identical to submitting the truncated signal directly
-        let direct = svc.submit(signal(1024, 5)[..512].to_vec()).recv().unwrap().unwrap();
+        let direct = svc
+            .request(FftRequest::new(signal(1024, 5)[..512].to_vec()))
+            .recv()
+            .unwrap()
+            .unwrap();
         assert_eq!(
             r.output.iter().map(|&(a, b)| (a.to_bits(), b.to_bits())).collect::<Vec<_>>(),
             direct.output.iter().map(|&(a, b)| (a.to_bits(), b.to_bits())).collect::<Vec<_>>(),
@@ -805,11 +894,51 @@ mod tests {
     }
 
     #[test]
+    fn large_request_pipelines_stage_batches_across_shards() {
+        use crate::fft::multipass::{four_step_reference, MultipassPlan};
+        let svc = pool(2, 2);
+        // 1024 points over a 64-point ceiling: 32 row jobs + 32 col
+        // jobs, each stage one coalesced 32-job group of 32-point jobs.
+        let r = svc
+            .request(FftRequest::new(signal(1024, 9)).with_max_pass_points(64))
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.output.len(), 1024);
+        let plan = MultipassPlan::new(1024, 64).unwrap();
+        let want = four_step_reference(&reference::test_signal(1024, 9), &plan);
+        let got: Vec<_> = r
+            .output
+            .iter()
+            .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+            .collect();
+        assert!(reference::rms_rel_error(&got, &want) < 5.0 * fft::F32_TOL);
+        let m = svc.metrics();
+        assert_eq!(m.multipass.requests, 1);
+        assert_eq!(m.multipass.completed, 1);
+        assert_eq!(m.multipass.reserved, 1, "default gate admits the pipelined path");
+        assert_eq!(m.multipass.row_jobs, 32);
+        assert_eq!(m.multipass.col_jobs, 32);
+        // Each stage group splits into per-shard chunks (min_chunk 8,
+        // 2 shards -> two 16-job chunks), so one large transform
+        // pipelines across the whole pool.
+        assert_eq!(m.shards.iter().map(|s| s.batch_jobs).sum::<u64>(), 64);
+        for s in &m.shards {
+            assert!(
+                s.batch_jobs > 0,
+                "stage chunks must spread across every shard: {:?}",
+                m.shards
+            );
+        }
+        svc.shutdown();
+    }
+
+    #[test]
     fn bad_size_errors_without_killing_shards() {
         let svc = pool(2, 2);
-        let bad = svc.submit(signal(100, 0)).recv().unwrap();
+        let bad = svc.request(FftRequest::new(signal(100, 0))).recv().unwrap();
         assert!(bad.is_err());
-        let ok = svc.submit(signal(256, 1)).recv().unwrap();
+        let ok = svc.request(FftRequest::new(signal(256, 1))).recv().unwrap();
         assert!(ok.is_ok());
         assert_eq!(svc.metrics().errors, 1);
         svc.shutdown();
@@ -818,7 +947,7 @@ mod tests {
     #[test]
     fn empty_batch_is_a_no_op() {
         let svc = pool(2, 2);
-        assert!(svc.submit_batch(Vec::new()).unwrap().is_empty());
+        assert!(svc.request_all(Vec::new()).unwrap().is_empty());
         assert_eq!(svc.metrics().served, 0);
         svc.shutdown();
     }
@@ -847,7 +976,7 @@ mod tests {
         assert_eq!(retired, 2, "last position retires first");
         assert_eq!(svc.shards(), 2);
         // the pool still serves after the round trip
-        let r = svc.submit(signal(256, 1)).recv().unwrap().unwrap();
+        let r = svc.request(FftRequest::new(signal(256, 1))).recv().unwrap().unwrap();
         assert_eq!(r.output.len(), 256);
         svc.shutdown();
     }
@@ -868,7 +997,8 @@ mod tests {
         // the exact slot retire_shard pops — and a huge steal threshold
         // pins every job there, so retirement must drain a loaded queue.
         let svc = pool(3, 1024);
-        let handles: Vec<_> = (0..16).map(|i| svc.submit(signal(256, i))).collect();
+        let handles: Vec<_> =
+            (0..16).map(|i| svc.request(FftRequest::new(signal(256, i)))).collect();
         let retired = svc.retire_shard().unwrap();
         assert_eq!(svc.shards(), 2);
         for (i, h) in handles.into_iter().enumerate() {
@@ -917,11 +1047,11 @@ mod tests {
     #[test]
     fn snapshots_tolerate_resize_with_stable_ids() {
         let svc = pool(2, 2);
-        svc.submit(signal(256, 0)).recv().unwrap().unwrap();
+        svc.request(FftRequest::new(signal(256, 0))).recv().unwrap().unwrap();
         svc.add_shard(); // id 2
         svc.retire_shard().unwrap(); // retires id 2
         svc.add_shard(); // id 3
-        svc.submit(signal(256, 1)).recv().unwrap().unwrap();
+        svc.request(FftRequest::new(signal(256, 1))).recv().unwrap().unwrap();
         let m = svc.metrics();
         let ids: Vec<usize> = m.shards.iter().map(|s| s.shard).collect();
         assert_eq!(ids.len(), 4, "3 active + 1 retired");

@@ -16,12 +16,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::codegen::{generate, FftProgram};
+use super::multipass::{self, MultipassPlan};
 use super::plan::PlanError;
 use crate::arch::{SmConfig, Variant};
 
 /// Default number of resident design points (far above the paper's
 /// 8-size × 4-radix sweep touching a handful of sizes at a time).
 pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 16;
+
+/// Number of resident inter-stage twiddle tables for multi-pass
+/// requests. Bounded separately from the program cache because the
+/// tables are big — a 2^20-point table is one million `(f32, f32)`
+/// entries, ~8 MB — while a serving mix rarely touches more than a
+/// couple of large sizes at once.
+pub const STAGE_TWIDDLE_CAPACITY: usize = 4;
 
 /// Cache key: one scheduled program per design point. Besides the
 /// `(points, radix, variant)` triple, the key covers every `SmConfig`
@@ -94,6 +102,16 @@ struct Inner {
     tick: u64,
 }
 
+struct TwiddleSlot {
+    table: Arc<Vec<(f32, f32)>>,
+    last_used: u64,
+}
+
+struct TwiddleInner {
+    map: HashMap<MultipassPlan, TwiddleSlot>,
+    tick: u64,
+}
+
 /// Thread-safe LRU memo of generated FFT programs.
 ///
 /// Programs are built *outside* the lock (other design points stay
@@ -103,6 +121,7 @@ struct Inner {
 pub struct PlanCache {
     capacity: usize,
     inner: Mutex<Inner>,
+    twiddles: Mutex<TwiddleInner>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -121,6 +140,7 @@ impl PlanCache {
         PlanCache {
             capacity: capacity.max(1),
             inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            twiddles: Mutex::new(TwiddleInner { map: HashMap::new(), tick: 0 }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -204,6 +224,45 @@ impl PlanCache {
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         program
+    }
+
+    /// Fetch the shared inter-stage twiddle table for one multi-pass
+    /// factorization, computing it on a miss. Like programs, tables are
+    /// built outside the lock with a double-checked insert (a 2^20-point
+    /// table costs tens of ms to synthesize); eviction is LRU over a
+    /// separate [`STAGE_TWIDDLE_CAPACITY`]-sized pool.
+    pub fn stage_twiddles(&self, plan: &MultipassPlan) -> Arc<Vec<(f32, f32)>> {
+        {
+            let mut inner = self.twiddles.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(slot) = inner.map.get_mut(plan) {
+                slot.last_used = tick;
+                return Arc::clone(&slot.table);
+            }
+        }
+        let table = Arc::new(multipass::stage_twiddles(plan));
+        let mut inner = self.twiddles.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(slot) = inner.map.get_mut(plan) {
+            // another worker synthesized the same table first: share theirs
+            slot.last_used = tick;
+            return Arc::clone(&slot.table);
+        }
+        inner
+            .map
+            .insert(*plan, TwiddleSlot { table: Arc::clone(&table), last_used: tick });
+        while inner.map.len() > STAGE_TWIDDLE_CAPACITY {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| *k)
+                .expect("over-capacity cache is non-empty");
+            inner.map.remove(&victim);
+        }
+        table
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -333,5 +392,43 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.lookups(), 4);
         assert!(s.misses >= 1, "at least the first access generates");
+    }
+
+    #[test]
+    fn stage_twiddles_are_shared_and_correct() {
+        let cache = PlanCache::new(4);
+        let plan = MultipassPlan::new(1024, 64).unwrap();
+        let a = cache.stage_twiddles(&plan);
+        let b = cache.stage_twiddles(&plan);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the first table");
+        assert_eq!(*a, multipass::stage_twiddles(&plan));
+    }
+
+    #[test]
+    fn stage_twiddles_evict_lru_beyond_capacity() {
+        let cache = PlanCache::new(4);
+        let plans: Vec<MultipassPlan> = [1024usize, 2048, 4096, 8192, 16384]
+            .iter()
+            .map(|&n| MultipassPlan::new(n, 4096).unwrap())
+            .collect();
+        let first = cache.stage_twiddles(&plans[0]);
+        for p in &plans[1..] {
+            cache.stage_twiddles(p);
+        }
+        // five distinct tables through a 4-slot pool: the oldest was
+        // evicted, so a re-fetch synthesizes a fresh allocation
+        let again = cache.stage_twiddles(&plans[0]);
+        assert!(!Arc::ptr_eq(&first, &again), "evicted table must rebuild");
+        assert_eq!(*first, *again, "rebuilt table is identical");
+    }
+
+    #[test]
+    fn stage_twiddles_do_not_touch_program_counters() {
+        let cache = PlanCache::new(4);
+        let plan = MultipassPlan::new(8192, 4096).unwrap();
+        cache.stage_twiddles(&plan);
+        cache.stage_twiddles(&plan);
+        assert_eq!(cache.stats().lookups(), 0);
+        assert!(cache.is_empty());
     }
 }

@@ -5,6 +5,7 @@
 
 pub mod cache;
 pub mod codegen;
+pub mod multipass;
 pub mod plan;
 pub mod reference;
 pub mod sched;
@@ -12,6 +13,7 @@ pub mod twiddle;
 
 pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use codegen::{generate, generate_batched, generate_opt, FftProgram};
+pub use multipass::{MultipassError, MultipassPlan, MAX_SINGLE_PASS_POINTS};
 pub use plan::{FftPlan, Layout, Pass, PlanError};
 pub use twiddle::Cpx;
 

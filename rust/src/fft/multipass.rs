@@ -1,0 +1,421 @@
+//! Four-step (Bailey) decomposition: break an N-point transform past
+//! the single-pass shared-memory ceiling into two stages of sub-FFTs
+//! that each fit the existing ≤4096-point executor.
+//!
+//! With N = n1·n2, index the input as j = j1 + n1·j2 and the output as
+//! k = k2 + n2·k1 (j1, k1 < n1; j2, k2 < n2). Then
+//!
+//! ```text
+//! X[k2 + n2·k1] = Σ_{j1} W_N^{j1·k2} · W_{n1}^{j1·k1}
+//!                   · [ Σ_{j2} x[j1 + n1·j2] · W_{n2}^{j2·k2} ]
+//! ```
+//!
+//! which is exactly four steps: **row FFTs** (n1 transforms of n2
+//! points over the strided input), **twiddle scaling** (multiply row j1
+//! element k2 by W_N^{j1·k2}), **transpose**, and **column FFTs** (n2
+//! transforms of n1 points), with the final digit interleave folded
+//! into the output scatter. Every stage is a batch of ordinary
+//! bounded-size jobs, so the scheduler layers (sharding, stealing,
+//! QoS) serve a 2^20-point request as they would any other batch —
+//! the same strategy the bellman GPU exemplars use to drive a
+//! bounded-radix kernel in a `while p < n` multi-round loop.
+//!
+//! This module owns the pure math: the factorization
+//! ([`MultipassPlan`]), the inter-stage twiddle table, the
+//! gather/scale/transpose/scatter steps, and a generic driver
+//! ([`run_with`]) that threads the stages through any batch-FFT
+//! closure. The coordinator supplies the closure (its own batched
+//! dispatch) plus the between-pass checkpoint that gives QoS a
+//! cooperative preemption point.
+
+use std::fmt;
+
+use thiserror::Error;
+
+use super::reference;
+use super::twiddle::{twiddle, Cpx};
+
+/// The largest transform one resident-SM pass serves (radix-4 at 4096
+/// points is 16376 of the 16384 shared-memory words — the paper's
+/// ceiling, pinned in `fft::plan`).
+pub const MAX_SINGLE_PASS_POINTS: usize = 4096;
+
+/// The largest decomposable transform: one four-step level over
+/// [`MAX_SINGLE_PASS_POINTS`]-sized stages, i.e. 4096² = 2^24 points.
+pub const MAX_POINTS: usize = MAX_SINGLE_PASS_POINTS * MAX_SINGLE_PASS_POINTS;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MultipassError {
+    #[error("unsupported multi-pass FFT size {0}: must be a power of two >= 16")]
+    BadSize(usize),
+    #[error("invalid pass ceiling {0}: must be a power of two in 16..=4096")]
+    BadCeiling(usize),
+    #[error(
+        "size {points} with pass ceiling {ceiling} needs a sub-FFT larger than \
+         the ceiling (one four-step level decomposes at most ceiling^2 points)"
+    )]
+    TooLarge { points: usize, ceiling: usize },
+}
+
+/// Which stage of the decomposition a batch of sub-jobs belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// First stage: `row_jobs` FFTs of `row_points` points each.
+    Rows,
+    /// Second stage: `col_jobs()` FFTs of `col_points()` points each.
+    Cols,
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Stage::Rows => write!(f, "rows"),
+            Stage::Cols => write!(f, "cols"),
+        }
+    }
+}
+
+/// The balanced N = n1·n2 factorization of one large transform, with
+/// both factors at or under the pass ceiling. Balanced (n1 ≤ n2 ≤ 2·n1)
+/// keeps both stage batches wide enough to chunk across every shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MultipassPlan {
+    /// Total transform size N = `row_jobs · row_points`.
+    pub points: usize,
+    /// Number of row FFTs in the first stage (n1).
+    pub row_jobs: usize,
+    /// Size of each row FFT (n2).
+    pub row_points: usize,
+}
+
+impl MultipassPlan {
+    /// Factor `points` for sub-FFTs of at most `ceiling` points.
+    /// `ceiling` is normally [`MAX_SINGLE_PASS_POINTS`]; requests may
+    /// hint a smaller one to force earlier decomposition. One four-step
+    /// level only: `points` must not exceed `ceiling²`.
+    pub fn new(points: usize, ceiling: usize) -> Result<Self, MultipassError> {
+        if !ceiling.is_power_of_two() || !(16..=MAX_SINGLE_PASS_POINTS).contains(&ceiling) {
+            return Err(MultipassError::BadCeiling(ceiling));
+        }
+        if !points.is_power_of_two() || points < 16 {
+            return Err(MultipassError::BadSize(points));
+        }
+        let log = points.trailing_zeros();
+        let row_jobs = 1usize << (log / 2); // n1 = 2^floor(log/2), so n1 <= n2
+        let row_points = points / row_jobs; // n2 = 2^ceil(log/2)
+        if row_points > ceiling {
+            return Err(MultipassError::TooLarge { points, ceiling });
+        }
+        Ok(MultipassPlan { points, row_jobs, row_points })
+    }
+
+    /// Number of column FFTs in the second stage (n2).
+    pub fn col_jobs(&self) -> usize {
+        self.row_points
+    }
+
+    /// Size of each column FFT (n1).
+    pub fn col_points(&self) -> usize {
+        self.row_jobs
+    }
+
+    /// Total sub-FFT jobs across both stages (n1 + n2) — a decomposed
+    /// request's true admission cost in single-pass job units.
+    pub fn total_jobs(&self) -> usize {
+        self.row_jobs + self.row_points
+    }
+}
+
+/// Admission cost of a `points`-sized request in single-pass job
+/// units: 1 when it fits one pass (or cannot decompose at all, in
+/// which case it will be rejected downstream), the two-stage sub-job
+/// count when it decomposes.
+pub fn job_cost(points: usize, ceiling: usize) -> u64 {
+    if points <= ceiling {
+        return 1;
+    }
+    match MultipassPlan::new(points, ceiling) {
+        Ok(plan) => plan.total_jobs() as u64,
+        Err(_) => 1,
+    }
+}
+
+/// Stage-1 inputs: row `r` (r < n1) is the stride-n1 sequence
+/// `x[r + n1·j2]` for j2 in 0..n2.
+pub fn gather_rows(input: &[(f32, f32)], plan: &MultipassPlan) -> Vec<Vec<(f32, f32)>> {
+    let (n1, n2) = (plan.row_jobs, plan.row_points);
+    debug_assert_eq!(input.len(), plan.points);
+    (0..n1).map(|r| (0..n2).map(|j| input[r + n1 * j]).collect()).collect()
+}
+
+/// The inter-stage twiddle table: entry `[r·n2 + k] = W_N^{r·k}`,
+/// N entries total. Computed in f64 ([`twiddle`]'s exact-axis values)
+/// and rounded once to f32 — the precision the executors serve — so
+/// the scaling step is deterministic bit-for-bit.
+pub fn stage_twiddles(plan: &MultipassPlan) -> Vec<(f32, f32)> {
+    let (n1, n2, n) = (plan.row_jobs, plan.row_points, plan.points);
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n1 {
+        for k in 0..n2 {
+            out.push(twiddle(n, (r * k) % n).to_f32_pair());
+        }
+    }
+    out
+}
+
+#[inline]
+fn cmul(a: (f32, f32), b: (f32, f32)) -> (f32, f32) {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// Scale row `r` element `k` by `W_N^{r·k}` in f32 arithmetic.
+pub fn apply_twiddles(
+    rows: &mut [Vec<(f32, f32)>],
+    twiddles: &[(f32, f32)],
+    plan: &MultipassPlan,
+) {
+    let n2 = plan.row_points;
+    debug_assert_eq!(twiddles.len(), plan.points);
+    for (r, row) in rows.iter_mut().enumerate() {
+        for (k, v) in row.iter_mut().enumerate() {
+            *v = cmul(*v, twiddles[r * n2 + k]);
+        }
+    }
+}
+
+/// Stage-2 inputs: column `k` (k < n2) gathers element `k` of every
+/// scaled row.
+pub fn transpose(rows: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<Vec<(f32, f32)>> {
+    let (n1, n2) = (plan.row_jobs, plan.row_points);
+    (0..n2).map(|k| (0..n1).map(|r| rows[r][k]).collect()).collect()
+}
+
+/// Recompose the output: element `k1` of column `k2` lands at
+/// `k2 + n2·k1` (the four-step output interleave).
+pub fn scatter(cols: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<(f32, f32)> {
+    let n2 = plan.row_points;
+    let mut out = vec![(0.0f32, 0.0f32); plan.points];
+    for (k2, col) in cols.iter().enumerate() {
+        for (k1, &v) in col.iter().enumerate() {
+            out[k2 + n2 * k1] = v;
+        }
+    }
+    out
+}
+
+/// Drive the four steps through `batch_fft`, which serves one stage's
+/// sub-FFT batch (inputs in order; outputs must come back in the same
+/// order, transformed, sizes preserved — the contract every service
+/// batch path already keeps). `between_passes` runs after stage 1 is
+/// scaled and before stage 2 is submitted: the cooperative preemption
+/// point, where a scheduler may abandon the request (deadline passed,
+/// higher-priority preemption) by returning an error.
+///
+/// The driver itself is deterministic: given the same sub-transform
+/// results it produces bitwise-identical output regardless of how the
+/// closure scheduled the jobs.
+pub fn run_with<E>(
+    plan: &MultipassPlan,
+    input: &[(f32, f32)],
+    twiddles: &[(f32, f32)],
+    mut batch_fft: impl FnMut(Vec<Vec<(f32, f32)>>, Stage) -> Result<Vec<Vec<(f32, f32)>>, E>,
+    mut between_passes: impl FnMut() -> Result<(), E>,
+) -> Result<Vec<(f32, f32)>, E> {
+    assert_eq!(input.len(), plan.points, "input length must match the plan");
+    assert_eq!(twiddles.len(), plan.points, "twiddle table must have N entries");
+    let mut rows = batch_fft(gather_rows(input, plan), Stage::Rows)?;
+    assert_eq!(rows.len(), plan.row_jobs, "stage 1 must return one output per row job");
+    for row in &rows {
+        assert_eq!(row.len(), plan.row_points, "stage 1 outputs must keep their size");
+    }
+    apply_twiddles(&mut rows, twiddles, plan);
+    between_passes()?;
+    let cols = batch_fft(transpose(&rows, plan), Stage::Cols)?;
+    assert_eq!(cols.len(), plan.col_jobs(), "stage 2 must return one output per column job");
+    for col in &cols {
+        assert_eq!(col.len(), plan.col_points(), "stage 2 outputs must keep their size");
+    }
+    Ok(scatter(&cols, plan))
+}
+
+/// The decomposition algebra in f64 end to end: [`reference::fft`]
+/// sub-transforms and exact twiddles. Tests use this as the scaled
+/// oracle at sizes the f64 reference can verify directly — it must
+/// agree with the full-size direct transform to f64 accuracy, which
+/// pins the index algebra (gather stride, twiddle exponent, output
+/// interleave) independently of f32 executor noise.
+pub fn four_step_reference(input: &[Cpx], plan: &MultipassPlan) -> Vec<Cpx> {
+    let (n1, n2, n) = (plan.row_jobs, plan.row_points, plan.points);
+    assert_eq!(input.len(), n);
+    let mut rows: Vec<Vec<Cpx>> = (0..n1)
+        .map(|r| {
+            let row: Vec<Cpx> = (0..n2).map(|j| input[r + n1 * j]).collect();
+            reference::fft(&row)
+        })
+        .collect();
+    for (r, row) in rows.iter_mut().enumerate() {
+        for (k, v) in row.iter_mut().enumerate() {
+            *v = *v * twiddle(n, (r * k) % n);
+        }
+    }
+    let mut out = vec![Cpx::ZERO; n];
+    for k2 in 0..n2 {
+        let col: Vec<Cpx> = (0..n1).map(|r| rows[r][k2]).collect();
+        let col = reference::fft(&col);
+        for (k1, &v) in col.iter().enumerate() {
+            out[k2 + n2 * k1] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::{fft, rms_rel_error, test_signal};
+
+    #[test]
+    fn balanced_factorizations() {
+        for (points, n1, n2) in [
+            (8192usize, 64usize, 128usize),
+            (1 << 16, 256, 256),
+            (1 << 17, 256, 512),
+            (1 << 20, 1024, 1024),
+            (1 << 24, 4096, 4096),
+        ] {
+            let p = MultipassPlan::new(points, MAX_SINGLE_PASS_POINTS).unwrap();
+            assert_eq!((p.row_jobs, p.row_points), (n1, n2), "{points}");
+            assert_eq!(p.row_jobs * p.row_points, points);
+            assert_eq!(p.col_jobs(), n2);
+            assert_eq!(p.col_points(), n1);
+            assert_eq!(p.total_jobs(), n1 + n2);
+        }
+        // a smaller ceiling hint forces the same balanced split as long
+        // as it fits
+        let p = MultipassPlan::new(1 << 20, 1024).unwrap();
+        assert_eq!((p.row_jobs, p.row_points), (1024, 1024));
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        assert_eq!(
+            MultipassPlan::new(3 * 4096, 4096),
+            Err(MultipassError::BadSize(3 * 4096))
+        );
+        assert_eq!(MultipassPlan::new(8, 4096), Err(MultipassError::BadSize(8)));
+        assert_eq!(MultipassPlan::new(8192, 8192), Err(MultipassError::BadCeiling(8192)));
+        assert_eq!(MultipassPlan::new(8192, 8), Err(MultipassError::BadCeiling(8)));
+        assert_eq!(
+            MultipassPlan::new(1 << 25, 4096),
+            Err(MultipassError::TooLarge { points: 1 << 25, ceiling: 4096 })
+        );
+        // 2^13 over a 64-point ceiling needs n2 = 128 > 64
+        assert_eq!(
+            MultipassPlan::new(8192, 64),
+            Err(MultipassError::TooLarge { points: 8192, ceiling: 64 })
+        );
+    }
+
+    #[test]
+    fn job_cost_is_the_two_stage_job_count() {
+        assert_eq!(job_cost(1024, 4096), 1);
+        assert_eq!(job_cost(4096, 4096), 1);
+        assert_eq!(job_cost(8192, 4096), 64 + 128);
+        assert_eq!(job_cost(1 << 20, 4096), 2048);
+        // an undecomposable size falls back to unit cost (rejected later)
+        assert_eq!(job_cost(1 << 25, 4096), 1);
+    }
+
+    /// The f64 four-step recomposition must match the direct reference
+    /// transform to f64 accuracy: this pins the index algebra.
+    #[test]
+    fn four_step_reference_matches_direct_fft() {
+        for points in [1024usize, 4096] {
+            let plan = MultipassPlan::new(points, 256).unwrap();
+            let x = test_signal(points, 11);
+            let got = four_step_reference(&x, &plan);
+            let want = fft(&x);
+            let err = rms_rel_error(&got, &want);
+            assert!(err < 1e-12, "{points}: four-step algebra error {err}");
+        }
+    }
+
+    /// The f32 driver over f64-reference sub-transforms (rounded to f32
+    /// per stage, as a real executor would) stays within f32 tolerance
+    /// of the direct transform.
+    #[test]
+    fn run_with_reference_stages_matches_direct_fft() {
+        let points = 4096;
+        let plan = MultipassPlan::new(points, 256).unwrap();
+        let x = test_signal(points, 5);
+        let input: Vec<(f32, f32)> = x.iter().map(|c| c.to_f32_pair()).collect();
+        let tw = stage_twiddles(&plan);
+        let got = run_with::<()>(
+            &plan,
+            &input,
+            &tw,
+            |jobs, _stage| {
+                Ok(jobs
+                    .into_iter()
+                    .map(|j| {
+                        let cpx: Vec<Cpx> =
+                            j.iter().map(|&(re, im)| Cpx::new(re as f64, im as f64)).collect();
+                        fft(&cpx).iter().map(|c| c.to_f32_pair()).collect()
+                    })
+                    .collect())
+            },
+            || Ok(()),
+        )
+        .unwrap();
+        let got_cpx: Vec<Cpx> =
+            got.iter().map(|&(re, im)| Cpx::new(re as f64, im as f64)).collect();
+        let err = rms_rel_error(&got_cpx, &fft(&x));
+        assert!(err < 5.0 * crate::fft::F32_TOL, "multi-pass rms error {err}");
+    }
+
+    /// The between-pass checkpoint aborts the request before stage 2 is
+    /// ever submitted — the cooperative preemption contract.
+    #[test]
+    fn between_passes_short_circuits_stage_two() {
+        let plan = MultipassPlan::new(1024, 32).unwrap();
+        let input: Vec<(f32, f32)> =
+            test_signal(1024, 3).iter().map(|c| c.to_f32_pair()).collect();
+        let tw = stage_twiddles(&plan);
+        let mut stage2 = false;
+        let got = run_with(
+            &plan,
+            &input,
+            &tw,
+            |jobs, stage| {
+                if stage == Stage::Cols {
+                    stage2 = true;
+                }
+                Ok::<_, &str>(jobs)
+            },
+            || Err("preempted"),
+        );
+        assert_eq!(got, Err("preempted"));
+        assert!(!stage2, "stage 2 must not run after a failed checkpoint");
+    }
+
+    #[test]
+    fn twiddle_table_layout() {
+        let plan = MultipassPlan::new(1024, 64).unwrap();
+        let tw = stage_twiddles(&plan);
+        assert_eq!(tw.len(), 1024);
+        // row 0 is all W^0 = 1
+        for k in 0..plan.row_points {
+            assert_eq!(tw[k], (1.0, 0.0));
+        }
+        // row 1 element k is W_N^k
+        for k in [1usize, 7, 31] {
+            assert_eq!(tw[plan.row_points + k], twiddle(1024, k).to_f32_pair());
+        }
+    }
+
+    #[test]
+    fn stage_display_names() {
+        assert_eq!(Stage::Rows.to_string(), "rows");
+        assert_eq!(Stage::Cols.to_string(), "cols");
+    }
+}

@@ -25,9 +25,11 @@
 //!   artifacts (the numerical oracle on the request path);
 //! * [`coordinator`] — an FFT service scheduling jobs over a pool of
 //!   simulated eGPU cores and the PJRT fast path. Requests go through
-//!   `submit` (one job, one queue hop) or `submit_batch` (same-size
-//!   requests coalesced onto one worker, amortizing the plan-cache
-//!   lookup, the resident SM and the queue traffic across the batch);
+//!   `request` (one `FftRequest`, one queue hop) or `request_all`
+//!   (same-size requests coalesced onto one worker, amortizing the
+//!   plan-cache lookup, the resident SM and the queue traffic across
+//!   the batch); transforms past the 4096-point single-pass ceiling
+//!   are decomposed four-step style into staged row/column batches;
 //!   `MetricsSnapshot` reports latency, batch occupancy and the
 //!   plan-cache hit rate. [`coordinator::ShardedFftService`] scales the
 //!   pool out multi-core: one queue per shard, size-affinity routing

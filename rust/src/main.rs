@@ -10,7 +10,7 @@ use anyhow::{anyhow, bail, Result};
 use egpu_fft::arch::{SmConfig, Variant};
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    BackendSet, BackendSetConfig, DegradeLevel, FftService, LoadgenConfig, QosClass, RequestOpts,
+    BackendSet, BackendSetConfig, DegradeLevel, FftRequest, FftService, LoadgenConfig, QosClass,
     ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService,
     TrafficServer,
 };
@@ -43,7 +43,7 @@ USAGE:
                  [--backend sim|pjrt|validate] [--batched]
                  [--shards N] [--steal-threshold T]
                                      run the FFT service demo
-                                     (--batched: coalesced submit_batch
+                                     (--batched: coalesced request_all
                                       dispatch through the plan cache;
                                       --shards: per-shard queues with
                                       size-affinity + work stealing,
@@ -343,7 +343,7 @@ fn run() -> Result<()> {
                 })?;
                 let t0 = std::time::Instant::now();
                 let results = if batched {
-                    svc.submit_batch(inputs)?
+                    svc.request_all(inputs.into_iter().map(FftRequest::new).collect())?
                 } else {
                     svc.run_batch(inputs)?
                 };
@@ -367,7 +367,7 @@ fn run() -> Result<()> {
             })?;
             let t0 = std::time::Instant::now();
             let results = if batched {
-                svc.submit_batch(inputs)?
+                svc.request_all(inputs.into_iter().map(FftRequest::new).collect())?
             } else {
                 svc.run_batch(inputs)?
             };
@@ -525,7 +525,9 @@ fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
         reference::test_signal(points, 11).iter().map(|c| c.to_f32_pair()).collect();
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..requests)
-        .filter_map(|i| server.submit(input.clone(), RequestOpts::class(i % n_classes)).ok())
+        .filter_map(|i| {
+            server.request(FftRequest::new(input.clone()).with_class(i % n_classes)).ok()
+        })
         .collect();
     let served = handles.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
     let wall = t0.elapsed();

@@ -14,8 +14,8 @@
 use std::time::Duration;
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, FftService,
-    LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
+    loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, FftRequest,
+    FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
     ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
@@ -268,7 +268,8 @@ fn retirement_with_queued_work_reroutes_and_serves_everything() {
         ..Default::default()
     })
     .unwrap();
-    let handles: Vec<_> = (0..24).map(|i| svc.submit(signal(256, i))).collect();
+    let handles: Vec<_> =
+        (0..24).map(|i| svc.request(FftRequest::new(signal(256, i)))).collect();
     let retired_id = svc.retire_shard().unwrap();
     assert_eq!(svc.shards(), 2);
     for (i, h) in handles.into_iter().enumerate() {

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use egpu_fft::coordinator::{
     cross_error, AutoscaleController, AutoscalePolicy, BackendSet, BackendSetConfig,
-    DegradeLevel, FftBackend, FftService, RequestOpts, ServerConfig, ServiceConfig,
+    FftBackend, FftRequest, FftService, ServerConfig, ServiceConfig,
     ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::{self, reference, Cpx};
@@ -164,7 +164,7 @@ fn validate_mismatch_counts_quarantines_and_returns_the_simulator_result() {
     set.calibrate().unwrap();
 
     let input = signal(256, 9);
-    let served = set.submit(input.clone(), DegradeLevel::Full).recv().unwrap().unwrap();
+    let served = set.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
     let stats = set.stats();
     assert_eq!(stats[1].name, "corrupt");
     assert!(stats[1].validate_checks >= 1);
@@ -174,12 +174,12 @@ fn validate_mismatch_counts_quarantines_and_returns_the_simulator_result() {
 
     // The caller received the simulator's answer: re-serving the same
     // input (now quarantined, so sim takes it) is bitwise identical.
-    let again = set.submit(input, DegradeLevel::Full).recv().unwrap().unwrap();
+    let again = set.request(FftRequest::new(input)).recv().unwrap().unwrap();
     assert_eq!(bits(&served.output), bits(&again.output));
 
     // Quarantine holds: all subsequent traffic is simulator-served.
     for i in 0..5 {
-        set.submit(signal(256, 100 + i), DegradeLevel::Full).recv().unwrap().unwrap();
+        set.request(FftRequest::new(signal(256, 100 + i))).recv().unwrap().unwrap();
     }
     let stats = set.stats();
     assert_eq!(stats[1].served, 0);
@@ -201,7 +201,7 @@ fn sim_only_routed_set_is_bitwise_identical_to_the_unrouted_service() {
         BackendSetConfig::default(),
     )
     .unwrap();
-    let got = set.submit(signal(1024, 3), DegradeLevel::Full).recv().unwrap().unwrap();
+    let got = set.request(FftRequest::new(signal(1024, 3))).recv().unwrap().unwrap();
     assert_eq!(bits(&want[0].output), bits(&got.output));
     set.shutdown();
 }
@@ -221,7 +221,7 @@ fn traffic_server_over_a_routed_set_serves_and_reports_backend_stats() {
     let server =
         TrafficServer::start(ServiceHandle::Routed(set), ServerConfig::default()).unwrap();
     let replies: Vec<_> = (0..20)
-        .filter_map(|i| server.submit(signal(256, i), RequestOpts::default()).ok())
+        .filter_map(|i| server.request(FftRequest::new(signal(256, i))).ok())
         .collect();
     let served = replies.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
     assert_eq!(served, 20);

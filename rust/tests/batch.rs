@@ -1,9 +1,9 @@
-//! Batched-dispatch integration tests: `submit_batch` vs sequential
-//! `submit` (bitwise identity and reference numerics), steady-state
+//! Batched-dispatch integration tests: `request_all` vs sequential
+//! `request` (bitwise identity and reference numerics), steady-state
 //! plan-cache behaviour, occupancy metrics, and LRU eviction through
 //! the running service.
 
-use egpu_fft::coordinator::{Backend, FftService, ServiceConfig};
+use egpu_fft::coordinator::{Backend, FftRequest, FftService, ServiceConfig};
 use egpu_fft::fft::{self, reference};
 
 fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
@@ -27,22 +27,22 @@ fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
 }
 
 /// The acceptance property: a batch submission produces *bitwise* the
-/// same outputs as the same inputs submitted one at a time, and both
+/// same outputs as the same inputs served one at a time, and both
 /// match the reference transform.
 #[test]
-fn submit_batch_bitwise_identical_to_sequential_submits() {
+fn request_all_bitwise_identical_to_sequential_requests() {
     let seeds: Vec<u64> = (0..8).map(|i| 1000 + i).collect();
     let inputs: Vec<_> = seeds.iter().map(|&s| signal(256, s)).collect();
 
     let svc = service(1);
     let sequential: Vec<Vec<(f32, f32)>> = inputs
         .iter()
-        .map(|input| svc.submit(input.clone()).recv().unwrap().unwrap().output)
+        .map(|input| svc.request(FftRequest::new(input.clone())).recv().unwrap().unwrap().output)
         .collect();
     svc.shutdown();
 
     let svc = service(1);
-    let batched = svc.submit_batch(inputs.clone()).unwrap();
+    let batched = svc.request_all(inputs.clone().into_iter().map(FftRequest::new).collect()).unwrap();
     svc.shutdown();
 
     assert_eq!(batched.len(), sequential.len());
@@ -68,7 +68,7 @@ fn plan_cache_hit_rate_exceeds_090_in_steady_state() {
     let rounds = 16u64;
     for round in 0..rounds {
         let inputs: Vec<_> = (0..8).map(|i| signal(1024, round * 8 + i)).collect();
-        let results = svc.submit_batch(inputs).unwrap();
+        let results = svc.request_all(inputs.into_iter().map(FftRequest::new).collect()).unwrap();
         assert_eq!(results.len(), 8);
     }
     let m = svc.metrics();
@@ -99,7 +99,7 @@ fn mixed_size_batch_preserves_order_and_coalesces_by_size() {
         .enumerate()
         .map(|(i, &n)| signal(n, i as u64))
         .collect();
-    let results = svc.submit_batch(inputs).unwrap();
+    let results = svc.request_all(inputs.into_iter().map(FftRequest::new).collect()).unwrap();
     assert_eq!(results.len(), sizes.len());
     for (r, &n) in results.iter().zip(&sizes) {
         assert_eq!(r.output.len(), n);
@@ -122,7 +122,7 @@ fn mixed_size_batch_preserves_order_and_coalesces_by_size() {
 fn batch_runs_on_a_single_core() {
     let svc = service(4);
     let results = svc
-        .submit_batch((0..6).map(|i| signal(512, i)).collect())
+        .request_all((0..6).map(|i| FftRequest::new(signal(512, i))).collect())
         .unwrap();
     let cores: Vec<usize> = results.iter().map(|r| r.core).collect();
     assert!(cores.iter().all(|&c| c == cores[0]), "cores {cores:?}");
@@ -132,13 +132,13 @@ fn batch_runs_on_a_single_core() {
 #[test]
 fn batch_with_bad_size_errors_without_killing_the_service() {
     let svc = service(1);
-    assert!(svc.submit_batch(vec![signal(100, 0); 3]).is_err());
+    assert!(svc.request_all(vec![signal(100, 0); 3].into_iter().map(FftRequest::new).collect()).is_err());
     let m = svc.metrics();
     assert_eq!(m.errors, 3, "per-job error granularity, as the sequential path");
     assert_eq!(m.served, 0);
     assert_eq!((m.batches, m.batched_jobs), (1, 3));
     // the worker survives and keeps serving
-    let ok = svc.submit(signal(256, 1)).recv().unwrap();
+    let ok = svc.request(FftRequest::new(signal(256, 1))).recv().unwrap();
     assert!(ok.is_ok());
     svc.shutdown();
 }
@@ -146,7 +146,7 @@ fn batch_with_bad_size_errors_without_killing_the_service() {
 #[test]
 fn empty_batch_is_a_no_op() {
     let svc = service(1);
-    let results = svc.submit_batch(Vec::new()).unwrap();
+    let results = svc.request_all(Vec::new()).unwrap();
     assert!(results.is_empty());
     let m = svc.metrics();
     assert_eq!((m.served, m.batches), (0, 0));
@@ -165,7 +165,7 @@ fn plan_cache_lru_eviction_through_the_service() {
     })
     .unwrap();
     for n in [256usize, 1024, 4096, 256, 1024, 4096] {
-        let results = svc.submit_batch(vec![signal(n, 0)]).unwrap();
+        let results = svc.request_all(vec![FftRequest::new(signal(n, 0))]).unwrap();
         assert_eq!(results[0].output.len(), n);
     }
     let pc = svc.metrics().plan_cache;

@@ -2,7 +2,7 @@
 //! injection, metrics, and sim↔PJRT agreement through the coordinator.
 
 use egpu_fft::arch::Variant;
-use egpu_fft::coordinator::{cross_error, Backend, FftService, ServiceConfig};
+use egpu_fft::coordinator::{cross_error, Backend, FftRequest, FftService, ServiceConfig};
 use egpu_fft::fft::{self, reference};
 
 fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
@@ -30,7 +30,7 @@ fn concurrent_submitters() {
         let svc = std::sync::Arc::clone(&svc);
         joins.push(std::thread::spawn(move || {
             for i in 0..8u64 {
-                let r = svc.submit(signal(256, t * 100 + i)).recv().unwrap().unwrap();
+                let r = svc.request(FftRequest::new(signal(256, t * 100 + i))).recv().unwrap().unwrap();
                 assert_eq!(r.output.len(), 256);
             }
         }));
@@ -51,7 +51,7 @@ fn every_variant_serves() {
             ..Default::default()
         })
         .unwrap();
-        let r = svc.submit(signal(1024, 5)).recv().unwrap().unwrap();
+        let r = svc.request(FftRequest::new(signal(1024, 5))).recv().unwrap().unwrap();
         let err = cross_error(
             &r.output,
             &reference::fft(&reference::test_signal(1024, 5))
@@ -83,7 +83,7 @@ fn failure_injection_mixed_stream() {
         } else {
             expect_err += 1;
         }
-        pending.push(svc.submit(signal(n, i)));
+        pending.push(svc.request(FftRequest::new(signal(n, i))));
     }
     let (mut ok, mut err) = (0, 0);
     for p in pending {
@@ -120,7 +120,7 @@ fn metrics_accumulate_virtual_time_and_efficiency() {
 #[test]
 fn shutdown_drains_cleanly() {
     let svc = FftService::start(ServiceConfig { cores: 3, ..Default::default() }).unwrap();
-    let handles: Vec<_> = (0..12).map(|i| svc.submit(signal(256, i))).collect();
+    let handles: Vec<_> = (0..12).map(|i| svc.request(FftRequest::new(signal(256, i)))).collect();
     // results must all arrive even if we shut down right after
     let results: Vec<_> = handles.into_iter().map(|h| h.recv().unwrap()).collect();
     svc.shutdown();
@@ -146,8 +146,8 @@ fn pjrt_and_sim_agree_through_the_service() {
     .unwrap();
     for n in [256usize, 1024, 4096] {
         let input = signal(n, 1234);
-        let a = sim.submit(input.clone()).recv().unwrap().unwrap();
-        let b = pjrt.submit(input).recv().unwrap().unwrap();
+        let a = sim.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+        let b = pjrt.request(FftRequest::new(input)).recv().unwrap().unwrap();
         let err = cross_error(&a.output, &b.output);
         assert!(err < fft::F32_TOL, "n={n}: {err}");
     }

@@ -1,0 +1,282 @@
+//! Large-N multi-pass integration tests: transforms past the 4096-point
+//! single-pass ceiling served through the unified `FftRequest` API.
+//!
+//! The acceptance properties:
+//!
+//! (a) 2^13–2^16-point requests through the pool and 2^20 through the
+//!     sharded service match the f64 four-step oracle
+//!     (`multipass::four_step_reference`) within f32 tolerance, and the
+//!     per-stage job counters account for every sub-job;
+//! (b) scheduling never changes numerics: the reserved (staged-batch)
+//!     path, the spilled (one-sub-job-at-a-time) path and the sharded
+//!     pool produce bitwise-identical outputs for the same input;
+//! (c) staged jobs never deadlock: concurrent large requests racing a
+//!     flood of single-pass traffic on a one-core pool all complete,
+//!     whether they won a reservation or spilled;
+//! (d) the degrade ladder truncates the whole signal *before*
+//!     decomposition — a Quarter-level large request through the
+//!     traffic server is the four-step transform of the truncated
+//!     input, not a stitch of per-pass truncations;
+//! (e) admission accounts a large request at its true multi-pass cost:
+//!     one 2^16-point admission saturates its class queue for
+//!     subsequent traffic, yet is always admissible on an empty queue.
+
+use std::sync::Arc;
+
+use egpu_fft::coordinator::{
+    AdmissionPolicy, Backend, DegradeLevel, FftRequest, FftService, ServerConfig, ServiceConfig,
+    ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+};
+use egpu_fft::fft::{self, multipass, reference, MultipassPlan};
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+/// The f64 four-step oracle for `points` at the default 4096 ceiling.
+fn oracle(points: usize, seed: u64) -> Vec<fft::Cpx> {
+    let plan = MultipassPlan::new(points, fft::MAX_SINGLE_PASS_POINTS).unwrap();
+    multipass::four_step_reference(&reference::test_signal(points, seed), &plan)
+}
+
+fn rms_vs(output: &[(f32, f32)], want: &[fft::Cpx]) -> f64 {
+    let got: Vec<fft::Cpx> =
+        output.iter().map(|&(re, im)| fft::Cpx::new(re as f64, im as f64)).collect();
+    reference::rms_rel_error(&got, want)
+}
+
+/// (a) Pool path, 2^13 and 2^16: outputs match the four-step oracle and
+/// the per-stage counters account exactly (2^13 = 64x128 -> 64 row jobs
+/// + 128 column jobs; 2^16 = 256x256 -> 256 + 256).
+#[test]
+fn pool_serves_large_sizes_matching_the_four_step_oracle() {
+    let svc = FftService::start(ServiceConfig {
+        cores: 2,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap();
+    for (points, seed) in [(1usize << 13, 21u64), (1 << 16, 22)] {
+        let r = svc.request(FftRequest::new(signal(points, seed))).recv().unwrap().unwrap();
+        assert_eq!(r.output.len(), points);
+        let err = rms_vs(&r.output, &oracle(points, seed));
+        assert!(err < 5.0 * fft::F32_TOL, "fft{points}: rms {err:e}");
+    }
+    let mp = svc.metrics().multipass;
+    assert_eq!(mp.requests, 2);
+    assert_eq!(mp.completed, 2);
+    assert_eq!(mp.row_jobs, 64 + 256);
+    assert_eq!(mp.col_jobs, 128 + 256);
+    assert_eq!(mp.preempted, 0);
+    svc.shutdown();
+}
+
+/// (a) The headline size: a 2^20-point transform (1024x1024 at the 4096
+/// ceiling) through a sharded pool, each stage chunked across shards.
+#[test]
+fn two_to_the_twenty_through_the_sharded_pool_matches_the_oracle() {
+    let points = 1usize << 20;
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 4,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    let r = svc.request(FftRequest::new(signal(points, 5))).recv().unwrap().unwrap();
+    assert_eq!(r.output.len(), points);
+    let err = rms_vs(&r.output, &oracle(points, 5));
+    assert!(err < 10.0 * fft::F32_TOL, "fft2^20: rms {err:e}");
+    let m = svc.metrics();
+    assert_eq!(m.multipass.requests, 1);
+    assert_eq!(m.multipass.completed, 1);
+    assert_eq!(m.multipass.row_jobs, 1024);
+    assert_eq!(m.multipass.col_jobs, 1024);
+    let serving = m.shards.iter().filter(|s| s.handled > 0).count();
+    assert!(serving >= 2, "stage batches chunk across the pool: {:?}", m.shards);
+    svc.shutdown();
+}
+
+/// (b) Reserved vs spilled vs sharded: identical inputs produce
+/// bitwise-identical outputs on every serving path.
+#[test]
+fn reserved_spilled_and_sharded_paths_are_bitwise_identical() {
+    let points = 1usize << 13;
+    let input = signal(points, 33);
+
+    let reserved = FftService::start(ServiceConfig {
+        cores: 1,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap();
+    let a = reserved.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+    let mp = reserved.metrics().multipass;
+    assert_eq!((mp.reserved, mp.spilled), (1, 0), "default gate reserves");
+    reserved.shutdown();
+
+    // a zero-permit gate forces the spill path: sub-jobs one at a time
+    let spilled = FftService::start(ServiceConfig {
+        cores: 1,
+        backend: Backend::Simulator,
+        max_inflight_multipass: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let b = spilled.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+    let mp = spilled.metrics().multipass;
+    assert_eq!((mp.reserved, mp.spilled), (0, 1), "zero permits always spill");
+    spilled.shutdown();
+
+    let sharded = ShardedFftService::start(ShardPoolConfig {
+        shards: 2,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    let c = sharded.request(FftRequest::new(input)).recv().unwrap().unwrap();
+    sharded.shutdown();
+
+    assert_eq!(bits(&a.output), bits(&b.output), "reserve vs spill diverged");
+    assert_eq!(bits(&a.output), bits(&c.output), "pool vs sharded diverged");
+    assert!(rms_vs(&a.output, &oracle(points, 33)) < 5.0 * fft::F32_TOL);
+}
+
+/// (c) No deadlock under contention: three concurrent large requests
+/// (one reservation permit, so at least the gate arbitrates) race 32
+/// single-pass jobs on a one-core pool; everything completes and the
+/// large outputs are bitwise identical regardless of which path served
+/// them.
+#[test]
+fn concurrent_large_requests_and_flood_complete_without_deadlock() {
+    let svc = Arc::new(
+        FftService::start(ServiceConfig {
+            cores: 1,
+            backend: Backend::Simulator,
+            max_inflight_multipass: 1,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let input = signal(1 << 13, 44);
+    let mut large = Vec::new();
+    for _ in 0..3 {
+        let svc = Arc::clone(&svc);
+        let input = input.clone();
+        large.push(std::thread::spawn(move || {
+            svc.request(FftRequest::new(input)).recv().unwrap().unwrap().output
+        }));
+    }
+    let flood: Vec<_> =
+        (0..32).map(|i| svc.request(FftRequest::new(signal(256, i)))).collect();
+    for rx in flood {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let outputs: Vec<_> = large.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(bits(&outputs[0]), bits(&outputs[1]));
+    assert_eq!(bits(&outputs[0]), bits(&outputs[2]));
+    let mp = svc.metrics().multipass;
+    assert_eq!(mp.requests, 3);
+    assert_eq!(mp.completed, 3);
+    assert_eq!(mp.reserved + mp.spilled, 3, "every request took exactly one path");
+    svc.shutdown();
+}
+
+/// (d) Degrade-ladder interaction through the traffic server: capacity
+/// 1 pins every admission at Quarter, so a 2^15-point request serves
+/// 8192 points — the four-step transform of the *truncated* signal
+/// (truncate-then-decompose, not per-pass truncation).
+#[test]
+fn quarter_level_large_request_truncates_before_decomposition() {
+    let inner = ServiceHandle::Pool(
+        FftService::start(ServiceConfig {
+            cores: 1,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            queue_capacity: 1,
+            policy: AdmissionPolicy::Degrade,
+            dispatchers: 1,
+            min_degraded_points: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let points = 1usize << 15;
+    let served = server
+        .request(FftRequest::new(signal(points, 6)))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    assert_eq!(served.level, DegradeLevel::Quarter);
+    assert_eq!(served.result.output.len(), points >> 2);
+    let truncated: Vec<_> = reference::test_signal(points, 6)[..points >> 2].to_vec();
+    let plan = MultipassPlan::new(points >> 2, fft::MAX_SINGLE_PASS_POINTS).unwrap();
+    let want = multipass::four_step_reference(&truncated, &plan);
+    let err = rms_vs(&served.result.output, &want);
+    assert!(err < 5.0 * fft::F32_TOL, "rms {err:e}");
+    let snap = server.metrics();
+    assert_eq!(snap.multipass.requests, 1);
+    assert_eq!(snap.multipass.row_jobs, 64, "8192 = 64x128 after truncation");
+    assert_eq!(snap.multipass.col_jobs, 128);
+    server.shutdown();
+}
+
+/// (e) Admission cost accounting: a 2^16-point request weighs 512
+/// single-pass job units, so one admission saturates an 8-slot class
+/// queue — the next request sheds with the class's own capacity — yet
+/// the large request itself was admitted on an empty queue.
+#[test]
+fn large_request_saturates_its_class_queue_then_drains() {
+    let inner = ServiceHandle::Pool(
+        FftService::start(ServiceConfig {
+            cores: 1,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let server = TrafficServer::start(
+        inner,
+        ServerConfig {
+            queue_capacity: 8,
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // occupy the single dispatcher so the queue holds what follows
+    let slow = server.request(FftRequest::new(signal(4096, 0))).unwrap();
+    // 512 job units into an 8-slot queue: admitted (depth was 0) ...
+    let large = server
+        .request(FftRequest::new(signal(1 << 16, 1)))
+        .expect("a large request on an empty class queue is always admissible");
+    // ... but the class is now saturated for everyone behind it
+    match server.request(FftRequest::new(signal(256, 2))) {
+        Err(ServiceError::QueueFull { capacity }) => assert_eq!(capacity, 8),
+        other => panic!("want QueueFull behind a 512-unit backlog, got {other:?}"),
+    }
+    assert!(slow.recv().unwrap().is_ok());
+    let served = large.recv().unwrap().unwrap();
+    assert_eq!(served.result.output.len(), 1 << 16);
+    // the dispatcher released the backlog at pop: the class admits again
+    let after = server.request(FftRequest::new(signal(256, 3)));
+    assert!(after.is_ok(), "backlog must drain with the queue: {after:?}");
+    assert!(after.unwrap().recv().unwrap().is_ok());
+    let sv = server.metrics().server;
+    assert_eq!(sv.shed, 1);
+    assert!(sv.accounted());
+    server.shutdown();
+}

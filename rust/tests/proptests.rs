@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use egpu_fft::arch::{SmConfig, Variant};
 use egpu_fft::coordinator::{DegradeLadder, DegradeLevel, QosClass, QosScheduler};
-use egpu_fft::coordinator::{FftService, ServiceConfig};
+use egpu_fft::coordinator::{FftRequest, FftService, ServiceConfig};
 use egpu_fft::fft::sched::schedule;
 use egpu_fft::fft::twiddle::{classify, twiddle, TwiddleKind};
 use egpu_fft::fft::FftPlan;
@@ -450,8 +450,13 @@ fn qos_degraded_dispatch_is_bitwise_truncated_reference() {
             .map(|c| c.to_f32_pair())
             .collect();
         let keep = points >> level.shift();
-        let degraded = svc.submit_degraded(input.clone(), level).recv().unwrap().unwrap();
-        let direct = svc.submit(input[..keep].to_vec()).recv().unwrap().unwrap();
+        let degraded = svc
+            .request(FftRequest::new(input.clone()).with_level(level))
+            .recv()
+            .unwrap()
+            .unwrap();
+        let direct =
+            svc.request(FftRequest::new(input[..keep].to_vec())).recv().unwrap().unwrap();
         assert_eq!(degraded.output.len(), keep);
         assert_eq!(
             bits(&degraded.output),

@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, DegradeLevel,
-    FftService, LoadgenConfig, QosClass, RequestOpts, ServerConfig, ServiceConfig, ServiceError,
+    FftRequest, FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig, ServiceError,
     ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
@@ -69,13 +69,13 @@ fn three_class_overload_accounts_per_class() {
         },
     );
     // occupy the single dispatcher so queues actually fill
-    let slow = server.submit(signal(4096, 0), RequestOpts::class(0)).unwrap();
+    let slow = server.request(FftRequest::new(signal(4096, 0)).with_class(0)).unwrap();
     let input = signal(1024, 3);
     let mut handles = Vec::new();
     let mut shed_by_class = [0u64; 3];
     for round in 0..24 {
         let class = round % 3;
-        match server.submit(input.clone(), RequestOpts::class(class)) {
+        match server.request(FftRequest::new(input.clone()).with_class(class)) {
             Ok(rx) => handles.push(rx),
             Err(ServiceError::QueueFull { capacity }) => {
                 shed_by_class[class] += 1;
@@ -227,7 +227,7 @@ fn two_class_config_outputs_bitwise_match_direct_service() {
     for (i, input) in inputs.iter().enumerate() {
         let class = i % 2; // alternate high/low
         let served = server
-            .submit(input.clone(), RequestOpts::class(class))
+            .request(FftRequest::new(input.clone()).with_class(class))
             .unwrap()
             .recv()
             .unwrap()
@@ -265,17 +265,17 @@ fn two_class_aging_still_promotes_low_under_backlog() {
     let service_us = {
         let mut last = 0.0;
         for seed in 0..2 {
-            let rx = server.submit(signal(1024, seed), RequestOpts::class(0)).unwrap();
+            let rx = server.request(FftRequest::new(signal(1024, seed)).with_class(0)).unwrap();
             last = rx.recv().unwrap().unwrap().service_us;
         }
         last
     };
     let n_high = ((400_000.0 / service_us).ceil() as usize).clamp(50, 2000);
     let highs: Vec<_> = (0..n_high)
-        .map(|_| server.submit(input.clone(), RequestOpts::class(0)).unwrap())
+        .map(|_| server.request(FftRequest::new(input.clone()).with_class(0)).unwrap())
         .collect();
     let low = server
-        .submit(signal(1024, 2), RequestOpts::class(1))
+        .request(FftRequest::new(signal(1024, 2)).with_class(1))
         .unwrap()
         .recv()
         .unwrap()
@@ -313,12 +313,12 @@ fn explicit_and_derived_class_capacities_coexist() {
     );
     assert_eq!(server.class_capacities(), &[2, 64]);
     // hold the dispatcher down so queues fill
-    let slow = server.submit(signal(4096, 0), RequestOpts::class(1)).unwrap();
+    let slow = server.request(FftRequest::new(signal(4096, 0)).with_class(1)).unwrap();
     let input = signal(256, 1);
     let mut tiny_shed = 0;
     let mut tiny_handles = Vec::new();
     for _ in 0..6 {
-        match server.submit(input.clone(), RequestOpts::class(0)) {
+        match server.request(FftRequest::new(input.clone()).with_class(0)) {
             Ok(rx) => tiny_handles.push(rx),
             Err(ServiceError::QueueFull { capacity }) => {
                 assert_eq!(capacity, 2);
@@ -332,7 +332,7 @@ fn explicit_and_derived_class_capacities_coexist() {
     let roomy_handles: Vec<_> = (0..16)
         .map(|_| {
             server
-                .submit(input.clone(), RequestOpts::class(1))
+                .request(FftRequest::new(input.clone()).with_class(1))
                 .expect("roomy class must admit while tiny sheds")
         })
         .collect();

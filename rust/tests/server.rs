@@ -10,8 +10,8 @@
 use std::time::Duration;
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, Backend, DegradeLevel, FftService, LoadgenConfig,
-    RequestOpts, ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig,
+    loadgen, AdmissionPolicy, ArrivalPattern, Backend, DegradeLevel, FftRequest, FftService,
+    LoadgenConfig, ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig,
     ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
@@ -32,14 +32,14 @@ fn pool_server(cores: usize, cfg: ServerConfig) -> TrafficServer {
     TrafficServer::start(inner, cfg).unwrap()
 }
 
-/// Class 0 of the default two-class configuration ("high").
-fn high() -> RequestOpts {
-    RequestOpts::class(0)
+/// A request in class 0 of the default two-class configuration ("high").
+fn high(input: Vec<(f32, f32)>) -> FftRequest {
+    FftRequest::new(input).with_class(0)
 }
 
-/// Class 1 of the default two-class configuration ("low", weight 0).
-fn low() -> RequestOpts {
-    RequestOpts::class(1)
+/// A request in class 1 of the default two-class configuration ("low").
+fn low(input: Vec<(f32, f32)>) -> FftRequest {
+    FftRequest::new(input).with_class(1)
 }
 
 /// Warm the server on `points` and measure one steady-state service
@@ -47,7 +47,7 @@ fn low() -> RequestOpts {
 fn calibrate_service_us(server: &TrafficServer, points: usize) -> f64 {
     let mut last = 0.0;
     for seed in 0..2 {
-        let rx = server.submit(signal(points, seed), high()).unwrap();
+        let rx = server.request(high(signal(points, seed))).unwrap();
         last = rx.recv().unwrap().unwrap().service_us;
     }
     last
@@ -68,7 +68,7 @@ fn shed_policy_returns_typed_queue_full_and_accounts_everything() {
     let mut admitted = Vec::new();
     let mut shed = 0u64;
     for _ in 0..40 {
-        match server.submit(input.clone(), high()) {
+        match server.request(high(input.clone())) {
             Ok(rx) => admitted.push(rx),
             Err(ServiceError::QueueFull { capacity }) => {
                 assert_eq!(capacity, 2);
@@ -105,7 +105,7 @@ fn block_policy_serves_every_request_without_shedding() {
         },
     );
     let handles: Vec<_> = (0..12)
-        .map(|i| server.submit(signal(256, i), high()).expect("block policy never sheds"))
+        .map(|i| server.request(high(signal(256, i))).expect("block policy never sheds"))
         .collect();
     for rx in handles {
         assert!(rx.recv().unwrap().is_ok());
@@ -130,10 +130,13 @@ fn queued_deadline_expiry_surfaces_typed_error_without_serving() {
     );
     // occupy the single dispatcher with a slow job, then queue two
     // requests whose deadline is long past by the time it finishes
-    let slow = server.submit(signal(4096, 0), high()).unwrap();
-    let opts = high().with_deadline(Duration::from_micros(1));
-    let doomed: Vec<_> =
-        (0..2).map(|i| server.submit(signal(256, i), opts).unwrap()).collect();
+    let slow = server.request(high(signal(4096, 0))).unwrap();
+    let doomed: Vec<_> = (0..2)
+        .map(|i| {
+            let req = high(signal(256, i)).with_deadline(Duration::from_micros(1));
+            server.request(req).unwrap()
+        })
+        .collect();
     assert!(slow.recv().unwrap().is_ok());
     for rx in doomed {
         match rx.recv().unwrap() {
@@ -163,8 +166,9 @@ fn late_service_is_delivered_but_flagged_and_counted() {
     // a deadline at a third of the measured service time expires while
     // the job is *in service*: it was dispatchable, but finishes late
     let service_us = calibrate_service_us(&server, 4096);
-    let opts = high().with_deadline(Duration::from_secs_f64(service_us / 3.0 * 1e-6));
-    let served = server.submit(signal(4096, 9), opts).unwrap().recv().unwrap().unwrap();
+    let req =
+        high(signal(4096, 9)).with_deadline(Duration::from_secs_f64(service_us / 3.0 * 1e-6));
+    let served = server.request(req).unwrap().recv().unwrap().unwrap();
     assert!(served.deadline_missed, "served past its deadline must be flagged");
     assert_eq!(served.result.output.len(), 4096);
     let sv = server.metrics().server;
@@ -193,11 +197,11 @@ fn aged_low_priority_is_served_while_high_backlog_remains() {
     let n_high = ((400_000.0 / service_us).ceil() as usize).clamp(50, 2000);
     let input = signal(1024, 1);
     let highs: Vec<_> = (0..n_high)
-        .map(|_| server.submit(input.clone(), high()).expect("capacity is ample"))
+        .map(|_| server.request(high(input.clone())).expect("capacity is ample"))
         .collect();
     let t0 = std::time::Instant::now();
     let served_low = server
-        .submit(signal(1024, 2), low())
+        .request(low(signal(1024, 2)))
         .unwrap()
         .recv()
         .unwrap()
@@ -235,12 +239,12 @@ fn degrade_policy_walks_the_ladder_under_pressure_and_sheds_at_the_limit() {
         },
     );
     // occupy the dispatcher so the queue actually fills
-    let slow = server.submit(signal(4096, 0), high()).unwrap();
+    let slow = server.request(high(signal(4096, 0))).unwrap();
     let input = signal(1024, 3);
     let mut handles = Vec::new();
     let mut shed = 0u64;
     for _ in 0..12 {
-        match server.submit(input.clone(), high()) {
+        match server.request(high(input.clone())) {
             Ok(rx) => handles.push(rx),
             Err(ServiceError::QueueFull { .. }) => shed += 1,
             Err(e) => panic!("unexpected error: {e}"),
@@ -286,7 +290,7 @@ fn degraded_output_matches_reference_fft_of_truncated_signal() {
             ..Default::default()
         },
     );
-    let served = server.submit(signal(1024, 7), high()).unwrap().recv().unwrap().unwrap();
+    let served = server.request(high(signal(1024, 7))).unwrap().recv().unwrap().unwrap();
     assert!(served.degraded);
     assert_eq!(served.level, DegradeLevel::Quarter);
     assert_eq!(served.result.output.len(), 256);
@@ -301,7 +305,7 @@ fn degraded_output_matches_reference_fft_of_truncated_signal() {
     assert!(reference::rms_rel_error(&got, &want) < egpu_fft::fft::F32_TOL);
 
     // a 512-point request floor-clamps to Half (512 >> 2 < 256)
-    let served = server.submit(signal(512, 8), high()).unwrap().recv().unwrap().unwrap();
+    let served = server.request(high(signal(512, 8))).unwrap().recv().unwrap().unwrap();
     assert_eq!(served.level, DegradeLevel::Half, "ladder floor-clamps at min_points");
     assert_eq!(served.result.output.len(), 256);
     server.shutdown();
@@ -319,7 +323,7 @@ fn shutdown_drains_every_admitted_request() {
         },
     );
     let handles: Vec<_> =
-        (0..6).map(|i| server.submit(signal(256, i), high()).unwrap()).collect();
+        (0..6).map(|i| server.request(high(signal(256, i))).unwrap()).collect();
     server.shutdown();
     for rx in handles {
         let served = rx.recv().expect("admitted request answered during drain");
@@ -330,7 +334,7 @@ fn shutdown_drains_every_admitted_request() {
 #[test]
 fn drop_without_shutdown_still_drains_admitted_requests() {
     let server = pool_server(1, ServerConfig::default());
-    let rx = server.submit(signal(256, 0), high()).unwrap();
+    let rx = server.request(high(signal(256, 0))).unwrap();
     drop(server); // Drop closes admission and joins dispatchers
     assert!(rx.recv().expect("drained on drop").is_ok());
 }

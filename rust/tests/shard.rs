@@ -3,7 +3,7 @@
 //! single-shard results, and plan-cache behaviour with N > 1 shards.
 
 use egpu_fft::coordinator::{
-    Backend, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
+    Backend, FftRequest, FftService, ServiceConfig, ShardPoolConfig, ShardedFftService,
 };
 use egpu_fft::fft::{self, reference};
 
@@ -35,7 +35,7 @@ fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
 fn same_size_affinity_routes_to_one_home_shard() {
     let svc = pool(4, 64);
     for seed in 0..6u64 {
-        let r = svc.submit(signal(1024, seed)).recv().unwrap().unwrap();
+        let r = svc.request(FftRequest::new(signal(1024, seed))).recv().unwrap().unwrap();
         assert_eq!(r.output.len(), 1024);
     }
     let m = svc.metrics();
@@ -55,8 +55,8 @@ fn same_size_affinity_routes_to_one_home_shard() {
 fn distinct_sizes_get_distinct_homes() {
     let svc = pool(4, 64);
     for seed in 0..3u64 {
-        svc.submit(signal(256, seed)).recv().unwrap().unwrap();
-        svc.submit(signal(1024, seed)).recv().unwrap().unwrap();
+        svc.request(FftRequest::new(signal(256, seed))).recv().unwrap().unwrap();
+        svc.request(FftRequest::new(signal(1024, seed))).recv().unwrap().unwrap();
     }
     let m = svc.metrics();
     assert_eq!(m.shards[0].handled, 3, "fft256 home");
@@ -70,7 +70,7 @@ fn distinct_sizes_get_distinct_homes() {
 #[test]
 fn work_stealing_spreads_skewed_load() {
     let svc = pool(4, 0);
-    let handles: Vec<_> = (0..32).map(|i| svc.submit(signal(1024, i))).collect();
+    let handles: Vec<_> = (0..32).map(|i| svc.request(FftRequest::new(signal(1024, i)))).collect();
     for h in handles {
         let r = h.recv().unwrap().unwrap();
         assert_eq!(r.output.len(), 1024);
@@ -130,10 +130,10 @@ fn sharded_run_batch_bitwise_identical_to_single_shard() {
     flat.shutdown();
 }
 
-/// `submit_batch` chunks a homogeneous batch across shards and still
+/// `request_all` chunks a homogeneous batch across shards and still
 /// returns bitwise-identical results in submission order.
 #[test]
-fn sharded_submit_batch_chunks_bitwise_identical_and_ordered() {
+fn sharded_request_all_chunks_bitwise_identical_and_ordered() {
     let inputs: Vec<_> = (0..32).map(|i| signal(512, 7000 + i as u64)).collect();
 
     let flat = FftService::start(ServiceConfig {
@@ -143,7 +143,7 @@ fn sharded_submit_batch_chunks_bitwise_identical_and_ordered() {
     })
     .unwrap();
     let base: Vec<Vec<(u32, u32)>> = flat
-        .submit_batch(inputs.clone())
+        .request_all(inputs.clone().into_iter().map(FftRequest::new).collect())
         .unwrap()
         .iter()
         .map(|r| bits(&r.output))
@@ -157,7 +157,7 @@ fn sharded_submit_batch_chunks_bitwise_identical_and_ordered() {
         service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
     })
     .unwrap();
-    let got = svc.submit_batch(inputs).unwrap();
+    let got = svc.request_all(inputs.into_iter().map(FftRequest::new).collect()).unwrap();
     assert_eq!(got.len(), 32);
     for w in got.windows(2) {
         assert!(w[0].id < w[1].id, "ids follow submission order");
@@ -210,7 +210,7 @@ fn sharded_mixed_size_batch_correct_and_ordered() {
         .enumerate()
         .map(|(i, &n)| signal(n, i as u64))
         .collect();
-    let results = svc.submit_batch(inputs).unwrap();
+    let results = svc.request_all(inputs.into_iter().map(FftRequest::new).collect()).unwrap();
     assert_eq!(results.len(), sizes.len());
     for (idx, (r, &n)) in results.iter().zip(&sizes).enumerate() {
         assert_eq!(r.output.len(), n);
@@ -229,11 +229,11 @@ fn sharded_mixed_size_batch_correct_and_ordered() {
 #[test]
 fn sharded_batch_with_bad_size_errors_cleanly() {
     let svc = pool(2, 2);
-    assert!(svc.submit_batch(vec![signal(100, 0); 3]).is_err());
+    assert!(svc.request_all(vec![signal(100, 0); 3].into_iter().map(FftRequest::new).collect()).is_err());
     let m = svc.metrics();
     assert_eq!(m.errors, 3);
     assert_eq!(m.served, 0);
-    let ok = svc.submit(signal(256, 1)).recv().unwrap();
+    let ok = svc.request(FftRequest::new(signal(256, 1))).recv().unwrap();
     assert!(ok.is_ok());
     svc.shutdown();
 }
