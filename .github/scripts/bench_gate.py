@@ -8,9 +8,12 @@ Reads the quick-mode JSON rows written by `benches/shard.rs`
 `achieved_rps` / `share_err` rows — the WFQ share-conformance metric)
 `benches/backend.rs` (per-config `routed_rps` /
 `validate_overhead` rows — multi-backend routing throughput and the
-cost of validation sampling) and `benches/largefft.rs` (per-size,
+cost of validation sampling), `benches/largefft.rs` (per-size,
 per-strategy `mp_rps` rows — multi-pass large-N FFT requests per
-second past the single-pass ceiling),
+second past the single-pass ceiling) and `benches/hotpath.rs`
+(per-config `ns_per_job` rows — dispatch overhead per job on the
+zero-copy arena path, measured with a no-op backend so FFT compute is
+excluded),
 reduces each metric to an aggregate, and fails when an aggregate
 crosses the committed `BENCH_baseline.json` limit by more than the
 threshold.
@@ -44,6 +47,7 @@ Usage:
                   [--qos BENCH_qos.json] \
                   [--backend BENCH_backend.json] \
                   [--largefft BENCH_largefft.json] \
+                  [--hotpath BENCH_hotpath.json] \
                   [--emit-ratchet suggested_baseline.json]
 """
 
@@ -65,6 +69,7 @@ CHECKS = [
     ("backend", "agg_routed_rps", "routed_rps", "geomean", "floor"),
     ("backend", "validate_overhead_max", "validate_overhead", "max", "ceiling"),
     ("largefft", "agg_mp_rps", "mp_rps", "geomean", "floor"),
+    ("hotpath", "ns_per_job_max", "ns_per_job", "max", "ceiling"),
 ]
 
 # Ratchet tuning: floors rise toward 80% of observed; ceilings tighten
@@ -84,6 +89,10 @@ RATCHET_CEILING_MIN = {
     # so some throughput loss is structural; a lucky zero-overhead run
     # must not gate future runs onto it.
     "validate_overhead_max": 0.1,
+    # Dispatch overhead in ns/job: even an ideal runner pays channel
+    # wakeups and a payload memcpy, so the ceiling never ratchets below
+    # 20µs — a suspiciously fast run must not weld the gate onto it.
+    "ns_per_job_max": 20000.0,
 }
 
 STALE_FACTOR = 2.0
@@ -257,6 +266,7 @@ def main(argv=None):
     ap.add_argument("--qos")
     ap.add_argument("--backend")
     ap.add_argument("--largefft")
+    ap.add_argument("--hotpath")
     ap.add_argument(
         "--emit-ratchet",
         metavar="PATH",
@@ -273,6 +283,7 @@ def main(argv=None):
         "qos": args.qos,
         "backend": args.backend,
         "largefft": args.largefft,
+        "hotpath": args.hotpath,
     }
     results, threshold = run_gate(baseline, files)
 

@@ -17,9 +17,9 @@
 use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    FftRequest, FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig,
-    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController,
+    AutoscalePolicy, Backend, FftRequest, FftService, LoadgenConfig, QosClass, ServerConfig,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -137,7 +137,7 @@ fn main() -> anyhow::Result<()> {
     let server = TrafficServer::start(
         inner,
         ServerConfig {
-            queue_capacity: 128,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(128)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 4,
             aging: Duration::from_millis(10),
@@ -205,7 +205,7 @@ fn main() -> anyhow::Result<()> {
     let server = TrafficServer::start(
         inner,
         ServerConfig {
-            queue_capacity: 128,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(128)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 8,
             ..Default::default()

@@ -27,7 +27,9 @@ def _load():
 bench_gate = _load()
 
 
-def baseline(threshold=0.15, autoscale=True, qos=True, backend=True, largefft=True):
+def baseline(
+    threshold=0.15, autoscale=True, qos=True, backend=True, largefft=True, hotpath=True
+):
     base = {
         "threshold": threshold,
         "shard": {"agg_jobs_per_s": 100.0},
@@ -51,6 +53,8 @@ def baseline(threshold=0.15, autoscale=True, qos=True, backend=True, largefft=Tr
         }
     if largefft:
         base["largefft"] = {"agg_mp_rps": 1.0}
+    if hotpath:
+        base["hotpath"] = {"ns_per_job_max": 100000.0}
     return base
 
 
@@ -80,6 +84,15 @@ def largefft_rows(mp_rps=2.0):
     ]
 
 
+def hotpath_rows(ns_per_job=50000.0):
+    """Per-config rows, the shape benches/hotpath.rs emits (one row per
+    no-op service configuration)."""
+    return [
+        {"config": "pool2_noop", "ns_per_job": ns_per_job / 2, "lease_hits": 2000},
+        {"config": "shard2_noop", "ns_per_job": ns_per_job, "lease_hits": 2000},
+    ]
+
+
 def backend_rows(routed_rps=200.0, overhead=0.1):
     """Per-config rows, the shape benches/backend.rs emits (pinned and
     routed throughput rows plus validation-sampling rows)."""
@@ -102,6 +115,7 @@ def files_for(
     routed_rps=200.0,
     overhead=0.1,
     mp_rps=2.0,
+    ns_per_job=50000.0,
 ):
     return {
         "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
@@ -116,6 +130,7 @@ def files_for(
             tmp_path, "backend.json", backend_rows(routed_rps, overhead)
         ),
         "largefft": write_rows(tmp_path, "largefft.json", largefft_rows(mp_rps)),
+        "hotpath": write_rows(tmp_path, "hotpath.json", hotpath_rows(ns_per_job)),
     }
 
 
@@ -219,6 +234,27 @@ class TestThreshold:
         assert not by_key(results, "agg_mp_rps")["ok"]
         assert by_key(results, "agg_jobs_per_s")["ok"], "other floors unaffected"
 
+    def test_hotpath_rows_aggregate_and_pass(self, tmp_path):
+        # max over the per-config ns_per_job rows, ceiling direction
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path))
+        r = by_key(results, "ns_per_job_max")
+        assert r["ok"]
+        assert r["current"] == pytest.approx(50000.0), "max across config rows"
+        assert r["rows"] == 2
+
+    def test_hotpath_dispatch_overhead_ceiling_trips(self, tmp_path):
+        # 120µs/job breaches the 100µs * 1.15 committed ceiling
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, ns_per_job=120000.0)
+        )
+        assert not by_key(results, "ns_per_job_max")["ok"]
+        assert by_key(results, "agg_jobs_per_s")["ok"], "other checks unaffected"
+        # 110µs <= 115µs stays inside
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, ns_per_job=110000.0)
+        )
+        assert by_key(results, "ns_per_job_max")["ok"]
+
     def test_backend_validate_overhead_ceiling_trips(self, tmp_path):
         # 0.5 breaches the 0.4 * 1.15 committed ceiling
         results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.5))
@@ -299,6 +335,19 @@ class TestMissingInputs:
         results, _ = bench_gate.run_gate(baseline(largefft=False), files)
         assert all(r["section"] != "largefft" for r in results)
 
+    def test_gated_hotpath_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["hotpath"] = None
+        with pytest.raises(SystemExit, match="no --hotpath file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_ungated_hotpath_section_is_skipped(self, tmp_path):
+        # pre-arena baselines carry no hotpath section
+        files = files_for(tmp_path)
+        files["hotpath"] = None
+        results, _ = bench_gate.run_gate(baseline(hotpath=False), files)
+        assert all(r["section"] != "hotpath" for r in results)
+
 
 class TestRatchet:
     def test_floor_ratchets_up_to_80_percent_of_observed(self, tmp_path):
@@ -361,6 +410,18 @@ class TestRatchet:
         r = by_key(results, "share_err_max")
         assert bench_gate.suggest(r) == pytest.approx(0.125), "1.25x observed"
 
+    def test_hotpath_ceiling_keeps_its_guard_band(self, tmp_path):
+        # a suspiciously fast run must not weld the gate below the
+        # structural dispatch cost (channel wakeups + payload memcpy)
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, ns_per_job=1000.0))
+        r = by_key(results, "ns_per_job_max")
+        assert bench_gate.suggest(r) == pytest.approx(20000.0), "absolute guard minimum"
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, ns_per_job=40000.0)
+        )
+        r = by_key(results, "ns_per_job_max")
+        assert bench_gate.suggest(r) == pytest.approx(50000.0), "1.25x observed"
+
     def test_ceiling_guard_is_stable_across_repeated_ratchets(self, tmp_path):
         # repeated lucky-zero observations must converge to the absolute
         # minimum, not decay geometrically toward zero
@@ -400,6 +461,8 @@ class TestMain:
             files["backend"],
             "--largefft",
             files["largefft"],
+            "--hotpath",
+            files["hotpath"],
             *extra,
         ]
 

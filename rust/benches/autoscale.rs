@@ -24,9 +24,9 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
-    LoadgenConfig, PressureSample, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
-    ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController,
+    AutoscalePolicy, Backend, LoadgenConfig, PressureSample, ServerConfig, ServiceConfig,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -83,7 +83,7 @@ fn run_config(
     let server = TrafficServer::start(
         ServiceHandle::Sharded(svc),
         ServerConfig {
-            queue_capacity: 256,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(256)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: (2 * max_shards).max(4),
             ..Default::default()

@@ -1,0 +1,140 @@
+//! Bench: dispatch overhead per job on the zero-copy hot path,
+//! excluding FFT compute.
+//!
+//! Every configuration runs the service with [`Backend::Noop`], whose
+//! workers skip the simulator entirely and reply with the input slot
+//! unchanged, so the measured ns/job is pure coordination cost: arena
+//! lease + memcpy, enqueue, worker wake, reply channel, slot release.
+//! The run **panics** unless every job's payload came from an arena
+//! lease hit (`lease_hits` delta == jobs, `lease_misses` delta == 0) —
+//! the zero-allocation acceptance assertion for the lease-hit path.
+//!
+//! ```sh
+//! cargo bench --bench hotpath                      # full run
+//! cargo bench --bench hotpath -- --quick           # CI-sized run
+//! cargo bench --bench hotpath -- --json BENCH_hotpath.json
+//! ```
+
+use std::fmt::Write as _;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use anyhow::Result;
+use egpu_fft::coordinator::{
+    Backend, FftRequest, FftResult, FftService, JobArena, ServiceConfig, ShardPoolConfig,
+    ShardedFftService,
+};
+use egpu_fft::fft::reference;
+
+const POINTS: usize = 1024;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+struct Row {
+    config: &'static str,
+    ns_per_job: f64,
+    jobs: usize,
+    lease_hits: u64,
+}
+
+/// Drive `jobs` sequential no-op requests through `request`, timing the
+/// round-trips and auditing the arena counters across the window.
+fn measure(
+    config: &'static str,
+    jobs: usize,
+    proto: &[(f32, f32)],
+    request: impl Fn(FftRequest) -> Receiver<Result<FftResult>>,
+) -> Row {
+    // Warm outside the window: thread wake-up, channel setup — and the
+    // one place the echo contract itself is checked, so the timed loop
+    // below is pure dispatch.
+    for _ in 0..32 {
+        let slot = JobArena::global().lease_copy(proto);
+        let r = request(FftRequest::with_input_slot(slot)).recv().unwrap().unwrap();
+        assert_eq!(&r.output[..], proto, "noop backend must echo the input");
+    }
+    let before = JobArena::global().snapshot();
+    let t0 = Instant::now();
+    for _ in 0..jobs {
+        let slot = JobArena::global().lease_copy(proto);
+        let r = request(FftRequest::with_input_slot(slot)).recv().unwrap().unwrap();
+        debug_assert_eq!(r.output.len(), proto.len());
+    }
+    let elapsed = t0.elapsed();
+    let after = JobArena::global().snapshot();
+    let hits = after.lease_hits - before.lease_hits;
+    let misses = after.lease_misses - before.lease_misses;
+    assert_eq!(
+        hits, jobs as u64,
+        "{config}: every job must lease its payload buffer from the arena (zero-alloc path)"
+    );
+    assert_eq!(misses, 0, "{config}: no job may fall back to a heap allocation");
+    let ns_per_job = elapsed.as_secs_f64() * 1e9 / jobs as f64;
+    println!("  {config}: {ns_per_job:.0} ns/job over {jobs} jobs ({hits} lease hits)");
+    Row { config, ns_per_job, jobs, lease_hits: hits }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let jobs = if quick { 2_000 } else { 20_000 };
+
+    println!(
+        "\n=== hot path: dispatch overhead per job, no-op backend ({POINTS}-point payloads){} ===",
+        if quick { " (quick mode)" } else { "" }
+    );
+    let proto = signal(POINTS, 7);
+    let mut rows: Vec<Row> = Vec::new();
+
+    {
+        let svc = FftService::start(ServiceConfig {
+            cores: 2,
+            backend: Backend::Noop,
+            ..Default::default()
+        })
+        .unwrap();
+        rows.push(measure("pool2_noop", jobs, &proto, |req| svc.request(req)));
+        svc.shutdown();
+    }
+    {
+        let svc = ShardedFftService::start(ShardPoolConfig {
+            shards: 2,
+            steal_threshold: 0,
+            service: ServiceConfig { backend: Backend::Noop, ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        rows.push(measure("shard2_noop", jobs, &proto, |req| svc.request(req)));
+        svc.shutdown();
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"hotpath\", \"config\": \"{}\", \"ns_per_job\": {:.1}, \
+                 \"jobs\": {}, \"lease_hits\": {}, \"quick\": {}}}{}\n",
+                r.config,
+                r.ns_per_job,
+                r.jobs,
+                r.lease_hits,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

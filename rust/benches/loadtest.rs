@@ -17,8 +17,9 @@ use std::fmt::Write as _;
 use std::time::Duration;
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, Backend, LoadReport, LoadgenConfig, ServerConfig,
-    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, ArrivalPattern, Backend, LoadReport,
+    LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService,
+    TrafficServer,
 };
 
 /// Start a frontend whose *backend* is already warm (plan cache built,
@@ -48,7 +49,7 @@ fn server(sizes: &[usize]) -> TrafficServer {
     TrafficServer::start(
         ServiceHandle::Sharded(svc),
         ServerConfig {
-            queue_capacity: 256,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(256)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 4,
             aging: Duration::from_millis(10),

@@ -29,9 +29,9 @@ use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, AutoscaleController, AutoscaleLog, AutoscalePolicy, Backend,
-    DegradeLevel, LoadReport, LoadgenConfig, QosClass, ServerConfig, ServiceConfig,
-    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, AutoscaleController, AutoscaleLog,
+    AutoscalePolicy, Backend, DegradeLevel, LoadReport, LoadgenConfig, QosClass, ServerConfig,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -144,7 +144,7 @@ fn crossover_phase(
     let server = TrafficServer::start(
         ServiceHandle::Sharded(sharded(1)),
         ServerConfig {
-            queue_capacity: 128,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(128)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 8,
             ..Default::default()

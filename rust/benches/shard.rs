@@ -43,6 +43,7 @@ fn service(shards: usize, jobs: usize) -> ShardedFftService {
         // chunk the batch all the way down to one chunk per shard
         min_chunk: (jobs / 8).max(1),
         service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
     })
     .unwrap()
 }

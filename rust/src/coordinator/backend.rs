@@ -57,6 +57,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::buffer::JobSlot;
 use super::metrics::BackendStat;
 use super::qos::DegradeLevel;
 use super::request::{FftCompute, FftRequest};
@@ -388,19 +389,6 @@ impl BackendSet {
             .collect()
     }
 
-    /// Deprecated pre-[`FftRequest`] submit surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use request(FftRequest::new(input).with_level(level))"
-    )]
-    pub fn submit(
-        &self,
-        input: Vec<(f32, f32)>,
-        level: DegradeLevel,
-    ) -> Receiver<Result<FftResult>> {
-        self.request(FftRequest::new(input).with_level(level))
-    }
-
     /// Drive every input through the router with `workers` concurrent
     /// submitters; results come back in submission order and the first
     /// failure, if any, is returned (mirroring
@@ -517,12 +505,13 @@ impl BackendSet {
         *entry = self.cfg.ewma_alpha * us + (1.0 - self.cfg.ewma_alpha) * *entry;
     }
 
-    /// Serve through the simulator, metering the lane.
-    fn serve_sim(&self, input: Vec<(f32, f32)>, level: DegradeLevel) -> Result<FftResult> {
+    /// Serve through the simulator, metering the lane. The slot travels
+    /// to the worker and back unchanged — no payload copy on this path.
+    fn serve_sim(&self, input: JobSlot, level: DegradeLevel) -> Result<FftResult> {
         let points = input.len() >> level.shift();
         self.sim_stats.inflight.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let result = self.sim.request(FftRequest::new(input).with_level(level)).recv();
+        let result = self.sim.request(FftRequest::with_input_slot(input).with_level(level)).recv();
         let us = t0.elapsed().as_secs_f64() * 1e6;
         self.sim_stats.inflight.fetch_sub(1, Ordering::Relaxed);
         let result = result
@@ -557,7 +546,7 @@ impl BackendSet {
     fn serve_alternate(
         &self,
         idx: usize,
-        mut input: Vec<(f32, f32)>,
+        mut input: JobSlot,
         level: DegradeLevel,
     ) -> Result<FftResult> {
         let alt = &self.alternates[idx];
@@ -577,7 +566,7 @@ impl BackendSet {
             Ok(output) => {
                 if self.should_validate() {
                     alt.stats.validate_checks.fetch_add(1, Ordering::Relaxed);
-                    let reference = self.sim_recv(input)?;
+                    let reference = self.sim_recv(input.to_vec())?;
                     if cross_error(&reference.output, &output) > fft::F32_TOL {
                         alt.stats.validate_mismatches.fetch_add(1, Ordering::Relaxed);
                         alt.stats.quarantined.store(true, Ordering::Relaxed);
@@ -591,7 +580,7 @@ impl BackendSet {
                 self.update_cost(&alt.stats, points, us);
                 Ok(FftResult {
                     id: self.next_id.fetch_add(1, Ordering::Relaxed),
-                    output,
+                    output: JobSlot::from(output),
                     profile: None,
                     core: usize::MAX,
                     wall_us: us,

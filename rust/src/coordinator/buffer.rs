@@ -1,0 +1,525 @@
+//! Zero-copy job buffers: a slab/arena of fixed-capacity FFT payload
+//! buffers ([`JobArena`] leasing [`JobSlot`]s) plus the bounded SPSC
+//! [`JobRing`] the sharded dispatcher uses instead of per-shard MPSC
+//! channels.
+//!
+//! The memory discipline is *lease → compute-in-place → reply →
+//! release*: admission moves a request's samples into a leased slot
+//! once, every layer after that passes the same slot by move (never
+//! cloning the payload), the executor writes the transform back into
+//! the slot it read from, and the reply hands that slot to the caller.
+//! Dropping the slot returns its buffer to the arena free list, so
+//! steady-state serving performs zero per-job heap allocations on the
+//! lease-hit path. When the arena is exhausted (or a payload exceeds
+//! the slot capacity) a lease falls back to an ordinary heap `Vec` —
+//! counted as a miss, never an error — so exhaustion degrades
+//! gracefully instead of rejecting or deadlocking.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::fft::multipass::MAX_SINGLE_PASS_POINTS;
+
+/// Slots in the process-global arena ([`JobArena::global`]). 64 slots
+/// of 4096 complex points is ~2 MiB resident — enough to cover every
+/// in-flight single-pass job across the default service shapes (the
+/// frontend's per-class queues and the executors' in-flight window),
+/// small enough to pin permanently.
+pub const GLOBAL_ARENA_SLOTS: usize = 64;
+
+/// The arena's shared state: the free list plus lease/release counters.
+/// Held behind an `Arc` so leased [`JobSlot`]s can find their way home
+/// from any thread, in any order, without a registry.
+struct ArenaShared {
+    /// Capacity of every pooled buffer, in complex points.
+    slot_points: usize,
+    /// Total pooled buffers (free + leased).
+    slots: usize,
+    /// Buffers currently at home. Every entry has
+    /// `capacity() >= slot_points` and `len() == 0`.
+    free: Mutex<Vec<Vec<(f32, f32)>>>,
+    /// Leases served from the pool.
+    lease_hits: AtomicU64,
+    /// Leases that fell back to a heap allocation (pool empty, or the
+    /// payload exceeds `slot_points`).
+    lease_misses: AtomicU64,
+    /// Pooled buffers returned by a dropped slot.
+    releases: AtomicU64,
+    /// Pooled buffers currently leased out.
+    in_use: AtomicUsize,
+    /// Peak of `in_use` over the arena's lifetime.
+    high_water: AtomicUsize,
+}
+
+impl ArenaShared {
+    fn release(&self, mut buf: Vec<(f32, f32)>) {
+        buf.clear();
+        self.releases.fetch_add(1, Ordering::Relaxed);
+        self.in_use.fetch_sub(1, Ordering::Relaxed);
+        self.free.lock().unwrap().push(buf);
+    }
+}
+
+/// A point-in-time copy of a [`JobArena`]'s occupancy and lease
+/// counters, surfaced in `MetricsSnapshot::arena`. `lease_hits ==
+/// jobs_served` over a steady-state window is the zero-allocation
+/// proof the hotpath bench asserts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Total pooled buffers (free + leased).
+    pub slots: usize,
+    /// Capacity of each pooled buffer, in complex points.
+    pub slot_points: usize,
+    /// Buffers currently at home on the free list.
+    pub free_slots: usize,
+    /// Buffers currently leased out.
+    pub in_use: usize,
+    /// Peak simultaneous leases observed.
+    pub high_water: usize,
+    /// Leases served from the pool (no heap allocation).
+    pub lease_hits: u64,
+    /// Leases that fell back to a heap allocation.
+    pub lease_misses: u64,
+    /// Buffers returned to the pool by dropped slots.
+    pub releases: u64,
+}
+
+/// A slab arena of fixed-capacity `Vec<(f32, f32)>` payload buffers.
+/// Cheaply cloneable (it is an `Arc` handle); [`JobArena::global`] is
+/// the process-wide instance every service layer leases from.
+#[derive(Clone)]
+pub struct JobArena {
+    shared: Arc<ArenaShared>,
+}
+
+impl JobArena {
+    /// A new arena of `slots` buffers, each holding up to `slot_points`
+    /// complex points. All buffers are allocated up front; the arena
+    /// never grows or shrinks.
+    pub fn new(slots: usize, slot_points: usize) -> JobArena {
+        let free = (0..slots).map(|_| Vec::with_capacity(slot_points)).collect();
+        JobArena {
+            shared: Arc::new(ArenaShared {
+                slot_points,
+                slots,
+                free: Mutex::new(free),
+                lease_hits: AtomicU64::new(0),
+                lease_misses: AtomicU64::new(0),
+                releases: AtomicU64::new(0),
+                in_use: AtomicUsize::new(0),
+                high_water: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// The process-global arena: [`GLOBAL_ARENA_SLOTS`] slots sized to
+    /// the single-pass ceiling (the largest payload one executor job
+    /// carries — larger requests decompose into sub-jobs at or under
+    /// it).
+    pub fn global() -> &'static JobArena {
+        static GLOBAL: OnceLock<JobArena> = OnceLock::new();
+        GLOBAL.get_or_init(|| JobArena::new(GLOBAL_ARENA_SLOTS, MAX_SINGLE_PASS_POINTS))
+    }
+
+    /// Lease an empty slot able to hold `points` complex points. Served
+    /// from the pool when `points` fits a pooled buffer and one is
+    /// free (a *hit*); otherwise falls back to a fresh heap buffer (a
+    /// *miss*) — never blocks, never fails.
+    pub fn lease(&self, points: usize) -> JobSlot {
+        if points <= self.shared.slot_points {
+            if let Some(buf) = self.shared.free.lock().unwrap().pop() {
+                self.shared.lease_hits.fetch_add(1, Ordering::Relaxed);
+                let now = self.shared.in_use.fetch_add(1, Ordering::Relaxed) + 1;
+                self.shared.high_water.fetch_max(now, Ordering::Relaxed);
+                return JobSlot { buf, home: Some(Arc::clone(&self.shared)) };
+            }
+        }
+        self.shared.lease_misses.fetch_add(1, Ordering::Relaxed);
+        JobSlot { buf: Vec::with_capacity(points), home: None }
+    }
+
+    /// Lease a slot and copy `data` into it — the one memcpy a reused
+    /// prototype pays per request (loadgen's steady-state path).
+    pub fn lease_copy(&self, data: &[(f32, f32)]) -> JobSlot {
+        let mut slot = self.lease(data.len());
+        slot.buf.extend_from_slice(data);
+        slot
+    }
+
+    /// Take ownership of an already-materialized payload. When the
+    /// payload fits a free pooled buffer its samples are copied in (a
+    /// hit: the caller's allocation is freed now, and the slot recycles
+    /// forever after); otherwise the vec itself is adopted heap-backed
+    /// (a miss: zero copy, freed on drop).
+    pub fn adopt_or_lease(&self, data: Vec<(f32, f32)>) -> JobSlot {
+        if data.len() <= self.shared.slot_points {
+            if let Some(mut buf) = self.shared.free.lock().unwrap().pop() {
+                self.shared.lease_hits.fetch_add(1, Ordering::Relaxed);
+                let now = self.shared.in_use.fetch_add(1, Ordering::Relaxed) + 1;
+                self.shared.high_water.fetch_max(now, Ordering::Relaxed);
+                buf.extend_from_slice(&data);
+                return JobSlot { buf, home: Some(Arc::clone(&self.shared)) };
+            }
+        }
+        self.shared.lease_misses.fetch_add(1, Ordering::Relaxed);
+        JobSlot { buf: data, home: None }
+    }
+
+    /// A point-in-time copy of the arena's counters.
+    pub fn snapshot(&self) -> ArenaStats {
+        ArenaStats {
+            slots: self.shared.slots,
+            slot_points: self.shared.slot_points,
+            free_slots: self.shared.free.lock().unwrap().len(),
+            in_use: self.shared.in_use.load(Ordering::Relaxed),
+            high_water: self.shared.high_water.load(Ordering::Relaxed),
+            lease_hits: self.shared.lease_hits.load(Ordering::Relaxed),
+            lease_misses: self.shared.lease_misses.load(Ordering::Relaxed),
+            releases: self.shared.releases.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl fmt::Debug for JobArena {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("JobArena")
+            .field("slots", &s.slots)
+            .field("slot_points", &s.slot_points)
+            .field("free_slots", &s.free_slots)
+            .finish()
+    }
+}
+
+/// One leased FFT payload buffer: the unit of data movement on the
+/// serving path. A slot is either *arena-backed* (its buffer returns
+/// to the pool on drop) or *heap-backed* (an adopted or fallback `Vec`,
+/// freed on drop) — identical in behavior either way. Derefs to
+/// `[(f32, f32)]`, so everything that read the old `Vec` payload reads
+/// a slot unchanged.
+pub struct JobSlot {
+    buf: Vec<(f32, f32)>,
+    home: Option<Arc<ArenaShared>>,
+}
+
+impl JobSlot {
+    /// Shorten the payload to `points` (the degrade-ladder truncation).
+    /// No-op when `points >= len()`. Capacity is untouched, so an
+    /// arena-backed slot still goes home at full size.
+    pub fn truncate(&mut self, points: usize) {
+        self.buf.truncate(points);
+    }
+
+    /// Replace the payload with `data` in place (the executor's
+    /// write-back). Reuses the slot's buffer; only grows it when
+    /// `data` exceeds the current capacity.
+    pub fn copy_from(&mut self, data: &[(f32, f32)]) {
+        self.buf.clear();
+        self.buf.extend_from_slice(data);
+    }
+
+    /// True when this slot's buffer returns to an arena on drop.
+    pub fn arena_backed(&self) -> bool {
+        self.home.is_some()
+    }
+
+    /// The payload as an owned `Vec`. Heap-backed slots give up their
+    /// buffer without copying; arena-backed slots copy out and send
+    /// their buffer home.
+    pub fn into_vec(mut self) -> Vec<(f32, f32)> {
+        if self.home.is_none() {
+            std::mem::take(&mut self.buf)
+        } else {
+            self.buf.clone()
+        }
+    }
+}
+
+impl Drop for JobSlot {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            home.release(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl Deref for JobSlot {
+    type Target = [(f32, f32)];
+    fn deref(&self) -> &[(f32, f32)] {
+        &self.buf
+    }
+}
+
+impl DerefMut for JobSlot {
+    fn deref_mut(&mut self) -> &mut [(f32, f32)] {
+        &mut self.buf
+    }
+}
+
+impl From<Vec<(f32, f32)>> for JobSlot {
+    /// Adopt a heap `Vec` as-is: zero copy, no arena involvement, no
+    /// lease counted. The staged multi-pass batches use this to wrap
+    /// sub-job grids they already own.
+    fn from(buf: Vec<(f32, f32)>) -> JobSlot {
+        JobSlot { buf, home: None }
+    }
+}
+
+impl Clone for JobSlot {
+    /// A deep, heap-backed copy (clones never contend for pool slots).
+    fn clone(&self) -> JobSlot {
+        JobSlot { buf: self.buf.clone(), home: None }
+    }
+}
+
+impl fmt::Debug for JobSlot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JobSlot")
+            .field("len", &self.buf.len())
+            .field("arena_backed", &self.home.is_some())
+            .finish()
+    }
+}
+
+impl PartialEq for JobSlot {
+    fn eq(&self, other: &JobSlot) -> bool {
+        self.buf == other.buf
+    }
+}
+
+impl PartialEq<Vec<(f32, f32)>> for JobSlot {
+    fn eq(&self, other: &Vec<(f32, f32)>) -> bool {
+        self.buf == *other
+    }
+}
+
+struct RingState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded FIFO ring for the dispatcher → shard-worker hop. The
+/// steady-state topology is single-producer single-consumer (one
+/// dispatcher routes, one worker drains), but the implementation is a
+/// mutexed deque, safe under the transient multi-producer bursts the
+/// routing table allows during resizes. Unlike an `mpsc` channel, a
+/// push moves the job into a pre-sized ring — no per-send heap node.
+pub struct JobRing<T> {
+    state: Mutex<RingState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobRing<T> {
+    /// A new ring holding at most `capacity` queued items (minimum 1).
+    pub fn new(capacity: usize) -> JobRing<T> {
+        let capacity = capacity.max(1);
+        JobRing {
+            state: Mutex::new(RingState { buf: VecDeque::with_capacity(capacity), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue `item`, blocking while the ring is full. Returns the
+    /// item back when the ring has been closed (the producer's signal
+    /// to re-route or fail the job).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        while st.buf.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(item);
+        }
+        st.buf.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the oldest item, blocking while the ring is open and
+    /// empty. After [`close`](JobRing::close), remaining items drain in
+    /// order; `None` means closed *and* empty (the consumer's exit
+    /// signal).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the ring: blocked producers fail their push, the consumer
+    /// drains what is queued and then sees `None`. Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> fmt::Debug for JobRing<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JobRing")
+            .field("capacity", &self.capacity)
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn lease_hit_reuses_the_pooled_buffer_and_counts() {
+        let arena = JobArena::new(2, 16);
+        let mut a = arena.lease(8);
+        assert!(a.arena_backed());
+        a.copy_from(&[(1.0, 2.0); 8]);
+        assert_eq!(a.len(), 8);
+        let s = arena.snapshot();
+        assert_eq!((s.lease_hits, s.lease_misses, s.in_use, s.free_slots), (1, 0, 1, 1));
+        drop(a);
+        let s = arena.snapshot();
+        assert_eq!((s.releases, s.in_use, s.free_slots), (1, 0, 2));
+        // the returned buffer comes back empty
+        let b = arena.lease(16);
+        assert!(b.is_empty() && b.arena_backed());
+    }
+
+    #[test]
+    fn exhaustion_and_oversize_fall_back_to_heap() {
+        let arena = JobArena::new(1, 16);
+        let a = arena.lease(4);
+        let b = arena.lease(4); // pool exhausted
+        let c = arena.lease(64); // over slot capacity
+        assert!(a.arena_backed() && !b.arena_backed() && !c.arena_backed());
+        let s = arena.snapshot();
+        assert_eq!((s.lease_hits, s.lease_misses), (1, 2));
+        assert_eq!(s.high_water, 1);
+    }
+
+    #[test]
+    fn adopt_or_lease_copies_into_a_slot_when_one_is_free() {
+        let arena = JobArena::new(1, 16);
+        let v = vec![(3.0f32, 4.0f32); 8];
+        let a = arena.adopt_or_lease(v.clone());
+        assert!(a.arena_backed());
+        assert_eq!(&*a, &v[..]);
+        // pool now empty: the vec itself is adopted, contents intact
+        let b = arena.adopt_or_lease(v.clone());
+        assert!(!b.arena_backed());
+        assert_eq!(&*b, &v[..]);
+        assert_eq!(b.into_vec(), v);
+    }
+
+    #[test]
+    fn slot_clone_is_heap_backed_and_equal() {
+        let arena = JobArena::new(1, 8);
+        let a = arena.lease_copy(&[(1.0, 0.0), (2.0, 0.0)]);
+        let b = a.clone();
+        assert!(!b.arena_backed());
+        assert_eq!(a, b);
+        assert_eq!(a, vec![(1.0, 0.0), (2.0, 0.0)]);
+    }
+
+    #[test]
+    fn into_vec_round_trips_and_releases() {
+        let arena = JobArena::new(1, 8);
+        let a = arena.lease_copy(&[(5.0, 6.0)]);
+        assert_eq!(a.into_vec(), vec![(5.0, 6.0)]);
+        assert_eq!(arena.snapshot().free_slots, 1, "arena-backed into_vec releases");
+        let v: JobSlot = vec![(7.0, 8.0)].into();
+        assert_eq!(v.into_vec(), vec![(7.0, 8.0)]);
+    }
+
+    #[test]
+    fn truncate_shortens_but_keeps_the_slot_home() {
+        let arena = JobArena::new(1, 8);
+        let mut a = arena.lease_copy(&[(1.0, 0.0); 8]);
+        a.truncate(2);
+        assert_eq!(a.len(), 2);
+        drop(a);
+        assert_eq!(arena.snapshot().free_slots, 1);
+    }
+
+    #[test]
+    fn ring_is_fifo_and_drains_after_close() {
+        let ring = JobRing::new(8);
+        for i in 0..5 {
+            ring.push(i).unwrap();
+        }
+        ring.close();
+        assert_eq!(ring.push(99), Err(99), "push after close returns the item");
+        let drained: Vec<i32> = std::iter::from_fn(|| ring.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+        assert_eq!(ring.pop(), None);
+    }
+
+    #[test]
+    fn full_ring_blocks_the_producer_until_a_pop() {
+        let ring = Arc::new(JobRing::new(2));
+        ring.push(1).unwrap();
+        ring.push(2).unwrap();
+        let r2 = Arc::clone(&ring);
+        let producer = thread::spawn(move || r2.push(3));
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(ring.len(), 2, "third push must be blocked");
+        assert_eq!(ring.pop(), Some(1));
+        assert_eq!(producer.join().unwrap(), Ok(()));
+        assert_eq!(ring.pop(), Some(2));
+        assert_eq!(ring.pop(), Some(3));
+    }
+
+    #[test]
+    fn spsc_order_is_preserved_across_threads() {
+        let ring = Arc::new(JobRing::new(4));
+        let producer = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                for i in 0..1000u32 {
+                    ring.push(i).unwrap();
+                }
+                ring.close();
+            })
+        };
+        let consumer = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = ring.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        producer.join().unwrap();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..1000u32).collect::<Vec<_>>());
+    }
+}

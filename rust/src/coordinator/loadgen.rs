@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Error, Result};
 
+use super::buffer::JobArena;
 use super::metrics::ClassStats;
 use super::request::FftRequest;
 use super::server::{ServerResult, TrafficServer};
@@ -479,8 +480,9 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
     // One prototype signal per distinct size, generated *before* the
     // clock starts: generating a fresh 4096-point test signal per
     // request would eat a large slice of a 50µs interarrival gap and
-    // silently erode the offered rate. Submission clones a prototype
-    // (one memcpy), which is the cheapest input the API allows.
+    // silently erode the offered rate. Submission copies a prototype
+    // into a leased arena slot (one memcpy, no allocation while the
+    // arena has free slots) — the cheapest input the API allows.
     let prototypes: Vec<Vec<(f32, f32)>> = cfg
         .sizes
         .iter()
@@ -501,7 +503,8 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         let idx = (rng.next_u64() % prototypes.len() as u64) as usize;
         let class = pick_class(rng.next_f64());
         submitted += 1;
-        let mut req = FftRequest::new(prototypes[idx].clone()).with_class(class);
+        let slot = JobArena::global().lease_copy(&prototypes[idx]);
+        let mut req = FftRequest::with_input_slot(slot).with_class(class);
         if let Some(d) = cfg.deadline {
             req = req.with_deadline(d);
         }

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::buffer::{ArenaStats, JobArena};
 use crate::fft::cache::CacheStats;
 use crate::profile::Profile;
 
@@ -396,6 +397,7 @@ impl Metrics {
             agg_jobs_per_s: 0.0,
             server: ServerStats::default(),
             backends: Vec::new(),
+            arena: JobArena::global().snapshot(),
         }
     }
 }
@@ -543,6 +545,10 @@ pub struct MetricsSnapshot {
     /// Per-backend routing counters (filled in by
     /// `ServiceHandle::metrics` on a routed set; empty otherwise).
     pub backends: Vec<BackendStat>,
+    /// Process-global job-arena counters: slot occupancy plus
+    /// lease-hit / lease-miss / release totals (all zeros when no
+    /// request payload ever touched the arena).
+    pub arena: ArenaStats,
 }
 
 impl MetricsSnapshot {
@@ -733,6 +739,20 @@ impl MetricsSnapshot {
                     b.validate_checks
                 ));
             }
+        }
+        if self.arena.lease_hits + self.arena.lease_misses > 0 {
+            let a = &self.arena;
+            s.push_str(&format!(
+                "  arena: {}/{} slots in use (x{} points, high water {}), \
+                 {} lease hits / {} misses, {} releases\n",
+                a.in_use,
+                a.slots,
+                a.slot_points,
+                a.high_water,
+                a.lease_hits,
+                a.lease_misses,
+                a.releases
+            ));
         }
         s
     }

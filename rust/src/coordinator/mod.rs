@@ -27,8 +27,17 @@
 //! ordinary ≤4096-point sub-jobs — pipelined through the batch path
 //! when a [`request::MultipassGate`] permit is free, strictly
 //! serialized otherwise — with a cooperative deadline checkpoint
-//! between the passes. The legacy `submit` / `submit_degraded` /
-//! `submit_batch` method families remain as thin deprecated shims.
+//! between the passes. (The legacy `submit` / `submit_degraded` /
+//! `submit_batch` shim families were removed in 0.4.0; the
+//! `FftRequest` surface is the only way in.)
+//!
+//! Payload buffers follow the zero-copy memory discipline of
+//! [`buffer`]: admission moves a request's samples into a [`JobSlot`]
+//! leased from the process-global [`JobArena`], every layer after that
+//! moves the same slot (never cloning the payload), workers write the
+//! transform back into the slot they read from, and the reply hands
+//! that slot to the caller — steady-state serving performs zero
+//! per-job payload allocations on the lease-hit path.
 //!
 //! All workers share one [`PlanCache`]: generated FFT programs
 //! (plan + schedule + twiddle image) are memoized per
@@ -75,6 +84,7 @@
 
 pub mod autoscale;
 pub mod backend;
+pub mod buffer;
 pub mod loadgen;
 pub mod metrics;
 pub mod qos;
@@ -103,17 +113,18 @@ pub use autoscale::{
     ControllerCore, QosAction, ScaleAction,
 };
 pub use backend::{BackendSet, BackendSetConfig, FftBackend, RouteMode};
+pub use buffer::{ArenaStats, JobArena, JobRing, JobSlot};
 pub use loadgen::{ArrivalPattern, ClassLoadRow, LoadReport, LoadgenConfig};
 pub use metrics::{
     BackendStat, ClassStats, LatencyStats, Metrics, MetricsSnapshot, MultipassSnapshot,
     ServerStats, ShardStat,
 };
-pub use qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
+pub use qos::{
+    default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler, DEFAULT_CLASS_CAPACITY,
+};
 pub use request::{FftCompute, FftRequest, MultipassGate, MultipassStats};
 pub use server::{AdmissionPolicy, DegradeControl, ServedFft, ServerConfig};
 pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
-#[allow(deprecated)]
-pub use server::RequestOpts;
 pub use shard::{ShardPoolConfig, ShardedFftService};
 
 /// Typed, matchable errors from the serving stack. Execution services
@@ -156,6 +167,11 @@ pub enum Backend {
     Pjrt,
     /// Both: PJRT numerics cross-checked against the simulator.
     Validate,
+    /// No compute at all: jobs are dequeued, metered and replied with
+    /// their input unchanged. Exists for the hotpath bench, which
+    /// measures pure dispatch overhead (queue hop + slot movement +
+    /// reply) with the FFT subtracted.
+    Noop,
 }
 
 /// Configuration for an [`FftService`] worker pool.
@@ -199,8 +215,11 @@ impl Default for ServiceConfig {
 pub struct FftResult {
     /// Service-assigned job id (submission order).
     pub id: u64,
-    /// The transform, interleaved `(re, im)` at the served size.
-    pub output: Vec<(f32, f32)>,
+    /// The transform, interleaved `(re, im)` at the served size — the
+    /// same [`JobSlot`] the request arrived in, written in place
+    /// (cloning a result deep-copies to the heap; dropping it releases
+    /// an arena-backed buffer to the pool).
+    pub output: JobSlot,
     /// Cycle profile (simulator backends only).
     pub profile: Option<Profile>,
     /// Which core served it (simulator backends) — PJRT jobs report
@@ -235,7 +254,7 @@ impl Job {
     fn points(&self) -> usize {
         match &self.kind {
             JobKind::Single { input, .. } => input.len() >> self.level.shift(),
-            JobKind::Batch { inputs, .. } => inputs.first().map(Vec::len).unwrap_or(0),
+            JobKind::Batch { inputs, .. } => inputs.first().map(|s| s.len()).unwrap_or(0),
         }
     }
 }
@@ -243,7 +262,7 @@ impl Job {
 enum JobKind {
     Single {
         id: u64,
-        input: Vec<(f32, f32)>,
+        input: JobSlot,
         reply: Sender<Result<FftResult>>,
     },
     /// A coalesced group of same-size requests served by one worker;
@@ -251,7 +270,7 @@ enum JobKind {
     /// exactly as the sequential path).
     Batch {
         ids: Vec<u64>,
-        inputs: Vec<Vec<(f32, f32)>>,
+        inputs: Vec<JobSlot>,
         reply: Sender<Vec<Result<FftResult>>>,
     },
 }
@@ -290,7 +309,7 @@ impl FftService {
                 let (handle, join) = spawn_pjrt_server(&cfg.artifacts_dir)?;
                 (Some(handle), Some(join))
             }
-            Backend::Simulator => (None, None),
+            Backend::Simulator | Backend::Noop => (None, None),
         };
         for core in 0..cfg.cores {
             let rx = Arc::clone(&rx);
@@ -358,41 +377,9 @@ impl FftService {
         )
     }
 
-    /// Deprecated pre-[`FftRequest`] single-submit surface.
-    #[deprecated(since = "0.3.0", note = "use request(FftRequest::new(input))")]
-    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
-        self.enqueue(input, qos::DegradeLevel::Full)
-    }
-
-    /// Deprecated pre-[`FftRequest`] degraded-submit surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use request(FftRequest::new(input).with_level(level))"
-    )]
-    pub fn submit_degraded(
-        &self,
-        input: Vec<(f32, f32)>,
-        level: qos::DegradeLevel,
-    ) -> Receiver<Result<FftResult>> {
-        self.enqueue(input, level)
-    }
-
-    /// Deprecated pre-[`FftRequest`] batch surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use request_all(inputs.into_iter().map(FftRequest::new).collect())"
-    )]
-    pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
-        self.enqueue_batch(inputs)
-    }
-
-    /// Queue one single job at `level` (the old `submit_degraded` body;
-    /// the unified [`FftService::request`] fronts it now).
-    fn enqueue(
-        &self,
-        input: Vec<(f32, f32)>,
-        level: qos::DegradeLevel,
-    ) -> Receiver<Result<FftResult>> {
+    /// Queue one single job at `level` (the unified
+    /// [`FftService::request`] fronts it).
+    fn enqueue(&self, input: JobSlot, level: qos::DegradeLevel) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Job {
@@ -409,8 +396,8 @@ impl FftService {
 
     /// Coalesce `inputs` into per-size groups (stable within each
     /// group), queue one batch job per group, and return every result
-    /// in the original submission order (the old `submit_batch` body).
-    fn enqueue_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+    /// in the original submission order.
+    fn enqueue_batch(&self, inputs: Vec<JobSlot>) -> Result<Vec<FftResult>> {
         let n = inputs.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -418,11 +405,11 @@ impl FftService {
         let ids: Vec<u64> =
             (0..n).map(|_| self.next_id.fetch_add(1, Ordering::Relaxed)).collect();
         let groups = coalesce_by_size(&inputs);
-        let mut inputs: Vec<Option<Vec<(f32, f32)>>> = inputs.into_iter().map(Some).collect();
+        let mut inputs: Vec<Option<JobSlot>> = inputs.into_iter().map(Some).collect();
         let mut pending = Vec::with_capacity(groups.len());
         for (_points, idxs) in groups {
             let batch_ids: Vec<u64> = idxs.iter().map(|&i| ids[i]).collect();
-            let batch_inputs: Vec<Vec<(f32, f32)>> = idxs
+            let batch_inputs: Vec<JobSlot> = idxs
                 .iter()
                 .map(|&i| inputs[i].take().expect("each input consumed once"))
                 .collect();
@@ -475,7 +462,7 @@ impl FftService {
     /// Drain and stop all workers. Closing the queue stops new
     /// submissions, but every job already queued or in flight is still
     /// served (workers drain the channel before exiting, and `join`
-    /// waits for that), so replies handed out by `submit` before the
+    /// waits for that), so replies handed out by `request` before the
     /// shutdown always arrive — pinned by `shutdown_drains_queued_jobs`.
     pub fn shutdown(mut self) {
         self.tx.take(); // closes the queue
@@ -577,7 +564,7 @@ fn fail_job(job: Job) {
 /// inside each group. Returns `(points, original indices)` per distinct
 /// size in first-seen order. Shared by [`FftService::request_all`] and
 /// the sharded scheduler's router.
-fn coalesce_by_size(inputs: &[Vec<(f32, f32)>]) -> Vec<(usize, Vec<usize>)> {
+fn coalesce_by_size(inputs: &[JobSlot]) -> Vec<(usize, Vec<usize>)> {
     let mut sizes: Vec<usize> = Vec::new(); // distinct, first-seen order
     let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
     for (i, input) in inputs.iter().enumerate() {
@@ -649,14 +636,31 @@ fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, j
                 let keep = input.len() >> level.shift();
                 input.truncate(keep);
             }
+            if core.cfg.backend == Backend::Noop {
+                // pure dispatch-overhead path: meter and reply with the
+                // slot untouched (no compute, no copy, no allocation)
+                let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+                metrics.observe(input.len(), wall_us, None);
+                let _ = reply.send(Ok(FftResult {
+                    id,
+                    output: input,
+                    profile: None,
+                    core: core.id,
+                    wall_us,
+                }));
+                return;
+            }
             let res = serve_one(core, engine, id, &input);
             let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
             match res {
                 Ok((output, profile, served_by)) => {
                     metrics.observe(input.len(), wall_us, profile.as_ref());
+                    // write the transform back into the slot the request
+                    // arrived in: the reply reuses the leased buffer
+                    input.copy_from(&output);
                     let _ = reply.send(Ok(FftResult {
                         id,
-                        output,
+                        output: input,
                         profile,
                         core: served_by,
                         wall_us,
@@ -669,7 +673,7 @@ fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, j
             }
         }
         JobKind::Batch { ids, inputs, reply } => {
-            let results = serve_batch(core, engine, &ids, &inputs, job.submitted);
+            let results = serve_batch(core, engine, &ids, inputs, job.submitted);
             metrics.observe_batch(results.len());
             for r in &results {
                 match r {
@@ -712,36 +716,43 @@ fn serve_one(
             }
             Ok((fast, Some(run.profile), core.id))
         }
+        // defensive: the no-op backend is short-circuited in
+        // `handle_job` before compute; echo the input if reached
+        Backend::Noop => Ok((input.to_vec(), None, core.id)),
     }
 }
 
 /// Serve a coalesced same-size batch on this worker: the simulator path
 /// resolves the plan and the resident executor once and streams every
-/// job through them. Jobs fail individually; an unservable design point
-/// (no valid plan) fails the whole group with one error per job.
+/// job through them, writing each transform back into the slot it
+/// arrived in. Jobs fail individually; an unservable design point (no
+/// valid plan) fails the whole group with one error per job.
 fn serve_batch(
     core: &mut Core,
     engine: &Option<PjrtHandle>,
     ids: &[u64],
-    inputs: &[Vec<(f32, f32)>],
+    inputs: Vec<JobSlot>,
     submitted: Instant,
 ) -> Vec<Result<FftResult>> {
     let mut results = Vec::with_capacity(inputs.len());
     match core.cfg.backend {
         Backend::Simulator => {
-            let points = inputs.first().map(Vec::len).unwrap_or(0);
+            let points = inputs.first().map(|s| s.len()).unwrap_or(0);
             let core_id = core.id;
             match core.executor(points) {
                 Ok(ex) => {
-                    for (id, input) in ids.iter().zip(inputs) {
-                        results.push(match ex.run(input) {
-                            Ok(run) => Ok(FftResult {
-                                id: *id,
-                                output: run.output,
-                                profile: Some(run.profile),
-                                core: core_id,
-                                wall_us: submitted.elapsed().as_secs_f64() * 1e6,
-                            }),
+                    for (id, mut input) in ids.iter().zip(inputs) {
+                        results.push(match ex.run(&input) {
+                            Ok(run) => {
+                                input.copy_from(&run.output);
+                                Ok(FftResult {
+                                    id: *id,
+                                    output: input,
+                                    profile: Some(run.profile),
+                                    core: core_id,
+                                    wall_us: submitted.elapsed().as_secs_f64() * 1e6,
+                                })
+                            }
                             Err(e) => Err(e.into()),
                         });
                     }
@@ -755,15 +766,29 @@ fn serve_batch(
                 }
             }
         }
-        Backend::Pjrt | Backend::Validate => {
+        Backend::Noop => {
             for (id, input) in ids.iter().zip(inputs) {
-                results.push(serve_one(core, engine, *id, input).map(
-                    |(output, profile, served_by)| FftResult {
-                        id: *id,
-                        output,
-                        profile,
-                        core: served_by,
-                        wall_us: submitted.elapsed().as_secs_f64() * 1e6,
+                results.push(Ok(FftResult {
+                    id: *id,
+                    output: input,
+                    profile: None,
+                    core: core.id,
+                    wall_us: submitted.elapsed().as_secs_f64() * 1e6,
+                }));
+            }
+        }
+        Backend::Pjrt | Backend::Validate => {
+            for (id, mut input) in ids.iter().zip(inputs) {
+                results.push(serve_one(core, engine, *id, &input).map(
+                    |(output, profile, served_by)| {
+                        input.copy_from(&output);
+                        FftResult {
+                            id: *id,
+                            output: input,
+                            profile,
+                            core: served_by,
+                            wall_us: submitted.elapsed().as_secs_f64() * 1e6,
+                        }
                     },
                 ));
             }
@@ -858,7 +883,7 @@ mod tests {
         drop(rx);
         let (reply_tx, reply_rx) = channel();
         let job = Job {
-            kind: JobKind::Single { id: 0, input: signal(256, 0), reply: reply_tx },
+            kind: JobKind::Single { id: 0, input: JobSlot::from(signal(256, 0)), reply: reply_tx },
             submitted: Instant::now(),
             level: qos::DegradeLevel::Full,
         };
@@ -878,7 +903,7 @@ mod tests {
         let job = Job {
             kind: JobKind::Batch {
                 ids: vec![0, 1, 2],
-                inputs: (0..3).map(|i| signal(256, i)).collect(),
+                inputs: (0..3).map(|i| JobSlot::from(signal(256, i))).collect(),
                 reply: reply_tx,
             },
             submitted: Instant::now(),
@@ -973,31 +998,24 @@ mod tests {
         assert!(r.profile.is_some()); // sim ran too
     }
 
-    /// The deprecated pre-`FftRequest` surface still works, bit-for-bit
-    /// equal to the unified API (shim-compat pin until removal).
+    /// The no-op backend dequeues, meters and replies with the input
+    /// slot unchanged — the dispatch-overhead-only engine the hotpath
+    /// bench measures.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_submit_shims_match_request() {
-        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
-        let old = svc.submit(signal(256, 11)).recv().unwrap().unwrap();
-        let new = svc.request(FftRequest::new(signal(256, 11))).recv().unwrap().unwrap();
-        assert_eq!(old.output, new.output, "shim and unified path are bitwise equal");
-        let old_deg = svc
-            .submit_degraded(signal(1024, 12), qos::DegradeLevel::Half)
-            .recv()
-            .unwrap()
-            .unwrap();
-        assert_eq!(old_deg.output.len(), 512);
-        let old_batch = svc.submit_batch(vec![signal(256, 13), signal(256, 14)]).unwrap();
-        let new_batch = svc
-            .request_all(vec![
-                FftRequest::new(signal(256, 13)),
-                FftRequest::new(signal(256, 14)),
-            ])
-            .unwrap();
-        for (o, n) in old_batch.iter().zip(&new_batch) {
-            assert_eq!(o.output, n.output);
-        }
+    fn noop_backend_echoes_input_without_compute() {
+        let svc = FftService::start(ServiceConfig {
+            cores: 1,
+            backend: Backend::Noop,
+            ..Default::default()
+        })
+        .unwrap();
+        let input = signal(256, 11);
+        let r = svc.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+        assert_eq!(r.output, input, "no-op serving echoes the payload");
+        assert!(r.profile.is_none());
+        let m = svc.metrics();
+        assert_eq!(m.served, 1);
+        assert_eq!(m.errors, 0);
         svc.shutdown();
     }
 

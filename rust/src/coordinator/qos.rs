@@ -179,20 +179,34 @@ pub struct QosClass {
     /// class, served only when every weighted queue is empty or via the
     /// aging rule — exactly the legacy low-priority semantics.
     pub weight: u32,
-    /// Bounded admission-queue capacity for this class. `0` derives the
-    /// cap from the deprecated shared `ServerConfig::queue_capacity`
-    /// (each class then gets the legacy shared value as its own cap).
+    /// Bounded admission-queue capacity for this class. Defaults to
+    /// [`DEFAULT_CLASS_CAPACITY`]; override with
+    /// [`QosClass::with_capacity`]. A capacity of `0` is rejected at
+    /// server start — every class must be able to admit work.
     pub capacity: usize,
     /// Deadline applied to this class's requests when the submission
     /// carries none (falls back to `ServerConfig::default_deadline`).
     pub deadline_default: Option<Duration>,
 }
 
+/// Default per-class admission-queue capacity, used by
+/// [`QosClass::new`] when no explicit capacity is set. Matches the
+/// shared `ServerConfig::queue_capacity` default the 0.3.0 surface
+/// used, so configurations that never touched capacity behave
+/// identically under the per-class scheme.
+pub const DEFAULT_CLASS_CAPACITY: usize = 64;
+
 impl QosClass {
-    /// A class with the given name and fair-share weight; capacity and
-    /// default deadline fall back to server-level settings.
+    /// A class with the given name and fair-share weight; capacity
+    /// starts at [`DEFAULT_CLASS_CAPACITY`] and the default deadline
+    /// falls back to server-level settings.
     pub fn new(name: &str, weight: u32) -> QosClass {
-        QosClass { name: name.into(), weight, capacity: 0, deadline_default: None }
+        QosClass {
+            name: name.into(),
+            weight,
+            capacity: DEFAULT_CLASS_CAPACITY,
+            deadline_default: None,
+        }
     }
 
     /// Builder: set an explicit per-class admission-queue capacity.
@@ -213,15 +227,6 @@ impl QosClass {
 /// match the old `Priority::High` / `Priority::Low`.
 pub fn default_two_class() -> Vec<QosClass> {
     vec![QosClass::new("high", 1), QosClass::new("low", 0)]
-}
-
-/// Per-class caps after the legacy fallback: explicit capacities are
-/// honored; `0` derives the deprecated shared `queue_capacity`.
-pub fn resolve_capacities(classes: &[QosClass], shared: usize) -> Vec<usize> {
-    classes
-        .iter()
-        .map(|c| if c.capacity > 0 { c.capacity } else { shared })
-        .collect()
 }
 
 /// One admitted-but-not-yet-dispatched request, as the scheduler core
@@ -301,9 +306,9 @@ pub struct QosScheduler<T> {
 }
 
 impl<T> QosScheduler<T> {
-    /// `caps` are the resolved per-class capacities (see
-    /// [`resolve_capacities`]); `aging` is the background-class
-    /// promotion threshold.
+    /// `caps` are the per-class admission capacities (one per class,
+    /// usually each class's own [`QosClass::capacity`]); `aging` is the
+    /// background-class promotion threshold.
     pub fn new(classes: Vec<QosClass>, caps: Vec<usize>, aging: Duration) -> QosScheduler<T> {
         assert_eq!(classes.len(), caps.len(), "one capacity per class");
         let weighted: Vec<usize> = (0..classes.len()).filter(|&c| classes[c].weight > 0).collect();
@@ -470,7 +475,7 @@ mod tests {
 
     fn sched(specs: &[(&str, u32)], cap: usize, aging: Duration) -> QosScheduler<u64> {
         let classes: Vec<QosClass> = specs.iter().map(|&(n, w)| QosClass::new(n, w)).collect();
-        let caps = resolve_capacities(&classes, cap);
+        let caps = vec![cap; classes.len()];
         QosScheduler::new(classes, caps, aging)
     }
 
@@ -593,13 +598,17 @@ mod tests {
     }
 
     #[test]
-    fn capacities_resolve_explicit_or_legacy_shared() {
-        let classes = vec![
-            QosClass::new("a", 2).with_capacity(7),
-            QosClass::new("b", 1), // unset -> legacy shared value
-        ];
-        assert_eq!(resolve_capacities(&classes, 64), vec![7, 64]);
-        assert_eq!(resolve_capacities(&classes, 0), vec![7, 0], "underivable stays 0");
+    fn builder_default_capacity_matches_retired_shared_default() {
+        // The 0.3.0 surface derived unset class capacities from a shared
+        // `ServerConfig::queue_capacity` defaulting to 64. The builder
+        // default must reproduce that, so untouched configurations keep
+        // their old admission bounds across the 0.4.0 migration.
+        assert_eq!(DEFAULT_CLASS_CAPACITY, 64);
+        assert_eq!(QosClass::new("b", 1).capacity, DEFAULT_CLASS_CAPACITY);
+        assert_eq!(QosClass::new("a", 2).with_capacity(7).capacity, 7, "explicit wins");
+        for c in default_two_class() {
+            assert_eq!(c.capacity, DEFAULT_CLASS_CAPACITY, "legacy two-class default");
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::buffer::{JobArena, JobSlot};
 use super::metrics::MultipassSnapshot;
 use super::qos::DegradeLevel;
 use super::{FftResult, ServiceError};
@@ -36,8 +37,10 @@ use crate::fft::multipass::{self, MultipassPlan, Stage, MAX_SINGLE_PASS_POINTS};
 /// the passes of a decomposed large request.
 #[derive(Clone, Debug)]
 pub struct FftRequest {
-    /// The signal to transform, interleaved `(re, im)`.
-    pub input: Vec<(f32, f32)>,
+    /// The signal to transform, interleaved `(re, im)`, held in a
+    /// leased [`JobSlot`] that travels by move through every layer
+    /// (admission → routing → executor → reply) without cloning.
+    pub input: JobSlot,
     /// QoS degrade level: the request is truncated to
     /// `len >> level.shift()` where it is served — and, for a request
     /// above the pass ceiling, *before* decomposition, so a Half-level
@@ -61,8 +64,20 @@ pub struct FftRequest {
 }
 
 impl FftRequest {
-    /// A Full-level, class-0, no-deadline request for `input`.
+    /// A Full-level, class-0, no-deadline request for `input`. The
+    /// payload is moved into a slot leased from [`JobArena::global`]
+    /// (pooled when one is free, adopted heap-backed otherwise); use
+    /// [`FftRequest::with_input_slot`] to supply a pre-leased slot and
+    /// skip even that step.
     pub fn new(input: Vec<(f32, f32)>) -> Self {
+        Self::with_input_slot(JobArena::global().adopt_or_lease(input))
+    }
+
+    /// The zero-copy constructor: build a request around an
+    /// already-leased [`JobSlot`]. Loadgen and the benches pre-lease
+    /// and reuse slots so steady-state submission performs no heap
+    /// allocation at all.
+    pub fn with_input_slot(input: JobSlot) -> Self {
         FftRequest {
             input,
             level: DegradeLevel::Full,
@@ -287,10 +302,15 @@ pub(crate) fn serve_staged(
             };
             if permit.is_some() {
                 // pipelined: one coalesced stage batch, chunked across
-                // the pool by the service's batch path
-                let results =
-                    compute.request_all(jobs.into_iter().map(FftRequest::new).collect())?;
-                Ok(results.into_iter().map(|r| r.output).collect())
+                // the pool by the service's batch path. Sub-job grids
+                // are adopted as heap-backed slots (zero copy, no
+                // arena pressure from one large request's fan-out).
+                let results = compute.request_all(
+                    jobs.into_iter()
+                        .map(|j| FftRequest::with_input_slot(JobSlot::from(j)))
+                        .collect(),
+                )?;
+                Ok(results.into_iter().map(|r| r.output.into_vec()).collect())
             } else {
                 // spilled: strictly one sub-job in flight at a time —
                 // zero pool monopolization, deadlock-free by
@@ -298,10 +318,10 @@ pub(crate) fn serve_staged(
                 jobs.into_iter()
                     .map(|j| {
                         let r = compute
-                            .request(FftRequest::new(j))
+                            .request(FftRequest::with_input_slot(JobSlot::from(j)))
                             .recv()
                             .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))??;
-                        Ok(r.output)
+                        Ok(r.output.into_vec())
                     })
                     .collect()
             }
@@ -322,7 +342,7 @@ pub(crate) fn serve_staged(
             stats.completed.fetch_add(1, Ordering::Relaxed);
             let _ = tx.send(Ok(FftResult {
                 id,
-                output,
+                output: JobSlot::from(output),
                 profile: None,
                 core: usize::MAX,
                 wall_us: started.elapsed().as_secs_f64() * 1e6,
@@ -343,13 +363,13 @@ pub(crate) fn serve_staged(
 /// submission order.
 pub(crate) fn serve_request_all(
     compute: &dyn FftCompute,
-    batch: impl FnOnce(Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>>,
-    single: impl Fn(Vec<(f32, f32)>, DegradeLevel) -> Receiver<Result<FftResult>>,
+    batch: impl FnOnce(Vec<JobSlot>) -> Result<Vec<FftResult>>,
+    single: impl Fn(JobSlot, DegradeLevel) -> Receiver<Result<FftResult>>,
     reqs: Vec<FftRequest>,
 ) -> Result<Vec<FftResult>> {
     let n = reqs.len();
     let mut slots: Vec<Option<FftResult>> = (0..n).map(|_| None).collect();
-    let mut simple: Vec<(usize, Vec<(f32, f32)>)> = Vec::new();
+    let mut simple: Vec<(usize, JobSlot)> = Vec::new();
     let mut staged: Vec<(usize, FftRequest)> = Vec::new();
     let mut pending: Vec<(usize, Receiver<Result<FftResult>>)> = Vec::new();
     for (i, req) in reqs.into_iter().enumerate() {
@@ -364,7 +384,7 @@ pub(crate) fn serve_request_all(
         }
     }
     if !simple.is_empty() {
-        let (idxs, inputs): (Vec<usize>, Vec<Vec<(f32, f32)>>) = simple.into_iter().unzip();
+        let (idxs, inputs): (Vec<usize>, Vec<JobSlot>) = simple.into_iter().unzip();
         for (i, r) in idxs.into_iter().zip(batch(inputs)?) {
             slots[i] = Some(r);
         }

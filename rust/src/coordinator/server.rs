@@ -66,9 +66,8 @@ use anyhow::{anyhow, Result};
 
 use super::backend::BackendSet;
 use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
-use super::qos::{
-    default_two_class, resolve_capacities, DegradeLadder, DegradeLevel, QosClass, QosScheduler,
-};
+use super::buffer::JobSlot;
+use super::qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
 use super::request::{FftCompute, FftRequest};
 use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService};
 use crate::fft::multipass;
@@ -77,7 +76,7 @@ use crate::fft::multipass;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmissionPolicy {
     /// Block the submitting thread until a slot frees in the request's
-    /// class (closed-loop backpressure; `submit` never returns
+    /// class (closed-loop backpressure; `request` never returns
     /// `QueueFull`).
     Block,
     /// Reject immediately with [`ServiceError::QueueFull`] — load is
@@ -95,52 +94,17 @@ pub enum AdmissionPolicy {
     Degrade,
 }
 
-/// Deprecated per-request submission options, absorbed into
-/// [`FftRequest`] (class, deadline and input now travel in one struct
-/// through every layer).
-#[deprecated(since = "0.3.0", note = "use FftRequest (class and deadline ride the request)")]
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RequestOpts {
-    /// Index into [`ServerConfig::classes`] (the default, 0, is the
-    /// highest-priority class of the default two-class configuration).
-    pub class: usize,
-    /// Relative deadline; `None` falls back to the class's
-    /// `deadline_default`, then [`ServerConfig::default_deadline`].
-    pub deadline: Option<Duration>,
-}
-
-#[allow(deprecated)]
-impl RequestOpts {
-    /// Options addressing QoS class `class`, with no explicit deadline.
-    pub fn class(class: usize) -> RequestOpts {
-        RequestOpts { class, deadline: None }
-    }
-
-    /// Attach a relative deadline to these options.
-    pub fn with_deadline(mut self, deadline: Duration) -> RequestOpts {
-        self.deadline = Some(deadline);
-        self
-    }
-}
-
 /// Traffic-frontend configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// QoS classes, in priority/configuration order (requests address
-    /// them by index through [`FftRequest::with_class`]).
+    /// them by index through [`FftRequest::with_class`]). Each class
+    /// carries its own admission-queue capacity
+    /// ([`QosClass::capacity`], default
+    /// [`super::qos::DEFAULT_CLASS_CAPACITY`], overridden with
+    /// [`QosClass::with_capacity`]) — the shared
+    /// `ServerConfig::queue_capacity` fallback was removed in 0.4.0.
     pub classes: Vec<QosClass>,
-    /// **Deprecated** shared admission-queue capacity. With per-class
-    /// capacities on [`QosClass`] this shared knob is ambiguous; it is
-    /// kept only as the fallback a class with `capacity: 0` derives its
-    /// own cap from. Note the semantics shift under derivation: each
-    /// deriving class gets this value as its *own* cap, so per-class
-    /// shed/degrade thresholds match the old shared-queue behaviour
-    /// exactly, but the total buffered across N classes is now bounded
-    /// by `N * queue_capacity` rather than `queue_capacity` (the legacy
-    /// bound was shared across both priority queues). Deployments that
-    /// need a tight total memory bound should set `QosClass::capacity`
-    /// explicitly.
-    pub queue_capacity: usize,
     /// What happens when a request's class queue is full.
     pub policy: AdmissionPolicy,
     /// Dispatcher threads — also the in-flight bound on the wrapped
@@ -164,7 +128,6 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             classes: default_two_class(),
-            queue_capacity: 64,
             policy: AdmissionPolicy::Block,
             dispatchers: 4,
             aging: Duration::from_millis(10),
@@ -285,7 +248,7 @@ impl FftCompute for ServiceHandle {
 /// One admitted-but-not-yet-dispatched request (the scheduler core
 /// carries class, deadline and enqueue time).
 struct Pending {
-    input: Vec<(f32, f32)>,
+    input: JobSlot,
     /// Effective degrade level decided at admission (queue-driven level
     /// merged with the controller's operating level, floor-clamped).
     level: DegradeLevel,
@@ -576,11 +539,10 @@ impl TrafficServer {
                 return Err(anyhow!("duplicate QoS class name `{}`", a.name));
             }
         }
-        let caps = resolve_capacities(&cfg.classes, cfg.queue_capacity);
+        let caps: Vec<usize> = cfg.classes.iter().map(|c| c.capacity).collect();
         if let Some(i) = caps.iter().position(|&c| c == 0) {
             return Err(anyhow!(
-                "class `{}` has no queue capacity: set QosClass::capacity or the \
-                 (deprecated) shared ServerConfig::queue_capacity",
+                "class `{}` has a zero queue capacity: set QosClass::with_capacity",
                 cfg.classes[i].name
             ));
         }
@@ -762,24 +724,6 @@ impl TrafficServer {
         Ok(rx)
     }
 
-    /// Deprecated pre-[`FftRequest`] submit surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use request(FftRequest::new(input).with_class(opts.class))"
-    )]
-    #[allow(deprecated)]
-    pub fn submit(
-        &self,
-        input: Vec<(f32, f32)>,
-        opts: RequestOpts,
-    ) -> std::result::Result<Receiver<ServerResult>, ServiceError> {
-        let mut req = FftRequest::new(input).with_class(opts.class);
-        if let Some(d) = opts.deadline {
-            req = req.with_deadline(d);
-        }
-        self.request(req)
-    }
-
     /// Queued (admitted, not yet dispatched) requests right now, all
     /// classes.
     pub fn queue_depth(&self) -> usize {
@@ -803,8 +747,8 @@ impl TrafficServer {
         &self.cfg
     }
 
-    /// Resolved per-class queue capacities (explicit, or derived from
-    /// the deprecated shared `queue_capacity`).
+    /// Per-class queue capacities, as configured on each
+    /// [`QosClass`].
     pub fn class_capacities(&self) -> &[usize] {
         &self.caps
     }
@@ -906,7 +850,7 @@ fn dispatcher_loop(
         }
 
         let t0 = Instant::now();
-        let mut freq = FftRequest::new(req.input).with_level(req.level);
+        let mut freq = FftRequest::with_input_slot(req.input).with_level(req.level);
         if let Some(d) = deadline {
             // Remaining budget rides the request so a decomposed large
             // transform can be preempted at its between-pass checkpoint
@@ -1037,10 +981,13 @@ mod tests {
                 FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap(),
             )
         };
-        // underivable capacity (legacy shared cap 0, class caps unset)
+        // a class configured with zero queue capacity is rejected
         assert!(TrafficServer::start(
             pool(),
-            ServerConfig { queue_capacity: 0, ..Default::default() }
+            ServerConfig {
+                classes: vec![QosClass::new("zero", 1).with_capacity(0)],
+                ..Default::default()
+            }
         )
         .is_err());
         assert!(TrafficServer::start(
@@ -1061,12 +1008,11 @@ mod tests {
             }
         )
         .is_err());
-        // explicit class caps make the shared capacity irrelevant
+        // builder-default capacities need no explicit override
         assert!(TrafficServer::start(
             pool(),
             ServerConfig {
                 classes: vec![QosClass::new("only", 1).with_capacity(4)],
-                queue_capacity: 0,
                 ..Default::default()
             }
         )

@@ -9,11 +9,15 @@
 //! the cold executor maps behind it — become the bottleneck. This
 //! module is the replicated deployment:
 //!
-//! * **one queue per shard** — each shard owns a private channel and a
-//!   worker thread with one resident simulated SM, so dispatch never
-//!   takes a shared lock on the hot path (routing takes a read lock on
-//!   the epoch-versioned table, which is uncontended unless the pool is
-//!   resizing);
+//! * **one queue per shard** — each shard owns a private bounded SPSC
+//!   ring ([`super::buffer::JobRing`]: one producer, the dispatcher;
+//!   one consumer, the shard worker — no per-send heap node, unlike an
+//!   `mpsc` channel) and a worker thread with one resident simulated
+//!   SM, so dispatch never takes a shared lock on the hot path (routing
+//!   takes a read lock on the epoch-versioned table, which is
+//!   uncontended unless the pool is resizing). The drain-on-retire
+//!   path keeps its `mpsc` channel: it runs once per retirement, off
+//!   the hot path;
 //! * **size-affinity routing** — a given transform size always has the
 //!   same *home* shard within a routing epoch, keeping that shard's
 //!   resident [`crate::sim::FftExecutor`] warm (twiddles stay uploaded,
@@ -65,6 +69,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::buffer::{JobRing, JobSlot};
 use super::metrics::ShardStat;
 use super::request::{self, FftCompute, FftRequest};
 use super::{
@@ -89,6 +94,12 @@ pub struct ShardPoolConfig {
     /// Minimum same-size group length per chunk when a coalesced batch
     /// is split across shards.
     pub min_chunk: usize,
+    /// Capacity of each shard's bounded SPSC job ring (in jobs — a
+    /// batch chunk counts as one). A dispatcher hitting a full ring
+    /// blocks until the worker pops, which is backpressure, not loss;
+    /// the frontend's admission queues bound how much can ever pile up
+    /// here.
+    pub ring_capacity: usize,
     /// Per-shard service settings. `cores` is ignored: each shard runs
     /// exactly one resident-SM worker.
     pub service: ServiceConfig,
@@ -100,6 +111,7 @@ impl Default for ShardPoolConfig {
             shards: 0,
             steal_threshold: 2,
             min_chunk: 8,
+            ring_capacity: 1024,
             service: ServiceConfig::default(),
         }
     }
@@ -129,7 +141,7 @@ struct ShardCounters {
 /// drain channel queued jobs come back through at retirement.
 struct ShardSlot {
     id: usize,
-    tx: Sender<Job>,
+    ring: Arc<JobRing<Job>>,
     counters: Arc<ShardCounters>,
     retiring: Arc<AtomicBool>,
     /// Receiver for jobs the worker hands back during retirement. The
@@ -189,7 +201,7 @@ impl RoutingState {
 struct ShardWorker {
     id: usize,
     cfg: ServiceConfig,
-    rx: Receiver<Job>,
+    ring: Arc<JobRing<Job>>,
     metrics: Arc<Metrics>,
     engine: Option<PjrtHandle>,
     plans: Arc<PlanCache>,
@@ -250,7 +262,7 @@ impl ShardedFftService {
                 let (handle, join) = spawn_pjrt_server(&cfg.service.artifacts_dir)?;
                 (Some(handle), Some(join))
             }
-            Backend::Simulator => (None, None),
+            Backend::Simulator | Backend::Noop => (None, None),
         };
         let mp_gate = request::MultipassGate::new(cfg.service.max_inflight_multipass);
         let svc = ShardedFftService {
@@ -283,14 +295,14 @@ impl ShardedFftService {
     /// decides when (and under which epoch) the slot joins the table.
     fn spawn_slot(&self) -> ShardSlot {
         let id = self.next_shard_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = channel::<Job>();
+        let ring = Arc::new(JobRing::new(self.cfg.ring_capacity));
         let (drain_tx, drain_rx) = channel::<Job>();
         let counters = Arc::new(ShardCounters::default());
         let retiring = Arc::new(AtomicBool::new(false));
         let worker = ShardWorker {
             id,
             cfg: self.cfg.service.clone(),
-            rx,
+            ring: Arc::clone(&ring),
             metrics: Arc::clone(&self.metrics),
             engine: self.engine.clone(),
             plans: Arc::clone(&self.plans),
@@ -301,7 +313,7 @@ impl ShardedFftService {
         let handle = std::thread::spawn(move || shard_loop(worker));
         ShardSlot {
             id,
-            tx,
+            ring,
             counters,
             retiring,
             drain: Mutex::new(drain_rx),
@@ -367,10 +379,10 @@ impl ShardedFftService {
             self.draining.lock().unwrap().push((slot.id, Arc::clone(&slot.counters)));
             slot
         };
-        let ShardSlot { id, tx, counters, drain, worker, .. } = slot;
-        // Closing the queue wakes the worker; with the retiring flag
+        let ShardSlot { id, ring, counters, drain, worker, .. } = slot;
+        // Closing the ring wakes the worker; with the retiring flag
         // set it hands queued jobs back instead of serving them.
-        drop(tx);
+        ring.close();
         let drain = drain.into_inner().unwrap();
         while let Ok(job) = drain.recv() {
             let weight = job.weight();
@@ -418,7 +430,9 @@ impl ShardedFftService {
             c.stolen.fetch_add(jobs, Ordering::Relaxed);
             self.steals.fetch_add(jobs, Ordering::Relaxed);
         }
-        if let Err(std::sync::mpsc::SendError(job)) = rt.slots[pos].tx.send(job) {
+        // A full ring blocks here (backpressure); `Err` means the ring
+        // was closed under us — the worker is gone, fail the job typed.
+        if let Err(job) = rt.slots[pos].ring.push(job) {
             c.depth.fetch_sub(jobs as usize, Ordering::Relaxed);
             fail_job(job);
         }
@@ -448,8 +462,7 @@ impl ShardedFftService {
     /// Submit a set of requests and wait for every result, in
     /// submission order. Same-size Full-level requests within the pass
     /// ceiling coalesce into per-size batch chunks spread across the
-    /// pool (see [`ShardedFftService::request_all`] chunking notes on
-    /// the deprecated [`ShardedFftService::submit_batch`]); degraded or
+    /// pool (see the chunking notes on `enqueue_batch`); degraded or
     /// above-ceiling requests are served individually. Output bits are
     /// identical to sequential [`ShardedFftService::request`] calls.
     pub fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
@@ -461,31 +474,11 @@ impl ShardedFftService {
         )
     }
 
-    /// Deprecated pre-[`FftRequest`] single-submit surface.
-    #[deprecated(since = "0.3.0", note = "use request(FftRequest::new(input))")]
-    pub fn submit(&self, input: Vec<(f32, f32)>) -> Receiver<Result<FftResult>> {
-        self.enqueue(input, super::qos::DegradeLevel::Full)
-    }
-
-    /// Deprecated pre-[`FftRequest`] degraded-submit surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use request(FftRequest::new(input).with_level(level))"
-    )]
-    pub fn submit_degraded(
-        &self,
-        input: Vec<(f32, f32)>,
-        level: super::qos::DegradeLevel,
-    ) -> Receiver<Result<FftResult>> {
-        self.enqueue(input, level)
-    }
-
-    /// Route and queue one single job at `level` (the old
-    /// `submit_degraded` body; the unified
-    /// [`ShardedFftService::request`] fronts it now).
+    /// Route and queue one single job at `level` (the unified
+    /// [`ShardedFftService::request`] fronts it).
     fn enqueue(
         &self,
-        input: Vec<(f32, f32)>,
+        input: JobSlot,
         level: super::qos::DegradeLevel,
     ) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
@@ -507,17 +500,8 @@ impl ShardedFftService {
         reply_rx
     }
 
-    /// Deprecated pre-[`FftRequest`] batch surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use request_all(inputs.into_iter().map(FftRequest::new).collect())"
-    )]
-    pub fn submit_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
-        self.enqueue_batch(inputs)
-    }
-
-    /// Batched dispatch across the shard pool (the old `submit_batch`
-    /// body; [`ShardedFftService::request_all`] fronts it now):
+    /// Batched dispatch across the shard pool
+    /// ([`ShardedFftService::request_all`] fronts it):
     /// coalesce `inputs` into per-size groups exactly as the
     /// single-queue pool, then split each group into up to one chunk
     /// per shard (chunks of at least `min_chunk` jobs). The first chunk
@@ -530,7 +514,7 @@ impl ShardedFftService {
     /// path. This is also what gives one decomposed large transform its
     /// cross-shard pipeline: every multi-pass stage arrives here as one
     /// same-size group and fans out over the pool.
-    fn enqueue_batch(&self, inputs: Vec<Vec<(f32, f32)>>) -> Result<Vec<FftResult>> {
+    fn enqueue_batch(&self, inputs: Vec<JobSlot>) -> Result<Vec<FftResult>> {
         let n = inputs.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -538,7 +522,7 @@ impl ShardedFftService {
         let ids: Vec<u64> =
             (0..n).map(|_| self.next_id.fetch_add(1, Ordering::Relaxed)).collect();
         let groups = coalesce_by_size(&inputs);
-        let mut inputs: Vec<Option<Vec<(f32, f32)>>> = inputs.into_iter().map(Some).collect();
+        let mut inputs: Vec<Option<JobSlot>> = inputs.into_iter().map(Some).collect();
         let mut pending = Vec::new();
         {
             let rt = self.routing.read().unwrap();
@@ -550,7 +534,7 @@ impl ShardedFftService {
                 let spread = chunks.len() > 1;
                 for (ci, chunk) in chunks.into_iter().enumerate() {
                     let batch_ids: Vec<u64> = chunk.iter().map(|&i| ids[i]).collect();
-                    let batch_inputs: Vec<Vec<(f32, f32)>> = chunk
+                    let batch_inputs: Vec<JobSlot> = chunk
                         .iter()
                         .map(|&i| inputs[i].take().expect("each input consumed once"))
                         .collect();
@@ -637,9 +621,9 @@ impl ShardedFftService {
         &self.cfg
     }
 
-    /// Drop every shard's queue sender and join the workers (each one
-    /// serves its remaining queue before exiting), then join the PJRT
-    /// server if one is running.
+    /// Close every shard's ring and join the workers (each one serves
+    /// its remaining queue before exiting), then join the PJRT server
+    /// if one is running.
     fn stop_all(&mut self) {
         let slots = {
             let mut rt = self.routing.write().unwrap();
@@ -648,7 +632,7 @@ impl ShardedFftService {
         };
         let mut handles = Vec::with_capacity(slots.len());
         for slot in slots {
-            drop(slot.tx); // closes the queue
+            slot.ring.close(); // remaining jobs drain before the worker exits
             if let Some(h) = slot.worker {
                 handles.push(h);
             }
@@ -779,9 +763,9 @@ fn stat_of(id: usize, c: &ShardCounters, elapsed_us: u64, retired: bool) -> Shar
 /// shard's retiring flag is set, every remaining queued job is handed
 /// back through the drain channel for `retire_shard` to re-route.
 fn shard_loop(w: ShardWorker) {
-    let ShardWorker { id, cfg, rx, metrics, engine, plans, counters, retiring, drain } = w;
+    let ShardWorker { id, cfg, ring, metrics, engine, plans, counters, retiring, drain } = w;
     let mut core = Core { id, cfg, plans, execs: HashMap::new(), tick: 0 };
-    while let Ok(job) = rx.recv() {
+    while let Some(job) = ring.pop() {
         if retiring.load(Ordering::Acquire) {
             // Hand queued work back to the router instead of serving it
             // on a shard that is leaving the pool.

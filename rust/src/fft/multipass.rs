@@ -190,6 +190,33 @@ pub fn transpose(rows: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<Vec<(f32
     (0..n2).map(|k| (0..n1).map(|r| rows[r][k]).collect()).collect()
 }
 
+/// [`transpose`] without the second grid copy: the stage-1 output
+/// buffers are reused as stage-2 input buffers. The leading n1×n1
+/// block is swap-transposed element by element; only the n2−n1 extra
+/// columns of a rectangular plan (balanced plans have n2/n1 ∈ {1, 2},
+/// so at most half the grid) are gathered into fresh rows, and each
+/// reused row is truncated from n2 to n1 points. On return `rows` holds
+/// the n2 column vectors in column order.
+pub fn transpose_in_place(rows: &mut Vec<Vec<(f32, f32)>>, plan: &MultipassPlan) {
+    let (n1, n2) = (plan.row_jobs, plan.row_points);
+    debug_assert_eq!(rows.len(), n1);
+    // Columns n1..n2 have no destination row inside the square block;
+    // gather them before truncation discards their elements. The block
+    // swap below never touches column indices >= n1, so order is safe.
+    let extras: Vec<Vec<(f32, f32)>> =
+        (n1..n2).map(|k| (0..n1).map(|r| rows[r][k]).collect()).collect();
+    for r in 0..n1 {
+        for c in (r + 1)..n1 {
+            let (a, b) = rows.split_at_mut(c);
+            std::mem::swap(&mut a[r][c], &mut b[0][r]);
+        }
+    }
+    for row in rows.iter_mut() {
+        row.truncate(n1);
+    }
+    rows.extend(extras);
+}
+
 /// Recompose the output: element `k1` of column `k2` lands at
 /// `k2 + n2·k1` (the four-step output interleave).
 pub fn scatter(cols: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<(f32, f32)> {
@@ -230,7 +257,10 @@ pub fn run_with<E>(
     }
     apply_twiddles(&mut rows, twiddles, plan);
     between_passes()?;
-    let cols = batch_fft(transpose(&rows, plan), Stage::Cols)?;
+    // The scaled stage-1 buffers become the stage-2 inputs in place —
+    // no second grid copy between the passes.
+    transpose_in_place(&mut rows, plan);
+    let cols = batch_fft(rows, Stage::Cols)?;
     assert_eq!(cols.len(), plan.col_jobs(), "stage 2 must return one output per column job");
     for col in &cols {
         assert_eq!(col.len(), plan.col_points(), "stage 2 outputs must keep their size");
@@ -396,6 +426,23 @@ mod tests {
         );
         assert_eq!(got, Err("preempted"));
         assert!(!stage2, "stage 2 must not run after a failed checkpoint");
+    }
+
+    /// The buffer-reusing transpose must agree element-for-element with
+    /// the copying transpose, for square and rectangular (1:2) plans.
+    #[test]
+    fn in_place_transpose_matches_the_copying_transpose() {
+        for (points, ceiling) in [(1024usize, 64usize), (8192, 4096)] {
+            // 1024/64: 32 x 32 (square); 8192/4096: 64 x 128 (1:2)
+            let plan = MultipassPlan::new(points, ceiling).unwrap();
+            let input: Vec<(f32, f32)> =
+                test_signal(points, 9).iter().map(|c| c.to_f32_pair()).collect();
+            let rows = gather_rows(&input, &plan);
+            let want = transpose(&rows, &plan);
+            let mut got = rows;
+            transpose_in_place(&mut got, &plan);
+            assert_eq!(got, want);
+        }
     }
 
     #[test]

@@ -433,12 +433,16 @@ fn run() -> Result<()> {
                 .transpose()?
                 .unwrap_or_default();
             // an explicit mix without explicit classes gets one
-            // equal-weight class per fraction
+            // equal-weight class per fraction; --queue-capacity sets the
+            // per-class cap on derived classes (an explicit --qos-classes
+            // spec carries its own capacities)
             let classes = match classes {
                 Some(c) => Some(c),
                 None if !class_mix.is_empty() => Some(
                     (0..class_mix.len())
-                        .map(|i| QosClass::new(&format!("class{i}"), 1))
+                        .map(|i| {
+                            QosClass::new(&format!("class{i}"), 1).with_capacity(queue_capacity)
+                        })
                         .collect(),
                 ),
                 None => None,
@@ -450,15 +454,19 @@ fn run() -> Result<()> {
                 ..Default::default()
             })?);
             let mut server_cfg = ServerConfig {
-                queue_capacity,
                 policy,
                 dispatchers,
                 aging: Duration::from_secs_f64(aging_ms / 1e3),
                 ..Default::default()
             };
-            if let Some(classes) = classes {
-                server_cfg.classes = classes;
-            }
+            server_cfg.classes = match classes {
+                Some(c) => c,
+                None => server_cfg
+                    .classes
+                    .into_iter()
+                    .map(|c| c.with_capacity(queue_capacity))
+                    .collect(),
+            };
             let server = TrafficServer::start(inner, server_cfg)?;
             let cfg = LoadgenConfig {
                 pattern,
@@ -519,7 +527,7 @@ fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
     })?);
     let server = TrafficServer::start(
         inner,
-        ServerConfig { classes, policy, queue_capacity: 256, ..Default::default() },
+        ServerConfig { classes, policy, ..Default::default() },
     )?;
     let input: Vec<(f32, f32)> =
         reference::test_signal(points, 11).iter().map(|c| c.to_f32_pair()).collect();
@@ -688,15 +696,14 @@ fn serve_autoscale(f: &HashMap<String, String>) -> Result<()> {
         }
         None => sharded,
     };
-    let server = TrafficServer::start(
-        inner,
-        ServerConfig {
-            queue_capacity,
-            policy: AdmissionPolicy::Shed,
-            dispatchers: (2 * max_shards).max(4),
-            ..Default::default()
-        },
-    )?;
+    let mut server_cfg = ServerConfig {
+        policy: AdmissionPolicy::Shed,
+        dispatchers: (2 * max_shards).max(4),
+        ..Default::default()
+    };
+    server_cfg.classes =
+        server_cfg.classes.into_iter().map(|c| c.with_capacity(queue_capacity)).collect();
+    let server = TrafficServer::start(inner, server_cfg)?;
     let max_degrade: DegradeLevel = f
         .get("degrade")
         .map(|s| s.parse())

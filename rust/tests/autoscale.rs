@@ -14,9 +14,9 @@
 use std::time::Duration;
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, FftRequest,
-    FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle, ShardPoolConfig,
-    ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend,
+    FftRequest, FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceHandle,
+    ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -68,7 +68,7 @@ fn step_overload_scales_up_and_recovers_below_slo() {
     let server = TrafficServer::start(
         ServiceHandle::Sharded(svc),
         ServerConfig {
-            queue_capacity: 128,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(128)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 8,
             ..Default::default()
@@ -148,7 +148,7 @@ fn scale_down_under_light_load_drops_no_jobs() {
     let server = TrafficServer::start(
         ServiceHandle::Sharded(svc),
         ServerConfig {
-            queue_capacity: 128,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(128)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 8,
             ..Default::default()

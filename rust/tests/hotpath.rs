@@ -1,0 +1,210 @@
+//! Integration tests for the zero-copy hot path: arena-backed job
+//! buffers and the SPSC shard rings.
+//!
+//! The contract under test, end to end:
+//!
+//! * **Bitwise identity** — a request whose payload arrives in a leased
+//!   [`JobSlot`] produces exactly the same bits as the same payload
+//!   submitted through `FftRequest::new(Vec)`, on the pool service, the
+//!   sharded service, and a routed [`BackendSet`].
+//! * **Graceful exhaustion** — an arena out of free slots falls back to
+//!   heap-backed slots: requests are never rejected and the service
+//!   never deadlocks, the misses just show up in [`ArenaStats`].
+//! * **Ring semantics** — [`JobRing`] is FIFO, blocks producers instead
+//!   of dropping when full, and drains completely after `close`.
+//! * **Lossless resize** — retiring a shard mid-burst loses no queued
+//!   job: every submitted request still gets its (correct) answer.
+
+use egpu_fft::coordinator::{
+    Backend, BackendSet, BackendSetConfig, FftRequest, FftService, JobArena, JobRing, JobSlot,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService,
+};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+fn bits(v: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+}
+
+fn pool(cores: usize) -> FftService {
+    FftService::start(ServiceConfig {
+        cores,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn sharded(shards: usize) -> ShardedFftService {
+    ShardedFftService::start(ShardPoolConfig {
+        shards,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// The slot path must be bitwise identical to the Vec path on every
+/// service shape — zero-copy is a plumbing change, not a numeric one.
+#[test]
+fn slot_requests_match_vec_requests_bitwise() {
+    let inputs: Vec<Vec<(f32, f32)>> = (0..6).map(|i| signal(512, 40 + i)).collect();
+
+    // Reference outputs through the plain Vec constructor, pool service.
+    let svc = pool(1);
+    let want: Vec<Vec<(u32, u32)>> = inputs
+        .iter()
+        .map(|x| {
+            let r = svc.request(FftRequest::new(x.clone())).recv().unwrap().unwrap();
+            bits(&r.output)
+        })
+        .collect();
+    svc.shutdown();
+
+    // Pool, slot path.
+    let svc = pool(2);
+    for (x, w) in inputs.iter().zip(&want) {
+        let slot = JobArena::global().lease_copy(x);
+        let r = svc.request(FftRequest::with_input_slot(slot)).recv().unwrap().unwrap();
+        assert_eq!(bits(&r.output), *w, "pool slot path diverged");
+    }
+    svc.shutdown();
+
+    // Sharded, slot path.
+    let svc = sharded(2);
+    for (x, w) in inputs.iter().zip(&want) {
+        let slot = JobArena::global().lease_copy(x);
+        let r = svc.request(FftRequest::with_input_slot(slot)).recv().unwrap().unwrap();
+        assert_eq!(bits(&r.output), *w, "sharded slot path diverged");
+    }
+    svc.shutdown();
+
+    // Routed (no alternates registered: the pure simulator route).
+    let set = BackendSet::new(ServiceHandle::Pool(pool(1)), BackendSetConfig::default()).unwrap();
+    for (x, w) in inputs.iter().zip(&want) {
+        let slot = JobArena::global().lease_copy(x);
+        let r = set.request(FftRequest::with_input_slot(slot)).recv().unwrap().unwrap();
+        assert_eq!(bits(&r.output), *w, "routed slot path diverged");
+    }
+    set.shutdown();
+}
+
+/// A dedicated arena with fewer slots than in-flight payloads must fall
+/// back to heap-backed slots — never reject, never deadlock — and the
+/// fallbacks must be visible as lease misses.
+#[test]
+fn arena_exhaustion_falls_back_to_heap_and_serves_everything() {
+    let arena = JobArena::new(2, 1024);
+    let input = signal(1024, 3);
+
+    // Hold more leased slots than the arena owns, all at once.
+    let slots: Vec<JobSlot> = (0..10).map(|_| arena.lease_copy(&input)).collect();
+    let s = arena.snapshot();
+    assert_eq!(s.lease_hits, 2, "only the pooled slots are hits");
+    assert_eq!(s.lease_misses, 8, "the overflow leases are heap fallbacks");
+    assert_eq!(s.in_use, 2, "heap fallbacks do not occupy arena slots");
+    for slot in &slots {
+        assert_eq!(&slot[..], &input[..], "fallback slots carry the same payload");
+    }
+
+    // All ten serve concurrently and come back identical.
+    let svc = pool(2);
+    let want = {
+        let r = svc.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+        bits(&r.output)
+    };
+    let pending: Vec<_> = slots
+        .into_iter()
+        .map(|slot| svc.request(FftRequest::with_input_slot(slot)))
+        .collect();
+    for rx in pending {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(bits(&r.output), want, "exhaustion path changed the numerics");
+    }
+    svc.shutdown();
+
+    // Every pooled slot came home.
+    let s = arena.snapshot();
+    assert_eq!(s.in_use, 0, "all arena slots released after the replies dropped");
+}
+
+/// FIFO order through the ring, including across a blocking producer,
+/// and complete drain after close.
+#[test]
+fn job_ring_is_fifo_and_drains_after_close() {
+    // Single-threaded FIFO.
+    let ring: JobRing<u64> = JobRing::new(8);
+    for v in 0..8 {
+        ring.push(v).unwrap();
+    }
+    for v in 0..8 {
+        assert_eq!(ring.pop(), Some(v), "FIFO order");
+    }
+
+    // A producer past capacity blocks until the consumer makes room,
+    // and order is still FIFO end to end.
+    let ring = std::sync::Arc::new(JobRing::<u64>::new(4));
+    let producer = {
+        let ring = ring.clone();
+        std::thread::spawn(move || {
+            for v in 0..64u64 {
+                // push blocks while the ring is full; Err means closed,
+                // which must not happen mid-stream
+                ring.push(v).expect("ring closed under the producer");
+            }
+            ring.close();
+        })
+    };
+    let mut got = Vec::new();
+    while let Some(v) = ring.pop() {
+        got.push(v);
+    }
+    producer.join().unwrap();
+    assert_eq!(got, (0..64).collect::<Vec<u64>>(), "blocking producer kept FIFO order");
+
+    // After close, pushes fail and hand the item back.
+    assert_eq!(ring.push(99), Err(99));
+    assert_eq!(ring.pop(), None, "drained ring stays empty after close");
+}
+
+/// Retiring a shard while a burst is in flight must lose nothing: the
+/// retiring worker drains its ring and the pool re-routes the drained
+/// jobs, so every request is answered, correctly.
+#[test]
+fn retire_under_load_loses_no_jobs() {
+    let svc = sharded(2);
+    let inputs: Vec<Vec<(f32, f32)>> = (0..48).map(|i| signal(256, 70 + i)).collect();
+    let want: Vec<Vec<(u32, u32)>> = {
+        let reference = pool(1);
+        let w = inputs
+            .iter()
+            .map(|x| {
+                let r = reference.request(FftRequest::new(x.clone())).recv().unwrap().unwrap();
+                bits(&r.output)
+            })
+            .collect();
+        reference.shutdown();
+        w
+    };
+
+    let pending: Vec<_> = inputs
+        .iter()
+        .map(|x| {
+            let slot = JobArena::global().lease_copy(x);
+            svc.request(FftRequest::with_input_slot(slot))
+        })
+        .collect();
+    // Retire one shard while the burst is queued/in flight.
+    svc.retire_shard().unwrap();
+    assert_eq!(svc.shards(), 1);
+
+    for (rx, w) in pending.into_iter().zip(&want) {
+        let r = rx.recv().expect("reply channel alive").expect("job served");
+        assert_eq!(bits(&r.output), *w, "post-retire output diverged");
+    }
+    svc.shutdown();
+}

@@ -24,8 +24,9 @@
 use std::sync::Arc;
 
 use egpu_fft::coordinator::{
-    AdmissionPolicy, Backend, DegradeLevel, FftRequest, FftService, ServerConfig, ServiceConfig,
-    ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    default_two_class, AdmissionPolicy, Backend, DegradeLevel, FftRequest, FftService,
+    ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService,
+    TrafficServer,
 };
 use egpu_fft::fft::{self, multipass, reference, MultipassPlan};
 
@@ -204,7 +205,7 @@ fn quarter_level_large_request_truncates_before_decomposition() {
     let server = TrafficServer::start(
         inner,
         ServerConfig {
-            queue_capacity: 1,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(1)).collect(),
             policy: AdmissionPolicy::Degrade,
             dispatchers: 1,
             min_degraded_points: 256,
@@ -250,7 +251,7 @@ fn large_request_saturates_its_class_queue_then_drains() {
     let server = TrafficServer::start(
         inner,
         ServerConfig {
-            queue_capacity: 8,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(8)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()

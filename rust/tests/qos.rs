@@ -15,14 +15,16 @@
 //!     promotion, and outputs bitwise identical to the direct execution
 //!     service;
 //! (d) per-class capacities: explicit caps are honored independently,
-//!     unset caps derive from the deprecated shared `queue_capacity`.
+//!     and classes built without one carry the builder default
+//!     (`DEFAULT_CLASS_CAPACITY`).
 
 use std::time::{Duration, Instant};
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend, DegradeLevel,
-    FftRequest, FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig, ServiceError,
-    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, AutoscaleController, AutoscalePolicy, Backend,
+    DegradeLevel, FftRequest, FftService, LoadgenConfig, QosClass, ServerConfig, ServiceConfig,
+    ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
+    DEFAULT_CLASS_CAPACITY,
 };
 use egpu_fft::fft::reference;
 
@@ -136,7 +138,7 @@ fn short_burst_degrades_without_scaling_and_restores_after() {
     let server = TrafficServer::start(
         ServiceHandle::Sharded(svc),
         ServerConfig {
-            queue_capacity: 128,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(128)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 8,
             ..Default::default()
@@ -215,7 +217,6 @@ fn two_class_config_outputs_bitwise_match_direct_service() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 64,
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()
@@ -251,7 +252,7 @@ fn two_class_aging_still_promotes_low_under_backlog() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 4096,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(4096)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             aging: Duration::from_millis(10),
@@ -294,24 +295,23 @@ fn two_class_aging_still_promotes_low_under_backlog() {
 }
 
 /// (d) Per-class capacities: an explicit cap sheds independently while
-/// a sibling class (deriving the shared legacy cap) still admits — and
-/// the resolved caps are observable.
+/// a sibling class (carrying the builder default) still admits — and
+/// the configured caps are observable.
 #[test]
-fn explicit_and_derived_class_capacities_coexist() {
+fn explicit_and_default_class_capacities_coexist() {
     let server = pool_server(
         1,
         ServerConfig {
             classes: vec![
                 QosClass::new("tiny", 1).with_capacity(2),
-                QosClass::new("roomy", 1), // derives queue_capacity
+                QosClass::new("roomy", 1), // builder default capacity
             ],
-            queue_capacity: 64,
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()
         },
     );
-    assert_eq!(server.class_capacities(), &[2, 64]);
+    assert_eq!(server.class_capacities(), &[2, DEFAULT_CLASS_CAPACITY]);
     // hold the dispatcher down so queues fill
     let slow = server.request(FftRequest::new(signal(4096, 0)).with_class(1)).unwrap();
     let input = signal(256, 1);
@@ -328,7 +328,7 @@ fn explicit_and_derived_class_capacities_coexist() {
         }
     }
     assert!(tiny_shed >= 1, "the 2-slot class sheds");
-    // the sibling with the derived 64-slot cap still admits everything
+    // the sibling with the default 64-slot cap still admits everything
     let roomy_handles: Vec<_> = (0..16)
         .map(|_| {
             server

@@ -10,9 +10,9 @@
 use std::time::Duration;
 
 use egpu_fft::coordinator::{
-    loadgen, AdmissionPolicy, ArrivalPattern, Backend, DegradeLevel, FftRequest, FftService,
-    LoadgenConfig, ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig,
-    ShardedFftService, TrafficServer,
+    default_two_class, loadgen, AdmissionPolicy, ArrivalPattern, Backend, DegradeLevel,
+    FftRequest, FftService, LoadgenConfig, ServerConfig, ServiceConfig, ServiceError,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TrafficServer,
 };
 use egpu_fft::fft::reference;
 
@@ -58,7 +58,7 @@ fn shed_policy_returns_typed_queue_full_and_accounts_everything() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 2,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(2)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()
@@ -98,7 +98,7 @@ fn block_policy_serves_every_request_without_shedding() {
     let server = pool_server(
         2,
         ServerConfig {
-            queue_capacity: 2,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(2)).collect(),
             policy: AdmissionPolicy::Block,
             dispatchers: 2,
             ..Default::default()
@@ -122,7 +122,7 @@ fn queued_deadline_expiry_surfaces_typed_error_without_serving() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 16,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(16)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()
@@ -157,7 +157,7 @@ fn late_service_is_delivered_but_flagged_and_counted() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 16,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(16)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()
@@ -184,7 +184,7 @@ fn aged_low_priority_is_served_while_high_backlog_remains() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 8192,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(8192)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             aging,
@@ -231,7 +231,7 @@ fn degrade_policy_walks_the_ladder_under_pressure_and_sheds_at_the_limit() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 8,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(8)).collect(),
             policy: AdmissionPolicy::Degrade,
             dispatchers: 1,
             min_degraded_points: 256,
@@ -283,7 +283,7 @@ fn degraded_output_matches_reference_fft_of_truncated_signal() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 1,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(1)).collect(),
             policy: AdmissionPolicy::Degrade,
             dispatchers: 1,
             min_degraded_points: 256,
@@ -316,7 +316,7 @@ fn shutdown_drains_every_admitted_request() {
     let server = pool_server(
         1,
         ServerConfig {
-            queue_capacity: 16,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(16)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 1,
             ..Default::default()
@@ -352,7 +352,7 @@ fn loadgen_accounts_every_request_open_loop() {
     let server = TrafficServer::start(
         inner,
         ServerConfig {
-            queue_capacity: 32,
+            classes: default_two_class().into_iter().map(|c| c.with_capacity(32)).collect(),
             policy: AdmissionPolicy::Shed,
             dispatchers: 2,
             ..Default::default()
@@ -396,7 +396,7 @@ fn burst_pattern_stresses_the_queue_harder_than_poisson() {
         TrafficServer::start(
             inner,
             ServerConfig {
-                queue_capacity: 16,
+                classes: default_two_class().into_iter().map(|c| c.with_capacity(16)).collect(),
                 policy: AdmissionPolicy::Shed,
                 dispatchers: 2,
                 ..Default::default()
