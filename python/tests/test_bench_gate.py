@@ -1,6 +1,7 @@
 """Unit tests for the CI bench-regression gate
 (.github/scripts/bench_gate.py): pass/fail at the 15% threshold in both
-check directions, missing-key handling, and the --emit-ratchet output.
+check directions, missing-key handling, the --emit-ratchet output, and
+the standalone --merge-artifact baseline merge.
 
 The script lives outside any package (``.github`` is not importable),
 so it is loaded by file path.
@@ -28,7 +29,13 @@ bench_gate = _load()
 
 
 def baseline(
-    threshold=0.15, autoscale=True, qos=True, backend=True, largefft=True, hotpath=True
+    threshold=0.15,
+    autoscale=True,
+    qos=True,
+    backend=True,
+    largefft=True,
+    hotpath=True,
+    tenants=True,
 ):
     base = {
         "threshold": threshold,
@@ -55,6 +62,11 @@ def baseline(
         base["largefft"] = {"agg_mp_rps": 1.0}
     if hotpath:
         base["hotpath"] = {"ns_per_job_max": 100000.0}
+    if tenants:
+        base["tenants"] = {
+            "agg_tenant_rps": 50.0,
+            "p99_interference_max": 8.0,
+        }
     return base
 
 
@@ -93,6 +105,16 @@ def hotpath_rows(ns_per_job=50000.0):
     ]
 
 
+def tenants_rows(tenant_rps=100.0, interference=2.0):
+    """Per-tenant rows, the shape benches/tenants.rs emits (the victim
+    row carries the interference ratio; the abuser row reports 0 so the
+    gate's max() reads only the victim)."""
+    return [
+        {"tenant": "victim", "tenant_rps": tenant_rps / 2, "p99_interference": interference},
+        {"tenant": "abuser", "tenant_rps": tenant_rps * 2, "p99_interference": 0.0},
+    ]
+
+
 def backend_rows(routed_rps=200.0, overhead=0.1):
     """Per-config rows, the shape benches/backend.rs emits (pinned and
     routed throughput rows plus validation-sampling rows)."""
@@ -116,6 +138,8 @@ def files_for(
     overhead=0.1,
     mp_rps=2.0,
     ns_per_job=50000.0,
+    tenant_rps=100.0,
+    interference=2.0,
 ):
     return {
         "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
@@ -131,6 +155,9 @@ def files_for(
         ),
         "largefft": write_rows(tmp_path, "largefft.json", largefft_rows(mp_rps)),
         "hotpath": write_rows(tmp_path, "hotpath.json", hotpath_rows(ns_per_job)),
+        "tenants": write_rows(
+            tmp_path, "tenants.json", tenants_rows(tenant_rps, interference)
+        ),
     }
 
 
@@ -264,6 +291,57 @@ class TestThreshold:
         results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, overhead=0.45))
         assert by_key(results, "validate_overhead_max")["ok"]
 
+    def test_tenants_rows_aggregate_and_pass(self, tmp_path):
+        # geomean over the per-tenant adversarial completion rates; max
+        # over the interference rows reads only the victim (abuser = 0)
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path))
+        rps = by_key(results, "agg_tenant_rps")
+        assert rps["ok"]
+        assert rps["current"] == pytest.approx(100.0)  # sqrt(50 * 200)
+        assert rps["rows"] == 2
+        interference = by_key(results, "p99_interference_max")
+        assert interference["ok"]
+        assert interference["current"] == pytest.approx(2.0), "victim row only"
+
+    def test_tenants_throughput_floor_trips(self, tmp_path):
+        # geomean 40 is below the 50 * 0.85 committed floor
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, tenant_rps=40.0)
+        )
+        assert not by_key(results, "agg_tenant_rps")["ok"]
+        assert by_key(results, "p99_interference_max")["ok"], "isolation unaffected"
+
+    def test_tenants_interference_ceiling_trips(self, tmp_path):
+        # a 10x victim-p99 blowup breaches the 8.0 * 1.15 ceiling — the
+        # abuser leaked through the token bucket into the victim's queue
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, interference=10.0)
+        )
+        assert not by_key(results, "p99_interference_max")["ok"]
+        assert by_key(results, "agg_tenant_rps")["ok"], "throughput unaffected"
+        # 9.0 <= 9.2 stays inside
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, interference=9.0)
+        )
+        assert by_key(results, "p99_interference_max")["ok"]
+
+    def test_fully_starved_tenant_fails_the_floor(self, tmp_path):
+        # a tenant served nothing in the adversarial phase collapses the
+        # geomean to 0 — isolation that starves the victim is a failure
+        files = files_for(tmp_path)
+        files["tenants"] = write_rows(
+            tmp_path,
+            "starved_tenant.json",
+            [
+                {"tenant": "victim", "tenant_rps": 0.0, "p99_interference": 1.0},
+                {"tenant": "abuser", "tenant_rps": 500.0, "p99_interference": 0.0},
+            ],
+        )
+        results, _ = bench_gate.run_gate(baseline(), files)
+        r = by_key(results, "agg_tenant_rps")
+        assert r["current"] == 0.0
+        assert not r["ok"]
+
 
 class TestMissingInputs:
     def test_rows_missing_the_field_raise(self, tmp_path):
@@ -348,6 +426,27 @@ class TestMissingInputs:
         results, _ = bench_gate.run_gate(baseline(hotpath=False), files)
         assert all(r["section"] != "hotpath" for r in results)
 
+    def test_gated_tenants_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["tenants"] = None
+        with pytest.raises(SystemExit, match="no --tenants file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_ungated_tenants_section_is_skipped(self, tmp_path):
+        # pre-tenancy baselines carry no tenants section
+        files = files_for(tmp_path)
+        files["tenants"] = None
+        results, _ = bench_gate.run_gate(baseline(tenants=False), files)
+        assert all(r["section"] != "tenants" for r in results)
+
+    def test_tenants_rows_missing_interference_raise(self, tmp_path):
+        files = files_for(tmp_path)
+        files["tenants"] = write_rows(
+            tmp_path, "bad_tenants.json", [{"tenant": "victim", "tenant_rps": 10.0}]
+        )
+        with pytest.raises(SystemExit, match="lack the `p99_interference` field"):
+            bench_gate.run_gate(baseline(), files)
+
 
 class TestRatchet:
     def test_floor_ratchets_up_to_80_percent_of_observed(self, tmp_path):
@@ -422,6 +521,33 @@ class TestRatchet:
         r = by_key(results, "ns_per_job_max")
         assert bench_gate.suggest(r) == pytest.approx(50000.0), "1.25x observed"
 
+    def test_interference_ceiling_keeps_its_guard_band(self, tmp_path):
+        # near-perfect isolation (victim p99 barely moves under attack)
+        # must not ratchet the gate into demanding perfect isolation —
+        # scheduling jitter alone can push the ratio past 1x
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, interference=0.5)
+        )
+        r = by_key(results, "p99_interference_max")
+        assert bench_gate.suggest(r) == pytest.approx(3.0), "absolute guard minimum"
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, interference=4.0)
+        )
+        r = by_key(results, "p99_interference_max")
+        assert bench_gate.suggest(r) == pytest.approx(5.0), "1.25x observed"
+
+    def test_interference_ceiling_at_its_guard_is_never_stale(self, tmp_path):
+        # a committed 8.0 ceiling with 1x observed isolation is stale
+        # and actionable; once ratcheted to the 3.0 guard it is not
+        results, _ = bench_gate.run_gate(
+            baseline(), files_for(tmp_path, interference=1.0)
+        )
+        assert by_key(results, "p99_interference_max")["stale"]
+        base = baseline()
+        base["tenants"]["p99_interference_max"] = 3.0
+        results, _ = bench_gate.run_gate(base, files_for(tmp_path, interference=1.0))
+        assert not by_key(results, "p99_interference_max")["stale"]
+
     def test_ceiling_guard_is_stable_across_repeated_ratchets(self, tmp_path):
         # repeated lucky-zero observations must converge to the absolute
         # minimum, not decay geometrically toward zero
@@ -463,6 +589,8 @@ class TestMain:
             files["largefft"],
             "--hotpath",
             files["hotpath"],
+            "--tenants",
+            files["tenants"],
             *extra,
         ]
 
@@ -493,3 +621,97 @@ class TestMain:
         assert "## bench-gate" in text
         assert "stale" in text
         assert "shard.jobs_per_s" in text
+
+    def test_gate_mode_still_requires_the_tier1_bench_files(self, tmp_path, capsys):
+        # --shard/--loadtest are optional at the argparse layer (the
+        # merge mode needs neither) but gate mode must still demand them
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(baseline()))
+        with pytest.raises(SystemExit) as exc:
+            bench_gate.main(["--baseline", str(base_path)])
+        assert exc.value.code == 2
+        err = capsys.readouterr().err
+        assert "--shard" in err
+        assert "--loadtest" in err
+
+
+class TestMerge:
+    """The --merge-artifact mode: applying a downloaded
+    suggested-baseline onto the committed one, monotone in the gate's
+    favor."""
+
+    def test_floors_only_ever_rise(self):
+        committed = baseline()
+        suggested = baseline()
+        suggested["shard"]["agg_jobs_per_s"] = 400.0  # ratcheted up: take it
+        suggested["loadtest"]["agg_achieved_rps"] = 50.0  # lower: ignore it
+        merged, _ = bench_gate.merge_baselines(committed, suggested)
+        assert merged["shard"]["agg_jobs_per_s"] == pytest.approx(400.0)
+        assert merged["loadtest"]["agg_achieved_rps"] == pytest.approx(200.0)
+        assert committed["shard"]["agg_jobs_per_s"] == 100.0, "input untouched"
+
+    def test_ceilings_only_ever_fall_and_respect_the_guard(self):
+        committed = baseline()
+        suggested = baseline()
+        suggested["hotpath"]["ns_per_job_max"] = 50000.0  # tightened: take it
+        suggested["autoscale"]["shed_rate_after_max"] = 0.9  # looser: ignore it
+        # a suggested value below the absolute guard is clamped onto it
+        suggested["tenants"]["p99_interference_max"] = 0.1
+        merged, _ = bench_gate.merge_baselines(committed, suggested)
+        assert merged["hotpath"]["ns_per_job_max"] == pytest.approx(50000.0)
+        assert merged["autoscale"]["shed_rate_after_max"] == pytest.approx(0.5)
+        assert merged["tenants"]["p99_interference_max"] == pytest.approx(3.0)
+
+    def test_threshold_and_comment_keep_the_committed_values(self):
+        committed = baseline()
+        committed["_comment"] = "hand-written envelope rationale"
+        suggested = baseline(threshold=0.5)
+        suggested["_comment"] = "Suggested baseline emitted by --emit-ratchet"
+        merged, _ = bench_gate.merge_baselines(committed, suggested)
+        assert merged["threshold"] == 0.15
+        assert merged["_comment"] == "hand-written envelope rationale"
+
+    def test_unknown_keys_are_ignored_with_a_note(self):
+        committed = baseline()
+        suggested = baseline()
+        suggested["qos"]["made_up_metric"] = 7.0
+        suggested["bogus_section"] = "not even a dict"
+        merged, notes = bench_gate.merge_baselines(committed, suggested)
+        assert "made_up_metric" not in merged["qos"]
+        assert "bogus_section" not in merged
+        assert any("made_up_metric" in n for n in notes)
+        assert any("bogus_section" in n for n in notes)
+
+    def test_newly_gated_metrics_are_added_with_a_note(self):
+        # a committed baseline predating the tenants bench gains the
+        # section from the artifact instead of silently dropping it
+        committed = baseline(tenants=False)
+        suggested = baseline()
+        merged, notes = bench_gate.merge_baselines(committed, suggested)
+        assert merged["tenants"]["agg_tenant_rps"] == pytest.approx(50.0)
+        assert merged["tenants"]["p99_interference_max"] == pytest.approx(8.0)
+        assert any("tenants.agg_tenant_rps" in n for n in notes)
+
+    def test_main_merge_mode_prints_json_and_skips_the_gate(
+        self, tmp_path, monkeypatch, capsys
+    ):
+        # no bench files are given: merge mode must not try to gate
+        summary = tmp_path / "summary.md"
+        monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+        base_path = tmp_path / "baseline.json"
+        base_path.write_text(json.dumps(baseline()))
+        suggested = baseline()
+        suggested["shard"]["agg_jobs_per_s"] = 640.0
+        suggested["qos"]["made_up_metric"] = 1.0
+        art_path = tmp_path / "suggested.json"
+        art_path.write_text(json.dumps(suggested))
+        bench_gate.main(
+            ["--baseline", str(base_path), "--merge-artifact", str(art_path)]
+        )
+        captured = capsys.readouterr()
+        merged = json.loads(captured.out)
+        assert merged["shard"]["agg_jobs_per_s"] == pytest.approx(640.0)
+        assert "made_up_metric" in captured.err
+        text = summary.read_text()
+        assert "## bench-gate baseline merge" in text
+        assert '"agg_jobs_per_s": 640.0' in text

@@ -1,0 +1,255 @@
+//! Bench: multi-tenant isolation under an adversarial flood — the
+//! hard interference guarantee the CI gate enforces.
+//!
+//! Two phases on identical fresh two-shard servers, calibrated against
+//! this host's measured single-shard capacity so the flood means the
+//! same thing on fast and slow runners:
+//!
+//! * **solo**: the well-behaved victim tenant alone, offered well under
+//!   its token-bucket rate. Its queue-wait p99 is the interference
+//!   baseline.
+//! * **adversarial**: the same victim traffic, plus an abusive tenant
+//!   offered 10x its own bucket rate. The bucket must cap the abuser's
+//!   *admitted* rate at its contract, so the class queues never see the
+//!   flood and the victim's p99 barely moves.
+//!
+//! The headline number is `p99_interference` — the victim's
+//! adversarial-phase queue-wait p99 over its solo p99 (floored at 1ms:
+//! the log2-bucket recorder quantizes within 2x, so sub-millisecond
+//! baselines would turn quantization noise into ratio noise). The run
+//! itself hard-asserts the isolation contract: the ratio stays bounded,
+//! the victim is never throttled, the abuser is throttled heavily, and
+//! the abuser's admitted count respects rate x window + burst.
+//!
+//! ```sh
+//! cargo bench --bench tenants                      # full run
+//! cargo bench --bench tenants -- --quick           # CI-sized run
+//! cargo bench --bench tenants -- --json BENCH_tenants.json
+//! ```
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, Backend, LoadReport, LoadgenConfig, ServerConfig, ServiceConfig,
+    ServiceHandle, ShardPoolConfig, ShardedFftService, TenantSpec, TrafficServer,
+};
+use egpu_fft::fft::reference;
+
+/// The hard ceiling on the victim-p99 interference ratio, mirrored by
+/// the `tenants.p99_interference_max` gate in `BENCH_baseline.json`.
+const MAX_INTERFERENCE: f64 = 8.0;
+
+/// Floor for the solo p99 when forming the ratio, µs (defends the
+/// ratio against the recorder's 2x log2-bucket quantization).
+const SOLO_P99_FLOOR_US: f64 = 1000.0;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed)
+        .iter()
+        .map(|c| c.to_f32_pair())
+        .collect()
+}
+
+fn sharded(shards: usize) -> ShardedFftService {
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..8).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    svc
+}
+
+/// Measured single-shard fft1024 serving capacity on this host, jobs/s
+/// (shared library helper — same anchor as the qos/autoscale benches).
+fn calibrate_single_shard_rps() -> f64 {
+    ShardedFftService::calibrate_single_shard_rps(1024).unwrap()
+}
+
+/// The two-tenant contract both phases run under: the victim's bucket
+/// has comfortable headroom over its offered rate; the abuser's bucket
+/// caps it at half a shard no matter how hard it floods.
+fn tenant_roster(base_rps: f64) -> Vec<TenantSpec> {
+    vec![
+        TenantSpec::new("victim", 0.4 * base_rps, (0.4 * base_rps).ceil() as u64)
+            .with_priority(),
+        TenantSpec::new("abuser", 0.5 * base_rps, (0.1 * base_rps).ceil() as u64 + 1),
+    ]
+}
+
+/// One phase on a fresh two-shard server: `victim_rps` + `abuser_rps`
+/// offered open-loop for `duration`, split across the two tenants.
+fn run_phase(
+    label: &str,
+    base_rps: f64,
+    victim_rps: f64,
+    abuser_rps: f64,
+    duration: Duration,
+) -> LoadReport {
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(sharded(2)),
+        ServerConfig {
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 4,
+            tenants: tenant_roster(base_rps),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: victim_rps + abuser_rps,
+            duration,
+            sizes: vec![1024],
+            tenant_mix: vec![victim_rps, abuser_rps],
+            deadline: None,
+            ..Default::default()
+        },
+    );
+    println!("-- {label} --");
+    print!("{}", report.render());
+    assert!(report.accounted, "{label}: every request must be answered");
+    server.shutdown();
+    report
+}
+
+fn tenant<'a>(report: &'a LoadReport, name: &str) -> &'a loadgen::TenantLoadRow {
+    report
+        .per_tenant
+        .iter()
+        .find(|t| t.name == name)
+        .unwrap_or_else(|| panic!("tenant {name} missing from report"))
+}
+
+struct Row {
+    tenant: String,
+    tenant_rps: f64,
+    p99_interference: f64,
+    solo_p99_ms: f64,
+    adv_p99_ms: f64,
+    admitted: u64,
+    throttled: u64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let duration = if quick { Duration::from_millis(1500) } else { Duration::from_secs(4) };
+    let base_rps = calibrate_single_shard_rps();
+    let victim_rps = 0.25 * base_rps;
+    let abuser_limit = 0.5 * base_rps;
+    let abuser_rps = 10.0 * abuser_limit; // 10x its own bucket rate
+    println!(
+        "\n=== tenants: adversarial isolation (single-shard capacity ~{base_rps:.0} rps, \
+         victim {victim_rps:.0} rps, abuser {abuser_rps:.0} rps offered vs \
+         {abuser_limit:.0} rps contract{}) ===",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let solo = run_phase("solo victim", base_rps, victim_rps, 0.0, duration);
+    let adv = run_phase("adversarial flood", base_rps, victim_rps, abuser_rps, duration);
+
+    let solo_victim = tenant(&solo, "victim");
+    let adv_victim = tenant(&adv, "victim");
+    let adv_abuser = tenant(&adv, "abuser");
+
+    let solo_p99 = solo_victim.queue_p99_us.max(SOLO_P99_FLOOR_US);
+    let interference = adv_victim.queue_p99_us / solo_p99;
+
+    // The isolation contract, hard-asserted so the bench run itself
+    // fails CI when any leg breaks — the numeric gate only ratchets.
+    assert_eq!(
+        adv_victim.throttled, 0,
+        "victim under its contract must never be throttled"
+    );
+    assert!(
+        adv_abuser.throttled > 0,
+        "a 10x flood must hit the abuser's token bucket"
+    );
+    let window = adv.elapsed_s;
+    let bucket_cap = abuser_limit * window + tenant_roster(base_rps)[1].burst as f64;
+    assert!(
+        (adv_abuser.admitted as f64) <= bucket_cap,
+        "abuser admitted {} beyond its bucket contract ({:.0} over {:.2}s)",
+        adv_abuser.admitted,
+        bucket_cap,
+        window
+    );
+    assert!(
+        interference <= MAX_INTERFERENCE,
+        "abusive tenant moved the victim's p99 {interference:.2}x \
+         (solo {:.0}us -> adversarial {:.0}us, cap {MAX_INTERFERENCE}x)",
+        solo_p99,
+        adv_victim.queue_p99_us
+    );
+
+    let rows = [
+        Row {
+            tenant: "victim".into(),
+            tenant_rps: adv_victim.achieved_rps,
+            p99_interference: interference,
+            solo_p99_ms: solo_p99 / 1e3,
+            adv_p99_ms: adv_victim.queue_p99_us / 1e3,
+            admitted: adv_victim.admitted,
+            throttled: adv_victim.throttled,
+        },
+        Row {
+            tenant: "abuser".into(),
+            tenant_rps: adv_abuser.achieved_rps,
+            // interference is a victim-side metric; the abuser's row
+            // carries 0.0 so the gate's max() reads only the victim
+            p99_interference: 0.0,
+            solo_p99_ms: 0.0,
+            adv_p99_ms: adv_abuser.queue_p99_us / 1e3,
+            admitted: adv_abuser.admitted,
+            throttled: adv_abuser.throttled,
+        },
+    ];
+
+    println!(
+        "\n  {:<8} {:>12} {:>18} {:>12} {:>12} {:>10} {:>10}",
+        "tenant", "rps", "p99_interference", "solo_p99_ms", "adv_p99_ms", "admitted", "throttled"
+    );
+    for r in &rows {
+        println!(
+            "  {:<8} {:>12.0} {:>18.2} {:>12.1} {:>12.1} {:>10} {:>10}",
+            r.tenant, r.tenant_rps, r.p99_interference, r.solo_p99_ms, r.adv_p99_ms, r.admitted,
+            r.throttled
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"tenants\", \"config\": \"adversarial_2shard\", \
+                 \"tenant\": \"{}\", \"tenant_rps\": {:.1}, \"p99_interference\": {:.3}, \
+                 \"solo_p99_ms\": {:.2}, \"adv_p99_ms\": {:.2}, \"admitted\": {}, \
+                 \"throttled\": {}, \"quick\": {}}}{}\n",
+                r.tenant,
+                r.tenant_rps,
+                r.p99_interference,
+                r.solo_p99_ms,
+                r.adv_p99_ms,
+                r.admitted,
+                r.throttled,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

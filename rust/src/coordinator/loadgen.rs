@@ -17,10 +17,14 @@
 //! [`LoadgenConfig::large_n`] mix, which reaches past the single-pass
 //! ceiling to 65536 points through the multi-pass path), split
 //! across the server's QoS classes by [`LoadgenConfig::class_mix`]
-//! (arrival fractions per class index), and may carry a deadline. The
+//! (arrival fractions per class index), and may carry a deadline. When
+//! the server runs a tenant registry, [`LoadgenConfig::tenant_mix`]
+//! splits arrivals across tenant indices the same way, which is how an
+//! adversarial run offers one tenant far more than its token bucket
+//! admits while a well-behaved tenant stays under its own rate. The
 //! [`LoadReport`] accounts every submission — completed, shed,
-//! expired, failed; `lost` (a reply channel dropped with no answer)
-//! must be zero, which `rust/tests/server.rs` pins — and reports
+//! expired, throttled, failed; `lost` (a reply channel dropped with no
+//! answer) must be zero, which `rust/tests/server.rs` pins — and reports
 //! offered vs achieved throughput, shed rate, deadline-miss rate,
 //! tail latencies (queue wait and service time separately) and a
 //! per-class breakdown as text or JSON. The RNG is a seeded xorshift
@@ -33,7 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Error, Result};
 
 use super::buffer::JobArena;
-use super::metrics::ClassStats;
+use super::metrics::{ClassStats, TenantStats};
 use super::request::FftRequest;
 use super::server::{ServerResult, TrafficServer};
 use super::ServiceError;
@@ -123,6 +127,11 @@ pub struct LoadgenConfig {
     /// their sum). Empty derives the legacy two-class split from
     /// `high_fraction`.
     pub class_mix: Vec<f64>,
+    /// Per-tenant arrival fractions, by tenant index (normalized over
+    /// their sum, truncated to the server's tenant count). Empty keeps
+    /// every request untenanted, bypassing the tenancy layer even when
+    /// the server has one configured.
+    pub tenant_mix: Vec<f64>,
     /// Per-request deadline (None = whatever the server defaults to).
     pub deadline: Option<Duration>,
     /// RNG seed: same seed, same arrival offsets and request mix.
@@ -139,6 +148,7 @@ impl Default for LoadgenConfig {
             sizes: vec![256, 512, 1024, 2048, 4096],
             high_fraction: 0.5,
             class_mix: Vec::new(),
+            tenant_mix: Vec::new(),
             deadline: Some(Duration::from_millis(25)),
             seed: 42,
         }
@@ -204,6 +214,47 @@ impl ClassLoadRow {
     }
 }
 
+/// One tenant's slice of a load-test run, pulled from the server's
+/// tenant registry counters after the run. Empty unless both the
+/// server and the run were configured with tenants.
+#[derive(Clone, Debug)]
+pub struct TenantLoadRow {
+    /// Tenant name, as configured on the server.
+    pub name: String,
+    /// Whether the tenant preempts background multi-pass work.
+    pub priority: bool,
+    /// Requests offered under this tenant's id.
+    pub submitted: u64,
+    /// Requests past the token bucket and job-unit quota.
+    pub admitted: u64,
+    /// Requests refused by the bucket or quota before queueing.
+    pub throttled: u64,
+    /// Requests served to completion (billed).
+    pub completed: u64,
+    /// Job units billed to the tenant across completions.
+    pub job_units: u64,
+    /// Completion rate actually achieved, requests/s.
+    pub achieved_rps: f64,
+    /// Per-tenant queue-wait p99, µs.
+    pub queue_p99_us: f64,
+}
+
+impl TenantLoadRow {
+    fn from_stats(t: &TenantStats, elapsed_s: f64) -> TenantLoadRow {
+        TenantLoadRow {
+            name: t.name.clone(),
+            priority: t.priority,
+            submitted: t.submitted,
+            admitted: t.admitted,
+            throttled: t.throttled,
+            completed: t.completed,
+            job_units: t.job_units,
+            achieved_rps: if elapsed_s > 0.0 { t.completed as f64 / elapsed_s } else { 0.0 },
+            queue_p99_us: t.queue_wait.percentile_us(0.99),
+        }
+    }
+}
+
 /// Everything a load-test run observed. Constructed by [`run`];
 /// serialized by [`LoadReport::to_json`] / rendered by
 /// [`LoadReport::render`].
@@ -227,6 +278,9 @@ pub struct LoadReport {
     pub late: u64,
     /// Requests served at reduced resolution (any ladder level).
     pub degraded: u64,
+    /// Requests refused at the tenancy layer (token bucket empty or
+    /// job-unit quota exhausted) before touching a class queue.
+    pub throttled: u64,
     /// Requests that failed with any other typed error.
     pub failed: u64,
     /// Reply channels that closed without any answer — always 0 unless
@@ -256,6 +310,9 @@ pub struct LoadReport {
     pub accounted: bool,
     /// Per-QoS-class breakdown, in the server's class order.
     pub per_class: Vec<ClassLoadRow>,
+    /// Per-tenant breakdown, in the server's tenant order (empty when
+    /// the run was untenanted).
+    pub per_tenant: Vec<TenantLoadRow>,
 }
 
 impl LoadReport {
@@ -279,6 +336,7 @@ impl LoadReport {
         let _ = writeln!(s, "  \"expired\": {},", self.expired);
         let _ = writeln!(s, "  \"late\": {},", self.late);
         let _ = writeln!(s, "  \"degraded\": {},", self.degraded);
+        let _ = writeln!(s, "  \"throttled\": {},", self.throttled);
         let _ = writeln!(s, "  \"failed\": {},", self.failed);
         let _ = writeln!(s, "  \"lost\": {},", self.lost);
         let _ = writeln!(s, "  \"served_high\": {},", self.served_high);
@@ -331,6 +389,29 @@ impl LoadReport {
         if !self.per_class.is_empty() {
             s.push_str("\n  ");
         }
+        s.push_str("],\n");
+        s.push_str("  \"tenants\": [");
+        for (i, t) in self.per_tenant.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}\n    {{\"name\": \"{}\", \"priority\": {}, \"submitted\": {}, \
+                 \"admitted\": {}, \"throttled\": {}, \"completed\": {}, \
+                 \"job_units\": {}, \"achieved_rps\": {:.1}, \"queue_p99_us\": {:.1}}}",
+                if i == 0 { "" } else { "," },
+                esc(&t.name),
+                t.priority,
+                t.submitted,
+                t.admitted,
+                t.throttled,
+                t.completed,
+                t.job_units,
+                t.achieved_rps,
+                t.queue_p99_us
+            );
+        }
+        if !self.per_tenant.is_empty() {
+            s.push_str("\n  ");
+        }
         s.push_str("]\n}");
         s
     }
@@ -351,13 +432,14 @@ impl LoadReport {
         let _ = writeln!(
             s,
             "  shed {} ({:.1}%), degraded {}, expired {} + late {} \
-             (deadline miss rate {:.1}%), failed {}, lost {}",
+             (deadline miss rate {:.1}%), throttled {}, failed {}, lost {}",
             self.shed,
             100.0 * self.shed_rate,
             self.degraded,
             self.expired,
             self.late,
             100.0 * self.deadline_miss_rate,
+            self.throttled,
             self.failed,
             self.lost
         );
@@ -392,6 +474,22 @@ impl LoadReport {
                 c.deadline_misses,
                 c.degraded,
                 c.queue_p99_us
+            );
+        }
+        for t in &self.per_tenant {
+            let _ = writeln!(
+                s,
+                "  tenant {:<10}{}: {:>6} submitted, {:>6} admitted, {:>6} throttled, \
+                 {:>6} completed ({:.0} rps), {} job-units, queue p99 {:>7.0}us",
+                t.name,
+                if t.priority { " [priority]" } else { "" },
+                t.submitted,
+                t.admitted,
+                t.throttled,
+                t.completed,
+                t.achieved_rps,
+                t.job_units,
+                t.queue_p99_us
             );
         }
         let _ = writeln!(
@@ -477,6 +575,15 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
     let offsets = arrivals(cfg, &mut rng);
     let mix = resolve_class_mix(cfg, server.config().classes.len());
     let pick_class = |r: f64| pick_from_mix(&mix, r);
+    // Tenant fractions are truncated to the registry size so a long
+    // mix never submits an unknown tenant index; without a registry the
+    // mix is ignored and every request stays untenanted.
+    let t_mix: Vec<f64> = match server.tenant_registry() {
+        Some(reg) => {
+            cfg.tenant_mix.iter().take(reg.len()).map(|f| f.max(0.0)).collect()
+        }
+        None => Vec::new(),
+    };
     // One prototype signal per distinct size, generated *before* the
     // clock starts: generating a fresh 4096-point test signal per
     // request would eat a large slice of a 50µs interarrival gap and
@@ -493,6 +600,7 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
     let mut pending: Vec<Receiver<ServerResult>> = Vec::with_capacity(offsets.len());
     let mut submitted = 0u64;
     let mut shed = 0u64;
+    let mut throttled = 0u64;
     let mut rejected = 0u64;
     for &offset in &offsets {
         let target = start + Duration::from_secs_f64(offset);
@@ -505,12 +613,16 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         submitted += 1;
         let slot = JobArena::global().lease_copy(&prototypes[idx]);
         let mut req = FftRequest::with_input_slot(slot).with_class(class);
+        if !t_mix.is_empty() {
+            req = req.with_tenant(pick_from_mix(&t_mix, rng.next_f64()));
+        }
         if let Some(d) = cfg.deadline {
             req = req.with_deadline(d);
         }
         match server.request(req) {
             Ok(rx) => pending.push(rx),
             Err(ServiceError::QueueFull { .. }) => shed += 1,
+            Err(ServiceError::TenantThrottled { .. }) => throttled += 1,
             Err(_) => rejected += 1,
         }
     }
@@ -558,6 +670,7 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         expired,
         late,
         degraded,
+        throttled,
         failed: failed + rejected,
         lost,
         served_high: sv.served_high,
@@ -570,8 +683,10 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         queue_wait_us: lat(&sv.queue_wait),
         service_time_us: lat(&sv.service_time),
         elapsed_s: elapsed,
-        accounted: lost == 0 && completed + expired + shed + failed + rejected == submitted,
+        accounted: lost == 0
+            && completed + expired + shed + throttled + failed + rejected == submitted,
         per_class: sv.per_class.iter().map(|c| ClassLoadRow::from_stats(c, sv.completed)).collect(),
+        per_tenant: snap.tenants.iter().map(|t| TenantLoadRow::from_stats(t, elapsed)).collect(),
     }
 }
 
@@ -656,6 +771,7 @@ mod tests {
             expired: 1,
             late: 0,
             degraded: 0,
+            throttled: 2,
             failed: 0,
             lost: 0,
             served_high: 5,
@@ -693,6 +809,17 @@ mod tests {
                     queue_p99_us: 10.0,
                 },
             ],
+            per_tenant: vec![TenantLoadRow {
+                name: "victim".into(),
+                priority: true,
+                submitted: 4,
+                admitted: 4,
+                throttled: 0,
+                completed: 4,
+                job_units: 4,
+                achieved_rps: 0.8,
+                queue_p99_us: 40.0,
+            }],
         };
         let j = r.to_json();
         for key in [
@@ -708,12 +835,20 @@ mod tests {
             "\"name\": \"gold\"",
             "\"served_fraction\": 0.6250",
             "\"name\": \"we\\\"ird\\\\\\u000ax\"",
+            "\"throttled\": 2",
+            "\"tenants\": [",
+            "\"name\": \"victim\"",
+            "\"priority\": true",
+            "\"job_units\": 4",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         let text = r.render();
         assert!(text.contains("every request answered = yes"));
         assert!(text.contains("class gold"), "{text}");
+        assert!(text.contains("tenant victim"), "{text}");
+        assert!(text.contains("[priority]"), "{text}");
+        assert!(text.contains("throttled 2"), "{text}");
     }
 
     #[test]

@@ -211,6 +211,49 @@ impl ClassStats {
     }
 }
 
+/// One tenant's admission/billing counters, as captured by
+/// `TrafficServer::metrics` from the
+/// [`super::tenant::TenantRegistry`] — the per-principal slice of the
+/// snapshot (empty for servers running without a tenancy layer).
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    /// Tenant name, from the [`super::tenant::TenantSpec`]
+    /// configuration.
+    pub name: String,
+    /// Priority tenant: its queued requests arm the cross-pass
+    /// preemption signal.
+    pub priority: bool,
+    /// `request` calls naming this tenant, admitted or throttled.
+    pub submitted: u64,
+    /// Requests that passed the token bucket and quota.
+    pub admitted: u64,
+    /// Requests refused by the token bucket or the job-unit quota
+    /// (typed `ServiceError::TenantThrottled`, never queued).
+    pub throttled: u64,
+    /// Requests served to successful completion.
+    pub completed: u64,
+    /// Job units billed to completed requests (1 per single-pass
+    /// request, the sub-job count for a decomposed one) — the billing
+    /// counter.
+    pub job_units: u64,
+    /// Job units currently admitted but not yet finished (the quota's
+    /// live charge).
+    pub units_in_flight: u64,
+    /// Time from admission to dispatch, this tenant only.
+    pub queue_wait: LatencyStats,
+}
+
+impl TenantStats {
+    /// Fraction of submissions refused by the tenancy layer.
+    pub fn throttle_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.throttled as f64 / self.submitted as f64
+        }
+    }
+}
+
 /// Traffic-frontend counters, as captured by
 /// `TrafficServer::metrics` (all zeros / empty for services running
 /// without an admission layer).
@@ -396,6 +439,7 @@ impl Metrics {
             steals: 0,
             agg_jobs_per_s: 0.0,
             server: ServerStats::default(),
+            tenants: Vec::new(),
             backends: Vec::new(),
             arena: JobArena::global().snapshot(),
         }
@@ -420,6 +464,10 @@ pub struct MultipassSnapshot {
     /// Requests abandoned at the between-pass cooperative preemption
     /// point (deadline expired after stage 1).
     pub preempted: u64,
+    /// Between-pass checkpoints at which a request paused to let a
+    /// waiting priority tenant's work through (the request still
+    /// completes — unlike `preempted`, a yield is not an abandonment).
+    pub yielded: u64,
     /// Stage-1 (row FFT) sub-jobs submitted to the executors.
     pub row_jobs: u64,
     /// Stage-2 (column FFT) sub-jobs submitted to the executors.
@@ -542,6 +590,10 @@ pub struct MetricsSnapshot {
     /// Traffic-frontend counters (filled in by `TrafficServer::metrics`;
     /// all-zero for services running without an admission layer).
     pub server: ServerStats,
+    /// Per-tenant admission/billing counters, in configuration order
+    /// (filled in by `TrafficServer::metrics` when a tenancy layer is
+    /// configured; empty otherwise).
+    pub tenants: Vec<TenantStats>,
     /// Per-backend routing counters (filled in by
     /// `ServiceHandle::metrics` on a routed set; empty otherwise).
     pub backends: Vec<BackendStat>,
@@ -632,11 +684,12 @@ impl MetricsSnapshot {
         if self.multipass.requests > 0 {
             let mp = &self.multipass;
             s.push_str(&format!(
-                "  multipass: {} requests ({} completed, {} preempted), \
+                "  multipass: {} requests ({} completed, {} preempted, {} yielded), \
                  {} reserved / {} spilled, {} row + {} col sub-jobs\n",
                 mp.requests,
                 mp.completed,
                 mp.preempted,
+                mp.yielded,
                 mp.reserved,
                 mp.spilled,
                 mp.row_jobs,
@@ -699,6 +752,26 @@ impl MetricsSnapshot {
                     c.aged,
                     c.queue_wait.percentile_us(0.99),
                     c.max_queue_depth
+                ));
+            }
+        }
+        if !self.tenants.is_empty() {
+            s.push_str(&format!("  tenants: {}\n", self.tenants.len()));
+            for t in &self.tenants {
+                s.push_str(&format!(
+                    "    tenant {}{}: {} admitted / {} submitted ({} throttled, \
+                     rate {:.3}), {} completed, {} job-units ({} in flight), \
+                     queue p99 {:.0}us\n",
+                    t.name,
+                    if t.priority { " [priority]" } else { "" },
+                    t.admitted,
+                    t.submitted,
+                    t.throttled,
+                    t.throttle_rate(),
+                    t.completed,
+                    t.job_units,
+                    t.units_in_flight,
+                    t.queue_wait.percentile_us(0.99)
                 ));
             }
         }
@@ -819,6 +892,7 @@ mod tests {
         assert_eq!(s.plan_cache.lookups(), 0);
         assert_eq!(s.plan_cache.hit_rate(), 0.0);
         assert!(s.shards.is_empty());
+        assert!(s.tenants.is_empty());
         assert_eq!(s.steals, 0);
         assert_eq!(s.agg_jobs_per_s, 0.0);
     }
@@ -983,14 +1057,49 @@ mod tests {
             reserved: 2,
             spilled: 1,
             preempted: 1,
+            yielded: 4,
             row_jobs: 192,
             col_jobs: 384,
         };
         assert_eq!(s.multipass.stage_jobs(), 576);
         let out = s.render();
-        assert!(out.contains("multipass: 3 requests (2 completed, 1 preempted)"), "{out}");
+        assert!(
+            out.contains("multipass: 3 requests (2 completed, 1 preempted, 4 yielded)"),
+            "{out}"
+        );
         assert!(out.contains("2 reserved / 1 spilled"), "{out}");
         assert!(out.contains("192 row + 384 col sub-jobs"), "{out}");
+    }
+
+    #[test]
+    fn tenant_stats_rates_and_render() {
+        let t = TenantStats {
+            name: "abuser".into(),
+            submitted: 100,
+            admitted: 40,
+            throttled: 60,
+            completed: 38,
+            job_units: 38,
+            units_in_flight: 2,
+            ..Default::default()
+        };
+        assert!((t.throttle_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(TenantStats::default().throttle_rate(), 0.0);
+
+        let mut s = Metrics::default().snapshot();
+        assert!(!s.render().contains("tenants:"));
+        s.tenants = vec![
+            TenantStats { name: "victim".into(), priority: true, ..Default::default() },
+            t,
+        ];
+        let out = s.render();
+        assert!(out.contains("tenants: 2"), "{out}");
+        assert!(out.contains("tenant victim [priority]:"), "{out}");
+        assert!(
+            out.contains("tenant abuser: 40 admitted / 100 submitted (60 throttled, rate 0.600)"),
+            "{out}"
+        );
+        assert!(out.contains("38 job-units (2 in flight)"), "{out}");
     }
 
     #[test]

@@ -65,6 +65,17 @@
 //! are typed: every submit path answers with a [`ServiceError`]
 //! instead of panicking when the worker pool is gone.
 //!
+//! Ahead of the class queues sits the tenancy layer
+//! ([`tenant::TenantRegistry`], `egpu-fft serve --tenants`): per-tenant
+//! token buckets (sustained rate + burst) and in-flight job-unit
+//! quotas ([`qos::UnitQuota`]) throttle a tenant's requests *before*
+//! they can occupy class-queue capacity (typed
+//! [`ServiceError::TenantThrottled`]), per-tenant billing counters
+//! surface in [`MetricsSnapshot::tenants`], and a priority tenant's
+//! queued work makes background tenants' multi-pass jobs yield at the
+//! between-pass checkpoint ([`tenant::PreemptWatch`]) — bounded
+//! cross-tenant interference, gated by `benches/tenants.rs`.
+//!
 //! The sharded pool is *elastic*: `add_shard` / `retire_shard` resize
 //! it while serving (epoch-versioned routing, drain-and-reroute
 //! retirement), and the [`autoscale`] controller drives those calls
@@ -91,6 +102,7 @@ pub mod qos;
 pub mod request;
 pub mod server;
 pub mod shard;
+pub mod tenant;
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -114,18 +126,20 @@ pub use autoscale::{
 };
 pub use backend::{BackendSet, BackendSetConfig, FftBackend, RouteMode};
 pub use buffer::{ArenaStats, JobArena, JobRing, JobSlot};
-pub use loadgen::{ArrivalPattern, ClassLoadRow, LoadReport, LoadgenConfig};
+pub use loadgen::{ArrivalPattern, ClassLoadRow, LoadReport, LoadgenConfig, TenantLoadRow};
 pub use metrics::{
     BackendStat, ClassStats, LatencyStats, Metrics, MetricsSnapshot, MultipassSnapshot,
-    ServerStats, ShardStat,
+    ServerStats, ShardStat, TenantStats,
 };
 pub use qos::{
-    default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler, DEFAULT_CLASS_CAPACITY,
+    default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler, UnitQuota,
+    DEFAULT_CLASS_CAPACITY,
 };
 pub use request::{FftCompute, FftRequest, MultipassGate, MultipassStats};
 pub use server::{AdmissionPolicy, DegradeControl, ServedFft, ServerConfig};
 pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
 pub use shard::{ShardPoolConfig, ShardedFftService};
+pub use tenant::{PreemptWatch, TenantDenial, TenantRegistry, TenantSpec, TokenBucket};
 
 /// Typed, matchable errors from the serving stack. Execution services
 /// deliver these wrapped in `anyhow::Error` (downcast to match); the
@@ -147,6 +161,15 @@ pub enum ServiceError {
     /// with.
     #[error("unknown QoS class index {class}")]
     UnknownClass { class: usize },
+    /// The request named a tenant the server's tenancy layer was not
+    /// configured with.
+    #[error("unknown tenant index {tenant}")]
+    UnknownTenant { tenant: usize },
+    /// The tenancy layer refused the request: the tenant's token
+    /// bucket is empty or its in-flight job-unit quota is exhausted.
+    /// The request never occupied class-queue capacity.
+    #[error("tenant {tenant} throttled: token bucket empty or job-unit quota exhausted")]
+    TenantThrottled { tenant: usize },
     /// The execution backend failed the request (rendered message).
     #[error("backend error: {0}")]
     Backend(String),

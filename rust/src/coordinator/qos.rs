@@ -41,7 +41,14 @@
 //!   design point. `min_points` is the radix/variant-aware floor: use
 //!   [`DegradeLadder::for_radix`] to keep every degraded transform a
 //!   legal pass shape for the deployed radix.
+//!
+//! The tenancy layer ([`super::tenant`]) composes *over* these classes:
+//! its per-tenant token buckets and [`UnitQuota`] in-flight caps run
+//! before [`QosScheduler::try_enqueue`], so a throttled tenant's
+//! request never occupies class-queue capacity and the fair-share /
+//! EDF / aging invariants above only ever see conforming traffic.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -227,6 +234,81 @@ impl QosClass {
 /// match the old `Priority::High` / `Priority::Low`.
 pub fn default_two_class() -> Vec<QosClass> {
     vec![QosClass::new("high", 1), QosClass::new("low", 0)]
+}
+
+/// A lock-free in-flight job-unit cap — the quota half of the tenancy
+/// layer's two admission levers (the token bucket bounds *rate*; this
+/// bounds *outstanding work*). Units are charged at admission with
+/// [`UnitQuota::try_charge`] and given back with [`UnitQuota::release`]
+/// when the request finishes (completed, expired, failed, or shed
+/// downstream), so the in-flight total can never drift upward.
+///
+/// `None` means unlimited: every charge succeeds but the in-flight
+/// count is still tracked for metrics.
+#[derive(Debug)]
+pub struct UnitQuota {
+    limit: Option<u64>,
+    in_flight: AtomicU64,
+}
+
+impl UnitQuota {
+    /// A quota capping in-flight units at `limit` (`None` = unlimited).
+    pub fn new(limit: Option<u64>) -> UnitQuota {
+        UnitQuota { limit, in_flight: AtomicU64::new(0) }
+    }
+
+    /// The configured cap.
+    pub fn limit(&self) -> Option<u64> {
+        self.limit
+    }
+
+    /// Units currently charged (admitted but not yet released).
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Atomically charge `units` if the cap allows: `true` admits,
+    /// `false` leaves the count untouched. A request costing more
+    /// units than the whole cap can never charge successfully — even
+    /// from idle — so admission surfaces it as a throttle immediately
+    /// instead of letting it wait forever for room that cannot exist.
+    pub fn try_charge(&self, units: u64) -> bool {
+        let mut cur = self.in_flight.load(Ordering::Acquire);
+        loop {
+            if let Some(limit) = self.limit {
+                if cur.saturating_add(units) > limit {
+                    return false;
+                }
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + units,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Return `units` to the quota (saturating: releasing more than is
+    /// charged clamps at zero rather than underflowing).
+    pub fn release(&self, units: u64) {
+        let mut cur = self.in_flight.load(Ordering::Acquire);
+        loop {
+            let next = cur.saturating_sub(units);
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
 }
 
 /// One admitted-but-not-yet-dispatched request, as the scheduler core
@@ -609,6 +691,43 @@ mod tests {
         for c in default_two_class() {
             assert_eq!(c.capacity, DEFAULT_CLASS_CAPACITY, "legacy two-class default");
         }
+    }
+
+    #[test]
+    fn unit_quota_charges_to_the_cap_and_releases() {
+        let q = UnitQuota::new(Some(10));
+        assert_eq!(q.limit(), Some(10));
+        assert!(q.try_charge(6));
+        assert!(q.try_charge(4));
+        assert!(!q.try_charge(1), "cap reached");
+        assert_eq!(q.in_flight(), 10);
+        q.release(4);
+        assert!(q.try_charge(3));
+        assert_eq!(q.in_flight(), 9);
+    }
+
+    #[test]
+    fn unit_quota_oversized_charge_never_succeeds() {
+        let q = UnitQuota::new(Some(4));
+        assert!(!q.try_charge(5), "bigger than the whole cap, even from idle");
+        assert_eq!(q.in_flight(), 0, "failed charge leaves nothing behind");
+    }
+
+    #[test]
+    fn unit_quota_unlimited_tracks_but_never_denies() {
+        let q = UnitQuota::new(None);
+        assert!(q.try_charge(u64::MAX / 2));
+        assert!(q.try_charge(17));
+        assert_eq!(q.in_flight(), u64::MAX / 2 + 17);
+    }
+
+    #[test]
+    fn unit_quota_release_saturates_at_zero() {
+        let q = UnitQuota::new(Some(8));
+        assert!(q.try_charge(3));
+        q.release(100);
+        assert_eq!(q.in_flight(), 0, "no underflow");
+        assert!(q.try_charge(8), "full cap available again");
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::Result;
 use super::buffer::{JobArena, JobSlot};
 use super::metrics::MultipassSnapshot;
 use super::qos::DegradeLevel;
+use super::tenant::PreemptWatch;
 use super::{FftResult, ServiceError};
 use crate::fft::cache::PlanCache;
 use crate::fft::multipass::{self, MultipassPlan, Stage, MAX_SINGLE_PASS_POINTS};
@@ -61,6 +62,17 @@ pub struct FftRequest {
     /// four-step decomposition (useful for tests and for spreading one
     /// request wider across shards).
     pub max_pass_points: Option<usize>,
+    /// Tenant index for the frontend's tenancy layer
+    /// ([`super::tenant::TenantRegistry`]); ignored by servers running
+    /// without one, and by the execution services.
+    pub tenant: Option<usize>,
+    /// Preemption signal for a decomposed request: at the between-pass
+    /// checkpoint the orchestration pauses (bounded, cooperative —
+    /// see [`MULTIPASS_YIELD_CAP`]) while `waiting()` reports a
+    /// priority tenant's request queued. The frontend attaches this to
+    /// non-priority tenants' large requests; ignored below the pass
+    /// ceiling.
+    pub preempt: Option<PreemptWatch>,
 }
 
 impl FftRequest {
@@ -84,6 +96,8 @@ impl FftRequest {
             class: 0,
             deadline: None,
             max_pass_points: None,
+            tenant: None,
+            preempt: None,
         }
     }
 
@@ -109,6 +123,20 @@ impl FftRequest {
     /// [`FftRequest::max_pass_points`]).
     pub fn with_max_pass_points(mut self, points: usize) -> Self {
         self.max_pass_points = Some(points);
+        self
+    }
+
+    /// Name the tenant this request bills to (frontend tenancy layer).
+    pub fn with_tenant(mut self, tenant: usize) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    /// Attach a preemption watch: a decomposed request will pause at
+    /// the between-pass checkpoint while the watch reports priority
+    /// work waiting (see [`FftRequest::preempt`]).
+    pub fn with_preempt_watch(mut self, watch: PreemptWatch) -> Self {
+        self.preempt = Some(watch);
         self
     }
 
@@ -220,6 +248,7 @@ pub struct MultipassStats {
     reserved: AtomicU64,
     spilled: AtomicU64,
     preempted: AtomicU64,
+    yielded: AtomicU64,
     row_jobs: AtomicU64,
     col_jobs: AtomicU64,
 }
@@ -233,11 +262,21 @@ impl MultipassStats {
             reserved: self.reserved.load(Ordering::Relaxed),
             spilled: self.spilled.load(Ordering::Relaxed),
             preempted: self.preempted.load(Ordering::Relaxed),
+            yielded: self.yielded.load(Ordering::Relaxed),
             row_jobs: self.row_jobs.load(Ordering::Relaxed),
             col_jobs: self.col_jobs.load(Ordering::Relaxed),
         }
     }
 }
+
+/// Longest a decomposed request will pause at the between-pass
+/// checkpoint for waiting priority-tenant work before continuing
+/// anyway. The cap keeps the yield cooperative, not a starvation
+/// hazard: a stream of priority arrivals can delay a background
+/// request's stage 2 by at most this much per checkpoint (there is one
+/// checkpoint per decomposed request), and the request's own deadline
+/// keeps being enforced while it waits.
+pub const MULTIPASS_YIELD_CAP: Duration = Duration::from_millis(250);
 
 /// Serve one above-ceiling request by four-step decomposition over
 /// `compute`'s ordinary sub-job paths (the shared large-N orchestration
@@ -252,9 +291,14 @@ impl MultipassStats {
 ///    through `request_all` (coalesced, chunked across the pool —
 ///    passes pipeline across shards); without one, sub-jobs are
 ///    submitted strictly one at a time;
-/// 4. between the passes, re-check the deadline — the cooperative
-///    preemption point (a miss aborts with
-///    [`ServiceError::DeadlineExceeded`] before stage 2 is submitted).
+/// 4. between the passes, run the cooperative preemption point: the
+///    deadline is re-checked (a miss aborts with
+///    [`ServiceError::DeadlineExceeded`] before stage 2 is submitted),
+///    and if the request carries a [`PreemptWatch`] reporting priority
+///    work waiting, the orchestration pauses — up to
+///    [`MULTIPASS_YIELD_CAP`], deadline still enforced — so a
+///    high-priority tenant's request can be dispatched before this
+///    request's stage-2 batch re-occupies the pool.
 ///
 /// Orchestration runs on the calling thread; the returned channel is
 /// already resolved. The result reports `core: usize::MAX` and no
@@ -271,6 +315,7 @@ pub(crate) fn serve_staged(
     let started = Instant::now();
     let ceiling = req.pass_ceiling();
     let deadline = req.deadline;
+    let preempt = req.preempt;
     let mut input = req.input;
     if req.level != DegradeLevel::Full {
         let keep = input.len() >> req.level.shift();
@@ -326,14 +371,31 @@ pub(crate) fn serve_staged(
                     .collect()
             }
         },
-        || match deadline {
-            Some(d) if started.elapsed() > d => {
-                stats.preempted.fetch_add(1, Ordering::Relaxed);
-                Err(anyhow::Error::new(ServiceError::DeadlineExceeded {
-                    waited_us: started.elapsed().as_secs_f64() * 1e6,
-                }))
+        || {
+            let check_deadline = || match deadline {
+                Some(d) if started.elapsed() > d => {
+                    stats.preempted.fetch_add(1, Ordering::Relaxed);
+                    Err(anyhow::Error::new(ServiceError::DeadlineExceeded {
+                        waited_us: started.elapsed().as_secs_f64() * 1e6,
+                    }))
+                }
+                _ => Ok(()),
+            };
+            check_deadline()?;
+            if let Some(watch) = &preempt {
+                if watch.waiting() {
+                    // priority-tenant work is queued: pause before
+                    // submitting stage 2, bounded by the yield cap and
+                    // this request's own deadline
+                    stats.yielded.fetch_add(1, Ordering::Relaxed);
+                    let paused = Instant::now();
+                    while watch.waiting() && paused.elapsed() < MULTIPASS_YIELD_CAP {
+                        std::thread::sleep(Duration::from_millis(1));
+                        check_deadline()?;
+                    }
+                }
             }
-            _ => Ok(()),
+            Ok(())
         },
     );
     drop(permit);
@@ -410,16 +472,22 @@ mod tests {
         assert_eq!(req.level, DegradeLevel::Full);
         assert_eq!(req.class, 0);
         assert_eq!(req.deadline, None);
+        assert_eq!(req.tenant, None);
+        assert!(req.preempt.is_none());
         assert_eq!(req.pass_ceiling(), MAX_SINGLE_PASS_POINTS);
         assert!(!req.needs_decomposition());
         let req = req
             .with_level(DegradeLevel::Half)
             .with_class(2)
             .with_deadline(Duration::from_millis(5))
-            .with_max_pass_points(256);
+            .with_max_pass_points(256)
+            .with_tenant(1)
+            .with_preempt_watch(PreemptWatch::manual());
         assert_eq!(req.effective_points(), 512);
         assert_eq!(req.pass_ceiling(), 256);
         assert!(req.needs_decomposition(), "512 effective > 256 ceiling");
+        assert_eq!(req.tenant, Some(1));
+        assert!(req.preempt.is_some());
     }
 
     #[test]
@@ -464,10 +532,12 @@ mod tests {
     fn stats_snapshot_copies_counters() {
         let stats = MultipassStats::default();
         stats.requests.fetch_add(2, Ordering::Relaxed);
+        stats.yielded.fetch_add(3, Ordering::Relaxed);
         stats.row_jobs.fetch_add(64, Ordering::Relaxed);
         stats.col_jobs.fetch_add(128, Ordering::Relaxed);
         let s = stats.snapshot();
         assert_eq!(s.requests, 2);
+        assert_eq!(s.yielded, 3);
         assert_eq!(s.stage_jobs(), 192);
         assert_eq!(s.completed, 0);
     }

@@ -38,6 +38,22 @@
 //!   histogram, so per-class p99s surface in
 //!   [`MetricsSnapshot::server`] ([`super::metrics::ClassStats`]).
 //!
+//! When [`ServerConfig::tenants`] is configured, a **tenancy layer**
+//! ([`super::tenant::TenantRegistry`]) runs *ahead of* the class
+//! queues: a request carrying [`FftRequest::tenant`] must pass its
+//! tenant's token bucket (sustained rate + burst) and in-flight
+//! job-unit quota before it may occupy any class-queue slot. A
+//! throttled request is answered immediately with
+//! [`ServiceError::TenantThrottled`] — it is never queued, never ages,
+//! and is invisible to the class counters, so one abusive tenant
+//! cannot convert its excess offered load into queue occupancy that
+//! delays anyone else. Requests without a tenant id bypass the layer
+//! (operator/system traffic). Per-tenant billing counters surface in
+//! [`MetricsSnapshot::tenants`], and while a *priority* tenant's
+//! request waits in a class queue, non-priority tenants' decomposed
+//! requests are handed a [`super::tenant::PreemptWatch`] so they yield
+//! at the between-pass checkpoint.
+//!
 //! Dispatch is a small pool of dispatcher threads, each forwarding one
 //! admitted request at a time into the wrapped service as an
 //! [`FftRequest`] and waiting for its reply — so
@@ -65,10 +81,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::backend::BackendSet;
-use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
 use super::buffer::JobSlot;
+use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
 use super::qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
 use super::request::{FftCompute, FftRequest};
+use super::tenant::{TenantDenial, TenantRegistry, TenantSpec};
 use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService};
 use crate::fft::multipass;
 
@@ -122,6 +139,12 @@ pub struct ServerConfig {
     /// (radix/variant-aware floor: see
     /// [`super::qos::DegradeLadder::for_radix`]).
     pub min_degraded_points: usize,
+    /// Tenancy layer: per-tenant token buckets + job-unit quotas
+    /// applied *before* class-queue admission (requests address
+    /// tenants by index through [`FftRequest::with_tenant`]). Empty =
+    /// no tenancy layer; requests without a tenant id always bypass
+    /// it.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for ServerConfig {
@@ -133,6 +156,7 @@ impl Default for ServerConfig {
             aging: Duration::from_millis(10),
             default_deadline: None,
             min_degraded_points: 256,
+            tenants: Vec::new(),
         }
     }
 }
@@ -258,6 +282,11 @@ struct Pending {
     /// 2^20-point request weighs its true 2048 sub-jobs against its
     /// class queue, not 1.
     cost: u64,
+    /// Tenant index + the job units charged against its quota at
+    /// admission (`None` for untenanted requests or servers without a
+    /// tenancy layer). The dispatcher settles the charge — billed on
+    /// completion, released on expiry/failure.
+    tenant: Option<(usize, u64)>,
     reply: Sender<ServerResult>,
 }
 
@@ -503,6 +532,7 @@ pub struct TrafficServer {
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
     operating: Arc<AtomicU8>,
+    tenants: Option<Arc<TenantRegistry>>,
     inner: Option<Arc<ServiceHandle>>,
     dispatchers: Vec<JoinHandle<()>>,
     /// Periodic pressure-feed sampler threads (see `pressure_feed`).
@@ -561,14 +591,20 @@ impl TrafficServer {
         });
         let metrics = Arc::new(ServerMetrics::new(&cfg.classes, &caps));
         let operating = Arc::new(AtomicU8::new(DegradeLevel::Full.as_u8()));
+        let tenants = if cfg.tenants.is_empty() {
+            None
+        } else {
+            Some(Arc::new(TenantRegistry::new(cfg.tenants.clone(), Instant::now())?))
+        };
         let inner = Arc::new(inner);
         let mut dispatchers = Vec::with_capacity(cfg.dispatchers);
         for _ in 0..cfg.dispatchers {
             let admission = Arc::clone(&admission);
             let metrics = Arc::clone(&metrics);
             let inner = Arc::clone(&inner);
+            let tenants = tenants.clone();
             dispatchers.push(std::thread::spawn(move || {
-                dispatcher_loop(admission, metrics, inner)
+                dispatcher_loop(admission, metrics, inner, tenants)
             }));
         }
         Ok(TrafficServer {
@@ -578,10 +614,18 @@ impl TrafficServer {
             admission,
             metrics,
             operating,
+            tenants,
             inner: Some(inner),
             dispatchers,
             samplers: Mutex::new(Vec::new()),
         })
+    }
+
+    /// The tenancy registry, when [`ServerConfig::tenants`] configured
+    /// one — the handle tests and harnesses use to inspect per-tenant
+    /// counters or obtain the preemption watch directly.
+    pub fn tenant_registry(&self) -> Option<&TenantRegistry> {
+        self.tenants.as_deref()
     }
 
     /// A shared handle to the wrapped execution service, so a
@@ -633,10 +677,23 @@ impl TrafficServer {
 
     /// Submit one [`FftRequest`] through admission control. Returns the
     /// reply channel on admission, or a typed error when the request is
-    /// shed (`Shed`/`Degrade` at the hard class limit), names an
-    /// unknown class, or the server is shut down. Every admitted
-    /// request is answered — with a [`ServedFft`] or a typed
+    /// shed (`Shed`/`Degrade` at the hard class limit), throttled by
+    /// the tenancy layer ([`ServiceError::TenantThrottled`]), names an
+    /// unknown class or tenant, or the server is shut down. Every
+    /// admitted request is answered — with a [`ServedFft`] or a typed
     /// [`ServiceError`] — never silently dropped.
+    ///
+    /// With [`ServerConfig::tenants`] configured, a request naming a
+    /// tenant passes that tenant's token bucket and job-unit quota
+    /// *before* any class counter moves or queue slot is taken: a
+    /// throttled request is invisible to class statistics and queue
+    /// occupancy. The units charged are the request's own job cost at
+    /// its submitted level (queue-driven degradation can only shrink
+    /// the real cost, so the charge is conservative); they are billed
+    /// on completion and refunded when the request is shed downstream,
+    /// expires, or fails. One bucket token per request is consumed at
+    /// admission and is *not* refunded on a downstream shed — rate is
+    /// spent by asking.
     ///
     /// Admission measures class pressure in **single-pass job units**
     /// ([`multipass::job_cost`]): a request the backend must serve by
@@ -655,20 +712,47 @@ impl TrafficServer {
         if class >= self.cfg.classes.len() {
             return Err(ServiceError::UnknownClass { class });
         }
+        let now = Instant::now();
+        let ceiling = req.pass_ceiling();
+        // Tenancy runs ahead of everything else: a throttled request
+        // never occupies a queue slot and never appears in the class /
+        // server traffic counters (only in its tenant's own).
+        let tenant = match (&self.tenants, req.tenant) {
+            (Some(reg), Some(t)) => {
+                let units = multipass::job_cost(req.effective_points(), ceiling);
+                match reg.admit(t, units, now) {
+                    Ok(()) => Some((t, units)),
+                    Err(TenantDenial::Unknown) => {
+                        return Err(ServiceError::UnknownTenant { tenant: t });
+                    }
+                    Err(TenantDenial::Throttled) => {
+                        return Err(ServiceError::TenantThrottled { tenant: t });
+                    }
+                }
+            }
+            _ => None,
+        };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.class(class).submitted.fetch_add(1, Ordering::Relaxed);
-        let now = Instant::now();
         let deadline = req
             .deadline
             .or(self.cfg.classes[class].deadline_default)
             .or(self.cfg.default_deadline)
             .map(|d| now + d);
-        let ceiling = req.pass_ceiling();
         let input = req.input;
+        // An admitted-by-tenancy request that still fails class
+        // admission (shed, or server closed) refunds its quota units —
+        // the bucket token stays spent (see the method docs).
+        let refund = |e: ServiceError| {
+            if let (Some(reg), Some((t, u))) = (&self.tenants, tenant) {
+                reg.aborted(t, u);
+            }
+            e
+        };
         let mut st = self.admission.state.lock().unwrap();
         let level = loop {
             if st.closed {
-                return Err(ServiceError::WorkerGone);
+                return Err(refund(ServiceError::WorkerGone));
             }
             let depth = st.sched.depth(class);
             let cap = self.caps[class];
@@ -701,7 +785,7 @@ impl TrafficServer {
                 AdmissionPolicy::Shed | AdmissionPolicy::Degrade => {
                     self.metrics.shed.fetch_add(1, Ordering::Relaxed);
                     self.metrics.class(class).shed.fetch_add(1, Ordering::Relaxed);
-                    return Err(ServiceError::QueueFull { capacity: cap });
+                    return Err(refund(ServiceError::QueueFull { capacity: cap }));
                 }
             }
         };
@@ -709,12 +793,17 @@ impl TrafficServer {
         let cost = multipass::job_cost(served_points, ceiling);
         let (reply, rx) = channel();
         st.sched
-            .try_enqueue(class, deadline, now, Pending { input, level, cost, reply })
+            .try_enqueue(class, deadline, now, Pending { input, level, cost, tenant, reply })
             .expect("capacity checked under the same lock");
         st.cost[class] += cost;
         let class_depth = st.sched.depth(class);
         let depth = st.sched.total_depth();
         drop(st);
+        if let (Some(reg), Some((t, _))) = (&self.tenants, tenant) {
+            // now actually queued: a priority tenant's waiting request
+            // raises the cross-pass preemption signal
+            reg.enqueued(t);
+        }
         self.metrics.admitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
         let cc = self.metrics.class(class);
@@ -739,6 +828,9 @@ impl TrafficServer {
             .expect("inner service present until shutdown")
             .metrics();
         snap.server = self.metrics.snapshot();
+        if let Some(reg) = &self.tenants {
+            snap.tenants = reg.snapshot();
+        }
         snap
     }
 
@@ -796,6 +888,7 @@ fn dispatcher_loop(
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
     inner: Arc<ServiceHandle>,
+    tenants: Option<Arc<TenantRegistry>>,
 ) {
     loop {
         let popped = {
@@ -827,10 +920,18 @@ fn dispatcher_loop(
         cc.queue_wait.record(queue_us);
         let deadline = popped.item.deadline;
         let req = popped.item.payload;
+        if let (Some(reg), Some((t, _))) = (&tenants, req.tenant) {
+            // left the queue: lowers the priority-waiting signal and
+            // records this tenant's queue wait
+            reg.dispatched(t, queue_us);
+        }
         if let Some(d) = deadline {
             if Instant::now() > d {
                 metrics.expired.fetch_add(1, Ordering::Relaxed);
                 cc.expired.fetch_add(1, Ordering::Relaxed);
+                if let (Some(reg), Some((t, u))) = (&tenants, req.tenant) {
+                    reg.aborted(t, u);
+                }
                 let _ = req
                     .reply
                     .send(Err(ServiceError::DeadlineExceeded { waited_us: queue_us }));
@@ -857,6 +958,14 @@ fn dispatcher_loop(
             // instead of burning backend time past the deadline.
             freq = freq.with_deadline(d.saturating_duration_since(t0));
         }
+        if let (Some(reg), Some((t, _))) = (&tenants, req.tenant) {
+            // A non-priority tenant's decomposed request carries the
+            // preemption watch: it yields at the between-pass
+            // checkpoint while a priority tenant's work is queued.
+            if freq.needs_decomposition() && !reg.spec(t).is_some_and(|s| s.priority) {
+                freq = freq.with_preempt_watch(reg.watch());
+            }
+        }
         let backend = inner.request(freq).recv();
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
         metrics.service_time.record(service_us);
@@ -878,6 +987,9 @@ fn dispatcher_loop(
                 }
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 cc.completed.fetch_add(1, Ordering::Relaxed);
+                if let (Some(reg), Some((t, u))) = (&tenants, req.tenant) {
+                    reg.completed(t, u);
+                }
                 let _ = req.reply.send(Ok(ServedFft {
                     result,
                     class,
@@ -891,6 +1003,9 @@ fn dispatcher_loop(
             Err(e) => {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
                 cc.failed.fetch_add(1, Ordering::Relaxed);
+                if let (Some(reg), Some((t, u))) = (&tenants, req.tenant) {
+                    reg.aborted(t, u);
+                }
                 let _ = req.reply.send(Err(e));
             }
         }
@@ -1017,6 +1132,42 @@ mod tests {
             }
         )
         .is_ok());
+    }
+
+    #[test]
+    fn tenant_config_is_validated_and_optional() {
+        let pool = || {
+            ServiceHandle::Pool(
+                FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap(),
+            )
+        };
+        // duplicate tenant names are rejected up front
+        assert!(TrafficServer::start(
+            pool(),
+            ServerConfig {
+                tenants: vec![TenantSpec::new("a", 10.0, 1), TenantSpec::new("a", 5.0, 1)],
+                ..Default::default()
+            }
+        )
+        .is_err());
+        // no tenants configured: the layer is absent entirely
+        let server = TrafficServer::start(pool(), ServerConfig::default()).unwrap();
+        assert!(server.tenant_registry().is_none());
+        assert!(server.metrics().tenants.is_empty());
+        server.shutdown();
+        // configured: the registry and its snapshot surface
+        let server = TrafficServer::start(
+            pool(),
+            ServerConfig {
+                tenants: vec![TenantSpec::new("solo", 100.0, 8)],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let reg = server.tenant_registry().expect("registry configured");
+        assert_eq!(reg.index_of("solo"), Some(0));
+        assert_eq!(server.metrics().tenants.len(), 1);
+        server.shutdown();
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! Multi-tenant admission: per-tenant token buckets, job-unit quotas,
+//! billing counters, and the priority-waiting preemption signal.
+//!
+//! QoS classes (see [`super::qos`]) decide *which queued request runs
+//! next*; they cannot stop one principal from filling every queue slot
+//! in the first place. The tenancy layer sits **ahead of** the class
+//! queues: a request carrying a tenant id must pass that tenant's
+//! token bucket (sustained rate + burst) and its job-unit quota before
+//! it may occupy any class-queue capacity. A throttled request is
+//! answered immediately with a typed
+//! [`super::ServiceError::TenantThrottled`] — it never holds a queue
+//! slot, never ages, and never steals a dispatch from a conforming
+//! tenant. This is the isolation guarantee the `tenants` bench gates:
+//! an abusive tenant offering 10× its rate limit cannot move a
+//! well-behaved tenant's queue-wait p99 beyond a bounded ratio.
+//!
+//! Like the scheduler core, everything here is clock-injected (`now`
+//! is a parameter, never read internally), so bucket behaviour is a
+//! pure function of the call sequence and the property suite in
+//! `rust/tests/proptests.rs` can drive it deterministically.
+//!
+//! Two levers, two failure modes:
+//!
+//! * the **token bucket** bounds *request rate*: over any window `W`
+//!   a tenant is admitted at most `rate_hz × W + burst` requests,
+//!   whatever the arrival pattern;
+//! * the **job-unit quota** ([`super::qos::UnitQuota`]) bounds
+//!   *in-flight work*: the sum of admitted-but-unfinished job units
+//!   (1 for a single-pass request, `n1 + n2` sub-jobs for a
+//!   decomposed one — [`crate::fft::multipass::job_cost`]) never
+//!   exceeds the configured cap, so a tenant cannot park a handful of
+//!   2^20-point requests and monopolize the pool within its request
+//!   rate.
+//!
+//! A tenant marked [`TenantSpec::with_priority`] additionally arms the
+//! cross-pass preemption point: while any of its requests sits in a
+//! class queue, the registry's [`PreemptWatch`] reads "waiting", and a
+//! background tenant's multi-pass request yields at the between-pass
+//! checkpoint (see `request::serve_staged`) instead of submitting its
+//! stage-2 batch — the cooperative analogue of bellman's
+//! `PriorityLock` preempt-me checks, without a global lock.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::{LatencyRecorder, TenantStats};
+use super::qos::UnitQuota;
+
+/// A clock-injected token bucket: capacity `burst` tokens, refilled
+/// continuously at `rate_hz` tokens/s, starting full. Admitting a
+/// request takes one token; an empty bucket throttles.
+///
+/// Over any window `[t0, t1]` the bucket admits at most
+/// `burst + rate_hz × (t1 - t0)` requests — the bound the property
+/// suite asserts under random burst interleavings. Time only ever
+/// moves the bucket toward full (refill is monotone in `now`), and a
+/// `now` earlier than the last refill instant is ignored rather than
+/// draining tokens.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate_hz: f64,
+    burst: f64,
+    tokens: f64,
+    refilled: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket holding `burst` tokens at `now`, refilling at
+    /// `rate_hz` tokens per second.
+    pub fn new(rate_hz: f64, burst: u64, now: Instant) -> TokenBucket {
+        let burst = (burst.max(1)) as f64;
+        TokenBucket { rate_hz: rate_hz.max(0.0), burst, tokens: burst, refilled: now }
+    }
+
+    /// Credit the elapsed time since the last refill, saturating at
+    /// the burst capacity. A non-monotone `now` (earlier than the last
+    /// refill) is a no-op.
+    fn refill(&mut self, now: Instant) {
+        if let Some(dt) = now.checked_duration_since(self.refilled) {
+            self.tokens = (self.tokens + self.rate_hz * dt.as_secs_f64()).min(self.burst);
+            self.refilled = now;
+        }
+    }
+
+    /// Tokens available at `now`, after refill — monotone in `now`
+    /// between takes.
+    pub fn available(&mut self, now: Instant) -> f64 {
+        self.refill(now);
+        self.tokens
+    }
+
+    /// Take one token if available: `true` admits, `false` throttles.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One tenant's admission contract: sustained request rate, burst
+/// allowance, optional in-flight job-unit quota, and whether the
+/// tenant's queued work arms the cross-pass preemption signal.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant name, as reported in metrics and load reports.
+    pub name: String,
+    /// Sustained admission rate, requests/s (the bucket refill rate).
+    pub rate_hz: f64,
+    /// Burst allowance, requests (the bucket capacity; min 1).
+    pub burst: u64,
+    /// Cap on in-flight job units (admitted but not yet finished);
+    /// `None` = unlimited. A single-pass request is 1 unit, a
+    /// decomposed request costs its sub-job count.
+    pub quota_units: Option<u64>,
+    /// Priority tenant: its queued requests raise the registry's
+    /// [`PreemptWatch`], making background tenants' multi-pass jobs
+    /// yield at the between-pass checkpoint.
+    pub priority: bool,
+}
+
+impl TenantSpec {
+    /// A tenant admitting `rate_hz` requests/s sustained with a
+    /// `burst`-request allowance, no quota, not priority.
+    pub fn new(name: &str, rate_hz: f64, burst: u64) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            rate_hz,
+            burst: burst.max(1),
+            quota_units: None,
+            priority: false,
+        }
+    }
+
+    /// Builder: cap in-flight job units.
+    pub fn with_quota(mut self, units: u64) -> TenantSpec {
+        self.quota_units = Some(units);
+        self
+    }
+
+    /// Builder: mark this tenant as priority (arms the cross-pass
+    /// preemption signal while its requests wait in a class queue).
+    pub fn with_priority(mut self) -> TenantSpec {
+        self.priority = true;
+        self
+    }
+}
+
+/// Why the tenancy layer refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantDenial {
+    /// The request named a tenant index the registry was not
+    /// configured with.
+    Unknown,
+    /// The tenant's token bucket is empty or its job-unit quota is
+    /// exhausted.
+    Throttled,
+}
+
+/// A read-only view of the registry's priority-waiting signal, cheap
+/// to clone onto a request. `waiting()` is `true` while at least one
+/// priority tenant's request sits in a class queue — the condition the
+/// between-pass preemption checkpoint yields on.
+#[derive(Clone, Debug)]
+pub struct PreemptWatch(Arc<AtomicUsize>);
+
+impl PreemptWatch {
+    /// A free-standing watch for tests and harnesses (not connected to
+    /// any registry); drive it with [`PreemptWatch::set`].
+    pub fn manual() -> PreemptWatch {
+        PreemptWatch(Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// `true` while a priority tenant's request is queued.
+    pub fn waiting(&self) -> bool {
+        self.0.load(Ordering::Acquire) > 0
+    }
+
+    /// Overwrite the waiting count (test/harness support — production
+    /// code goes through [`TenantRegistry::enqueued`] /
+    /// [`TenantRegistry::dispatched`]).
+    pub fn set(&self, waiting: usize) {
+        self.0.store(waiting, Ordering::Release);
+    }
+}
+
+/// Per-tenant billing/health counters (lock-free; the registry owns
+/// one block per tenant).
+#[derive(Default)]
+struct TenantCounters {
+    submitted: AtomicU64,
+    admitted: AtomicU64,
+    throttled: AtomicU64,
+    completed: AtomicU64,
+    job_units: AtomicU64,
+    queue_wait: LatencyRecorder,
+}
+
+struct TenantState {
+    spec: TenantSpec,
+    bucket: Mutex<TokenBucket>,
+    quota: UnitQuota,
+    counters: TenantCounters,
+}
+
+/// The tenant registry: one token bucket + quota + counter block per
+/// configured tenant, plus the shared priority-waiting signal. Held in
+/// an `Arc` by the traffic frontend; every method is `&self` and
+/// thread-safe.
+pub struct TenantRegistry {
+    tenants: Vec<TenantState>,
+    priority_waiting: Arc<AtomicUsize>,
+}
+
+impl TenantRegistry {
+    /// Build a registry from tenant specs, validated up front: at
+    /// least one tenant, non-empty unique names, finite non-negative
+    /// rates. `now` seeds every bucket's refill clock.
+    pub fn new(specs: Vec<TenantSpec>, now: Instant) -> Result<TenantRegistry> {
+        if specs.is_empty() {
+            return Err(anyhow!("tenant registry needs at least one tenant"));
+        }
+        for (i, s) in specs.iter().enumerate() {
+            if s.name.is_empty() {
+                return Err(anyhow!("tenant {i} has an empty name"));
+            }
+            if specs[..i].iter().any(|p| p.name == s.name) {
+                return Err(anyhow!("duplicate tenant name `{}`", s.name));
+            }
+            if !s.rate_hz.is_finite() || s.rate_hz < 0.0 {
+                return Err(anyhow!("tenant `{}`: rate must be finite and >= 0", s.name));
+            }
+            if s.quota_units == Some(0) {
+                return Err(anyhow!("tenant `{}`: a zero quota can never admit", s.name));
+            }
+        }
+        let tenants = specs
+            .into_iter()
+            .map(|spec| TenantState {
+                bucket: Mutex::new(TokenBucket::new(spec.rate_hz, spec.burst, now)),
+                quota: UnitQuota::new(spec.quota_units),
+                counters: TenantCounters::default(),
+                spec,
+            })
+            .collect();
+        Ok(TenantRegistry { tenants, priority_waiting: Arc::new(AtomicUsize::new(0)) })
+    }
+
+    /// Number of configured tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// `true` when no tenants are configured (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// The spec tenant `t` was configured with.
+    pub fn spec(&self, t: usize) -> Option<&TenantSpec> {
+        self.tenants.get(t).map(|s| &s.spec)
+    }
+
+    /// Resolve a tenant name to its index.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().position(|s| s.spec.name == name)
+    }
+
+    /// Admission check for one request of `units` job units at `now`:
+    /// takes a bucket token and charges the quota, or answers with the
+    /// denial reason. A denial charges nothing (bucket and quota are
+    /// only consumed together, on success).
+    pub fn admit(&self, tenant: usize, units: u64, now: Instant) -> Result<(), TenantDenial> {
+        let Some(state) = self.tenants.get(tenant) else {
+            return Err(TenantDenial::Unknown);
+        };
+        state.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        // quota first (it can be released on failure; a taken token
+        // cannot), so the two levers compose without leaking budget
+        if !state.quota.try_charge(units) {
+            state.counters.throttled.fetch_add(1, Ordering::Relaxed);
+            return Err(TenantDenial::Throttled);
+        }
+        if !state.bucket.lock().unwrap().try_take(now) {
+            state.quota.release(units);
+            state.counters.throttled.fetch_add(1, Ordering::Relaxed);
+            return Err(TenantDenial::Throttled);
+        }
+        state.counters.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The admitted request entered a class queue: a priority tenant's
+    /// queued request raises the preemption signal.
+    pub fn enqueued(&self, tenant: usize) {
+        if self.tenants.get(tenant).is_some_and(|s| s.spec.priority) {
+            self.priority_waiting.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// The request left its class queue (dispatched or expired):
+    /// lowers the priority signal and records the queue wait.
+    pub fn dispatched(&self, tenant: usize, queue_wait_us: f64) {
+        if let Some(state) = self.tenants.get(tenant) {
+            if state.spec.priority {
+                self.priority_waiting.fetch_sub(1, Ordering::AcqRel);
+            }
+            state.counters.queue_wait.record(queue_wait_us);
+        }
+    }
+
+    /// The request finished successfully: releases its quota units and
+    /// bills them to the tenant.
+    pub fn completed(&self, tenant: usize, units: u64) {
+        if let Some(state) = self.tenants.get(tenant) {
+            state.quota.release(units);
+            state.counters.completed.fetch_add(1, Ordering::Relaxed);
+            state.counters.job_units.fetch_add(units, Ordering::Relaxed);
+        }
+    }
+
+    /// The admitted request ended without a served result (shed at the
+    /// class queue, expired, or failed): releases its quota units
+    /// without billing them.
+    pub fn aborted(&self, tenant: usize, units: u64) {
+        if let Some(state) = self.tenants.get(tenant) {
+            state.quota.release(units);
+        }
+    }
+
+    /// Queued priority-tenant requests right now.
+    pub fn priority_waiting(&self) -> usize {
+        self.priority_waiting.load(Ordering::Acquire)
+    }
+
+    /// A cloneable watch over the priority-waiting signal, for
+    /// attaching to background tenants' multi-pass requests.
+    pub fn watch(&self) -> PreemptWatch {
+        PreemptWatch(Arc::clone(&self.priority_waiting))
+    }
+
+    /// Point-in-time per-tenant counters, in configuration order.
+    pub fn snapshot(&self) -> Vec<TenantStats> {
+        self.tenants
+            .iter()
+            .map(|s| TenantStats {
+                name: s.spec.name.clone(),
+                priority: s.spec.priority,
+                submitted: s.counters.submitted.load(Ordering::Relaxed),
+                admitted: s.counters.admitted.load(Ordering::Relaxed),
+                throttled: s.counters.throttled.load(Ordering::Relaxed),
+                completed: s.counters.completed.load(Ordering::Relaxed),
+                job_units: s.counters.job_units.load(Ordering::Relaxed),
+                units_in_flight: s.quota.in_flight(),
+                queue_wait: s.counters.queue_wait.snapshot(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn bucket_starts_full_and_admits_the_burst() {
+        let now = t0();
+        let mut b = TokenBucket::new(10.0, 4, now);
+        for _ in 0..4 {
+            assert!(b.try_take(now));
+        }
+        assert!(!b.try_take(now), "burst spent, no time passed");
+    }
+
+    #[test]
+    fn bucket_refills_at_the_rate_and_saturates_at_burst() {
+        let now = t0();
+        let mut b = TokenBucket::new(10.0, 4, now);
+        for _ in 0..4 {
+            assert!(b.try_take(now));
+        }
+        // 250ms at 10/s refills 2.5 tokens: two admits, then throttle
+        let later = now + Duration::from_millis(250);
+        assert!(b.try_take(later));
+        assert!(b.try_take(later));
+        assert!(!b.try_take(later));
+        // an hour refills far more than 4, but capacity caps at burst
+        let much_later = now + Duration::from_secs(3600);
+        assert!((b.available(much_later) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_ignores_a_clock_running_backwards() {
+        let now = t0() + Duration::from_secs(10);
+        let mut b = TokenBucket::new(10.0, 2, now);
+        assert!(b.try_take(now));
+        let before = now - Duration::from_secs(5);
+        assert!((b.available(before) - 1.0).abs() < 1e-9, "no drain, no refill");
+        assert!(b.try_take(now), "the remaining token is still there");
+    }
+
+    #[test]
+    fn zero_rate_bucket_admits_exactly_the_burst_ever() {
+        let now = t0();
+        let mut b = TokenBucket::new(0.0, 3, now);
+        for _ in 0..3 {
+            assert!(b.try_take(now));
+        }
+        assert!(!b.try_take(now + Duration::from_secs(3600)), "never refills");
+    }
+
+    fn two_tenants() -> TenantRegistry {
+        TenantRegistry::new(
+            vec![
+                TenantSpec::new("victim", 100.0, 10).with_priority(),
+                TenantSpec::new("abuser", 2.0, 2).with_quota(4),
+            ],
+            t0(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn registry_validates_specs() {
+        let now = t0();
+        assert!(TenantRegistry::new(vec![], now).is_err(), "empty");
+        assert!(
+            TenantRegistry::new(
+                vec![TenantSpec::new("a", 1.0, 1), TenantSpec::new("a", 2.0, 1)],
+                now
+            )
+            .is_err(),
+            "duplicate names"
+        );
+        assert!(
+            TenantRegistry::new(vec![TenantSpec::new("", 1.0, 1)], now).is_err(),
+            "empty name"
+        );
+        assert!(
+            TenantRegistry::new(vec![TenantSpec::new("a", f64::NAN, 1)], now).is_err(),
+            "NaN rate"
+        );
+        assert!(
+            TenantRegistry::new(vec![TenantSpec::new("a", 1.0, 1).with_quota(0)], now).is_err(),
+            "zero quota"
+        );
+    }
+
+    #[test]
+    fn admit_throttles_on_bucket_and_counts_both_ways() {
+        let reg = two_tenants();
+        let now = t0();
+        assert!(reg.admit(1, 1, now).is_ok());
+        assert!(reg.admit(1, 1, now).is_ok());
+        assert_eq!(reg.admit(1, 1, now), Err(TenantDenial::Throttled), "burst 2 spent");
+        assert_eq!(reg.admit(99, 1, now), Err(TenantDenial::Unknown));
+        let snap = reg.snapshot();
+        assert_eq!(snap[1].submitted, 3);
+        assert_eq!(snap[1].admitted, 2);
+        assert_eq!(snap[1].throttled, 1);
+        assert_eq!(snap[1].name, "abuser");
+        assert!(!snap[1].priority);
+        assert!(snap[0].priority);
+    }
+
+    #[test]
+    fn quota_throttles_inflight_units_and_releases_on_completion() {
+        let reg = two_tenants();
+        let now = t0();
+        // abuser quota is 4 units; a 3-unit job + a 2-unit job exceed it
+        assert!(reg.admit(1, 3, now).is_ok());
+        assert_eq!(reg.admit(1, 2, now), Err(TenantDenial::Throttled));
+        let snap = reg.snapshot();
+        assert_eq!(snap[1].units_in_flight, 3, "denied units are not leaked");
+        // completing the first frees the quota (and bills the units)
+        reg.completed(1, 3);
+        assert!(reg.admit(1, 2, now + Duration::from_secs(1)).is_ok());
+        let snap = reg.snapshot();
+        assert_eq!(snap[1].job_units, 3);
+        assert_eq!(snap[1].units_in_flight, 2);
+    }
+
+    #[test]
+    fn quota_denial_refunds_before_the_bucket_is_touched() {
+        let now = t0();
+        let reg = TenantRegistry::new(vec![TenantSpec::new("t", 0.0, 2).with_quota(1)], now)
+            .unwrap();
+        // quota denial must not consume a bucket token
+        assert!(reg.admit(0, 1, now).is_ok());
+        assert_eq!(reg.admit(0, 1, now), Err(TenantDenial::Throttled), "quota full");
+        reg.completed(0, 1);
+        assert!(reg.admit(0, 1, now).is_ok(), "the second (and last) token survived");
+    }
+
+    #[test]
+    fn aborted_releases_quota_without_billing() {
+        let reg = two_tenants();
+        let now = t0();
+        assert!(reg.admit(1, 4, now).is_ok());
+        reg.aborted(1, 4);
+        let snap = reg.snapshot();
+        assert_eq!(snap[1].units_in_flight, 0);
+        assert_eq!(snap[1].job_units, 0, "aborted work is not billed");
+    }
+
+    #[test]
+    fn priority_signal_tracks_queued_priority_work_only() {
+        let reg = two_tenants();
+        let watch = reg.watch();
+        assert!(!watch.waiting());
+        reg.enqueued(1); // non-priority tenant: no signal
+        assert!(!watch.waiting());
+        reg.enqueued(0);
+        reg.enqueued(0);
+        assert!(watch.waiting());
+        assert_eq!(reg.priority_waiting(), 2);
+        reg.dispatched(0, 100.0);
+        assert!(watch.waiting());
+        reg.dispatched(0, 200.0);
+        assert!(!watch.waiting());
+        reg.dispatched(1, 50.0); // non-priority dispatch: no underflow
+        assert_eq!(reg.priority_waiting(), 0);
+        let snap = reg.snapshot();
+        assert_eq!(snap[0].queue_wait.count, 2);
+        assert_eq!(snap[1].queue_wait.count, 1);
+    }
+
+    #[test]
+    fn manual_watch_drives_tests() {
+        let w = PreemptWatch::manual();
+        assert!(!w.waiting());
+        w.set(1);
+        assert!(w.waiting());
+        let w2 = w.clone();
+        w.set(0);
+        assert!(!w2.waiting(), "clones share the signal");
+    }
+}

@@ -235,8 +235,11 @@ pub fn scatter(cols: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<(f32, f32)
 /// order, transformed, sizes preserved — the contract every service
 /// batch path already keeps). `between_passes` runs after stage 1 is
 /// scaled and before stage 2 is submitted: the cooperative preemption
-/// point, where a scheduler may abandon the request (deadline passed,
-/// higher-priority preemption) by returning an error.
+/// point, where a scheduler may abandon the request (deadline passed)
+/// by returning an error, or *pause* — blocking inside the closure —
+/// to let a higher-priority tenant's waiting work reach the pool
+/// before this request's stage-2 batch re-occupies it (the
+/// coordinator's bounded between-pass yield).
 ///
 /// The driver itself is deterministic: given the same sub-transform
 /// results it produces bitwise-identical output regardless of how the

@@ -12,7 +12,7 @@ use egpu_fft::coordinator::{
     loadgen, AdmissionPolicy, ArrivalPattern, AutoscaleController, AutoscalePolicy, Backend,
     BackendSet, BackendSetConfig, DegradeLevel, FftRequest, FftService, LoadgenConfig, QosClass,
     ServerConfig, ServiceConfig, ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService,
-    TrafficServer,
+    TenantSpec, TrafficServer,
 };
 use egpu_fft::fft::{self, reference};
 use egpu_fft::runtime::spawn_pjrt_server;
@@ -71,6 +71,20 @@ USAGE:
                                      WFQ/EDF scheduler and print the
                                      per-class serve shares (weight 0 =
                                      background class, aging-protected)
+  egpu-fft serve --tenants NAME:RATE[:BURST[:QUOTA[:prio]]],...
+                 [--qos-classes ...] [--requests N] [--points P]
+                 [--shards N] [--policy block|shed|degrade]
+                                     multi-tenant frontend demo: each
+                                     request carries a tenant id and is
+                                     throttled by that tenant's token
+                                     bucket (RATE req/s sustained, BURST
+                                     capacity) and in-flight job-unit
+                                     QUOTA before it can occupy a class
+                                     queue; `prio` tenants preempt
+                                     background multi-pass work at the
+                                     between-pass checkpoint; prints the
+                                     per-tenant admitted/throttled/
+                                     billed breakdown
   egpu-fft serve --autoscale [--min-shards A] [--max-shards B]
                  [--target-p99-ms X] [--max-shed-rate F]
                  [--degrade half|quarter]
@@ -95,6 +109,8 @@ USAGE:
                  [--policy block|shed|degrade] [--queue-capacity N]
                  [--qos-classes NAME:W[:CAP[:DL_MS]],...]
                  [--class-mix F0,F1,...]
+                 [--tenants NAME:RATE[:BURST[:QUOTA[:prio]]],...]
+                 [--tenant-mix F0,F1,...]
                  [--shards N] [--dispatchers N] [--sizes 256,1024,...]
                  [--deadline-ms D] [--aging-ms A] [--high-frac F]
                  [--burst N] [--seed S] [--json [PATH]]
@@ -103,8 +119,15 @@ USAGE:
                                      offered vs achieved throughput,
                                      shed rate, deadline miss rate,
                                      queue-wait / service-time tails,
-                                     and a per-class breakdown
-                                     (--json alone prints the JSON
+                                     and per-class + per-tenant
+                                     breakdowns (--tenants arms the
+                                      tenancy layer; --tenant-mix splits
+                                      arrivals across tenant indices,
+                                      defaulting to a uniform split —
+                                      offer one tenant far more than its
+                                      bucket admits to reproduce the
+                                      adversarial isolation run;
+                                      --json alone prints the JSON
                                       report to stdout; --json PATH
                                       writes it to a file)
   egpu-fft help
@@ -154,6 +177,54 @@ fn parse_qos_classes(s: &str) -> Result<Vec<QosClass>> {
                 }
             }
             Ok(class)
+        })
+        .collect()
+}
+
+/// `NAME:RATE_HZ[:BURST[:QUOTA[:prio]]],...` — e.g.
+/// `victim:50:10:-:prio,abuser:200:40:512`. RATE_HZ is the token
+/// bucket's sustained refill rate; BURST its capacity (defaults to the
+/// rate rounded up, min 1); QUOTA the in-flight job-unit cap (`-` = no
+/// cap); a trailing `prio` marks the tenant as preempting background
+/// multi-pass work at the between-pass checkpoint.
+fn parse_tenants(s: &str) -> Result<Vec<TenantSpec>> {
+    s.split(',')
+        .map(|spec| {
+            let parts: Vec<&str> = spec.trim().split(':').collect();
+            if parts.len() < 2 || parts.len() > 5 || parts[0].is_empty() {
+                bail!("bad tenant spec `{spec}` (NAME:RATE_HZ[:BURST[:QUOTA[:prio]]])");
+            }
+            if !parts[0].chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                bail!("tenant name `{}` must be alphanumeric/_/- only", parts[0]);
+            }
+            let rate: f64 =
+                parts[1].parse().map_err(|e| anyhow!("bad rate in `{spec}`: {e}"))?;
+            if !rate.is_finite() || rate < 0.0 {
+                bail!("tenant rate in `{spec}` must be finite and >= 0");
+            }
+            let burst: u64 = match parts.get(2) {
+                Some(b) => b.parse().map_err(|e| anyhow!("bad burst in `{spec}`: {e}"))?,
+                None => (rate.ceil() as u64).max(1),
+            };
+            let mut t = TenantSpec::new(parts[0], rate, burst);
+            if let Some(&q) = parts.get(3) {
+                if q != "-" {
+                    let units: u64 =
+                        q.parse().map_err(|e| anyhow!("bad quota in `{spec}`: {e}"))?;
+                    if units == 0 {
+                        bail!("tenant quota in `{spec}` must be > 0 (use `-` for no cap)");
+                    }
+                    t = t.with_quota(units);
+                }
+            }
+            if let Some(&p) = parts.get(4) {
+                match p {
+                    "prio" => t = t.with_priority(),
+                    "-" => {}
+                    other => bail!("bad priority marker `{other}` in `{spec}` (use `prio`)"),
+                }
+            }
+            Ok(t)
         })
         .collect()
 }
@@ -299,7 +370,7 @@ fn run() -> Result<()> {
             if f.contains_key("autoscale") {
                 return serve_autoscale(&f);
             }
-            if f.contains_key("qos-classes") {
+            if f.contains_key("qos-classes") || f.contains_key("tenants") {
                 return serve_qos(&f);
             }
             if f.contains_key("backends") {
@@ -432,6 +503,23 @@ fn run() -> Result<()> {
                 .map(|s| parse_mix(s))
                 .transpose()?
                 .unwrap_or_default();
+            let tenants =
+                f.get("tenants").map(|s| parse_tenants(s)).transpose()?.unwrap_or_default();
+            let tenant_mix = f
+                .get("tenant-mix")
+                .map(|s| parse_mix(s))
+                .transpose()?
+                .unwrap_or_default();
+            if !tenant_mix.is_empty() && tenants.is_empty() {
+                bail!("--tenant-mix requires --tenants");
+            }
+            // a tenant roster without an explicit mix splits arrivals
+            // uniformly, so every configured tenant receives traffic
+            let tenant_mix = if !tenants.is_empty() && tenant_mix.is_empty() {
+                vec![1.0; tenants.len()]
+            } else {
+                tenant_mix
+            };
             // an explicit mix without explicit classes gets one
             // equal-weight class per fraction; --queue-capacity sets the
             // per-class cap on derived classes (an explicit --qos-classes
@@ -457,6 +545,7 @@ fn run() -> Result<()> {
                 policy,
                 dispatchers,
                 aging: Duration::from_secs_f64(aging_ms / 1e3),
+                tenants,
                 ..Default::default()
             };
             server_cfg.classes = match classes {
@@ -476,6 +565,7 @@ fn run() -> Result<()> {
                 sizes,
                 high_fraction: high_frac,
                 class_mix,
+                tenant_mix,
                 deadline: (deadline_ms > 0.0)
                     .then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
                 seed,
@@ -503,13 +593,16 @@ fn run() -> Result<()> {
     }
 }
 
-/// `serve --qos-classes`: a multi-class QoS frontend demo. Submits
-/// `--requests` FFTs round-robin across the configured classes through
-/// the WFQ/EDF scheduler and prints the per-class serve shares.
+/// `serve --qos-classes` / `serve --tenants`: a multi-class QoS
+/// frontend demo. Submits `--requests` FFTs round-robin across the
+/// configured classes (and, with `--tenants`, round-robin across the
+/// tenant roster so each tenant's token bucket and quota are exercised)
+/// through the WFQ/EDF scheduler, then prints the per-class serve
+/// shares and the per-tenant admitted/throttled breakdown.
 fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
-    let classes = parse_qos_classes(
-        f.get("qos-classes").expect("dispatched on the flag's presence"),
-    )?;
+    let classes = f.get("qos-classes").map(|s| parse_qos_classes(s)).transpose()?;
+    let tenants =
+        f.get("tenants").map(|s| parse_tenants(s)).transpose()?.unwrap_or_default();
     let requests: usize = f.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(96);
     let points: usize = f.get("points").map(|s| s.parse()).transpose()?.unwrap_or(1024);
     let shards: usize = f.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(2);
@@ -519,29 +612,36 @@ fn serve_qos(f: &HashMap<String, String>) -> Result<()> {
         "degrade" => AdmissionPolicy::Degrade,
         p => bail!("unknown policy `{p}` (block|shed|degrade)"),
     };
-    let n_classes = classes.len();
     let inner = ServiceHandle::Sharded(ShardedFftService::start(ShardPoolConfig {
         shards,
         service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
         ..Default::default()
     })?);
-    let server = TrafficServer::start(
-        inner,
-        ServerConfig { classes, policy, ..Default::default() },
-    )?;
+    let mut server_cfg = ServerConfig { policy, tenants, ..Default::default() };
+    if let Some(c) = classes {
+        server_cfg.classes = c;
+    }
+    let n_classes = server_cfg.classes.len();
+    let n_tenants = server_cfg.tenants.len();
+    let server = TrafficServer::start(inner, server_cfg)?;
     let input: Vec<(f32, f32)> =
         reference::test_signal(points, 11).iter().map(|c| c.to_f32_pair()).collect();
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..requests)
         .filter_map(|i| {
-            server.request(FftRequest::new(input.clone()).with_class(i % n_classes)).ok()
+            let mut req = FftRequest::new(input.clone()).with_class(i % n_classes);
+            if n_tenants > 0 {
+                req = req.with_tenant(i % n_tenants);
+            }
+            server.request(req).ok()
         })
         .collect();
     let served = handles.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
     let wall = t0.elapsed();
     println!(
-        "qos serve: {served}/{requests} fft{points} requests over {n_classes} classes \
+        "qos serve: {served}/{requests} fft{points} requests over {n_classes} classes{} \
          in {:.1} ms ({:.0} req/s)",
+        if n_tenants > 0 { format!(" and {n_tenants} tenants") } else { String::new() },
         wall.as_secs_f64() * 1e3,
         served as f64 / wall.as_secs_f64()
     );
@@ -781,6 +881,31 @@ mod tests {
             fl(&[("autoscale", "true"), ("swap-p99-ms", "5"), ("backends", "sim,pjrt")]);
         assert!(validate_autoscale_flags(&armed).is_ok());
         assert!(validate_autoscale_flags(&fl(&[("autoscale", "true")])).is_ok());
+    }
+
+    #[test]
+    fn tenant_spec_parsing_covers_every_field_and_rejects_garbage() {
+        let ts = parse_tenants("victim:50:10:-:prio,abuser:200:40:512,bg:5").unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].name, "victim");
+        assert_eq!(ts[0].rate_hz, 50.0);
+        assert_eq!(ts[0].burst, 10);
+        assert_eq!(ts[0].quota_units, None);
+        assert!(ts[0].priority);
+        assert_eq!(ts[1].name, "abuser");
+        assert_eq!(ts[1].quota_units, Some(512));
+        assert!(!ts[1].priority);
+        // burst defaults to the rate rounded up
+        assert_eq!(ts[2].burst, 5);
+        assert_eq!(ts[2].quota_units, None);
+
+        assert!(parse_tenants("noname").is_err(), "rate is required");
+        assert!(parse_tenants(":5:1").is_err(), "name is required");
+        assert!(parse_tenants("t:abc").is_err(), "rate must parse");
+        assert!(parse_tenants("t:-1").is_err(), "rate must be >= 0");
+        assert!(parse_tenants("t:5:1:0").is_err(), "quota 0 is not `no cap`");
+        assert!(parse_tenants("t:5:1:-:wat").is_err(), "only `prio` marks priority");
+        assert!(parse_tenants("we ird:5").is_err(), "names are alnum/_/-");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::time::{Duration, Instant};
 
 use egpu_fft::arch::{SmConfig, Variant};
-use egpu_fft::coordinator::{DegradeLadder, DegradeLevel, QosClass, QosScheduler};
+use egpu_fft::coordinator::{DegradeLadder, DegradeLevel, QosClass, QosScheduler, TokenBucket};
 use egpu_fft::coordinator::{FftRequest, FftService, ServiceConfig};
 use egpu_fft::fft::sched::schedule;
 use egpu_fft::fft::twiddle::{classify, twiddle, TwiddleKind};
@@ -465,6 +465,85 @@ fn qos_degraded_dispatch_is_bitwise_truncated_reference() {
         );
     }
     svc.shutdown();
+}
+
+/// PROPERTY: the tenant token bucket starts full, refill is monotone
+/// in `now`, saturates at the burst capacity, and a backwards clock
+/// never drains tokens — for random rates and bursts. Clock-injected
+/// like the scheduler core, so no timing or sleeps.
+#[test]
+fn tenant_bucket_refill_is_monotone_and_saturates() {
+    for case in 0..200u64 {
+        let mut rng = Rng::new(0xB0C4 + case);
+        let rate = 1.0 + rng.below(10_000) as f64 / 10.0; // 1..=1001 Hz
+        let burst = 1 + rng.below(48);
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(rate, burst, t0);
+        let mut drained = 0u64;
+        while b.try_take(t0) {
+            drained += 1;
+        }
+        assert_eq!(drained, burst, "case {case}: bucket starts exactly full");
+        let mut t_us = 0u64;
+        let mut prev = b.available(t0);
+        for step in 0..50 {
+            t_us += rng.below(100_000); // forward jumps up to 100ms
+            let now = t0 + Duration::from_micros(t_us);
+            let avail = b.available(now);
+            assert!(
+                avail + 1e-9 >= prev,
+                "case {case} step {step}: refill went backwards ({avail} < {prev})"
+            );
+            assert!(
+                avail <= burst as f64 + 1e-9,
+                "case {case} step {step}: refill past the burst cap ({avail} > {burst})"
+            );
+            // a clock reading from the past is ignored, not debited
+            let back = b.available(t0);
+            assert!(
+                (back - avail).abs() < 1e-9,
+                "case {case} step {step}: backwards clock changed the balance"
+            );
+            prev = avail;
+        }
+    }
+}
+
+/// PROPERTY: over any window `W` the bucket admits at most
+/// `burst + rate × W` requests, under random interleavings of
+/// same-instant call bursts and forward jumps — the rate-isolation
+/// bound the tenancy layer (and the `tenants` bench gate) relies on.
+#[test]
+fn tenant_bucket_never_over_admits_the_window_bound() {
+    for case in 0..200u64 {
+        let mut rng = Rng::new(0x7E4A + case);
+        let rate = rng.below(5000) as f64 / 5.0; // 0..1000 Hz, incl. 0
+        let burst = 1 + rng.below(32);
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(rate, burst, t0);
+        let mut t_us = 0u64;
+        let mut admitted = 0u64;
+        for _ in 0..400 {
+            // about half the calls land on the same instant (a call
+            // burst); the rest jump forward up to 20ms
+            if rng.below(2) == 1 {
+                t_us += rng.below(20_000);
+            }
+            if b.try_take(t0 + Duration::from_micros(t_us)) {
+                admitted += 1;
+            }
+        }
+        let window_s = t_us as f64 / 1e6;
+        let bound = burst as f64 + rate * window_s;
+        assert!(
+            admitted as f64 <= bound + 1e-6,
+            "case {case}: {admitted} admitted beyond burst {burst} + \
+             rate {rate} × {window_s:.3}s = {bound:.2}"
+        );
+        if rate == 0.0 {
+            assert!(admitted <= burst, "case {case}: zero-rate bucket admits only its burst");
+        }
+    }
 }
 
 /// PROPERTY: cycle accounting is deterministic and data-independent —

@@ -1,0 +1,286 @@
+//! Integration tests for the tenancy layer — the ISSUE's isolation
+//! contract, end to end through the traffic frontend:
+//!
+//! (a) a quota-throttled tenant never consumes a class-queue slot: its
+//!     refused requests are answered immediately with a typed error,
+//!     the class counters never see them, and a sibling tenant can
+//!     still fill every slot the throttled requests did not take;
+//! (b) quota units are released on completion, so a capped tenant
+//!     admits again once its in-flight work drains;
+//! (c) untenanted requests bypass the tenancy layer entirely even when
+//!     the server has one configured, and an unknown tenant index is a
+//!     typed error, not a panic;
+//! (d) cross-pass preemption: a background tenant's decomposed request
+//!     pauses at the between-pass checkpoint while a priority tenant's
+//!     request waits in a class queue, resumes within the bounded
+//!     yield cap, and still produces a bitwise-correct transform.
+
+use std::time::Duration;
+
+use egpu_fft::coordinator::{
+    AdmissionPolicy, Backend, FftRequest, FftService, QosClass, ServerConfig, ServiceConfig,
+    ServiceError, ServiceHandle, ShardPoolConfig, ShardedFftService, TenantSpec, TrafficServer,
+};
+use egpu_fft::fft::reference;
+
+fn signal(points: usize, seed: u64) -> Vec<(f32, f32)> {
+    reference::test_signal(points, seed).iter().map(|c| c.to_f32_pair()).collect()
+}
+
+fn pool_server(cores: usize, cfg: ServerConfig) -> TrafficServer {
+    let inner = ServiceHandle::Pool(
+        FftService::start(ServiceConfig {
+            cores,
+            backend: Backend::Simulator,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    TrafficServer::start(inner, cfg).unwrap()
+}
+
+/// A bucket that never throttles in a test's lifetime.
+fn generous(name: &str) -> TenantSpec {
+    TenantSpec::new(name, 1e9, 1_000_000)
+}
+
+/// (a) + (b): a tenant capped at one in-flight job unit is throttled
+/// immediately once its unit is out — and those refusals leave every
+/// class-queue slot for the conforming tenant, which can still fill
+/// the queue to its exact capacity. Completion releases the unit and
+/// the capped tenant admits again.
+#[test]
+fn quota_throttled_requests_never_consume_queue_slots() {
+    let server = pool_server(
+        1,
+        ServerConfig {
+            classes: vec![QosClass::new("only", 1).with_capacity(4)],
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            tenants: vec![generous("capped").with_quota(1), generous("free")],
+            ..Default::default()
+        },
+    );
+    // hold the single dispatcher so the queue actually fills
+    let slow = server
+        .request(FftRequest::new(signal(4096, 0)).with_class(0).with_tenant(1))
+        .unwrap();
+
+    let input = signal(1024, 3);
+    // first capped request takes the tenant's single job unit...
+    let capped = server
+        .request(FftRequest::new(input.clone()).with_class(0).with_tenant(0))
+        .unwrap();
+    // ...every further one is a typed throttle, answered without
+    // touching the queue
+    for _ in 0..5 {
+        match server.request(FftRequest::new(input.clone()).with_class(0).with_tenant(0)) {
+            Err(ServiceError::TenantThrottled { tenant }) => assert_eq!(tenant, 0),
+            other => panic!("expected TenantThrottled, got {other:?}"),
+        }
+    }
+    // the queue holds exactly one capped request; the conforming
+    // tenant can still take the remaining 3 slots of the 4-slot class
+    let free_handles: Vec<_> = (0..3)
+        .map(|_| {
+            server
+                .request(FftRequest::new(input.clone()).with_class(0).with_tenant(1))
+                .expect("throttled requests must not have taken these slots")
+        })
+        .collect();
+    // slot 5 overflows the class cap — proof the 5 throttled requests
+    // occupied nothing
+    match server.request(FftRequest::new(input.clone()).with_class(0).with_tenant(1)) {
+        Err(ServiceError::QueueFull { capacity }) => assert_eq!(capacity, 4),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+
+    assert!(slow.recv().unwrap().is_ok());
+    assert!(capped.recv().unwrap().is_ok());
+    for rx in free_handles {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    // (b) the completed request released its unit: the capped tenant
+    // admits again
+    let again = server
+        .request(FftRequest::new(input.clone()).with_class(0).with_tenant(0))
+        .expect("quota released on completion");
+    assert!(again.recv().unwrap().is_ok());
+
+    let snap = server.metrics();
+    let capped_row = &snap.tenants[0];
+    assert_eq!(capped_row.name, "capped");
+    assert_eq!(capped_row.submitted, 7);
+    assert_eq!(capped_row.admitted, 2);
+    assert_eq!(capped_row.throttled, 5);
+    assert_eq!(capped_row.completed, 2);
+    assert_eq!(capped_row.job_units, 2, "both admitted requests billed one unit each");
+    assert_eq!(capped_row.units_in_flight, 0, "nothing left charged after the drain");
+    let free_row = &snap.tenants[1];
+    assert_eq!(free_row.throttled, 0);
+    // throttled requests are invisible to the class/server counters:
+    // only the 6 served requests and the 1 shed overflow reached them
+    let sv = &snap.server;
+    assert_eq!(sv.submitted, 7, "the 5 throttled requests never touched the frontend");
+    assert_eq!(sv.shed, 1);
+    assert_eq!(sv.completed, 6);
+    assert!(sv.accounted());
+    server.shutdown();
+}
+
+/// (c) Untenanted requests bypass a configured tenancy layer (operator
+/// and system traffic is never throttled), and an out-of-range tenant
+/// index is the typed `UnknownTenant` error.
+#[test]
+fn untenanted_requests_bypass_and_unknown_tenants_are_typed_errors() {
+    // a roster whose only tenant admits nothing after its 1-token burst
+    let server = pool_server(
+        1,
+        ServerConfig {
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            tenants: vec![TenantSpec::new("starved", 0.0, 1)],
+            ..Default::default()
+        },
+    );
+    let input = signal(1024, 7);
+    // untenanted traffic sails through regardless of the roster state
+    for _ in 0..4 {
+        let rx = server.request(FftRequest::new(input.clone())).unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    // the starved tenant's single burst token admits exactly once
+    assert!(server
+        .request(FftRequest::new(input.clone()).with_tenant(0))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .is_ok());
+    for _ in 0..2 {
+        match server.request(FftRequest::new(input.clone()).with_tenant(0)) {
+            Err(ServiceError::TenantThrottled { tenant }) => assert_eq!(tenant, 0),
+            other => panic!("expected TenantThrottled, got {other:?}"),
+        }
+    }
+    match server.request(FftRequest::new(input.clone()).with_tenant(5)) {
+        Err(ServiceError::UnknownTenant { tenant }) => assert_eq!(tenant, 5),
+        other => panic!("expected UnknownTenant, got {other:?}"),
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.tenants[0].submitted, 3, "unknown-index probes are not counted");
+    assert_eq!(snap.tenants[0].admitted, 1);
+    assert_eq!(snap.tenants[0].throttled, 2);
+    assert_eq!(snap.server.submitted, 5, "4 untenanted + 1 admitted tenant request");
+    server.shutdown();
+}
+
+/// (d) Cross-pass preemption end to end: with one dispatcher, a
+/// background tenant's 65536-point request is mid-decomposition when a
+/// priority tenant's request lands in the queue. The priority request
+/// cannot dispatch (the dispatcher is busy), so the registry's watch
+/// stays raised through the background job's between-pass checkpoint —
+/// the job must yield there (bounded by the 250ms cap), then finish
+/// correctly, and the yield must be visible in the multipass counters.
+#[test]
+fn background_multipass_yields_to_a_waiting_priority_tenant() {
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 1,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..4).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(svc),
+        ServerConfig {
+            // admission weighs the 65536-point request at its true 512
+            // sub-job cost, so the class needs room for it plus the
+            // priority request behind it
+            classes: vec![QosClass::new("only", 1).with_capacity(1024)],
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            tenants: vec![
+                TenantSpec::new("bg", 1e9, 1_000_000),
+                TenantSpec::new("vip", 1e9, 1_000_000).with_priority(),
+            ],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // the background transform: 65536 points = 256 stage-1 sub-jobs,
+    // comfortably in flight by the time the vip request is enqueued
+    let bg = server
+        .request(FftRequest::new(signal(65_536, 21)).with_class(0).with_tenant(0))
+        .unwrap();
+    let vip = server
+        .request(FftRequest::new(signal(1024, 22)).with_class(0).with_tenant(1))
+        .unwrap();
+
+    let bg_result = bg.recv().unwrap().expect("background job completes despite the yield");
+    assert_eq!(bg_result.result.output.len(), 65_536);
+    let vip_result = vip.recv().unwrap().expect("priority request served after");
+    assert_eq!(vip_result.result.output.len(), 1024);
+
+    let snap = server.metrics();
+    assert!(
+        snap.multipass.yielded >= 1,
+        "the between-pass checkpoint must have paused for the waiting \
+         priority tenant: {:?}",
+        snap.multipass
+    );
+    assert_eq!(snap.multipass.preempted, 0, "a yield is not an abandonment");
+    assert_eq!(snap.tenants[0].completed, 1);
+    assert_eq!(snap.tenants[1].completed, 1);
+    // the decomposed request was billed its true multi-pass cost
+    assert!(
+        snap.tenants[0].job_units > 1,
+        "decomposed work bills n1 + n2 units: {:?}",
+        snap.tenants[0]
+    );
+    assert_eq!(snap.tenants[1].job_units, 1);
+    server.shutdown();
+}
+
+/// (d, bounded) The yield cap, not the priority tenant, decides the
+/// worst case: a manually raised watch that never clears delays a
+/// decomposed request by at most ~250ms per checkpoint — the request
+/// still completes, bitwise equal to an unwatched run.
+#[test]
+fn stuck_preempt_watch_is_bounded_by_the_yield_cap() {
+    use egpu_fft::coordinator::PreemptWatch;
+
+    let svc = FftService::start(ServiceConfig {
+        cores: 2,
+        backend: Backend::Simulator,
+        ..Default::default()
+    })
+    .unwrap();
+    let input = signal(8192, 5);
+    let plain = svc.request(FftRequest::new(input.clone())).recv().unwrap().unwrap();
+
+    let watch = PreemptWatch::manual();
+    watch.set(1); // raised forever: nothing will ever dispatch it away
+    let t0 = std::time::Instant::now();
+    let watched = svc
+        .request(FftRequest::new(input).with_preempt_watch(watch))
+        .recv()
+        .unwrap()
+        .expect("a stuck watch delays, never kills");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed >= Duration::from_millis(200),
+        "the checkpoint must actually have paused (took {elapsed:?})"
+    );
+    let bits = |v: &[(f32, f32)]| -> Vec<(u32, u32)> {
+        v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+    };
+    assert_eq!(
+        bits(&watched.output),
+        bits(&plain.output),
+        "yielding changes scheduling, never numerics"
+    );
+    assert!(svc.metrics().multipass.yielded >= 1);
+    svc.shutdown();
+}
