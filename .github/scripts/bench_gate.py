@@ -15,10 +15,12 @@ second past the single-pass ceiling) and `benches/hotpath.rs`
 zero-copy arena path, measured with a no-op backend so FFT compute is
 excluded) and `benches/tenants.rs` (per-tenant `tenant_rps` /
 `p99_interference` rows — adversarial multi-tenant isolation: the
-victim's queue-wait p99 under an abusive flood over its solo p99),
-reduces each metric to an aggregate, and fails when an aggregate
-crosses the committed `BENCH_baseline.json` limit by more than the
-threshold.
+victim's queue-wait p99 under an abusive flood over its solo p99)
+and `benches/ntt.rs` (per-config `ntt_rps` rows — Goldilocks NTT
+serving throughput through the same stack, saturated single-pass and
+four-step multipass legs), reduces each metric to an aggregate, and
+fails when an aggregate crosses the committed `BENCH_baseline.json`
+limit by more than the threshold.
 
 Two check directions:
 
@@ -58,6 +60,7 @@ Usage:
                   [--largefft BENCH_largefft.json] \
                   [--hotpath BENCH_hotpath.json] \
                   [--tenants BENCH_tenants.json] \
+                  [--ntt BENCH_ntt.json] \
                   [--emit-ratchet suggested_baseline.json]
     bench_gate.py --baseline BENCH_baseline.json \
                   --merge-artifact suggested_baseline.json
@@ -84,6 +87,7 @@ CHECKS = [
     ("hotpath", "ns_per_job_max", "ns_per_job", "max", "ceiling"),
     ("tenants", "agg_tenant_rps", "tenant_rps", "geomean", "floor"),
     ("tenants", "p99_interference_max", "p99_interference", "max", "ceiling"),
+    ("ntt", "agg_ntt_rps", "ntt_rps", "geomean", "floor"),
 ]
 
 # Ratchet tuning: floors rise toward 80% of observed; ceilings tighten
@@ -348,6 +352,7 @@ def main(argv=None):
     ap.add_argument("--largefft")
     ap.add_argument("--hotpath")
     ap.add_argument("--tenants")
+    ap.add_argument("--ntt")
     ap.add_argument(
         "--emit-ratchet",
         metavar="PATH",
@@ -390,6 +395,7 @@ def main(argv=None):
         "largefft": args.largefft,
         "hotpath": args.hotpath,
         "tenants": args.tenants,
+        "ntt": args.ntt,
     }
     results, threshold = run_gate(baseline, files)
 

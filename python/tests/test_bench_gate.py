@@ -36,6 +36,7 @@ def baseline(
     largefft=True,
     hotpath=True,
     tenants=True,
+    ntt=True,
 ):
     base = {
         "threshold": threshold,
@@ -67,6 +68,8 @@ def baseline(
             "agg_tenant_rps": 50.0,
             "p99_interference_max": 8.0,
         }
+    if ntt:
+        base["ntt"] = {"agg_ntt_rps": 50.0}
     return base
 
 
@@ -115,6 +118,16 @@ def tenants_rows(tenant_rps=100.0, interference=2.0):
     ]
 
 
+def ntt_rows(ntt_rps=100.0):
+    """Per-config rows, the shape benches/ntt.rs emits (saturated
+    single-pass legs plus the four-step multipass leg)."""
+    return [
+        {"config": "saturated_2shard_1024", "ntt_rps": ntt_rps * 2},
+        {"config": "saturated_2shard_4096", "ntt_rps": ntt_rps},
+        {"config": "multipass_65536", "ntt_rps": ntt_rps / 2},
+    ]
+
+
 def backend_rows(routed_rps=200.0, overhead=0.1):
     """Per-config rows, the shape benches/backend.rs emits (pinned and
     routed throughput rows plus validation-sampling rows)."""
@@ -140,6 +153,7 @@ def files_for(
     ns_per_job=50000.0,
     tenant_rps=100.0,
     interference=2.0,
+    ntt_rps=100.0,
 ):
     return {
         "shard": write_rows(tmp_path, "shard.json", [{"jobs_per_s": shard_jps}]),
@@ -158,6 +172,7 @@ def files_for(
         "tenants": write_rows(
             tmp_path, "tenants.json", tenants_rows(tenant_rps, interference)
         ),
+        "ntt": write_rows(tmp_path, "ntt.json", ntt_rows(ntt_rps)),
     }
 
 
@@ -325,6 +340,37 @@ class TestThreshold:
         )
         assert by_key(results, "p99_interference_max")["ok"]
 
+    def test_ntt_rows_aggregate_and_pass(self, tmp_path):
+        # geomean over the per-config serving rates (200, 100, 50)
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path))
+        r = by_key(results, "agg_ntt_rps")
+        assert r["ok"]
+        assert r["current"] == pytest.approx(100.0)  # cbrt(200 * 100 * 50)
+        assert r["rows"] == 3
+
+    def test_ntt_throughput_floor_trips(self, tmp_path):
+        # geomean 40 is below the 50 * 0.85 committed floor
+        results, _ = bench_gate.run_gate(baseline(), files_for(tmp_path, ntt_rps=40.0))
+        assert not by_key(results, "agg_ntt_rps")["ok"]
+        assert by_key(results, "agg_jobs_per_s")["ok"], "other floors unaffected"
+
+    def test_stalled_ntt_leg_fails_the_floor(self, tmp_path):
+        # a zero-throughput leg (e.g. the multipass path wedged) must
+        # collapse the geomean to 0, not be dropped from it
+        files = files_for(tmp_path)
+        files["ntt"] = write_rows(
+            tmp_path,
+            "stalled_ntt.json",
+            [
+                {"config": "saturated_2shard_1024", "ntt_rps": 500.0},
+                {"config": "multipass_65536", "ntt_rps": 0.0},
+            ],
+        )
+        results, _ = bench_gate.run_gate(baseline(), files)
+        r = by_key(results, "agg_ntt_rps")
+        assert r["current"] == 0.0
+        assert not r["ok"]
+
     def test_fully_starved_tenant_fails_the_floor(self, tmp_path):
         # a tenant served nothing in the adversarial phase collapses the
         # geomean to 0 — isolation that starves the victim is a failure
@@ -438,6 +484,19 @@ class TestMissingInputs:
         files["tenants"] = None
         results, _ = bench_gate.run_gate(baseline(tenants=False), files)
         assert all(r["section"] != "tenants" for r in results)
+
+    def test_gated_ntt_section_without_file_raises(self, tmp_path):
+        files = files_for(tmp_path)
+        files["ntt"] = None
+        with pytest.raises(SystemExit, match="no --ntt file"):
+            bench_gate.run_gate(baseline(), files)
+
+    def test_ungated_ntt_section_is_skipped(self, tmp_path):
+        # pre-NTT baselines carry no ntt section
+        files = files_for(tmp_path)
+        files["ntt"] = None
+        results, _ = bench_gate.run_gate(baseline(ntt=False), files)
+        assert all(r["section"] != "ntt" for r in results)
 
     def test_tenants_rows_missing_interference_raise(self, tmp_path):
         files = files_for(tmp_path)
@@ -591,6 +650,8 @@ class TestMain:
             files["hotpath"],
             "--tenants",
             files["tenants"],
+            "--ntt",
+            files["ntt"],
             *extra,
         ]
 

@@ -1,0 +1,195 @@
+//! Bench: Goldilocks NTT serving throughput through the full stack —
+//! the second workload the CI gate holds to a floor.
+//!
+//! Three legs, each emitting one JSON row with an `ntt_rps` field (the
+//! gate takes the geometric mean across rows against
+//! `ntt.agg_ntt_rps` in `BENCH_baseline.json`):
+//!
+//! * **saturated 1024 / 4096**: open-loop `ntt` loadgen mix against a
+//!   fresh two-shard server, offered ~1.5x the host kernel's measured
+//!   capacity so the achieved rate reads serving capacity, not arrival
+//!   luck. Admission, QoS, tenancy and sharded dispatch are all in the
+//!   measured path.
+//! * **multipass 65536**: sequential above-ceiling requests through the
+//!   sharded service — each decomposes 256 × 256 through the four-step
+//!   orchestration, so the row meters the staged path end to end.
+//!
+//! Every leg hard-asserts exactness on a sampled request (the output
+//! must equal the host kernel integer for integer) — a bench that
+//! serves wrong answers fast must fail CI, not ratchet the baseline.
+//!
+//! ```sh
+//! cargo bench --bench ntt                      # full run
+//! cargo bench --bench ntt -- --quick           # CI-sized run
+//! cargo bench --bench ntt -- --json BENCH_ntt.json
+//! ```
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use egpu_fft::coordinator::{
+    loadgen, AdmissionPolicy, Backend, FftCompute, FftRequest, LoadgenConfig, ServerConfig,
+    ServiceConfig, ServiceHandle, ShardPoolConfig, ShardedFftService, TenantSpec, TrafficServer,
+};
+use egpu_fft::fft::field;
+
+fn sharded(shards: usize) -> ShardedFftService {
+    ShardedFftService::start(ShardPoolConfig {
+        shards,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Measured host-kernel NTT rate at `points`, transforms/s — the
+/// calibration anchor that keeps "saturated" meaning the same thing on
+/// fast and slow runners.
+fn calibrate_host_ntt_rps(points: usize) -> f64 {
+    let x = field::test_elements(points, 7);
+    let iters = 100u32;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(field::ntt(std::hint::black_box(&x)));
+    }
+    iters as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Hard exactness check through whatever `compute` serves: one request,
+/// integer equality against the standalone host kernel.
+fn assert_exact(compute: &dyn FftCompute, points: usize, seed: u64) {
+    let input = field::test_elements(points, seed);
+    let r = compute
+        .request(FftRequest::ntt(input.clone()))
+        .recv()
+        .unwrap()
+        .expect("NTT request served");
+    let got: Vec<u64> = r.output.iter().map(|&w| field::unpack(w)).collect();
+    assert_eq!(got, field::ntt(&input), "{points}-point NTT served inexactly");
+}
+
+/// One saturated open-loop leg at a single transform size: offered rate
+/// is 1.5x the calibrated two-shard capacity, Shed admission absorbs
+/// the overload, and the achieved completion rate is the row's
+/// `ntt_rps`.
+fn run_saturated(points: usize, duration: Duration) -> (f64, u64, u64) {
+    let svc = sharded(2);
+    assert_exact(&svc, points, 0xBE);
+    let host_rps = calibrate_host_ntt_rps(points);
+    let offered = 1.5 * 2.0 * host_rps;
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(svc),
+        ServerConfig {
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 4,
+            tenants: vec![TenantSpec::new("prover", 1e9, 1_000_000)],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            rate_hz: offered,
+            duration,
+            sizes: vec![points],
+            tenant_mix: vec![offered],
+            ..LoadgenConfig::ntt()
+        },
+    );
+    println!("-- saturated ntt{points} (host kernel ~{host_rps:.0} rps/core) --");
+    print!("{}", report.render());
+    assert!(report.accounted, "ntt{points}: every request must be answered");
+    assert!(report.completed > 0, "ntt{points}: saturated run served nothing");
+    server.shutdown();
+    (report.achieved_rps, report.completed, report.shed)
+}
+
+/// The multipass leg: `count` sequential 65536-point requests, each
+/// decomposing 256 × 256 through the four-step orchestration.
+fn run_multipass(count: u32) -> (f64, u64) {
+    let svc = sharded(2);
+    let input = field::test_elements(65_536, 0xAB);
+    let want = field::ntt(&input);
+    let t0 = Instant::now();
+    for i in 0..count {
+        let r = svc
+            .request(FftRequest::ntt(input.clone()))
+            .recv()
+            .unwrap()
+            .expect("multipass NTT served");
+        if i == 0 {
+            let got: Vec<u64> = r.output.iter().map(|&w| field::unpack(w)).collect();
+            assert_eq!(got, want, "65536-point multipass NTT served inexactly");
+        }
+    }
+    let rps = count as f64 / t0.elapsed().as_secs_f64();
+    let stage_jobs = svc.metrics().multipass.stage_jobs();
+    println!("-- multipass ntt65536: {rps:.1} rps, {stage_jobs} stage jobs --");
+    (rps, stage_jobs)
+}
+
+struct Row {
+    config: String,
+    ntt_rps: f64,
+    completed: u64,
+    shed: u64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let duration = if quick { Duration::from_millis(1500) } else { Duration::from_secs(4) };
+    let mp_count = if quick { 3 } else { 10 };
+    println!(
+        "\n=== ntt: Goldilocks serving throughput{} ===",
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    for points in [1024usize, 4096] {
+        let (rps, completed, shed) = run_saturated(points, duration);
+        let config = format!("saturated_2shard_{points}");
+        rows.push(Row { config, ntt_rps: rps, completed, shed });
+    }
+    let (mp_rps, stage_jobs) = run_multipass(mp_count);
+    rows.push(Row {
+        config: "multipass_65536".into(),
+        ntt_rps: mp_rps,
+        completed: mp_count as u64,
+        shed: 0,
+    });
+    assert_eq!(stage_jobs, 512 * mp_count as u64, "every request decomposes 256 + 256");
+
+    println!("\n  {:<24} {:>12} {:>10} {:>10}", "config", "ntt_rps", "completed", "shed");
+    for r in &rows {
+        println!("  {:<24} {:>12.1} {:>10} {:>10}", r.config, r.ntt_rps, r.completed, r.shed);
+    }
+
+    if let Some(path) = json_path {
+        let mut json = String::from("[\n");
+        for (i, r) in rows.iter().enumerate() {
+            let _ = write!(
+                json,
+                "  {{\"bench\": \"ntt\", \"config\": \"{}\", \"ntt_rps\": {:.1}, \
+                 \"completed\": {}, \"shed\": {}, \"quick\": {}}}{}\n",
+                r.config,
+                r.ntt_rps,
+                r.completed,
+                r.shed,
+                quick,
+                if i + 1 == rows.len() { "" } else { "," }
+            );
+        }
+        json.push_str("]\n");
+        std::fs::write(&path, json).expect("writing bench JSON");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+}

@@ -62,7 +62,7 @@ use super::metrics::BackendStat;
 use super::qos::DegradeLevel;
 use super::request::{FftCompute, FftRequest};
 use super::server::ServiceHandle;
-use super::{cross_error, FftResult, ServiceError};
+use super::{cross_error, FftResult, ServiceError, Workload};
 use crate::fft::{self, reference};
 use crate::runtime::PjrtHandle;
 
@@ -361,9 +361,13 @@ impl BackendSet {
     /// service, which serves it by four-step decomposition (see
     /// [`FftCompute::request`]); alternate lanes only ever see
     /// single-pass sizes, which is also all the calibration pass ever
-    /// seeds cost entries for.
+    /// seeds cost entries for. An NTT request takes the same bypass:
+    /// alternate lanes speak f32 complex arithmetic only, so the
+    /// modular kernel is always served by the simulator service (which
+    /// runs it in exact u64 arithmetic on the host) — routing can never
+    /// hand a prime-field transform to a float lane.
     pub fn request(&self, req: FftRequest) -> Receiver<Result<FftResult>> {
-        if req.needs_decomposition() {
+        if req.needs_decomposition() || req.workload == Workload::Ntt {
             return self.sim.request(req);
         }
         let FftRequest { input, level, .. } = req;
@@ -665,6 +669,37 @@ mod tests {
             assert_eq!(fired, want, "fraction {fraction}");
             set.shutdown();
         }
+    }
+
+    #[test]
+    fn ntt_requests_bypass_the_lane_router_and_stay_exact() {
+        use crate::fft::field;
+        struct Nop;
+        impl FftBackend for Nop {
+            fn name(&self) -> &str {
+                "nop"
+            }
+            fn fft(&self, input: &[(f32, f32)]) -> Result<Vec<(f32, f32)>> {
+                Ok(input.to_vec())
+            }
+        }
+        let mut set = set_with(0.0);
+        set.register("nop", Box::new(Nop), 1).unwrap();
+        // Make the float lane irresistibly cheap for 256 points: if the
+        // router ever saw the NTT request, it would hand it to `nop`
+        // (an echo) and the answer would be wrong.
+        set.sim_stats.cost.lock().unwrap().insert(256, 1000.0);
+        set.alternates[0].stats.cost.lock().unwrap().insert(256, 1.0);
+        let elems = field::test_elements(256, 5);
+        let r = set.request(FftRequest::ntt(elems.clone())).recv().unwrap().unwrap();
+        let got: Vec<u64> = r.output.iter().map(|&w| field::unpack(w)).collect();
+        assert_eq!(got, field::ntt(&elems), "NTT served exactly, never by a float lane");
+        assert_eq!(
+            set.alternates[0].stats.served.load(Ordering::Relaxed),
+            0,
+            "the alternate never saw the modular transform"
+        );
+        set.shutdown();
     }
 
     #[test]

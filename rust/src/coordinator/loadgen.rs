@@ -15,7 +15,9 @@
 //!
 //! Requests draw transform sizes from a mixed 256–4096 pool (or the
 //! [`LoadgenConfig::large_n`] mix, which reaches past the single-pass
-//! ceiling to 65536 points through the multi-pass path), split
+//! ceiling to 65536 points through the multi-pass path; or the
+//! [`LoadgenConfig::ntt`] mix, which submits Goldilocks prime-field
+//! NTT payloads through the same frontend), split
 //! across the server's QoS classes by [`LoadgenConfig::class_mix`]
 //! (arrival fractions per class index), and may carry a deadline. When
 //! the server runs a tenant registry, [`LoadgenConfig::tenant_mix`]
@@ -40,7 +42,8 @@ use super::buffer::JobArena;
 use super::metrics::{ClassStats, TenantStats};
 use super::request::FftRequest;
 use super::server::{ServerResult, TrafficServer};
-use super::ServiceError;
+use super::{ServiceError, Workload};
+use crate::fft::field;
 use crate::fft::reference;
 
 /// Small deterministic xorshift64* generator — the offline image has no
@@ -134,6 +137,10 @@ pub struct LoadgenConfig {
     pub tenant_mix: Vec<f64>,
     /// Per-request deadline (None = whatever the server defaults to).
     pub deadline: Option<Duration>,
+    /// Which transform kernel every generated request asks for:
+    /// complex-f32 FFT (the default) or the Goldilocks prime-field NTT
+    /// (payloads are packed field elements instead of signals).
+    pub workload: Workload,
     /// RNG seed: same seed, same arrival offsets and request mix.
     pub seed: u64,
 }
@@ -150,6 +157,7 @@ impl Default for LoadgenConfig {
             class_mix: Vec::new(),
             tenant_mix: Vec::new(),
             deadline: Some(Duration::from_millis(25)),
+            workload: Workload::Fft,
             seed: 42,
         }
     }
@@ -171,6 +179,15 @@ impl LoadgenConfig {
             deadline: None,
             ..Default::default()
         }
+    }
+
+    /// The NTT mix: the default size pool and arrival process, but
+    /// every request carries a Goldilocks prime-field payload and asks
+    /// for the modular kernel — admission, QoS scheduling, sharding and
+    /// tenancy treat it exactly like FFT traffic, so the same run
+    /// shapes apply to both workloads.
+    pub fn ntt() -> Self {
+        LoadgenConfig { workload: Workload::Ntt, ..Default::default() }
     }
 }
 
@@ -594,7 +611,15 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         .sizes
         .iter()
         .enumerate()
-        .map(|(k, &points)| signal(points, cfg.seed.wrapping_add(k as u64)))
+        .map(|(k, &points)| {
+            let seed = cfg.seed.wrapping_add(k as u64);
+            match cfg.workload {
+                Workload::Fft => signal(points, seed),
+                Workload::Ntt => {
+                    field::test_elements(points, seed).into_iter().map(field::pack).collect()
+                }
+            }
+        })
         .collect();
     let start = Instant::now();
     let mut pending: Vec<Receiver<ServerResult>> = Vec::with_capacity(offsets.len());
@@ -612,7 +637,9 @@ pub fn run(server: &TrafficServer, cfg: &LoadgenConfig) -> LoadReport {
         let class = pick_class(rng.next_f64());
         submitted += 1;
         let slot = JobArena::global().lease_copy(&prototypes[idx]);
-        let mut req = FftRequest::with_input_slot(slot).with_class(class);
+        let mut req = FftRequest::with_input_slot(slot)
+            .with_workload(cfg.workload)
+            .with_class(class);
         if !t_mix.is_empty() {
             req = req.with_tenant(pick_from_mix(&t_mix, rng.next_f64()));
         }
@@ -749,6 +776,18 @@ mod tests {
         assert!(cfg.sizes.iter().all(|&s| s.is_power_of_two()));
         assert!(cfg.rate_hz < LoadgenConfig::default().rate_hz);
         assert!(cfg.deadline.is_none());
+    }
+
+    #[test]
+    fn ntt_mix_carries_field_payloads_on_the_default_shape() {
+        let cfg = LoadgenConfig::ntt();
+        assert_eq!(cfg.workload, Workload::Ntt);
+        assert_eq!(cfg.sizes, LoadgenConfig::default().sizes, "same size pool as FFT runs");
+        // A prototype payload built the way run() builds it must decode
+        // back to canonical field elements.
+        let packed: Vec<(f32, f32)> =
+            field::test_elements(256, 7).into_iter().map(field::pack).collect();
+        assert!(packed.iter().all(|&w| field::unpack(w) < field::P));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::sync::Mutex;
 
 use super::buffer::{ArenaStats, JobArena};
 use crate::fft::cache::CacheStats;
+use crate::fft::field::Workload;
 use crate::profile::Profile;
 
 /// Latency histogram bucket upper bounds, µs (log-spaced).
@@ -370,6 +371,7 @@ struct Inner {
     served: u64,
     errors: u64,
     by_points: HashMap<usize, u64>,
+    by_workload: HashMap<Workload, u64>,
     wall_us_sum: f64,
     wall_us_max: f64,
     latency_hist: [u64; 8],
@@ -386,12 +388,13 @@ struct Inner {
 }
 
 impl Metrics {
-    /// Record one successfully served job: its (post-degrade) size,
-    /// wall latency, and cycle profile when the simulator ran it.
-    pub fn observe(&self, points: usize, wall_us: f64, profile: Option<&Profile>) {
+    /// Record one successfully served job: its workload, (post-degrade)
+    /// size, wall latency, and cycle profile when the simulator ran it.
+    pub fn observe(&self, workload: Workload, points: usize, wall_us: f64, profile: Option<&Profile>) {
         let mut m = self.inner.lock().unwrap();
         m.served += 1;
         *m.by_points.entry(points).or_insert(0) += 1;
+        *m.by_workload.entry(workload).or_insert(0) += 1;
         m.wall_us_sum += wall_us;
         m.wall_us_max = m.wall_us_max.max(wall_us);
         let bucket = LATENCY_BUCKETS_US.iter().position(|&b| wall_us <= b).unwrap_or(7);
@@ -425,6 +428,7 @@ impl Metrics {
             served: m.served,
             errors: m.errors,
             by_points: m.by_points.clone(),
+            by_workload: m.by_workload.clone(),
             mean_wall_us: if m.served == 0 { 0.0 } else { m.wall_us_sum / m.served as f64 },
             max_wall_us: m.wall_us_max,
             latency_hist: m.latency_hist,
@@ -556,6 +560,9 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Served jobs by (post-degrade) transform size.
     pub by_points: HashMap<usize, u64>,
+    /// Served jobs by workload (complex-f32 FFT vs Goldilocks NTT) —
+    /// how much of the engine's traffic each transform family carried.
+    pub by_workload: HashMap<Workload, u64>,
     /// Mean wall latency over served jobs, µs.
     pub mean_wall_us: f64,
     /// Largest wall latency observed, µs.
@@ -651,6 +658,14 @@ impl MetricsSnapshot {
         pts.sort();
         for (p, c) in pts {
             s.push_str(&format!("  fft{p}: {c} jobs\n"));
+        }
+        if self.by_workload.len() > 1 || self.by_workload.contains_key(&Workload::Ntt) {
+            let count = |w| self.by_workload.get(&w).copied().unwrap_or(0);
+            s.push_str(&format!(
+                "  workloads: {} fft / {} ntt jobs\n",
+                count(Workload::Fft),
+                count(Workload::Ntt)
+            ));
         }
         if self.virtual_us > 0.0 {
             s.push_str(&format!(
@@ -841,13 +856,15 @@ mod tests {
         let m = Metrics::default();
         let mut p = Profile::new(771.0);
         p.record(OpClass::Fp, 771); // 1 us of virtual time
-        m.observe(256, 120.0, Some(&p));
-        m.observe(256, 80.0, None);
+        m.observe(Workload::Fft, 256, 120.0, Some(&p));
+        m.observe(Workload::Fft, 256, 80.0, None);
         m.observe_error();
         let s = m.snapshot();
         assert_eq!(s.served, 2);
         assert_eq!(s.errors, 1);
         assert_eq!(s.by_points[&256], 2);
+        assert_eq!(s.by_workload[&Workload::Fft], 2);
+        assert!(!s.by_workload.contains_key(&Workload::Ntt));
         assert!((s.mean_wall_us - 100.0).abs() < 1e-9);
         assert!((s.virtual_us - 1.0).abs() < 1e-9);
         assert_eq!(s.efficiency_pct(), 100.0);
@@ -857,9 +874,9 @@ mod tests {
     fn percentiles_from_histogram() {
         let m = Metrics::default();
         for _ in 0..99 {
-            m.observe(256, 40.0, None);
+            m.observe(Workload::Fft, 256, 40.0, None);
         }
-        m.observe(256, 9000.0, None);
+        m.observe(Workload::Fft, 256, 9000.0, None);
         let s = m.snapshot();
         assert_eq!(s.latency_percentile_us(0.5), 50.0);
         assert_eq!(s.latency_percentile_us(0.999), 10_000.0);
@@ -868,8 +885,24 @@ mod tests {
     #[test]
     fn render_contains_counts() {
         let m = Metrics::default();
-        m.observe(1024, 10.0, None);
+        m.observe(Workload::Fft, 1024, 10.0, None);
         assert!(m.snapshot().render().contains("fft1024: 1 jobs"));
+    }
+
+    /// The per-workload split only renders once NTT traffic exists —
+    /// an all-FFT stack keeps its legacy output byte-for-byte.
+    #[test]
+    fn workload_split_accounting_and_render() {
+        let m = Metrics::default();
+        m.observe(Workload::Fft, 256, 10.0, None);
+        assert!(!m.snapshot().render().contains("workloads:"));
+        m.observe(Workload::Ntt, 256, 10.0, None);
+        m.observe(Workload::Ntt, 1024, 12.0, None);
+        let s = m.snapshot();
+        assert_eq!(s.by_workload[&Workload::Fft], 1);
+        assert_eq!(s.by_workload[&Workload::Ntt], 2);
+        assert_eq!(s.served, 3, "the aggregate keeps counting both workloads");
+        assert!(s.render().contains("workloads: 1 fft / 2 ntt jobs"), "{}", s.render());
     }
 
     #[test]

@@ -116,6 +116,7 @@ use anyhow::{anyhow, Result};
 use thiserror::Error;
 
 use crate::arch::{SmConfig, Variant};
+use crate::fft::field;
 use crate::fft::{self, cache::PlanCache, reference};
 use crate::profile::Profile;
 use crate::runtime::{spawn_pjrt_server, PjrtHandle};
@@ -135,6 +136,7 @@ pub use qos::{
     default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler, UnitQuota,
     DEFAULT_CLASS_CAPACITY,
 };
+pub use crate::fft::field::Workload;
 pub use request::{FftCompute, FftRequest, MultipassGate, MultipassStats};
 pub use server::{AdmissionPolicy, DegradeControl, ServedFft, ServerConfig};
 pub use server::{PressureMeter, PressureSample, ServerResult, ServiceHandle, TrafficServer};
@@ -260,6 +262,11 @@ struct Job {
     /// routing, metrics and the executor all see the *served* size.
     /// Batch jobs always run at `Full`.
     level: qos::DegradeLevel,
+    /// Which transform kernel serves the payload (FFT on the simulated
+    /// SM / PJRT lane, NTT on the host integer datapath). Batch jobs
+    /// are same-workload by construction — `serve_request_all` groups
+    /// per workload before coalescing by size.
+    workload: Workload,
 }
 
 impl Job {
@@ -376,7 +383,7 @@ impl FftService {
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             return request::serve_staged(self, &self.plans, &self.mp_stats, &self.mp_gate, id, req);
         }
-        self.enqueue(req.input, req.level)
+        self.enqueue(req.input, req.level, req.workload)
     }
 
     /// Submit a set of requests and wait for every result, in
@@ -394,21 +401,27 @@ impl FftService {
     pub fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
         request::serve_request_all(
             self,
-            |inputs| self.enqueue_batch(inputs),
-            |input, level| self.enqueue(input, level),
+            |inputs, workload| self.enqueue_batch(inputs, workload),
+            |input, level, workload| self.enqueue(input, level, workload),
             reqs,
         )
     }
 
     /// Queue one single job at `level` (the unified
     /// [`FftService::request`] fronts it).
-    fn enqueue(&self, input: JobSlot, level: qos::DegradeLevel) -> Receiver<Result<FftResult>> {
+    fn enqueue(
+        &self,
+        input: JobSlot,
+        level: qos::DegradeLevel,
+        workload: Workload,
+    ) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Job {
             kind: JobKind::Single { id, input, reply: reply_tx },
             submitted: Instant::now(),
             level,
+            workload,
         };
         match self.tx.as_ref() {
             Some(tx) => send_or_fail(tx, job),
@@ -417,10 +430,11 @@ impl FftService {
         reply_rx
     }
 
-    /// Coalesce `inputs` into per-size groups (stable within each
-    /// group), queue one batch job per group, and return every result
-    /// in the original submission order.
-    fn enqueue_batch(&self, inputs: Vec<JobSlot>) -> Result<Vec<FftResult>> {
+    /// Coalesce `inputs` (all carrying the same `workload` — callers
+    /// group per workload first) into per-size groups (stable within
+    /// each group), queue one batch job per group, and return every
+    /// result in the original submission order.
+    fn enqueue_batch(&self, inputs: Vec<JobSlot>, workload: Workload) -> Result<Vec<FftResult>> {
         let n = inputs.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -441,6 +455,7 @@ impl FftService {
                 kind: JobKind::Batch { ids: batch_ids, inputs: batch_inputs, reply: reply_tx },
                 submitted: Instant::now(),
                 level: qos::DegradeLevel::Full,
+                workload,
             };
             match self.tx.as_ref() {
                 Some(tx) => send_or_fail(tx, job),
@@ -650,11 +665,15 @@ fn worker_loop(
 /// to the single-queue path).
 fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, job: Job) {
     let level = job.level;
+    let workload = job.workload;
     match job.kind {
         JobKind::Single { id, mut input, reply } => {
             // Apply the QoS degrade level where the job is served: the
             // executor, the metrics and the routing all see the
-            // truncated (served) size, on both schedulers alike.
+            // truncated (served) size, on both schedulers alike. (For
+            // an NTT payload each `(f32, f32)` slot is one bit-packed
+            // u64 element, so truncation keeps a power-of-two prefix
+            // exactly as it does for complex samples.)
             if level != qos::DegradeLevel::Full {
                 let keep = input.len() >> level.shift();
                 input.truncate(keep);
@@ -663,7 +682,7 @@ fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, j
                 // pure dispatch-overhead path: meter and reply with the
                 // slot untouched (no compute, no copy, no allocation)
                 let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
-                metrics.observe(input.len(), wall_us, None);
+                metrics.observe(workload, input.len(), wall_us, None);
                 let _ = reply.send(Ok(FftResult {
                     id,
                     output: input,
@@ -673,11 +692,11 @@ fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, j
                 }));
                 return;
             }
-            let res = serve_one(core, engine, id, &input);
+            let res = serve_one(core, engine, id, &input, workload);
             let wall_us = job.submitted.elapsed().as_secs_f64() * 1e6;
             match res {
                 Ok((output, profile, served_by)) => {
-                    metrics.observe(input.len(), wall_us, profile.as_ref());
+                    metrics.observe(workload, input.len(), wall_us, profile.as_ref());
                     // write the transform back into the slot the request
                     // arrived in: the reply reuses the leased buffer
                     input.copy_from(&output);
@@ -696,13 +715,16 @@ fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, j
             }
         }
         JobKind::Batch { ids, inputs, reply } => {
-            let results = serve_batch(core, engine, &ids, inputs, job.submitted);
+            let results = serve_batch(core, engine, &ids, inputs, job.submitted, workload);
             metrics.observe_batch(results.len());
             for r in &results {
                 match r {
-                    Ok(res) => {
-                        metrics.observe(res.output.len(), res.wall_us, res.profile.as_ref())
-                    }
+                    Ok(res) => metrics.observe(
+                        workload,
+                        res.output.len(),
+                        res.wall_us,
+                        res.profile.as_ref(),
+                    ),
                     Err(_) => metrics.observe_error(),
                 }
             }
@@ -711,13 +733,41 @@ fn handle_job(core: &mut Core, engine: &Option<PjrtHandle>, metrics: &Metrics, j
     }
 }
 
+/// Serve one Goldilocks NTT job on the host integer datapath: unpack
+/// the bit-packed wire payload, canonicalize into `[0, p)` (clients
+/// may submit any `u64`), transform in place with the plan-cache's
+/// shared root table, and re-pack. The f32 SIMT SM and the PJRT
+/// artifact only implement the complex FFT — 64-bit modular arithmetic
+/// does not fit their datapath — so every backend serves NTT here,
+/// while admission, QoS, tenancy, sharding and decomposition above
+/// stay workload-blind. No cycle profile is reported.
+fn serve_ntt(
+    core: &mut Core,
+    input: &[(f32, f32)],
+) -> Result<(Vec<(f32, f32)>, Option<Profile>, usize)> {
+    let n = input.len();
+    if !n.is_power_of_two() || n < 4 || n > fft::MAX_SINGLE_PASS_POINTS {
+        // same typed rejection as an unplannable FFT size
+        return Err(fft::FftError::Plan(fft::PlanError::BadSize(n)).into());
+    }
+    let roots = core.plans.ntt_roots(n);
+    let mut elems: Vec<u64> =
+        input.iter().map(|&w| field::canonicalize(field::unpack(w))).collect();
+    field::ntt_with_roots(&mut elems, &roots);
+    Ok((elems.into_iter().map(field::pack).collect(), None, core.id))
+}
+
 /// Serve one request; returns (output, profile, serving core id).
 fn serve_one(
     core: &mut Core,
     engine: &Option<PjrtHandle>,
     id: u64,
     input: &[(f32, f32)],
+    workload: Workload,
 ) -> Result<(Vec<(f32, f32)>, Option<Profile>, usize)> {
+    if workload == Workload::Ntt {
+        return serve_ntt(core, input);
+    }
     match core.cfg.backend {
         Backend::Simulator => {
             let run = core.executor(input.len())?.run(input)?;
@@ -756,8 +806,27 @@ fn serve_batch(
     ids: &[u64],
     inputs: Vec<JobSlot>,
     submitted: Instant,
+    workload: Workload,
 ) -> Vec<Result<FftResult>> {
     let mut results = Vec::with_capacity(inputs.len());
+    if workload == Workload::Ntt && core.cfg.backend != Backend::Noop {
+        // NTT batches stream through the host kernel: one shared root
+        // table for the whole same-size group, each transform written
+        // back into the slot it arrived in.
+        for (id, mut input) in ids.iter().zip(inputs) {
+            results.push(serve_ntt(core, &input).map(|(output, profile, served_by)| {
+                input.copy_from(&output);
+                FftResult {
+                    id: *id,
+                    output: input,
+                    profile,
+                    core: served_by,
+                    wall_us: submitted.elapsed().as_secs_f64() * 1e6,
+                }
+            }));
+        }
+        return results;
+    }
     match core.cfg.backend {
         Backend::Simulator => {
             let points = inputs.first().map(|s| s.len()).unwrap_or(0);
@@ -802,7 +871,7 @@ fn serve_batch(
         }
         Backend::Pjrt | Backend::Validate => {
             for (id, mut input) in ids.iter().zip(inputs) {
-                results.push(serve_one(core, engine, *id, &input).map(
+                results.push(serve_one(core, engine, *id, &input, workload).map(
                     |(output, profile, served_by)| {
                         input.copy_from(&output);
                         FftResult {
@@ -909,6 +978,7 @@ mod tests {
             kind: JobKind::Single { id: 0, input: JobSlot::from(signal(256, 0)), reply: reply_tx },
             submitted: Instant::now(),
             level: qos::DegradeLevel::Full,
+            workload: Workload::Fft,
         };
         send_or_fail(&tx, job);
         let err = reply_rx.recv().expect("typed reply, not a dead channel").unwrap_err();
@@ -931,6 +1001,7 @@ mod tests {
             },
             submitted: Instant::now(),
             level: qos::DegradeLevel::Full,
+            workload: Workload::Fft,
         };
         send_or_fail(&tx, job);
         let results = reply_rx.recv().unwrap();
@@ -1149,6 +1220,97 @@ mod tests {
         assert_eq!(m.multipass.completed, 0);
         assert_eq!(m.multipass.col_jobs, 0, "stage 2 never submitted");
         assert_eq!(m.multipass.row_jobs, 32, "stage 1 had already run");
+        svc.shutdown();
+    }
+
+    /// A single-pass NTT request through the pool service matches the
+    /// naive O(n²) modular DFT oracle exactly — integer equality, no
+    /// tolerance.
+    #[test]
+    fn ntt_request_matches_naive_modular_dft_exactly() {
+        let svc = FftService::start(ServiceConfig { cores: 2, ..Default::default() }).unwrap();
+        for (n, seed) in [(256usize, 7u64), (1024, 8)] {
+            let input = field::test_elements(n, seed);
+            let want = field::dft_naive(&input);
+            let r = svc.request(FftRequest::ntt(input)).recv().unwrap().unwrap();
+            assert!(r.profile.is_none(), "NTT runs on the host datapath, no cycle profile");
+            let got: Vec<u64> = r.output.iter().map(|&w| field::unpack(w)).collect();
+            assert_eq!(got, want, "n={n}: NTT service output differs from the oracle");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.served, 2);
+        assert_eq!(m.by_workload.get(&Workload::Ntt).copied().unwrap_or(0), 2);
+        svc.shutdown();
+    }
+
+    /// Non-canonical payloads (elements ≥ p) are reduced on unpack, so
+    /// any u64 input is served as its canonical representative.
+    #[test]
+    fn ntt_request_canonicalizes_wire_payloads() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let canonical = field::test_elements(256, 3);
+        // shift a few elements up by p: same residue class, different bits
+        let mut shifted = canonical.clone();
+        for x in shifted.iter_mut().take(4) {
+            if *x < u64::MAX - field::P {
+                *x += field::P;
+            }
+        }
+        let a = svc.request(FftRequest::ntt(canonical)).recv().unwrap().unwrap();
+        let b = svc.request(FftRequest::ntt(shifted)).recv().unwrap().unwrap();
+        assert_eq!(&*a.output, &*b.output, "residue classes serve identically");
+        svc.shutdown();
+    }
+
+    /// A mixed `request_all` keeps workloads apart: the same transform
+    /// size carries an FFT and an NTT in one batch call, and each comes
+    /// back served by its own kernel.
+    #[test]
+    fn mixed_workload_batch_keeps_kernels_apart() {
+        let svc = FftService::start(ServiceConfig { cores: 2, ..Default::default() }).unwrap();
+        let elems = field::test_elements(256, 5);
+        let want_ntt = field::ntt(&elems);
+        let reqs = vec![
+            FftRequest::new(signal(256, 1)),
+            FftRequest::ntt(elems),
+            FftRequest::new(signal(256, 2)),
+        ];
+        let results = svc.request_all(reqs).unwrap();
+        assert_eq!(results.len(), 3);
+        for (i, seed) in [(0usize, 1u64), (2, 2)] {
+            let want = reference::fft(&test_signal(256, seed));
+            let got: Vec<_> = results[i]
+                .output
+                .iter()
+                .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+                .collect();
+            assert!(reference::rms_rel_error(&got, &want) < fft::F32_TOL, "slot {i}");
+        }
+        let got_ntt: Vec<u64> =
+            results[1].output.iter().map(|&w| field::unpack(w)).collect();
+        assert_eq!(got_ntt, want_ntt, "NTT slot served exactly");
+        svc.shutdown();
+    }
+
+    /// A non-power-of-two NTT size gets the same typed plan rejection
+    /// as an unplannable FFT, without killing the worker.
+    #[test]
+    fn bad_ntt_size_surfaces_typed_error() {
+        let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
+        let err = svc
+            .request(FftRequest::ntt(vec![1u64; 100]))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<fft::FftError>(),
+                Some(fft::FftError::Plan(fft::PlanError::BadSize(100)))
+            ),
+            "want PlanError::BadSize, got {err:#}"
+        );
+        let ok = svc.request(FftRequest::ntt(field::test_elements(256, 1))).recv().unwrap();
+        assert!(ok.is_ok(), "worker survives a bad NTT size");
         svc.shutdown();
     }
 

@@ -25,7 +25,9 @@ use super::qos::DegradeLevel;
 use super::tenant::PreemptWatch;
 use super::{FftResult, ServiceError};
 use crate::fft::cache::PlanCache;
+use crate::fft::field::{self, ButterflyField, Goldilocks, Workload};
 use crate::fft::multipass::{self, MultipassPlan, Stage, MAX_SINGLE_PASS_POINTS};
+use crate::fft::twiddle::Complex32;
 
 /// One FFT request, as accepted by every service in the stack.
 ///
@@ -42,6 +44,13 @@ pub struct FftRequest {
     /// leased [`JobSlot`] that travels by move through every layer
     /// (admission → routing → executor → reply) without cloning.
     pub input: JobSlot,
+    /// Which transform the payload asks for: a complex-f32 FFT (the
+    /// default) or a Goldilocks NTT whose `u64` elements ride the same
+    /// `(f32, f32)` slots bit-packed (see [`crate::fft::field::pack`]).
+    /// Every layer above the executor — admission, QoS, tenancy,
+    /// sharding, decomposition — treats both identically; only the
+    /// compute kernel and the twiddle/root tables differ.
+    pub workload: Workload,
     /// QoS degrade level: the request is truncated to
     /// `len >> level.shift()` where it is served — and, for a request
     /// above the pass ceiling, *before* decomposition, so a Half-level
@@ -92,6 +101,7 @@ impl FftRequest {
     pub fn with_input_slot(input: JobSlot) -> Self {
         FftRequest {
             input,
+            workload: Workload::Fft,
             level: DegradeLevel::Full,
             class: 0,
             deadline: None,
@@ -99,6 +109,22 @@ impl FftRequest {
             tenant: None,
             preempt: None,
         }
+    }
+
+    /// An NTT request over Goldilocks field elements: the `u64` payload
+    /// is bit-packed into the shared `(f32, f32)` wire format (lossless
+    /// — see [`crate::fft::field::pack`]) and the request is tagged
+    /// [`Workload::Ntt`]. Results unpack with
+    /// [`crate::fft::field::unpack`] / `Goldilocks::unpack_vec`.
+    pub fn ntt(input: Vec<u64>) -> Self {
+        Self::new(Goldilocks::pack_vec(input)).with_workload(Workload::Ntt)
+    }
+
+    /// Tag the transform this request asks for (default
+    /// [`Workload::Fft`]).
+    pub fn with_workload(mut self, workload: Workload) -> Self {
+        self.workload = workload;
+        self
     }
 
     /// Set the QoS degrade level.
@@ -314,6 +340,7 @@ pub(crate) fn serve_staged(
     let (tx, rx) = channel();
     let started = Instant::now();
     let ceiling = req.pass_ceiling();
+    let workload = req.workload;
     let deadline = req.deadline;
     let preempt = req.preempt;
     let mut input = req.input;
@@ -329,82 +356,49 @@ pub(crate) fn serve_staged(
             return rx;
         }
     };
-    let twiddles = plans.stage_twiddles(&plan);
     let permit = gate.try_reserve();
     if permit.is_some() {
         stats.reserved.fetch_add(1, Ordering::Relaxed);
     } else {
         stats.spilled.fetch_add(1, Ordering::Relaxed);
     }
-    let run = multipass::run_with(
-        &plan,
-        &input,
-        &twiddles,
-        |jobs, stage| {
-            match stage {
-                Stage::Rows => stats.row_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed),
-                Stage::Cols => stats.col_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed),
-            };
-            if permit.is_some() {
-                // pipelined: one coalesced stage batch, chunked across
-                // the pool by the service's batch path. Sub-job grids
-                // are adopted as heap-backed slots (zero copy, no
-                // arena pressure from one large request's fan-out).
-                let results = compute.request_all(
-                    jobs.into_iter()
-                        .map(|j| FftRequest::with_input_slot(JobSlot::from(j)))
-                        .collect(),
-                )?;
-                Ok(results.into_iter().map(|r| r.output.into_vec()).collect())
-            } else {
-                // spilled: strictly one sub-job in flight at a time —
-                // zero pool monopolization, deadlock-free by
-                // construction, bitwise identical output
-                jobs.into_iter()
-                    .map(|j| {
-                        let r = compute
-                            .request(FftRequest::with_input_slot(JobSlot::from(j)))
-                            .recv()
-                            .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))??;
-                        Ok(r.output.into_vec())
-                    })
-                    .collect()
-            }
-        },
-        || {
-            let check_deadline = || match deadline {
-                Some(d) if started.elapsed() > d => {
-                    stats.preempted.fetch_add(1, Ordering::Relaxed);
-                    Err(anyhow::Error::new(ServiceError::DeadlineExceeded {
-                        waited_us: started.elapsed().as_secs_f64() * 1e6,
-                    }))
-                }
-                _ => Ok(()),
-            };
-            check_deadline()?;
-            if let Some(watch) = &preempt {
-                if watch.waiting() {
-                    // priority-tenant work is queued: pause before
-                    // submitting stage 2, bounded by the yield cap and
-                    // this request's own deadline
-                    stats.yielded.fetch_add(1, Ordering::Relaxed);
-                    let paused = Instant::now();
-                    while watch.waiting() && paused.elapsed() < MULTIPASS_YIELD_CAP {
-                        std::thread::sleep(Duration::from_millis(1));
-                        check_deadline()?;
-                    }
-                }
-            }
-            Ok(())
-        },
-    );
+    let staged = StagedRun {
+        compute,
+        stats,
+        pipelined: permit.is_some(),
+        deadline,
+        preempt,
+        started,
+    };
+    let run: Result<JobSlot> = match workload {
+        Workload::Fft => {
+            let twiddles = plans.stage_twiddles(&plan);
+            staged
+                .run::<Complex32>(&plan, &input, &twiddles)
+                // pack_vec is the identity for complex-f32: the output
+                // moves into the reply slot with no copy
+                .map(|out| JobSlot::from(Complex32::pack_vec(out)))
+        }
+        Workload::Ntt => {
+            let roots = plans.ntt_stage_roots(&plan);
+            // unpack the bit-packed wire payload; the field kernels
+            // require canonical elements in [0, p)
+            let elems: Vec<u64> = Goldilocks::unpack_vec(input.into_vec())
+                .into_iter()
+                .map(field::canonicalize)
+                .collect();
+            staged
+                .run::<Goldilocks>(&plan, &elems, &roots)
+                .map(|out| JobSlot::from(Goldilocks::pack_vec(out)))
+        }
+    };
     drop(permit);
     match run {
         Ok(output) => {
             stats.completed.fetch_add(1, Ordering::Relaxed);
             let _ = tx.send(Ok(FftResult {
                 id,
-                output: JobSlot::from(output),
+                output,
                 profile: None,
                 core: usize::MAX,
                 wall_us: started.elapsed().as_secs_f64() * 1e6,
@@ -417,37 +411,153 @@ pub(crate) fn serve_staged(
     rx
 }
 
+/// The field-generic heart of [`serve_staged`]: everything about a
+/// decomposed request that does not depend on the element type —
+/// pipelined vs spilled sub-job submission, stage-job accounting, and
+/// the between-pass deadline/preemption checkpoint — parameterized over
+/// a [`ButterflyField`] so the complex-f32 FFT and the Goldilocks NTT
+/// share the orchestration verbatim. Sub-jobs travel bit-packed in the
+/// common `(f32, f32)` wire format and are tagged `F::WORKLOAD` so the
+/// executor picks the matching kernel.
+struct StagedRun<'a> {
+    compute: &'a dyn FftCompute,
+    stats: &'a MultipassStats,
+    pipelined: bool,
+    deadline: Option<Duration>,
+    preempt: Option<PreemptWatch>,
+    started: Instant,
+}
+
+impl StagedRun<'_> {
+    fn run<F: ButterflyField>(
+        &self,
+        plan: &MultipassPlan,
+        input: &[F::Elem],
+        twiddles: &[F::Elem],
+    ) -> Result<Vec<F::Elem>> {
+        multipass::run_with::<F, anyhow::Error>(
+            plan,
+            input,
+            twiddles,
+            |jobs, stage| {
+                match stage {
+                    Stage::Rows => {
+                        self.stats.row_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed)
+                    }
+                    Stage::Cols => {
+                        self.stats.col_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed)
+                    }
+                };
+                let to_req = |j: Vec<F::Elem>| {
+                    FftRequest::with_input_slot(JobSlot::from(F::pack_vec(j)))
+                        .with_workload(F::WORKLOAD)
+                };
+                if self.pipelined {
+                    // pipelined: one coalesced stage batch, chunked
+                    // across the pool by the service's batch path.
+                    // Sub-job grids are adopted as heap-backed slots
+                    // (zero copy for FFT, one lossless bit-repack for
+                    // NTT; no arena pressure from one request's
+                    // fan-out).
+                    let results = self
+                        .compute
+                        .request_all(jobs.into_iter().map(to_req).collect())?;
+                    Ok(results
+                        .into_iter()
+                        .map(|r| F::unpack_vec(r.output.into_vec()))
+                        .collect())
+                } else {
+                    // spilled: strictly one sub-job in flight at a
+                    // time — zero pool monopolization, deadlock-free
+                    // by construction, bitwise identical output
+                    jobs.into_iter()
+                        .map(|j| {
+                            let r = self
+                                .compute
+                                .request(to_req(j))
+                                .recv()
+                                .map_err(|_| anyhow::Error::new(ServiceError::WorkerGone))??;
+                            Ok(F::unpack_vec(r.output.into_vec()))
+                        })
+                        .collect()
+                }
+            },
+            || {
+                let check_deadline = || match self.deadline {
+                    Some(d) if self.started.elapsed() > d => {
+                        self.stats.preempted.fetch_add(1, Ordering::Relaxed);
+                        Err(anyhow::Error::new(ServiceError::DeadlineExceeded {
+                            waited_us: self.started.elapsed().as_secs_f64() * 1e6,
+                        }))
+                    }
+                    _ => Ok(()),
+                };
+                check_deadline()?;
+                if let Some(watch) = &self.preempt {
+                    if watch.waiting() {
+                        // priority-tenant work is queued: pause before
+                        // submitting stage 2, bounded by the yield cap
+                        // and this request's own deadline
+                        self.stats.yielded.fetch_add(1, Ordering::Relaxed);
+                        let paused = Instant::now();
+                        while watch.waiting() && paused.elapsed() < MULTIPASS_YIELD_CAP {
+                            std::thread::sleep(Duration::from_millis(1));
+                            check_deadline()?;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        )
+    }
+}
+
 /// The shared `request_all` shape for the pool and sharded services:
 /// coalesce what the old `submit_batch` coalesced (same-size Full-level
-/// requests within the ceiling, via `batch`), serve degraded requests
-/// individually (via `single`), route above-ceiling requests through
-/// `compute.request` (the staged path), and reassemble everything in
-/// submission order.
+/// requests within the ceiling, via `batch`, grouped per workload so an
+/// FFT and an NTT of the same size never land in one batch job), serve
+/// degraded requests individually (via `single`), route above-ceiling
+/// requests through `compute.request` (the staged path), and reassemble
+/// everything in submission order.
 pub(crate) fn serve_request_all(
     compute: &dyn FftCompute,
-    batch: impl FnOnce(Vec<JobSlot>) -> Result<Vec<FftResult>>,
-    single: impl Fn(JobSlot, DegradeLevel) -> Receiver<Result<FftResult>>,
+    mut batch: impl FnMut(Vec<JobSlot>, Workload) -> Result<Vec<FftResult>>,
+    single: impl Fn(JobSlot, DegradeLevel, Workload) -> Receiver<Result<FftResult>>,
     reqs: Vec<FftRequest>,
 ) -> Result<Vec<FftResult>> {
     let n = reqs.len();
     let mut slots: Vec<Option<FftResult>> = (0..n).map(|_| None).collect();
-    let mut simple: Vec<(usize, JobSlot)> = Vec::new();
+    let mut simple: Vec<(usize, JobSlot, Workload)> = Vec::new();
     let mut staged: Vec<(usize, FftRequest)> = Vec::new();
     let mut pending: Vec<(usize, Receiver<Result<FftResult>>)> = Vec::new();
     for (i, req) in reqs.into_iter().enumerate() {
         if req.needs_decomposition() {
             staged.push((i, req));
         } else if req.level == DegradeLevel::Full {
-            simple.push((i, req.input));
+            simple.push((i, req.input, req.workload));
         } else {
             // degraded requests keep per-request truncation semantics:
             // dispatched individually, in flight while the batch runs
-            pending.push((i, single(req.input, req.level)));
+            pending.push((i, single(req.input, req.level, req.workload)));
         }
     }
-    if !simple.is_empty() {
-        let (idxs, inputs): (Vec<usize>, Vec<JobSlot>) = simple.into_iter().unzip();
-        for (i, r) in idxs.into_iter().zip(batch(inputs)?) {
+    for workload in [Workload::Fft, Workload::Ntt] {
+        let mut rest = Vec::new();
+        let mut idxs = Vec::new();
+        let mut inputs = Vec::new();
+        for (i, slot, w) in simple {
+            if w == workload {
+                idxs.push(i);
+                inputs.push(slot);
+            } else {
+                rest.push((i, slot, w));
+            }
+        }
+        simple = rest;
+        if inputs.is_empty() {
+            continue;
+        }
+        for (i, r) in idxs.into_iter().zip(batch(inputs, workload)?) {
             slots[i] = Some(r);
         }
     }
@@ -469,6 +579,7 @@ mod tests {
     #[test]
     fn builder_defaults_and_chain() {
         let req = FftRequest::new(vec![(0.0, 0.0); 1024]);
+        assert_eq!(req.workload, Workload::Fft, "FFT is the default workload");
         assert_eq!(req.level, DegradeLevel::Full);
         assert_eq!(req.class, 0);
         assert_eq!(req.deadline, None);
@@ -488,6 +599,18 @@ mod tests {
         assert!(req.needs_decomposition(), "512 effective > 256 ceiling");
         assert_eq!(req.tenant, Some(1));
         assert!(req.preempt.is_some());
+    }
+
+    #[test]
+    fn ntt_constructor_tags_and_packs_losslessly() {
+        let elems: Vec<u64> = vec![0, 1, field::P - 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D];
+        let req = FftRequest::ntt(elems.clone());
+        assert_eq!(req.workload, Workload::Ntt);
+        assert_eq!(req.level, DegradeLevel::Full);
+        let back = Goldilocks::unpack_vec(req.input.into_vec());
+        assert_eq!(back, elems, "u64 payloads survive the (f32, f32) wire format");
+        let req = FftRequest::new(Vec::new()).with_workload(Workload::Ntt);
+        assert_eq!(req.workload, Workload::Ntt);
     }
 
     #[test]

@@ -86,7 +86,7 @@ use super::metrics::{ClassStats, LatencyRecorder, ServerStats};
 use super::qos::{default_two_class, DegradeLadder, DegradeLevel, QosClass, QosScheduler};
 use super::request::{FftCompute, FftRequest};
 use super::tenant::{TenantDenial, TenantRegistry, TenantSpec};
-use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService};
+use super::{FftResult, FftService, MetricsSnapshot, ServiceError, ShardedFftService, Workload};
 use crate::fft::multipass;
 
 /// What happens when a request arrives and its class queue is full.
@@ -273,6 +273,10 @@ impl FftCompute for ServiceHandle {
 /// carries class, deadline and enqueue time).
 struct Pending {
     input: JobSlot,
+    /// Which transform kernel the request asked for — rides through the
+    /// class queues untouched so the dispatcher rebuilds the backend
+    /// request under the same workload it was admitted with.
+    workload: Workload,
     /// Effective degrade level decided at admission (queue-driven level
     /// merged with the controller's operating level, floor-clamped).
     level: DegradeLevel,
@@ -740,6 +744,7 @@ impl TrafficServer {
             .or(self.cfg.default_deadline)
             .map(|d| now + d);
         let input = req.input;
+        let workload = req.workload;
         // An admitted-by-tenancy request that still fails class
         // admission (shed, or server closed) refunds its quota units —
         // the bucket token stays spent (see the method docs).
@@ -792,8 +797,9 @@ impl TrafficServer {
         let served_points = input.len() >> level.shift();
         let cost = multipass::job_cost(served_points, ceiling);
         let (reply, rx) = channel();
+        let pending = Pending { input, workload, level, cost, tenant, reply };
         st.sched
-            .try_enqueue(class, deadline, now, Pending { input, level, cost, tenant, reply })
+            .try_enqueue(class, deadline, now, pending)
             .expect("capacity checked under the same lock");
         st.cost[class] += cost;
         let class_depth = st.sched.depth(class);
@@ -951,7 +957,9 @@ fn dispatcher_loop(
         }
 
         let t0 = Instant::now();
-        let mut freq = FftRequest::with_input_slot(req.input).with_level(req.level);
+        let mut freq = FftRequest::with_input_slot(req.input)
+            .with_workload(req.workload)
+            .with_level(req.level);
         if let Some(d) = deadline {
             // Remaining budget rides the request so a decomposed large
             // transform can be preempted at its between-pass checkpoint

@@ -74,7 +74,7 @@ use super::metrics::ShardStat;
 use super::request::{self, FftCompute, FftRequest};
 use super::{
     coalesce_by_size, collect_batch_results, fail_job, handle_job, Backend, Core, FftResult, Job,
-    JobKind, Metrics, MetricsSnapshot, ServiceConfig, ServiceError,
+    JobKind, Metrics, MetricsSnapshot, ServiceConfig, ServiceError, Workload,
 };
 use crate::fft::cache::PlanCache;
 use crate::runtime::{spawn_pjrt_server, PjrtHandle};
@@ -456,7 +456,7 @@ impl ShardedFftService {
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             return request::serve_staged(self, &self.plans, &self.mp_stats, &self.mp_gate, id, req);
         }
-        self.enqueue(req.input, req.level)
+        self.enqueue(req.input, req.level, req.workload)
     }
 
     /// Submit a set of requests and wait for every result, in
@@ -468,8 +468,8 @@ impl ShardedFftService {
     pub fn request_all(&self, reqs: Vec<FftRequest>) -> Result<Vec<FftResult>> {
         request::serve_request_all(
             self,
-            |inputs| self.enqueue_batch(inputs),
-            |input, level| self.enqueue(input, level),
+            |inputs, workload| self.enqueue_batch(inputs, workload),
+            |input, level, workload| self.enqueue(input, level, workload),
             reqs,
         )
     }
@@ -480,6 +480,7 @@ impl ShardedFftService {
         &self,
         input: JobSlot,
         level: super::qos::DegradeLevel,
+        workload: Workload,
     ) -> Receiver<Result<FftResult>> {
         let (reply_tx, reply_rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -487,6 +488,7 @@ impl ShardedFftService {
             kind: JobKind::Single { id, input, reply: reply_tx },
             submitted: Instant::now(),
             level,
+            workload,
         };
         let points = job.points();
         let rt = self.routing.read().unwrap();
@@ -514,7 +516,7 @@ impl ShardedFftService {
     /// path. This is also what gives one decomposed large transform its
     /// cross-shard pipeline: every multi-pass stage arrives here as one
     /// same-size group and fans out over the pool.
-    fn enqueue_batch(&self, inputs: Vec<JobSlot>) -> Result<Vec<FftResult>> {
+    fn enqueue_batch(&self, inputs: Vec<JobSlot>, workload: Workload) -> Result<Vec<FftResult>> {
         let n = inputs.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -547,6 +549,7 @@ impl ShardedFftService {
                         },
                         submitted: Instant::now(),
                         level: super::qos::DegradeLevel::Full,
+                        workload,
                     };
                     // The first chunk follows normal affinity routing;
                     // the rest of a split group go straight to the
@@ -914,6 +917,31 @@ mod tests {
                 m.shards
             );
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_ntt_requests_are_exact_and_coalesce_per_workload() {
+        use crate::fft::field;
+        let svc = pool(2, 2);
+        // One NTT and one FFT of the same size in one batch: they must
+        // stay in separate kernels (per-workload grouping) and the NTT
+        // side must match the radix-2 field oracle exactly.
+        let elems = field::test_elements(256, 3);
+        let reqs = vec![
+            FftRequest::ntt(elems.clone()),
+            FftRequest::new(signal(256, 3)),
+        ];
+        let results = svc.request_all(reqs).unwrap();
+        let got: Vec<u64> = results[0].output.iter().map(|&w| field::unpack(w)).collect();
+        assert_eq!(got, field::ntt(&elems), "sharded NTT output is bit-exact");
+        let want = reference::fft(&reference::test_signal(256, 3));
+        let fgot: Vec<_> = results[1]
+            .output
+            .iter()
+            .map(|&(re, im)| fft::Cpx::new(re as f64, im as f64))
+            .collect();
+        assert!(reference::rms_rel_error(&fgot, &want) < fft::F32_TOL);
         svc.shutdown();
     }
 

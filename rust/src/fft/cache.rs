@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::codegen::{generate, FftProgram};
+use super::field::{self, Goldilocks, Workload};
 use super::multipass::{self, MultipassPlan};
 use super::plan::PlanError;
 use crate::arch::{SmConfig, Variant};
@@ -102,13 +103,30 @@ struct Inner {
     tick: u64,
 }
 
+/// Key for one memoized inter-stage table: the workload discriminator
+/// keeps an NTT root table from ever colliding with an FFT twiddle
+/// table for the same factorization — both workloads share the one
+/// [`STAGE_TWIDDLE_CAPACITY`]-bounded pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct StageKey {
+    workload: Workload,
+    plan: MultipassPlan,
+}
+
+/// One memoized inter-stage table, in its field's native element type.
+#[derive(Clone)]
+enum StageTable {
+    Fft(Arc<Vec<(f32, f32)>>),
+    Ntt(Arc<Vec<u64>>),
+}
+
 struct TwiddleSlot {
-    table: Arc<Vec<(f32, f32)>>,
+    table: StageTable,
     last_used: u64,
 }
 
 struct TwiddleInner {
-    map: HashMap<MultipassPlan, TwiddleSlot>,
+    map: HashMap<StageKey, TwiddleSlot>,
     tick: u64,
 }
 
@@ -122,6 +140,10 @@ pub struct PlanCache {
     capacity: usize,
     inner: Mutex<Inner>,
     twiddles: Mutex<TwiddleInner>,
+    /// Single-pass NTT root tables by size. Unbounded by design: the
+    /// legal single-pass sizes are the powers of two up to 4096, a
+    /// dozen small tables totalling well under one stage table.
+    roots: Mutex<HashMap<usize, Arc<Vec<u64>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -141,6 +163,7 @@ impl PlanCache {
             capacity: capacity.max(1),
             inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
             twiddles: Mutex::new(TwiddleInner { map: HashMap::new(), tick: 0 }),
+            roots: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -226,33 +249,77 @@ impl PlanCache {
         program
     }
 
-    /// Fetch the shared inter-stage twiddle table for one multi-pass
-    /// factorization, computing it on a miss. Like programs, tables are
-    /// built outside the lock with a double-checked insert (a 2^20-point
-    /// table costs tens of ms to synthesize); eviction is LRU over a
-    /// separate [`STAGE_TWIDDLE_CAPACITY`]-sized pool.
+    /// Fetch the shared complex inter-stage twiddle table for one
+    /// multi-pass FFT factorization, computing it on a miss. Like
+    /// programs, tables are built outside the lock with a
+    /// double-checked insert (a 2^20-point table costs tens of ms to
+    /// synthesize); eviction is LRU over a separate
+    /// [`STAGE_TWIDDLE_CAPACITY`]-sized pool shared with the NTT root
+    /// tables (the key carries the workload, so same-plan tables of
+    /// the two fields never collide).
     pub fn stage_twiddles(&self, plan: &MultipassPlan) -> Arc<Vec<(f32, f32)>> {
-        {
-            let mut inner = self.twiddles.lock().unwrap();
-            inner.tick += 1;
-            let tick = inner.tick;
-            if let Some(slot) = inner.map.get_mut(plan) {
-                slot.last_used = tick;
-                return Arc::clone(&slot.table);
-            }
+        let key = StageKey { workload: Workload::Fft, plan: *plan };
+        if let Some(StageTable::Fft(t)) = self.stage_lookup(&key) {
+            return t;
         }
         let table = Arc::new(multipass::stage_twiddles(plan));
+        match self.stage_insert(key, StageTable::Fft(table)) {
+            StageTable::Fft(t) => t,
+            StageTable::Ntt(_) => unreachable!("an Fft key always holds an Fft table"),
+        }
+    }
+
+    /// Fetch the shared Goldilocks inter-stage root table for one
+    /// multi-pass NTT factorization — the [`stage_twiddles`] analogue
+    /// for [`Workload::Ntt`], living in the same LRU pool under its
+    /// own workload key.
+    ///
+    /// [`stage_twiddles`]: PlanCache::stage_twiddles
+    pub fn ntt_stage_roots(&self, plan: &MultipassPlan) -> Arc<Vec<u64>> {
+        let key = StageKey { workload: Workload::Ntt, plan: *plan };
+        if let Some(StageTable::Ntt(t)) = self.stage_lookup(&key) {
+            return t;
+        }
+        let table = Arc::new(multipass::stage_table::<Goldilocks>(plan));
+        match self.stage_insert(key, StageTable::Ntt(table)) {
+            StageTable::Ntt(t) => t,
+            StageTable::Fft(_) => unreachable!("an Ntt key always holds an Ntt table"),
+        }
+    }
+
+    /// Fetch the shared forward root table for one single-pass NTT
+    /// size — the executor-side analogue of a program's twiddle image.
+    pub fn ntt_roots(&self, points: usize) -> Arc<Vec<u64>> {
+        {
+            let roots = self.roots.lock().unwrap();
+            if let Some(t) = roots.get(&points) {
+                return Arc::clone(t);
+            }
+        }
+        let table = Arc::new(field::root_table(points));
+        let mut roots = self.roots.lock().unwrap();
+        Arc::clone(roots.entry(points).or_insert(table))
+    }
+
+    fn stage_lookup(&self, key: &StageKey) -> Option<StageTable> {
         let mut inner = self.twiddles.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        if let Some(slot) = inner.map.get_mut(plan) {
+        let slot = inner.map.get_mut(key)?;
+        slot.last_used = tick;
+        Some(slot.table.clone())
+    }
+
+    fn stage_insert(&self, key: StageKey, table: StageTable) -> StageTable {
+        let mut inner = self.twiddles.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(slot) = inner.map.get_mut(&key) {
             // another worker synthesized the same table first: share theirs
             slot.last_used = tick;
-            return Arc::clone(&slot.table);
+            return slot.table.clone();
         }
-        inner
-            .map
-            .insert(*plan, TwiddleSlot { table: Arc::clone(&table), last_used: tick });
+        inner.map.insert(key, TwiddleSlot { table: table.clone(), last_used: tick });
         while inner.map.len() > STAGE_TWIDDLE_CAPACITY {
             let victim = inner
                 .map
@@ -420,6 +487,33 @@ mod tests {
         let again = cache.stage_twiddles(&plans[0]);
         assert!(!Arc::ptr_eq(&first, &again), "evicted table must rebuild");
         assert_eq!(*first, *again, "rebuilt table is identical");
+    }
+
+    /// Same factorization, two workloads: the workload in the stage
+    /// key must keep the tables apart — an NTT request served an FFT
+    /// twiddle table (or vice versa) would be silently wrong data.
+    #[test]
+    fn stage_tables_never_collide_across_workloads() {
+        let cache = PlanCache::new(4);
+        let plan = MultipassPlan::new(1024, 64).unwrap();
+        let fft = cache.stage_twiddles(&plan);
+        let ntt = cache.ntt_stage_roots(&plan);
+        assert_eq!(fft.len(), 1024);
+        assert_eq!(ntt.len(), 1024);
+        assert_eq!(*ntt, multipass::stage_table::<Goldilocks>(&plan));
+        // both stay resident and re-fetches share, despite equal plans
+        assert!(Arc::ptr_eq(&fft, &cache.stage_twiddles(&plan)));
+        assert!(Arc::ptr_eq(&ntt, &cache.ntt_stage_roots(&plan)));
+    }
+
+    #[test]
+    fn ntt_roots_are_shared_and_correct() {
+        let cache = PlanCache::new(4);
+        let a = cache.ntt_roots(256);
+        let b = cache.ntt_roots(256);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the first table");
+        assert_eq!(*a, field::root_table(256));
+        assert_eq!(a[0], 1);
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! Butterfly fields: the element-type boundary that makes the engine
+//! workload-agnostic.
+//!
+//! Every transform the engine serves is the same algebra — butterflies
+//! over an N-th root of unity — instantiated in some field. The
+//! [`ButterflyField`] trait names exactly the operations the shared
+//! machinery needs (root powers, add, mul, and a packed wire format),
+//! and two fields implement it:
+//!
+//! * [`Complex32`](super::twiddle::Complex32) — the paper's f32 complex
+//!   FFT, computed on the simulated SM;
+//! * [`Goldilocks`] — the 64-bit prime field `p = 2^64 − 2^32 + 1`,
+//!   whose number-theoretic transform (NTT) is the butterfly workload
+//!   of the ZK-prover repos in the paper's lineage (`bellman`'s
+//!   GPU FFT kernels run the identical four-step strategy over a prime
+//!   field). Goldilocks is the field where `mulmod` is nearly free: the
+//!   128-bit product reduces with two shifts and two adds because
+//!   `2^64 ≡ 2^32 − 1 (mod p)` and `2^96 ≡ −1 (mod p)`.
+//!
+//! What is shared across fields: the four-step multipass decomposition
+//! and its index algebra ([`super::multipass`]), the stage-table memo
+//! in the [`super::cache::PlanCache`], job slots / arena buffers,
+//! sharding, QoS, tenancy, and every metrics surface. What is per
+//! field: the butterfly arithmetic itself and the executor datapath —
+//! the f32 SIMT SM for [`Workload::Fft`], a host 64-bit-ALU loop for
+//! [`Workload::Ntt`] (the simulated SM's f32 lanes cannot carry 64-bit
+//! modular arithmetic; the follow-up eGPU papers add exactly such an
+//! integer datapath variant). Plan generation and code generation
+//! ([`super::plan`], [`super::codegen`]) therefore stay FFT-only.
+//!
+//! Elements travel through the (f32, f32)-typed slots and rings
+//! bit-packed ([`ButterflyField::pack_vec`]): one `u64` field element
+//! is carried as the raw bit halves of a pair. This is lossless because
+//! the serving layers only *move* payloads — lease, copy, truncate,
+//! transpose — and never apply floating-point arithmetic to them; the
+//! unpack at the executor restores the exact integer.
+
+use std::fmt;
+
+use super::twiddle::twiddle;
+
+/// Which transform algebra a request runs under — threaded from
+/// [`FftRequest`](crate::coordinator::FftRequest) through jobs, plan
+/// cache keys and metrics so the two workloads share every serving
+/// layer without ever sharing a table or an executor compute path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Complex f32 FFT on the simulated SM (the default).
+    #[default]
+    Fft,
+    /// Goldilocks number-theoretic transform on the host 64-bit ALU.
+    Ntt,
+}
+
+impl Workload {
+    /// Lower-case name, as used by CLI flags and metrics labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Fft => "fft",
+            Workload::Ntt => "ntt",
+        }
+    }
+
+    /// Parse a CLI name (`"fft"` / `"ntt"`).
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "fft" => Some(Workload::Fft),
+            "ntt" => Some(Workload::Ntt),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Workload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The operations the shared transform machinery needs from a field.
+///
+/// `Elem::default()` must be the additive zero, `twiddle(n, 0)` the
+/// multiplicative one, and `twiddle(n, k)` the k-th power of a
+/// primitive n-th root of unity with the *consistency law*
+/// `twiddle(m, k) == twiddle(n, k·n/m)` for `m | n` — the property the
+/// four-step decomposition's index algebra relies on. Both provided
+/// fields derive their roots from one generator, so the law holds by
+/// construction.
+pub trait ButterflyField {
+    /// Field element (native representation, not the wire format).
+    type Elem: Copy + PartialEq + fmt::Debug + Default + Send + Sync + 'static;
+    /// Human-readable field name (metrics / assertions).
+    const NAME: &'static str;
+    /// The workload discriminator requests in this field carry.
+    const WORKLOAD: Workload;
+    /// k-th power of the primitive n-th root of unity.
+    fn twiddle(n: usize, k: usize) -> Self::Elem;
+    /// Field addition.
+    fn add(a: Self::Elem, b: Self::Elem) -> Self::Elem;
+    /// Field multiplication.
+    fn mul(a: Self::Elem, b: Self::Elem) -> Self::Elem;
+    /// Move a native vector into the packed `(f32, f32)` wire format
+    /// the job slots carry (bit-preserving; identity for complex f32).
+    fn pack_vec(v: Vec<Self::Elem>) -> Vec<(f32, f32)>;
+    /// Inverse of [`ButterflyField::pack_vec`].
+    fn unpack_vec(v: Vec<(f32, f32)>) -> Vec<Self::Elem>;
+}
+
+/// The Goldilocks prime `p = 2^64 − 2^32 + 1`.
+pub const P: u64 = 0xFFFF_FFFF_0000_0001;
+
+/// `2^64 mod p = 2^32 − 1` — the constant both reduction steps use.
+const EPSILON: u64 = 0xFFFF_FFFF;
+
+/// Multiplicative generator of the full group `F_p*` (order `p − 1`).
+pub const GENERATOR: u64 = 7;
+
+/// `p − 1 = 2^32 · (2^32 − 1)`: roots of unity exist for every
+/// power-of-two order up to `2^32` — far past the engine's largest
+/// decomposable transform.
+pub const TWO_ADICITY: u32 = 32;
+
+/// Marker type for the Goldilocks field (see [`ButterflyField`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Goldilocks;
+
+impl ButterflyField for Goldilocks {
+    type Elem = u64;
+    const NAME: &'static str = "goldilocks";
+    const WORKLOAD: Workload = Workload::Ntt;
+
+    fn twiddle(n: usize, k: usize) -> u64 {
+        debug_assert!(n.is_power_of_two());
+        powmod(root_of_unity(n.trailing_zeros()), (k % n) as u64)
+    }
+
+    fn add(a: u64, b: u64) -> u64 {
+        addmod(a, b)
+    }
+
+    fn mul(a: u64, b: u64) -> u64 {
+        mulmod(a, b)
+    }
+
+    fn pack_vec(v: Vec<u64>) -> Vec<(f32, f32)> {
+        v.into_iter().map(pack).collect()
+    }
+
+    fn unpack_vec(v: Vec<(f32, f32)>) -> Vec<u64> {
+        v.into_iter().map(unpack).collect()
+    }
+}
+
+/// Bit-pack one field element into the `(f32, f32)` wire format: the
+/// high and low 32-bit halves travel as raw f32 bit patterns.
+/// `f32::from_bits`/`to_bits` are bit-preserving in Rust, and no
+/// serving layer performs FP arithmetic on payload words, so
+/// `unpack(pack(x)) == x` for every `u64`.
+#[inline]
+pub fn pack(x: u64) -> (f32, f32) {
+    (f32::from_bits((x >> 32) as u32), f32::from_bits(x as u32))
+}
+
+/// Inverse of [`pack`].
+#[inline]
+pub fn unpack(w: (f32, f32)) -> u64 {
+    ((w.0.to_bits() as u64) << 32) | w.1.to_bits() as u64
+}
+
+/// Canonicalizing addition mod p. Accepts any canonical inputs
+/// (`< p`); the overflowed top bit folds back via `2^64 ≡ ε`.
+#[inline]
+pub fn addmod(a: u64, b: u64) -> u64 {
+    debug_assert!(a < P && b < P);
+    let (mut sum, overflow) = a.overflowing_add(b);
+    if overflow {
+        // a + b − 2^64 + ε: cannot overflow again (a + b < 2p) and the
+        // result is already < p.
+        sum = sum.wrapping_add(EPSILON);
+    }
+    if sum >= P {
+        sum -= P;
+    }
+    sum
+}
+
+/// Canonicalizing subtraction mod p: a borrow folds back via
+/// `−2^64 ≡ −ε`.
+#[inline]
+pub fn submod(a: u64, b: u64) -> u64 {
+    debug_assert!(a < P && b < P);
+    let (diff, borrow) = a.overflowing_sub(b);
+    if borrow {
+        diff.wrapping_sub(EPSILON)
+    } else {
+        diff
+    }
+}
+
+/// Reduce a 128-bit product to a canonical Goldilocks element — the
+/// two-shifts-and-adds reduction that makes this field cheap. With
+/// `x = lo + 2^64·hi` and `hi = hi_lo + 2^32·hi_hi`:
+///
+/// ```text
+/// 2^64 ≡ ε = 2^32 − 1,   2^96 ≡ −1   (mod p)
+/// x ≡ lo − hi_hi + ε·hi_lo
+/// ```
+#[inline]
+pub fn reduce128(x: u128) -> u64 {
+    let lo = x as u64;
+    let hi = (x >> 64) as u64;
+    let hi_hi = hi >> 32;
+    let hi_lo = hi & EPSILON;
+    let (mut t0, borrow) = lo.overflowing_sub(hi_hi);
+    if borrow {
+        // borrowed 2^64 ≡ ε; t0 > 2^64 − 2^32 here, so no underflow
+        t0 = t0.wrapping_sub(EPSILON);
+    }
+    let t1 = hi_lo * EPSILON; // ≤ (2^32 − 1)^2, fits u64
+    let (mut res, carry) = t0.overflowing_add(t1);
+    if carry {
+        // dropped 2^64 ≡ ε; res < 2^64 − 2^32 here, so no overflow
+        res = res.wrapping_add(EPSILON);
+    }
+    if res >= P {
+        res -= P;
+    }
+    res
+}
+
+/// Multiplication mod p via [`reduce128`].
+#[inline]
+pub fn mulmod(a: u64, b: u64) -> u64 {
+    reduce128((a as u128) * (b as u128))
+}
+
+/// Reduce an arbitrary `u64` to its canonical residue. One conditional
+/// subtract suffices because `2^64 − 1 < 2p`. The NTT executor applies
+/// this while unpacking request payloads, so a client submitting raw
+/// (unreduced) words still gets the transform of their residues.
+#[inline]
+pub fn canonicalize(x: u64) -> u64 {
+    if x >= P {
+        x - P
+    } else {
+        x
+    }
+}
+
+/// `base^exp mod p` by square-and-multiply.
+pub fn powmod(mut base: u64, mut exp: u64) -> u64 {
+    let mut acc = 1u64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mulmod(acc, base);
+        }
+        base = mulmod(base, base);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Multiplicative inverse of a nonzero element (Fermat: `a^(p−2)`).
+pub fn invmod(a: u64) -> u64 {
+    debug_assert!(a != 0 && a < P, "zero has no inverse");
+    powmod(a, P - 2)
+}
+
+/// The canonical primitive `2^log_n`-th root of unity,
+/// `g^((p−1) >> log_n)`. Deriving every order's root from the one
+/// generator gives the tower consistency the four-step algebra needs:
+/// `ω_m = ω_n^(n/m)` whenever `m | n`.
+pub fn root_of_unity(log_n: u32) -> u64 {
+    assert!(log_n <= TWO_ADICITY, "no 2^{log_n}-th root of unity in Goldilocks");
+    powmod(GENERATOR, (P - 1) >> log_n)
+}
+
+/// The forward root table for an n-point NTT: `ω_n^0 .. ω_n^(n−1)` —
+/// the NTT analogue of the complex twiddle table, memoized per size by
+/// the plan cache on the serving path.
+pub fn root_table(n: usize) -> Vec<u64> {
+    assert!(n.is_power_of_two(), "NTT size must be a power of two");
+    powers(root_of_unity(n.trailing_zeros()), n)
+}
+
+/// The inverse root table `ω_n^0, ω_n^{−1}, .., ω_n^{−(n−1)}`.
+pub fn inverse_root_table(n: usize) -> Vec<u64> {
+    assert!(n.is_power_of_two(), "NTT size must be a power of two");
+    powers(invmod(root_of_unity(n.trailing_zeros())), n)
+}
+
+fn powers(base: u64, n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 1u64;
+    for _ in 0..n {
+        out.push(acc);
+        acc = mulmod(acc, base);
+    }
+    out
+}
+
+/// In-place iterative radix-2 NTT over a precomputed root table
+/// (`roots[i] = ω_n^i`, forward or inverse) — the executor compute
+/// loop for [`Workload::Ntt`], structurally the same
+/// decimation-in-time loop as [`super::reference::fft_radix2`] with
+/// the complex butterfly swapped for modular arithmetic.
+pub fn ntt_with_roots(a: &mut [u64], roots: &[u64]) {
+    let n = a.len();
+    assert!(n.is_power_of_two(), "NTT size must be a power of two");
+    assert_eq!(roots.len(), n, "root table must have n entries");
+    if n == 1 {
+        return;
+    }
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() as usize >> (32 - bits);
+        if i < j {
+            a.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let step = n / len;
+        for start in (0..n).step_by(len) {
+            for k in 0..len / 2 {
+                let w = roots[k * step];
+                let u = a[start + k];
+                let v = mulmod(a[start + k + len / 2], w);
+                a[start + k] = addmod(u, v);
+                a[start + k + len / 2] = submod(u, v);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward NTT: `X[k] = Σ_j x[j]·ω_n^{jk}` (fresh output vector).
+pub fn ntt(input: &[u64]) -> Vec<u64> {
+    let mut a = input.to_vec();
+    ntt_with_roots(&mut a, &root_table(input.len()));
+    a
+}
+
+/// Inverse NTT: runs the same loop over the inverse roots, then scales
+/// by `n^{−1}` so that `intt(ntt(x)) == x` exactly.
+pub fn intt(input: &[u64]) -> Vec<u64> {
+    let n = input.len();
+    let mut a = input.to_vec();
+    ntt_with_roots(&mut a, &inverse_root_table(n));
+    let n_inv = invmod(n as u64);
+    for x in &mut a {
+        *x = mulmod(*x, n_inv);
+    }
+    a
+}
+
+/// Naive O(n²) modular DFT — the definitionally-correct oracle every
+/// NTT path is checked against with *exact* integer equality (this is
+/// [`super::reference::dft_naive_in`] instantiated at [`Goldilocks`]).
+pub fn dft_naive(input: &[u64]) -> Vec<u64> {
+    super::reference::dft_naive_in::<Goldilocks>(input)
+}
+
+/// Deterministic pseudo-random canonical field elements (xorshift64*,
+/// same core as [`super::reference::test_signal`]).
+pub fn test_elements(n: usize, seed: u64) -> Vec<u64> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let mut next = move || {
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        state.wrapping_mul(0x2545F4914F6CDD1D)
+    };
+    (0..n)
+        .map(|_| loop {
+            let v = next();
+            if v < P {
+                break v;
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mul_ref(a: u64, b: u64) -> u64 {
+        ((a as u128 * b as u128) % P as u128) as u64
+    }
+
+    fn add_ref(a: u64, b: u64) -> u64 {
+        ((a as u128 + b as u128) % P as u128) as u64
+    }
+
+    #[test]
+    fn constants_are_consistent() {
+        assert_eq!(P as u128, (1u128 << 64) - (1u128 << 32) + 1);
+        assert_eq!(EPSILON as u128, (1u128 << 64) % P as u128, "2^64 ≡ ε");
+        assert_eq!((P - 1) % (1u64 << TWO_ADICITY), 0, "2-adicity of p − 1");
+    }
+
+    #[test]
+    fn arithmetic_edge_cases_match_u128_reference() {
+        let edges = [
+            0u64,
+            1,
+            2,
+            EPSILON - 1,
+            EPSILON,
+            EPSILON + 1,
+            1 << 32,
+            (1 << 63) - 1,
+            1 << 63,
+            P - 2,
+            P - 1,
+        ];
+        for &a in &edges {
+            for &b in &edges {
+                assert_eq!(addmod(a, b), add_ref(a, b), "add {a} {b}");
+                assert_eq!(mulmod(a, b), mul_ref(a, b), "mul {a} {b}");
+                let want_sub = ((a as i128 - b as i128).rem_euclid(P as i128)) as u64;
+                assert_eq!(submod(a, b), want_sub, "sub {a} {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce128_extremes() {
+        assert_eq!(reduce128(0), 0);
+        assert_eq!(reduce128(P as u128), 0);
+        assert_eq!(reduce128(1), 1);
+        for x in [
+            u128::MAX,
+            (P as u128 - 1) * (P as u128 - 1), // largest canonical product
+            1u128 << 127,
+            (1u128 << 96) - 1,
+            (1u128 << 96),
+        ] {
+            assert_eq!(reduce128(x) as u128, x % P as u128, "{x:#x}");
+        }
+    }
+
+    #[test]
+    fn canonicalize_covers_the_whole_u64_range() {
+        for &x in &[0u64, 1, P - 1, P, P + 1, u64::MAX] {
+            assert_eq!(canonicalize(x) as u128, x as u128 % P as u128, "{x:#x}");
+        }
+    }
+
+    #[test]
+    fn inverse_and_pow_laws() {
+        for &a in &[1u64, 2, 7, EPSILON, P - 1, 0xDEAD_BEEF_CAFE_F00D % P] {
+            assert_eq!(mulmod(a, invmod(a)), 1, "a·a^-1 = 1 for {a}");
+        }
+        assert_eq!(powmod(GENERATOR, P - 1), 1, "Fermat");
+        assert_eq!(powmod(5, 0), 1);
+    }
+
+    #[test]
+    fn roots_of_unity_orders_and_tower() {
+        for log_n in [0u32, 1, 4, 12, 20] {
+            let w = root_of_unity(log_n);
+            assert_eq!(powmod(w, 1 << log_n), 1, "order divides 2^{log_n}");
+            if log_n > 0 {
+                assert_ne!(powmod(w, 1 << (log_n - 1)), 1, "order is exactly 2^{log_n}");
+            }
+        }
+        // tower consistency: ω_m == ω_n^{n/m} for m | n
+        assert_eq!(root_of_unity(4), powmod(root_of_unity(8), 16));
+        assert_eq!(
+            Goldilocks::twiddle(256, 3),
+            powmod(root_of_unity(8), 3)
+        );
+    }
+
+    #[test]
+    fn pack_roundtrip_is_lossless() {
+        for &x in &[0u64, 1, EPSILON, P - 1, u64::MAX, 0x7FC0_0000_7FC0_0000] {
+            assert_eq!(unpack(pack(x)), x, "{x:#x}");
+        }
+        let v = test_elements(64, 3);
+        assert_eq!(Goldilocks::unpack_vec(Goldilocks::pack_vec(v.clone())), v);
+    }
+
+    #[test]
+    fn ntt_of_impulse_is_flat() {
+        let mut x = vec![0u64; 16];
+        x[0] = 1;
+        assert_eq!(ntt(&x), vec![1u64; 16]);
+    }
+
+    #[test]
+    fn ntt_matches_naive_dft_small() {
+        for n in [2usize, 4, 16, 64] {
+            let x = test_elements(n, 42);
+            assert_eq!(ntt(&x), dft_naive(&x), "n={n}");
+        }
+    }
+
+    #[test]
+    fn intt_round_trip_small() {
+        for n in [2usize, 8, 128] {
+            let x = test_elements(n, 7);
+            assert_eq!(intt(&ntt(&x)), x, "n={n}");
+            assert_eq!(ntt(&intt(&x)), x, "n={n} (other order)");
+        }
+    }
+
+    #[test]
+    fn ntt_linearity_exact() {
+        let n = 64;
+        let a = test_elements(n, 1);
+        let b = test_elements(n, 2);
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| addmod(x, y)).collect();
+        let fa = ntt(&a);
+        let fb = ntt(&b);
+        let fsum = ntt(&sum);
+        for i in 0..n {
+            assert_eq!(fsum[i], addmod(fa[i], fb[i]), "bin {i}");
+        }
+    }
+
+    #[test]
+    fn test_elements_deterministic_and_canonical() {
+        let a = test_elements(32, 5);
+        assert_eq!(a, test_elements(32, 5));
+        assert!(a.iter().all(|&x| x < P));
+        assert_ne!(a, test_elements(32, 6));
+    }
+
+    #[test]
+    fn workload_names_parse_and_display() {
+        assert_eq!(Workload::parse("fft"), Some(Workload::Fft));
+        assert_eq!(Workload::parse("ntt"), Some(Workload::Ntt));
+        assert_eq!(Workload::parse("dct"), None);
+        assert_eq!(Workload::Ntt.to_string(), "ntt");
+        assert_eq!(Workload::default(), Workload::Fft);
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod cache;
 pub mod codegen;
+pub mod field;
 pub mod multipass;
 pub mod plan;
 pub mod reference;
@@ -13,9 +14,10 @@ pub mod twiddle;
 
 pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use codegen::{generate, generate_batched, generate_opt, FftProgram};
+pub use field::{ButterflyField, Goldilocks, Workload};
 pub use multipass::{MultipassError, MultipassPlan, MAX_SINGLE_PASS_POINTS};
 pub use plan::{FftPlan, Layout, Pass, PlanError};
-pub use twiddle::Cpx;
+pub use twiddle::{Complex32, Cpx};
 
 use crate::arch::SmConfig;
 use crate::profile::Profile;

@@ -32,8 +32,9 @@ use std::fmt;
 
 use thiserror::Error;
 
+use super::field::ButterflyField;
 use super::reference;
-use super::twiddle::{twiddle, Cpx};
+use super::twiddle::{twiddle, Complex32, Cpx};
 
 /// The largest transform one resident-SM pass serves (radix-4 at 4096
 /// points is 16376 of the 16384 shared-memory words — the paper's
@@ -141,87 +142,99 @@ pub fn job_cost(points: usize, ceiling: usize) -> u64 {
 }
 
 /// Stage-1 inputs: row `r` (r < n1) is the stride-n1 sequence
-/// `x[r + n1·j2]` for j2 in 0..n2.
-pub fn gather_rows(input: &[(f32, f32)], plan: &MultipassPlan) -> Vec<Vec<(f32, f32)>> {
+/// `x[r + n1·j2]` for j2 in 0..n2. Pure data movement — generic over
+/// the element type, like every non-arithmetic step of the pipeline.
+pub fn gather_rows<T: Copy>(input: &[T], plan: &MultipassPlan) -> Vec<Vec<T>> {
     let (n1, n2) = (plan.row_jobs, plan.row_points);
     debug_assert_eq!(input.len(), plan.points);
     (0..n1).map(|r| (0..n2).map(|j| input[r + n1 * j]).collect()).collect()
 }
 
-/// The inter-stage twiddle table: entry `[r·n2 + k] = W_N^{r·k}`,
-/// N entries total. Computed in f64 ([`twiddle`]'s exact-axis values)
-/// and rounded once to f32 — the precision the executors serve — so
-/// the scaling step is deterministic bit-for-bit.
-pub fn stage_twiddles(plan: &MultipassPlan) -> Vec<(f32, f32)> {
+/// The inter-stage twiddle table in any butterfly field: entry
+/// `[r·n2 + k] = W_N^{r·k}` (N entries total), where `W_N` is the
+/// field's primitive N-th root of unity.
+pub fn stage_table<F: ButterflyField>(plan: &MultipassPlan) -> Vec<F::Elem> {
     let (n1, n2, n) = (plan.row_jobs, plan.row_points, plan.points);
     let mut out = Vec::with_capacity(n);
     for r in 0..n1 {
         for k in 0..n2 {
-            out.push(twiddle(n, (r * k) % n).to_f32_pair());
+            out.push(F::twiddle(n, (r * k) % n));
         }
     }
     out
 }
 
-#[inline]
-fn cmul(a: (f32, f32), b: (f32, f32)) -> (f32, f32) {
-    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+/// The complex-f32 inter-stage twiddle table: [`stage_table`] at
+/// [`Complex32`]. Computed in f64 ([`twiddle`]'s exact-axis values)
+/// and rounded once to f32 — the precision the executors serve — so
+/// the scaling step is deterministic bit-for-bit.
+pub fn stage_twiddles(plan: &MultipassPlan) -> Vec<(f32, f32)> {
+    stage_table::<Complex32>(plan)
 }
 
-/// Scale row `r` element `k` by `W_N^{r·k}` in f32 arithmetic.
-pub fn apply_twiddles(
-    rows: &mut [Vec<(f32, f32)>],
-    twiddles: &[(f32, f32)],
+/// Scale row `r` element `k` by `W_N^{r·k}` in the field's arithmetic.
+pub fn apply_twiddles<F: ButterflyField>(
+    rows: &mut [Vec<F::Elem>],
+    twiddles: &[F::Elem],
     plan: &MultipassPlan,
 ) {
     let n2 = plan.row_points;
     debug_assert_eq!(twiddles.len(), plan.points);
     for (r, row) in rows.iter_mut().enumerate() {
         for (k, v) in row.iter_mut().enumerate() {
-            *v = cmul(*v, twiddles[r * n2 + k]);
+            *v = F::mul(*v, twiddles[r * n2 + k]);
         }
     }
 }
 
 /// Stage-2 inputs: column `k` (k < n2) gathers element `k` of every
 /// scaled row.
-pub fn transpose(rows: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<Vec<(f32, f32)>> {
+pub fn transpose<T: Copy>(rows: &[Vec<T>], plan: &MultipassPlan) -> Vec<Vec<T>> {
     let (n1, n2) = (plan.row_jobs, plan.row_points);
     (0..n2).map(|k| (0..n1).map(|r| rows[r][k]).collect()).collect()
 }
 
 /// [`transpose`] without the second grid copy: the stage-1 output
-/// buffers are reused as stage-2 input buffers. The leading n1×n1
-/// block is swap-transposed element by element; only the n2−n1 extra
-/// columns of a rectangular plan (balanced plans have n2/n1 ∈ {1, 2},
-/// so at most half the grid) are gathered into fresh rows, and each
-/// reused row is truncated from n2 to n1 points. On return `rows` holds
-/// the n2 column vectors in column order.
-pub fn transpose_in_place(rows: &mut Vec<Vec<(f32, f32)>>, plan: &MultipassPlan) {
+/// buffers are reused as stage-2 input buffers. The leading m×m square
+/// block (m = min(n1, n2)) is swap-transposed element by element; the
+/// columns past the block of a wide grid (n2 > n1) are gathered into
+/// fresh rows and appended, while the rows past the block of a tall
+/// grid (n1 > n2) are drained whole and re-dealt one element onto the
+/// end of each surviving row. Balanced plans from
+/// [`MultipassPlan::new`] are square or wide with n2/n1 = 2, but the
+/// plan fields are public, so the tall orientation is handled (and
+/// property-tested) rather than assumed away — it used to
+/// index out of bounds. On return `rows` holds the n2 column vectors
+/// in column order.
+pub fn transpose_in_place<T: Copy>(rows: &mut Vec<Vec<T>>, plan: &MultipassPlan) {
     let (n1, n2) = (plan.row_jobs, plan.row_points);
     debug_assert_eq!(rows.len(), n1);
-    // Columns n1..n2 have no destination row inside the square block;
+    let m = n1.min(n2);
+    // Columns m..n2 have no destination row inside the square block;
     // gather them before truncation discards their elements. The block
-    // swap below never touches column indices >= n1, so order is safe.
-    let extras: Vec<Vec<(f32, f32)>> =
-        (n1..n2).map(|k| (0..n1).map(|r| rows[r][k]).collect()).collect();
-    for r in 0..n1 {
-        for c in (r + 1)..n1 {
+    // swap below never touches column indices >= m, so order is safe.
+    let extras: Vec<Vec<T>> = (m..n2).map(|k| (0..n1).map(|r| rows[r][k]).collect()).collect();
+    // Rows m..n1 have no source column inside the block: take them out
+    // whole; element k of each lands at the tail of output row k.
+    let tail: Vec<Vec<T>> = rows.drain(m..).collect();
+    for r in 0..m {
+        for c in (r + 1)..m {
             let (a, b) = rows.split_at_mut(c);
             std::mem::swap(&mut a[r][c], &mut b[0][r]);
         }
     }
-    for row in rows.iter_mut() {
-        row.truncate(n1);
+    for (k, row) in rows.iter_mut().enumerate() {
+        row.truncate(m);
+        row.extend(tail.iter().map(|t| t[k]));
     }
     rows.extend(extras);
 }
 
 /// Recompose the output: element `k1` of column `k2` lands at
 /// `k2 + n2·k1` (the four-step output interleave).
-pub fn scatter(cols: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<(f32, f32)> {
+pub fn scatter<T: Copy + Default>(cols: &[Vec<T>], plan: &MultipassPlan) -> Vec<T> {
     let n2 = plan.row_points;
-    let mut out = vec![(0.0f32, 0.0f32); plan.points];
+    let mut out = vec![T::default(); plan.points];
     for (k2, col) in cols.iter().enumerate() {
         for (k1, &v) in col.iter().enumerate() {
             out[k2 + n2 * k1] = v;
@@ -241,16 +254,19 @@ pub fn scatter(cols: &[Vec<(f32, f32)>], plan: &MultipassPlan) -> Vec<(f32, f32)
 /// before this request's stage-2 batch re-occupies it (the
 /// coordinator's bounded between-pass yield).
 ///
-/// The driver itself is deterministic: given the same sub-transform
-/// results it produces bitwise-identical output regardless of how the
-/// closure scheduled the jobs.
-pub fn run_with<E>(
+/// Generic over the butterfly field: the same driver serves the f32
+/// FFT ([`Complex32`]) and the Goldilocks NTT — only the twiddle
+/// table and the sub-transform closure change. The driver itself is
+/// deterministic: given the same sub-transform results it produces
+/// bitwise-identical output regardless of how the closure scheduled
+/// the jobs.
+pub fn run_with<F: ButterflyField, E>(
     plan: &MultipassPlan,
-    input: &[(f32, f32)],
-    twiddles: &[(f32, f32)],
-    mut batch_fft: impl FnMut(Vec<Vec<(f32, f32)>>, Stage) -> Result<Vec<Vec<(f32, f32)>>, E>,
+    input: &[F::Elem],
+    twiddles: &[F::Elem],
+    mut batch_fft: impl FnMut(Vec<Vec<F::Elem>>, Stage) -> Result<Vec<Vec<F::Elem>>, E>,
     mut between_passes: impl FnMut() -> Result<(), E>,
-) -> Result<Vec<(f32, f32)>, E> {
+) -> Result<Vec<F::Elem>, E> {
     assert_eq!(input.len(), plan.points, "input length must match the plan");
     assert_eq!(twiddles.len(), plan.points, "twiddle table must have N entries");
     let mut rows = batch_fft(gather_rows(input, plan), Stage::Rows)?;
@@ -258,7 +274,7 @@ pub fn run_with<E>(
     for row in &rows {
         assert_eq!(row.len(), plan.row_points, "stage 1 outputs must keep their size");
     }
-    apply_twiddles(&mut rows, twiddles, plan);
+    apply_twiddles::<F>(&mut rows, twiddles, plan);
     between_passes()?;
     // The scaled stage-1 buffers become the stage-2 inputs in place —
     // no second grid copy between the passes.
@@ -383,7 +399,7 @@ mod tests {
         let x = test_signal(points, 5);
         let input: Vec<(f32, f32)> = x.iter().map(|c| c.to_f32_pair()).collect();
         let tw = stage_twiddles(&plan);
-        let got = run_with::<()>(
+        let got = run_with::<Complex32, ()>(
             &plan,
             &input,
             &tw,
@@ -415,7 +431,7 @@ mod tests {
             test_signal(1024, 3).iter().map(|c| c.to_f32_pair()).collect();
         let tw = stage_twiddles(&plan);
         let mut stage2 = false;
-        let got = run_with(
+        let got = run_with::<Complex32, _>(
             &plan,
             &input,
             &tw,
@@ -432,11 +448,13 @@ mod tests {
     }
 
     /// The buffer-reusing transpose must agree element-for-element with
-    /// the copying transpose, for square and rectangular (1:2) plans.
+    /// the copying transpose, for square and rectangular (1:2) plans —
+    /// including the odd-log2 sizes (2^13, 2^15) whose balanced splits
+    /// are rectangular.
     #[test]
     fn in_place_transpose_matches_the_copying_transpose() {
-        for (points, ceiling) in [(1024usize, 64usize), (8192, 4096)] {
-            // 1024/64: 32 x 32 (square); 8192/4096: 64 x 128 (1:2)
+        for (points, ceiling) in [(1024usize, 64usize), (8192, 4096), (1 << 15, 4096)] {
+            // 1024/64: 32 x 32 (square); 8192: 64 x 128; 2^15: 128 x 256
             let plan = MultipassPlan::new(points, ceiling).unwrap();
             let input: Vec<(f32, f32)> =
                 test_signal(points, 9).iter().map(|c| c.to_f32_pair()).collect();
@@ -445,6 +463,67 @@ mod tests {
             let mut got = rows;
             transpose_in_place(&mut got, &plan);
             assert_eq!(got, want);
+        }
+    }
+
+    /// Property test over *random* power-of-two splits, not just the
+    /// balanced ones [`MultipassPlan::new`] produces: the plan fields
+    /// are public, so square, wide (n2 > n1) and tall (n1 > n2) grids
+    /// are all representable — and the tall orientation made the old
+    /// swap/extras path index out of bounds. Elements are tagged with
+    /// their (row, column) coordinates so any misplacement, not just a
+    /// wrong value, fails the comparison.
+    #[test]
+    fn in_place_transpose_matches_transpose_on_random_power_of_two_splits() {
+        let mut state: u64 = 0x51ED_5EED_0DD5_EED5;
+        let mut next = move || {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            state.wrapping_mul(0x2545F4914F6CDD1D)
+        };
+        for case in 0..128 {
+            let log = 2 + (next() % 13) as u32; // N = 4 .. 2^14
+            let split = (next() % (log as u64 + 1)) as u32; // n1 = 2^split
+            let plan = MultipassPlan {
+                points: 1usize << log,
+                row_jobs: 1usize << split,
+                row_points: 1usize << (log - split),
+            };
+            let rows: Vec<Vec<(f32, f32)>> = (0..plan.row_jobs)
+                .map(|r| (0..plan.row_points).map(|c| (r as f32, c as f32)).collect())
+                .collect();
+            let want = transpose(&rows, &plan);
+            let mut got = rows;
+            transpose_in_place(&mut got, &plan);
+            assert_eq!(
+                got, want,
+                "case {case}: {} x {} split diverged",
+                plan.row_jobs, plan.row_points
+            );
+        }
+    }
+
+    /// The four-step driver over exact Goldilocks stages must equal
+    /// the direct NTT *exactly* — integer algebra has no rounding to
+    /// hide an index or twiddle-exponent mistake, so this pins the
+    /// generic decomposition for the second field.
+    #[test]
+    fn run_with_goldilocks_stages_equals_direct_ntt_exactly() {
+        use crate::fft::field::{self, Goldilocks};
+        for (points, ceiling) in [(1024usize, 64usize), (8192, 4096)] {
+            let plan = MultipassPlan::new(points, ceiling).unwrap();
+            let input = field::test_elements(points, 17);
+            let table = stage_table::<Goldilocks>(&plan);
+            let got = run_with::<Goldilocks, ()>(
+                &plan,
+                &input,
+                &table,
+                |jobs, _stage| Ok(jobs.iter().map(|j| field::ntt(j)).collect()),
+                || Ok(()),
+            )
+            .unwrap();
+            assert_eq!(got, field::ntt(&input), "{points}-point NTT four-step");
         }
     }
 

@@ -9,6 +9,15 @@
 //! trailing pass(es) drop to a smaller radix (§6.2: the 1024-point
 //! radix-16 FFT is 16·16·4, with the radix-4 pass run as four blocks
 //! reusing the radix-16 thread initialization).
+//!
+//! Planning and code generation target the simulated SM's f32 SIMT
+//! datapath and therefore serve only [`Workload::Fft`]
+//! ([`crate::fft::field::Workload`]): the Goldilocks NTT butterfly
+//! needs 64-bit modular arithmetic the f32 lanes cannot express, so
+//! that workload runs on the host integer datapath
+//! ([`crate::fft::field::ntt_with_roots`]) and shares everything
+//! *above* this layer — factorization, stage tables, caching,
+//! scheduling — rather than the generated programs.
 
 use std::sync::Arc;
 

@@ -5,7 +5,29 @@
 //! output. All math in f64 so the oracle error is negligible against
 //! the f32 arithmetic of the simulated SM.
 
+use super::field::ButterflyField;
 use super::twiddle::{twiddle, Cpx};
+
+/// Naive O(n²) DFT over any [`ButterflyField`] — the definitionally
+/// correct transform in the field's own arithmetic. Instantiated at
+/// [`Goldilocks`](super::field::Goldilocks) this is the exact modular
+/// oracle every NTT serving path is checked against; the complex-f32
+/// instantiation is a lower-precision cousin of [`dft_naive`] (which
+/// stays f64 end to end and remains the FFT oracle).
+pub fn dft_naive_in<F: ButterflyField>(input: &[F::Elem]) -> Vec<F::Elem> {
+    let n = input.len();
+    // one root-power table up front: O(n) twiddle evaluations, not O(n²)
+    let w: Vec<F::Elem> = (0..n).map(|k| F::twiddle(n, k)).collect();
+    (0..n)
+        .map(|k| {
+            let mut acc = F::Elem::default();
+            for (j, &x) in input.iter().enumerate() {
+                acc = F::add(acc, F::mul(x, w[(j * k) % n]));
+            }
+            acc
+        })
+        .collect()
+}
 
 /// Naive O(n²) forward DFT — definitionally correct.
 pub fn dft_naive(input: &[Cpx]) -> Vec<Cpx> {
@@ -149,6 +171,25 @@ mod tests {
         let tx: f64 = x.iter().map(|c| c.abs().powi(2)).sum();
         let ty: f64 = y.iter().map(|c| c.abs().powi(2)).sum();
         assert!((ty - n as f64 * tx).abs() / (n as f64 * tx) < 1e-12);
+    }
+
+    /// The generic naive DFT instantiated at each field: exact
+    /// agreement with the Goldilocks NTT, close agreement (f32
+    /// accumulation) with the f64 complex oracle.
+    #[test]
+    fn generic_naive_dft_matches_both_field_oracles() {
+        use crate::fft::field::{self, Goldilocks};
+        use crate::fft::twiddle::Complex32;
+        let x = field::test_elements(32, 9);
+        assert_eq!(dft_naive_in::<Goldilocks>(&x), field::ntt(&x));
+        let sig = test_signal(64, 4);
+        let packed: Vec<(f32, f32)> = sig.iter().map(|c| c.to_f32_pair()).collect();
+        let got: Vec<Cpx> = dft_naive_in::<Complex32>(&packed)
+            .iter()
+            .map(|&(re, im)| Cpx::new(re as f64, im as f64))
+            .collect();
+        let err = rms_rel_error(&got, &dft_naive(&sig));
+        assert!(err < 1e-3, "complex-f32 naive DFT drifted from the f64 oracle: {err}");
     }
 
     #[test]

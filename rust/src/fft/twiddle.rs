@@ -16,6 +16,8 @@
 use std::f64::consts::PI;
 use std::ops::{Add, Mul, Neg, Sub};
 
+use super::field::{ButterflyField, Workload};
+
 /// Double-precision complex scalar used by the planner and reference.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
 pub struct Cpx {
@@ -95,6 +97,42 @@ pub fn twiddle(n: usize, k: usize) -> Cpx {
         };
     }
     Cpx::cis(-2.0 * PI * k as f64 / n as f64)
+}
+
+/// The complex f32 butterfly field: the paper's FFT workload, as one
+/// instance of the [`ButterflyField`] boundary. Twiddles are computed
+/// in f64 (with [`twiddle`]'s exact axis values) and rounded once to
+/// f32 — the precision the executors serve — so every table derived
+/// through this impl is bitwise identical to the pre-trait tables.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Complex32;
+
+impl ButterflyField for Complex32 {
+    type Elem = (f32, f32);
+    const NAME: &'static str = "complex-f32";
+    const WORKLOAD: Workload = Workload::Fft;
+
+    fn twiddle(n: usize, k: usize) -> (f32, f32) {
+        twiddle(n, k).to_f32_pair()
+    }
+
+    fn add(a: (f32, f32), b: (f32, f32)) -> (f32, f32) {
+        (a.0 + b.0, a.1 + b.1)
+    }
+
+    fn mul(a: (f32, f32), b: (f32, f32)) -> (f32, f32) {
+        (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+    }
+
+    // The wire format *is* the element type: both directions move the
+    // vector without touching it, keeping the FFT hot path copy-free.
+    fn pack_vec(v: Vec<(f32, f32)>) -> Vec<(f32, f32)> {
+        v
+    }
+
+    fn unpack_vec(v: Vec<(f32, f32)>) -> Vec<(f32, f32)> {
+        v
+    }
 }
 
 /// §3.1 cost classes for a compile-time rotation constant.

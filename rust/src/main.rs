@@ -105,7 +105,8 @@ USAGE:
                                       ms the controller pins the
                                       measured-fastest lane before
                                       scaling — requires --backends)
-  egpu-fft loadtest [--pattern poisson|burst] [--rate R] [--duration S]
+  egpu-fft loadtest [--mix fft|large-n|ntt]
+                 [--pattern poisson|burst] [--rate R] [--duration S]
                  [--policy block|shed|degrade] [--queue-capacity N]
                  [--qos-classes NAME:W[:CAP[:DL_MS]],...]
                  [--class-mix F0,F1,...]
@@ -120,7 +121,14 @@ USAGE:
                                      shed rate, deadline miss rate,
                                      queue-wait / service-time tails,
                                      and per-class + per-tenant
-                                     breakdowns (--tenants arms the
+                                     breakdowns (--mix picks the request
+                                      mix: `fft` is the default 256-4096
+                                      complex pool, `large-n` reaches
+                                      past the single-pass ceiling, and
+                                      `ntt` submits Goldilocks
+                                      prime-field payloads through the
+                                      same frontend;
+                                      --tenants arms the
                                       tenancy layer; --tenant-mix splits
                                       arrivals across tenant indices,
                                       defaulting to a uniform split —
@@ -456,9 +464,18 @@ fn run() -> Result<()> {
         }
         Some("loadtest") => {
             let f = flags(&args[1..]);
+            // The preset supplies the workload and the defaults the
+            // explicit flags below override.
+            let base = match f.get("mix").map(String::as_str).unwrap_or("fft") {
+                "fft" => LoadgenConfig::default(),
+                "large-n" | "large_n" => LoadgenConfig::large_n(),
+                "ntt" => LoadgenConfig::ntt(),
+                m => bail!("unknown mix `{m}` (fft|large-n|ntt)"),
+            };
             let pattern: ArrivalPattern =
                 f.get("pattern").map(String::as_str).unwrap_or("poisson").parse()?;
-            let rate: f64 = f.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(1000.0);
+            let rate: f64 =
+                f.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(base.rate_hz);
             if rate <= 0.0 {
                 bail!("--rate must be positive");
             }
@@ -472,14 +489,19 @@ fn run() -> Result<()> {
                 .get("sizes")
                 .map(|s| parse_sizes(s))
                 .transpose()?
-                .unwrap_or_else(|| vec![256, 512, 1024, 2048, 4096]);
+                .unwrap_or_else(|| base.sizes.clone());
             let high_frac: f64 =
                 f.get("high-frac").map(|s| s.parse()).transpose()?.unwrap_or(0.5);
-            let deadline_ms: f64 =
-                f.get("deadline-ms").map(|s| s.parse()).transpose()?.unwrap_or(25.0);
-            if deadline_ms < 0.0 {
-                bail!("--deadline-ms must be >= 0 (0 disables deadlines)");
-            }
+            let deadline = match f.get("deadline-ms") {
+                Some(s) => {
+                    let ms: f64 = s.parse()?;
+                    if ms < 0.0 {
+                        bail!("--deadline-ms must be >= 0 (0 disables deadlines)");
+                    }
+                    (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1e3))
+                }
+                None => base.deadline,
+            };
             let aging_ms: f64 =
                 f.get("aging-ms").map(|s| s.parse()).transpose()?.unwrap_or(10.0);
             if aging_ms < 0.0 {
@@ -566,8 +588,8 @@ fn run() -> Result<()> {
                 high_fraction: high_frac,
                 class_mix,
                 tenant_mix,
-                deadline: (deadline_ms > 0.0)
-                    .then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
+                deadline,
+                workload: base.workload,
                 seed,
             };
             let report = loadgen::run(&server, &cfg);

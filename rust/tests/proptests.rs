@@ -546,6 +546,124 @@ fn tenant_bucket_never_over_admits_the_window_bound() {
     }
 }
 
+/// PROPERTY: Goldilocks modular arithmetic satisfies the ring axioms,
+/// checked against a u128 wide reference — for thousands of random
+/// canonical elements. `reduce128` is additionally checked against the
+/// plain `% p` on random 128-bit products, since the kernel's fast
+/// reduction exploits the 2^64 − 2^32 + 1 structure rather than
+/// dividing.
+#[test]
+fn goldilocks_ring_axioms_match_the_u128_reference() {
+    use egpu_fft::fft::field::{self, P};
+    let mut rng = Rng::new(0x601D);
+    let elem = |rng: &mut Rng| rng.next() % P;
+    for case in 0..2000u64 {
+        let (a, b, c) = (elem(&mut rng), elem(&mut rng), elem(&mut rng));
+        let wide = |x: u64, y: u64| ((x as u128 * y as u128) % P as u128) as u64;
+        // closure + the u128 oracle
+        assert_eq!(field::mulmod(a, b), wide(a, b), "case {case}: mul {a} {b}");
+        assert_eq!(
+            field::addmod(a, b),
+            ((a as u128 + b as u128) % P as u128) as u64,
+            "case {case}: add {a} {b}"
+        );
+        assert_eq!(
+            field::submod(a, b),
+            ((a as u128 + P as u128 - b as u128) % P as u128) as u64,
+            "case {case}: sub {a} {b}"
+        );
+        // commutativity, associativity, distributivity
+        assert_eq!(field::mulmod(a, b), field::mulmod(b, a), "case {case}");
+        assert_eq!(
+            field::mulmod(field::mulmod(a, b), c),
+            field::mulmod(a, field::mulmod(b, c)),
+            "case {case}"
+        );
+        assert_eq!(
+            field::mulmod(a, field::addmod(b, c)),
+            field::addmod(field::mulmod(a, b), field::mulmod(a, c)),
+            "case {case}"
+        );
+        // identities and inverses
+        assert_eq!(field::mulmod(a, 1), a, "case {case}");
+        assert_eq!(field::addmod(a, 0), a, "case {case}");
+        assert_eq!(field::addmod(a, field::submod(0, a)), 0, "case {case}");
+        if a != 0 {
+            assert_eq!(field::mulmod(a, field::invmod(a)), 1, "case {case}: inverse");
+        }
+        // reduce128 on a full-width random product
+        let hi = rng.next();
+        let lo = rng.next();
+        let x = ((hi as u128) << 64) | lo as u128;
+        assert_eq!(field::reduce128(x), (x % P as u128) as u64, "case {case}: reduce128");
+    }
+}
+
+/// PROPERTY: the inverse NTT is a true inverse — `intt(ntt(x)) == x`
+/// exactly, for random vectors at every power-of-two size the engine
+/// serves single-pass (4..=4096), plus the root-of-unity structure the
+/// transform relies on (order exactly n, w^(n/2) = −1).
+#[test]
+fn goldilocks_inverse_ntt_round_trips_exactly() {
+    use egpu_fft::fft::field::{self, P};
+    for case in 0..40u64 {
+        let mut rng = Rng::new(0x17EE + case);
+        let log_n = 2 + rng.below(11) as u32; // 4..=4096
+        let n = 1usize << log_n;
+        let x: Vec<u64> = (0..n).map(|_| rng.next() % P).collect();
+        assert_eq!(field::intt(&field::ntt(&x)), x, "case {case}: n={n} round trip");
+        let w = field::root_of_unity(log_n);
+        assert_eq!(field::powmod(w, n as u64), 1, "case {case}: w^{n} = 1");
+        assert_eq!(field::powmod(w, n as u64 / 2), P - 1, "case {case}: w^{{n/2}} = -1");
+        for d in [2u64, 4, 8] {
+            if (n as u64) > d {
+                assert_ne!(field::powmod(w, n as u64 / d), 1, "case {case}: order exactly {n}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: the fast radix-2 NTT equals the naive O(N²) modular DFT at
+/// the engine's single-pass sizes 256–4096 — the oracle the end-to-end
+/// tests then carry to the full stack by transitivity.
+#[test]
+fn goldilocks_ntt_matches_the_naive_modular_dft() {
+    use egpu_fft::fft::field;
+    for (i, n) in [256usize, 512, 1024, 2048, 4096].into_iter().enumerate() {
+        let x = field::test_elements(n, 0x0DF7 + i as u64);
+        assert_eq!(field::ntt(&x), field::dft_naive(&x), "n={n}");
+    }
+}
+
+/// PROPERTY: the convolution theorem holds — pointwise multiplication
+/// in the NTT domain is exact cyclic convolution, checked against the
+/// O(N²) schoolbook sum for random small vectors. This is the property
+/// NTT consumers (polynomial multiplication, proof systems) actually
+/// rely on, so it pins the transform's normalization end to end.
+#[test]
+fn goldilocks_ntt_convolution_theorem() {
+    use egpu_fft::fft::field::{self, P};
+    for case in 0..20u64 {
+        let mut rng = Rng::new(0xC09 + case);
+        let n = 1usize << (3 + rng.below(4)); // 8..=64
+        let a: Vec<u64> = (0..n).map(|_| rng.next() % P).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next() % P).collect();
+        let fa = field::ntt(&a);
+        let fb = field::ntt(&b);
+        let prod: Vec<u64> =
+            fa.iter().zip(&fb).map(|(&x, &y)| field::mulmod(x, y)).collect();
+        let via_ntt = field::intt(&prod);
+        let mut naive = vec![0u64; n];
+        for i in 0..n {
+            for j in 0..n {
+                naive[(i + j) % n] =
+                    field::addmod(naive[(i + j) % n], field::mulmod(a[i], b[j]));
+            }
+        }
+        assert_eq!(via_ntt, naive, "case {case}: n={n} cyclic convolution");
+    }
+}
+
 /// PROPERTY: cycle accounting is deterministic and data-independent —
 /// two random inputs give identical profiles for any variant.
 #[test]

@@ -243,6 +243,91 @@ fn background_multipass_yields_to_a_waiting_priority_tenant() {
     server.shutdown();
 }
 
+/// Settlement on the multipass abort path: a decomposed request
+/// deadline-killed at the between-pass checkpoint must refund its full
+/// remaining quota charge exactly once. The tenant holds TWO decomposed
+/// requests in flight (512 units each) when the first is killed, so the
+/// in-flight gauge can distinguish every settlement defect exactly:
+/// 1024 left charged = no refund (leaked units starve the tenant
+/// forever), 0 = double refund (`UnitQuota::release` saturates at zero,
+/// which a single-request test could never tell apart from the correct
+/// single refund — the survivor's 512 units are the sentinel).
+#[test]
+fn deadline_killed_multipass_refunds_quota_exactly_once() {
+    let svc = ShardedFftService::start(ShardPoolConfig {
+        shards: 1,
+        steal_threshold: 0,
+        service: ServiceConfig { backend: Backend::Simulator, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    svc.run_batch((0..4).map(|i| signal(1024, i)).collect()).unwrap(); // warm
+    let server = TrafficServer::start(
+        ServiceHandle::Sharded(svc),
+        ServerConfig {
+            // room for two 512-unit decomposed requests
+            classes: vec![QosClass::new("only", 1).with_capacity(2048)],
+            policy: AdmissionPolicy::Shed,
+            dispatchers: 1,
+            tenants: vec![generous("bg")],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Doomed: 65536 points = 256 + 256 = 512 quota units, and a
+    // deadline far shorter than its first 256-sub-job stage (tens of
+    // ms even in release builds) — it survives its ~µs queue wait but
+    // expires before the between-pass checkpoint, where the
+    // orchestration must kill it.
+    let doomed = server
+        .request(
+            FftRequest::new(signal(65_536, 31))
+                .with_class(0)
+                .with_tenant(0)
+                .with_deadline(Duration::from_millis(5)),
+        )
+        .unwrap();
+    // Survivor: same shape, no deadline; charged at admission, so its
+    // 512 units are in flight from this instant even while it waits
+    // behind the single dispatcher.
+    let survivor = server
+        .request(FftRequest::new(signal(65_536, 32)).with_class(0).with_tenant(0))
+        .unwrap();
+
+    match doomed.recv().unwrap() {
+        Err(ServiceError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected the decomposed job deadline-killed, got {other:?}"),
+    }
+    // The dispatcher settles the abort before answering, so this
+    // snapshot is ordered after the refund.
+    let mid = server.metrics();
+    assert_eq!(
+        mid.tenants[0].units_in_flight, 512,
+        "exactly the survivor's charge may remain: 1024 = the kill \
+         refunded nothing, 0 = it refunded twice (masked by release() \
+         saturation without the second request): {:?}",
+        mid.tenants[0]
+    );
+    assert!(
+        mid.multipass.preempted >= 1,
+        "the kill must land at the between-pass checkpoint: {:?}",
+        mid.multipass
+    );
+
+    let served = survivor.recv().unwrap().expect("undeadlined sibling completes");
+    assert_eq!(served.result.output.len(), 65_536);
+    let snap = server.metrics();
+    assert_eq!(snap.tenants[0].units_in_flight, 0, "full drain settles to zero");
+    assert_eq!(snap.tenants[0].admitted, 2);
+    assert_eq!(snap.tenants[0].completed, 1);
+    assert_eq!(
+        snap.tenants[0].job_units, 512,
+        "only the completed request is billed; the killed one is refunded, not billed"
+    );
+    server.shutdown();
+}
+
 /// (d, bounded) The yield cap, not the priority tenant, decides the
 /// worst case: a manually raised watch that never clears delays a
 /// decomposed request by at most ~250ms per checkpoint — the request
