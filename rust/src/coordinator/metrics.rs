@@ -390,7 +390,13 @@ struct Inner {
 impl Metrics {
     /// Record one successfully served job: its workload, (post-degrade)
     /// size, wall latency, and cycle profile when the simulator ran it.
-    pub fn observe(&self, workload: Workload, points: usize, wall_us: f64, profile: Option<&Profile>) {
+    pub fn observe(
+        &self,
+        workload: Workload,
+        points: usize,
+        wall_us: f64,
+        profile: Option<&Profile>,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.served += 1;
         *m.by_points.entry(points).or_insert(0) += 1;

@@ -37,8 +37,6 @@
 
 use std::fmt;
 
-use super::twiddle::twiddle;
-
 /// Which transform algebra a request runs under — threaded from
 /// [`FftRequest`](crate::coordinator::FftRequest) through jobs, plan
 /// cache keys and metrics so the two workloads share every serving
@@ -468,10 +466,7 @@ mod tests {
         }
         // tower consistency: ω_m == ω_n^{n/m} for m | n
         assert_eq!(root_of_unity(4), powmod(root_of_unity(8), 16));
-        assert_eq!(
-            Goldilocks::twiddle(256, 3),
-            powmod(root_of_unity(8), 3)
-        );
+        assert_eq!(Goldilocks::twiddle(256, 3), powmod(root_of_unity(8), 3));
     }
 
     #[test]

@@ -182,9 +182,7 @@ fn decomposed_ntt_honors_the_between_pass_deadline() {
 
     let svc = FftService::start(ServiceConfig { cores: 1, ..Default::default() }).unwrap();
     let err = svc
-        .request(
-            FftRequest::ntt(elements(65_536, 5)).with_deadline(Duration::from_millis(1)),
-        )
+        .request(FftRequest::ntt(elements(65_536, 5)).with_deadline(Duration::from_millis(1)))
         .recv()
         .unwrap()
         .expect_err("a 1ms deadline cannot survive the first 256-job stage");
